@@ -1,0 +1,96 @@
+//! Programmable scheduling (paper feature 2): users can "design, experiment
+//! and validate both coarse-grained and fine-grained scheduling policies on
+//! top of the default strategies" — here by implementing the [`Policy`]
+//! trait.
+//!
+//! The custom policy below is *GPU-greedy with CPU spill*: it prefers the
+//! GPU for every component but, when the GPU is busy and the component is
+//! cheap enough on the CPU relative to waiting, spills it — a middle ground
+//! between the paper's clustering (strict preference) and eager (no
+//! preference).
+//!
+//! Run: `cargo run --release --example custom_scheduler`
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::platform::{DeviceId, DeviceType, Platform};
+use pyschedcl::sched::{Clustering, Eager, Policy, SchedView};
+use pyschedcl::sim::{simulate, SimConfig};
+use pyschedcl::transformer::{cluster_by_head, transformer_dag};
+
+/// GPU-greedy with cost-aware CPU spill.
+struct GpuGreedySpill {
+    /// Spill when `cpu_time < spill_factor × (gpu_wait + gpu_time)`.
+    spill_factor: f64,
+}
+
+impl Policy for GpuGreedySpill {
+    fn name(&self) -> &'static str {
+        "gpu-greedy-spill"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        for &comp in view.frontier {
+            // Prefer an idle GPU.
+            if let Some(&gpu) = view
+                .available
+                .iter()
+                .find(|&&d| view.platform.device(d).dtype == DeviceType::Gpu)
+            {
+                return Some((comp, gpu));
+            }
+            // GPU busy: consider spilling to an idle CPU.
+            if let Some(&cpu) = view
+                .available
+                .iter()
+                .find(|&&d| view.platform.device(d).dtype == DeviceType::Cpu)
+            {
+                let cpu_t = view.component_time(comp, view.platform.device(cpu));
+                let gpu_dev = &view.platform.devices[0];
+                let gpu_wait = (view.est_free[gpu_dev.id] - view.now).max(0.0);
+                let gpu_t = view.component_time(comp, gpu_dev);
+                if cpu_t < self.spill_factor * (gpu_wait + gpu_t) {
+                    return Some((comp, cpu));
+                }
+            }
+        }
+        None
+    }
+}
+
+fn main() -> pyschedcl::Result<()> {
+    let heads = 16;
+    let beta = 256;
+    let (dag, ios) = transformer_dag(heads, beta, DeviceType::Gpu);
+    let platform = Platform::paper_testbed(3, 1);
+    let cfg = SimConfig::default();
+
+    println!("H={heads} β={beta} on the simulated GTX-970 + i5 testbed\n");
+    let part = cluster_by_head(&dag, &ios, 1);
+    let base = simulate(&dag, &part, &platform, &PaperCost, &mut Clustering, &cfg)?;
+    println!("clustering (h_cpu=1):   {:>8.1} ms", base.makespan * 1e3);
+
+    let all_gpu = cluster_by_head(&dag, &ios, 0);
+    for factor in [0.5, 1.0, 2.0] {
+        let mut pol = GpuGreedySpill {
+            spill_factor: factor,
+        };
+        let r = simulate(&dag, &all_gpu, &platform, &PaperCost, &mut pol, &cfg)?;
+        let cpu_comps = r
+            .component_device
+            .iter()
+            .filter(|&&d| platform.device(d).dtype == DeviceType::Cpu)
+            .count();
+        println!(
+            "{:<22} {:>8.1} ms   ({} head(s) spilled to CPU)",
+            format!("spill(f={factor}):"),
+            r.makespan * 1e3,
+            cpu_comps
+        );
+    }
+
+    let singles = pyschedcl::graph::Partition::singletons(&dag);
+    let p1 = Platform::paper_testbed(1, 1);
+    let eg = simulate(&dag, &singles, &p1, &PaperCost, &mut Eager, &cfg)?;
+    println!("eager (baseline):       {:>8.1} ms", eg.makespan * 1e3);
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Compare the paper's three scheduling policies on the simulated testbed
+//! and regenerate the §5 tables at reduced scale.
+//!
+//! Run: `cargo run --release --example scheduling_policies`
+
+use pyschedcl::report::experiments::{
+    expt1, expt2, expt3, format_baseline, format_expt1, motivation,
+};
+
+fn main() -> pyschedcl::Result<()> {
+    println!("== Figs. 4/5: coarse vs fine-grained (1 head, β=256) ==");
+    let m = motivation(256)?;
+    println!(
+        "coarse {:.1} ms -> fine {:.1} ms  (speedup {:.3}x; paper: 105 -> 95 ms)\n",
+        m.coarse_ms, m.fine_ms, m.speedup
+    );
+
+    println!("== Expt 1 (Fig. 11) ==");
+    print!("{}", format_expt1(&expt1(16, 256, 1)?));
+
+    println!("\n== Expt 2 (Fig. 12a) ==");
+    print!("{}", format_baseline(&expt2(16, &[64, 128, 256, 512])?, "eager"));
+
+    println!("\n== Expt 3 (Fig. 12b) ==");
+    print!("{}", format_baseline(&expt3(16, &[64, 128, 256, 512])?, "heft"));
+    Ok(())
+}

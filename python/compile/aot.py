@@ -1,0 +1,167 @@
+"""AOT compile path: lower every (op, size) entry point to HLO *text* and
+write ``artifacts/manifest.json``.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``
+— is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's bundled XLA (xla_extension 0.5.1) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# β sweep from the paper's evaluation (Expt 2/3 use 64..512; Expt 1 uses 256).
+# 32 is an extra small size so rust unit/integration tests stay fast.
+BETAS = (32, 64, 128, 256, 512)
+# Vector sizes for the Fig. 2 motivation kernels.
+VEC_SIZES = (4096, 1 << 20)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points():
+    """Yield (name, fn, example_args, meta) for every artifact."""
+    for b in BETAS:
+        sq = f32(b, b)
+        yield (
+            f"gemm_b{b}",
+            model.gemm_fn,
+            (sq, sq),
+            {
+                "op": "gemm",
+                "beta": b,
+                "flops": 2 * b**3,
+                "bytes": 3 * 4 * b * b,
+                "inputs": [[b, b], [b, b]],
+                "outputs": [[b, b]],
+            },
+        )
+        yield (
+            f"softmax_b{b}",
+            model.softmax_fn,
+            (sq,),
+            {
+                "op": "softmax",
+                "beta": b,
+                "flops": 5 * b * b,
+                "bytes": 2 * 4 * b * b,
+                "inputs": [[b, b]],
+                "outputs": [[b, b]],
+            },
+        )
+        yield (
+            f"transpose_b{b}",
+            model.transpose_fn,
+            (sq,),
+            {
+                "op": "transpose",
+                "beta": b,
+                "flops": 0,
+                "bytes": 2 * 4 * b * b,
+                "inputs": [[b, b]],
+                "outputs": [[b, b]],
+            },
+        )
+        yield (
+            f"head_b{b}",
+            model.head_fn,
+            (sq,) * 5,
+            {
+                "op": "head",
+                "beta": b,
+                "flops": 6 * 2 * b**3,
+                "bytes": 6 * 4 * b * b,
+                "inputs": [[b, b]] * 5,
+                "outputs": [[b, b]],
+            },
+        )
+    for n in VEC_SIZES:
+        v = f32(n)
+        yield (
+            f"vadd_n{n}",
+            model.vadd_fn,
+            (v, v),
+            {
+                "op": "vadd",
+                "n": n,
+                "flops": n,
+                "bytes": 3 * 4 * n,
+                "inputs": [[n], [n]],
+                "outputs": [[n]],
+            },
+        )
+        yield (
+            f"vsin_n{n}",
+            model.vsin_fn,
+            (v,),
+            {
+                "op": "vsin",
+                "n": n,
+                "flops": 4 * n,
+                "bytes": 2 * 4 * n,
+                "inputs": [[n]],
+                "outputs": [[n]],
+            },
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact name filter"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, ex_args, meta in entry_points():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry.update(
+            name=name,
+            file=fname,
+            sha256=hashlib.sha256(text.encode()).hexdigest(),
+            n_inputs=len(ex_args),
+        )
+        manifest["artifacts"].append(entry)
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path}: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""L1 Pallas element-wise kernels: vadd and vsin (the paper's Fig. 2 pair).
+
+These are the background/motivation kernels (k0 = vector add, k1 = in-place
+sine). 1-D grids over VMEM-sized chunks; pure VPU work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_B = 1024
+
+
+def _vadd_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _vsin_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sin(x_ref[...])
+
+
+def _pick_block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def vadd(a, b, *, block: int = DEFAULT_B):
+    """Element-wise a + b over 1-D vectors (Fig. 2 kernel k0)."""
+    (n,) = a.shape
+    blk = _pick_block(n, block)
+    return pl.pallas_call(
+        _vadd_kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def vsin(x, *, block: int = DEFAULT_B):
+    """Element-wise sin(x) over 1-D vectors (Fig. 2 kernel k1)."""
+    (n,) = x.shape
+    blk = _pick_block(n, block)
+    return pl.pallas_call(
+        _vsin_kernel,
+        grid=(n // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,129 @@
+"""L1 Pallas tiled GEMM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's OpenCL GEMM
+launches M×N work items, one output element each, with threadblock tiling into
+shared memory on the GTX-970. On TPU the same insight — keep a reused tile of
+A and B close to the compute unit — is expressed through the BlockSpec grid:
+
+  grid = (M/bm, N/bn, K/bk); each (i, j) owns a (bm, bn) output tile held in a
+  VMEM scratch accumulator while the k axis streams (bm, bk) / (bk, bn) tiles
+  HBM→VMEM. The MXU consumes the (bm, bk) @ (bk, bn) products.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic custom-calls;
+correctness is validated through the interpret path (see ref.py / pytest) and
+real-TPU efficiency is argued from the VMEM footprint table in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# MXU-friendly defaults: 128-multiples keep the systolic array full and a
+# (128, 128) f32 tile is 64 KiB — three tiles (A, B, acc) fit comfortably in
+# the ~16 MiB VMEM budget even with double buffering.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += A[i,k] @ B[k,j]; flush on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (so ragged shapes work)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(a, b, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK):
+    """C[M,N] = A[M,K] @ B[K,N] via the tiled Pallas kernel."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu_scratch((bm, bn))],
+        interpret=True,
+    )(a, b)
+
+
+def pltpu_scratch(shape):
+    """VMEM scratch allocation, version-portable."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _gemm_bias_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] + bias_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_bias(
+    a, b, bias, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK
+):
+    """C = A @ B + bias, bias shape (N,) broadcast over rows."""
+    m, k = a.shape
+    _, n = b.shape
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_gemm_bias_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu_scratch((bm, bn))],
+        interpret=True,
+    )(a, b, bias)

@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest asserts
+``assert_allclose(pallas_kernel(x), ref(x))`` over hypothesis-driven shape
+sweeps. Keep them dead simple — no tiling, no tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def gemm(a, b):
+    """C = A @ B, float32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def gemm_bias(a, b, bias):
+    """C = A @ B + bias (bias broadcast over rows)."""
+    return (jnp.matmul(a, b, preferred_element_type=jnp.float32) + bias).astype(
+        a.dtype
+    )
+
+
+def softmax(x):
+    """Row-wise numerically stable softmax."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def transpose(x):
+    """2-D transpose."""
+    return x.T
+
+
+def vadd(a, b):
+    """Element-wise addition (Fig. 2 k0)."""
+    return a + b
+
+
+def vsin(x):
+    """Element-wise sine (Fig. 2 k1)."""
+    return jnp.sin(x)
+
+
+def scaled_dot_attention(x, wq, wk, wv, wo):
+    """One transformer attention head — the paper's 8-kernel DAG, fused.
+
+    Q = X Wq ; K = X Wk ; V = X Wv            (3 projection GEMMs, level 1)
+    Kt = K^T                                   (transpose)
+    A = Q Kt                                   (score GEMM)
+    B = softmax(A)                             (softmax)
+    C = B V                                    (context GEMM)
+    Z = C Wo                                   (output GEMM)
+    """
+    q = gemm(x, wq)
+    k = gemm(x, wk)
+    v = gemm(x, wv)
+    kt = transpose(k)
+    a = gemm(q, kt)
+    b = softmax(a)
+    c = gemm(b, v)
+    return gemm(c, wo)
+
+
+def multi_head_layer(x, weights):
+    """H independent heads; outputs summed (proxy for concat+project).
+
+    ``weights`` is a list of (wq, wk, wv, wo) tuples, one per head. The paper
+    treats heads as fully independent DAG branches whose outputs are
+    concatenated; summing keeps the output square (β×β) so the same kernel
+    inventory covers the whole layer, and preserves the DAG shape exactly.
+    """
+    acc = None
+    for (wq, wk, wv, wo) in weights:
+        z = scaled_dot_attention(x, wq, wk, wv, wo)
+        acc = z if acc is None else acc + z
+    return acc

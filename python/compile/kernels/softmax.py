@@ -1,0 +1,43 @@
+"""L1 Pallas row-wise softmax.
+
+Adaptation: the paper's OpenCL softmax assigns work items to rows; on TPU we
+block rows so each grid step owns a (bm, N) slab resident in VMEM and the VPU
+does max/exp/sum/div in one pass. Rows are independent, so the grid is 1-D.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def softmax(x, *, bm: int = DEFAULT_BM):
+    """Numerically stable softmax along the last axis of a 2-D array."""
+    m, n = x.shape
+    bm = _pick_block(m, bm)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x)

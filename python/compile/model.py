@@ -1,0 +1,78 @@
+"""L2: the transformer attention model (build-time JAX), composed from L1
+Pallas kernels.
+
+Two granularities are exported:
+
+* **per-kernel entry points** (`gemm_fn`, `softmax_fn`, `transpose_fn`,
+  `vadd_fn`, `vsin_fn`) — one HLO executable per (op, size). These are what
+  the L3 coordinator schedules: each DAG *ndrange* command runs exactly one
+  of these, so the scheduler controls interleaving/concurrency, like the
+  paper's per-kernel OpenCL dispatch.
+* **fused entry points** (`head_fn`, `layer_fn`) — the whole attention head
+  (the paper's 8-kernel DAG) or the H-head layer as a single XLA program.
+  Used (a) as the numerics oracle for coordinator-composed execution in Rust
+  integration tests, and (b) as the L2-fusion ablation in EXPERIMENTS.md.
+"""
+
+from .kernels import elementwise, gemm, softmax, transpose
+
+
+def gemm_fn(a, b):
+    """C = A @ B (Pallas tiled kernel)."""
+    return (gemm.gemm(a, b),)
+
+
+def softmax_fn(x):
+    """Row softmax (Pallas kernel)."""
+    return (softmax.softmax(x),)
+
+
+def transpose_fn(x):
+    """X^T (Pallas kernel)."""
+    return (transpose.transpose(x),)
+
+
+def vadd_fn(a, b):
+    """a + b (Fig. 2 k0)."""
+    return (elementwise.vadd(a, b),)
+
+
+def vsin_fn(x):
+    """sin(x) (Fig. 2 k1)."""
+    return (elementwise.vsin(x),)
+
+
+def head_fn(x, wq, wk, wv, wo):
+    """One attention head: the paper's 8-kernel DAG fused into one program.
+
+    Level structure (Fig. 3): 3 projection GEMMs -> transpose -> score GEMM
+    -> softmax -> context GEMM -> output GEMM.
+    """
+    q = gemm.gemm(x, wq)
+    k = gemm.gemm(x, wk)
+    v = gemm.gemm(x, wv)
+    kt = transpose.transpose(k)
+    a = gemm.gemm(q, kt)
+    b = softmax.softmax(a)
+    c = gemm.gemm(b, v)
+    z = gemm.gemm(c, wo)
+    return (z,)
+
+
+def layer_fn(x, *flat_weights):
+    """H-head layer; heads independent, outputs summed (see ref.py note).
+
+    ``flat_weights`` is H groups of (wq, wk, wv, wo).
+    """
+    assert len(flat_weights) % 4 == 0
+    acc = None
+    for h in range(len(flat_weights) // 4):
+        wq, wk, wv, wo = flat_weights[4 * h : 4 * h + 4]
+        (z,) = head_fn(x, wq, wk, wv, wo)
+        acc = z if acc is None else elementwise_add2d(acc, z)
+    return (acc,)
+
+
+def elementwise_add2d(a, b):
+    """2-D add via the vadd kernel semantics (kept trivially jnp: XLA fuses)."""
+    return a + b

@@ -1,0 +1,172 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle in ref.py.
+
+hypothesis sweeps shapes (including ragged / non-128-divisible) and dtypes.
+Tolerances: GEMM accumulates in a different order than jnp.matmul, so 1e-4
+relative; element-wise ops are bit-for-bit comparable at 1e-6.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise, gemm, ref, softmax, transpose
+
+DIMS = st.sampled_from([1, 2, 3, 8, 17, 32, 56, 64, 96, 128, 130, 192, 256])
+SMALL_DIMS = st.sampled_from([1, 2, 7, 16, 33, 64])
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- GEMM
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_gemm_matches_ref(m, k, n, seed):
+    r = rng(seed)
+    a = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    np.testing.assert_allclose(
+        gemm.gemm(a, b), ref.gemm(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS)
+def test_gemm_bf16(m, k, n):
+    r = rng(7)
+    a = jnp.asarray(r.standard_normal((m, k)), jnp.bfloat16)
+    b = jnp.asarray(r.standard_normal((k, n)), jnp.bfloat16)
+    got = gemm.gemm(a, b).astype(jnp.float32)
+    want = ref.gemm(a, b).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("beta", [64, 128, 256])
+def test_gemm_paper_sizes(beta):
+    r = rng(beta)
+    a = jnp.asarray(r.standard_normal((beta, beta)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((beta, beta)), jnp.float32)
+    np.testing.assert_allclose(
+        gemm.gemm(a, b), ref.gemm(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (64, 128, 32), (128, 128, 128)])
+def test_gemm_block_shape_invariance(bm, bn, bk):
+    """Output must not depend on the BlockSpec tiling choice."""
+    r = rng(3)
+    a = jnp.asarray(r.standard_normal((128, 128)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((128, 128)), jnp.float32)
+    base = gemm.gemm(a, b, bm=128, bn=128, bk=128)
+    tiled = gemm.gemm(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(base, tiled, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_identity():
+    eye = jnp.eye(64, dtype=jnp.float32)
+    x = jnp.asarray(rng(0).standard_normal((64, 64)), jnp.float32)
+    np.testing.assert_allclose(gemm.gemm(x, eye), x, rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_bias():
+    r = rng(11)
+    a = jnp.asarray(r.standard_normal((64, 32)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((32, 48)), jnp.float32)
+    bias = jnp.asarray(r.standard_normal((48,)), jnp.float32)
+    np.testing.assert_allclose(
+        gemm.gemm_bias(a, b, bias), ref.gemm_bias(a, b, bias), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_gemm_rect_contraction_mismatch():
+    a = jnp.zeros((4, 5), jnp.float32)
+    b = jnp.zeros((6, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        gemm.gemm(a, b)
+
+
+# ---------------------------------------------------------------- softmax
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_softmax_matches_ref(m, n, seed):
+    x = jnp.asarray(rng(seed).standard_normal((m, n)) * 4, jnp.float32)
+    np.testing.assert_allclose(
+        softmax.softmax(x), ref.softmax(x), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_softmax_rows_sum_to_one():
+    x = jnp.asarray(rng(5).standard_normal((130, 67)), jnp.float32)
+    s = np.asarray(softmax.softmax(x)).sum(axis=-1)
+    np.testing.assert_allclose(s, np.ones(130), rtol=1e-5)
+
+
+def test_softmax_large_logits_stable():
+    """Stability: huge logits must not overflow (max-subtraction)."""
+    x = jnp.asarray([[1e4, 1e4 + 1.0, 0.0]], jnp.float32)
+    out = np.asarray(softmax.softmax(x))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out.sum(), 1.0, rtol=1e-5)
+
+
+def test_softmax_translation_invariance():
+    x = jnp.asarray(rng(9).standard_normal((16, 16)), jnp.float32)
+    np.testing.assert_allclose(
+        softmax.softmax(x), softmax.softmax(x + 37.0), rtol=1e-4, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------- transpose
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_transpose_matches_ref(m, n, seed):
+    x = jnp.asarray(rng(seed).standard_normal((m, n)), jnp.float32)
+    np.testing.assert_allclose(transpose.transpose(x), x.T)
+
+
+def test_transpose_involution():
+    x = jnp.asarray(rng(1).standard_normal((96, 40)), jnp.float32)
+    np.testing.assert_allclose(transpose.transpose(transpose.transpose(x)), x)
+
+
+# ---------------------------------------------------------------- elementwise
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 5, 16, 100, 1024, 3000, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vadd_matches_ref(n, seed):
+    r = rng(seed)
+    a = jnp.asarray(r.standard_normal(n), jnp.float32)
+    b = jnp.asarray(r.standard_normal(n), jnp.float32)
+    np.testing.assert_allclose(elementwise.vadd(a, b), ref.vadd(a, b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 5, 16, 100, 1024, 3000, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vsin_matches_ref(n, seed):
+    x = jnp.asarray(rng(seed).standard_normal(n) * 3, jnp.float32)
+    np.testing.assert_allclose(
+        elementwise.vsin(x), ref.vsin(x), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_vadd_commutative():
+    r = rng(2)
+    a = jnp.asarray(r.standard_normal(512), jnp.float32)
+    b = jnp.asarray(r.standard_normal(512), jnp.float32)
+    np.testing.assert_allclose(elementwise.vadd(a, b), elementwise.vadd(b, a))

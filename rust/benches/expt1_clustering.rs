@@ -1,0 +1,25 @@
+//! Bench E1 — regenerates Fig. 11: clustering best-configuration speedup
+//! over the default coarse configuration, H ∈ [1, 16], β=256.
+//!
+//! Paper shape: ≈15% flat region for H ≤ 10 (h_cpu = 0), jump with
+//! h_cpu = 1 beyond.
+
+use pyschedcl::benchkit::bench;
+use pyschedcl::report::experiments::{expt1, format_expt1};
+
+fn main() {
+    println!("== Expt 1 (Fig. 11): clustering configuration sweep ==");
+    let rows = expt1(16, 256, 2).expect("sweep runs");
+    print!("{}", format_expt1(&rows));
+    let crossover = rows
+        .iter()
+        .find(|r| r.best.h_cpu > 0)
+        .map(|r| r.heads)
+        .unwrap_or(0);
+    println!("crossover to h_cpu=1 at H={crossover} (paper: >10)");
+
+    println!("\nharness timing:");
+    bench("sim/expt1_row(H=16,full_sweep)", 1, 5, || {
+        expt1(16, 256, 1).unwrap()
+    });
+}

@@ -1,0 +1,19 @@
+//! Bench E2 — regenerates Fig. 12(a): clustering (best mc) vs eager,
+//! H=16, β ∈ {64, 128, 256, 512}.
+//!
+//! Paper band: 1.4–3.4× in clustering's favour.
+
+use pyschedcl::benchkit::bench;
+use pyschedcl::report::experiments::{expt2, format_baseline};
+
+fn main() {
+    println!("== Expt 2 (Fig. 12a): clustering vs eager ==");
+    let rows = expt2(16, &[64, 128, 256, 512]).expect("sweep runs");
+    print!("{}", format_baseline(&rows, "eager"));
+    println!("(paper band: 1.4–3.4x; shape: speedup shrinks as β grows)");
+
+    println!("\nharness timing:");
+    bench("sim/expt2_point(H=16,beta=256)", 1, 5, || {
+        expt2(16, &[256]).unwrap()
+    });
+}

@@ -1,0 +1,37 @@
+//! Bench E3 — regenerates Fig. 12(b): clustering (best mc) vs HEFT,
+//! H=16, β ∈ {64, 128, 256, 512}, plus the Fig. 13 Gantt diagnostics.
+//!
+//! Paper claims: clustering > heft > eager; heft ≈2.4× over eager at β=512.
+
+use pyschedcl::benchkit::bench;
+use pyschedcl::report::experiments::{expt2, expt3, format_baseline, gantt};
+
+fn main() {
+    println!("== Expt 3 (Fig. 12b): clustering vs HEFT ==");
+    let rows = expt3(16, &[64, 128, 256, 512]).expect("sweep runs");
+    print!("{}", format_baseline(&rows, "heft"));
+
+    // Cross-check the paper's heft-vs-eager factor at β=512.
+    let e = expt2(16, &[512]).unwrap()[0];
+    let h = &rows[3];
+    println!(
+        "heft over eager at β=512: {:.2}x (paper ≈2.4x)",
+        e.baseline_ms / h.baseline_ms
+    );
+
+    println!("\n== Fig. 13 diagnostics (H=16, β=512) ==");
+    for policy in ["eager", "heft", "clustering"] {
+        let (r, _) = gantt(policy, 16, 512).unwrap();
+        println!(
+            "  {policy:<11} makespan {:>9.1} ms  max GPU gap {:>8.2} ms  overlap {:>7.1} ms",
+            r.makespan * 1e3,
+            r.trace.max_gap(0) * 1e3,
+            r.trace.device_overlap(0) * 1e3
+        );
+    }
+
+    println!("\nharness timing:");
+    bench("sim/expt3_point(H=16,beta=256)", 1, 5, || {
+        expt3(16, &[256]).unwrap()
+    });
+}

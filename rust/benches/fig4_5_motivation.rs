@@ -1,0 +1,40 @@
+//! Bench E-MOT — regenerates Figs. 4/5: coarse vs fine-grained scheduling
+//! of one transformer head (β=256) on the simulated GTX-970.
+//!
+//! Paper rows: coarse 105 ms, fine 95 ms (≈8% faster).
+
+use pyschedcl::benchkit::bench;
+use pyschedcl::report::experiments::{motivation, run_clustering, MappingConfig};
+use pyschedcl::cost::PaperCost;
+
+fn main() {
+    println!("== Figs. 4/5: coarse vs fine-grained (1 head, β=256) ==");
+    let m = motivation(256).expect("motivation runs");
+    println!(
+        "simulated: coarse {:.1} ms | fine {:.1} ms | speedup {:.3}x  (paper: 105 / 95 ms, ~8%)",
+        m.coarse_ms, m.fine_ms, m.speedup
+    );
+    println!(
+        "fine-grained overlap: kernels {:.1} ms, copy/compute {:.1} ms",
+        m.fine.trace.device_overlap(0) * 1e3,
+        m.fine.trace.copy_compute_overlap(0) * 1e3
+    );
+
+    // Queue-count ablation (the q_gpu axis the paper sweeps).
+    println!("\nqueue-count ablation (1 head, β=256):");
+    for q in 1..=5 {
+        let mc = MappingConfig {
+            q_gpu: q,
+            q_cpu: 0,
+            h_cpu: 0,
+        };
+        let r = run_clustering(1, 256, mc, &PaperCost).unwrap();
+        println!("  q_gpu={q}: {:>7.2} ms", r.makespan * 1e3);
+    }
+
+    // Harness cost: how fast the simulator regenerates the figure.
+    println!("\nharness timing:");
+    bench("sim/motivation_pair(beta=256)", 2, 20, || {
+        motivation(256).unwrap()
+    });
+}

@@ -1,0 +1,108 @@
+//! Coordinator micro-benchmarks: the L3 hot paths the §Perf pass tracks.
+//!
+//! * spec parsing (design frontend)
+//! * `setup_cq` synthesis throughput
+//! * simulator event rate
+//! * real PJRT dispatch latency (skipped when artifacts are absent)
+
+use pyschedcl::benchkit::bench;
+use pyschedcl::cost::PaperCost;
+use pyschedcl::exec::execute_dag;
+use pyschedcl::graph::Partition;
+use pyschedcl::platform::{Device, DeviceType, Platform};
+use pyschedcl::queue::setup_cq;
+use pyschedcl::runtime::Runtime;
+use pyschedcl::sched::Clustering;
+use pyschedcl::sim::{simulate, SimConfig};
+use pyschedcl::spec::parse_spec;
+use pyschedcl::transformer::{cluster_by_head, transformer_dag, vadd_vsin_dag};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+
+    // ---- spec frontend
+    let spec_text =
+        std::fs::read_to_string(root.join("specs/transformer_head_b64.json")).unwrap();
+    bench("spec/parse_transformer_head", 10, 200, || {
+        parse_spec(&spec_text).unwrap()
+    });
+
+    // ---- queue synthesis
+    let (dag16, ios16) = transformer_dag(16, 256, DeviceType::Gpu);
+    let part16 = cluster_by_head(&dag16, &ios16, 1);
+    let gpu = Device::gtx970(0, 3);
+    bench("queue/setup_cq_one_head(8_kernels)", 10, 500, || {
+        setup_cq(&dag16, &part16, 1, &gpu)
+    });
+    bench("queue/setup_cq_all_16_heads", 5, 100, || {
+        for c in 0..16 {
+            std::hint::black_box(setup_cq(&dag16, &part16, c, &gpu));
+        }
+    });
+
+    // ---- simulator
+    let platform = Platform::paper_testbed(3, 1);
+    let cfg = SimConfig::default();
+    bench("sim/transformer_H16_b256_clustering", 3, 30, || {
+        simulate(&dag16, &part16, &platform, &PaperCost, &mut Clustering, &cfg).unwrap()
+    });
+    let singles = Partition::singletons(&dag16);
+    let p1 = Platform::paper_testbed(1, 1);
+    bench("sim/transformer_H16_b256_eager", 3, 30, || {
+        simulate(
+            &dag16,
+            &singles,
+            &p1,
+            &PaperCost,
+            &mut pyschedcl::sched::Eager,
+            &cfg,
+        )
+        .unwrap()
+    });
+
+    // ---- real PJRT dispatch (end-to-end driver hot path)
+    let Ok(rt) = Runtime::new(&root.join("artifacts")) else {
+        println!("runtime/* skipped: artifacts not built");
+        return;
+    };
+    let rt = Arc::new(rt);
+    rt.load("gemm_b64").unwrap();
+    let n = 64 * 64;
+    let a: Vec<f32> = (0..n).map(|i| (i % 17) as f32 / 7.0).collect();
+    bench("runtime/execute_gemm_b64", 5, 100, || {
+        rt.execute_f32("gemm_b64", &[&a, &a]).unwrap()
+    });
+    rt.load("gemm_b256").unwrap();
+    let big: Vec<f32> = (0..256 * 256).map(|i| (i % 23) as f32 / 9.0).collect();
+    bench("runtime/execute_gemm_b256", 3, 30, || {
+        rt.execute_f32("gemm_b256", &[&big, &big]).unwrap()
+    });
+
+    let (vdag, vks) = vadd_vsin_dag(4096);
+    let vpart = Partition::singletons(&vdag);
+    let vplat = Platform::paper_testbed(2, 1);
+    let mut inputs = HashMap::new();
+    inputs.insert(vdag.kernels[vks[0]].inputs[0], a[..4096.min(n)].to_vec());
+    inputs.insert(vdag.kernels[vks[0]].inputs[1], a[..4096.min(n)].to_vec());
+    let mut inputs2 = HashMap::new();
+    let v: Vec<f32> = (0..4096).map(|i| (i % 13) as f32 / 5.0).collect();
+    inputs2.insert(vdag.kernels[vks[0]].inputs[0], v.clone());
+    inputs2.insert(vdag.kernels[vks[0]].inputs[1], v);
+    rt.load("vadd_n4096").unwrap();
+    rt.load("vsin_n4096").unwrap();
+    bench("exec/execute_dag_vadd_vsin", 3, 30, || {
+        execute_dag(
+            &vdag,
+            &vpart,
+            &vplat,
+            &PaperCost,
+            &mut Clustering,
+            &rt,
+            &inputs2,
+        )
+        .unwrap()
+    });
+}

@@ -1,0 +1,81 @@
+//! Minimal benchmarking harness (offline environment: no criterion).
+//!
+//! Used by the `rust/benches/*` targets (`harness = false`). Reports
+//! mean/min/max over warmup + measured iterations, in criterion-like lines.
+
+use std::time::Instant;
+
+/// Timing statistics over the measured iterations, seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn line(&self, name: &str) -> String {
+        format!(
+            "{name:<44} time: [{} {} {}]  ({} iters)",
+            fmt_time(self.min),
+            fmt_time(self.mean),
+            fmt_time(self.max),
+            self.iters
+        )
+    }
+}
+
+/// Humanize a duration in seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations and report stats.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let stats = Stats {
+        mean: times.iter().sum::<f64>() / times.len() as f64,
+        min: times.iter().copied().fold(f64::INFINITY, f64::min),
+        max: times.iter().copied().fold(0.0, f64::max),
+        iters,
+    };
+    println!("{}", stats.line(name));
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

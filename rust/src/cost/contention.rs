@@ -1,0 +1,97 @@
+//! Concurrent-kernel contention model.
+//!
+//! The paper (§2.1, citing cCUDA [9]) observes that when multiple kernels
+//! are dispatched concurrently, their work groups are round-robined onto the
+//! device's compute units: *individual* kernel times increase, but *total*
+//! time drops whenever one kernel alone cannot saturate the device.
+//!
+//! Model: each kernel `k` has an *occupancy* `u_k ∈ (0, 1]` — the fraction
+//! of the device it can use alone. With running set `R`:
+//!
+//! * `Σ u ≤ 1`: no contention; every kernel proceeds at its solo speed.
+//! * `Σ u > 1`: the device is oversubscribed; kernel k proceeds at speed
+//!   `(u_k / Σu) · η` where `η < 1` is the round-robin interference penalty.
+//!
+//! This produces exactly the paper's Gantt behaviour: concurrent e1..e3
+//! stretch individually yet finish earlier collectively (Fig. 5).
+
+use crate::graph::KernelNode;
+use crate::platform::Device;
+
+/// Round-robin interference efficiency once the device is oversubscribed.
+pub const CONTENTION_EFFICIENCY: f64 = 0.92;
+
+/// Occupancy of one kernel on a device, anchored at `base_occupancy` for a
+/// β=256-sized GEMM (2·256³ flops) and growing with the work's parallel
+/// width. Memory-bound ops (few flops) still occupy bandwidth: floor at 0.15.
+pub fn occupancy(k: &KernelNode, dev: &Device) -> f64 {
+    const ANCHOR_FLOPS: f64 = 2.0 * 256.0 * 256.0 * 256.0;
+    let scale = (k.flops.max(1) as f64 / ANCHOR_FLOPS).powf(1.0 / 3.0);
+    (dev.base_occupancy * scale).clamp(0.15, 1.0)
+}
+
+/// Speed multiplier (0, 1] for each kernel in a running set with occupancies
+/// `us`; returns one multiplier per kernel.
+pub fn shared_speeds(us: &[f64]) -> Vec<f64> {
+    shared_speeds_with(us, CONTENTION_EFFICIENCY)
+}
+
+/// [`shared_speeds`] with an explicit interference efficiency `eta`
+/// (ablation knob — see `rust/benches/ablations.rs`).
+pub fn shared_speeds_with(us: &[f64], eta: f64) -> Vec<f64> {
+    let total: f64 = us.iter().sum();
+    if total <= 1.0 {
+        us.to_vec()
+    } else {
+        us.iter().map(|u| u / total * eta).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DagBuilder;
+    use crate::platform::{Device, DeviceType};
+
+    fn gemm(beta: u64) -> KernelNode {
+        let mut b = DagBuilder::new();
+        let k = b.kernel("gemm", DeviceType::Gpu, 2 * beta * beta * beta, 1);
+        b.dag().kernels[k].clone()
+    }
+
+    #[test]
+    fn occupancy_anchored_at_beta256() {
+        let dev = Device::gtx970(0, 1);
+        let u = occupancy(&gemm(256), &dev);
+        assert!((u - dev.base_occupancy).abs() < 1e-9);
+        assert!(occupancy(&gemm(64), &dev) < u);
+        assert!(occupancy(&gemm(512), &dev) > u);
+    }
+
+    #[test]
+    fn undersubscribed_runs_at_solo_speed() {
+        let speeds = shared_speeds(&[0.4, 0.4]);
+        assert_eq!(speeds, vec![0.4, 0.4]);
+    }
+
+    #[test]
+    fn oversubscribed_shares_with_penalty() {
+        let speeds = shared_speeds(&[0.8, 0.8]);
+        // Each gets 0.5 of the device scaled by η.
+        assert!((speeds[0] - 0.5 * CONTENTION_EFFICIENCY).abs() < 1e-9);
+        // Individual slower than solo...
+        assert!(speeds[0] < 0.8);
+        // ...but aggregate throughput beats serial execution of the pair.
+        assert!(speeds[0] + speeds[1] > 0.8);
+    }
+
+    #[test]
+    fn concurrency_helps_when_unsaturated() {
+        // Two kernels of work W with u = 0.42 (β=256 GEMM on the GTX-970):
+        // serial time = 2·(W/0.42); concurrent = W/0.42 since both fit.
+        let speeds = shared_speeds(&[0.42, 0.42]);
+        let concurrent = 1.0 / speeds[0];
+        let serial = 2.0 / 0.42;
+        assert!(concurrent < serial * 0.6);
+    }
+}

@@ -1,0 +1,9 @@
+//! Kernel/device cost models: the execution-time estimates behind HEFT's
+//! EFT computation, the frontier's bottom-level ranks, and the
+//! discrete-event simulator.
+
+pub mod contention;
+pub mod model;
+
+pub use contention::occupancy;
+pub use model::{AnalyticCost, CalibratedCost, CostModel, PaperCost};

@@ -1,0 +1,50 @@
+//! Unified error type for the PySchedCL coordinator.
+
+use std::fmt;
+
+/// Library-wide error.
+#[derive(Debug)]
+pub enum Error {
+    /// Malformed or inconsistent DAG specification.
+    Spec(String),
+    /// DAG structural violation (cycle, dangling edge, ...).
+    Graph(String),
+    /// Invalid task-component partition (mixed device prefs, overlap, ...).
+    Partition(String),
+    /// Command-queue synthesis failure.
+    Queue(String),
+    /// Scheduling failure (deadlock, no matching device, ...).
+    Sched(String),
+    /// PJRT runtime failure (load/compile/execute).
+    Runtime(String),
+    /// Real-executor failure.
+    Exec(String),
+    /// I/O error with context.
+    Io(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Spec(m) => write!(f, "spec error: {m}"),
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Partition(m) => write!(f, "partition error: {m}"),
+            Error::Queue(m) => write!(f, "queue error: {m}"),
+            Error::Sched(m) => write!(f, "sched error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Exec(m) => write!(f, "exec error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

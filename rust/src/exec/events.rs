@@ -1,0 +1,132 @@
+//! OpenCL-style event objects.
+//!
+//! An [`Event`] mirrors the `cl_event` lifecycle the paper's host programs
+//! manipulate: commands complete it, dependent commands `wait` on it, and
+//! registered callbacks run on completion (on the completer's thread — the
+//! "separate thread in parallel with the host program" of §2).
+
+use std::sync::{Arc, Condvar, Mutex};
+
+type Callback = Box<dyn FnOnce() + Send>;
+
+struct Inner {
+    state: Mutex<(bool, Vec<Callback>)>,
+    cv: Condvar,
+}
+
+/// A one-shot completion event.
+#[derive(Clone)]
+pub struct Event {
+    inner: Arc<Inner>,
+}
+
+impl Default for Event {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Event {
+    pub fn new() -> Self {
+        Event {
+            inner: Arc::new(Inner {
+                state: Mutex::new((false, Vec::new())),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Mark complete; wakes waiters and runs registered callbacks.
+    pub fn complete(&self) {
+        let cbs = {
+            let mut g = self.inner.state.lock().unwrap();
+            g.0 = true;
+            self.inner.cv.notify_all();
+            std::mem::take(&mut g.1)
+        };
+        for cb in cbs {
+            cb();
+        }
+    }
+
+    /// Block until complete (the executor's cross-queue `clWaitForEvents`).
+    pub fn wait(&self) {
+        let mut g = self.inner.state.lock().unwrap();
+        while !g.0 {
+            g = self.inner.cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.inner.state.lock().unwrap().0
+    }
+
+    /// Register `cb` to run on completion (immediately if already complete)
+    /// — `clSetEventCallback`.
+    pub fn on_complete(&self, cb: impl FnOnce() + Send + 'static) {
+        let mut g = self.inner.state.lock().unwrap();
+        if g.0 {
+            drop(g);
+            cb();
+        } else {
+            g.1.push(Box::new(cb));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn wait_blocks_until_complete() {
+        let ev = Event::new();
+        let ev2 = ev.clone();
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            ev2.complete();
+        });
+        ev.wait();
+        assert!(ev.is_complete());
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn callbacks_fire_once_each() {
+        let ev = Event::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..3 {
+            let h = hits.clone();
+            ev.on_complete(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        ev.complete();
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        // Late registration runs immediately.
+        let h = hits.clone();
+        ev.on_complete(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn many_waiters_all_wake() {
+        let ev = Event::new();
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let e = ev.clone();
+            joins.push(thread::spawn(move || e.wait()));
+        }
+        thread::sleep(Duration::from_millis(5));
+        ev.complete();
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}

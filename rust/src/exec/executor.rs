@@ -1,0 +1,353 @@
+//! The threaded real executor: Algorithm 1 over OS threads + PJRT kernels.
+//!
+//! Thread topology mirrors the paper's host program:
+//! * the caller's thread runs the `schedule` loop (select → dispatch);
+//! * each dispatch spawns a child that runs `setup_cq` and then one worker
+//!   thread per command queue (in-order execution, cross-queue waits via
+//!   [`Event`]s — exactly the `E_Q` constraints);
+//! * completion updates the frontier/device set under a lock and notifies
+//!   the scheduler, like the thread-safe callback `cb` of Algorithm 1.
+
+use super::events::Event;
+use super::memory::BufferStore;
+use crate::cost::CostModel;
+use crate::error::{Error, Result};
+use crate::graph::{BufferId, Dag, Partition};
+use crate::platform::{DeviceId, Platform};
+use crate::queue::{setup_cq, CommandKind};
+use crate::runtime::Runtime;
+use crate::sched::{component_ranks, Policy, SchedView};
+use crate::trace::{Lane, Span, Trace};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Outcome of a real execution.
+pub struct ExecReport {
+    /// Wall-clock makespan, seconds.
+    pub makespan: f64,
+    pub trace: Trace,
+    /// Device each component ran on.
+    pub component_device: Vec<DeviceId>,
+    /// Final host-visible buffer contents (outputs read back by D2H).
+    pub store: BufferStore,
+}
+
+struct State {
+    frontier: Vec<usize>,
+    available: Vec<DeviceId>,
+    est_free: Vec<f64>,
+    ext_preds_left: Vec<usize>,
+    comp_dispatched: Vec<bool>,
+    comp_device: Vec<DeviceId>,
+    comps_done: usize,
+    failed: Option<String>,
+}
+
+struct Shared<'a> {
+    dag: &'a Dag,
+    partition: &'a Partition,
+    state: Mutex<State>,
+    cv: Condvar,
+    store: BufferStore,
+    trace: Mutex<Trace>,
+    t0: Instant,
+    unblocks: Vec<Vec<usize>>,
+    comp_rank: Vec<f64>,
+}
+
+impl<'a> Shared<'a> {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn fail(&self, msg: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.failed.is_none() {
+            st.failed = Some(msg);
+        }
+        self.cv.notify_all();
+    }
+
+    fn push_span(&self, span: Span) {
+        self.trace.lock().unwrap().push(span);
+    }
+}
+
+/// Execute `partition` of `dag` for real: kernels run as AOT PJRT programs,
+/// `inputs` seeds the host buffers (keyed by DAG buffer id).
+pub fn execute_dag(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    runtime: &Arc<Runtime>,
+    inputs: &HashMap<BufferId, Vec<f32>>,
+) -> Result<ExecReport> {
+    // Every kernel needs a bound artifact for real execution.
+    for k in &dag.kernels {
+        if k.artifact.is_none() {
+            return Err(Error::Exec(format!(
+                "kernel {} ('{}') has no AOT artifact bound",
+                k.id, k.name
+            )));
+        }
+    }
+    let ncomp = partition.components.len();
+    let mut unblocks: Vec<Vec<usize>> = vec![Vec::new(); dag.num_kernels()];
+    let mut ext_preds_left = vec![0usize; ncomp];
+    let mut seen: Vec<Vec<usize>> = vec![Vec::new(); ncomp];
+    for &(src, dst) in &dag.buffer_edges {
+        let pk = dag.buffers[src].kernel;
+        let ck = dag.buffers[dst].kernel;
+        let (pc, cc) = (partition.assignment[pk], partition.assignment[ck]);
+        if pc != cc {
+            if !unblocks[pk].contains(&cc) {
+                unblocks[pk].push(cc);
+            }
+            if !seen[cc].contains(&pk) {
+                seen[cc].push(pk);
+                ext_preds_left[cc] += 1;
+            }
+        }
+    }
+    let comp_rank = component_ranks(dag, partition, platform, cost);
+    let mut frontier: Vec<usize> =
+        (0..ncomp).filter(|&c| ext_preds_left[c] == 0).collect();
+    frontier.sort_by(|&a, &b| comp_rank[b].total_cmp(&comp_rank[a]));
+    let available: Vec<DeviceId> = platform
+        .devices
+        .iter()
+        .filter(|d| d.num_queues > 0)
+        .map(|d| d.id)
+        .collect();
+    if available.is_empty() {
+        return Err(Error::Sched("no device has command queues".into()));
+    }
+
+    let shared = Shared {
+        dag,
+        partition,
+        state: Mutex::new(State {
+            frontier,
+            available,
+            est_free: vec![0.0; platform.devices.len()],
+            ext_preds_left,
+            comp_dispatched: vec![false; ncomp],
+            comp_device: vec![usize::MAX; ncomp],
+            comps_done: 0,
+            failed: None,
+        }),
+        cv: Condvar::new(),
+        store: BufferStore::new(),
+        trace: Mutex::new(Trace::default()),
+        t0: Instant::now(),
+        unblocks,
+        comp_rank,
+    };
+    for (&b, data) in inputs {
+        shared.store.set_host(b, data.clone());
+    }
+
+    std::thread::scope(|scope| -> Result<()> {
+        // ----- Algorithm 1's schedule loop on the caller thread.
+        loop {
+            let mut st = shared.state.lock().unwrap();
+            if let Some(msg) = st.failed.clone() {
+                drop(st);
+                return Err(Error::Exec(msg));
+            }
+            if st.comps_done == ncomp {
+                break;
+            }
+            let selection = {
+                let view = SchedView {
+                    now: shared.now(),
+                    frontier: &st.frontier,
+                    available: &st.available,
+                    platform,
+                    partition,
+                    dag,
+                    est_free: &st.est_free,
+                    cost,
+                };
+                policy.select(&view)
+            };
+            match selection {
+                Some((comp, dev)) => {
+                    st.frontier.retain(|&c| c != comp);
+                    st.available.retain(|&d| d != dev);
+                    st.comp_dispatched[comp] = true;
+                    st.comp_device[comp] = dev;
+                    // EFT bookkeeping for HEFT.
+                    let device = platform.device(dev);
+                    let solo: f64 = partition.components[comp]
+                        .kernels
+                        .iter()
+                        .map(|&k| cost.exec_time(&dag.kernels[k], device))
+                        .sum();
+                    st.est_free[dev] = shared.now() + solo;
+                    drop(st);
+                    let sh = &shared;
+                    let pf = platform;
+                    let rt = runtime.clone();
+                    let queues = policy.queues_for(device);
+                    scope.spawn(move || run_component(sh, pf, rt, comp, dev, queues));
+                }
+                None => {
+                    // sleep_till_cb_update(): callbacks wake us.
+                    let (g, _) = shared
+                        .cv
+                        .wait_timeout(st, std::time::Duration::from_millis(50))
+                        .unwrap();
+                    drop(g);
+                }
+            }
+        }
+        Ok(())
+    })?;
+
+    let st = shared.state.into_inner().unwrap();
+    if let Some(msg) = st.failed {
+        return Err(Error::Exec(msg));
+    }
+    let trace = shared.trace.into_inner().unwrap();
+    Ok(ExecReport {
+        makespan: trace.makespan(),
+        trace,
+        component_device: st.comp_device,
+        store: shared.store,
+    })
+}
+
+/// Dispatch child thread: setup_cq + one worker per command queue + the
+/// completion callback.
+fn run_component(
+    shared: &Shared<'_>,
+    platform: &Platform,
+    runtime: Arc<Runtime>,
+    comp: usize,
+    dev: DeviceId,
+    queues: usize,
+) {
+    let mut device = platform.device(dev).clone();
+    device.num_queues = queues;
+    let cq = setup_cq(shared.dag, shared.partition, comp, &device);
+    let events: Vec<Event> = (0..cq.num_commands()).map(|_| Event::new()).collect();
+
+    let result = std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for q in 0..cq.queues.len() {
+            let cq_ref = &cq;
+            let events_ref = &events;
+            let rt = runtime.clone();
+            handles.push(scope.spawn(move || -> Result<()> {
+                for &cmd in &cq_ref.queues[q] {
+                    // Cross-queue E_Q waits (in-order is this loop itself).
+                    for dep in cq_ref.deps_of(cmd) {
+                        events_ref[dep].wait();
+                    }
+                    let start = shared.now();
+                    let c = &cq_ref.commands[cmd];
+                    let outcome = match c.kind {
+                        CommandKind::Write { buffer } => shared
+                            .store
+                            .h2d(shared.dag, dev, buffer)
+                            .map(|_| (format!("w{buffer}"), true)),
+                        CommandKind::Read { buffer } => shared
+                            .store
+                            .d2h(dev, buffer)
+                            .map(|_| (format!("r{buffer}"), true)),
+                        CommandKind::NdRange => run_kernel(shared, &rt, dev, c.kernel)
+                            .map(|_| (shared.dag.kernels[c.kernel].name.clone(), false)),
+                    };
+                    match outcome {
+                        Ok((label, is_transfer)) => {
+                            shared.push_span(Span {
+                                label,
+                                lane: if is_transfer {
+                                    Lane::CopyEngine { idx: 0 }
+                                } else {
+                                    Lane::Device { dev, slot: q }
+                                },
+                                start,
+                                end: shared.now(),
+                                cmd: Some(cmd),
+                                kernel: Some(c.kernel),
+                            });
+                            events_ref[cmd].complete();
+                        }
+                        Err(e) => {
+                            // Complete the event anyway to avoid deadlock,
+                            // then surface the failure.
+                            events_ref[cmd].complete();
+                            return Err(e);
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        let mut first_err = None;
+        for h in handles {
+            if let Err(e) = h.join().expect("queue thread panicked") {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    });
+
+    match result {
+        Ok(()) => {
+            // Thread-safe callback cb: update F and A, notify schedule.
+            let mut st = shared.state.lock().unwrap();
+            for &k in &shared.partition.components[comp].kernels {
+                for &uc in &shared.unblocks[k] {
+                    st.ext_preds_left[uc] -= 1;
+                    if st.ext_preds_left[uc] == 0 && !st.comp_dispatched[uc] {
+                        st.frontier.push(uc);
+                    }
+                }
+            }
+            let ranks = &shared.comp_rank;
+            st.frontier.sort_by(|&a, &b| ranks[b].total_cmp(&ranks[a]));
+            st.available.push(dev);
+            st.est_free[dev] = shared.now();
+            st.comps_done += 1;
+            shared.cv.notify_all();
+        }
+        Err(e) => shared.fail(format!("component {comp}: {e}")),
+    }
+}
+
+/// Execute one kernel's AOT artifact with device-resident inputs.
+fn run_kernel(
+    shared: &Shared<'_>,
+    runtime: &Runtime,
+    dev: DeviceId,
+    kernel: usize,
+) -> Result<()> {
+    let node = &shared.dag.kernels[kernel];
+    let artifact = node.artifact.as_deref().expect("checked in execute_dag");
+    let mut inputs = Vec::with_capacity(node.inputs.len());
+    for &b in &node.inputs {
+        inputs.push(shared.store.resolve_input(shared.dag, dev, b)?);
+    }
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let outputs = runtime.execute_f32(artifact, &refs)?;
+    if outputs.len() != node.outputs.len() {
+        return Err(Error::Exec(format!(
+            "kernel {kernel} ({artifact}): {} outputs, DAG expects {}",
+            outputs.len(),
+            node.outputs.len()
+        )));
+    }
+    for (&b, data) in node.outputs.iter().zip(outputs) {
+        shared.store.set_device(dev, b, data);
+    }
+    Ok(())
+}

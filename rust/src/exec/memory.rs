@@ -1,0 +1,131 @@
+//! Host + device buffer stores.
+//!
+//! Mirrors the paper's memory model: host memory holds user inputs and
+//! read-back results; each device has its own buffer space populated by
+//! write commands and kernel outputs. Intra-component edges keep data
+//! device-resident (`enq` elides those transfers), which the input
+//! resolution rule below honours.
+
+use crate::error::{Error, Result};
+use crate::graph::{BufferId, Dag};
+use crate::platform::DeviceId;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Thread-safe buffer contents, keyed by DAG buffer id.
+#[derive(Default)]
+pub struct BufferStore {
+    host: Mutex<HashMap<BufferId, Vec<f32>>>,
+    device: Mutex<HashMap<(DeviceId, BufferId), Vec<f32>>>,
+}
+
+impl BufferStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed a host buffer (user input).
+    pub fn set_host(&self, b: BufferId, data: Vec<f32>) {
+        self.host.lock().unwrap().insert(b, data);
+    }
+
+    pub fn host(&self, b: BufferId) -> Option<Vec<f32>> {
+        self.host.lock().unwrap().get(&b).cloned()
+    }
+
+    pub fn set_device(&self, dev: DeviceId, b: BufferId, data: Vec<f32>) {
+        self.device.lock().unwrap().insert((dev, b), data);
+    }
+
+    pub fn device(&self, dev: DeviceId, b: BufferId) -> Option<Vec<f32>> {
+        self.device.lock().unwrap().get(&(dev, b)).cloned()
+    }
+
+    /// H2D write command: source is the host copy of `b` itself, or — for a
+    /// dependent write — the host copy of its predecessor output.
+    pub fn h2d(&self, dag: &Dag, dev: DeviceId, b: BufferId) -> Result<()> {
+        let data = self
+            .host(b)
+            .or_else(|| dag.buffer_pred(b).and_then(|p| self.host(p)))
+            .ok_or_else(|| {
+                Error::Exec(format!("write of buffer {b}: no host data available"))
+            })?;
+        self.set_device(dev, b, data);
+        Ok(())
+    }
+
+    /// D2H read command.
+    pub fn d2h(&self, dev: DeviceId, b: BufferId) -> Result<()> {
+        let data = self.device(dev, b).ok_or_else(|| {
+            Error::Exec(format!("read of buffer {b}: not resident on device {dev}"))
+        })?;
+        self.set_host(b, data);
+        Ok(())
+    }
+
+    /// Resolve a kernel input on `dev`: the buffer itself if written, else
+    /// its predecessor's output left device-resident by an intra edge.
+    pub fn resolve_input(&self, dag: &Dag, dev: DeviceId, b: BufferId) -> Result<Vec<f32>> {
+        if let Some(d) = self.device(dev, b) {
+            return Ok(d);
+        }
+        if let Some(p) = dag.buffer_pred(b) {
+            if let Some(d) = self.device(dev, p) {
+                return Ok(d);
+            }
+        }
+        Err(Error::Exec(format!(
+            "kernel input buffer {b} not resident on device {dev}"
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DagBuilder;
+    use crate::platform::DeviceType;
+
+    fn chain() -> (Dag, BufferId, BufferId) {
+        let mut bld = DagBuilder::new();
+        let k0 = bld.kernel("a", DeviceType::Gpu, 1, 1);
+        let k1 = bld.kernel("b", DeviceType::Gpu, 1, 1);
+        let o = bld.out_buf(k0, 8);
+        let i = bld.in_buf(k1, 8);
+        bld.edge(o, i);
+        (bld.build().unwrap(), o, i)
+    }
+
+    #[test]
+    fn h2d_uses_predecessor_host_copy() {
+        let (dag, o, i) = chain();
+        let store = BufferStore::new();
+        store.set_host(o, vec![1.0, 2.0]);
+        // Dependent write of i: pulls from host copy of o.
+        store.h2d(&dag, 0, i).unwrap();
+        assert_eq!(store.device(0, i), Some(vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn resolve_input_prefers_own_then_pred() {
+        let (dag, o, i) = chain();
+        let store = BufferStore::new();
+        store.set_device(0, o, vec![3.0]);
+        // Intra-resident predecessor output.
+        assert_eq!(store.resolve_input(&dag, 0, i).unwrap(), vec![3.0]);
+        store.set_device(0, i, vec![4.0]);
+        assert_eq!(store.resolve_input(&dag, 0, i).unwrap(), vec![4.0]);
+        // Different device: nothing resident.
+        assert!(store.resolve_input(&dag, 1, i).is_err());
+    }
+
+    #[test]
+    fn d2h_requires_residency() {
+        let (_, o, _) = chain();
+        let store = BufferStore::new();
+        assert!(store.d2h(0, o).is_err());
+        store.set_device(0, o, vec![5.0]);
+        store.d2h(0, o).unwrap();
+        assert_eq!(store.host(o), Some(vec![5.0]));
+    }
+}

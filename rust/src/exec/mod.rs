@@ -1,0 +1,21 @@
+//! Real execution of scheduled DAGs on the PJRT CPU client.
+//!
+//! This is the proof that the three layers compose: the same Algorithm-1
+//! scheduling loop and command-queue structures that drive the simulator
+//! here drive *actual* kernel executions (AOT Pallas/JAX artifacts through
+//! [`crate::runtime`]), with OS threads standing in for command queues and
+//! events implemented as condvars — the substitution for the OpenCL runtime
+//! documented in DESIGN.md (the "GPU" device is a worker pool with
+//! GPU-shaped concurrency limits; numerics are bit-real).
+//!
+//! * [`events`] — OpenCL-style event objects (complete/wait/callback).
+//! * [`memory`] — host + per-device buffer stores.
+//! * [`executor`] — the threaded Algorithm-1 loop.
+
+pub mod events;
+pub mod executor;
+pub mod memory;
+
+pub use events::Event;
+pub use executor::{execute_dag, ExecReport};
+pub use memory::BufferStore;

@@ -1,0 +1,137 @@
+//! Ergonomic DAG construction used by the spec frontend, the transformer
+//! generators, and tests.
+
+use super::dag::{Buffer, BufferId, BufferKind, Dag, KernelId, KernelNode};
+use crate::error::Result;
+use crate::platform::DeviceType;
+
+/// Incremental builder for [`Dag`]. `build()` runs full validation.
+#[derive(Debug, Default)]
+pub struct DagBuilder {
+    dag: Dag,
+}
+
+impl DagBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a kernel with a flops/bytes cost annotation.
+    pub fn kernel(
+        &mut self,
+        name: &str,
+        dev_pref: DeviceType,
+        flops: u64,
+        bytes: u64,
+    ) -> KernelId {
+        let id = self.dag.kernels.len();
+        self.dag.kernels.push(KernelNode {
+            id,
+            name: name.to_string(),
+            artifact: None,
+            dev_pref,
+            global_work_size: [1, 1, 1],
+            work_dim: 1,
+            flops,
+            bytes,
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        });
+        id
+    }
+
+    /// Attach the runtime artifact key (manifest name) to a kernel.
+    pub fn artifact(&mut self, k: KernelId, key: &str) -> &mut Self {
+        self.dag.kernels[k].artifact = Some(key.to_string());
+        self
+    }
+
+    /// Set NDRange geometry.
+    pub fn ndrange(&mut self, k: KernelId, dim: u8, gws: [u64; 3]) -> &mut Self {
+        self.dag.kernels[k].work_dim = dim;
+        self.dag.kernels[k].global_work_size = gws;
+        self
+    }
+
+    fn buf(&mut self, k: KernelId, kind: BufferKind, size_bytes: u64) -> BufferId {
+        let id = self.dag.buffers.len();
+        let pos = self.dag.kernels[k].inputs.len() + self.dag.kernels[k].outputs.len();
+        self.dag.buffers.push(Buffer {
+            id,
+            kernel: k,
+            kind,
+            size_bytes,
+            pos,
+        });
+        match kind {
+            BufferKind::Input => self.dag.kernels[k].inputs.push(id),
+            BufferKind::Output => self.dag.kernels[k].outputs.push(id),
+            BufferKind::Io => {
+                self.dag.kernels[k].inputs.push(id);
+                self.dag.kernels[k].outputs.push(id);
+            }
+        }
+        id
+    }
+
+    /// Add an input buffer to kernel `k`.
+    pub fn in_buf(&mut self, k: KernelId, size_bytes: u64) -> BufferId {
+        self.buf(k, BufferKind::Input, size_bytes)
+    }
+
+    /// Add an output buffer to kernel `k`.
+    pub fn out_buf(&mut self, k: KernelId, size_bytes: u64) -> BufferId {
+        self.buf(k, BufferKind::Output, size_bytes)
+    }
+
+    /// Add an in/out (read-modify-write) buffer to kernel `k`.
+    pub fn io_buf(&mut self, k: KernelId, size_bytes: u64) -> BufferId {
+        self.buf(k, BufferKind::Io, size_bytes)
+    }
+
+    /// Add a buffer-to-buffer dependency `(src_output, dst_input) ∈ E`.
+    pub fn edge(&mut self, src: BufferId, dst: BufferId) -> &mut Self {
+        self.dag.buffer_edges.push((src, dst));
+        self
+    }
+
+    /// Finalize, validating the structure and building the adjacency index.
+    pub fn build(mut self) -> Result<Dag> {
+        self.dag.validate()?;
+        self.dag.reindex();
+        Ok(self.dag)
+    }
+
+    /// Peek at the DAG under construction (for generators).
+    pub fn dag(&self) -> &Dag {
+        &self.dag
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_buffer_is_both_input_and_output() {
+        let mut b = DagBuilder::new();
+        let k = b.kernel("vsin", DeviceType::Gpu, 10, 10);
+        let io = b.io_buf(k, 16);
+        let dag = b.build().unwrap();
+        assert!(dag.kernels[k].inputs.contains(&io));
+        assert!(dag.kernels[k].outputs.contains(&io));
+    }
+
+    #[test]
+    fn positions_follow_insertion_order() {
+        let mut b = DagBuilder::new();
+        let k = b.kernel("gemm", DeviceType::Gpu, 10, 10);
+        let a = b.in_buf(k, 16);
+        let bb = b.in_buf(k, 16);
+        let c = b.out_buf(k, 16);
+        let dag = b.build().unwrap();
+        assert_eq!(dag.buffers[a].pos, 0);
+        assert_eq!(dag.buffers[bb].pos, 1);
+        assert_eq!(dag.buffers[c].pos, 2);
+    }
+}

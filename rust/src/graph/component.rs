@@ -1,0 +1,323 @@
+//! Task components and the paper's Defs 1–3 (`FRONT`, `END`, `IN`) plus the
+//! intra/inter classification of buffer-to-buffer edges.
+
+use super::dag::{BufferId, Dag, KernelId};
+use crate::error::{Error, Result};
+use crate::platform::DeviceType;
+use std::collections::HashSet;
+
+/// A task component `T`: a set of kernels all mapped to one device *type*
+/// (paper §3). Dispatch binds it to a concrete device at runtime.
+#[derive(Debug, Clone)]
+pub struct TaskComponent {
+    pub id: usize,
+    pub kernels: Vec<KernelId>,
+    pub dev: DeviceType,
+}
+
+/// Classification of a buffer-to-buffer edge w.r.t. a partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeClass {
+    /// Producer and consumer kernels in the same task component: the data
+    /// stays resident on the device, no host round-trip.
+    Intra,
+    /// Crosses components: the producer's read and the consumer's write are
+    /// both materialized.
+    Inter,
+}
+
+/// A full task-component partition `T = {T_1..T_M}` with `⋃ T_i = K`.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub components: Vec<TaskComponent>,
+    /// kernel id → component id.
+    pub assignment: Vec<usize>,
+}
+
+impl Partition {
+    /// Build and validate a partition: components must cover every kernel
+    /// exactly once, and kernels in one component must share a device pref.
+    pub fn new(dag: &Dag, groups: Vec<(Vec<KernelId>, DeviceType)>) -> Result<Self> {
+        let mut assignment = vec![usize::MAX; dag.num_kernels()];
+        let mut components = Vec::with_capacity(groups.len());
+        for (cid, (kernels, dev)) in groups.into_iter().enumerate() {
+            if kernels.is_empty() {
+                return Err(Error::Partition(format!("component {cid} is empty")));
+            }
+            for &k in &kernels {
+                if k >= dag.num_kernels() {
+                    return Err(Error::Partition(format!("unknown kernel {k}")));
+                }
+                if assignment[k] != usize::MAX {
+                    return Err(Error::Partition(format!(
+                        "kernel {k} in components {} and {cid}",
+                        assignment[k]
+                    )));
+                }
+                assignment[k] = cid;
+            }
+            components.push(TaskComponent {
+                id: cid,
+                kernels,
+                dev,
+            });
+        }
+        if let Some(k) = assignment.iter().position(|&c| c == usize::MAX) {
+            return Err(Error::Partition(format!("kernel {k} unassigned")));
+        }
+        Ok(Partition {
+            components,
+            assignment,
+        })
+    }
+
+    /// One component per kernel (the paper's eager/HEFT setup), device pref
+    /// taken from each kernel.
+    pub fn singletons(dag: &Dag) -> Self {
+        let groups = dag
+            .kernels
+            .iter()
+            .map(|k| (vec![k.id], k.dev_pref))
+            .collect();
+        Self::new(dag, groups).expect("singleton partition is always valid")
+    }
+
+    pub fn component_of(&self, k: KernelId) -> usize {
+        self.assignment[k]
+    }
+
+    /// Paper §3 edge classification.
+    pub fn edge_class(&self, dag: &Dag, src: BufferId, dst: BufferId) -> EdgeClass {
+        let pk = dag.buffers[src].kernel;
+        let ck = dag.buffers[dst].kernel;
+        if self.assignment[pk] == self.assignment[ck] {
+            EdgeClass::Intra
+        } else {
+            EdgeClass::Inter
+        }
+    }
+
+    /// Def 1: `FRONT(T)` — kernels with an input buffer whose immediate
+    /// predecessor under `E` is produced by a kernel in a *different*
+    /// component.
+    pub fn front(&self, dag: &Dag, cid: usize) -> Vec<KernelId> {
+        self.components[cid]
+            .kernels
+            .iter()
+            .copied()
+            .filter(|&k| {
+                dag.kernels[k].inputs.iter().any(|&bi| {
+                    dag.buffer_pred(bi)
+                        .map(|bp| self.assignment[dag.buffers[bp].kernel] != cid)
+                        .unwrap_or(false)
+                })
+            })
+            .collect()
+    }
+
+    /// Def 2: `END(T)` — kernels with an output buffer whose immediate
+    /// successor under `E` belongs to a kernel in a *different* component.
+    pub fn end(&self, dag: &Dag, cid: usize) -> Vec<KernelId> {
+        self.components[cid]
+            .kernels
+            .iter()
+            .copied()
+            .filter(|&k| {
+                dag.kernels[k].outputs.iter().any(|&bo| {
+                    dag.buffer_succs(bo)
+                        .iter()
+                        .any(|&bs| self.assignment[dag.buffers[bs].kernel] != cid)
+                })
+            })
+            .collect()
+    }
+
+    /// Def 3: `IN(T)` — kernels in neither `FRONT(T)` nor `END(T)`.
+    pub fn inner(&self, dag: &Dag, cid: usize) -> Vec<KernelId> {
+        let front: HashSet<_> = self.front(dag, cid).into_iter().collect();
+        let end: HashSet<_> = self.end(dag, cid).into_iter().collect();
+        self.components[cid]
+            .kernels
+            .iter()
+            .copied()
+            .filter(|k| !front.contains(k) && !end.contains(k))
+            .collect()
+    }
+
+    /// Kernels of `T` whose outputs never leave the component *and* are not
+    /// DAG sinks — completion bookkeeping sinks: `END(T) ∪ terminal sinks`.
+    /// Callback registration targets (paper §4B "Callback Assignment" plus
+    /// the Fig. 2 final-read callback).
+    pub fn callback_kernels(&self, dag: &Dag, cid: usize) -> Vec<KernelId> {
+        let end: HashSet<_> = self.end(dag, cid).into_iter().collect();
+        self.components[cid]
+            .kernels
+            .iter()
+            .copied()
+            .filter(|&k| {
+                end.contains(&k)
+                    || dag.kernels[k]
+                        .outputs
+                        .iter()
+                        .all(|&bo| dag.buffer_succs(bo).is_empty())
+            })
+            .collect()
+    }
+
+    /// Callback kernels that genuinely need the *asynchronous* callback
+    /// path: members of `END(T)` (inter-edge outputs must notify dependent
+    /// components through `clSetEventCallback`). Terminal sinks whose reads
+    /// are isolated use a cheap blocking wait instead — the clustering
+    /// advantage the paper's §5 comparative evaluation dissects.
+    pub fn async_callback_kernels(&self, dag: &Dag, cid: usize) -> Vec<KernelId> {
+        self.end(dag, cid)
+    }
+
+    /// Inter-component kernel dependencies: `cid_from → cid_to` pairs.
+    pub fn component_deps(&self, dag: &Dag) -> Vec<(usize, usize)> {
+        let mut deps = Vec::new();
+        for &(src, dst) in &dag.buffer_edges {
+            let a = self.assignment[dag.buffers[src].kernel];
+            let b = self.assignment[dag.buffers[dst].kernel];
+            if a != b && !deps.contains(&(a, b)) {
+                deps.push((a, b));
+            }
+        }
+        deps
+    }
+
+    /// Components with no inter-component predecessors (initially ready).
+    pub fn ready_components(&self, dag: &Dag) -> Vec<usize> {
+        let deps = self.component_deps(dag);
+        (0..self.components.len())
+            .filter(|&c| !deps.iter().any(|&(_, b)| b == c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DagBuilder;
+
+    /// Fig. 6 with the explicit 3-component split: {kp}, {k0..k4}, {kn}.
+    fn fig6() -> (Dag, Partition, Vec<KernelId>) {
+        let mut b = DagBuilder::new();
+        let kp = b.kernel("kp", DeviceType::Cpu, 1, 1);
+        let k0 = b.kernel("k0", DeviceType::Gpu, 1, 1);
+        let k1 = b.kernel("k1", DeviceType::Gpu, 1, 1);
+        let k2 = b.kernel("k2", DeviceType::Gpu, 1, 1);
+        let k3 = b.kernel("k3", DeviceType::Gpu, 1, 1);
+        let k4 = b.kernel("k4", DeviceType::Gpu, 1, 1);
+        let kn = b.kernel("kn", DeviceType::Cpu, 1, 1);
+        let b0 = b.out_buf(kp, 4);
+        let b1 = b.out_buf(kp, 4);
+        let b2 = b.in_buf(k0, 4);
+        let b3 = b.in_buf(k0, 4);
+        let b4 = b.out_buf(k0, 4);
+        let b5 = b.in_buf(k1, 4);
+        let b6 = b.in_buf(k1, 4);
+        let b7 = b.in_buf(k2, 4);
+        let b8 = b.in_buf(k2, 4);
+        let b9 = b.out_buf(k1, 4);
+        let b10 = b.out_buf(k2, 4);
+        let b11 = b.in_buf(k3, 4);
+        let b12 = b.in_buf(k4, 4);
+        let b13 = b.out_buf(k3, 4);
+        let b14 = b.out_buf(k4, 4);
+        let b15 = b.in_buf(kn, 4);
+        let b16 = b.in_buf(kn, 4);
+        b.edge(b0, b2);
+        b.edge(b1, b3);
+        b.edge(b4, b6);
+        b.edge(b4, b7);
+        b.edge(b9, b11);
+        b.edge(b10, b12);
+        b.edge(b13, b15);
+        b.edge(b14, b16);
+        let _ = (b5, b8);
+        let dag = b.build().unwrap();
+        let part = Partition::new(
+            &dag,
+            vec![
+                (vec![kp], DeviceType::Cpu),
+                (vec![k0, k1, k2, k3, k4], DeviceType::Gpu),
+                (vec![kn], DeviceType::Cpu),
+            ],
+        )
+        .unwrap();
+        (dag, part, vec![kp, k0, k1, k2, k3, k4, kn])
+    }
+
+    #[test]
+    fn front_end_in_match_paper_fig6() {
+        let (dag, part, ks) = fig6();
+        // Paper: FRONT(T) = {k0}, END(T) = {k3, k4}, IN(T) = {k1, k2}.
+        assert_eq!(part.front(&dag, 1), vec![ks[1]]);
+        let mut end = part.end(&dag, 1);
+        end.sort();
+        assert_eq!(end, vec![ks[4], ks[5]]);
+        let mut inner = part.inner(&dag, 1);
+        inner.sort();
+        assert_eq!(inner, vec![ks[2], ks[3]]);
+    }
+
+    #[test]
+    fn edge_classes_match_paper_fig6() {
+        let (dag, part, _) = fig6();
+        // (b4,b6),(b4,b7),(b9,b11),(b10,b12) intra; the rest inter.
+        let mut intra = 0;
+        let mut inter = 0;
+        for &(s, d) in &dag.buffer_edges {
+            match part.edge_class(&dag, s, d) {
+                EdgeClass::Intra => intra += 1,
+                EdgeClass::Inter => inter += 1,
+            }
+        }
+        assert_eq!(intra, 4);
+        assert_eq!(inter, 4);
+    }
+
+    #[test]
+    fn component_readiness() {
+        let (dag, part, _) = fig6();
+        assert_eq!(part.ready_components(&dag), vec![0]); // only {kp}
+        let deps = part.component_deps(&dag);
+        assert!(deps.contains(&(0, 1)));
+        assert!(deps.contains(&(1, 2)));
+    }
+
+    #[test]
+    fn singleton_partition_covers_all() {
+        let (dag, _, _) = fig6();
+        let p = Partition::singletons(&dag);
+        assert_eq!(p.components.len(), dag.num_kernels());
+        for (k, &c) in p.assignment.iter().enumerate() {
+            assert_eq!(p.components[c].kernels, vec![k]);
+        }
+    }
+
+    #[test]
+    fn rejects_overlapping_components() {
+        let (dag, _, ks) = fig6();
+        let bad = Partition::new(
+            &dag,
+            vec![
+                (vec![ks[0], ks[1]], DeviceType::Cpu),
+                (vec![ks[1]], DeviceType::Gpu),
+            ],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn callback_kernels_include_terminal_sinks() {
+        let (dag, part, ks) = fig6();
+        // kn is a terminal sink of the DAG -> callback kernel of component 2.
+        assert_eq!(part.callback_kernels(&dag, 2), vec![ks[6]]);
+        // Component 1's callback kernels are its END set.
+        let mut cb = part.callback_kernels(&dag, 1);
+        cb.sort();
+        assert_eq!(cb, vec![ks[4], ks[5]]);
+    }
+}

@@ -1,0 +1,370 @@
+//! Core DAG data structures: `G = ⟨(K, B), (E_I, E_O, E)⟩` (paper §3).
+//!
+//! Each buffer node belongs to exactly one kernel (its argument), so the
+//! kernel↔buffer edge sets `E_I`/`E_O` are stored implicitly as buffer
+//! ownership + kind; the cross-kernel buffer-to-buffer set `E` is explicit.
+
+use crate::error::{Error, Result};
+use crate::platform::DeviceType;
+use std::collections::HashSet;
+
+/// Index of a kernel node in the DAG.
+pub type KernelId = usize;
+/// Index of a buffer node in the DAG.
+pub type BufferId = usize;
+
+/// Whether a buffer is a kernel input, output, or both (paper Fig. 8
+/// `inputBuffers` / `outputBuffers` / `ioBuffers`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferKind {
+    Input,
+    Output,
+    /// Read-modify-write buffer (e.g. vsin's in-place vector).
+    Io,
+}
+
+/// Paper §3 copy classification for kernel-buffer dependencies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyClass {
+    /// No buffer-to-buffer edge touches this buffer: the host must supply
+    /// (write) or retrieve (read) it unconditionally.
+    Isolated,
+    /// Connected through `E` to another kernel's buffer: the copy is only
+    /// materialized across task-component boundaries.
+    Dependent,
+}
+
+/// A computational kernel node (circular node in the paper's figures).
+#[derive(Debug, Clone)]
+pub struct KernelNode {
+    pub id: KernelId,
+    /// Kernel function name, e.g. `"gemm"`.
+    pub name: String,
+    /// Key into the artifact manifest for real execution, e.g. `"gemm_b256"`.
+    /// `None` for simulation-only kernels.
+    pub artifact: Option<String>,
+    /// Device preference from the spec's `dev` field.
+    pub dev_pref: DeviceType,
+    /// NDRange geometry (spec `globalWorkSize`), kept for cost modeling.
+    pub global_work_size: [u64; 3],
+    pub work_dim: u8,
+    /// Useful-work estimate for the cost model.
+    pub flops: u64,
+    /// Total bytes moved by H2D+D2H for this kernel's isolated traffic.
+    pub bytes: u64,
+    /// Input buffers in argument order.
+    pub inputs: Vec<BufferId>,
+    /// Output buffers in argument order.
+    pub outputs: Vec<BufferId>,
+}
+
+/// A buffer node (rectangular node in the paper's figures).
+#[derive(Debug, Clone)]
+pub struct Buffer {
+    pub id: BufferId,
+    /// Owning kernel (the kernel for which this is an argument).
+    pub kernel: KernelId,
+    pub kind: BufferKind,
+    /// Size in bytes (spec `size` × sizeof(type)).
+    pub size_bytes: u64,
+    /// Argument position in the kernel invocation (spec `pos`).
+    pub pos: usize,
+}
+
+/// The application DAG `G`.
+#[derive(Debug, Clone, Default)]
+pub struct Dag {
+    pub kernels: Vec<KernelNode>,
+    pub buffers: Vec<Buffer>,
+    /// `E ⊆ B_O × B_I`: producer output buffer → consumer input buffer.
+    pub buffer_edges: Vec<(BufferId, BufferId)>,
+    /// Adjacency index over `buffer_edges`, built by [`Dag::reindex`]
+    /// (§Perf: `buffer_pred`/`buffer_succs` are the hottest graph queries in
+    /// both `setup_cq` and the simulator). Empty ⇒ fall back to scanning.
+    pred_cache: Vec<Option<BufferId>>,
+    succ_cache: Vec<Vec<BufferId>>,
+}
+
+impl Dag {
+    pub fn num_kernels(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// (Re)build the adjacency index. Called by `DagBuilder::build`; call
+    /// again after mutating `buffer_edges` directly.
+    pub fn reindex(&mut self) {
+        self.pred_cache = vec![None; self.buffers.len()];
+        self.succ_cache = vec![Vec::new(); self.buffers.len()];
+        for &(src, dst) in &self.buffer_edges {
+            if src < self.buffers.len() && dst < self.buffers.len() {
+                self.pred_cache[dst] = Some(src);
+                self.succ_cache[src].push(dst);
+            }
+        }
+    }
+
+    fn indexed(&self) -> bool {
+        self.pred_cache.len() == self.buffers.len()
+    }
+
+    /// Immediate predecessor buffer of `b` under `E`, if any.
+    /// (Each input buffer has at most one producer.)
+    pub fn buffer_pred(&self, b: BufferId) -> Option<BufferId> {
+        if self.indexed() {
+            return self.pred_cache[b];
+        }
+        self.buffer_edges
+            .iter()
+            .find(|&&(_, dst)| dst == b)
+            .map(|&(src, _)| src)
+    }
+
+    /// Immediate successor buffers of `b` under `E`.
+    pub fn buffer_succs(&self, b: BufferId) -> Vec<BufferId> {
+        if self.indexed() {
+            return self.succ_cache[b].clone();
+        }
+        self.buffer_edges
+            .iter()
+            .filter(|&&(src, _)| src == b)
+            .map(|&(_, dst)| dst)
+            .collect()
+    }
+
+    /// Paper §3: an input buffer is an *isolated write* iff no `E` edge ends
+    /// at it; otherwise it is a *dependent write*.
+    pub fn write_class(&self, b: BufferId) -> CopyClass {
+        if self.buffer_pred(b).is_some() {
+            CopyClass::Dependent
+        } else {
+            CopyClass::Isolated
+        }
+    }
+
+    /// Paper §3: an output buffer is an *isolated read* iff no `E` edge
+    /// starts at it; otherwise it is a *dependent read*.
+    pub fn read_class(&self, b: BufferId) -> CopyClass {
+        if self.buffer_succs(b).is_empty() {
+            CopyClass::Isolated
+        } else {
+            CopyClass::Dependent
+        }
+    }
+
+    /// Kernel-level predecessors of `k`: producers of buffers feeding `k`'s
+    /// input buffers through `E`.
+    pub fn kernel_preds(&self, k: KernelId) -> Vec<KernelId> {
+        let mut out = Vec::new();
+        for &bi in &self.kernels[k].inputs {
+            if let Some(bp) = self.buffer_pred(bi) {
+                let p = self.buffers[bp].kernel;
+                if !out.contains(&p) {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+
+    /// Kernel-level successors of `k`.
+    pub fn kernel_succs(&self, k: KernelId) -> Vec<KernelId> {
+        let mut out = Vec::new();
+        for &bo in &self.kernels[k].outputs {
+            for bs in self.buffer_succs(bo) {
+                let s = self.buffers[bs].kernel;
+                if !out.contains(&s) {
+                    out.push(s);
+                }
+            }
+        }
+        out
+    }
+
+    /// Structural validation: ownership consistency, `E` endpoints are
+    /// (output, input) pairs of *different* kernels, and acyclicity.
+    pub fn validate(&self) -> Result<()> {
+        for k in &self.kernels {
+            for &b in k.inputs.iter().chain(&k.outputs) {
+                if b >= self.buffers.len() {
+                    return Err(Error::Graph(format!(
+                        "kernel {} references unknown buffer {b}",
+                        k.id
+                    )));
+                }
+                if self.buffers[b].kernel != k.id {
+                    return Err(Error::Graph(format!(
+                        "buffer {b} owned by kernel {} but referenced by {}",
+                        self.buffers[b].kernel, k.id
+                    )));
+                }
+            }
+        }
+        for &(src, dst) in &self.buffer_edges {
+            if src >= self.buffers.len() || dst >= self.buffers.len() {
+                return Err(Error::Graph(format!("dangling edge ({src},{dst})")));
+            }
+            let (bs, bd) = (&self.buffers[src], &self.buffers[dst]);
+            if bs.kind == BufferKind::Input {
+                return Err(Error::Graph(format!(
+                    "edge source buffer {src} is an input buffer"
+                )));
+            }
+            if bd.kind == BufferKind::Output {
+                return Err(Error::Graph(format!(
+                    "edge target buffer {dst} is an output buffer"
+                )));
+            }
+            if bs.kernel == bd.kernel {
+                return Err(Error::Graph(format!(
+                    "self edge within kernel {} ({src}->{dst})",
+                    bs.kernel
+                )));
+            }
+        }
+        // An input buffer must have at most one producer.
+        let mut seen: HashSet<BufferId> = HashSet::new();
+        for &(_, dst) in &self.buffer_edges {
+            if !seen.insert(dst) {
+                return Err(Error::Graph(format!(
+                    "input buffer {dst} has multiple producers"
+                )));
+            }
+        }
+        // Acyclicity via Kahn's algorithm on kernels.
+        if crate::graph::rank::topo_order(self).len() != self.kernels.len() {
+            return Err(Error::Graph("kernel dependency cycle".into()));
+        }
+        Ok(())
+    }
+
+    /// Kernels with no predecessors (DAG sources).
+    pub fn source_kernels(&self) -> Vec<KernelId> {
+        (0..self.kernels.len())
+            .filter(|&k| self.kernel_preds(k).is_empty())
+            .collect()
+    }
+
+    /// Kernels with no successors (DAG sinks).
+    pub fn sink_kernels(&self) -> Vec<KernelId> {
+        (0..self.kernels.len())
+            .filter(|&k| self.kernel_succs(k).is_empty())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DagBuilder;
+
+    /// The paper's Fig. 6 DAG: five kernels k0..k4 in one component.
+    /// k0(b2,b3)->b4; k1(b5,b6)->b9; k2(b7,b8)->b10; k3(b11,..)->b13;
+    /// k4(b12,..)->b14; edges (b4,b6),(b4,b7),(b9,b11),(b10,b12) intra-ish.
+    pub fn fig6_dag() -> (Dag, Vec<KernelId>) {
+        let mut b = DagBuilder::new();
+        let k0 = b.kernel("k0", DeviceType::Gpu, 1024, 1024);
+        let k1 = b.kernel("k1", DeviceType::Gpu, 1024, 1024);
+        let k2 = b.kernel("k2", DeviceType::Gpu, 1024, 1024);
+        let k3 = b.kernel("k3", DeviceType::Gpu, 1024, 1024);
+        let k4 = b.kernel("k4", DeviceType::Gpu, 1024, 1024);
+        // External producer kernels feeding k0 (the "different component"
+        // predecessors in Fig. 6 are outside T; we model them as kp).
+        let kp = b.kernel("kp", DeviceType::Cpu, 16, 16);
+        let b0 = b.out_buf(kp, 64);
+        let b1 = b.out_buf(kp, 64);
+        let b2 = b.in_buf(k0, 64);
+        let b3 = b.in_buf(k0, 64);
+        let b4 = b.out_buf(k0, 64);
+        let b5 = b.in_buf(k1, 64); // isolated write
+        let b6 = b.in_buf(k1, 64);
+        let b7 = b.in_buf(k2, 64);
+        let b8 = b.in_buf(k2, 64); // isolated write
+        let b9 = b.out_buf(k1, 64);
+        let b10 = b.out_buf(k2, 64);
+        let b11 = b.in_buf(k3, 64);
+        let b12 = b.in_buf(k4, 64);
+        let b13 = b.out_buf(k3, 64);
+        let b14 = b.out_buf(k4, 64);
+        // Downstream consumers (other component).
+        let kn = b.kernel("kn", DeviceType::Cpu, 16, 16);
+        let b15 = b.in_buf(kn, 64);
+        let b16 = b.in_buf(kn, 64);
+        b.edge(b0, b2);
+        b.edge(b1, b3);
+        b.edge(b4, b6);
+        b.edge(b4, b7);
+        b.edge(b9, b11);
+        b.edge(b10, b12);
+        b.edge(b13, b15);
+        b.edge(b14, b16);
+        let _ = (b5, b8);
+        (b.build().unwrap(), vec![k0, k1, k2, k3, k4, kp, kn])
+    }
+
+    #[test]
+    fn fig6_structure() {
+        let (dag, ks) = fig6_dag();
+        let (k0, k1, k2, k3, k4, kp, _kn) =
+            (ks[0], ks[1], ks[2], ks[3], ks[4], ks[5], ks[6]);
+        assert_eq!(dag.kernel_preds(k0), vec![kp]);
+        assert_eq!(dag.kernel_preds(k1), vec![k0]);
+        assert_eq!(dag.kernel_preds(k2), vec![k0]);
+        assert_eq!(dag.kernel_preds(k3), vec![k1]);
+        assert_eq!(dag.kernel_preds(k4), vec![k2]);
+        let mut succ = dag.kernel_succs(k0);
+        succ.sort();
+        assert_eq!(succ, vec![k1, k2]);
+        dag.validate().unwrap();
+    }
+
+    #[test]
+    fn copy_classification_matches_paper() {
+        let (dag, ks) = fig6_dag();
+        let (k1, k2) = (ks[1], ks[2]);
+        // (b5,k1) and (b8,k2) are isolated writes; everything else dependent.
+        let b5 = dag.kernels[k1].inputs[0];
+        let b6 = dag.kernels[k1].inputs[1];
+        let b8 = dag.kernels[k2].inputs[1];
+        assert_eq!(dag.write_class(b5), CopyClass::Isolated);
+        assert_eq!(dag.write_class(b8), CopyClass::Isolated);
+        assert_eq!(dag.write_class(b6), CopyClass::Dependent);
+        // k3/k4 outputs feed kn => dependent reads.
+        let b13 = dag.kernels[ks[3]].outputs[0];
+        assert_eq!(dag.read_class(b13), CopyClass::Dependent);
+    }
+
+    #[test]
+    fn validate_rejects_cycle() {
+        let mut b = DagBuilder::new();
+        let k0 = b.kernel("a", DeviceType::Gpu, 1, 1);
+        let k1 = b.kernel("b", DeviceType::Gpu, 1, 1);
+        let i0 = b.in_buf(k0, 4);
+        let o0 = b.out_buf(k0, 4);
+        let i1 = b.in_buf(k1, 4);
+        let o1 = b.out_buf(k1, 4);
+        b.edge(o0, i1);
+        b.edge(o1, i0);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_multi_producer() {
+        let mut b = DagBuilder::new();
+        let k0 = b.kernel("a", DeviceType::Gpu, 1, 1);
+        let k1 = b.kernel("b", DeviceType::Gpu, 1, 1);
+        let k2 = b.kernel("c", DeviceType::Gpu, 1, 1);
+        let o0 = b.out_buf(k0, 4);
+        let o1 = b.out_buf(k1, 4);
+        let i2 = b.in_buf(k2, 4);
+        b.edge(o0, i2);
+        b.edge(o1, i2);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let (dag, ks) = fig6_dag();
+        assert_eq!(dag.source_kernels(), vec![ks[5]]);
+        assert_eq!(dag.sink_kernels(), vec![ks[6]]);
+    }
+}

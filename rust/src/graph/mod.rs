@@ -1,0 +1,20 @@
+//! The OpenCL-style application DAG model from paper §3:
+//! `G = ⟨(K, B), (E_I, E_O, E)⟩`.
+//!
+//! * [`dag`] — kernels, buffers, the three edge sets, structural queries and
+//!   the isolated/dependent copy classification.
+//! * [`component`] — task components `T ⊆ K`, the `FRONT/END/IN` kernel
+//!   classification (Defs 1–3) and intra/inter edge classification.
+//! * [`rank`] — topological order and bottom-level ranks (HEFT upward rank).
+//! * [`builder`] — ergonomic construction API used by the spec frontend and
+//!   the generators in [`crate::transformer`].
+
+pub mod builder;
+pub mod component;
+pub mod dag;
+pub mod rank;
+
+pub use builder::DagBuilder;
+pub use component::{EdgeClass, Partition, TaskComponent};
+pub use dag::{Buffer, BufferId, BufferKind, CopyClass, Dag, KernelId, KernelNode};
+pub use rank::{bottom_level_ranks, topo_order};

@@ -1,0 +1,112 @@
+//! Topological ordering and bottom-level ranks.
+//!
+//! The bottom-level rank of a kernel is "the maximum time left to finish all
+//! kernels in the path starting from k to the last kernel in the DAG"
+//! (paper §5, citing HEFT [16]). It orders the priority frontier `F` in both
+//! the clustering scheme and the dynamic baselines.
+
+use super::dag::{Dag, KernelId};
+
+/// Kahn topological order over kernels. Returns fewer than `num_kernels`
+/// entries iff the graph has a cycle (used by `Dag::validate`).
+pub fn topo_order(dag: &Dag) -> Vec<KernelId> {
+    let n = dag.num_kernels();
+    let mut indeg = vec![0usize; n];
+    let mut succs: Vec<Vec<KernelId>> = vec![Vec::new(); n];
+    for k in 0..n {
+        for s in dag.kernel_succs(k) {
+            succs[k].push(s);
+            indeg[s] += 1;
+        }
+    }
+    let mut queue: Vec<KernelId> = (0..n).filter(|&k| indeg[k] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(k) = queue.pop() {
+        order.push(k);
+        for &s in &succs[k] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                queue.push(s);
+            }
+        }
+    }
+    order
+}
+
+/// Bottom-level rank per kernel: `rank(k) = w(k) + max_succ rank(succ)`,
+/// where `w(k)` is the kernel's execution-time estimate (caller supplies,
+/// typically the cross-device mean as in HEFT).
+pub fn bottom_level_ranks(dag: &Dag, weights: &[f64]) -> Vec<f64> {
+    let n = dag.num_kernels();
+    assert_eq!(weights.len(), n, "one weight per kernel");
+    let order = topo_order(dag);
+    let mut rank = vec![0.0f64; n];
+    for &k in order.iter().rev() {
+        let succ_max = dag
+            .kernel_succs(k)
+            .into_iter()
+            .map(|s| rank[s])
+            .fold(0.0f64, f64::max);
+        rank[k] = weights[k] + succ_max;
+    }
+    rank
+}
+
+/// Critical-path length of the DAG under `weights` (a lower bound on any
+/// schedule's makespan — used by the simulator's property tests).
+pub fn critical_path(dag: &Dag, weights: &[f64]) -> f64 {
+    bottom_level_ranks(dag, weights)
+        .into_iter()
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DagBuilder;
+    use crate::platform::DeviceType;
+
+    /// Chain a -> b -> c plus isolated d.
+    fn chain() -> (Dag, [KernelId; 4]) {
+        let mut bld = DagBuilder::new();
+        let a = bld.kernel("a", DeviceType::Gpu, 1, 1);
+        let b = bld.kernel("b", DeviceType::Gpu, 1, 1);
+        let c = bld.kernel("c", DeviceType::Gpu, 1, 1);
+        let d = bld.kernel("d", DeviceType::Gpu, 1, 1);
+        let oa = bld.out_buf(a, 4);
+        let ib = bld.in_buf(b, 4);
+        let ob = bld.out_buf(b, 4);
+        let ic = bld.in_buf(c, 4);
+        bld.out_buf(c, 4);
+        bld.in_buf(d, 4);
+        bld.edge(oa, ib);
+        bld.edge(ob, ic);
+        (bld.build().unwrap(), [a, b, c, d])
+    }
+
+    #[test]
+    fn topo_respects_edges() {
+        let (dag, [a, b, c, _]) = chain();
+        let order = topo_order(&dag);
+        assert_eq!(order.len(), 4);
+        let pos = |k| order.iter().position(|&x| x == k).unwrap();
+        assert!(pos(a) < pos(b));
+        assert!(pos(b) < pos(c));
+    }
+
+    #[test]
+    fn ranks_decrease_along_chain() {
+        let (dag, [a, b, c, d]) = chain();
+        let r = bottom_level_ranks(&dag, &[2.0, 3.0, 5.0, 1.0]);
+        assert_eq!(r[c], 5.0);
+        assert_eq!(r[b], 8.0);
+        assert_eq!(r[a], 10.0);
+        assert_eq!(r[d], 1.0);
+    }
+
+    #[test]
+    fn critical_path_is_max_rank() {
+        let (dag, _) = chain();
+        assert_eq!(critical_path(&dag, &[2.0, 3.0, 5.0, 1.0]), 10.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! # PySchedCL (reproduction)
+//!
+//! A Rust + JAX + Pallas reproduction of *"PySchedCL: Leveraging Concurrency
+//! in Heterogeneous Data-Parallel Systems"* (Ghose et al., 2020).
+//!
+//! The library schedules data-parallel application DAGs (kernels + buffers)
+//! onto a heterogeneous CPU/GPU platform, synthesizing OpenCL-style
+//! command-queue programs with fine-grained concurrency: multiple queues per
+//! device, transfer/compute interleaving, and task-component clustering that
+//! elides redundant copies and callbacks.
+//!
+//! Layer map (see DESIGN.md):
+//! * kernels are AOT-compiled JAX/Pallas programs (`artifacts/*.hlo.txt`)
+//!   loaded through PJRT ([`runtime`]);
+//! * [`graph`], [`spec`], [`queue`], [`sched`] implement the paper's §3–§4
+//!   formalism and Algorithm 1;
+//! * [`sim`] reproduces the paper's GTX-970 + i5-4690K testbed as a
+//!   discrete-event model; [`exec`] runs the same schedules for real on the
+//!   PJRT CPU client;
+//! * [`report`] regenerates every table/figure of §5.
+
+pub mod benchkit;
+pub mod cost;
+pub mod error;
+pub mod exec;
+pub mod graph;
+pub mod json;
+pub mod platform;
+pub mod queue;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod spec;
+pub mod trace;
+pub mod transformer;
+
+pub use error::{Error, Result};

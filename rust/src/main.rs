@@ -1,0 +1,347 @@
+//! `pyschedcl` — the leader binary.
+//!
+//! Subcommands (offline environment: CLI parsing is hand-rolled):
+//!
+//! ```text
+//! pyschedcl inspect   <spec.json>                 DAG + partition summary
+//! pyschedcl simulate  <spec.json> [--policy P]    simulate a spec file
+//! pyschedcl run       <spec.json> [--artifacts D] real PJRT execution
+//! pyschedcl motivation [--beta 256]               Figs. 4/5
+//! pyschedcl expt1 [--hmax 16] [--beta 256]        Fig. 11
+//! pyschedcl expt2 [--betas 64,128,256,512]        Fig. 12(a)
+//! pyschedcl expt3 [--betas 64,128,256,512]        Fig. 12(b)
+//! pyschedcl gantt --policy P [--heads 16] [--beta 512]   Fig. 13
+//! pyschedcl calibrate [--artifacts D] [--out F]   measure real kernel times
+//! pyschedcl autotune [--heads 16] [--beta 256] [--strategy hill|exhaustive]
+//! ```
+
+use pyschedcl::cost::{CalibratedCost, CostModel, PaperCost};
+use pyschedcl::error::{Error, Result};
+use pyschedcl::exec::execute_dag;
+use pyschedcl::graph::Partition;
+use pyschedcl::platform::{DeviceType, Platform};
+use pyschedcl::report::experiments as expts;
+use pyschedcl::runtime::{manifest::default_artifact_dir, Runtime};
+use pyschedcl::sched::{Clustering, Eager, Heft, Policy};
+use pyschedcl::sim::{simulate, SimConfig};
+use pyschedcl::spec::parse_spec;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Tiny flag parser: positionals + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it.next().cloned().unwrap_or_else(|| "true".into());
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn need_positional(&self, idx: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(idx)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::Io(format!("missing argument: {what}")))
+    }
+}
+
+fn policy_by_name(name: &str) -> Result<Box<dyn Policy>> {
+    match name {
+        "clustering" => Ok(Box::new(Clustering)),
+        "eager" => Ok(Box::new(Eager)),
+        "heft" => Ok(Box::new(Heft)),
+        other => Err(Error::Sched(format!("unknown policy '{other}'"))),
+    }
+}
+
+fn load_spec(path: &str) -> Result<pyschedcl::spec::ApplicationSpec> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Io(format!("cannot read {path}: {e}")))?;
+    parse_spec(&text)
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let spec = load_spec(args.need_positional(0, "spec.json")?)?;
+    println!(
+        "kernels={} buffers={} edges={} components={}",
+        spec.dag.num_kernels(),
+        spec.dag.buffers.len(),
+        spec.dag.buffer_edges.len(),
+        spec.partition.components.len()
+    );
+    for c in &spec.partition.components {
+        let front = spec.partition.front(&spec.dag, c.id);
+        let end = spec.partition.end(&spec.dag, c.id);
+        let inner = spec.partition.inner(&spec.dag, c.id);
+        println!(
+            "  T{} dev={} kernels={:?} FRONT={front:?} END={end:?} IN={inner:?}",
+            c.id, c.dev, c.kernels
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let spec = load_spec(args.need_positional(0, "spec.json")?)?;
+    let mut policy = policy_by_name(args.get("policy").unwrap_or("clustering"))?;
+    let q_gpu = *spec.queues.get(&DeviceType::Gpu).unwrap_or(&1);
+    let q_cpu = *spec.queues.get(&DeviceType::Cpu).unwrap_or(&1);
+    let platform = Platform::paper_testbed(q_gpu, q_cpu);
+    let partition = if policy.name() == "clustering" {
+        spec.partition.clone()
+    } else {
+        Partition::singletons(&spec.dag)
+    };
+    let r = simulate(
+        &spec.dag,
+        &partition,
+        &platform,
+        &PaperCost,
+        policy.as_mut(),
+        &SimConfig::default(),
+    )?;
+    println!(
+        "policy={} makespan={:.3} ms  gpu_overlap={:.3} ms  copy_overlap={:.3} ms",
+        r.policy,
+        r.makespan * 1e3,
+        r.trace.device_overlap(0) * 1e3,
+        r.trace.copy_compute_overlap(0) * 1e3
+    );
+    if args.get("gantt").is_some() {
+        print!("{}", r.trace.ascii(100));
+    }
+    Ok(())
+}
+
+/// Deterministic pseudo-random input generator (xorshift64*).
+fn seeded_input(seed: u64, len: usize) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(2685821657736338717).max(1);
+    (0..len)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            let v = s.wrapping_mul(2685821657736338717);
+            ((v >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        })
+        .collect()
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let spec = load_spec(args.need_positional(0, "spec.json")?)?;
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let runtime = Arc::new(Runtime::new(&dir)?);
+    println!("pjrt platform = {}", runtime.platform_name());
+    let mut policy = policy_by_name(args.get("policy").unwrap_or("clustering"))?;
+    let q_gpu = *spec.queues.get(&DeviceType::Gpu).unwrap_or(&1);
+    let q_cpu = *spec.queues.get(&DeviceType::Cpu).unwrap_or(&1);
+    let platform = Platform::paper_testbed(q_gpu.max(1), q_cpu.max(1));
+
+    // Seed every isolated input buffer with deterministic data.
+    let mut inputs = HashMap::new();
+    for b in &spec.dag.buffers {
+        let is_input = spec.dag.kernels[b.kernel].inputs.contains(&b.id);
+        if is_input && spec.dag.buffer_pred(b.id).is_none() {
+            inputs.insert(
+                b.id,
+                seeded_input(b.id as u64 + 1, (b.size_bytes / 4) as usize),
+            );
+        }
+    }
+    let report = execute_dag(
+        &spec.dag,
+        &spec.partition,
+        &platform,
+        &PaperCost,
+        policy.as_mut(),
+        &runtime,
+        &inputs,
+    )?;
+    println!("makespan = {:.3} ms (wall)", report.makespan * 1e3);
+    for k in spec.dag.sink_kernels() {
+        for &b in &spec.dag.kernels[k].outputs {
+            if let Some(data) = report.store.host(b) {
+                let sum: f32 = data.iter().sum();
+                println!(
+                    "  output buffer {b} (kernel {k}): {} elems, sum={sum:.4}",
+                    data.len()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_motivation(args: &Args) -> Result<()> {
+    let m = expts::motivation(args.u64_or("beta", 256))?;
+    println!(
+        "Figs. 4/5 — coarse (1 queue): {:.1} ms | fine (3 queues): {:.1} ms | speedup {:.3}x",
+        m.coarse_ms, m.fine_ms, m.speedup
+    );
+    println!("paper: 105 ms -> 95 ms (~8%)");
+    println!("\ncoarse:\n{}", m.coarse.trace.ascii(100));
+    println!("fine:\n{}", m.fine.trace.ascii(100));
+    Ok(())
+}
+
+fn parse_betas(args: &Args) -> Vec<u64> {
+    args.get("betas")
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|| vec![64, 128, 256, 512])
+}
+
+/// Measure real PJRT-CPU kernel times per artifact and persist a
+/// [`CalibratedCost`] table. The GPU column is the CPU measurement divided
+/// by the paper's published device ratio (DESIGN.md §Substitutions).
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| dir.join("calibration.json"));
+    let runtime = Runtime::new(&dir)?;
+    let reps = args.usize_or("reps", 3);
+    let mut table = CalibratedCost::default();
+    let gpu = pyschedcl::platform::Device::gtx970(0, 1);
+    let cpu = pyschedcl::platform::Device::i5_4690k(1, 1);
+    let mut names: Vec<String> = runtime.manifest.artifacts.keys().cloned().collect();
+    names.sort();
+    for name in &names {
+        let meta = runtime.manifest.get(name)?.clone();
+        if meta.op == "head" {
+            continue; // fused ablation target, not a DAG kernel
+        }
+        let inputs: Vec<Vec<f32>> = meta
+            .inputs
+            .iter()
+            .map(|s| seeded_input(7, s.iter().product()))
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        runtime.execute_f32(name, &refs)?; // warm the executable cache
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            runtime.execute_f32(name, &refs)?;
+        }
+        let cpu_secs = t0.elapsed().as_secs_f64() / reps as f64;
+        let node = kernel_node_for(&meta);
+        let ratio = PaperCost.exec_time(&node, &cpu) / PaperCost.exec_time(&node, &gpu);
+        table.insert(&node, &cpu, cpu_secs);
+        table.insert(&node, &gpu, cpu_secs / ratio);
+        println!("{name}: cpu {cpu_secs:.6}s (gpu scaled /{ratio:.1})");
+    }
+    table.save(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn kernel_node_for(meta: &pyschedcl::runtime::ArtifactMeta) -> pyschedcl::graph::KernelNode {
+    let mut b = pyschedcl::graph::DagBuilder::new();
+    let k = b.kernel(&meta.op, DeviceType::Gpu, meta.flops, meta.bytes);
+    b.dag().kernels[k].clone()
+}
+
+fn main_inner() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprintln!(
+            "usage: pyschedcl <inspect|simulate|run|motivation|expt1|expt2|expt3|gantt|calibrate> ..."
+        );
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "inspect" => cmd_inspect(&args),
+        "simulate" => cmd_simulate(&args),
+        "run" => cmd_run(&args),
+        "motivation" => cmd_motivation(&args),
+        "expt1" => {
+            let rows = expts::expt1(
+                args.usize_or("hmax", 16),
+                args.u64_or("beta", 256),
+                args.usize_or("hcpu-max", 3),
+            )?;
+            print!("{}", expts::format_expt1(&rows));
+            Ok(())
+        }
+        "expt2" => {
+            let rows = expts::expt2(args.usize_or("heads", 16), &parse_betas(&args))?;
+            print!("{}", expts::format_baseline(&rows, "eager"));
+            Ok(())
+        }
+        "expt3" => {
+            let rows = expts::expt3(args.usize_or("heads", 16), &parse_betas(&args))?;
+            print!("{}", expts::format_baseline(&rows, "heft"));
+            Ok(())
+        }
+        "gantt" => {
+            let (_, s) = expts::gantt(
+                args.get("policy").unwrap_or("clustering"),
+                args.usize_or("heads", 16),
+                args.u64_or("beta", 512),
+            )?;
+            print!("{s}");
+            Ok(())
+        }
+        "calibrate" => cmd_calibrate(&args),
+        "autotune" => {
+            use pyschedcl::sched::autotune::{exhaustive, hill_climb, TuneSpace};
+            let heads = args.usize_or("heads", 16);
+            let beta = args.u64_or("beta", 256);
+            let space = TuneSpace::default();
+            let r = match args.get("strategy").unwrap_or("hill") {
+                "exhaustive" => exhaustive(heads, beta, space, &PaperCost)?,
+                _ => hill_climb(heads, beta, space, expts::DEFAULT_MC, &PaperCost)?,
+            };
+            println!(
+                "best mc = {}  makespan = {:.1} ms  ({} evaluations)",
+                r.best,
+                r.makespan * 1e3,
+                r.evals
+            );
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    if let Err(e) = main_inner() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Device descriptors.
+
+/// Index of a device within a [`super::Platform`].
+pub type DeviceId = usize;
+
+/// Device type, matching the spec file's `dev` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceType {
+    Cpu,
+    Gpu,
+}
+
+impl std::fmt::Display for DeviceType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeviceType::Cpu => write!(f, "cpu"),
+            DeviceType::Gpu => write!(f, "gpu"),
+        }
+    }
+}
+
+impl std::str::FromStr for DeviceType {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" => Ok(DeviceType::Cpu),
+            "gpu" => Ok(DeviceType::Gpu),
+            other => Err(crate::error::Error::Spec(format!(
+                "unknown device type '{other}' (expected cpu|gpu)"
+            ))),
+        }
+    }
+}
+
+/// A compute device of the platform.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: DeviceId,
+    pub name: String,
+    pub dtype: DeviceType,
+    /// Number of OpenCL-style command queues configured for this device
+    /// (the spec's `cq` list; paper sweeps 0..=5).
+    pub num_queues: usize,
+    /// Hardware concurrency limit: Hyper-Q work queues on the GPU (32 on
+    /// Kepler+), fissioned sub-devices on the CPU.
+    pub hw_queues: usize,
+    /// Peak compute throughput in GFLOP/s (for the analytic cost model).
+    pub gflops: f64,
+    /// Fraction of the device a *single* β=256 GEMM occupies; the
+    /// contention model scales kernel occupancy from this anchor.
+    pub base_occupancy: f64,
+    /// Per-kernel fixed launch overhead, seconds.
+    pub launch_overhead: f64,
+    /// Whether the device shares the host address space (CPU): H2D/D2H
+    /// transfers are elided / near-free, and completion callbacks attach to
+    /// the ndrange event instead of reads (paper §4B).
+    pub shares_host_memory: bool,
+}
+
+impl Device {
+    /// The paper's GPU: NVIDIA GTX-970-shaped descriptor.
+    pub fn gtx970(id: DeviceId, num_queues: usize) -> Self {
+        Device {
+            id,
+            name: "sim-gtx970".into(),
+            dtype: DeviceType::Gpu,
+            num_queues,
+            hw_queues: 32,
+            gflops: 3494.0,
+            // Calibrated so three concurrent β=256 GEMMs reproduce the
+            // Fig. 5 / Fig. 11 ≈8–15% fine-grained win (cost::contention).
+            base_occupancy: 0.7,
+            launch_overhead: 25e-6,
+            shares_host_memory: false,
+        }
+    }
+
+    /// The paper's CPU: quad-core Intel i5-4690K-shaped descriptor.
+    pub fn i5_4690k(id: DeviceId, num_queues: usize) -> Self {
+        Device {
+            id,
+            name: "sim-i5-4690k".into(),
+            dtype: DeviceType::Cpu,
+            num_queues,
+            hw_queues: 4,
+            gflops: 220.0,
+            // The work-greedy OpenCL CPU driver nearly saturates all four
+            // cores with one kernel: little concurrency headroom (this is
+            // what caps useful h_cpu at 1 in Fig. 11).
+            base_occupancy: 0.85,
+            launch_overhead: 8e-6,
+            shares_host_memory: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_type_parse() {
+        assert_eq!("gpu".parse::<DeviceType>().unwrap(), DeviceType::Gpu);
+        assert_eq!("CPU".parse::<DeviceType>().unwrap(), DeviceType::Cpu);
+        assert!("fpga".parse::<DeviceType>().is_err());
+    }
+
+    #[test]
+    fn paper_devices_shape() {
+        let g = Device::gtx970(0, 3);
+        let c = Device::i5_4690k(1, 1);
+        // The paper's observation: GPU has an order of magnitude more
+        // processing capability than the CPU under consideration.
+        assert!(g.gflops / c.gflops > 10.0);
+        assert!(!g.shares_host_memory);
+        assert!(c.shares_host_memory);
+    }
+}

@@ -1,0 +1,15 @@
+//! The heterogeneous platform model `P` (paper §3 Fig. 6): CPU + GPU devices
+//! connected by a PCI-Express bus with a DMA copy engine.
+//!
+//! The paper's testbed — an NVIDIA GTX-970 (Hyper-Q, 13 SMs, 3.5 TFLOPS
+//! peak, PCIe 3.0 x16) and a quad-core Intel i5-4690K — is unavailable here
+//! (repro band 0), so the same descriptors parameterize (a) the
+//! discrete-event simulator in [`crate::sim`] and (b) the PJRT-backed real
+//! executor in [`crate::exec`], where "GPU" is a worker pool with GPU-shaped
+//! concurrency limits (see DESIGN.md §Substitutions).
+
+pub mod device;
+pub mod topology;
+
+pub use device::{Device, DeviceId, DeviceType};
+pub use topology::Platform;

@@ -1,0 +1,101 @@
+//! Platform topology: the device set plus the PCIe/DMA interconnect.
+
+use super::device::{Device, DeviceId, DeviceType};
+
+/// The heterogeneous platform `P = {d_1..d_p}` plus interconnect parameters.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub devices: Vec<Device>,
+    /// Effective PCIe bandwidth, bytes/second (paper platform: PCIe 3.0 x16,
+    /// ~12 GB/s effective).
+    pub pcie_bytes_per_sec: f64,
+    /// Fixed DMA transfer setup latency, seconds.
+    pub dma_latency: f64,
+    /// Number of DMA copy engines (the paper models one).
+    pub copy_engines: usize,
+    /// Host-side cost of enqueueing one command during `setup_cq` (the
+    /// paper notes clustering kernels "start executing much later" because
+    /// all queues are populated before dispatch).
+    pub enqueue_overhead: f64,
+    /// Latency between an event completing and its callback having updated
+    /// the frontier/device set (the paper's analysis of eager/HEFT gaps:
+    /// callbacks run on host threads and are delayed under load).
+    pub callback_latency: f64,
+    /// Completion-notification latency for the *blocking-wait* path: task
+    /// components with no inter-edge reads need no callbacks (paper §5
+    /// comparative evaluation — the clustering advantage); the dispatch
+    /// child thread wakes directly from clFinish.
+    pub wait_latency: f64,
+}
+
+impl Platform {
+    /// The paper's single-CPU + single-GPU testbed, with `q_gpu`/`q_cpu`
+    /// command queues (a *mapping configuration* `mc` from Expt. 1).
+    pub fn paper_testbed(q_gpu: usize, q_cpu: usize) -> Self {
+        Platform {
+            devices: vec![Device::gtx970(0, q_gpu), Device::i5_4690k(1, q_cpu)],
+            pcie_bytes_per_sec: 12.0e9,
+            dma_latency: 12e-6,
+            copy_engines: 1,
+            enqueue_overhead: 20e-6,
+            callback_latency: 1.2e-3,
+            wait_latency: 50e-6,
+        }
+    }
+
+    pub fn device(&self, id: DeviceId) -> &Device {
+        &self.devices[id]
+    }
+
+    /// Devices of a given type with at least one command queue.
+    pub fn devices_of(&self, t: DeviceType) -> Vec<DeviceId> {
+        self.devices
+            .iter()
+            .filter(|d| d.dtype == t && d.num_queues > 0)
+            .map(|d| d.id)
+            .collect()
+    }
+
+    /// Transfer time for `bytes` to/from a device. Devices sharing host
+    /// memory (CPU) pay only a token mapping cost.
+    pub fn transfer_time(&self, dev: DeviceId, bytes: u64) -> f64 {
+        let d = self.device(dev);
+        if d.shares_host_memory {
+            1e-6 // clEnqueueMapBuffer-style zero-copy
+        } else {
+            self.dma_latency + bytes as f64 / self.pcie_bytes_per_sec
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testbed_matches_paper() {
+        let p = Platform::paper_testbed(3, 1);
+        assert_eq!(p.devices.len(), 2);
+        assert_eq!(p.devices_of(DeviceType::Gpu), vec![0]);
+        assert_eq!(p.devices_of(DeviceType::Cpu), vec![1]);
+        assert_eq!(p.device(0).num_queues, 3);
+    }
+
+    #[test]
+    fn zero_queue_devices_are_excluded() {
+        // mc = (3, 0, _): CPU gets zero queues => not schedulable.
+        let p = Platform::paper_testbed(3, 0);
+        assert!(p.devices_of(DeviceType::Cpu).is_empty());
+    }
+
+    #[test]
+    fn cpu_transfers_near_free_gpu_pays_pcie() {
+        let p = Platform::paper_testbed(1, 1);
+        let mb = 1 << 20;
+        let gpu = p.transfer_time(0, mb);
+        let cpu = p.transfer_time(1, mb);
+        assert!(gpu > 50.0 * cpu, "gpu={gpu} cpu={cpu}");
+        // 1 MiB over ~12 GB/s ≈ 87 µs + latency.
+        assert!(gpu > 80e-6 && gpu < 200e-6);
+    }
+}

@@ -1,0 +1,51 @@
+//! OpenCL-style commands. Each enqueued command owns an implicit event
+//! object (its [`CmdId`]) used for cross-queue dependencies and callbacks —
+//! mirroring `clEnqueue*`'s trailing event argument in the paper's host
+//! programs.
+
+use crate::graph::{BufferId, KernelId};
+
+/// Event / command identifier, unique within one [`super::CommandQueues`].
+pub type CmdId = usize;
+
+/// The three OpenCL command kinds of Def 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommandKind {
+    /// H2D transfer (`clEnqueueWriteBuffer`) of an input buffer.
+    Write { buffer: BufferId },
+    /// Kernel launch (`clEnqueueNDRangeKernel`).
+    NdRange,
+    /// D2H transfer (`clEnqueueReadBuffer`) of an output buffer.
+    Read { buffer: BufferId },
+}
+
+/// One enqueued command.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub id: CmdId,
+    pub kind: CommandKind,
+    /// The kernel this command belongs to.
+    pub kernel: KernelId,
+    /// Which command queue it was enqueued to.
+    pub queue: usize,
+    /// Position within that queue (in-order execution index).
+    pub seq: usize,
+}
+
+impl Command {
+    pub fn is_ndrange(&self) -> bool {
+        matches!(self.kind, CommandKind::NdRange)
+    }
+
+    pub fn is_transfer(&self) -> bool {
+        !self.is_ndrange()
+    }
+
+    /// Bytes moved if this is a transfer command.
+    pub fn transfer_buffer(&self) -> Option<BufferId> {
+        match self.kind {
+            CommandKind::Write { buffer } | CommandKind::Read { buffer } => Some(buffer),
+            CommandKind::NdRange => None,
+        }
+    }
+}

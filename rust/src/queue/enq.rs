@@ -1,0 +1,333 @@
+//! `setup_cq` (paper §4B, Algorithm 1 lines 7–12): synthesize the
+//! command-queue structure for one task component on one device using the
+//! `enq(k, q)` rule set of §3, `sel_rr` round-robin queue selection,
+//! `set_dependencies` for `E_Q`, and `set_callbacks` for completion
+//! notification.
+
+use super::command::CommandKind;
+use super::structure::CommandQueues;
+use crate::graph::{CopyClass, Dag, KernelId, Partition};
+use crate::platform::Device;
+use std::collections::{HashSet, VecDeque};
+
+/// Synthesize `Q = ⟨Q, E_Q⟩` for component `cid` of `partition` on `device`.
+///
+/// Enqueue rules (paper §3):
+/// 1. `k ∈ FRONT(T)`: dependent writes for inter-edge-fed input buffers,
+///    then the ndrange.
+/// 2. `k ∈ END(T)`: the ndrange, then dependent reads for inter-edge-read
+///    output buffers.
+/// 3. `k ∈ IN(T)`: only the ndrange.
+/// 4. Every kernel additionally gets all *isolated* writes before and all
+///    *isolated* reads after its ndrange.
+///
+/// Kernels are processed in intra-component BFS order starting from
+/// `FRONT(T) ∪` component-local sources, each assigned a queue by `sel_rr`.
+pub fn setup_cq(
+    dag: &Dag,
+    partition: &Partition,
+    cid: usize,
+    device: &Device,
+) -> CommandQueues {
+    let comp = &partition.components[cid];
+    let mut cq = CommandQueues::new(cid, device.id, device.num_queues);
+    let front: HashSet<KernelId> = partition.front(dag, cid).into_iter().collect();
+    let end: HashSet<KernelId> = partition.end(dag, cid).into_iter().collect();
+    let members: HashSet<KernelId> = comp.kernels.iter().copied().collect();
+
+    // `unprocessed ← FRONT(T)` plus component-local sources (kernels with no
+    // intra-component predecessor at all — FRONT is empty for components with
+    // no inter inputs, e.g. independent transformer heads).
+    let mut order: Vec<KernelId> = Vec::with_capacity(comp.kernels.len());
+    let mut queued: HashSet<KernelId> = HashSet::new();
+    let mut unprocessed: VecDeque<KernelId> = VecDeque::new();
+    let intra_preds = |k: KernelId| -> Vec<KernelId> {
+        dag.kernel_preds(k)
+            .into_iter()
+            .filter(|p| members.contains(p))
+            .collect()
+    };
+    for &k in &comp.kernels {
+        if front.contains(&k) || intra_preds(k).is_empty() {
+            unprocessed.push_back(k);
+            queued.insert(k);
+        }
+    }
+    // BFS respecting intra-component topology: a kernel is processed only
+    // once all its intra predecessors are processed (the paper's `update`).
+    let mut processed: HashSet<KernelId> = HashSet::new();
+    while let Some(k) = unprocessed.pop_front() {
+        if intra_preds(k).iter().any(|p| !processed.contains(p)) {
+            unprocessed.push_back(k); // not ready yet; re-queue
+            continue;
+        }
+        processed.insert(k);
+        order.push(k);
+        for s in dag.kernel_succs(k) {
+            if members.contains(&s) && queued.insert(s) {
+                unprocessed.push_back(s);
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), comp.kernels.len(), "component not connected?");
+
+    // Round-robin queue selector (paper's sel_rr).
+    let nq = cq.queues.len();
+    let mut rr = 0usize;
+    let mut ndrange_of = vec![usize::MAX; dag.num_kernels()];
+
+    for k in order {
+        let q = rr % nq;
+        rr += 1;
+        // enq(k, q) — writes.
+        let mut write_cmds = Vec::new();
+        for &bi in &dag.kernels[k].inputs {
+            // Io buffers appear in both lists; writes keyed off input role.
+            let needs_write = match dag.write_class(bi) {
+                CopyClass::Isolated => true,
+                CopyClass::Dependent => {
+                    // Only FRONT kernels re-materialize dependent writes, and
+                    // only for inter-fed buffers (intra data stays resident).
+                    front.contains(&k) && {
+                        let bp = dag.buffer_pred(bi).expect("dependent write has pred");
+                        partition.assignment[dag.buffers[bp].kernel] != cid
+                    }
+                }
+            };
+            if needs_write {
+                write_cmds.push(cq.push(q, CommandKind::Write { buffer: bi }, k));
+            }
+        }
+        // enq(k, q) — ndrange.
+        let nd = cq.push(q, CommandKind::NdRange, k);
+        ndrange_of[k] = nd;
+        // set_dependencies rule (i): writes before their ndrange (implicit —
+        // same queue — but recorded for clarity via add_dep's filter).
+        for w in write_cmds {
+            cq.add_dep(w, nd);
+        }
+        // set_dependencies rule (iii): intra-edge ndrange → ndrange.
+        for p in dag.kernel_preds(k) {
+            if members.contains(&p) {
+                debug_assert_ne!(ndrange_of[p], usize::MAX, "BFS order violated");
+                cq.add_dep(ndrange_of[p], nd);
+            }
+        }
+        // enq(k, q) — reads.
+        for &bo in &dag.kernels[k].outputs {
+            let needs_read = match dag.read_class(bo) {
+                CopyClass::Isolated => true,
+                CopyClass::Dependent => {
+                    end.contains(&k)
+                        && dag.buffer_succs(bo).iter().any(|&bs| {
+                            partition.assignment[dag.buffers[bs].kernel] != cid
+                        })
+                }
+            };
+            if needs_read {
+                let r = cq.push(q, CommandKind::Read { buffer: bo }, k);
+                // set_dependencies rule (ii).
+                cq.add_dep(nd, r);
+            }
+        }
+    }
+
+    set_callbacks(dag, partition, cid, device, &mut cq);
+    debug_assert!(cq.check_invariants().is_ok());
+    cq
+}
+
+/// Register completion callbacks (paper §4B "Callback Assignment"):
+/// * GPU device: on every read command of a callback kernel (END kernels'
+///   dependent reads pertaining to inter edges, plus terminal isolated reads
+///   — cf. Fig. 2's `cb` on the final read).
+/// * CPU device (shares host memory): on the ndrange of callback kernels.
+fn set_callbacks(
+    dag: &Dag,
+    partition: &Partition,
+    cid: usize,
+    device: &Device,
+    cq: &mut CommandQueues,
+) {
+    let targets = partition.callback_kernels(dag, cid);
+    for k in targets {
+        if device.shares_host_memory {
+            if let Some(nd) = cq.ndrange_of(k) {
+                cq.callbacks.push(nd);
+            }
+        } else {
+            let mut any_read = false;
+            for c in cq.commands_of(k) {
+                if matches!(cq.commands[c].kind, CommandKind::Read { .. }) {
+                    cq.callbacks.push(c);
+                    any_read = true;
+                }
+            }
+            // Kernels whose results stay device-resident (no reads enqueued)
+            // still need completion tracking: fall back to the ndrange.
+            if !any_read {
+                if let Some(nd) = cq.ndrange_of(k) {
+                    cq.callbacks.push(nd);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DagBuilder;
+    use crate::platform::{Device, DeviceType};
+
+    /// The Fig. 6/9 component: kp → {k0,k1,k2,k3,k4} → kn, mapped to a GPU
+    /// with 3 command queues, exactly as in the paper's Fig. 9 walkthrough.
+    fn fig9() -> (Dag, Partition, Vec<KernelId>) {
+        let mut b = DagBuilder::new();
+        let kp = b.kernel("kp", DeviceType::Cpu, 1, 1);
+        let k0 = b.kernel("k0", DeviceType::Gpu, 1, 1);
+        let k1 = b.kernel("k1", DeviceType::Gpu, 1, 1);
+        let k2 = b.kernel("k2", DeviceType::Gpu, 1, 1);
+        let k3 = b.kernel("k3", DeviceType::Gpu, 1, 1);
+        let k4 = b.kernel("k4", DeviceType::Gpu, 1, 1);
+        let kn = b.kernel("kn", DeviceType::Cpu, 1, 1);
+        let b0 = b.out_buf(kp, 4);
+        let b1 = b.out_buf(kp, 4);
+        let b2 = b.in_buf(k0, 4);
+        let b3 = b.in_buf(k0, 4);
+        let b4 = b.out_buf(k0, 4);
+        let b5 = b.in_buf(k1, 4); // isolated write w3
+        let b6 = b.in_buf(k1, 4);
+        let b7 = b.in_buf(k2, 4);
+        let b8 = b.in_buf(k2, 4); // isolated write
+        let b9 = b.out_buf(k1, 4);
+        let b10 = b.out_buf(k2, 4);
+        let b11 = b.in_buf(k3, 4);
+        let b12 = b.in_buf(k4, 4);
+        let b13 = b.out_buf(k3, 4);
+        let b14 = b.out_buf(k4, 4);
+        let b15 = b.in_buf(kn, 4);
+        let b16 = b.in_buf(kn, 4);
+        b.edge(b0, b2);
+        b.edge(b1, b3);
+        b.edge(b4, b6);
+        b.edge(b4, b7);
+        b.edge(b9, b11);
+        b.edge(b10, b12);
+        b.edge(b13, b15);
+        b.edge(b14, b16);
+        let _ = (b5, b8);
+        let dag = b.build().unwrap();
+        let part = Partition::new(
+            &dag,
+            vec![
+                (vec![kp], DeviceType::Cpu),
+                (vec![k0, k1, k2, k3, k4], DeviceType::Gpu),
+                (vec![kn], DeviceType::Cpu),
+            ],
+        )
+        .unwrap();
+        (dag, part, vec![kp, k0, k1, k2, k3, k4, kn])
+    }
+
+    #[test]
+    fn fig9_command_census() {
+        let (dag, part, _) = fig9();
+        let dev = Device::gtx970(0, 3);
+        let cq = setup_cq(&dag, &part, 1, &dev);
+        // Paper Fig. 9: w1,w2 (k0 dependent writes), w3 (k1 isolated),
+        // w4 (k2 isolated), e1..e5, r1 (k3), r2 (k4) => 4 writes, 5 ndrange,
+        // 2 reads.
+        assert_eq!(cq.kind_census(), (4, 5, 2));
+        cq.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fig9_round_robin_queue_assignment() {
+        let (dag, part, ks) = fig9();
+        let dev = Device::gtx970(0, 3);
+        let cq = setup_cq(&dag, &part, 1, &dev);
+        // BFS order k0,k1,k2,k3,k4 → queues 0,1,2,0,1 (paper Fig. 9).
+        let q_of = |k| cq.commands[cq.ndrange_of(k).unwrap()].queue;
+        assert_eq!(q_of(ks[1]), 0);
+        assert_eq!(q_of(ks[2]), 1);
+        assert_eq!(q_of(ks[3]), 2);
+        assert_eq!(q_of(ks[4]), 0);
+        assert_eq!(q_of(ks[5]), 1);
+    }
+
+    #[test]
+    fn fig9_eq_contains_paper_deps() {
+        let (dag, part, ks) = fig9();
+        let dev = Device::gtx970(0, 3);
+        let cq = setup_cq(&dag, &part, 1, &dev);
+        let nd = |k| cq.ndrange_of(k).unwrap();
+        // E_Q: e1→e2, e1→e3, e2→e4, e3→e5 (cross-queue intra deps).
+        let expect = [
+            (nd(ks[1]), nd(ks[2])),
+            (nd(ks[1]), nd(ks[3])),
+            (nd(ks[2]), nd(ks[4])),
+            (nd(ks[3]), nd(ks[5])),
+        ];
+        for pair in expect {
+            assert!(cq.e_q.contains(&pair), "missing dep {pair:?} in {:?}", cq.e_q);
+        }
+        // k3/k4's reads depend on their own ndranges only when cross-queue;
+        // enq puts them in the same queue, so E_Q is exactly the 4 above.
+        assert_eq!(cq.e_q.len(), 4);
+    }
+
+    #[test]
+    fn intra_resident_buffers_skip_transfers() {
+        let (dag, part, ks) = fig9();
+        let dev = Device::gtx970(0, 3);
+        let cq = setup_cq(&dag, &part, 1, &dev);
+        // k1's intra-fed input b6 must NOT get a write; k1's output b9 must
+        // NOT get a read (consumed by k3 in-component).
+        for c in cq.commands_of(ks[2]) {
+            match cq.commands[c].kind {
+                CommandKind::Write { buffer } => {
+                    assert_eq!(dag.buffers[buffer].pos, 0, "only isolated b5 write");
+                }
+                CommandKind::Read { .. } => panic!("k1 must not read"),
+                CommandKind::NdRange => {}
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_callbacks_on_reads_cpu_on_ndrange() {
+        let (dag, part, ks) = fig9();
+        let gpu = Device::gtx970(0, 3);
+        let cq = setup_cq(&dag, &part, 1, &gpu);
+        // END = {k3, k4}: callbacks on their read commands (r1, r2).
+        assert_eq!(cq.callbacks.len(), 2);
+        for &c in &cq.callbacks {
+            assert!(matches!(cq.commands[c].kind, CommandKind::Read { .. }));
+            assert!(cq.commands[c].kernel == ks[4] || cq.commands[c].kernel == ks[5]);
+        }
+        // Same component on a CPU: callbacks move to the ndrange events.
+        let mut cpu_part_groups = vec![
+            (vec![ks[0]], DeviceType::Cpu),
+            (vec![ks[1], ks[2], ks[3], ks[4], ks[5]], DeviceType::Cpu),
+            (vec![ks[6]], DeviceType::Cpu),
+        ];
+        let part_cpu = Partition::new(&dag, cpu_part_groups.drain(..).collect()).unwrap();
+        let cpu = Device::i5_4690k(1, 2);
+        let cq2 = setup_cq(&dag, &part_cpu, 1, &cpu);
+        for &c in &cq2.callbacks {
+            assert!(cq2.commands[c].is_ndrange());
+        }
+    }
+
+    #[test]
+    fn single_queue_is_fully_serial() {
+        let (dag, part, _) = fig9();
+        let dev = Device::gtx970(0, 1);
+        let cq = setup_cq(&dag, &part, 1, &dev);
+        assert_eq!(cq.queues.len(), 1);
+        assert_eq!(cq.queues[0].len(), cq.num_commands());
+        // All deps implicit: E_Q empty.
+        assert!(cq.e_q.is_empty());
+    }
+}

@@ -1,0 +1,16 @@
+//! Command-queue structure `Q = ⟨Q, E_Q⟩` (paper §3 Def 4) and its
+//! correct-by-construction synthesis (`setup_cq`, paper §4B / Fig 9).
+//!
+//! * [`command`] — write / ndrange / read commands and their event ids.
+//! * [`structure`] — the per-(component, device) queue set plus the explicit
+//!   cross-queue precedence set `E_Q` and callback registrations.
+//! * [`enq`] — the paper's `enq(k, q)` rule set, round-robin queue selection
+//!   (`sel_rr`), `set_dependencies`, and `set_callbacks`.
+
+pub mod command;
+pub mod enq;
+pub mod structure;
+
+pub use command::{CmdId, Command, CommandKind};
+pub use enq::setup_cq;
+pub use structure::CommandQueues;

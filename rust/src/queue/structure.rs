@@ -1,0 +1,216 @@
+//! The per-(task-component, device) command-queue structure.
+
+use super::command::{CmdId, Command, CommandKind};
+use crate::graph::KernelId;
+use crate::platform::DeviceId;
+
+/// `Q = ⟨Q, E_Q⟩` bound to a concrete device: the output of `setup_cq` and
+/// the unit of dispatch. Executed by both the simulator and the real
+/// executor.
+#[derive(Debug, Clone)]
+pub struct CommandQueues {
+    /// Task component this structure was synthesized for.
+    pub component: usize,
+    /// Device the component was dispatched to.
+    pub device: DeviceId,
+    /// `Q`: each inner vec is an in-order command queue (list of CmdIds).
+    pub queues: Vec<Vec<CmdId>>,
+    /// Command storage indexed by CmdId.
+    pub commands: Vec<Command>,
+    /// `E_Q`: explicit precedence constraints `(before, after)`. Only
+    /// cross-queue pairs are recorded — same-queue ordering is implicit via
+    /// in-order execution (the paper assumes barrier-free in-order queues).
+    pub e_q: Vec<(CmdId, CmdId)>,
+    /// Commands carrying a registered completion callback (`cb` instances
+    /// from `set_callbacks`). Their completion feeds `update_status`.
+    pub callbacks: Vec<CmdId>,
+}
+
+impl CommandQueues {
+    pub fn new(component: usize, device: DeviceId, num_queues: usize) -> Self {
+        CommandQueues {
+            component,
+            device,
+            queues: vec![Vec::new(); num_queues.max(1)],
+            commands: Vec::new(),
+            e_q: Vec::new(),
+            callbacks: Vec::new(),
+        }
+    }
+
+    /// Append a command to queue `q`, returning its event id.
+    pub fn push(&mut self, q: usize, kind: CommandKind, kernel: KernelId) -> CmdId {
+        let id = self.commands.len();
+        let seq = self.queues[q].len();
+        self.commands.push(Command {
+            id,
+            kind,
+            kernel,
+            queue: q,
+            seq,
+        });
+        self.queues[q].push(id);
+        id
+    }
+
+    /// Record a cross-queue precedence constraint; same-queue pairs are
+    /// dropped (implicit in in-order execution).
+    pub fn add_dep(&mut self, before: CmdId, after: CmdId) {
+        if self.commands[before].queue != self.commands[after].queue
+            && !self.e_q.contains(&(before, after))
+        {
+            self.e_q.push((before, after));
+        }
+    }
+
+    /// All explicit dependencies of `cmd`.
+    pub fn deps_of(&self, cmd: CmdId) -> Vec<CmdId> {
+        self.e_q
+            .iter()
+            .filter(|&&(_, a)| a == cmd)
+            .map(|&(b, _)| b)
+            .collect()
+    }
+
+    /// The ndrange command of kernel `k`, if enqueued.
+    pub fn ndrange_of(&self, k: KernelId) -> Option<CmdId> {
+        self.commands
+            .iter()
+            .find(|c| c.kernel == k && c.is_ndrange())
+            .map(|c| c.id)
+    }
+
+    /// All commands belonging to kernel `k`.
+    pub fn commands_of(&self, k: KernelId) -> Vec<CmdId> {
+        self.commands
+            .iter()
+            .filter(|c| c.kernel == k)
+            .map(|c| c.id)
+            .collect()
+    }
+
+    pub fn num_commands(&self) -> usize {
+        self.commands.len()
+    }
+
+    /// Count of commands per kind: (writes, ndranges, reads).
+    pub fn kind_census(&self) -> (usize, usize, usize) {
+        let mut w = 0;
+        let mut n = 0;
+        let mut r = 0;
+        for c in &self.commands {
+            match c.kind {
+                CommandKind::Write { .. } => w += 1,
+                CommandKind::NdRange => n += 1,
+                CommandKind::Read { .. } => r += 1,
+            }
+        }
+        (w, n, r)
+    }
+
+    /// Structural invariants used by property tests:
+    /// every command in exactly one queue slot, E_Q endpoints valid and
+    /// strictly cross-queue, and the dependency relation acyclic when
+    /// combined with in-order queue edges.
+    pub fn check_invariants(&self) -> crate::error::Result<()> {
+        use crate::error::Error;
+        let mut seen = vec![false; self.commands.len()];
+        for (qi, q) in self.queues.iter().enumerate() {
+            for (seq, &c) in q.iter().enumerate() {
+                let cmd = &self.commands[c];
+                if cmd.queue != qi || cmd.seq != seq {
+                    return Err(Error::Queue(format!(
+                        "command {c} misfiled: queue {}/{qi} seq {}/{seq}",
+                        cmd.queue, cmd.seq
+                    )));
+                }
+                if seen[c] {
+                    return Err(Error::Queue(format!("command {c} in two slots")));
+                }
+                seen[c] = true;
+            }
+        }
+        if seen.iter().any(|&s| !s) {
+            return Err(Error::Queue("orphan command".into()));
+        }
+        for &(b, a) in &self.e_q {
+            if b >= self.commands.len() || a >= self.commands.len() {
+                return Err(Error::Queue(format!("dangling E_Q edge ({b},{a})")));
+            }
+            if self.commands[b].queue == self.commands[a].queue {
+                return Err(Error::Queue(format!(
+                    "same-queue E_Q edge ({b},{a}) should be implicit"
+                )));
+            }
+        }
+        // Acyclicity of (E_Q ∪ in-order edges).
+        let n = self.commands.len();
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for q in &self.queues {
+            for w in q.windows(2) {
+                adj[w[0]].push(w[1]);
+                indeg[w[1]] += 1;
+            }
+        }
+        for &(b, a) in &self.e_q {
+            adj[b].push(a);
+            indeg[a] += 1;
+        }
+        let mut stack: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut visited = 0;
+        while let Some(c) = stack.pop() {
+            visited += 1;
+            for &s in &adj[c] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    stack.push(s);
+                }
+            }
+        }
+        if visited != n {
+            return Err(Error::Queue("cyclic command dependencies".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_maintains_order() {
+        let mut cq = CommandQueues::new(0, 0, 2);
+        let a = cq.push(0, CommandKind::Write { buffer: 0 }, 0);
+        let b = cq.push(0, CommandKind::NdRange, 0);
+        let c = cq.push(1, CommandKind::NdRange, 1);
+        assert_eq!(cq.queues[0], vec![a, b]);
+        assert_eq!(cq.queues[1], vec![c]);
+        assert_eq!(cq.commands[b].seq, 1);
+        cq.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn same_queue_deps_are_implicit() {
+        let mut cq = CommandQueues::new(0, 0, 2);
+        let a = cq.push(0, CommandKind::Write { buffer: 0 }, 0);
+        let b = cq.push(0, CommandKind::NdRange, 0);
+        cq.add_dep(a, b);
+        assert!(cq.e_q.is_empty());
+        let c = cq.push(1, CommandKind::NdRange, 1);
+        cq.add_dep(b, c);
+        assert_eq!(cq.e_q, vec![(b, c)]);
+        cq.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn invariants_catch_cycles() {
+        let mut cq = CommandQueues::new(0, 0, 2);
+        let a = cq.push(0, CommandKind::NdRange, 0);
+        let b = cq.push(1, CommandKind::NdRange, 1);
+        cq.add_dep(a, b);
+        cq.add_dep(b, a);
+        assert!(cq.check_invariants().is_err());
+    }
+}

@@ -1,0 +1,336 @@
+//! Experiment implementations (see module docs in [`super`]).
+
+use crate::cost::{CostModel, PaperCost};
+use crate::error::Result;
+use crate::graph::Partition;
+use crate::platform::{DeviceType, Platform};
+use crate::sched::{Clustering, Eager, Heft, Policy};
+use crate::sim::{simulate, SimConfig, SimResult};
+use crate::transformer::{cluster_by_head, transformer_dag};
+use std::fmt;
+
+/// An architecture mapping configuration `mc = ⟨q_gpu, q_cpu, h_cpu⟩`
+/// (Expt 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MappingConfig {
+    pub q_gpu: usize,
+    pub q_cpu: usize,
+    pub h_cpu: usize,
+}
+
+impl fmt::Display for MappingConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({},{},{})", self.q_gpu, self.q_cpu, self.h_cpu)
+    }
+}
+
+/// Simulate the clustering scheme for a transformer layer under `mc`.
+pub fn run_clustering(
+    heads: usize,
+    beta: u64,
+    mc: MappingConfig,
+    cost: &dyn CostModel,
+) -> Result<SimResult> {
+    let (dag, ios) = transformer_dag(heads, beta, DeviceType::Gpu);
+    let part = cluster_by_head(&dag, &ios, mc.h_cpu);
+    let platform = Platform::paper_testbed(mc.q_gpu, mc.q_cpu);
+    simulate(
+        &dag,
+        &part,
+        &platform,
+        cost,
+        &mut Clustering,
+        &SimConfig::default(),
+    )
+}
+
+/// Simulate a dynamic baseline (`eager` / `heft`) on singleton components
+/// with one queue per device (paper §5 Expts 2–3).
+pub fn run_baseline(
+    heads: usize,
+    beta: u64,
+    policy: &mut dyn Policy,
+    cost: &dyn CostModel,
+) -> Result<SimResult> {
+    let (dag, _) = transformer_dag(heads, beta, DeviceType::Gpu);
+    let part = Partition::singletons(&dag);
+    let platform = Platform::paper_testbed(1, 1);
+    simulate(&dag, &part, &platform, cost, policy, &SimConfig::default())
+}
+
+/// The default coarse-grained configuration: whole DAG on the GPU through a
+/// single command queue, `mc = (1, 0, 0)`.
+pub const DEFAULT_MC: MappingConfig = MappingConfig {
+    q_gpu: 1,
+    q_cpu: 0,
+    h_cpu: 0,
+};
+
+// ---------------------------------------------------------------- motivation
+
+/// Figs. 4/5 output.
+pub struct MotivationResult {
+    pub coarse_ms: f64,
+    pub fine_ms: f64,
+    pub speedup: f64,
+    pub coarse: SimResult,
+    pub fine: SimResult,
+}
+
+/// Figs. 4/5: one transformer head at β=256, single queue vs 3 queues.
+pub fn motivation(beta: u64) -> Result<MotivationResult> {
+    let cost = PaperCost;
+    let coarse = run_clustering(1, beta, DEFAULT_MC, &cost)?;
+    let fine = run_clustering(
+        1,
+        beta,
+        MappingConfig {
+            q_gpu: 3,
+            q_cpu: 0,
+            h_cpu: 0,
+        },
+        &cost,
+    )?;
+    Ok(MotivationResult {
+        coarse_ms: coarse.makespan * 1e3,
+        fine_ms: fine.makespan * 1e3,
+        speedup: coarse.makespan / fine.makespan,
+        coarse,
+        fine,
+    })
+}
+
+// -------------------------------------------------------------------- expt 1
+
+/// One row of Fig. 11.
+#[derive(Debug, Clone, Copy)]
+pub struct Expt1Row {
+    pub heads: usize,
+    pub best: MappingConfig,
+    pub best_ms: f64,
+    pub default_ms: f64,
+    pub speedup: f64,
+}
+
+/// Expt 1: for each H ∈ [1, h_max], sweep `q_gpu ∈ [1,5]`, `q_cpu ∈ [0,5]`,
+/// `h_cpu ∈ [0, min(H, h_cpu_max)]`; report best speedup over the default.
+pub fn expt1(h_max: usize, beta: u64, h_cpu_max: usize) -> Result<Vec<Expt1Row>> {
+    let cost = PaperCost;
+    let mut rows = Vec::new();
+    for heads in 1..=h_max {
+        let default_t = run_clustering(heads, beta, DEFAULT_MC, &cost)?.makespan;
+        let mut best = (DEFAULT_MC, default_t);
+        for q_gpu in 1..=5usize {
+            for q_cpu in 0..=5usize {
+                for h_cpu in 0..=heads.min(h_cpu_max) {
+                    if h_cpu > 0 && q_cpu == 0 {
+                        continue; // CPU heads need a CPU queue
+                    }
+                    let mc = MappingConfig {
+                        q_gpu,
+                        q_cpu,
+                        h_cpu,
+                    };
+                    let t = run_clustering(heads, beta, mc, &cost)?.makespan;
+                    if t < best.1 {
+                        best = (mc, t);
+                    }
+                }
+            }
+        }
+        rows.push(Expt1Row {
+            heads,
+            best: best.0,
+            best_ms: best.1 * 1e3,
+            default_ms: default_t * 1e3,
+            speedup: default_t / best.1,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render Fig. 11 as the paper's table: H, best (q_gpu,q_cpu), h_cpu, speedup.
+pub fn format_expt1(rows: &[Expt1Row]) -> String {
+    let mut s = String::from(
+        "Expt 1 (Fig. 11): clustering best config vs default mc=(1,0,0), β=256\n\
+         H  | best mc    | default ms | best ms | speedup\n\
+         ---+------------+------------+---------+--------\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:>2} | {:<10} | {:>10.1} | {:>7.1} | {:.3}x\n",
+            r.heads,
+            r.best.to_string(),
+            r.default_ms,
+            r.best_ms,
+            r.speedup
+        ));
+    }
+    s
+}
+
+// ---------------------------------------------------------------- expts 2/3
+
+/// One row of Fig. 12(a)/(b).
+#[derive(Debug, Clone, Copy)]
+pub struct BaselineRow {
+    pub beta: u64,
+    pub best: MappingConfig,
+    pub clustering_ms: f64,
+    pub baseline_ms: f64,
+    pub speedup: f64,
+}
+
+fn best_clustering(
+    heads: usize,
+    beta: u64,
+    cost: &dyn CostModel,
+) -> Result<(MappingConfig, f64)> {
+    let mut best: Option<(MappingConfig, f64)> = None;
+    for q_gpu in 1..=5usize {
+        for q_cpu in 0..=2usize {
+            for h_cpu in 0..=1usize {
+                if h_cpu > 0 && q_cpu == 0 {
+                    continue;
+                }
+                let mc = MappingConfig {
+                    q_gpu,
+                    q_cpu,
+                    h_cpu,
+                };
+                let t = run_clustering(heads, beta, mc, cost)?.makespan;
+                if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+                    best = Some((mc, t));
+                }
+            }
+        }
+    }
+    Ok(best.expect("non-empty sweep"))
+}
+
+/// Expt 2 (Fig. 12a): clustering best config vs eager, H=16, β sweep.
+pub fn expt2(heads: usize, betas: &[u64]) -> Result<Vec<BaselineRow>> {
+    baseline_sweep(heads, betas, &mut Eager)
+}
+
+/// Expt 3 (Fig. 12b): clustering best config vs HEFT, H=16, β sweep.
+pub fn expt3(heads: usize, betas: &[u64]) -> Result<Vec<BaselineRow>> {
+    baseline_sweep(heads, betas, &mut Heft)
+}
+
+fn baseline_sweep(
+    heads: usize,
+    betas: &[u64],
+    policy: &mut dyn Policy,
+) -> Result<Vec<BaselineRow>> {
+    let cost = PaperCost;
+    let mut rows = Vec::new();
+    for &beta in betas {
+        let (mc, cl) = best_clustering(heads, beta, &cost)?;
+        let bl = run_baseline(heads, beta, policy, &cost)?.makespan;
+        rows.push(BaselineRow {
+            beta,
+            best: mc,
+            clustering_ms: cl * 1e3,
+            baseline_ms: bl * 1e3,
+            speedup: bl / cl,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render Fig. 12-style table.
+pub fn format_baseline(rows: &[BaselineRow], name: &str) -> String {
+    let mut s = format!(
+        "clustering (best mc) vs {name}, H=16\n\
+         β    | best mc    | {name} ms | clustering ms | speedup\n\
+         -----+------------+-----------+---------------+--------\n"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:>4} | {:<10} | {:>9.1} | {:>13.1} | {:.2}x\n",
+            r.beta,
+            r.best.to_string(),
+            r.baseline_ms,
+            r.clustering_ms,
+            r.speedup
+        ));
+    }
+    s
+}
+
+// ------------------------------------------------------------------- fig 13
+
+/// Fig. 13: simulate one policy at (heads, beta) and return its trace
+/// rendering plus gap statistics.
+pub fn gantt(policy_name: &str, heads: usize, beta: u64) -> Result<(SimResult, String)> {
+    let cost = PaperCost;
+    let r = match policy_name {
+        "clustering" => {
+            let (mc, _) = best_clustering(heads, beta, &cost)?;
+            run_clustering(heads, beta, mc, &cost)?
+        }
+        "eager" => run_baseline(heads, beta, &mut Eager, &cost)?,
+        "heft" => run_baseline(heads, beta, &mut Heft, &cost)?,
+        other => {
+            return Err(crate::error::Error::Sched(format!(
+                "unknown policy '{other}'"
+            )))
+        }
+    };
+    let mut s = format!(
+        "policy={} makespan={:.1} ms  gpu_gap_max={:.1} ms  gpu_overlap={:.1} ms\n",
+        r.policy,
+        r.makespan * 1e3,
+        r.trace.max_gap(0) * 1e3,
+        r.trace.device_overlap(0) * 1e3,
+    );
+    s.push_str(&r.trace.ascii(100));
+    Ok((r, s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn motivation_reproduces_fig4_5_shape() {
+        let m = motivation(256).unwrap();
+        // Paper: 105 ms -> 95 ms (≈8%). Accept the ballpark.
+        assert!(m.coarse_ms > 85.0 && m.coarse_ms < 125.0, "{}", m.coarse_ms);
+        assert!(m.speedup > 1.04 && m.speedup < 1.30, "{}", m.speedup);
+    }
+
+    #[test]
+    fn expt1_small_sweep_shape() {
+        // Reduced sweep for test speed: H ∈ {1, 12}.
+        let rows = expt1(1, 256, 1).unwrap();
+        assert!(rows[0].speedup >= 1.0);
+        // All-GPU best for H=1.
+        assert_eq!(rows[0].best.h_cpu, 0);
+    }
+
+    #[test]
+    fn expt2_speedups_in_paper_band() {
+        let rows = expt2(16, &[256]).unwrap();
+        let s = rows[0].speedup;
+        assert!(s > 1.3 && s < 4.5, "speedup {s}");
+    }
+
+    #[test]
+    fn expt3_heft_closer_than_eager() {
+        let e2 = expt2(16, &[256]).unwrap()[0].speedup;
+        let e3 = expt3(16, &[256]).unwrap()[0].speedup;
+        assert!(e3 < e2, "heft ({e3}) should be closer to clustering than eager ({e2})");
+        assert!(e3 > 1.0, "clustering should still beat heft ({e3})");
+    }
+
+    #[test]
+    fn gantt_diagnostics_match_fig13() {
+        let (cl, _) = gantt("clustering", 8, 256).unwrap();
+        let (hf, _) = gantt("heft", 8, 256).unwrap();
+        // HEFT's per-kernel callbacks create bigger GPU gaps than clustering
+        // (paper: "successive gaps introduced between each kernel").
+        assert!(hf.trace.max_gap(0) > cl.trace.max_gap(0));
+    }
+}

@@ -1,0 +1,18 @@
+//! Experiment harness: regenerates every table/figure of the paper's §5.
+//!
+//! * [`motivation`] — Figs. 4/5 (coarse vs fine Gantt, one head, β=256).
+//! * [`expt1`] — Fig. 11 (clustering best-config speedups over the default
+//!   coarse configuration, H ∈ [1,16], β=256).
+//! * [`expt2`] — Fig. 12(a) (clustering vs eager, H=16, β ∈ {64..512}).
+//! * [`expt3`] — Fig. 12(b) (clustering vs HEFT, same sweep).
+//! * [`gantt`] — Fig. 13 (per-policy Gantt charts at H=16, β=512).
+//!
+//! Each function both returns structured rows (consumed by benches and
+//! integration tests) and renders the paper-style table via `Display`.
+
+pub mod experiments;
+
+pub use experiments::{
+    expt1, expt2, expt3, gantt, motivation, BaselineRow, Expt1Row, MappingConfig,
+    MotivationResult,
+};

@@ -1,0 +1,214 @@
+//! PJRT client wrapper: compile-once executable cache + typed execute.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use super::manifest::Manifest;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// A compiled executable, shareable across the executor's queue threads.
+///
+/// SAFETY: `PjRtLoadedExecutable` wraps a C++ `xla::PjRtLoadedExecutable`,
+/// whose `Execute` is documented thread-safe; the wrapper holds an owning
+/// pointer freed on drop. We never mutate it after compilation, and `Shared`
+/// keeps exactly one owner via `Arc`.
+pub struct Shared(xla::PjRtLoadedExecutable);
+unsafe impl Send for Shared {}
+unsafe impl Sync for Shared {}
+
+/// The L3-side runtime: one PJRT CPU client + a name→executable cache.
+pub struct Runtime {
+    client: Mutex<xla::PjRtClient>,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Shared>>>,
+}
+
+// SAFETY: PjRtClient wraps xla::PjRtClient (thread-safe in C++); all rust
+// calls go through the Mutex anyway.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+impl Runtime {
+    /// Create a runtime over the artifact directory (compiles lazily).
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Runtime {
+            client: Mutex::new(client),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Platform string of the backing PJRT client (e.g. "cpu").
+    pub fn platform_name(&self) -> String {
+        self.client.lock().unwrap().platform_name()
+    }
+
+    /// Fetch (compiling on first use) the executable for `name`.
+    pub fn load(&self, name: &str) -> Result<Arc<Shared>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = {
+            let client = self.client.lock().unwrap();
+            client.compile(&comp).map_err(xerr)?
+        };
+        let shared = Arc::new(Shared(exe));
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), shared.clone());
+        Ok(shared)
+    }
+
+    /// Eagerly compile every artifact (used by the serving-style example to
+    /// move compilation off the request path).
+    pub fn warmup(&self) -> Result<usize> {
+        let names: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute artifact `name` on f32 tensors (shape-checked against the
+    /// manifest). Returns the flattened outputs.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let meta = self.manifest.get(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let exe = self.load(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&meta.inputs) {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                return Err(Error::Runtime(format!(
+                    "{name}: input length {} != shape {:?}",
+                    data.len(),
+                    shape
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims).map_err(xerr)?;
+            literals.push(lit);
+        }
+        let result = exe.0.execute::<xla::Literal>(&literals).map_err(xerr)?;
+        let first = result[0][0].to_literal_sync().map_err(xerr)?;
+        // aot.py lowers with return_tuple=True: unpack the tuple elements.
+        let elems = first.to_tuple().map_err(xerr)?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>().map_err(xerr)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Runtime::new(&dir).ok()
+    }
+
+    fn naive_gemm(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                let aik = a[i * n + k];
+                for j in 0..n {
+                    c[i * n + j] += aik * b[k * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive_reference() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let n = 32;
+        let a: Vec<f32> = (0..n * n).map(|i| ((i * 37 % 23) as f32 - 11.0) / 7.0).collect();
+        let b: Vec<f32> = (0..n * n).map(|i| ((i * 53 % 19) as f32 - 9.0) / 5.0).collect();
+        let out = rt.execute_f32("gemm_b32", &[&a, &b]).unwrap();
+        let want = naive_gemm(&a, &b, n);
+        assert_eq!(out.len(), 1);
+        for (x, y) in out[0].iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let Some(rt) = runtime() else {
+            return;
+        };
+        let n = 32;
+        let x: Vec<f32> = (0..n * n).map(|i| ((i % 13) as f32) / 3.0).collect();
+        let out = rt.execute_f32("softmax_b32", &[&x]).unwrap();
+        for row in out[0].chunks(n) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let Some(rt) = runtime() else {
+            return;
+        };
+        let n = 32;
+        let x: Vec<f32> = (0..(n * n) as u32).map(|i| i as f32).collect();
+        let t = rt.execute_f32("transpose_b32", &[&x]).unwrap();
+        let tt = rt.execute_f32("transpose_b32", &[&t[0]]).unwrap();
+        assert_eq!(tt[0], x);
+        assert_eq!(t[0][1], x[n]); // (0,1) of X^T == (1,0) of X
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(rt) = runtime() else {
+            return;
+        };
+        let bad = vec![0f32; 7];
+        assert!(rt.execute_f32("gemm_b32", &[&bad, &bad]).is_err());
+        let ok = vec![0f32; 32 * 32];
+        assert!(rt.execute_f32("gemm_b32", &[&ok]).is_err());
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let Some(rt) = runtime() else {
+            return;
+        };
+        let a = rt.load("gemm_b32").unwrap();
+        let b = rt.load("gemm_b32").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

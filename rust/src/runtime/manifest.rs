@@ -1,0 +1,161 @@
+//! The artifact manifest emitted by `python/compile/aot.py`.
+
+use crate::error::{Error, Result};
+use crate::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub op: String,
+    /// Input tensor shapes, argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output tensor shapes.
+    pub outputs: Vec<Vec<usize>>,
+    pub flops: u64,
+    pub bytes: u64,
+    pub sha256: String,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        let root = Json::parse(&text)?;
+        let mut artifacts = HashMap::new();
+        let list = root
+            .field("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Runtime("'artifacts' must be an array".into()))?;
+        for a in list {
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                Ok(a.get(key)
+                    .and_then(|v| v.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|s| {
+                                s.as_arr()
+                                    .map(|dims| {
+                                        dims.iter()
+                                            .filter_map(|d| d.as_usize())
+                                            .collect::<Vec<_>>()
+                                    })
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default())
+            };
+            let meta = ArtifactMeta {
+                name: a
+                    .field("name")?
+                    .as_str()
+                    .ok_or_else(|| Error::Runtime("artifact name".into()))?
+                    .to_string(),
+                file: a
+                    .field("file")?
+                    .as_str()
+                    .ok_or_else(|| Error::Runtime("artifact file".into()))?
+                    .to_string(),
+                op: a
+                    .get("op")
+                    .and_then(|o| o.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+                flops: a.get("flops").and_then(|f| f.as_u64()).unwrap_or(0),
+                bytes: a.get("bytes").and_then(|b| b.as_u64()).unwrap_or(0),
+                sha256: a
+                    .get("sha256")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            };
+            artifacts.insert(meta.name.clone(), meta);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+}
+
+/// Default artifact directory: `$PYSCHEDCL_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("PYSCHEDCL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_manifest_when_built() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // The β sweep the experiments need must be present.
+        for b in [64usize, 128, 256, 512] {
+            for op in ["gemm", "softmax", "transpose", "head"] {
+                let a = m.get(&format!("{op}_b{b}")).expect("artifact present");
+                assert!(!a.inputs.is_empty());
+                assert!(m.path_of(&a.name).unwrap().exists());
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_shapes_square() {
+        let Some(m) = repo_artifacts() else {
+            return;
+        };
+        let g = m.get("gemm_b64").unwrap();
+        assert_eq!(g.inputs, vec![vec![64, 64], vec![64, 64]]);
+        assert_eq!(g.outputs, vec![vec![64, 64]]);
+        assert_eq!(g.flops, 2 * 64 * 64 * 64);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(m) = repo_artifacts() else {
+            return;
+        };
+        assert!(m.get("nonexistent_b7").is_err());
+    }
+}

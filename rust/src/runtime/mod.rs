@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute them
+//! from the L3 hot path. Python never runs here — the HLO text was produced
+//! once by `make artifacts` (`python/compile/aot.py`).
+//!
+//! * [`manifest`] — `artifacts/manifest.json` (names, files, shapes, flops).
+//! * [`client`] — `PjRtClient::cpu()` wrapper with a compiled-executable
+//!   cache, thread-safe for the multi-queue real executor.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactMeta, Manifest};

@@ -1,0 +1,182 @@
+//! Auto-tuning of mapping configurations (the paper's §7 future work:
+//! "an auto-tuning framework on top of PySchedCL which would automatically
+//! determine, given an application-architecture pair, the optimal
+//! allocation of command queues across devices").
+//!
+//! Two strategies over the `mc = ⟨q_gpu, q_cpu, h_cpu⟩` space:
+//! * [`exhaustive`] — the Expt-1 sweep;
+//! * [`hill_climb`] — greedy coordinate descent with restarts, evaluating a
+//!   small fraction of the space (useful when a sim evaluation is costly or
+//!   when tuning on the real executor).
+
+use crate::cost::CostModel;
+use crate::error::Result;
+use crate::report::experiments::{run_clustering, MappingConfig};
+
+/// Search-space bounds.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneSpace {
+    pub max_queues: usize,
+    pub max_h_cpu: usize,
+}
+
+impl Default for TuneSpace {
+    fn default() -> Self {
+        TuneSpace {
+            max_queues: 5,
+            max_h_cpu: 3,
+        }
+    }
+}
+
+/// Tuning outcome: the best configuration found, its makespan (seconds) and
+/// the number of evaluations spent.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneResult {
+    pub best: MappingConfig,
+    pub makespan: f64,
+    pub evals: usize,
+}
+
+fn valid(mc: MappingConfig) -> bool {
+    mc.q_gpu >= 1 && !(mc.h_cpu > 0 && mc.q_cpu == 0)
+}
+
+/// Exhaustive sweep (ground truth; what Expt 1 reports).
+pub fn exhaustive(
+    heads: usize,
+    beta: u64,
+    space: TuneSpace,
+    cost: &dyn CostModel,
+) -> Result<TuneResult> {
+    let mut best: Option<(MappingConfig, f64)> = None;
+    let mut evals = 0;
+    for q_gpu in 1..=space.max_queues {
+        for q_cpu in 0..=space.max_queues {
+            for h_cpu in 0..=heads.min(space.max_h_cpu) {
+                let mc = MappingConfig {
+                    q_gpu,
+                    q_cpu,
+                    h_cpu,
+                };
+                if !valid(mc) {
+                    continue;
+                }
+                let t = run_clustering(heads, beta, mc, cost)?.makespan;
+                evals += 1;
+                if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+                    best = Some((mc, t));
+                }
+            }
+        }
+    }
+    let (best, makespan) = best.expect("non-empty space");
+    Ok(TuneResult {
+        best,
+        makespan,
+        evals,
+    })
+}
+
+/// Greedy coordinate descent from a starting point: tweak one coordinate at
+/// a time (±1), keep improvements, stop at a local optimum.
+pub fn hill_climb(
+    heads: usize,
+    beta: u64,
+    space: TuneSpace,
+    start: MappingConfig,
+    cost: &dyn CostModel,
+) -> Result<TuneResult> {
+    let mut evals = 0;
+    let mut eval = |mc: MappingConfig| -> Result<Option<f64>> {
+        if !valid(mc)
+            || mc.q_gpu > space.max_queues
+            || mc.q_cpu > space.max_queues
+            || mc.h_cpu > heads.min(space.max_h_cpu)
+        {
+            return Ok(None);
+        }
+        evals += 1;
+        Ok(Some(run_clustering(heads, beta, mc, cost)?.makespan))
+    };
+    let mut cur = start;
+    let mut cur_t = eval(cur)?.expect("start must be valid");
+    loop {
+        let mut improved = false;
+        let neighbours = [
+            MappingConfig { q_gpu: cur.q_gpu + 1, ..cur },
+            MappingConfig { q_gpu: cur.q_gpu.saturating_sub(1), ..cur },
+            MappingConfig { q_cpu: cur.q_cpu + 1, ..cur },
+            MappingConfig { q_cpu: cur.q_cpu.saturating_sub(1), ..cur },
+            MappingConfig { h_cpu: cur.h_cpu + 1, ..cur },
+            MappingConfig { h_cpu: cur.h_cpu.saturating_sub(1), ..cur },
+            // Diagonal move: offloading the first head needs a CPU queue in
+            // the same step (h_cpu > 0 with q_cpu = 0 is invalid).
+            MappingConfig {
+                q_cpu: cur.q_cpu + 1,
+                h_cpu: cur.h_cpu + 1,
+                ..cur
+            },
+        ];
+        for n in neighbours {
+            if n == cur {
+                continue;
+            }
+            if let Some(t) = eval(n)? {
+                if t < cur_t {
+                    cur = n;
+                    cur_t = t;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    Ok(TuneResult {
+        best: cur,
+        makespan: cur_t,
+        evals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::report::experiments::DEFAULT_MC;
+
+    #[test]
+    fn exhaustive_finds_known_optimum_shape() {
+        let space = TuneSpace {
+            max_queues: 3,
+            max_h_cpu: 1,
+        };
+        let r = exhaustive(12, 256, space, &PaperCost).unwrap();
+        // At H=12, offloading one head wins (Fig. 11).
+        assert_eq!(r.best.h_cpu, 1);
+        assert!(r.best.q_gpu >= 2, "fine-grained queues should win");
+        assert!(r.evals > 10);
+    }
+
+    #[test]
+    fn hill_climb_matches_exhaustive_with_fewer_evals() {
+        let space = TuneSpace {
+            max_queues: 3,
+            max_h_cpu: 1,
+        };
+        let ex = exhaustive(12, 256, space, &PaperCost).unwrap();
+        let hc = hill_climb(12, 256, space, DEFAULT_MC, &PaperCost).unwrap();
+        assert!(hc.evals < ex.evals, "{} !< {}", hc.evals, ex.evals);
+        // Within 5% of the global optimum from the default start.
+        assert!(hc.makespan <= ex.makespan * 1.05);
+    }
+
+    #[test]
+    fn hill_climb_never_returns_invalid() {
+        let r = hill_climb(4, 128, TuneSpace::default(), DEFAULT_MC, &PaperCost).unwrap();
+        assert!(r.best.q_gpu >= 1);
+        assert!(!(r.best.h_cpu > 0 && r.best.q_cpu == 0));
+    }
+}

@@ -1,0 +1,23 @@
+//! Scheduling (paper §4B Algorithm 1 + §5 policies).
+//!
+//! The scheduling *loop* (frontier `F`, device set `A`, select → setup_cq →
+//! dispatch → callbacks) lives in the execution engines ([`crate::sim`] for
+//! the modeled platform, [`crate::exec`] for real PJRT execution); this
+//! module defines the pluggable pieces:
+//!
+//! * [`Policy`] — the paper's overridable `select` routine.
+//! * [`Clustering`] — static fine-grained scheme (Expt 1): components are
+//!   dispatched to devices matching their preference, ordered by bottom-level
+//!   rank.
+//! * [`Eager`] — StarPU-inspired dynamic scheme (Expt 2): singleton
+//!   components, one queue per device, any available device.
+//! * [`Heft`] — HEFT (Expt 3): singleton components, earliest-finish-time
+//!   device choice using profiled execution times.
+
+pub mod autotune;
+pub mod policy;
+pub mod ranks;
+
+pub use autotune::{exhaustive, hill_climb, TuneResult, TuneSpace};
+pub use policy::{Clustering, Eager, Heft, Policy, SchedView};
+pub use ranks::component_ranks;

@@ -1,0 +1,223 @@
+//! The pluggable `select` routine of Algorithm 1 and the three policies the
+//! paper evaluates.
+
+use crate::cost::CostModel;
+use crate::graph::{Dag, Partition};
+use crate::platform::{Device, DeviceId, Platform};
+
+/// Read-only scheduler state offered to `select` (Algorithm 1 line 5):
+/// the frontier `F` (rank-sorted, descending), the available-device set `A`,
+/// and auxiliary estimates for EFT-style policies.
+pub struct SchedView<'a> {
+    pub now: f64,
+    /// Ready component ids, sorted by bottom-level rank, best first.
+    pub frontier: &'a [usize],
+    /// Available (idle) devices.
+    pub available: &'a [DeviceId],
+    pub platform: &'a Platform,
+    pub partition: &'a Partition,
+    pub dag: &'a Dag,
+    /// Estimated time each device becomes free (≤ now when idle).
+    pub est_free: &'a [f64],
+    pub cost: &'a dyn CostModel,
+}
+
+impl<'a> SchedView<'a> {
+    /// Solo execution-time estimate of an entire component on a device.
+    pub fn component_time(&self, comp: usize, dev: &Device) -> f64 {
+        self.partition.components[comp]
+            .kernels
+            .iter()
+            .map(|&k| self.cost.exec_time(&self.dag.kernels[k], dev))
+            .sum()
+    }
+}
+
+/// The paper's overridable `select` routine: choose a ready component and a
+/// device, or `None` to block until a callback updates `F`/`A`.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)>;
+
+    /// Command queues this policy sets up on `device`. Dynamic coarse-grained
+    /// baselines force a single queue (paper §5 Expts 2–3).
+    fn queues_for(&self, device: &Device) -> usize {
+        device.num_queues
+    }
+}
+
+/// Static fine-grained *clustering* (Expt 1): dispatch the highest-ranked
+/// component whose device preference matches an available device.
+#[derive(Debug, Default)]
+pub struct Clustering;
+
+impl Policy for Clustering {
+    fn name(&self) -> &'static str {
+        "clustering"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        for &comp in view.frontier {
+            let want = view.partition.components[comp].dev;
+            if let Some(&dev) = view
+                .available
+                .iter()
+                .find(|&&d| view.platform.device(d).dtype == want)
+            {
+                return Some((comp, dev));
+            }
+        }
+        None
+    }
+}
+
+/// Dynamic *eager* execution (Expt 2, StarPU-inspired): highest-ranked
+/// component onto **any** available device, ignoring preferences — the
+/// greedy behaviour whose pathology (GEMMs landing on the CPU) the paper
+/// dissects in Fig. 13(a). Coarse-grained: one queue per device.
+#[derive(Debug, Default)]
+pub struct Eager;
+
+impl Policy for Eager {
+    fn name(&self) -> &'static str {
+        "eager"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        let comp = *view.frontier.first()?;
+        let dev = *view.available.first()?;
+        Some((comp, dev))
+    }
+
+    fn queues_for(&self, _device: &Device) -> usize {
+        1
+    }
+}
+
+/// Dynamic *HEFT* (Expt 3): highest-ranked kernel onto the device with the
+/// earliest finishing time, using profiled execution times. Willing to wait
+/// for a busy-but-faster device (hence GEMMs stay on the GPU, Fig. 13(b)).
+/// Coarse-grained: one queue per device.
+#[derive(Debug, Default)]
+pub struct Heft;
+
+impl Policy for Heft {
+    fn name(&self) -> &'static str {
+        "heft"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        let comp = *view.frontier.first()?;
+        // argmin over ALL devices of EFT = max(now, est_free) + exec.
+        let mut best: Option<(DeviceId, f64)> = None;
+        for d in &view.platform.devices {
+            if d.num_queues == 0 {
+                continue;
+            }
+            let eft = view.est_free[d.id].max(view.now) + view.component_time(comp, d);
+            if best.map(|(_, t)| eft < t).unwrap_or(true) {
+                best = Some((d.id, eft));
+            }
+        }
+        let (dev, _) = best?;
+        // Dispatch only once the EFT-optimal device is actually free;
+        // otherwise block (the component keeps its frontier slot).
+        if view.available.contains(&dev) {
+            Some((comp, dev))
+        } else {
+            None
+        }
+    }
+
+    fn queues_for(&self, _device: &Device) -> usize {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::platform::DeviceType;
+    use crate::transformer::{cluster_by_head, transformer_dag};
+
+    fn view_fixture<'a>(
+        dag: &'a Dag,
+        part: &'a Partition,
+        platform: &'a Platform,
+        frontier: &'a [usize],
+        available: &'a [DeviceId],
+        est_free: &'a [f64],
+    ) -> SchedView<'a> {
+        SchedView {
+            now: 0.0,
+            frontier,
+            available,
+            platform,
+            partition: part,
+            dag,
+            est_free,
+            cost: &PaperCost,
+        }
+    }
+
+    #[test]
+    fn clustering_respects_device_preference() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 1); // head 0 on CPU
+        let platform = Platform::paper_testbed(2, 1);
+        let frontier = [0usize, 1];
+        let est = [0.0, 0.0];
+        // Only the CPU (device 1) available: must pick comp 0 (cpu-pref).
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est);
+        assert_eq!(Clustering.select(&v), Some((0, 1)));
+        // Only the GPU available: must skip comp 0 and pick comp 1.
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[0], &est);
+        assert_eq!(Clustering.select(&v), Some((1, 0)));
+        // Nothing available: block.
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[], &est);
+        assert_eq!(Clustering.select(&v), None);
+    }
+
+    #[test]
+    fn eager_ignores_preference() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0); // all GPU-pref
+        let platform = Platform::paper_testbed(1, 1);
+        let frontier = [0usize, 1];
+        let est = [0.0, 0.0];
+        // CPU-only availability: eager still dispatches there.
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est);
+        assert_eq!(Eager.select(&v), Some((0, 1)));
+        assert_eq!(Eager.queues_for(platform.device(0)), 1);
+    }
+
+    #[test]
+    fn heft_waits_for_faster_busy_device() {
+        let (dag, ios) = transformer_dag(1, 256, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(1, 1);
+        let frontier = [0usize];
+        // GPU busy for a short while; CPU idle. GEMM component is far
+        // faster on the GPU, so HEFT blocks rather than take the CPU.
+        let est = [0.005, 0.0];
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est);
+        assert_eq!(Heft.select(&v), None);
+        // Once the GPU frees, it dispatches there.
+        let est = [0.0, 0.0];
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[0, 1], &est);
+        assert_eq!(Heft.select(&v), Some((0, 0)));
+    }
+
+    #[test]
+    fn heft_takes_cpu_when_gpu_backlog_huge() {
+        let (dag, ios) = transformer_dag(1, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(1, 1);
+        let frontier = [0usize];
+        let est = [100.0, 0.0]; // GPU booked out for 100 s
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est);
+        assert_eq!(Heft.select(&v), Some((0, 1)));
+    }
+}

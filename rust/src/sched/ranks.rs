@@ -1,0 +1,68 @@
+//! Bottom-level rank computation at task-component granularity.
+
+use crate::cost::CostModel;
+use crate::graph::{bottom_level_ranks, Dag, Partition};
+use crate::platform::Platform;
+
+/// Per-kernel bottom-level ranks using HEFT's cross-device mean weights.
+pub fn kernel_ranks(dag: &Dag, platform: &Platform, cost: &dyn CostModel) -> Vec<f64> {
+    let devs: Vec<&crate::platform::Device> = platform.devices.iter().collect();
+    let weights: Vec<f64> = dag
+        .kernels
+        .iter()
+        .map(|k| cost.mean_time(k, &devs))
+        .collect();
+    bottom_level_ranks(dag, &weights)
+}
+
+/// Component rank = max bottom-level rank over the component's kernels
+/// (the paper annotates each component with the max rank of `FRONT(T)`;
+/// FRONT kernels dominate their component so the max over all members is
+/// identical, and also covers components with empty FRONT).
+pub fn component_ranks(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+) -> Vec<f64> {
+    let kr = kernel_ranks(dag, platform, cost);
+    partition
+        .components
+        .iter()
+        .map(|c| c.kernels.iter().map(|&k| kr[k]).fold(0.0, f64::max))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::AnalyticCost;
+    use crate::platform::{DeviceType, Platform};
+    use crate::transformer::{cluster_by_head, transformer_dag};
+
+    #[test]
+    fn head_components_have_equal_ranks() {
+        let (dag, ios) = transformer_dag(3, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let p = Platform::paper_testbed(3, 1);
+        let ranks = component_ranks(&dag, &part, &p, &AnalyticCost);
+        assert_eq!(ranks.len(), 3);
+        assert!((ranks[0] - ranks[1]).abs() < 1e-12);
+        assert!((ranks[1] - ranks[2]).abs() < 1e-12);
+        assert!(ranks[0] > 0.0);
+    }
+
+    #[test]
+    fn rank_dominated_by_critical_path() {
+        let (dag, ios) = transformer_dag(1, 128, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let p = Platform::paper_testbed(1, 1);
+        let kr = kernel_ranks(&dag, &p, &AnalyticCost);
+        // The Q-projection GEMM heads the longest chain: its rank must
+        // exceed the output GEMM's rank.
+        let io = &ios[0];
+        assert!(kr[io.kernels[0]] > kr[io.kernels[7]]);
+        let cr = component_ranks(&dag, &part, &p, &AnalyticCost);
+        assert!((cr[0] - kr[io.kernels[0]].max(kr[io.kernels[1]])).abs() < 1e-9);
+    }
+}

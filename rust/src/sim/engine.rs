@@ -1,0 +1,886 @@
+//! The event-driven execution engine.
+//!
+//! Processor-sharing kernels don't have fixed completion times (speeds
+//! change whenever the running set changes), so the loop alternates:
+//! advance all running kernels to the next event instant, deduct progress,
+//! then handle every event due at that instant.
+
+use crate::cost::{contention, CostModel};
+use crate::error::{Error, Result};
+use crate::graph::{Dag, KernelId, Partition};
+use crate::platform::{DeviceId, Platform};
+use crate::queue::{setup_cq, CmdId, CommandKind, CommandQueues};
+use crate::sched::{component_ranks, Policy, SchedView};
+use crate::trace::{Lane, Span, Trace};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+/// Simulation tuning knobs beyond what [`Platform`] carries.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Host-starvation model for the *asynchronous* callback path: when the
+    /// CPU device is busy running kernels at callback time, the callback
+    /// thread cannot be scheduled until the OpenCL CPU driver yields cores.
+    /// The stall is modeled as this fraction of the largest remaining CPU
+    /// kernel time (the paper's Fig. 13(a) analysis: "either the master
+    /// thread running schedule is swapped out ... or there are not enough
+    /// resources to spawn the thread for running the callback function").
+    pub host_starvation_fraction: f64,
+    /// Round-robin interference efficiency once a device is oversubscribed
+    /// (ablation knob; default [`contention::CONTENTION_EFFICIENCY`]).
+    pub contention_efficiency: f64,
+    /// Hard cap on simulated events (runaway guard).
+    pub max_events: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            host_starvation_fraction: 0.5,
+            contention_efficiency: contention::CONTENTION_EFFICIENCY,
+            max_events: 4_000_000,
+        }
+    }
+}
+
+/// Result of one simulated schedule.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Time the last command completed (the paper's Gantt makespan).
+    pub makespan: f64,
+    pub trace: Trace,
+    /// Policy name that produced this schedule.
+    pub policy: String,
+    /// Per-component completion times.
+    pub component_finish: Vec<f64>,
+    /// Which device each component ran on.
+    pub component_device: Vec<DeviceId>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum CmdState {
+    Pending,
+    Issued,
+    Done,
+}
+
+struct Dispatch {
+    cq: CommandQueues,
+    device: DeviceId,
+    /// Commands become issuable after this instant (select + setup_cq).
+    ready_at: f64,
+    state: Vec<CmdState>,
+    /// Next unissued index per queue (in-order execution).
+    queue_next: Vec<usize>,
+    cmds_remaining: usize,
+    /// Remaining commands per kernel (callback firing condition).
+    kernel_cmds_left: Vec<(KernelId, usize)>,
+    /// Kernels with registered callbacks not yet fired.
+    callbacks_left: usize,
+    /// Precomputed callback classification (§Perf: recomputing FRONT/END
+    /// per command completion dominated the simulator profile).
+    cb_kernels: Vec<KernelId>,
+    async_kernels: Vec<KernelId>,
+}
+
+struct Run {
+    disp: usize,
+    cmd: CmdId,
+    kernel: KernelId,
+    device: DeviceId,
+    queue: usize,
+    /// Remaining work in solo-seconds.
+    remaining: f64,
+    occupancy: f64,
+    started: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum EvKind {
+    /// setup_cq finished; dispatch commands may issue (the id is carried
+    /// for trace/debug symmetry; issue_phase scans ready dispatches).
+    #[allow(dead_code)]
+    DispatchReady(usize),
+    /// A host-side (CPU shared-memory) transfer completed.
+    TransferDone { disp: usize, cmd: CmdId },
+    /// The DMA copy engine finished its current transfer.
+    CopyDone { engine: usize },
+    /// A kernel's completion callback ran on the host.
+    Callback { disp: usize, kernel: KernelId },
+}
+
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&o.t)
+            .then_with(|| self.seq.cmp(&o.seq))
+    }
+}
+
+struct CopyEngine {
+    /// FIFO of queued transfers.
+    queue: VecDeque<(usize, CmdId)>,
+    /// Currently transferring, if any.
+    current: Option<(usize, CmdId)>,
+}
+
+/// Simulate `policy` scheduling `partition` of `dag` onto `platform`.
+pub fn simulate(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &SimConfig,
+) -> Result<SimResult> {
+    Engine::new(dag, partition, platform, cost, policy, cfg)?.run()
+}
+
+struct Engine<'a> {
+    dag: &'a Dag,
+    partition: &'a Partition,
+    platform: &'a Platform,
+    cost: &'a dyn CostModel,
+    policy: &'a mut dyn Policy,
+    cfg: &'a SimConfig,
+
+    now: f64,
+    seq: u64,
+    heap: BinaryHeap<Reverse<Ev>>,
+    trace: Trace,
+
+    // Scheduler state (Algorithm 1).
+    frontier: Vec<usize>,
+    comp_rank: Vec<f64>,
+    available: Vec<DeviceId>,
+    est_free: Vec<f64>,
+    /// Outstanding external predecessor kernels per component.
+    ext_preds_left: Vec<usize>,
+    /// comp list each kernel unblocks when globally finished.
+    unblocks: Vec<Vec<usize>>,
+    kernel_finished: Vec<bool>,
+    comp_dispatched: Vec<bool>,
+    comp_finish: Vec<f64>,
+    comp_device: Vec<DeviceId>,
+    comps_done: usize,
+
+    // Execution state.
+    dispatches: Vec<Dispatch>,
+    runs: Vec<Run>,
+    copy_engines: Vec<CopyEngine>,
+    last_cmd_done: f64,
+}
+
+const EPS: f64 = 1e-12;
+
+impl<'a> Engine<'a> {
+    fn new(
+        dag: &'a Dag,
+        partition: &'a Partition,
+        platform: &'a Platform,
+        cost: &'a dyn CostModel,
+        policy: &'a mut dyn Policy,
+        cfg: &'a SimConfig,
+    ) -> Result<Self> {
+        let ncomp = partition.components.len();
+        // Kernel-level unblock lists: producer kernel -> consumer components.
+        let mut unblocks: Vec<Vec<usize>> = vec![Vec::new(); dag.num_kernels()];
+        let mut ext_pred_sets: Vec<Vec<KernelId>> = vec![Vec::new(); ncomp];
+        for &(src, dst) in &dag.buffer_edges {
+            let pk = dag.buffers[src].kernel;
+            let ck = dag.buffers[dst].kernel;
+            let pc = partition.assignment[pk];
+            let cc = partition.assignment[ck];
+            if pc != cc {
+                if !unblocks[pk].contains(&cc) {
+                    unblocks[pk].push(cc);
+                }
+                if !ext_pred_sets[cc].contains(&pk) {
+                    ext_pred_sets[cc].push(pk);
+                }
+            }
+        }
+        let ext_preds_left: Vec<usize> = ext_pred_sets.iter().map(|s| s.len()).collect();
+        let comp_rank = component_ranks(dag, partition, platform, cost);
+        let mut frontier: Vec<usize> = (0..ncomp).filter(|&c| ext_preds_left[c] == 0).collect();
+        frontier.sort_by(|&a, &b| comp_rank[b].total_cmp(&comp_rank[a]));
+        let available: Vec<DeviceId> = platform
+            .devices
+            .iter()
+            .filter(|d| d.num_queues > 0)
+            .map(|d| d.id)
+            .collect();
+        if available.is_empty() {
+            return Err(Error::Sched("no device has command queues".into()));
+        }
+        Ok(Engine {
+            dag,
+            partition,
+            platform,
+            cost,
+            policy,
+            cfg,
+            now: 0.0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            trace: Trace::default(),
+            frontier,
+            comp_rank,
+            available,
+            est_free: vec![0.0; platform.devices.len()],
+            ext_preds_left,
+            unblocks,
+            kernel_finished: vec![false; dag.num_kernels()],
+            comp_dispatched: vec![false; ncomp],
+            comp_finish: vec![f64::NAN; ncomp],
+            comp_device: vec![usize::MAX; ncomp],
+            comps_done: 0,
+            dispatches: Vec::new(),
+            runs: Vec::new(),
+            copy_engines: (0..platform.copy_engines.max(1))
+                .map(|_| CopyEngine {
+                    queue: VecDeque::new(),
+                    current: None,
+                })
+                .collect(),
+            last_cmd_done: 0.0,
+        })
+    }
+
+    fn push_ev(&mut self, t: f64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Ev {
+            t,
+            seq: self.seq,
+            kind,
+        }));
+    }
+
+    // ---------------------------------------------------------- scheduling
+
+    fn scheduler_phase(&mut self) {
+        loop {
+            let view = SchedView {
+                now: self.now,
+                frontier: &self.frontier,
+                available: &self.available,
+                platform: self.platform,
+                partition: self.partition,
+                dag: self.dag,
+                est_free: &self.est_free,
+                cost: self.cost,
+            };
+            let Some((comp, dev)) = self.policy.select(&view) else {
+                break;
+            };
+            self.dispatch(comp, dev);
+        }
+    }
+
+    fn dispatch(&mut self, comp: usize, dev: DeviceId) {
+        assert!(!self.comp_dispatched[comp], "component {comp} re-dispatched");
+        self.comp_dispatched[comp] = true;
+        self.frontier.retain(|&c| c != comp);
+        self.available.retain(|&d| d != dev);
+        self.comp_device[comp] = dev;
+
+        // setup_cq runs on a child thread: commands are issuable after the
+        // per-command enqueue overhead has elapsed.
+        let mut device = self.platform.device(dev).clone();
+        device.num_queues = self.policy.queues_for(&device);
+        let cq = setup_cq(self.dag, self.partition, comp, &device);
+        let setup = cq.num_commands() as f64 * self.platform.enqueue_overhead;
+        let ready_at = self.now + setup;
+        self.trace.push(Span {
+            label: format!("setup c{comp}"),
+            lane: Lane::Host,
+            start: self.now,
+            end: ready_at,
+            cmd: None,
+            kernel: None,
+        });
+
+        // Commit an EFT estimate for HEFT's est_free bookkeeping.
+        let solo: f64 = self.partition.components[comp]
+            .kernels
+            .iter()
+            .map(|&k| self.cost.exec_time(&self.dag.kernels[k], &device))
+            .sum();
+        let transfers: f64 = cq
+            .commands
+            .iter()
+            .filter_map(|c| c.transfer_buffer())
+            .map(|b| self.platform.transfer_time(dev, self.dag.buffers[b].size_bytes))
+            .sum();
+        self.est_free[dev] = ready_at + solo + transfers + self.platform.callback_latency;
+
+        let mut kernel_cmds_left: Vec<(KernelId, usize)> = Vec::new();
+        for c in &cq.commands {
+            match kernel_cmds_left.iter_mut().find(|(k, _)| *k == c.kernel) {
+                Some((_, n)) => *n += 1,
+                None => kernel_cmds_left.push((c.kernel, 1)),
+            }
+        }
+        let cb_kernels = self.partition.callback_kernels(self.dag, comp);
+        let async_kernels = self.partition.async_callback_kernels(self.dag, comp);
+        let d = Dispatch {
+            state: vec![CmdState::Pending; cq.num_commands()],
+            queue_next: vec![0; cq.queues.len()],
+            cmds_remaining: cq.num_commands(),
+            kernel_cmds_left,
+            callbacks_left: cb_kernels.len(),
+            cb_kernels,
+            async_kernels,
+            cq,
+            device: dev,
+            ready_at,
+        };
+        let idx = self.dispatches.len();
+        self.dispatches.push(d);
+        self.push_ev(ready_at, EvKind::DispatchReady(idx));
+    }
+
+    // ------------------------------------------------------------- issuing
+
+    /// Issue every currently eligible command. In-order queues: only each
+    /// queue's head candidate is considered; cross-queue deps must be Done.
+    fn issue_phase(&mut self) {
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            for di in 0..self.dispatches.len() {
+                // §Perf: skip drained or not-yet-ready dispatches — dynamic
+                // policies accumulate one dispatch per kernel, and scanning
+                // finished ones made issue_phase O(kernels) per event.
+                if self.dispatches[di].cmds_remaining == 0
+                    || self.dispatches[di].ready_at > self.now + EPS
+                {
+                    continue;
+                }
+                for q in 0..self.dispatches[di].cq.queues.len() {
+                    // In-order queue: a command may issue only once every
+                    // earlier command in the same queue has *completed*.
+                    loop {
+                        let d = &self.dispatches[di];
+                        let Some(&cmd) = d.cq.queues[q].get(d.queue_next[q]) else {
+                            break;
+                        };
+                        match d.state[cmd] {
+                            CmdState::Done => {
+                                self.dispatches[di].queue_next[q] += 1;
+                                continue;
+                            }
+                            CmdState::Issued => break, // head still running
+                            CmdState::Pending => {}
+                        }
+                        let deps_ok = d
+                            .cq
+                            .deps_of(cmd)
+                            .iter()
+                            .all(|&dep| d.state[dep] == CmdState::Done);
+                        if !deps_ok || !self.try_issue(di, cmd) {
+                            break;
+                        }
+                        progressed = true;
+                        break; // issued: wait for completion before the next
+                    }
+                }
+            }
+        }
+    }
+
+    /// Attempt to issue one command; false if a resource gate blocks it.
+    fn try_issue(&mut self, di: usize, cmd: CmdId) -> bool {
+        let d = &self.dispatches[di];
+        let dev_id = d.device;
+        let kind = d.cq.commands[cmd].kind;
+        let kernel = d.cq.commands[cmd].kernel;
+        let queue = d.cq.commands[cmd].queue;
+        match kind {
+            CommandKind::NdRange => {
+                // Hardware concurrency cap (Hyper-Q / CPU fission width).
+                let running = self
+                    .runs
+                    .iter()
+                    .filter(|r| r.device == dev_id)
+                    .count();
+                if running >= self.platform.device(dev_id).hw_queues {
+                    return false;
+                }
+                let device = self.platform.device(dev_id);
+                let node = &self.dag.kernels[kernel];
+                self.runs.push(Run {
+                    disp: di,
+                    cmd,
+                    kernel,
+                    device: dev_id,
+                    queue,
+                    remaining: self.cost.exec_time(node, device),
+                    occupancy: contention::occupancy(node, device),
+                    started: self.now,
+                });
+                self.dispatches[di].state[cmd] = CmdState::Issued;
+                true
+            }
+            CommandKind::Write { buffer } | CommandKind::Read { buffer } => {
+                self.dispatches[di].state[cmd] = CmdState::Issued;
+                if self.platform.device(dev_id).shares_host_memory {
+                    // Zero-copy map: completes after a token latency, no DMA.
+                    let t = self.now + self.platform.transfer_time(dev_id, 0);
+                    self.push_ev(t, EvKind::TransferDone { disp: di, cmd });
+                } else {
+                    let _ = buffer;
+                    self.copy_engines[0].queue.push_back((di, cmd));
+                    self.pump_copy_engine(0);
+                }
+                true
+            }
+        }
+    }
+
+    fn pump_copy_engine(&mut self, e: usize) {
+        if self.copy_engines[e].current.is_some() {
+            return;
+        }
+        let Some((di, cmd)) = self.copy_engines[e].queue.pop_front() else {
+            return;
+        };
+        let d = &self.dispatches[di];
+        let buffer = d.cq.commands[cmd].transfer_buffer().expect("transfer cmd");
+        let bytes = self.dag.buffers[buffer].size_bytes;
+        let dt = self.platform.transfer_time(d.device, bytes);
+        let dir = match d.cq.commands[cmd].kind {
+            CommandKind::Write { .. } => "w",
+            _ => "r",
+        };
+        self.trace.push(Span {
+            label: format!("{dir}{buffer}"),
+            lane: Lane::CopyEngine { idx: e },
+            start: self.now,
+            end: self.now + dt,
+            cmd: Some(cmd),
+            kernel: Some(d.cq.commands[cmd].kernel),
+        });
+        self.copy_engines[e].current = Some((di, cmd));
+        self.push_ev(self.now + dt, EvKind::CopyDone { engine: e });
+    }
+
+    // ---------------------------------------------------------- completion
+
+    fn command_done(&mut self, di: usize, cmd: CmdId) {
+        let d = &mut self.dispatches[di];
+        debug_assert_eq!(d.state[cmd], CmdState::Issued);
+        d.state[cmd] = CmdState::Done;
+        d.cmds_remaining -= 1;
+        self.last_cmd_done = self.last_cmd_done.max(self.now);
+        let kernel = d.cq.commands[cmd].kernel;
+        let entry = d
+            .kernel_cmds_left
+            .iter_mut()
+            .find(|(k, _)| *k == kernel)
+            .expect("kernel tracked");
+        entry.1 -= 1;
+        let kernel_complete = entry.1 == 0;
+        if kernel_complete {
+            let tracked = d.cb_kernels.contains(&kernel);
+            if tracked {
+                let needs_async = d.async_kernels.contains(&kernel);
+                let delay = if needs_async {
+                    // clSetEventCallback path: base thread latency plus host
+                    // starvation while the CPU device crunches kernels
+                    // (Fig. 13(a)): the callback thread waits for a share of
+                    // the largest remaining CPU kernel.
+                    let cpu_remaining = self
+                        .runs
+                        .iter()
+                        .filter(|r| {
+                            self.platform.device(r.device).dtype
+                                == crate::platform::DeviceType::Cpu
+                        })
+                        .map(|r| r.remaining)
+                        .fold(0.0, f64::max);
+                    self.platform.callback_latency
+                        + self.cfg.host_starvation_fraction * cpu_remaining
+                } else {
+                    // Blocking-wait path (no inter-edge reads): the dispatch
+                    // child thread wakes straight out of clFinish — the
+                    // clustering advantage (§5 comparative evaluation).
+                    self.platform.wait_latency
+                };
+                self.push_ev(self.now + delay, EvKind::Callback { disp: di, kernel });
+            } else {
+                // IN(T) kernels finish silently (intra deps only).
+                self.kernel_finished[kernel] = true;
+            }
+        }
+    }
+
+    fn handle_callback(&mut self, di: usize, kernel: KernelId) {
+        self.kernel_finished[kernel] = true;
+        let comp = self.dispatches[di].cq.component;
+        // update_task_queue: successors that became ready join F.
+        let unblocked = self.unblocks[kernel].clone();
+        for uc in unblocked {
+            // A component is ready when all external producer kernels done.
+            self.ext_preds_left[uc] -= 1;
+            if self.ext_preds_left[uc] == 0 && !self.comp_dispatched[uc] {
+                self.frontier.push(uc);
+                let ranks = &self.comp_rank;
+                self.frontier
+                    .sort_by(|&a, &b| ranks[b].total_cmp(&ranks[a]));
+            }
+        }
+        // return_device once the whole component has finished.
+        let d = &mut self.dispatches[di];
+        d.callbacks_left -= 1;
+        if d.callbacks_left == 0 {
+            debug_assert_eq!(d.cmds_remaining, 0, "callbacks after all commands");
+            let dev = d.device;
+            self.available.push(dev);
+            self.est_free[dev] = self.now;
+            self.comp_finish[comp] = self.now;
+            self.comps_done += 1;
+        }
+    }
+
+    // ------------------------------------------------------------- kernels
+
+    /// Per-run speed multipliers (relative to solo execution) per device.
+    fn run_rates(&self) -> Vec<f64> {
+        let mut rates = vec![1.0; self.runs.len()];
+        for dev in 0..self.platform.devices.len() {
+            let idxs: Vec<usize> = (0..self.runs.len())
+                .filter(|&i| self.runs[i].device == dev)
+                .collect();
+            if idxs.is_empty() {
+                continue;
+            }
+            let us: Vec<f64> = idxs.iter().map(|&i| self.runs[i].occupancy).collect();
+            let speeds = contention::shared_speeds_with(&us, self.cfg.contention_efficiency);
+            for (j, &i) in idxs.iter().enumerate() {
+                rates[i] = speeds[j] / us[j];
+            }
+        }
+        rates
+    }
+
+    fn next_kernel_completion(&self, rates: &[f64]) -> Option<f64> {
+        self.runs
+            .iter()
+            .zip(rates)
+            .map(|(r, &rate)| self.now + r.remaining / rate)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    // ------------------------------------------------------------ main loop
+
+    fn run(mut self) -> Result<SimResult> {
+        let total = self.partition.components.len();
+        let mut events = 0usize;
+        while self.comps_done < total {
+            events += 1;
+            if events > self.cfg.max_events {
+                return Err(Error::Sched(format!(
+                    "simulation exceeded {} events (deadlock?)",
+                    self.cfg.max_events
+                )));
+            }
+            self.scheduler_phase();
+            self.issue_phase();
+            if self.comps_done == total {
+                break;
+            }
+
+            let rates = self.run_rates();
+            let t_kernel = self.next_kernel_completion(&rates);
+            let t_heap = self.heap.peek().map(|Reverse(e)| e.t);
+            let t_next = match (t_kernel, t_heap) {
+                (Some(a), Some(b)) => a.min(b),
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (None, None) => {
+                    return Err(Error::Sched(
+                        "simulation stalled: no events, no running kernels".into(),
+                    ))
+                }
+            };
+            debug_assert!(t_next >= self.now - EPS, "time went backwards");
+            let dt = (t_next - self.now).max(0.0);
+
+            // Advance all running kernels by dt at their current rates.
+            for (r, &rate) in self.runs.iter_mut().zip(&rates) {
+                r.remaining -= dt * rate;
+            }
+            self.now = t_next;
+
+            // Retire kernels that finished exactly now.
+            let mut finished: Vec<usize> = (0..self.runs.len())
+                .filter(|&i| self.runs[i].remaining <= 1e-9)
+                .collect();
+            finished.sort_unstable_by(|a, b| b.cmp(a));
+            for i in finished {
+                let r = self.runs.swap_remove(i);
+                let name = &self.dag.kernels[r.kernel].name;
+                self.trace.push(Span {
+                    label: format!("{name}{}", r.kernel),
+                    lane: Lane::Device {
+                        dev: r.device,
+                        slot: r.queue,
+                    },
+                    start: r.started,
+                    end: self.now,
+                    cmd: Some(r.cmd),
+                    kernel: Some(r.kernel),
+                });
+                self.command_done(r.disp, r.cmd);
+            }
+
+            // Handle all heap events due now.
+            while let Some(Reverse(e)) = self.heap.peek() {
+                if e.t > self.now + EPS {
+                    break;
+                }
+                let Reverse(e) = self.heap.pop().unwrap();
+                match e.kind {
+                    EvKind::DispatchReady(_) => { /* issue phase picks it up */ }
+                    EvKind::TransferDone { disp, cmd } => self.command_done(disp, cmd),
+                    EvKind::CopyDone { engine } => {
+                        let (di, cmd) = self.copy_engines[engine]
+                            .current
+                            .take()
+                            .expect("engine busy");
+                        self.command_done(di, cmd);
+                        self.pump_copy_engine(engine);
+                    }
+                    EvKind::Callback { disp, kernel } => self.handle_callback(disp, kernel),
+                }
+            }
+        }
+
+        Ok(SimResult {
+            makespan: self.last_cmd_done,
+            trace: self.trace,
+            policy: self.policy.name().to_string(),
+            component_finish: self.comp_finish,
+            component_device: self.comp_device,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::platform::DeviceType;
+    use crate::sched::{Clustering, Eager, Heft};
+    use crate::transformer::{cluster_by_head, head_dag, transformer_dag, vadd_vsin_dag};
+
+    fn sim_clustering(q_gpu: usize, q_cpu: usize, heads: usize, beta: u64, h_cpu: usize) -> SimResult {
+        let (dag, ios) = transformer_dag(heads, beta, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, h_cpu);
+        let platform = Platform::paper_testbed(q_gpu, q_cpu);
+        let mut pol = Clustering;
+        simulate(&dag, &part, &platform, &PaperCost, &mut pol, &SimConfig::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn single_head_coarse_near_paper_105ms() {
+        // Fig. 4: one head, β=256, single GPU queue => ≈105 ms.
+        let r = sim_clustering(1, 0, 1, 256, 0);
+        assert!(
+            r.makespan > 0.085 && r.makespan < 0.125,
+            "expected ≈105ms, got {:.1}ms",
+            r.makespan * 1e3
+        );
+    }
+
+    #[test]
+    fn fine_grained_beats_coarse_by_paper_margin() {
+        // Fig. 5: 3 queues => ≈8–17% faster than 1 queue.
+        let coarse = sim_clustering(1, 0, 1, 256, 0).makespan;
+        let fine = sim_clustering(3, 0, 1, 256, 0).makespan;
+        let speedup = coarse / fine;
+        assert!(
+            speedup > 1.05 && speedup < 1.30,
+            "speedup {speedup:.3} out of paper range"
+        );
+    }
+
+    #[test]
+    fn fine_grained_overlaps_kernels_and_transfers() {
+        let r = sim_clustering(3, 0, 1, 256, 0);
+        assert!(r.trace.device_overlap(0) > 0.0, "no kernel concurrency");
+        assert!(r.trace.copy_compute_overlap(0) > 0.0, "no transfer overlap");
+        // Coarse single queue: no kernel concurrency possible.
+        let c = sim_clustering(1, 0, 1, 256, 0);
+        assert_eq!(c.trace.device_overlap(0), 0.0);
+    }
+
+    #[test]
+    fn concurrent_kernels_individually_slower() {
+        // Paper §2.1: individual times increase under interleaving.
+        let coarse = sim_clustering(1, 0, 1, 256, 0);
+        let fine = sim_clustering(3, 0, 1, 256, 0);
+        let max_span = |r: &SimResult| -> f64 {
+            r.trace
+                .spans
+                .iter()
+                .filter(|s| matches!(s.lane, Lane::Device { .. }))
+                .map(|s| s.end - s.start)
+                .fold(0.0, f64::max)
+        };
+        assert!(max_span(&fine) > max_span(&coarse) * 1.05);
+    }
+
+    #[test]
+    fn offloading_one_head_helps_at_large_h() {
+        // Fig. 11: h_cpu=1 beats all-GPU for H > 10.
+        let all_gpu = sim_clustering(3, 1, 12, 256, 0).makespan;
+        let one_cpu = sim_clustering(3, 1, 12, 256, 1).makespan;
+        assert!(
+            one_cpu < all_gpu,
+            "offload should help at H=12: {one_cpu} vs {all_gpu}"
+        );
+        // ... but NOT at H=4.
+        let all_gpu4 = sim_clustering(3, 1, 4, 256, 0).makespan;
+        let one_cpu4 = sim_clustering(3, 1, 4, 256, 1).makespan;
+        assert!(one_cpu4 > all_gpu4, "offload should hurt at H=4");
+    }
+
+    #[test]
+    fn clustering_beats_eager_in_paper_range() {
+        // Expt 2 config: H=16, best clustering mapping (h_cpu = 1).
+        let (dag, ios) = transformer_dag(16, 256, DeviceType::Gpu);
+        let platform = Platform::paper_testbed(3, 1);
+        let part = cluster_by_head(&dag, &ios, 1);
+        let cl = simulate(&dag, &part, &platform, &PaperCost, &mut Clustering, &SimConfig::default())
+            .unwrap();
+        let singles = Partition::singletons(&dag);
+        let platform1 = Platform::paper_testbed(1, 1);
+        let eg = simulate(&dag, &singles, &platform1, &PaperCost, &mut Eager, &SimConfig::default())
+            .unwrap();
+        let speedup = eg.makespan / cl.makespan;
+        assert!(
+            speedup > 1.3 && speedup < 4.5,
+            "clustering vs eager = {speedup:.2}x (paper: 1.4–3.4x)"
+        );
+    }
+
+    #[test]
+    fn heft_between_eager_and_clustering() {
+        let (dag, ios) = transformer_dag(8, 256, DeviceType::Gpu);
+        let platform1 = Platform::paper_testbed(1, 1);
+        let singles = Partition::singletons(&dag);
+        let cfg = SimConfig::default();
+        let eg = simulate(&dag, &singles, &platform1, &PaperCost, &mut Eager, &cfg).unwrap();
+        let hf = simulate(&dag, &singles, &platform1, &PaperCost, &mut Heft, &cfg).unwrap();
+        let part = cluster_by_head(&dag, &ios, 1);
+        let platform = Platform::paper_testbed(3, 1);
+        let cl = simulate(&dag, &part, &platform, &PaperCost, &mut Clustering, &cfg).unwrap();
+        assert!(hf.makespan < eg.makespan, "heft should beat eager");
+        assert!(cl.makespan < hf.makespan, "clustering should beat heft");
+    }
+
+    #[test]
+    fn heft_keeps_gemms_on_gpu() {
+        let (dag, _) = transformer_dag(4, 256, DeviceType::Gpu);
+        let singles = Partition::singletons(&dag);
+        let platform = Platform::paper_testbed(1, 1);
+        let r = simulate(&dag, &singles, &platform, &PaperCost, &mut Heft, &SimConfig::default())
+            .unwrap();
+        for (c, &dev) in r.component_device.iter().enumerate() {
+            let k = singles.components[c].kernels[0];
+            if dag.kernels[k].name == "gemm" {
+                assert_eq!(
+                    platform.device(dev).dtype,
+                    DeviceType::Gpu,
+                    "HEFT put GEMM {k} on the CPU"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eager_puts_some_gemms_on_cpu() {
+        // Fig. 13(a): greedy device grabbing strands GEMMs on the CPU.
+        let (dag, _) = transformer_dag(4, 256, DeviceType::Gpu);
+        let singles = Partition::singletons(&dag);
+        let platform = Platform::paper_testbed(1, 1);
+        let r = simulate(&dag, &singles, &platform, &PaperCost, &mut Eager, &SimConfig::default())
+            .unwrap();
+        let cpu_gemms = r
+            .component_device
+            .iter()
+            .enumerate()
+            .filter(|&(c, &dev)| {
+                let k = singles.components[c].kernels[0];
+                dag.kernels[k].name == "gemm" && platform.device(dev).dtype == DeviceType::Cpu
+            })
+            .count();
+        assert!(cpu_gemms > 0, "eager never used the CPU?");
+    }
+
+    #[test]
+    fn makespan_at_least_critical_path() {
+        let (dag, ios) = head_dag(128, DeviceType::Gpu);
+        let platform = Platform::paper_testbed(3, 0);
+        let part = cluster_by_head(&dag, std::slice::from_ref(&ios), 0);
+        let r = simulate(&dag, &part, &platform, &PaperCost, &mut Clustering, &SimConfig::default())
+            .unwrap();
+        let gpu = platform.device(0);
+        let weights: Vec<f64> = dag
+            .kernels
+            .iter()
+            .map(|k| PaperCost.exec_time(k, gpu))
+            .collect();
+        let cp = crate::graph::rank::critical_path(&dag, &weights);
+        assert!(r.makespan >= cp - 1e-9, "makespan {} < cp {}", r.makespan, cp);
+    }
+
+    #[test]
+    fn small_chain_runs_and_orders() {
+        let (dag, ks) = vadd_vsin_dag(4096);
+        let singles = Partition::singletons(&dag);
+        let platform = Platform::paper_testbed(2, 1);
+        let r = simulate(&dag, &singles, &platform, &PaperCost, &mut Clustering, &SimConfig::default())
+            .unwrap();
+        // vsin must start after vadd's component finished (inter dep).
+        let span_of = |k: usize| {
+            r.trace
+                .spans
+                .iter()
+                .find(|s| s.kernel == Some(k) && matches!(s.lane, Lane::Device { .. }))
+                .unwrap()
+                .clone()
+        };
+        assert!(span_of(ks[1]).start >= span_of(ks[0]).end);
+    }
+
+    #[test]
+    fn zero_queue_platform_errors() {
+        let (dag, _) = vadd_vsin_dag(4096);
+        let singles = Partition::singletons(&dag);
+        let platform = Platform::paper_testbed(0, 0);
+        let res = simulate(&dag, &singles, &platform, &PaperCost, &mut Clustering, &SimConfig::default());
+        assert!(res.is_err());
+    }
+}

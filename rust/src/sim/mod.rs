@@ -1,0 +1,13 @@
+//! Discrete-event simulator of the paper's heterogeneous testbed.
+//!
+//! Executes Algorithm 1 end to end over virtual time: the scheduling loop
+//! (frontier/device-set/select), `setup_cq` latency, in-order command
+//! queues with cross-queue event waits, the single DMA copy engine, the
+//! processor-sharing kernel-concurrency contention model
+//! ([`crate::cost::contention`]), and callback latency for completion
+//! notification — the five mechanisms that generate every effect the
+//! paper measures (Figs. 4, 5, 11, 12, 13).
+
+pub mod engine;
+
+pub use engine::{simulate, SimConfig, SimResult};

@@ -1,0 +1,166 @@
+//! Guidance-parameter expression evaluator.
+//!
+//! The paper's spec files size buffers with symbolic expressions such as
+//! `"M*N"` or `"M*K"`, resolved from user-supplied symbols at dispatch time
+//! (Fig. 8). Grammar: `+ - * /` with parentheses, integer literals, and
+//! `[A-Za-z_][A-Za-z0-9_]*` symbols; standard precedence.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Evaluate `text` under `symbols`. Returns an error on unknown symbols,
+/// malformed syntax, or division by zero.
+pub fn eval_expr(text: &str, symbols: &HashMap<String, i64>) -> Result<i64> {
+    let mut p = P {
+        b: text.as_bytes(),
+        i: 0,
+        symbols,
+    };
+    p.ws();
+    let v = p.add_expr()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(Error::Spec(format!(
+            "trailing characters in expression '{text}'"
+        )));
+    }
+    Ok(v)
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+    symbols: &'a HashMap<String, i64>,
+}
+
+impl<'a> P<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn add_expr(&mut self) -> Result<i64> {
+        let mut v = self.mul_expr()?;
+        loop {
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b'+') => {
+                    self.i += 1;
+                    v += self.mul_expr()?;
+                }
+                Some(b'-') => {
+                    self.i += 1;
+                    v -= self.mul_expr()?;
+                }
+                _ => return Ok(v),
+            }
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<i64> {
+        let mut v = self.atom()?;
+        loop {
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b'*') => {
+                    self.i += 1;
+                    v *= self.atom()?;
+                }
+                Some(b'/') => {
+                    self.i += 1;
+                    let d = self.atom()?;
+                    if d == 0 {
+                        return Err(Error::Spec("division by zero in expression".into()));
+                    }
+                    v /= d;
+                }
+                _ => return Ok(v),
+            }
+        }
+    }
+
+    fn atom(&mut self) -> Result<i64> {
+        self.ws();
+        match self.b.get(self.i) {
+            Some(b'(') => {
+                self.i += 1;
+                let v = self.add_expr()?;
+                self.ws();
+                if self.b.get(self.i) != Some(&b')') {
+                    return Err(Error::Spec("unbalanced parenthesis".into()));
+                }
+                self.i += 1;
+                Ok(v)
+            }
+            Some(b'-') => {
+                self.i += 1;
+                Ok(-self.atom()?)
+            }
+            Some(c) if c.is_ascii_digit() => {
+                let start = self.i;
+                while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+                    self.i += 1;
+                }
+                std::str::from_utf8(&self.b[start..self.i])
+                    .unwrap()
+                    .parse()
+                    .map_err(|_| Error::Spec("bad integer literal".into()))
+            }
+            Some(c) if c.is_ascii_alphabetic() || *c == b'_' => {
+                let start = self.i;
+                while self.i < self.b.len()
+                    && (self.b[self.i].is_ascii_alphanumeric() || self.b[self.i] == b'_')
+                {
+                    self.i += 1;
+                }
+                let name = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+                self.symbols.get(name).copied().ok_or_else(|| {
+                    Error::Spec(format!("unknown symbol '{name}' in expression"))
+                })
+            }
+            _ => Err(Error::Spec("expected expression atom".into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn syms(pairs: &[(&str, i64)]) -> HashMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn paper_style_sizes() {
+        let s = syms(&[("M", 256), ("N", 128), ("K", 64)]);
+        assert_eq!(eval_expr("M*N", &s).unwrap(), 256 * 128);
+        assert_eq!(eval_expr("M*K", &s).unwrap(), 256 * 64);
+        assert_eq!(eval_expr("M * N + K", &s).unwrap(), 256 * 128 + 64);
+    }
+
+    #[test]
+    fn precedence_and_parens() {
+        let s = syms(&[]);
+        assert_eq!(eval_expr("2+3*4", &s).unwrap(), 14);
+        assert_eq!(eval_expr("(2+3)*4", &s).unwrap(), 20);
+        assert_eq!(eval_expr("16/4/2", &s).unwrap(), 2);
+        assert_eq!(eval_expr("-3 + 5", &s).unwrap(), 2);
+    }
+
+    #[test]
+    fn errors() {
+        let s = syms(&[("M", 4)]);
+        assert!(eval_expr("M*", &s).is_err());
+        assert!(eval_expr("Q", &s).is_err());
+        assert!(eval_expr("4/0", &s).is_err());
+        assert!(eval_expr("(1", &s).is_err());
+        assert!(eval_expr("1 2", &s).is_err());
+    }
+
+    #[test]
+    fn plain_integers() {
+        assert_eq!(eval_expr("1024", &syms(&[])).unwrap(), 1024);
+    }
+}

@@ -1,0 +1,17 @@
+//! Design frontend: the JSON DAG specification file (paper §4A, Fig. 8).
+//!
+//! A spec bundles: kernel declarations (name, `dev` preference, NDRange
+//! geometry, buffer lists with ⟨type, size, pos⟩ tuples, variable args),
+//! buffer dependency edges `"ki,br -> kj,bs"`, the task-component partition
+//! `tc`, command-queue counts `cq`, and guidance-parameter symbols (the
+//! paper's `M*N`-style symbolic sizes).
+//!
+//! * [`expr`] — the symbolic-expression evaluator for guidance parameters.
+//! * [`parse`] — spec → ([`crate::graph::Dag`], [`crate::graph::Partition`],
+//!   queue counts).
+
+pub mod expr;
+pub mod parse;
+
+pub use expr::eval_expr;
+pub use parse::{ApplicationSpec, parse_spec};

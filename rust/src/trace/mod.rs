@@ -1,0 +1,266 @@
+//! Gantt-chart traces (the paper's Figs. 4, 5 and 13) plus overlap
+//! statistics used by the experiment harness and tests.
+
+use crate::json::Json;
+use crate::queue::CmdId;
+
+/// Resource lane a traced span executed on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Compute on device `dev`, hardware slot `slot`.
+    Device { dev: usize, slot: usize },
+    /// DMA copy engine `idx`.
+    CopyEngine { idx: usize },
+    /// Host scheduler thread activity (setup_cq, callbacks).
+    Host,
+}
+
+/// One executed span.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub label: String,
+    pub lane: Lane,
+    /// Start/end, seconds from t=0.
+    pub start: f64,
+    pub end: f64,
+    /// Originating command, if any.
+    pub cmd: Option<CmdId>,
+    /// Originating kernel id in the application DAG, if any.
+    pub kernel: Option<usize>,
+}
+
+/// A complete execution trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn push(&mut self, span: Span) {
+        self.spans.push(span);
+    }
+
+    /// Schedule makespan: latest span end.
+    pub fn makespan(&self) -> f64 {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Total busy time on a lane predicate.
+    pub fn busy_time(&self, pred: impl Fn(&Lane) -> bool) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| pred(&s.lane))
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Seconds during which ≥2 compute spans on device `dev` overlap —
+    /// the "fine-grained concurrency actually happened" metric.
+    pub fn device_overlap(&self, dev: usize) -> f64 {
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for s in &self.spans {
+            if let Lane::Device { dev: d, .. } = s.lane {
+                if d == dev {
+                    events.push((s.start, 1));
+                    events.push((s.end, -1));
+                }
+            }
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut depth = 0;
+        let mut last = 0.0;
+        let mut overlap = 0.0;
+        for (t, d) in events {
+            if depth >= 2 {
+                overlap += t - last;
+            }
+            depth += d;
+            last = t;
+        }
+        overlap
+    }
+
+    /// Seconds during which a compute span on `dev` overlaps a copy-engine
+    /// span — the transfer/compute interleaving metric (Fig. 5).
+    pub fn copy_compute_overlap(&self, dev: usize) -> f64 {
+        let mut total = 0.0;
+        for c in &self.spans {
+            if !matches!(c.lane, Lane::CopyEngine { .. }) {
+                continue;
+            }
+            for k in &self.spans {
+                if let Lane::Device { dev: d, .. } = k.lane {
+                    if d == dev {
+                        let lo = c.start.max(k.start);
+                        let hi = c.end.min(k.end);
+                        if hi > lo {
+                            total += hi - lo;
+                        }
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    /// Largest idle gap between consecutive compute spans on `dev` —
+    /// the paper's Fig. 13 "gaps between kernels" diagnostic.
+    pub fn max_gap(&self, dev: usize) -> f64 {
+        let mut spans: Vec<(f64, f64)> = self
+            .spans
+            .iter()
+            .filter_map(|s| match s.lane {
+                Lane::Device { dev: d, .. } if d == dev => Some((s.start, s.end)),
+                _ => None,
+            })
+            .collect();
+        if spans.is_empty() {
+            return 0.0;
+        }
+        spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut frontier = spans[0].1;
+        let mut gap = 0.0f64;
+        for &(s, e) in &spans[1..] {
+            if s > frontier {
+                gap = gap.max(s - frontier);
+            }
+            frontier = frontier.max(e);
+        }
+        gap
+    }
+
+    /// Render an ASCII Gantt chart with `width` columns.
+    pub fn ascii(&self, width: usize) -> String {
+        let make = self.makespan();
+        if make <= 0.0 || self.spans.is_empty() {
+            return String::from("(empty trace)\n");
+        }
+        let mut lanes: Vec<Lane> = Vec::new();
+        for s in &self.spans {
+            if !lanes.contains(&s.lane) {
+                lanes.push(s.lane);
+            }
+        }
+        lanes.sort_by_key(|l| match l {
+            Lane::Device { dev, slot } => (0, *dev, *slot),
+            Lane::CopyEngine { idx } => (1, *idx, 0),
+            Lane::Host => (2, 0, 0),
+        });
+        let mut out = String::new();
+        out.push_str(&format!("makespan = {:.3} ms\n", make * 1e3));
+        for lane in lanes {
+            let name = match lane {
+                Lane::Device { dev, slot } => format!("dev{dev}.q{slot}"),
+                Lane::CopyEngine { idx } => format!("dma{idx}   "),
+                Lane::Host => "host   ".to_string(),
+            };
+            let mut row = vec![b'.'; width];
+            for s in self.spans.iter().filter(|s| s.lane == lane) {
+                let a = ((s.start / make) * width as f64) as usize;
+                let b = (((s.end / make) * width as f64).ceil() as usize).min(width);
+                let ch = s.label.bytes().next().unwrap_or(b'#');
+                for slot in row.iter_mut().take(b).skip(a) {
+                    *slot = ch;
+                }
+            }
+            out.push_str(&format!("{name:>8} |{}|\n", String::from_utf8(row).unwrap()));
+        }
+        out
+    }
+
+    /// JSON export for external plotting.
+    pub fn to_json(&self) -> String {
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| {
+                let lane = match s.lane {
+                    Lane::Device { dev, slot } => Json::obj(vec![
+                        ("kind", Json::str("device")),
+                        ("dev", Json::num(dev as f64)),
+                        ("slot", Json::num(slot as f64)),
+                    ]),
+                    Lane::CopyEngine { idx } => Json::obj(vec![
+                        ("kind", Json::str("copy_engine")),
+                        ("idx", Json::num(idx as f64)),
+                    ]),
+                    Lane::Host => Json::obj(vec![("kind", Json::str("host"))]),
+                };
+                Json::obj(vec![
+                    ("label", Json::str(s.label.clone())),
+                    ("lane", lane),
+                    ("start", Json::num(s.start)),
+                    ("end", Json::num(s.end)),
+                    (
+                        "kernel",
+                        s.kernel.map(|k| Json::num(k as f64)).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("spans", Json::Arr(spans))]).to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(lane: Lane, s: f64, e: f64) -> Span {
+        Span {
+            label: "k".into(),
+            lane,
+            start: s,
+            end: e,
+            cmd: None,
+            kernel: None,
+        }
+    }
+
+    #[test]
+    fn makespan_and_busy() {
+        let mut t = Trace::default();
+        t.push(span(Lane::Device { dev: 0, slot: 0 }, 0.0, 1.0));
+        t.push(span(Lane::Device { dev: 0, slot: 1 }, 0.5, 2.0));
+        assert_eq!(t.makespan(), 2.0);
+        assert_eq!(
+            t.busy_time(|l| matches!(l, Lane::Device { .. })),
+            2.5
+        );
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let mut t = Trace::default();
+        t.push(span(Lane::Device { dev: 0, slot: 0 }, 0.0, 1.0));
+        t.push(span(Lane::Device { dev: 0, slot: 1 }, 0.5, 1.5));
+        assert!((t.device_overlap(0) - 0.5).abs() < 1e-12);
+        assert_eq!(t.device_overlap(1), 0.0);
+    }
+
+    #[test]
+    fn copy_compute_overlap_counts() {
+        let mut t = Trace::default();
+        t.push(span(Lane::Device { dev: 0, slot: 0 }, 0.0, 1.0));
+        t.push(span(Lane::CopyEngine { idx: 0 }, 0.25, 0.75));
+        assert!((t.copy_compute_overlap(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gap_detection() {
+        let mut t = Trace::default();
+        t.push(span(Lane::Device { dev: 0, slot: 0 }, 0.0, 1.0));
+        t.push(span(Lane::Device { dev: 0, slot: 0 }, 3.0, 4.0));
+        assert!((t.max_gap(0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ascii_renders_all_lanes() {
+        let mut t = Trace::default();
+        t.push(span(Lane::Device { dev: 0, slot: 0 }, 0.0, 1.0));
+        t.push(span(Lane::CopyEngine { idx: 0 }, 0.0, 0.5));
+        let art = t.ascii(40);
+        assert!(art.contains("dev0.q0"));
+        assert!(art.contains("dma0"));
+    }
+}

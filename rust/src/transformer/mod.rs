@@ -1,0 +1,287 @@
+//! Application-DAG generators for the paper's workloads:
+//!
+//! * [`head_dag`] — one transformer attention head: the 8-kernel DAG of
+//!   Figs. 3/10 (3 projection GEMMs → transpose → score GEMM → softmax →
+//!   context GEMM → output GEMM).
+//! * [`transformer_dag`] — a full H-head layer (Expts 1–3), heads as
+//!   independent branches.
+//! * [`fork_join_dag`] — the Fig. 1 motivating fork-join graph.
+//! * [`vadd_vsin_dag`] — the Fig. 2 background example.
+//!
+//! Every kernel is annotated with flops/bytes for the cost model and, when
+//! `beta` matches an AOT artifact size, the artifact key for real execution.
+
+pub mod polybench;
+
+use crate::graph::{Dag, DagBuilder, KernelId, Partition};
+use crate::platform::DeviceType;
+
+/// Which β values have AOT artifacts (mirrors python/compile/aot.py BETAS).
+pub const ARTIFACT_BETAS: [u64; 5] = [32, 64, 128, 256, 512];
+
+fn artifact_for(op: &str, beta: u64) -> Option<String> {
+    ARTIFACT_BETAS
+        .contains(&beta)
+        .then(|| format!("{op}_b{beta}"))
+}
+
+/// Buffer ids of the head's external interface.
+#[derive(Debug, Clone)]
+pub struct HeadIo {
+    /// Input-feature buffer of each projection GEMM (X appears 3×).
+    pub x_inputs: Vec<usize>,
+    /// Weight buffers Wq, Wk, Wv, Wo.
+    pub weights: Vec<usize>,
+    /// Final output buffer Z.
+    pub z_output: usize,
+    /// Kernels in creation order: [gq, gk, gv, tr, ga, sm, gc, gz].
+    pub kernels: Vec<KernelId>,
+}
+
+/// Append one attention-head sub-DAG to `b`; `beta` sizes all matrices.
+pub fn add_head(b: &mut DagBuilder, beta: u64, dev: DeviceType) -> HeadIo {
+    let el = 4 * beta * beta; // bytes of a β×β f32 matrix
+    let gemm_flops = 2 * beta * beta * beta;
+    let mk_gemm = |b: &mut DagBuilder, tag: &str| {
+        let k = b.kernel("gemm", dev, gemm_flops, 3 * el);
+        b.ndrange(k, 2, [beta, beta, 1]);
+        if let Some(a) = artifact_for("gemm", beta) {
+            b.artifact(k, &a);
+        }
+        let _ = tag;
+        k
+    };
+
+    let gq = mk_gemm(b, "q");
+    let gk = mk_gemm(b, "k");
+    let gv = mk_gemm(b, "v");
+    let tr = b.kernel("transpose", dev, beta * beta, 2 * el);
+    b.ndrange(tr, 2, [beta, beta, 1]);
+    if let Some(a) = artifact_for("transpose", beta) {
+        b.artifact(tr, &a);
+    }
+    let ga = mk_gemm(b, "a");
+    let sm = b.kernel("softmax", dev, 5 * beta * beta, 2 * el);
+    b.ndrange(sm, 2, [beta, beta, 1]);
+    if let Some(a) = artifact_for("softmax", beta) {
+        b.artifact(sm, &a);
+    }
+    let gc = mk_gemm(b, "c");
+    let gz = mk_gemm(b, "z");
+
+    // Buffers. X and the four weights are external (isolated writes).
+    let xq = b.in_buf(gq, el);
+    let wq = b.in_buf(gq, el);
+    let q = b.out_buf(gq, el);
+    let xk = b.in_buf(gk, el);
+    let wk = b.in_buf(gk, el);
+    let kk = b.out_buf(gk, el);
+    let xv = b.in_buf(gv, el);
+    let wv = b.in_buf(gv, el);
+    let v = b.out_buf(gv, el);
+    let t_in = b.in_buf(tr, el);
+    let kt = b.out_buf(tr, el);
+    let a_q = b.in_buf(ga, el);
+    let a_kt = b.in_buf(ga, el);
+    let a = b.out_buf(ga, el);
+    let s_in = b.in_buf(sm, el);
+    let s_out = b.out_buf(sm, el);
+    let c_b = b.in_buf(gc, el);
+    let c_v = b.in_buf(gc, el);
+    let c = b.out_buf(gc, el);
+    let z_c = b.in_buf(gz, el);
+    let wo = b.in_buf(gz, el);
+    let z = b.out_buf(gz, el);
+
+    // Intra-head dataflow (Fig. 10).
+    b.edge(kk, t_in); // K -> transpose
+    b.edge(q, a_q); // Q -> score GEMM
+    b.edge(kt, a_kt); // K^T -> score GEMM
+    b.edge(a, s_in); // A -> softmax
+    b.edge(s_out, c_b); // B -> context GEMM
+    b.edge(v, c_v); // V -> context GEMM
+    b.edge(c, z_c); // C -> output GEMM
+
+    HeadIo {
+        x_inputs: vec![xq, xk, xv],
+        weights: vec![wq, wk, wv, wo],
+        z_output: z,
+        kernels: vec![gq, gk, gv, tr, ga, sm, gc, gz],
+    }
+}
+
+/// One attention head as a standalone DAG (the Figs. 4/5 motivation DAG).
+pub fn head_dag(beta: u64, dev: DeviceType) -> (Dag, HeadIo) {
+    let mut b = DagBuilder::new();
+    let io = add_head(&mut b, beta, dev);
+    (b.build().expect("head DAG valid"), io)
+}
+
+/// A full H-head transformer layer: H independent head branches (the paper
+/// treats the final concat as the read of each head's Z output).
+pub fn transformer_dag(heads: usize, beta: u64, dev: DeviceType) -> (Dag, Vec<HeadIo>) {
+    let mut b = DagBuilder::new();
+    let ios: Vec<HeadIo> = (0..heads).map(|_| add_head(&mut b, beta, dev)).collect();
+    (b.build().expect("transformer DAG valid"), ios)
+}
+
+/// Clustering partition for a transformer layer: each head is one task
+/// component; the first `h_cpu` heads go to the CPU (Expt 1's `h_cpu` knob).
+pub fn cluster_by_head(dag: &Dag, ios: &[HeadIo], h_cpu: usize) -> Partition {
+    let groups = ios
+        .iter()
+        .enumerate()
+        .map(|(i, io)| {
+            let dev = if i < h_cpu {
+                DeviceType::Cpu
+            } else {
+                DeviceType::Gpu
+            };
+            (io.kernels.clone(), dev)
+        })
+        .collect();
+    Partition::new(dag, groups).expect("head clustering is valid")
+}
+
+/// The Fig. 1 motivating fork-join DAG: k0 → {k1, k2} → k3.
+pub fn fork_join_dag(beta: u64) -> (Dag, Vec<KernelId>) {
+    let mut b = DagBuilder::new();
+    let el = 4 * beta * beta;
+    let flops = 2 * beta * beta * beta;
+    let mut mk = |dev| {
+        let k = b.kernel("gemm", dev, flops, 3 * el);
+        if let Some(a) = artifact_for("gemm", beta) {
+            b.artifact(k, &a);
+        }
+        k
+    };
+    let k0 = mk(DeviceType::Cpu);
+    let k1 = mk(DeviceType::Gpu);
+    let k2 = mk(DeviceType::Gpu);
+    let k3 = mk(DeviceType::Cpu);
+    let _i0 = b.in_buf(k0, el);
+    let _i1 = b.in_buf(k0, el);
+    let o0 = b.out_buf(k0, el);
+    let i2 = b.in_buf(k1, el);
+    let _i3 = b.in_buf(k1, el);
+    let o1 = b.out_buf(k1, el);
+    let i4 = b.in_buf(k2, el);
+    let _i5 = b.in_buf(k2, el);
+    let o2 = b.out_buf(k2, el);
+    let i6 = b.in_buf(k3, el);
+    let i7 = b.in_buf(k3, el);
+    let _o3 = b.out_buf(k3, el);
+    b.edge(o0, i2);
+    b.edge(o0, i4);
+    b.edge(o1, i6);
+    b.edge(o2, i7);
+    (b.build().expect("fork-join valid"), vec![k0, k1, k2, k3])
+}
+
+/// The Fig. 2 example: vadd → vsin over `n`-element vectors.
+pub fn vadd_vsin_dag(n: u64) -> (Dag, Vec<KernelId>) {
+    let mut b = DagBuilder::new();
+    let bytes = 4 * n;
+    let k0 = b.kernel("vadd", DeviceType::Gpu, n, 3 * bytes);
+    let k1 = b.kernel("vsin", DeviceType::Gpu, 4 * n, 2 * bytes);
+    if [4096, 1 << 20].contains(&n) {
+        b.artifact(k0, &format!("vadd_n{n}"));
+        b.artifact(k1, &format!("vsin_n{n}"));
+    }
+    let _b0 = b.in_buf(k0, bytes);
+    let _b1 = b.in_buf(k0, bytes);
+    let b2 = b.out_buf(k0, bytes);
+    let b3 = b.io_buf(k1, bytes);
+    b.edge(b2, b3);
+    (b.build().expect("vadd-vsin valid"), vec![k0, k1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeClass;
+
+    #[test]
+    fn head_has_paper_kernel_census() {
+        let (dag, io) = head_dag(256, DeviceType::Gpu);
+        assert_eq!(dag.num_kernels(), 8);
+        let names: Vec<&str> = io
+            .kernels
+            .iter()
+            .map(|&k| dag.kernels[k].name.as_str())
+            .collect();
+        assert_eq!(
+            names.iter().filter(|n| **n == "gemm").count(),
+            6,
+            "6 GEMM-family kernels per head"
+        );
+        assert_eq!(names.iter().filter(|n| **n == "transpose").count(), 1);
+        assert_eq!(names.iter().filter(|n| **n == "softmax").count(), 1);
+    }
+
+    #[test]
+    fn head_level_structure() {
+        let (dag, io) = head_dag(64, DeviceType::Gpu);
+        let [gq, gk, gv, tr, ga, sm, gc, gz] = io.kernels[..] else {
+            panic!()
+        };
+        // Level 1 kernels have no kernel preds.
+        for k in [gq, gk, gv] {
+            assert!(dag.kernel_preds(k).is_empty());
+        }
+        assert_eq!(dag.kernel_preds(tr), vec![gk]);
+        let mut p = dag.kernel_preds(ga);
+        p.sort();
+        let mut expect = vec![gq, tr];
+        expect.sort();
+        assert_eq!(p, expect);
+        assert_eq!(dag.kernel_preds(sm), vec![ga]);
+        let mut pc = dag.kernel_preds(gc);
+        pc.sort();
+        let mut expect_c = vec![gv, sm];
+        expect_c.sort();
+        assert_eq!(pc, expect_c);
+        assert_eq!(dag.kernel_preds(gz), vec![gc]);
+        assert_eq!(dag.kernel_succs(gz), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn heads_are_independent_components() {
+        let (dag, ios) = transformer_dag(4, 64, DeviceType::Gpu);
+        assert_eq!(dag.num_kernels(), 32);
+        let part = cluster_by_head(&dag, &ios, 1);
+        // No inter edges: heads share nothing.
+        for &(s, d) in &dag.buffer_edges {
+            assert_eq!(part.edge_class(&dag, s, d), EdgeClass::Intra);
+        }
+        assert_eq!(part.components[0].dev, DeviceType::Cpu);
+        assert_eq!(part.components[1].dev, DeviceType::Gpu);
+        // All components immediately ready (paper: heads are independent).
+        assert_eq!(part.ready_components(&dag).len(), 4);
+    }
+
+    #[test]
+    fn artifacts_attached_at_paper_sizes() {
+        let (dag, io) = head_dag(256, DeviceType::Gpu);
+        assert_eq!(
+            dag.kernels[io.kernels[0]].artifact.as_deref(),
+            Some("gemm_b256")
+        );
+        let (dag31, io31) = head_dag(31, DeviceType::Gpu);
+        assert!(dag31.kernels[io31.kernels[0]].artifact.is_none());
+    }
+
+    #[test]
+    fn fork_join_shape() {
+        let (dag, ks) = fork_join_dag(64);
+        assert_eq!(dag.kernel_succs(ks[0]).len(), 2);
+        assert_eq!(dag.kernel_preds(ks[3]).len(), 2);
+    }
+
+    #[test]
+    fn vadd_vsin_chain() {
+        let (dag, ks) = vadd_vsin_dag(4096);
+        assert_eq!(dag.kernel_succs(ks[0]), vec![ks[1]]);
+        assert_eq!(dag.kernels[ks[1]].artifact.as_deref(), Some("vsin_n4096"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Polybench-style application DAGs (the paper sources its OpenCL kernels
+//! from the Polybench and NVIDIA SDK suites; these generators provide the
+//! classic linear-algebra pipelines as additional scheduling workloads).
+//!
+//! All kernels map onto the same artifact inventory (gemm/transpose at the
+//! AOT β sizes), so each DAG is both simulatable and really executable.
+
+use crate::graph::{Dag, DagBuilder, KernelId};
+use crate::platform::DeviceType;
+
+fn gemm_kernel(b: &mut DagBuilder, beta: u64, dev: DeviceType) -> KernelId {
+    let el = 4 * beta * beta;
+    let k = b.kernel("gemm", dev, 2 * beta * beta * beta, 3 * el);
+    b.ndrange(k, 2, [beta, beta, 1]);
+    if super::ARTIFACT_BETAS.contains(&beta) {
+        b.artifact(k, &format!("gemm_b{beta}"));
+    }
+    k
+}
+
+/// 2mm: D = A·B; E = D·C  (two chained GEMMs).
+pub fn mm2_dag(beta: u64, dev: DeviceType) -> (Dag, Vec<KernelId>) {
+    let mut b = DagBuilder::new();
+    let el = 4 * beta * beta;
+    let k0 = gemm_kernel(&mut b, beta, dev);
+    let k1 = gemm_kernel(&mut b, beta, dev);
+    let _a = b.in_buf(k0, el);
+    let _bb = b.in_buf(k0, el);
+    let d = b.out_buf(k0, el);
+    let d_in = b.in_buf(k1, el);
+    let _c = b.in_buf(k1, el);
+    let _e = b.out_buf(k1, el);
+    b.edge(d, d_in);
+    (b.build().expect("2mm valid"), vec![k0, k1])
+}
+
+/// 3mm: E = A·B; F = C·D; G = E·F  (a fork-join of three GEMMs).
+pub fn mm3_dag(beta: u64, dev: DeviceType) -> (Dag, Vec<KernelId>) {
+    let mut b = DagBuilder::new();
+    let el = 4 * beta * beta;
+    let k0 = gemm_kernel(&mut b, beta, dev);
+    let k1 = gemm_kernel(&mut b, beta, dev);
+    let k2 = gemm_kernel(&mut b, beta, dev);
+    for k in [k0, k1] {
+        b.in_buf(k, el);
+        b.in_buf(k, el);
+    }
+    let e = b.out_buf(k0, el);
+    let f = b.out_buf(k1, el);
+    let e_in = b.in_buf(k2, el);
+    let f_in = b.in_buf(k2, el);
+    let _g = b.out_buf(k2, el);
+    b.edge(e, e_in);
+    b.edge(f, f_in);
+    (b.build().expect("3mm valid"), vec![k0, k1, k2])
+}
+
+/// atax: y = Aᵀ(Ax) — transpose + two GEMMs (matrix-matrix in our shape
+/// inventory; the dataflow is the point).
+pub fn atax_dag(beta: u64, dev: DeviceType) -> (Dag, Vec<KernelId>) {
+    let mut b = DagBuilder::new();
+    let el = 4 * beta * beta;
+    let k0 = gemm_kernel(&mut b, beta, dev); // t0 = A·X
+    let tr = b.kernel("transpose", dev, beta * beta, 2 * el);
+    b.ndrange(tr, 2, [beta, beta, 1]);
+    if super::ARTIFACT_BETAS.contains(&beta) {
+        b.artifact(tr, &format!("transpose_b{beta}"));
+    }
+    let k1 = gemm_kernel(&mut b, beta, dev); // y = Aᵀ·t0
+    let a0 = b.in_buf(k0, el);
+    let _x = b.in_buf(k0, el);
+    let t0 = b.out_buf(k0, el);
+    let tr_in = b.in_buf(tr, el);
+    let at = b.out_buf(tr, el);
+    let at_in = b.in_buf(k1, el);
+    let t0_in = b.in_buf(k1, el);
+    let _y = b.out_buf(k1, el);
+    // A feeds both the first GEMM and the transpose: model the transpose
+    // input as an isolated copy of A (separate host writes), keeping the
+    // single-producer invariant. Dataflow edges:
+    b.edge(t0, t0_in);
+    b.edge(at, at_in);
+    let _ = (a0, tr_in);
+    (b.build().expect("atax valid"), vec![k0, tr, k1])
+}
+
+/// bicg: q = A·p ; s = Aᵀ·r — two independent GEMM branches sharing A's
+/// structure (independent => good clustering fodder).
+pub fn bicg_dag(beta: u64, dev: DeviceType) -> (Dag, Vec<KernelId>) {
+    let mut b = DagBuilder::new();
+    let el = 4 * beta * beta;
+    let k0 = gemm_kernel(&mut b, beta, dev);
+    let tr = b.kernel("transpose", dev, beta * beta, 2 * el);
+    b.ndrange(tr, 2, [beta, beta, 1]);
+    if super::ARTIFACT_BETAS.contains(&beta) {
+        b.artifact(tr, &format!("transpose_b{beta}"));
+    }
+    let k1 = gemm_kernel(&mut b, beta, dev);
+    b.in_buf(k0, el);
+    b.in_buf(k0, el);
+    let _q = b.out_buf(k0, el);
+    let _tr_in = b.in_buf(tr, el);
+    let at = b.out_buf(tr, el);
+    let at_in = b.in_buf(k1, el);
+    b.in_buf(k1, el);
+    let _s = b.out_buf(k1, el);
+    b.edge(at, at_in);
+    (b.build().expect("bicg valid"), vec![k0, tr, k1])
+}
+
+/// mvt: x1 += A·y1 ; x2 += Aᵀ·y2 — two fully independent branches.
+pub fn mvt_dag(beta: u64, dev: DeviceType) -> (Dag, Vec<KernelId>) {
+    let mut b = DagBuilder::new();
+    let el = 4 * beta * beta;
+    let k0 = gemm_kernel(&mut b, beta, dev);
+    let k1 = gemm_kernel(&mut b, beta, dev);
+    for k in [k0, k1] {
+        b.in_buf(k, el);
+        b.in_buf(k, el);
+        b.out_buf(k, el);
+    }
+    (b.build().expect("mvt valid"), vec![k0, k1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::graph::Partition;
+    use crate::platform::Platform;
+    use crate::sched::Clustering;
+    use crate::sim::{simulate, SimConfig};
+
+    fn simulate_ok(dag: &Dag) -> f64 {
+        let part = Partition::singletons(dag);
+        let platform = Platform::paper_testbed(2, 1);
+        simulate(
+            dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+        )
+        .unwrap()
+        .makespan
+    }
+
+    #[test]
+    fn mm2_chains() {
+        let (dag, ks) = mm2_dag(128, DeviceType::Gpu);
+        assert_eq!(dag.kernel_succs(ks[0]), vec![ks[1]]);
+        assert!(simulate_ok(&dag) > 0.0);
+    }
+
+    #[test]
+    fn mm3_is_fork_join() {
+        let (dag, ks) = mm3_dag(128, DeviceType::Gpu);
+        assert_eq!(dag.kernel_preds(ks[2]).len(), 2);
+        assert!(dag.kernel_preds(ks[0]).is_empty());
+        assert!(simulate_ok(&dag) > 0.0);
+    }
+
+    #[test]
+    fn atax_transpose_feeds_second_gemm() {
+        let (dag, ks) = atax_dag(64, DeviceType::Gpu);
+        assert!(dag.kernel_succs(ks[1]).contains(&ks[2]));
+        assert!(simulate_ok(&dag) > 0.0);
+    }
+
+    #[test]
+    fn mvt_branches_independent() {
+        let (dag, ks) = mvt_dag(64, DeviceType::Gpu);
+        assert!(dag.kernel_preds(ks[0]).is_empty());
+        assert!(dag.kernel_preds(ks[1]).is_empty());
+        assert!(dag.buffer_edges.is_empty());
+    }
+
+    #[test]
+    fn bicg_partial_dependency() {
+        let (dag, ks) = bicg_dag(64, DeviceType::Gpu);
+        assert!(dag.kernel_preds(ks[0]).is_empty());
+        assert_eq!(dag.kernel_preds(ks[2]), vec![ks[1]]);
+    }
+
+    #[test]
+    fn all_polybench_dags_have_artifacts_at_aot_sizes() {
+        for (dag, _) in [
+            mm2_dag(64, DeviceType::Gpu),
+            mm3_dag(64, DeviceType::Gpu),
+            atax_dag(64, DeviceType::Gpu),
+            bicg_dag(64, DeviceType::Gpu),
+            mvt_dag(64, DeviceType::Gpu),
+        ] {
+            for k in &dag.kernels {
+                assert!(k.artifact.is_some(), "kernel {} lacks artifact", k.id);
+            }
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Integration: the experiment harness reproduces the paper's §5 *shapes*
+//! (who wins, by roughly what factor, where crossovers fall).
+
+use pyschedcl::report::experiments::*;
+
+#[test]
+fn fig4_5_coarse_vs_fine() {
+    let m = motivation(256).unwrap();
+    // Paper: coarse 105 ms, fine 95 ms, ≈8% gain.
+    assert!(m.coarse_ms > 85.0 && m.coarse_ms < 125.0, "{}", m.coarse_ms);
+    assert!(m.fine_ms < m.coarse_ms);
+    assert!(m.speedup > 1.04 && m.speedup < 1.35, "{}", m.speedup);
+    // Fine-grained must actually overlap kernels and transfers.
+    assert!(m.fine.trace.device_overlap(0) > 0.0);
+    assert!(m.fine.trace.copy_compute_overlap(0) > 0.0);
+    assert_eq!(m.coarse.trace.device_overlap(0), 0.0);
+}
+
+#[test]
+fn fig11_crossover_at_h10() {
+    // Expt 1 shape: h_cpu = 0 below the crossover, 1 at H=16; speedups >1.
+    let rows = expt1(16, 256, 2).unwrap();
+    assert_eq!(rows.len(), 16);
+    for r in &rows {
+        assert!(r.speedup >= 1.0, "H={} speedup {}", r.heads, r.speedup);
+    }
+    assert_eq!(rows[0].best.h_cpu, 0, "H=1 must stay on the GPU");
+    assert_eq!(rows[3].best.h_cpu, 0, "H=4 must stay on the GPU");
+    let crossover = rows.iter().find(|r| r.best.h_cpu > 0).map(|r| r.heads);
+    let c = crossover.expect("offloading should win at some H");
+    assert!((8..=12).contains(&c), "crossover at H={c}, paper says ≈10");
+    assert_eq!(rows[15].best.h_cpu, 1, "H=16: exactly one CPU head (paper)");
+    // The jump: best speedup above the crossover exceeds the flat region.
+    let below: f64 = rows[..c - 1].iter().map(|r| r.speedup).fold(0.0, f64::max);
+    let above: f64 = rows[c - 1..].iter().map(|r| r.speedup).fold(0.0, f64::max);
+    assert!(above > below, "no jump after crossover: {below} vs {above}");
+}
+
+#[test]
+fn fig12a_clustering_vs_eager_band() {
+    let rows = expt2(16, &[64, 256]).unwrap();
+    for r in &rows {
+        assert!(
+            r.speedup > 1.4 && r.speedup < 5.0,
+            "β={}: {}x outside band",
+            r.beta,
+            r.speedup
+        );
+    }
+    // Speedup shrinks as β grows (kernels dwarf scheduling overheads).
+    assert!(rows[0].speedup > rows[1].speedup);
+}
+
+#[test]
+fn fig12b_clustering_vs_heft_band() {
+    let rows = expt3(16, &[256, 512]).unwrap();
+    for r in &rows {
+        assert!(r.speedup > 1.0, "clustering must beat heft at β={}", r.beta);
+    }
+}
+
+#[test]
+fn heft_beats_eager_at_large_beta() {
+    // Paper: "heft ... is approximately 2.4x faster than eager" (H=16, β=512).
+    let e = expt2(16, &[512]).unwrap()[0];
+    let h = expt3(16, &[512]).unwrap()[0];
+    let heft_over_eager = e.baseline_ms / h.baseline_ms;
+    assert!(
+        heft_over_eager > 1.5 && heft_over_eager < 3.5,
+        "heft over eager = {heft_over_eager:.2} (paper ≈2.4)"
+    );
+}
+
+#[test]
+fn fig13_gantt_diagnostics() {
+    // Reduced scale for test speed (H=8, β=256); ordering is scale-free.
+    let (eager, _) = gantt("eager", 8, 256).unwrap();
+    let (heft, _) = gantt("heft", 8, 256).unwrap();
+    let (cl, _) = gantt("clustering", 8, 256).unwrap();
+    // Makespans: eager > heft > clustering.
+    assert!(eager.makespan > heft.makespan);
+    assert!(heft.makespan > cl.makespan);
+    // Gaps: clustering gapless relative to the dynamic schemes.
+    assert!(cl.trace.max_gap(0) < heft.trace.max_gap(0));
+    assert!(cl.trace.max_gap(0) < eager.trace.max_gap(0));
+    // Eager strands work on the CPU device (GEMMs on dev 1).
+    let eager_cpu_spans = eager
+        .trace
+        .spans
+        .iter()
+        .filter(|s| matches!(s.lane, pyschedcl::trace::Lane::Device { dev: 1, .. }))
+        .count();
+    assert!(eager_cpu_spans > 0, "eager must misplace kernels on the CPU");
+}

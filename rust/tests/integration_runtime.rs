@@ -1,0 +1,210 @@
+//! Integration: the real executor — scheduled DAGs running actual AOT
+//! Pallas/JAX artifacts on the PJRT CPU client.
+//!
+//! All tests skip (with a note) when `make artifacts` hasn't been run.
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::exec::execute_dag;
+use pyschedcl::graph::Partition;
+use pyschedcl::platform::{DeviceType, Platform};
+use pyschedcl::runtime::Runtime;
+use pyschedcl::sched::{Clustering, Eager};
+use pyschedcl::transformer::{cluster_by_head, head_dag, transformer_dag, vadd_vsin_dag};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::new(&dir) {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(_) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn rng_vec(seed: u64, len: usize) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+    (0..len)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        })
+        .collect()
+}
+
+#[test]
+fn composed_head_matches_fused_artifact() {
+    let Some(rt) = runtime() else { return };
+    let beta = 32u64;
+    let (dag, io) = head_dag(beta, DeviceType::Gpu);
+    let part = cluster_by_head(&dag, std::slice::from_ref(&io), 0);
+    let platform = Platform::paper_testbed(3, 1);
+    let n = (beta * beta) as usize;
+
+    let x = rng_vec(1, n);
+    let ws: Vec<Vec<f32>> = (0..4).map(|i| rng_vec(10 + i, n)).collect();
+    let mut inputs = HashMap::new();
+    for &xb in &io.x_inputs {
+        inputs.insert(xb, x.clone());
+    }
+    for (&wb, w) in io.weights.iter().zip(&ws) {
+        inputs.insert(wb, w.clone());
+    }
+    let report = execute_dag(
+        &dag,
+        &part,
+        &platform,
+        &PaperCost,
+        &mut Clustering,
+        &rt,
+        &inputs,
+    )
+    .unwrap();
+    let got = report.store.host(io.z_output).expect("output read back");
+    let fused = rt
+        .execute_f32("head_b32", &[&x, &ws[0], &ws[1], &ws[2], &ws[3]])
+        .unwrap();
+    let max_err = got
+        .iter()
+        .zip(&fused[0])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "composed vs fused: max err {max_err}");
+}
+
+#[test]
+fn multi_head_layer_executes_all_heads() {
+    let Some(rt) = runtime() else { return };
+    let beta = 32u64;
+    let heads = 3;
+    let (dag, ios) = transformer_dag(heads, beta, DeviceType::Gpu);
+    let part = cluster_by_head(&dag, &ios, 0);
+    let platform = Platform::paper_testbed(2, 1);
+    let n = (beta * beta) as usize;
+    let mut inputs = HashMap::new();
+    for (h, io) in ios.iter().enumerate() {
+        for &xb in &io.x_inputs {
+            inputs.insert(xb, rng_vec(100 + h as u64, n));
+        }
+        for (w, &wb) in io.weights.iter().enumerate() {
+            inputs.insert(wb, rng_vec(200 + (h * 4 + w) as u64, n));
+        }
+    }
+    let report = execute_dag(
+        &dag,
+        &part,
+        &platform,
+        &PaperCost,
+        &mut Clustering,
+        &rt,
+        &inputs,
+    )
+    .unwrap();
+    for io in &ios {
+        let z = report.store.host(io.z_output).expect("each head read back");
+        assert_eq!(z.len(), n);
+        assert!(z.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn eager_policy_executes_correctly_too() {
+    // Even a "bad" schedule must produce identical numerics.
+    let Some(rt) = runtime() else { return };
+    let (dag, ks) = vadd_vsin_dag(4096);
+    let part = Partition::singletons(&dag);
+    let platform = Platform::paper_testbed(1, 1);
+    let a = rng_vec(5, 4096);
+    let b = rng_vec(6, 4096);
+    let mut inputs = HashMap::new();
+    inputs.insert(dag.kernels[ks[0]].inputs[0], a.clone());
+    inputs.insert(dag.kernels[ks[0]].inputs[1], b.clone());
+    let report = execute_dag(
+        &dag,
+        &part,
+        &platform,
+        &PaperCost,
+        &mut Eager,
+        &rt,
+        &inputs,
+    )
+    .unwrap();
+    let out = report.store.host(dag.kernels[ks[1]].outputs[0]).unwrap();
+    for i in 0..4096 {
+        let want = (a[i] + b[i]).sin();
+        assert!((out[i] - want).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Some(rt) = runtime() else { return };
+    // β=31 has no artifacts: execute_dag must refuse upfront.
+    let (dag, io) = head_dag(31, DeviceType::Gpu);
+    let part = cluster_by_head(&dag, std::slice::from_ref(&io), 0);
+    let platform = Platform::paper_testbed(1, 1);
+    let res = execute_dag(
+        &dag,
+        &part,
+        &platform,
+        &PaperCost,
+        &mut Clustering,
+        &rt,
+        &HashMap::new(),
+    );
+    match res {
+        Err(err) => assert!(err.to_string().contains("artifact"), "{err}"),
+        Ok(_) => panic!("β=31 execution should fail (no artifacts)"),
+    }
+}
+
+#[test]
+fn missing_input_fails_not_hangs() {
+    let Some(rt) = runtime() else { return };
+    let (dag, _) = vadd_vsin_dag(4096);
+    let part = Partition::singletons(&dag);
+    let platform = Platform::paper_testbed(1, 1);
+    // No inputs seeded: the first write command must fail cleanly.
+    let res = execute_dag(
+        &dag,
+        &part,
+        &platform,
+        &PaperCost,
+        &mut Clustering,
+        &rt,
+        &HashMap::new(),
+    );
+    assert!(res.is_err());
+}
+
+#[test]
+fn repeated_execution_is_reproducible() {
+    let Some(rt) = runtime() else { return };
+    let (dag, ks) = vadd_vsin_dag(4096);
+    let part = Partition::singletons(&dag);
+    let platform = Platform::paper_testbed(2, 1);
+    let mut inputs = HashMap::new();
+    inputs.insert(dag.kernels[ks[0]].inputs[0], rng_vec(9, 4096));
+    inputs.insert(dag.kernels[ks[0]].inputs[1], rng_vec(10, 4096));
+    let run = || {
+        execute_dag(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &rt,
+            &inputs,
+        )
+        .unwrap()
+        .store
+        .host(dag.kernels[ks[1]].outputs[0])
+        .unwrap()
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,178 @@
+//! Integration: spec files → DAG → schedulers → simulator, end to end.
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::graph::Partition;
+use pyschedcl::platform::{DeviceType, Platform};
+use pyschedcl::sched::{Clustering, Eager, Heft};
+use pyschedcl::sim::{simulate, SimConfig};
+use pyschedcl::spec::parse_spec;
+use pyschedcl::trace::Lane;
+use std::path::Path;
+
+fn spec_text(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("specs").join(name);
+    std::fs::read_to_string(path).expect("spec file readable")
+}
+
+#[test]
+fn head_spec_simulates_under_all_policies() {
+    let spec = parse_spec(&spec_text("transformer_head_b64.json")).unwrap();
+    let platform = Platform::paper_testbed(3, 1);
+    let cfg = SimConfig::default();
+
+    let cl = simulate(
+        &spec.dag,
+        &spec.partition,
+        &platform,
+        &PaperCost,
+        &mut Clustering,
+        &cfg,
+    )
+    .unwrap();
+    assert!(cl.makespan > 0.0);
+
+    let singles = Partition::singletons(&spec.dag);
+    let p1 = Platform::paper_testbed(1, 1);
+    for policy in [
+        &mut Eager as &mut dyn pyschedcl::sched::Policy,
+        &mut Heft as &mut dyn pyschedcl::sched::Policy,
+    ] {
+        let r = simulate(&spec.dag, &singles, &p1, &PaperCost, policy, &cfg).unwrap();
+        assert!(r.makespan > 0.0);
+        // Dynamic coarse-grained schemes must be slower than clustering
+        // on this DAG (the paper's core claim).
+        assert!(r.makespan > cl.makespan, "{} faster than clustering?", r.policy);
+    }
+}
+
+#[test]
+fn vadd_vsin_spec_round_trip() {
+    let spec = parse_spec(&spec_text("vadd_vsin.json")).unwrap();
+    assert_eq!(spec.dag.num_kernels(), 2);
+    assert_eq!(spec.partition.components.len(), 2);
+    let platform = Platform::paper_testbed(2, 1);
+    let r = simulate(
+        &spec.dag,
+        &spec.partition,
+        &platform,
+        &PaperCost,
+        &mut Clustering,
+        &SimConfig::default(),
+    )
+    .unwrap();
+    // vsin's component depends on vadd's: strictly ordered spans.
+    let span_of = |k: usize| {
+        r.trace
+            .spans
+            .iter()
+            .find(|s| s.kernel == Some(k) && matches!(s.lane, Lane::Device { .. }))
+            .cloned()
+            .unwrap()
+    };
+    assert!(span_of(1).start >= span_of(0).end);
+}
+
+#[test]
+fn every_kernel_simulated_exactly_once() {
+    let spec = parse_spec(&spec_text("transformer_head_b64.json")).unwrap();
+    let platform = Platform::paper_testbed(4, 2);
+    let r = simulate(
+        &spec.dag,
+        &spec.partition,
+        &platform,
+        &PaperCost,
+        &mut Clustering,
+        &SimConfig::default(),
+    )
+    .unwrap();
+    for k in 0..spec.dag.num_kernels() {
+        let count = r
+            .trace
+            .spans
+            .iter()
+            .filter(|s| s.kernel == Some(k) && matches!(s.lane, Lane::Device { .. }))
+            .count();
+        assert_eq!(count, 1, "kernel {k} simulated {count} times");
+    }
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let spec = parse_spec(&spec_text("transformer_head_b64.json")).unwrap();
+    let platform = Platform::paper_testbed(3, 1);
+    let run = || {
+        simulate(
+            &spec.dag,
+            &spec.partition,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+        )
+        .unwrap()
+        .makespan
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn dispatch_respects_topological_order() {
+    let spec = parse_spec(&spec_text("transformer_head_b64.json")).unwrap();
+    let singles = Partition::singletons(&spec.dag);
+    let platform = Platform::paper_testbed(1, 1);
+    let r = simulate(
+        &spec.dag,
+        &singles,
+        &platform,
+        &PaperCost,
+        &mut Heft,
+        &SimConfig::default(),
+    )
+    .unwrap();
+    // Def 5 validity: each kernel starts only after all DAG predecessors end.
+    let span = |k: usize| {
+        r.trace
+            .spans
+            .iter()
+            .find(|s| s.kernel == Some(k) && matches!(s.lane, Lane::Device { .. }))
+            .unwrap()
+    };
+    for k in 0..spec.dag.num_kernels() {
+        for p in spec.dag.kernel_preds(k) {
+            assert!(
+                span(k).start >= span(p).end - 1e-9,
+                "kernel {k} started before predecessor {p} finished"
+            );
+        }
+    }
+}
+
+#[test]
+fn cpu_mapped_component_skips_dma() {
+    // Map the whole head to the CPU: no copy-engine spans should appear.
+    let text = spec_text("transformer_head_b64.json").replace("\"gpu\"", "\"cpu\"");
+    let spec = parse_spec(&text).unwrap();
+    let platform = Platform::paper_testbed(1, 2);
+    let r = simulate(
+        &spec.dag,
+        &spec.partition,
+        &platform,
+        &PaperCost,
+        &mut Clustering,
+        &SimConfig::default(),
+    )
+    .unwrap();
+    let dma_spans = r
+        .trace
+        .spans
+        .iter()
+        .filter(|s| matches!(s.lane, Lane::CopyEngine { .. }))
+        .count();
+    assert_eq!(dma_spans, 0, "CPU shares host memory: no DMA traffic");
+    // And all kernels ran on the CPU device (id 1).
+    for s in &r.trace.spans {
+        if let Lane::Device { dev, .. } = s.lane {
+            assert_eq!(platform.device(dev).dtype, DeviceType::Cpu);
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! Property-based invariants over randomly generated DAGs, partitions and
+//! platform configurations.
+//!
+//! The environment is offline (no proptest crate), so this file carries a
+//! small deterministic harness: an xorshift64* generator drives structured
+//! random cases; every failure message embeds the seed for replay.
+
+use pyschedcl::cost::{CostModel, PaperCost};
+use pyschedcl::graph::{Dag, DagBuilder, Partition};
+use pyschedcl::platform::{Device, DeviceType, Platform};
+use pyschedcl::queue::{setup_cq, CommandKind};
+use pyschedcl::sched::{Clustering, Eager, Heft};
+use pyschedcl::sim::{simulate, SimConfig};
+use pyschedcl::trace::Lane;
+
+// ------------------------------------------------------------- mini-harness
+
+#[derive(Clone)]
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15).max(1))
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+    fn chance(&mut self, p_percent: usize) -> bool {
+        self.below(100) < p_percent
+    }
+}
+
+/// Random layered DAG: every cross-layer edge points forward, inputs have at
+/// most one producer, sizes/flops vary by op.
+fn random_dag(rng: &mut Rng) -> Dag {
+    let layers = 2 + rng.below(4);
+    let mut b = DagBuilder::new();
+    let mut outputs: Vec<usize> = Vec::new(); // buffer ids of prior outputs
+    let mut claimed: Vec<usize> = Vec::new(); // outputs already consumed
+    for _ in 0..layers {
+        let width = 1 + rng.below(3);
+        let mut layer_outputs = Vec::new();
+        for _ in 0..width {
+            let (name, flops) = match rng.below(4) {
+                0 => ("gemm", 2 * 64 * 64 * 64),
+                1 => ("softmax", 5 * 64 * 64),
+                2 => ("transpose", 64 * 64),
+                _ => ("vadd", 64 * 64),
+            };
+            let dev = if rng.chance(70) {
+                DeviceType::Gpu
+            } else {
+                DeviceType::Cpu
+            };
+            let k = b.kernel(name, dev, flops as u64, 3 * 4 * 64 * 64);
+            let n_in = 1 + rng.below(2);
+            for _ in 0..n_in {
+                let bi = b.in_buf(k, 4 * 64 * 64);
+                // Link to a random unclaimed earlier output half the time.
+                if !outputs.is_empty() && rng.chance(60) {
+                    let cand = outputs[rng.below(outputs.len())];
+                    if !claimed.contains(&cand) {
+                        b.edge(cand, bi);
+                        claimed.push(cand);
+                    }
+                }
+            }
+            layer_outputs.push(b.out_buf(k, 4 * 64 * 64));
+        }
+        outputs.extend(layer_outputs);
+    }
+    b.build().expect("layered DAG is valid by construction")
+}
+
+/// Random partition from topo-order slices (cross-slice edges always point
+/// forward, so the component graph is acyclic by construction).
+fn random_partition(rng: &mut Rng, dag: &Dag) -> Partition {
+    let order = pyschedcl::graph::topo_order(dag);
+    let mut groups: Vec<(Vec<usize>, DeviceType)> = Vec::new();
+    let mut i = 0;
+    while i < order.len() {
+        let take = (1 + rng.below(4)).min(order.len() - i);
+        let ks: Vec<usize> = order[i..i + take].to_vec();
+        let dev = if rng.chance(70) {
+            DeviceType::Gpu
+        } else {
+            DeviceType::Cpu
+        };
+        groups.push((ks, dev));
+        i += take;
+    }
+    Partition::new(dag, groups).expect("slice partition is valid")
+}
+
+const CASES: u64 = 60;
+
+// ---------------------------------------------------------------- properties
+
+#[test]
+fn prop_setup_cq_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let dag = random_dag(&mut rng);
+        let part = random_partition(&mut rng, &dag);
+        for cid in 0..part.components.len() {
+            let dev = if part.components[cid].dev == DeviceType::Gpu {
+                Device::gtx970(0, 1 + rng.below(5))
+            } else {
+                Device::i5_4690k(1, 1 + rng.below(5))
+            };
+            let cq = setup_cq(&dag, &part, cid, &dev);
+            cq.check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed} comp {cid}: {e}"));
+            // Exactly one ndrange per member kernel.
+            for &k in &part.components[cid].kernels {
+                let nd = cq
+                    .commands
+                    .iter()
+                    .filter(|c| c.kernel == k && c.is_ndrange())
+                    .count();
+                assert_eq!(nd, 1, "seed {seed}: kernel {k} has {nd} ndranges");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_no_redundant_intra_transfers() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let dag = random_dag(&mut rng);
+        let part = random_partition(&mut rng, &dag);
+        for cid in 0..part.components.len() {
+            let dev = Device::gtx970(0, 2);
+            let cq = setup_cq(&dag, &part, cid, &dev);
+            for c in &cq.commands {
+                match c.kind {
+                    CommandKind::Write { buffer } => {
+                        // A write is justified iff isolated, or fed by an
+                        // inter edge into a FRONT kernel.
+                        if let Some(p) = dag.buffer_pred(buffer) {
+                            let pc = part.assignment[dag.buffers[p].kernel];
+                            assert_ne!(
+                                pc, cid,
+                                "seed {seed}: intra-resident buffer {buffer} re-written"
+                            );
+                        }
+                    }
+                    CommandKind::Read { buffer } => {
+                        // A read is justified iff isolated, or consumed by a
+                        // different component.
+                        let succs = dag.buffer_succs(buffer);
+                        if !succs.is_empty() {
+                            assert!(
+                                succs.iter().any(|&s| {
+                                    part.assignment[dag.buffers[s].kernel] != cid
+                                }),
+                                "seed {seed}: intra-only buffer {buffer} read back"
+                            );
+                        }
+                    }
+                    CommandKind::NdRange => {}
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simulation_executes_every_kernel_in_topo_order() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let dag = random_dag(&mut rng);
+        let part = random_partition(&mut rng, &dag);
+        let platform = Platform::paper_testbed(1 + rng.below(5), 1 + rng.below(3));
+        let r = simulate(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+        )
+        .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let span = |k: usize| {
+            r.trace
+                .spans
+                .iter()
+                .find(|s| s.kernel == Some(k) && matches!(s.lane, Lane::Device { .. }))
+                .unwrap_or_else(|| panic!("seed {seed}: kernel {k} never ran"))
+        };
+        for k in 0..dag.num_kernels() {
+            let count = r
+                .trace
+                .spans
+                .iter()
+                .filter(|s| s.kernel == Some(k) && matches!(s.lane, Lane::Device { .. }))
+                .count();
+            assert_eq!(count, 1, "seed {seed}: kernel {k} ran {count} times");
+            for p in dag.kernel_preds(k) {
+                assert!(
+                    span(k).start >= span(p).end - 1e-9,
+                    "seed {seed}: kernel {k} before pred {p}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_makespan_at_least_critical_path() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let dag = random_dag(&mut rng);
+        let part = random_partition(&mut rng, &dag);
+        let platform = Platform::paper_testbed(1 + rng.below(5), 1 + rng.below(3));
+        let r = simulate(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+        )
+        .unwrap();
+        // Lower bound: critical path under per-kernel best-device solo time
+        // (contention and queues can only slow kernels down).
+        let weights: Vec<f64> = dag
+            .kernels
+            .iter()
+            .map(|k| {
+                platform
+                    .devices
+                    .iter()
+                    .map(|d| PaperCost.exec_time(k, d))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let cp = pyschedcl::graph::rank::critical_path(&dag, &weights);
+        assert!(
+            r.makespan >= cp - 1e-9,
+            "seed {seed}: makespan {} < critical path {cp}",
+            r.makespan
+        );
+    }
+}
+
+#[test]
+fn prop_dynamic_policies_also_complete() {
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(seed);
+        let dag = random_dag(&mut rng);
+        let singles = Partition::singletons(&dag);
+        let platform = Platform::paper_testbed(1, 1);
+        for policy in [
+            &mut Eager as &mut dyn pyschedcl::sched::Policy,
+            &mut Heft as &mut dyn pyschedcl::sched::Policy,
+        ] {
+            let r = simulate(&dag, &singles, &platform, &PaperCost, policy, &SimConfig::default())
+                .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", policy.name()));
+            let ran = r
+                .trace
+                .spans
+                .iter()
+                .filter(|s| matches!(s.lane, Lane::Device { .. }))
+                .count();
+            assert_eq!(ran, dag.num_kernels(), "seed {seed} {}", r.policy);
+        }
+    }
+}
+
+#[test]
+fn prop_fine_grained_never_slower_than_serialized_same_mapping() {
+    // More queues on the same device may reorder but must not increase the
+    // makespan beyond noise (the paper's core premise at fixed mapping).
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(seed);
+        let dag = random_dag(&mut rng);
+        // Whole DAG as one GPU component, like the motivation example.
+        let all: Vec<usize> = (0..dag.num_kernels()).collect();
+        let part = Partition::new(&dag, vec![(all, DeviceType::Gpu)]).unwrap();
+        let run = |q: usize| {
+            simulate(
+                &dag,
+                &part,
+                &Platform::paper_testbed(q, 0),
+                &PaperCost,
+                &mut Clustering,
+                &SimConfig::default(),
+            )
+            .unwrap()
+            .makespan
+        };
+        let coarse = run(1);
+        let fine = run(4);
+        assert!(
+            fine <= coarse * 1.02,
+            "seed {seed}: fine {fine} vs coarse {coarse}"
+        );
+    }
+}
+
+#[test]
+fn prop_queue_structures_execute_all_commands() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let dag = random_dag(&mut rng);
+        let part = random_partition(&mut rng, &dag);
+        let platform = Platform::paper_testbed(3, 2);
+        let r = simulate(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+        )
+        .unwrap();
+        // Every component finished with a recorded device + finish time.
+        for (c, t) in r.component_finish.iter().enumerate() {
+            assert!(t.is_finite(), "seed {seed}: component {c} never finished");
+        }
+    }
+}
