@@ -1,0 +1,17 @@
+"""Pytest bootstrap for the python/ tree.
+
+* Puts this directory on sys.path so ``pytest python/tests`` works from the
+  repo root (the tests import the ``compile`` package as a top-level name).
+* Skips collection entirely when JAX is unavailable — the kernel layer is
+  JAX/Pallas and has nothing to test without it.
+"""
+
+import importlib.util
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+collect_ignore_glob = []
+if importlib.util.find_spec("jax") is None:
+    collect_ignore_glob = ["tests/*"]

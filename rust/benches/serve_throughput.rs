@@ -1,0 +1,49 @@
+//! Bench SERVE — the multi-DAG serving layer: sequential replay vs
+//! concurrent multi-tenant serving of a seeded Poisson request stream, the
+//! same configuration the CI bench smoke runs (`pyschedcl serve`).
+
+use pyschedcl::benchkit::bench;
+use pyschedcl::cost::PaperCost;
+use pyschedcl::platform::Platform;
+use pyschedcl::report::format_serve_comparison;
+use pyschedcl::sched::{Clustering, LeastLoaded};
+use pyschedcl::serve::{
+    poisson_arrivals, serve_sequential, serve_sim, ServeConfig, ServeRequest, Workload,
+};
+
+fn stream(n: usize, seed: u64, beta: u64) -> Vec<ServeRequest> {
+    poisson_arrivals(seed, n, 2000.0)
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| ServeRequest::new(i, t, Workload::Head { beta }))
+        .collect()
+}
+
+fn main() {
+    println!("== serve: 32 attention-head requests, Poisson(2000/s), seed 7 ==");
+    let requests = stream(32, 7, 64);
+    let platform = Platform::paper_testbed(3, 1);
+    let cfg = ServeConfig::default();
+    let conc = serve_sim(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap();
+    let seq = serve_sequential(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap();
+    print!("{}", format_serve_comparison(&conc, &seq));
+
+    println!("\n== scale-out: same stream on 2 GPUs (least-loaded) ==");
+    let wide = Platform::scaled(2, 1, 3, 1);
+    let conc2 = serve_sim(&requests, &wide, &PaperCost, &mut LeastLoaded, &cfg).unwrap();
+    println!(
+        "2-GPU concurrent: span {:.1} ms  thru {:.1} req/s  p99 {:.2} ms (1-GPU: {:.1} req/s)",
+        conc2.makespan * 1e3,
+        conc2.throughput_rps,
+        conc2.p99_latency * 1e3,
+        conc.throughput_rps
+    );
+
+    println!("\nharness timing:");
+    bench("serve/sim_32req_concurrent", 2, 10, || {
+        serve_sim(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap()
+    });
+    bench("serve/sim_32req_sequential", 2, 10, || {
+        serve_sequential(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap()
+    });
+}

@@ -15,6 +15,9 @@ pub enum Error {
     Queue(String),
     /// Scheduling failure (deadlock, no matching device, ...).
     Sched(String),
+    /// Serving-layer admission rejection (malformed request spec, invalid
+    /// deadline/arrival, inconsistent partition, ...).
+    Admission(String),
     /// PJRT runtime failure (load/compile/execute).
     Runtime(String),
     /// Real-executor failure.
@@ -31,6 +34,7 @@ impl fmt::Display for Error {
             Error::Partition(m) => write!(f, "partition error: {m}"),
             Error::Queue(m) => write!(f, "queue error: {m}"),
             Error::Sched(m) => write!(f, "sched error: {m}"),
+            Error::Admission(m) => write!(f, "admission error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Exec(m) => write!(f, "exec error: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),

@@ -37,6 +37,8 @@ struct State {
     frontier: Vec<usize>,
     available: Vec<DeviceId>,
     est_free: Vec<f64>,
+    /// Components currently resident per device (multi-tenant serving).
+    tenants: Vec<usize>,
     ext_preds_left: Vec<usize>,
     comp_dispatched: Vec<bool>,
     comp_device: Vec<DeviceId>,
@@ -75,7 +77,8 @@ impl<'a> Shared<'a> {
 }
 
 /// Execute `partition` of `dag` for real: kernels run as AOT PJRT programs,
-/// `inputs` seeds the host buffers (keyed by DAG buffer id).
+/// `inputs` seeds the host buffers (keyed by DAG buffer id). Devices are
+/// leased exclusively per component (the paper's Algorithm 1).
 pub fn execute_dag(
     dag: &Dag,
     partition: &Partition,
@@ -85,6 +88,25 @@ pub fn execute_dag(
     runtime: &Arc<Runtime>,
     inputs: &HashMap<BufferId, Vec<f32>>,
 ) -> Result<ExecReport> {
+    execute_dag_multi(dag, partition, platform, cost, policy, runtime, inputs, 1)
+}
+
+/// Multi-tenant variant of [`execute_dag`] for the serving layer: up to
+/// `tenancy` components may be resident on one device concurrently, so
+/// independent DAG requests merged into one partition genuinely share the
+/// device's worker pool (bounded by its hardware queue cap).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_dag_multi(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    runtime: &Arc<Runtime>,
+    inputs: &HashMap<BufferId, Vec<f32>>,
+    tenancy: usize,
+) -> Result<ExecReport> {
+    let tenancy = tenancy.max(1);
     // Every kernel needs a bound artifact for real execution.
     for k in &dag.kernels {
         if k.artifact.is_none() {
@@ -133,6 +155,7 @@ pub fn execute_dag(
             frontier,
             available,
             est_free: vec![0.0; platform.devices.len()],
+            tenants: vec![0; platform.devices.len()],
             ext_preds_left,
             comp_dispatched: vec![false; ncomp],
             comp_device: vec![usize::MAX; ncomp],
@@ -162,6 +185,12 @@ pub fn execute_dag(
                 break;
             }
             let selection = {
+                // Cross-DAG load: resident-component fraction per device.
+                let load: Vec<f64> = st
+                    .tenants
+                    .iter()
+                    .map(|&t| t as f64 / tenancy as f64)
+                    .collect();
                 let view = SchedView {
                     now: shared.now(),
                     frontier: &st.frontier,
@@ -170,6 +199,7 @@ pub fn execute_dag(
                     partition,
                     dag,
                     est_free: &st.est_free,
+                    device_load: &load,
                     cost,
                 };
                 policy.select(&view)
@@ -177,17 +207,21 @@ pub fn execute_dag(
             match selection {
                 Some((comp, dev)) => {
                     st.frontier.retain(|&c| c != comp);
-                    st.available.retain(|&d| d != dev);
+                    st.tenants[dev] += 1;
+                    if st.tenants[dev] >= tenancy {
+                        st.available.retain(|&d| d != dev);
+                    }
                     st.comp_dispatched[comp] = true;
                     st.comp_device[comp] = dev;
-                    // EFT bookkeeping for HEFT.
+                    // EFT bookkeeping for HEFT; the backlog accumulates
+                    // across residents under multi-tenancy.
                     let device = platform.device(dev);
                     let solo: f64 = partition.components[comp]
                         .kernels
                         .iter()
                         .map(|&k| cost.exec_time(&dag.kernels[k], device))
                         .sum();
-                    st.est_free[dev] = shared.now() + solo;
+                    st.est_free[dev] = st.est_free[dev].max(shared.now()) + solo;
                     drop(st);
                     let sh = &shared;
                     let pf = platform;
@@ -315,8 +349,13 @@ fn run_component(
             }
             let ranks = &shared.comp_rank;
             st.frontier.sort_by(|&a, &b| ranks[b].total_cmp(&ranks[a]));
-            st.available.push(dev);
-            st.est_free[dev] = shared.now();
+            st.tenants[dev] -= 1;
+            if !st.available.contains(&dev) {
+                st.available.push(dev);
+            }
+            if st.tenants[dev] == 0 {
+                st.est_free[dev] = shared.now();
+            }
             st.comps_done += 1;
             shared.cv.notify_all();
         }

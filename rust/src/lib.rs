@@ -17,7 +17,11 @@
 //! * [`sim`] reproduces the paper's GTX-970 + i5-4690K testbed as a
 //!   discrete-event model; [`exec`] runs the same schedules for real on the
 //!   PJRT CPU client;
-//! * [`report`] regenerates every table/figure of §5.
+//! * [`serve`] turns the single-shot machinery into a multi-DAG serving
+//!   runtime: admission/batching of a request stream, multi-tenant device
+//!   sharing, per-request latency accounting;
+//! * [`report`] regenerates every table/figure of §5 plus the serving
+//!   comparison.
 
 pub mod benchkit;
 pub mod cost;
@@ -30,6 +34,7 @@ pub mod queue;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod spec;
 pub mod trace;

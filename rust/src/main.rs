@@ -13,6 +13,11 @@
 //! pyschedcl gantt --policy P [--heads 16] [--beta 512]   Fig. 13
 //! pyschedcl calibrate [--artifacts D] [--out F]   measure real kernel times
 //! pyschedcl autotune [--heads 16] [--beta 256] [--strategy hill|exhaustive]
+//! pyschedcl serve [--requests 32] [--arrival poisson|trace] [--trace F]
+//!                 [--rate 2000] [--policy P] [--workload head|layer|mm2|...]
+//!                 [--beta 64] [--heads 4] [--gpus 1] [--cpus 1]
+//!                 [--tenancy 4] [--batch-window-ms 2] [--seed 42]
+//!                 [--mode sim|real] [--json OUT]    multi-DAG serving
 //! ```
 
 use pyschedcl::cost::{CalibratedCost, CostModel, PaperCost};
@@ -21,8 +26,13 @@ use pyschedcl::exec::execute_dag;
 use pyschedcl::graph::Partition;
 use pyschedcl::platform::{DeviceType, Platform};
 use pyschedcl::report::experiments as expts;
+use pyschedcl::report::{format_serve_comparison, serve_bench_json};
 use pyschedcl::runtime::{manifest::default_artifact_dir, Runtime};
-use pyschedcl::sched::{Clustering, Eager, Heft, Policy};
+use pyschedcl::sched::{Clustering, Eager, Heft, LeastLoaded, Policy};
+use pyschedcl::serve::{
+    poisson_arrivals, serve_real, serve_sequential, serve_sim, trace_arrivals, ServeConfig,
+    ServeRequest, Workload,
+};
 use pyschedcl::sim::{simulate, SimConfig};
 use pyschedcl::spec::parse_spec;
 use std::collections::HashMap;
@@ -76,6 +86,7 @@ fn policy_by_name(name: &str) -> Result<Box<dyn Policy>> {
         "clustering" => Ok(Box::new(Clustering)),
         "eager" => Ok(Box::new(Eager)),
         "heft" => Ok(Box::new(Heft)),
+        "least-loaded" => Ok(Box::new(LeastLoaded)),
         other => Err(Error::Sched(format!("unknown policy '{other}'"))),
     }
 }
@@ -272,11 +283,138 @@ fn kernel_node_for(meta: &pyschedcl::runtime::ArtifactMeta) -> pyschedcl::graph:
     b.dag().kernels[k].clone()
 }
 
+/// `pyschedcl serve`: run a request stream through the multi-DAG serving
+/// layer (sim by default, `--mode real` over PJRT) and print the
+/// sequential-vs-concurrent comparison table. `--json PATH` additionally
+/// writes the BENCH_serve.json perf artifact.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.usize_or("requests", 32);
+    let seed = args.u64_or("seed", 42);
+    let beta = args.u64_or("beta", 64);
+    let heads = args.usize_or("heads", 4);
+    let h_cpu = args.usize_or("h-cpu", 0);
+    let rate = args
+        .get("rate")
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(2000.0);
+    let workload = Workload::parse(args.get("workload").unwrap_or("head"), heads, beta, h_cpu)?;
+
+    let arrivals = match args.get("arrival").unwrap_or("poisson") {
+        "poisson" => poisson_arrivals(seed, n, rate),
+        "trace" => {
+            let path = args
+                .get("trace")
+                .ok_or_else(|| Error::Io("--arrival trace requires --trace FILE".into()))?;
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| Error::Io(format!("cannot read {path}: {e}")))?;
+            let t = trace_arrivals(&text)?;
+            if t.len() < n {
+                return Err(Error::Admission(format!(
+                    "trace has {} arrivals, --requests {n}",
+                    t.len()
+                )));
+            }
+            t[..n].to_vec()
+        }
+        other => {
+            return Err(Error::Io(format!(
+                "unknown arrival process '{other}' (expected poisson|trace)"
+            )))
+        }
+    };
+    let requests: Vec<ServeRequest> = arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| ServeRequest::new(i, t, workload.clone()))
+        .collect();
+
+    let platform = Platform::scaled(
+        args.usize_or("gpus", 1),
+        args.usize_or("cpus", 1),
+        args.usize_or("queues-gpu", 3),
+        args.usize_or("queues-cpu", 1),
+    );
+    let cfg = ServeConfig {
+        batch_window: args
+            .get("batch-window-ms")
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or(2.0)
+            * 1e-3,
+        tenancy: args.usize_or("tenancy", 4),
+        sim: SimConfig::default(),
+    };
+    let policy_name = args.get("policy").unwrap_or("clustering");
+
+    println!(
+        "serving {n} × {} | arrival={} rate={rate}/s seed={seed} | {} gpu(s) {} cpu(s) \
+         tenancy={} | policy={policy_name}",
+        workload.signature(),
+        args.get("arrival").unwrap_or("poisson"),
+        args.usize_or("gpus", 1),
+        args.usize_or("cpus", 1),
+        cfg.tenancy,
+    );
+
+    if args.get("mode") == Some("real") {
+        let dir = args
+            .get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(default_artifact_dir);
+        let runtime = Arc::new(Runtime::new(&dir)?);
+        let mut policy = policy_by_name(policy_name)?;
+        let report = serve_real(
+            &requests,
+            &runtime,
+            &platform,
+            &PaperCost,
+            policy.as_mut(),
+            &cfg,
+            seed,
+        )?;
+        println!(
+            "real: served {} request(s) in {:.1} ms -> {:.1} req/s  p50 {:.2} ms  p99 {:.2} ms",
+            report.outcomes.len(),
+            report.makespan * 1e3,
+            report.throughput_rps,
+            report.p50_latency * 1e3,
+            report.p99_latency * 1e3
+        );
+        for (id, why) in &report.rejected {
+            println!("rejected #{id}: {why}");
+        }
+        if let Some(path) = args.get("json") {
+            let json = pyschedcl::json::Json::obj(vec![
+                ("schema", pyschedcl::json::Json::str("pyschedcl-serve-bench-v1")),
+                ("real", report.to_json()),
+            ]);
+            std::fs::write(path, json.to_string_pretty())
+                .map_err(|e| Error::Io(format!("cannot write {path}: {e}")))?;
+            println!("wrote {path}");
+        }
+        return Ok(());
+    }
+
+    let mut policy = policy_by_name(policy_name)?;
+    let concurrent = serve_sim(&requests, &platform, &PaperCost, policy.as_mut(), &cfg)?;
+    let mut policy = policy_by_name(policy_name)?;
+    let sequential = serve_sequential(&requests, &platform, &PaperCost, policy.as_mut(), &cfg)?;
+    print!("{}", format_serve_comparison(&concurrent, &sequential));
+
+    if let Some(path) = args.get("json") {
+        let json = serve_bench_json(&concurrent, &sequential);
+        std::fs::write(path, json.to_string_pretty())
+            .map_err(|e| Error::Io(format!("cannot write {path}: {e}")))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn main_inner() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         eprintln!(
-            "usage: pyschedcl <inspect|simulate|run|motivation|expt1|expt2|expt3|gantt|calibrate> ..."
+            "usage: pyschedcl <inspect|simulate|run|serve|motivation|expt1|expt2|expt3|gantt|\
+             calibrate|autotune> ..."
         );
         std::process::exit(2);
     };
@@ -285,6 +423,7 @@ fn main_inner() -> Result<()> {
         "inspect" => cmd_inspect(&args),
         "simulate" => cmd_simulate(&args),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "motivation" => cmd_motivation(&args),
         "expt1" => {
             let rows = expts::expt1(

@@ -43,6 +43,25 @@ impl Platform {
         }
     }
 
+    /// A serving-scale platform: `n_gpu` GTX-970-shaped devices (each with
+    /// its own DMA engine) plus `n_cpu` i5-shaped devices, with `q_gpu` /
+    /// `q_cpu` command queues each. `scaled(1, 1, q, q')` has the same
+    /// devices as [`Platform::paper_testbed`].
+    pub fn scaled(n_gpu: usize, n_cpu: usize, q_gpu: usize, q_cpu: usize) -> Self {
+        let mut devices = Vec::with_capacity(n_gpu + n_cpu);
+        for _ in 0..n_gpu {
+            devices.push(Device::gtx970(devices.len(), q_gpu));
+        }
+        for _ in 0..n_cpu {
+            devices.push(Device::i5_4690k(devices.len(), q_cpu));
+        }
+        Platform {
+            devices,
+            copy_engines: n_gpu.max(1),
+            ..Platform::paper_testbed(0, 0)
+        }
+    }
+
     pub fn device(&self, id: DeviceId) -> &Device {
         &self.devices[id]
     }
@@ -86,6 +105,19 @@ mod tests {
         // mc = (3, 0, _): CPU gets zero queues => not schedulable.
         let p = Platform::paper_testbed(3, 0);
         assert!(p.devices_of(DeviceType::Cpu).is_empty());
+    }
+
+    #[test]
+    fn scaled_platform_shapes() {
+        let p = Platform::scaled(2, 2, 3, 1);
+        assert_eq!(p.devices.len(), 4);
+        assert_eq!(p.devices_of(DeviceType::Gpu), vec![0, 1]);
+        assert_eq!(p.devices_of(DeviceType::Cpu), vec![2, 3]);
+        assert_eq!(p.copy_engines, 2);
+        // Ids are dense and positional (device() indexes by id).
+        for (i, d) in p.devices.iter().enumerate() {
+            assert_eq!(d.id, i);
+        }
     }
 
     #[test]

@@ -9,10 +9,15 @@
 //!
 //! Each function both returns structured rows (consumed by benches and
 //! integration tests) and renders the paper-style table via `Display`.
+//!
+//! [`serving`] adds the multi-DAG serving comparison (sequential replay vs
+//! concurrent multi-tenant serving) and the CI bench artifact.
 
 pub mod experiments;
+pub mod serving;
 
 pub use experiments::{
     expt1, expt2, expt3, gantt, motivation, BaselineRow, Expt1Row, MappingConfig,
     MotivationResult,
 };
+pub use serving::{format_serve_comparison, serve_bench_json};

@@ -1,0 +1,110 @@
+//! Serving-layer reporting: the sequential-vs-concurrent comparison table
+//! and the `BENCH_serve.json` artifact the CI bench smoke uploads.
+
+use crate::json::Json;
+use crate::serve::ServeReport;
+
+fn row(label: &str, r: &ServeReport) -> String {
+    let util: Vec<String> = r
+        .device_util
+        .iter()
+        .map(|u| format!("{:.0}%", u * 100.0))
+        .collect();
+    format!(
+        "{label:<11} | {:>4} | {:>9.1} | {:>10.1} | {:>8.2} | {:>8.2} | {}\n",
+        r.outcomes.len(),
+        r.makespan * 1e3,
+        r.throughput_rps,
+        r.p50_latency * 1e3,
+        r.p99_latency * 1e3,
+        util.join(" ")
+    )
+}
+
+/// Render the comparison table (latencies in ms, throughput in req/s).
+pub fn format_serve_comparison(concurrent: &ServeReport, sequential: &ServeReport) -> String {
+    let mut s = String::from(
+        "mode        | reqs | span (ms) | thru (r/s) | p50 (ms) | p99 (ms) | device util\n\
+         ------------+------+-----------+------------+----------+----------+------------\n",
+    );
+    s.push_str(&row("sequential", sequential));
+    s.push_str(&row("concurrent", concurrent));
+    if concurrent.makespan > 0.0 {
+        s.push_str(&format!(
+            "concurrent serving speedup over sequential replay: {:.2}x\n",
+            sequential.makespan / concurrent.makespan
+        ));
+    }
+    if !concurrent.rejected.is_empty() {
+        s.push_str(&format!("rejected: {} request(s)\n", concurrent.rejected.len()));
+        for (id, why) in &concurrent.rejected {
+            s.push_str(&format!("  #{id}: {why}\n"));
+        }
+    }
+    s
+}
+
+/// The `BENCH_serve.json` schema: throughput req/s and p50/p99 latency per
+/// mode, plus the headline speedup — the perf-trajectory artifact CI uploads.
+pub fn serve_bench_json(concurrent: &ServeReport, sequential: &ServeReport) -> Json {
+    let speedup = if concurrent.makespan > 0.0 {
+        sequential.makespan / concurrent.makespan
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("schema", Json::str("pyschedcl-serve-bench-v1")),
+        ("concurrent", concurrent.to_json()),
+        ("sequential", sequential.to_json()),
+        ("speedup", Json::num(speedup)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::platform::Platform;
+    use crate::sched::Clustering;
+    use crate::serve::{serve_sequential, serve_sim, ServeConfig, ServeRequest, Workload};
+
+    fn reports() -> (ServeReport, ServeReport) {
+        let platform = Platform::paper_testbed(3, 1);
+        let requests: Vec<ServeRequest> = (0..4)
+            .map(|i| ServeRequest::new(i, i as f64 * 1e-3, Workload::Head { beta: 64 }))
+            .collect();
+        let cfg = ServeConfig::default();
+        let conc = serve_sim(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap();
+        let seq =
+            serve_sequential(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap();
+        (conc, seq)
+    }
+
+    #[test]
+    fn table_carries_both_modes_and_speedup() {
+        let (conc, seq) = reports();
+        let table = format_serve_comparison(&conc, &seq);
+        assert!(table.contains("sequential"));
+        assert!(table.contains("concurrent"));
+        assert!(table.contains("speedup"));
+    }
+
+    #[test]
+    fn bench_json_schema_fields_present() {
+        let (conc, seq) = reports();
+        let json = serve_bench_json(&conc, &seq);
+        let text = json.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("schema").and_then(|s| s.as_str()),
+            Some("pyschedcl-serve-bench-v1")
+        );
+        for mode in ["concurrent", "sequential"] {
+            let m = parsed.get(mode).unwrap();
+            assert!(m.get("throughput_rps").and_then(|v| v.as_f64()).is_some());
+            assert!(m.get("p50_latency_s").and_then(|v| v.as_f64()).is_some());
+            assert!(m.get("p99_latency_s").and_then(|v| v.as_f64()).is_some());
+        }
+        assert!(parsed.get("speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+}

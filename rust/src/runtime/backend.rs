@@ -1,0 +1,406 @@
+//! Offline PJRT stand-in.
+//!
+//! The build environment has no `xla`/PJRT bindings crate, so this module
+//! provides the exact API surface [`super::client`] needs behind the same
+//! `xla::` names, backed by a pure-Rust reference interpreter for the AOT
+//! artifact inventory (gemm / softmax / transpose / vadd / vsin and the
+//! fused attention head). The interpreter keys on the artifact file name
+//! (`gemm_b256.hlo.txt` → op `gemm`); shapes come from the literals built
+//! against the manifest, so `execute_f32`'s shape checks still apply.
+//!
+//! Numerics match `python/compile/kernels/ref.py`: plain f32 matmul, row-wise
+//! stable softmax, element-wise sin/add — which is what the fused `head`
+//! artifact composes, so the executor's composed-vs-fused cross-checks hold.
+//! Swapping in real PJRT bindings means deleting this module and pointing
+//! `client.rs` back at the external crate; the call sites do not change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Backend error (mirrors `xla::Error`'s `to_string` usage).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+/// Element types `Literal::to_vec` can produce (only f32 is used here).
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// A host literal: an f32 tensor or a tuple of literals (AOT entry points
+/// lower with `return_tuple=True`).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    value: Value,
+}
+
+#[derive(Debug, Clone)]
+enum Value {
+    F32(Vec<f32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// A rank-1 f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            value: Value::F32(data.to_vec()),
+        }
+    }
+
+    fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal {
+            dims: vec![elems.len() as i64],
+            value: Value::Tuple(elems),
+        }
+    }
+
+    fn f32s(&self) -> Result<&[f32], Error> {
+        match &self.value {
+            Value::F32(v) => Ok(v),
+            Value::Tuple(_) => Err(err("expected a dense literal, found a tuple")),
+        }
+    }
+
+    /// Reinterpret the literal under new dimensions (element count checked).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        let have = self.f32s()?.len() as i64;
+        if want != have {
+            return Err(err(format!(
+                "reshape to {dims:?} ({want} elems) from {have} elems"
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            value: self.value.clone(),
+        })
+    }
+
+    /// Unpack a tuple literal; a dense literal unpacks to itself.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        match self.value {
+            Value::Tuple(elems) => Ok(elems),
+            Value::F32(_) => Ok(vec![self]),
+        }
+    }
+
+    /// Flatten to a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.f32s()?.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    fn dims2(&self) -> Result<(usize, usize), Error> {
+        match self.dims[..] {
+            [r, c] => Ok((r as usize, c as usize)),
+            _ => Err(err(format!("expected a 2-D literal, dims {:?}", self.dims))),
+        }
+    }
+}
+
+/// Parsed artifact handle: the op name recovered from the file stem.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    op: String,
+}
+
+impl HloModuleProto {
+    /// "Parse" an HLO text file: the file must exist (same failure mode as
+    /// the real text parser); the op is the stem prefix before `_`.
+    pub fn from_text_file(path: &str) -> Result<Self, Error> {
+        std::fs::read_to_string(path)
+            .map_err(|e| err(format!("cannot read HLO text {path}: {e}")))?;
+        let stem = Path::new(path)
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or(path);
+        let op = stem
+            .split(['_', '.'])
+            .next()
+            .unwrap_or(stem)
+            .to_string();
+        Ok(HloModuleProto { op })
+    }
+}
+
+/// A computation awaiting compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    op: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            op: proto.op.clone(),
+        }
+    }
+}
+
+/// The "client": op dispatch table for the reference interpreter.
+#[derive(Debug, Default)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-interp".to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        if !matches!(
+            comp.op.as_str(),
+            "gemm" | "matmul" | "softmax" | "transpose" | "vadd" | "vsin" | "head"
+        ) {
+            return Err(err(format!("unsupported artifact op '{}'", comp.op)));
+        }
+        Ok(PjRtLoadedExecutable { op: comp.op.clone() })
+    }
+}
+
+/// A device-resident result buffer.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer(Literal);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Ok(self.0.clone())
+    }
+}
+
+/// A compiled executable: interprets its op on the host.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    op: String,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over the input literals. Returns the PJRT shape
+    /// `[replica][output]`, with one tuple buffer per replica.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        let lits: Vec<&Literal> = args.iter().map(|a| a.borrow()).collect();
+        let outputs = interpret(&self.op, &lits)?;
+        Ok(vec![vec![PjRtBuffer(Literal::tuple(outputs))]])
+    }
+}
+
+// ------------------------------------------------------------- interpreter
+
+fn arity(op: &str, args: &[&Literal], want: usize) -> Result<(), Error> {
+    if args.len() != want {
+        return Err(err(format!("{op}: expected {want} inputs, got {}", args.len())));
+    }
+    Ok(())
+}
+
+fn matmul(a: &Literal, b: &Literal) -> Result<Literal, Error> {
+    let (m, k) = a.dims2()?;
+    let (k2, n) = b.dims2()?;
+    if k != k2 {
+        return Err(err(format!("gemm: inner dims {k} vs {k2}")));
+    }
+    let av = a.f32s()?;
+    let bv = b.f32s()?;
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = av[i * k + kk];
+            for j in 0..n {
+                c[i * n + j] += aik * bv[kk * n + j];
+            }
+        }
+    }
+    Ok(Literal {
+        dims: vec![m as i64, n as i64],
+        value: Value::F32(c),
+    })
+}
+
+fn transpose(x: &Literal) -> Result<Literal, Error> {
+    let (r, c) = x.dims2()?;
+    let xv = x.f32s()?;
+    let mut t = vec![0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            t[j * r + i] = xv[i * c + j];
+        }
+    }
+    Ok(Literal {
+        dims: vec![c as i64, r as i64],
+        value: Value::F32(t),
+    })
+}
+
+fn softmax(x: &Literal) -> Result<Literal, Error> {
+    let (r, c) = x.dims2()?;
+    let xv = x.f32s()?;
+    let mut out = vec![0f32; r * c];
+    for (row_in, row_out) in xv.chunks(c).zip(out.chunks_mut(c)) {
+        let m = row_in.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for (o, &v) in row_out.iter_mut().zip(row_in) {
+            *o = (v - m).exp();
+            sum += *o;
+        }
+        for o in row_out.iter_mut() {
+            *o /= sum;
+        }
+    }
+    Ok(Literal {
+        dims: vec![r as i64, c as i64],
+        value: Value::F32(out),
+    })
+}
+
+fn elementwise(x: &Literal, f: impl Fn(f32) -> f32) -> Result<Literal, Error> {
+    Ok(Literal {
+        dims: x.dims.clone(),
+        value: Value::F32(x.f32s()?.iter().map(|&v| f(v)).collect()),
+    })
+}
+
+fn interpret(op: &str, args: &[&Literal]) -> Result<Vec<Literal>, Error> {
+    match op {
+        "gemm" | "matmul" => {
+            arity(op, args, 2)?;
+            Ok(vec![matmul(args[0], args[1])?])
+        }
+        "transpose" => {
+            arity(op, args, 1)?;
+            Ok(vec![transpose(args[0])?])
+        }
+        "softmax" => {
+            arity(op, args, 1)?;
+            Ok(vec![softmax(args[0])?])
+        }
+        "vsin" => {
+            arity(op, args, 1)?;
+            Ok(vec![elementwise(args[0], f32::sin)?])
+        }
+        "vadd" => {
+            arity(op, args, 2)?;
+            let (a, b) = (args[0].f32s()?, args[1].f32s()?);
+            if a.len() != b.len() {
+                return Err(err(format!("vadd: lengths {} vs {}", a.len(), b.len())));
+            }
+            Ok(vec![Literal {
+                dims: args[0].dims.clone(),
+                value: Value::F32(a.iter().zip(b).map(|(x, y)| x + y).collect()),
+            }])
+        }
+        "head" => {
+            // The paper's 8-kernel attention head, fused (see model.head_fn):
+            // Q=XWq, K=XWk, V=XWv, A=Q·Kᵀ, B=softmax(A), C=B·V, Z=C·Wo.
+            arity(op, args, 5)?;
+            let (x, wq, wk, wv, wo) = (args[0], args[1], args[2], args[3], args[4]);
+            let q = matmul(x, wq)?;
+            let k = matmul(x, wk)?;
+            let v = matmul(x, wv)?;
+            let kt = transpose(&k)?;
+            let a = matmul(&q, &kt)?;
+            let b = softmax(&a)?;
+            let c = matmul(&b, &v)?;
+            Ok(vec![matmul(&c, wo)?])
+        }
+        other => Err(err(format!("unsupported artifact op '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lit2(data: &[f32], r: i64, c: i64) -> Literal {
+        Literal::vec1(data).reshape(&[r, c]).unwrap()
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let a = lit2(&[1.0, 2.0, 3.0, 4.0], 2, 2);
+        let b = lit2(&[5.0, 6.0, 7.0, 8.0], 2, 2);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.to_vec::<f32>().unwrap(), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrips() {
+        let x = lit2(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        let t = transpose(&x).unwrap();
+        assert_eq!(t.dims, vec![3, 2]);
+        let tt = transpose(&t).unwrap();
+        assert_eq!(tt.to_vec::<f32>().unwrap(), x.to_vec::<f32>().unwrap());
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = lit2(&[0.0, 1.0, 2.0, -1.0, 0.5, 3.0], 2, 3);
+        let s = softmax(&x).unwrap();
+        for row in s.to_vec::<f32>().unwrap().chunks(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn head_composes_the_kernel_chain() {
+        let n = 4usize;
+        let m: Vec<f32> = (0..n * n).map(|i| ((i * 7 % 5) as f32 - 2.0) / 3.0).collect();
+        let x = lit2(&m, n as i64, n as i64);
+        let composed = {
+            let q = matmul(&x, &x).unwrap();
+            let k = matmul(&x, &x).unwrap();
+            let v = matmul(&x, &x).unwrap();
+            let kt = transpose(&k).unwrap();
+            let a = matmul(&q, &kt).unwrap();
+            let b = softmax(&a).unwrap();
+            let c = matmul(&b, &v).unwrap();
+            matmul(&c, &x).unwrap()
+        };
+        let fused = interpret("head", &[&x, &x, &x, &x, &x]).unwrap();
+        assert_eq!(
+            fused[0].to_vec::<f32>().unwrap(),
+            composed.to_vec::<f32>().unwrap()
+        );
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let x = Literal::vec1(&[1.0, 2.0, 3.0]);
+        assert!(x.reshape(&[2, 2]).is_err());
+        assert!(x.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn unknown_op_rejected_at_compile() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation {
+            op: "fft".to_string(),
+        };
+        assert!(client.compile(&comp).is_err());
+    }
+}

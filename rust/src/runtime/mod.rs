@@ -5,7 +5,10 @@
 //! * [`manifest`] — `artifacts/manifest.json` (names, files, shapes, flops).
 //! * [`client`] — `PjRtClient::cpu()` wrapper with a compiled-executable
 //!   cache, thread-safe for the multi-queue real executor.
+//! * [`backend`] — offline PJRT stand-in: the `xla` API surface backed by a
+//!   pure-Rust reference interpreter (no bindings crate in this build).
 
+pub mod backend;
 pub mod client;
 pub mod manifest;
 

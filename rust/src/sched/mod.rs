@@ -13,11 +13,14 @@
 //!   components, one queue per device, any available device.
 //! * [`Heft`] — HEFT (Expt 3): singleton components, earliest-finish-time
 //!   device choice using profiled execution times.
+//! * [`LeastLoaded`] — serving policy: preference-honouring like clustering,
+//!   but spreads concurrent requests across matching devices by the
+//!   cross-DAG occupancy the multi-tenant [`SchedView`] exposes.
 
 pub mod autotune;
 pub mod policy;
 pub mod ranks;
 
 pub use autotune::{exhaustive, hill_climb, TuneResult, TuneSpace};
-pub use policy::{Clustering, Eager, Heft, Policy, SchedView};
+pub use policy::{Clustering, Eager, Heft, LeastLoaded, Policy, SchedView};
 pub use ranks::component_ranks;

@@ -19,6 +19,15 @@ pub struct SchedView<'a> {
     pub dag: &'a Dag,
     /// Estimated time each device becomes free (≤ now when idle).
     pub est_free: &'a [f64],
+    /// Cross-DAG busyness signal per device: 0 when idle, growing as the
+    /// device takes on work. The simulator reports Σ occupancy of running
+    /// kernels (may exceed 1.0); the real executor reports the
+    /// resident-component fraction (tenants/tenancy, capped at 1.0).
+    /// Policies should compare devices *relatively* (less vs more loaded),
+    /// not against absolute thresholds. Under multi-tenant serving several
+    /// components — possibly from different requests — share one device, so
+    /// `available` alone no longer says how loaded a device is.
+    pub device_load: &'a [f64],
     pub cost: &'a dyn CostModel,
 }
 
@@ -135,6 +144,40 @@ impl Policy for Heft {
     }
 }
 
+/// Load-aware serving policy: like [`Clustering`] it honours device-type
+/// preference, but among matching candidates it picks the device carrying
+/// the least cross-DAG occupancy (ties broken by earliest `est_free`) — the
+/// natural `select` for multi-tenant platforms with several GPUs serving
+/// concurrent requests.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl Policy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        for &comp in view.frontier {
+            let want = view.partition.components[comp].dev;
+            let best = view
+                .available
+                .iter()
+                .copied()
+                .filter(|&d| view.platform.device(d).dtype == want)
+                .min_by(|&a, &b| {
+                    view.device_load[a]
+                        .total_cmp(&view.device_load[b])
+                        .then_with(|| view.est_free[a].total_cmp(&view.est_free[b]))
+                });
+            if let Some(dev) = best {
+                return Some((comp, dev));
+            }
+        }
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +192,7 @@ mod tests {
         frontier: &'a [usize],
         available: &'a [DeviceId],
         est_free: &'a [f64],
+        device_load: &'a [f64],
     ) -> SchedView<'a> {
         SchedView {
             now: 0.0,
@@ -158,6 +202,7 @@ mod tests {
             partition: part,
             dag,
             est_free,
+            device_load,
             cost: &PaperCost,
         }
     }
@@ -169,14 +214,15 @@ mod tests {
         let platform = Platform::paper_testbed(2, 1);
         let frontier = [0usize, 1];
         let est = [0.0, 0.0];
+        let load = [0.0, 0.0];
         // Only the CPU (device 1) available: must pick comp 0 (cpu-pref).
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est);
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est, &load);
         assert_eq!(Clustering.select(&v), Some((0, 1)));
         // Only the GPU available: must skip comp 0 and pick comp 1.
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[0], &est);
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[0], &est, &load);
         assert_eq!(Clustering.select(&v), Some((1, 0)));
         // Nothing available: block.
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[], &est);
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[], &est, &load);
         assert_eq!(Clustering.select(&v), None);
     }
 
@@ -187,8 +233,9 @@ mod tests {
         let platform = Platform::paper_testbed(1, 1);
         let frontier = [0usize, 1];
         let est = [0.0, 0.0];
+        let load = [0.0, 0.0];
         // CPU-only availability: eager still dispatches there.
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est);
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est, &load);
         assert_eq!(Eager.select(&v), Some((0, 1)));
         assert_eq!(Eager.queues_for(platform.device(0)), 1);
     }
@@ -199,14 +246,15 @@ mod tests {
         let part = cluster_by_head(&dag, &ios, 0);
         let platform = Platform::paper_testbed(1, 1);
         let frontier = [0usize];
+        let load = [0.0, 0.0];
         // GPU busy for a short while; CPU idle. GEMM component is far
         // faster on the GPU, so HEFT blocks rather than take the CPU.
         let est = [0.005, 0.0];
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est);
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est, &load);
         assert_eq!(Heft.select(&v), None);
         // Once the GPU frees, it dispatches there.
         let est = [0.0, 0.0];
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[0, 1], &est);
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[0, 1], &est, &load);
         assert_eq!(Heft.select(&v), Some((0, 0)));
     }
 
@@ -217,7 +265,25 @@ mod tests {
         let platform = Platform::paper_testbed(1, 1);
         let frontier = [0usize];
         let est = [100.0, 0.0]; // GPU booked out for 100 s
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est);
+        let load = [0.0, 0.0];
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est, &load);
         assert_eq!(Heft.select(&v), Some((0, 1)));
+    }
+
+    #[test]
+    fn least_loaded_spreads_across_matching_devices() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0); // both components GPU-pref
+        let platform = Platform::scaled(2, 1, 3, 1); // two GPUs + one CPU
+        let frontier = [0usize, 1];
+        let est = [0.0, 0.0, 0.0];
+        // GPU 0 is half loaded, GPU 1 idle: pick GPU 1.
+        let load = [0.5, 0.0, 0.0];
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[0, 1, 2], &est, &load);
+        assert_eq!(LeastLoaded.select(&v), Some((0, 1)));
+        // Only the CPU available: a GPU-pref component blocks (preference
+        // honoured, unlike eager).
+        let v = view_fixture(&dag, &part, &platform, &frontier, &[2], &est, &load);
+        assert_eq!(LeastLoaded.select(&v), None);
     }
 }

@@ -1,0 +1,160 @@
+//! Admission control and the batching front-end.
+
+use super::request::ServeRequest;
+use crate::error::{Error, Result};
+use crate::graph::{Dag, Partition};
+
+/// Validate one request and materialize its application. Every rejection is
+/// a typed [`Error::Admission`] naming the request id.
+pub fn admit(req: &ServeRequest) -> Result<(Dag, Partition)> {
+    let reject = |msg: String| Error::Admission(format!("request {}: {msg}", req.id));
+    if !req.arrival.is_finite() || req.arrival < 0.0 {
+        return Err(reject(format!("invalid arrival time {}", req.arrival)));
+    }
+    if let Some(d) = req.deadline {
+        if !d.is_finite() || d <= 0.0 {
+            return Err(reject(format!("non-positive deadline {d}")));
+        }
+    }
+    let (dag, partition) = req
+        .workload
+        .instantiate()
+        .map_err(|e| reject(e.to_string()))?;
+    if dag.num_kernels() == 0 {
+        return Err(reject("empty DAG".into()));
+    }
+    dag.validate().map_err(|e| reject(e.to_string()))?;
+    if partition.assignment.len() != dag.num_kernels() {
+        return Err(reject(format!(
+            "partition covers {} kernels, DAG has {}",
+            partition.assignment.len(),
+            dag.num_kernels()
+        )));
+    }
+    if partition.components.is_empty() {
+        return Err(reject("partition has no components".into()));
+    }
+    Ok((dag, partition))
+}
+
+/// A coalesced dispatch group: compatible requests arriving within the
+/// batching window of the group opener share one release instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    /// Coalesced dispatch instant: the latest member arrival (the batch
+    /// waits for its slowest member, never reorders time backwards).
+    pub release: f64,
+    /// Indices into the admitted-request list, arrival order.
+    pub members: Vec<usize>,
+}
+
+/// Group `requests` (must be sorted by arrival) into batches: a request
+/// joins the open batch iff its workload signature matches the opener's and
+/// it arrives within `window` seconds of the opener. `window <= 0` disables
+/// coalescing (one batch per request).
+pub fn batch_requests(requests: &[ServeRequest], window: f64) -> Vec<Batch> {
+    let mut batches: Vec<Batch> = Vec::new();
+    let mut open: Option<(String, f64)> = None; // (signature, opener arrival)
+    for (i, req) in requests.iter().enumerate() {
+        let sig = req.workload.signature();
+        let joins = match (&open, window > 0.0) {
+            (Some((osig, oarr)), true) => *osig == sig && req.arrival <= oarr + window,
+            _ => false,
+        };
+        if joins {
+            let b = batches.last_mut().expect("open batch exists");
+            b.members.push(i);
+            b.release = b.release.max(req.arrival);
+        } else {
+            open = Some((sig, req.arrival));
+            batches.push(Batch {
+                release: req.arrival,
+                members: vec![i],
+            });
+        }
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::Workload;
+
+    fn head_req(id: usize, arrival: f64) -> ServeRequest {
+        ServeRequest::new(id, arrival, Workload::Head { beta: 64 })
+    }
+
+    #[test]
+    fn admit_accepts_well_formed_requests() {
+        let (dag, part) = admit(&head_req(0, 0.0)).unwrap();
+        assert_eq!(dag.num_kernels(), 8);
+        assert_eq!(part.components.len(), 1);
+    }
+
+    #[test]
+    fn admit_rejects_bad_arrival_and_deadline() {
+        let mut r = head_req(3, -1.0);
+        assert!(matches!(admit(&r), Err(Error::Admission(_))));
+        r.arrival = 0.0;
+        r.deadline = Some(0.0);
+        let e = admit(&r).unwrap_err();
+        assert!(matches!(e, Error::Admission(_)));
+        assert!(e.to_string().contains("request 3"), "{e}");
+    }
+
+    #[test]
+    fn admit_rejects_malformed_spec_workloads() {
+        // A cyclic DAG assembled from raw parts (DagBuilder would refuse it).
+        let cyclic = {
+            let mut b = crate::graph::DagBuilder::new();
+            let k0 = b.kernel("a", crate::platform::DeviceType::Gpu, 1, 1);
+            let k1 = b.kernel("b", crate::platform::DeviceType::Gpu, 1, 1);
+            let o0 = b.out_buf(k0, 4);
+            let i0 = b.in_buf(k0, 4);
+            let o1 = b.out_buf(k1, 4);
+            let i1 = b.in_buf(k1, 4);
+            b.edge(o0, i1);
+            b.edge(o1, i0);
+            let mut dag = b.dag().clone();
+            dag.reindex();
+            dag
+        };
+        let partition = Partition {
+            components: vec![],
+            assignment: vec![],
+        };
+        let r = ServeRequest::new(
+            9,
+            0.0,
+            Workload::Spec {
+                dag: cyclic,
+                partition,
+            },
+        );
+        let e = admit(&r).unwrap_err();
+        assert!(matches!(e, Error::Admission(_)), "{e}");
+    }
+
+    #[test]
+    fn batching_coalesces_compatible_close_arrivals() {
+        let reqs = vec![
+            head_req(0, 0.000),
+            head_req(1, 0.001),                                        // joins
+            ServeRequest::new(2, 0.0015, Workload::Mm2 { beta: 64 }), // wrong class
+            head_req(3, 0.010),                                        // outside window
+        ];
+        let batches = batch_requests(&reqs, 0.002);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].members, vec![0, 1]);
+        assert!((batches[0].release - 0.001).abs() < 1e-12);
+        assert_eq!(batches[1].members, vec![2]);
+        assert_eq!(batches[2].members, vec![3]);
+    }
+
+    #[test]
+    fn zero_window_disables_coalescing() {
+        let reqs = vec![head_req(0, 0.0), head_req(1, 0.0)];
+        assert_eq!(batch_requests(&reqs, 0.0).len(), 2);
+    }
+}

@@ -1,0 +1,101 @@
+//! Arrival processes for the serving stream.
+//!
+//! Both are deterministic given their inputs — a hard requirement for the
+//! CI bench smoke and the seeded serving tests.
+
+use crate::error::{Error, Result};
+use crate::json::Json;
+
+/// xorshift64* uniform in (0, 1].
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15).max(1))
+    }
+
+    fn next_unit(&mut self) -> f64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        let v = self.0.wrapping_mul(0x2545F4914F6CDD1D);
+        ((v >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+    }
+}
+
+/// `n` Poisson arrivals at `rate` requests/second: exponential
+/// inter-arrival gaps via inverse-CDF sampling, seeded and reproducible.
+pub fn poisson_arrivals(seed: u64, n: usize, rate: f64) -> Vec<f64> {
+    let rate = if rate.is_finite() && rate > 0.0 { rate } else { 1.0 };
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += -rng.next_unit().ln() / rate;
+            t
+        })
+        .collect()
+}
+
+/// Parse a trace file: a JSON array of non-negative arrival instants
+/// (seconds), e.g. `[0.0, 0.0021, 0.0058]`. Returned sorted ascending.
+pub fn trace_arrivals(text: &str) -> Result<Vec<f64>> {
+    let root = Json::parse(text)?;
+    let arr = root
+        .as_arr()
+        .ok_or_else(|| Error::Admission("arrival trace must be a JSON array".into()))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        let t = v
+            .as_f64()
+            .ok_or_else(|| Error::Admission("arrival trace entries must be numbers".into()))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(Error::Admission(format!("invalid arrival instant {t}")));
+        }
+        out.push(t);
+    }
+    out.sort_by(|a, b| a.total_cmp(b));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_deterministic_and_monotone() {
+        let a = poisson_arrivals(42, 64, 500.0);
+        let b = poisson_arrivals(42, 64, 500.0);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[1] >= w[0]));
+        assert!(a.iter().all(|&t| t > 0.0 && t.is_finite()));
+        // Different seed, different stream.
+        assert_ne!(a, poisson_arrivals(43, 64, 500.0));
+    }
+
+    #[test]
+    fn poisson_mean_gap_tracks_rate() {
+        let a = poisson_arrivals(7, 4000, 100.0);
+        let mean_gap = a.last().unwrap() / a.len() as f64;
+        assert!((mean_gap - 0.01).abs() < 0.002, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn trace_parses_and_sorts() {
+        let t = trace_arrivals("[0.003, 0.001, 0.002]").unwrap();
+        assert_eq!(t, vec![0.001, 0.002, 0.003]);
+    }
+
+    #[test]
+    fn trace_rejects_garbage() {
+        assert!(matches!(
+            trace_arrivals("{\"a\": 1}"),
+            Err(Error::Admission(_))
+        ));
+        assert!(matches!(trace_arrivals("[-1.0]"), Err(Error::Admission(_))));
+        assert!(matches!(
+            trace_arrivals("[\"soon\"]"),
+            Err(Error::Admission(_))
+        ));
+    }
+}

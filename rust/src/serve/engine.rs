@@ -1,0 +1,349 @@
+//! The serving engine: concurrent multi-DAG scheduling over the simulator,
+//! plus the sequential-replay baseline every serving run is judged against.
+
+use super::admission::{admit, batch_requests};
+use super::merge::merge_apps;
+use super::request::ServeRequest;
+use crate::cost::CostModel;
+use crate::error::Result;
+use crate::graph::{Dag, Partition};
+use crate::json::Json;
+use crate::platform::Platform;
+use crate::sched::Policy;
+use crate::sim::{simulate, simulate_released, SimConfig};
+use crate::trace::Lane;
+
+/// Serving-layer knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Batching window: compatible requests arriving within this many
+    /// seconds of a batch opener coalesce into one dispatch group.
+    pub batch_window: f64,
+    /// Max task components resident per device at once (multi-tenancy).
+    pub tenancy: usize,
+    /// Underlying simulator knobs.
+    pub sim: SimConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch_window: 2e-3,
+            tenancy: 4,
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+/// Per-request accounting.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: usize,
+    pub arrival: f64,
+    /// Instant the request's components became dispatchable (batch release
+    /// in concurrent mode; service start in sequential replay).
+    pub release: f64,
+    /// Instant the last of its components finished.
+    pub finish: f64,
+    /// End-to-end latency: `finish - arrival`.
+    pub latency: f64,
+    /// Whether the deadline was met (requests without deadlines: `None`).
+    pub deadline_met: Option<bool>,
+}
+
+/// Aggregate serving statistics for one run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub policy: String,
+    /// `"concurrent"` (multi-tenant serving) or `"sequential"` (replay).
+    pub mode: &'static str,
+    pub outcomes: Vec<RequestOutcome>,
+    /// `(request id, admission error)` per rejected request.
+    pub rejected: Vec<(usize, String)>,
+    /// Time from epoch to the last completion.
+    pub makespan: f64,
+    pub throughput_rps: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    /// Compute busy fraction per device over the makespan.
+    pub device_util: Vec<f64>,
+}
+
+impl ServeReport {
+    /// The BENCH_serve.json building block.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(self.mode)),
+            ("policy", Json::str(self.policy.clone())),
+            ("requests", Json::num(self.outcomes.len() as f64)),
+            ("rejected", Json::num(self.rejected.len() as f64)),
+            ("makespan_s", Json::num(self.makespan)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("p50_latency_s", Json::num(self.p50_latency)),
+            ("p99_latency_s", Json::num(self.p99_latency)),
+            (
+                "device_util",
+                Json::Arr(self.device_util.iter().map(|&u| Json::num(u)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Nearest-rank percentile over unsorted latencies; 0 when empty.
+pub fn percentile(values: &[f64], q: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((sorted.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
+}
+
+/// Sort by arrival, admit each request; returns (admitted requests,
+/// their instantiated apps, typed rejections).
+pub(crate) type Admitted = (Vec<ServeRequest>, Vec<(Dag, Partition)>, Vec<(usize, String)>);
+
+/// Shared admission front-end for the sim and real serving paths: arrival
+/// order, priority-descending tie-break, then id.
+pub(crate) fn admit_all(requests: &[ServeRequest]) -> Admitted {
+    let mut sorted: Vec<ServeRequest> = requests.to_vec();
+    sorted.sort_by(|a, b| {
+        a.arrival
+            .total_cmp(&b.arrival)
+            .then_with(|| b.priority.cmp(&a.priority))
+            .then_with(|| a.id.cmp(&b.id))
+    });
+    let mut admitted = Vec::new();
+    let mut apps = Vec::new();
+    let mut rejected = Vec::new();
+    for req in sorted {
+        match admit(&req) {
+            Ok(app) => {
+                admitted.push(req);
+                apps.push(app);
+            }
+            Err(e) => rejected.push((req.id, e.to_string())),
+        }
+    }
+    (admitted, apps, rejected)
+}
+
+fn build_report(
+    mode: &'static str,
+    policy: &str,
+    outcomes: Vec<RequestOutcome>,
+    rejected: Vec<(usize, String)>,
+    makespan: f64,
+    device_util: Vec<f64>,
+) -> ServeReport {
+    let latencies: Vec<f64> = outcomes.iter().map(|o| o.latency).collect();
+    let throughput_rps = if makespan > 0.0 {
+        outcomes.len() as f64 / makespan
+    } else {
+        0.0
+    };
+    ServeReport {
+        policy: policy.to_string(),
+        mode,
+        outcomes,
+        rejected,
+        makespan,
+        throughput_rps,
+        p50_latency: percentile(&latencies, 0.50),
+        p99_latency: percentile(&latencies, 0.99),
+        device_util,
+    }
+}
+
+/// Serve the request stream **concurrently**: admit, batch, merge every
+/// admitted app into one multi-tenant application, and run it through
+/// [`simulate_released`] with per-component release times — requests share
+/// devices (up to `cfg.tenancy` residents each) under `policy`.
+pub fn serve_sim(
+    requests: &[ServeRequest],
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let (admitted, apps, rejected) = admit_all(requests);
+    if admitted.is_empty() {
+        return Ok(build_report(
+            "concurrent",
+            policy.name(),
+            Vec::new(),
+            rejected,
+            0.0,
+            vec![0.0; platform.devices.len()],
+        ));
+    }
+    let batches = batch_requests(&admitted, cfg.batch_window);
+    let merged = merge_apps(&apps)?;
+    let mut releases = vec![0.0; merged.partition.components.len()];
+    for b in &batches {
+        for &m in &b.members {
+            for c in merged.component_ranges[m].clone() {
+                releases[c] = b.release;
+            }
+        }
+    }
+    let mut sim_cfg = cfg.sim.clone();
+    sim_cfg.max_tenants = cfg.tenancy.max(1);
+    let sim = simulate_released(
+        &merged.dag,
+        &merged.partition,
+        platform,
+        cost,
+        policy,
+        &sim_cfg,
+        &releases,
+    )?;
+
+    let outcomes = admitted
+        .iter()
+        .enumerate()
+        .map(|(i, req)| {
+            let range = merged.component_ranges[i].clone();
+            let release = releases[range.start];
+            let finish = range
+                .map(|c| sim.component_finish[c])
+                .fold(0.0f64, f64::max);
+            let latency = finish - req.arrival;
+            RequestOutcome {
+                id: req.id,
+                arrival: req.arrival,
+                release,
+                finish,
+                latency,
+                deadline_met: req.deadline.map(|d| latency <= d),
+            }
+        })
+        .collect();
+
+    let makespan = sim.makespan;
+    let device_util = (0..platform.devices.len())
+        .map(|d| {
+            let busy = sim
+                .trace
+                .busy_time(|l| matches!(l, Lane::Device { dev, .. } if *dev == d));
+            if makespan > 0.0 {
+                busy / makespan
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    Ok(build_report(
+        "concurrent",
+        &sim.policy,
+        outcomes,
+        rejected,
+        makespan,
+        device_util,
+    ))
+}
+
+/// The baseline: replay the same stream **sequentially** — each admitted
+/// request runs through the single-shot [`simulate`] in arrival order, one
+/// at a time, exactly as the paper's single-application flow would serve a
+/// queue of users.
+pub fn serve_sequential(
+    requests: &[ServeRequest],
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let (admitted, apps, rejected) = admit_all(requests);
+    let mut sim_cfg = cfg.sim.clone();
+    sim_cfg.max_tenants = 1;
+    let mut clock = 0.0f64;
+    let mut busy = vec![0.0f64; platform.devices.len()];
+    let mut outcomes = Vec::with_capacity(admitted.len());
+    for (req, (dag, part)) in admitted.iter().zip(&apps) {
+        let r = simulate(dag, part, platform, cost, policy, &sim_cfg)?;
+        let start = clock.max(req.arrival);
+        let finish = start + r.makespan;
+        clock = finish;
+        for (d, b) in busy.iter_mut().enumerate() {
+            *b += r
+                .trace
+                .busy_time(|l| matches!(l, Lane::Device { dev, .. } if *dev == d));
+        }
+        let latency = finish - req.arrival;
+        outcomes.push(RequestOutcome {
+            id: req.id,
+            arrival: req.arrival,
+            release: start,
+            finish,
+            latency,
+            deadline_met: req.deadline.map(|d| latency <= d),
+        });
+    }
+    let device_util = busy
+        .into_iter()
+        .map(|b| if clock > 0.0 { b / clock } else { 0.0 })
+        .collect();
+    Ok(build_report(
+        "sequential",
+        policy.name(),
+        outcomes,
+        rejected,
+        clock,
+        device_util,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::sched::Clustering;
+    use crate::serve::request::Workload;
+
+    #[test]
+    fn empty_stream_serves_trivially() {
+        let platform = Platform::paper_testbed(3, 1);
+        let r = serve_sim(
+            &[],
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &ServeConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(r.outcomes.len(), 0);
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.throughput_rps, 0.0);
+    }
+
+    #[test]
+    fn rejections_are_reported_not_fatal() {
+        let platform = Platform::paper_testbed(3, 1);
+        let mut bad = ServeRequest::new(7, 0.0, Workload::Head { beta: 64 });
+        bad.deadline = Some(-1.0);
+        let good = ServeRequest::new(8, 0.0, Workload::Head { beta: 64 });
+        let r = serve_sim(
+            &[bad, good],
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &ServeConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(r.outcomes.len(), 1);
+        assert_eq!(r.rejected.len(), 1);
+        assert_eq!(r.rejected[0].0, 7);
+        assert!(r.rejected[0].1.contains("admission"), "{}", r.rejected[0].1);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert_eq!(percentile(&v, 0.5), 3.0); // round(1.5) = 2 → 3.0
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Fusing many application DAGs into one multi-tenant application.
+//!
+//! Requests stay independent (no cross-request edges), so the merged DAG is
+//! a disjoint union with kernel/buffer/component ids offset per app. The
+//! scheduler then sees one frontier spanning every admitted request — which
+//! is exactly what lets the existing `Policy` trait arbitrate *between*
+//! requests with no API change.
+
+use crate::error::Result;
+use crate::graph::{Dag, Partition};
+use std::ops::Range;
+
+/// The merged application plus the maps back to its constituent apps.
+#[derive(Debug, Clone)]
+pub struct MergedApp {
+    pub dag: Dag,
+    pub partition: Partition,
+    /// Per input app: its component ids in the merged partition.
+    pub component_ranges: Vec<Range<usize>>,
+    /// Per input app: its first kernel id in the merged DAG.
+    pub kernel_offsets: Vec<usize>,
+    /// Per input app: its first buffer id in the merged DAG.
+    pub buffer_offsets: Vec<usize>,
+}
+
+/// Disjoint union of `apps` (each a validated dag + partition).
+pub fn merge_apps(apps: &[(Dag, Partition)]) -> Result<MergedApp> {
+    let mut dag = Dag::default();
+    let mut groups: Vec<(Vec<usize>, crate::platform::DeviceType)> = Vec::new();
+    let mut component_ranges = Vec::with_capacity(apps.len());
+    let mut kernel_offsets = Vec::with_capacity(apps.len());
+    let mut buffer_offsets = Vec::with_capacity(apps.len());
+
+    for (app_dag, app_part) in apps {
+        let ko = dag.kernels.len();
+        let bo = dag.buffers.len();
+        kernel_offsets.push(ko);
+        buffer_offsets.push(bo);
+        for k in &app_dag.kernels {
+            let mut k = k.clone();
+            k.id += ko;
+            for b in k.inputs.iter_mut().chain(k.outputs.iter_mut()) {
+                *b += bo;
+            }
+            dag.kernels.push(k);
+        }
+        for b in &app_dag.buffers {
+            let mut b = b.clone();
+            b.id += bo;
+            b.kernel += ko;
+            dag.buffers.push(b);
+        }
+        for &(src, dst) in &app_dag.buffer_edges {
+            dag.buffer_edges.push((src + bo, dst + bo));
+        }
+        let comp_base = groups.len();
+        for c in &app_part.components {
+            groups.push((c.kernels.iter().map(|&k| k + ko).collect(), c.dev));
+        }
+        component_ranges.push(comp_base..groups.len());
+    }
+
+    dag.reindex();
+    dag.validate()?;
+    let partition = Partition::new(&dag, groups)?;
+    Ok(MergedApp {
+        dag,
+        partition,
+        component_ranges,
+        kernel_offsets,
+        buffer_offsets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::DeviceType;
+    use crate::transformer::{cluster_by_head, head_dag, vadd_vsin_dag};
+
+    fn head_app() -> (Dag, Partition) {
+        let (dag, io) = head_dag(64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, std::slice::from_ref(&io), 0);
+        (dag, part)
+    }
+
+    #[test]
+    fn merge_is_a_disjoint_union() {
+        let apps = vec![head_app(), head_app(), head_app()];
+        let m = merge_apps(&apps).unwrap();
+        assert_eq!(m.dag.num_kernels(), 3 * 8);
+        assert_eq!(m.partition.components.len(), 3);
+        assert_eq!(m.component_ranges, vec![0..1, 1..2, 2..3]);
+        assert_eq!(m.kernel_offsets, vec![0, 8, 16]);
+        // No cross-app edges: every edge stays within one app's id band.
+        for (app, &bo) in m.buffer_offsets.iter().enumerate() {
+            let hi = m
+                .buffer_offsets
+                .get(app + 1)
+                .copied()
+                .unwrap_or(m.dag.buffers.len());
+            for &(s, d) in &m.dag.buffer_edges {
+                let s_in = (bo..hi).contains(&s);
+                let d_in = (bo..hi).contains(&d);
+                assert_eq!(s_in, d_in, "edge ({s},{d}) crosses app boundary");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_of_one_app_is_identity_shaped() {
+        let (dag, part) = head_app();
+        let m = merge_apps(&[(dag.clone(), part.clone())]).unwrap();
+        assert_eq!(m.dag.num_kernels(), dag.num_kernels());
+        assert_eq!(m.dag.buffer_edges, dag.buffer_edges);
+        assert_eq!(m.partition.components.len(), part.components.len());
+        assert_eq!(m.partition.assignment, part.assignment);
+    }
+
+    #[test]
+    fn merged_heterogeneous_apps_validate() {
+        let (vdag, vks) = vadd_vsin_dag(4096);
+        let vpart = Partition::singletons(&vdag);
+        let apps = vec![head_app(), (vdag, vpart)];
+        let m = merge_apps(&apps).unwrap();
+        m.dag.validate().unwrap();
+        assert_eq!(m.partition.components.len(), 1 + 2);
+        // The vadd→vsin dependency survives the offset.
+        let vadd_merged = vks[0] + m.kernel_offsets[1];
+        let vsin_merged = vks[1] + m.kernel_offsets[1];
+        assert_eq!(m.dag.kernel_succs(vadd_merged), vec![vsin_merged]);
+    }
+}

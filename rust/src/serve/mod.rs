@@ -1,0 +1,40 @@
+//! The multi-DAG serving layer.
+//!
+//! The paper schedules *one* application DAG at a time; a production system
+//! serves a **stream** of DAG requests that must share the platform. This
+//! subsystem turns the single-shot machinery into a runtime:
+//!
+//! * [`request`] — a [`ServeRequest`] (arrival, deadline, priority) wrapping
+//!   a [`Workload`] (generator-based or a parsed spec);
+//! * [`arrival`] — deterministic seeded Poisson and trace-file arrival
+//!   processes;
+//! * [`admission`] — request validation with typed [`crate::Error::Admission`]
+//!   rejections, plus the batching front-end that coalesces compatible
+//!   requests arriving within a window;
+//! * [`merge`] — fuses many application DAG/partition pairs into one
+//!   multi-tenant application with component↔request maps;
+//! * [`engine`] — the simulated serving path ([`serve_sim`]) over
+//!   [`crate::sim::simulate_released`] and the sequential-replay baseline
+//!   ([`serve_sequential`]), with per-request makespan/latency accounting;
+//! * [`real`] — the real path over [`crate::exec::execute_dag_multi`]'s
+//!   thread-per-queue machinery (PJRT kernels).
+//!
+//! Multi-tenancy itself lives one layer down: `SimConfig::max_tenants` /
+//! `execute_dag_multi`'s `tenancy` let several components — from different
+//! requests — reside on one device, and the widened
+//! [`crate::sched::SchedView`] exposes the resulting cross-DAG device load
+//! to every [`crate::sched::Policy`].
+
+pub mod admission;
+pub mod arrival;
+pub mod engine;
+pub mod merge;
+pub mod real;
+pub mod request;
+
+pub use admission::{admit, batch_requests, Batch};
+pub use arrival::{poisson_arrivals, trace_arrivals};
+pub use engine::{serve_sequential, serve_sim, RequestOutcome, ServeConfig, ServeReport};
+pub use merge::{merge_apps, MergedApp};
+pub use real::serve_real;
+pub use request::{ServeRequest, Workload};

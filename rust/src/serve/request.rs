@@ -1,0 +1,156 @@
+//! Serving requests and their workloads.
+
+use crate::error::{Error, Result};
+use crate::graph::{Dag, Partition};
+use crate::platform::DeviceType;
+use crate::transformer::{cluster_by_head, head_dag, polybench, transformer_dag};
+
+/// One DAG request in the serving stream.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Caller-assigned id (unique within one serving run).
+    pub id: usize,
+    /// Arrival instant, seconds since the serving epoch.
+    pub arrival: f64,
+    /// Optional latency budget (seconds from arrival).
+    pub deadline: Option<f64>,
+    /// Larger = more urgent; tie-breaker within a batch window.
+    pub priority: u32,
+    pub workload: Workload,
+}
+
+impl ServeRequest {
+    /// A plain request: arrival only, no deadline, default priority.
+    pub fn new(id: usize, arrival: f64, workload: Workload) -> Self {
+        ServeRequest {
+            id,
+            arrival,
+            deadline: None,
+            priority: 0,
+            workload,
+        }
+    }
+}
+
+/// What a request wants executed. Generator variants instantiate the
+/// paper's workloads; `Spec` carries a pre-built application (e.g. from a
+/// parsed spec file) and is validated at admission.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// One attention head (the Figs. 4/5 DAG), clustered as one component.
+    Head { beta: u64 },
+    /// An H-head transformer layer, one component per head, the first
+    /// `h_cpu` heads preferring the CPU (Expt 1's knob).
+    Layer { heads: usize, beta: u64, h_cpu: usize },
+    /// Polybench pipelines, each clustered as one GPU component.
+    Mm2 { beta: u64 },
+    Mm3 { beta: u64 },
+    Atax { beta: u64 },
+    Bicg { beta: u64 },
+    Mvt { beta: u64 },
+    /// A pre-built application (dag + partition), e.g. from a spec file.
+    Spec { dag: Dag, partition: Partition },
+}
+
+impl Workload {
+    /// Batching compatibility key: requests with equal signatures arriving
+    /// close together may be coalesced into one dispatch group.
+    pub fn signature(&self) -> String {
+        match self {
+            Workload::Head { beta } => format!("head_b{beta}"),
+            Workload::Layer { heads, beta, h_cpu } => {
+                format!("layer_h{heads}_b{beta}_c{h_cpu}")
+            }
+            Workload::Mm2 { beta } => format!("mm2_b{beta}"),
+            Workload::Mm3 { beta } => format!("mm3_b{beta}"),
+            Workload::Atax { beta } => format!("atax_b{beta}"),
+            Workload::Bicg { beta } => format!("bicg_b{beta}"),
+            Workload::Mvt { beta } => format!("mvt_b{beta}"),
+            Workload::Spec { dag, .. } => format!("spec_k{}", dag.num_kernels()),
+        }
+    }
+
+    /// Materialize the application DAG and its task-component partition.
+    pub fn instantiate(&self) -> Result<(Dag, Partition)> {
+        let whole_gpu = |dag: Dag| -> Result<(Dag, Partition)> {
+            let all: Vec<usize> = (0..dag.num_kernels()).collect();
+            let part = Partition::new(&dag, vec![(all, DeviceType::Gpu)])?;
+            Ok((dag, part))
+        };
+        match self {
+            Workload::Head { beta } => {
+                let (dag, io) = head_dag(*beta, DeviceType::Gpu);
+                let part = cluster_by_head(&dag, std::slice::from_ref(&io), 0);
+                Ok((dag, part))
+            }
+            Workload::Layer { heads, beta, h_cpu } => {
+                let (dag, ios) = transformer_dag(*heads, *beta, DeviceType::Gpu);
+                let part = cluster_by_head(&dag, &ios, *h_cpu);
+                Ok((dag, part))
+            }
+            Workload::Mm2 { beta } => whole_gpu(polybench::mm2_dag(*beta, DeviceType::Gpu).0),
+            Workload::Mm3 { beta } => whole_gpu(polybench::mm3_dag(*beta, DeviceType::Gpu).0),
+            Workload::Atax { beta } => whole_gpu(polybench::atax_dag(*beta, DeviceType::Gpu).0),
+            Workload::Bicg { beta } => whole_gpu(polybench::bicg_dag(*beta, DeviceType::Gpu).0),
+            Workload::Mvt { beta } => whole_gpu(polybench::mvt_dag(*beta, DeviceType::Gpu).0),
+            Workload::Spec { dag, partition } => Ok((dag.clone(), partition.clone())),
+        }
+    }
+
+    /// CLI name → workload (`head`, `layer`, `mm2`, `mm3`, `atax`, `bicg`,
+    /// `mvt`).
+    pub fn parse(name: &str, heads: usize, beta: u64, h_cpu: usize) -> Result<Workload> {
+        match name {
+            "head" => Ok(Workload::Head { beta }),
+            "layer" | "transformer" => Ok(Workload::Layer { heads, beta, h_cpu }),
+            "mm2" | "2mm" => Ok(Workload::Mm2 { beta }),
+            "mm3" | "3mm" => Ok(Workload::Mm3 { beta }),
+            "atax" => Ok(Workload::Atax { beta }),
+            "bicg" => Ok(Workload::Bicg { beta }),
+            "mvt" => Ok(Workload::Mvt { beta }),
+            other => Err(Error::Admission(format!("unknown workload '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_workloads_instantiate_valid_apps() {
+        for w in [
+            Workload::Head { beta: 64 },
+            Workload::Layer {
+                heads: 2,
+                beta: 64,
+                h_cpu: 1,
+            },
+            Workload::Mm2 { beta: 64 },
+            Workload::Mm3 { beta: 64 },
+            Workload::Atax { beta: 64 },
+            Workload::Bicg { beta: 64 },
+            Workload::Mvt { beta: 64 },
+        ] {
+            let (dag, part) = w.instantiate().unwrap();
+            dag.validate().unwrap();
+            assert_eq!(part.assignment.len(), dag.num_kernels());
+        }
+    }
+
+    #[test]
+    fn signatures_distinguish_batching_classes() {
+        let a = Workload::Head { beta: 64 }.signature();
+        let b = Workload::Head { beta: 128 }.signature();
+        let c = Workload::Mm2 { beta: 64 }.signature();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, Workload::Head { beta: 64 }.signature());
+    }
+
+    #[test]
+    fn unknown_cli_workload_is_admission_error() {
+        let e = Workload::parse("fft", 1, 64, 0).unwrap_err();
+        assert!(matches!(e, Error::Admission(_)));
+    }
+}

@@ -32,6 +32,11 @@ pub struct SimConfig {
     pub contention_efficiency: f64,
     /// Hard cap on simulated events (runaway guard).
     pub max_events: usize,
+    /// Maximum task components resident on one device at a time. The paper's
+    /// Algorithm 1 leases a device exclusively per component (`1`, the
+    /// default); the multi-DAG serving layer raises this so independent
+    /// requests share a device, bounded by the hardware concurrency cap.
+    pub max_tenants: usize,
 }
 
 impl Default for SimConfig {
@@ -40,6 +45,7 @@ impl Default for SimConfig {
             host_starvation_fraction: 0.5,
             contention_efficiency: contention::CONTENTION_EFFICIENCY,
             max_events: 4_000_000,
+            max_tenants: 1,
         }
     }
 }
@@ -108,6 +114,9 @@ enum EvKind {
     CopyDone { engine: usize },
     /// A kernel's completion callback ran on the host.
     Callback { disp: usize, kernel: KernelId },
+    /// A served DAG request arrived: its component may now join the frontier
+    /// (multi-DAG serving; never emitted when all release times are zero).
+    Release { comp: usize },
 }
 
 struct Ev {
@@ -151,7 +160,33 @@ pub fn simulate(
     policy: &mut dyn Policy,
     cfg: &SimConfig,
 ) -> Result<SimResult> {
-    Engine::new(dag, partition, platform, cost, policy, cfg)?.run()
+    Engine::new(dag, partition, platform, cost, policy, cfg, None)?.run()
+}
+
+/// Multi-DAG serving entry point: like [`simulate`], but component `c` may
+/// not enter the frontier before `releases[c]` (its request's coalesced
+/// arrival instant). With all-zero releases this is exactly [`simulate`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_released(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &SimConfig,
+    releases: &[f64],
+) -> Result<SimResult> {
+    if releases.len() != partition.components.len() {
+        return Err(Error::Sched(format!(
+            "release times for {} components, partition has {}",
+            releases.len(),
+            partition.components.len()
+        )));
+    }
+    if let Some(t) = releases.iter().find(|t| !t.is_finite() || **t < 0.0) {
+        return Err(Error::Sched(format!("invalid release time {t}")));
+    }
+    Engine::new(dag, partition, platform, cost, policy, cfg, Some(releases))?.run()
 }
 
 struct Engine<'a> {
@@ -172,6 +207,10 @@ struct Engine<'a> {
     comp_rank: Vec<f64>,
     available: Vec<DeviceId>,
     est_free: Vec<f64>,
+    /// Earliest instant each component may join the frontier (serving).
+    release: Vec<f64>,
+    /// Components currently resident per device (multi-tenant serving).
+    tenants: Vec<usize>,
     /// Outstanding external predecessor kernels per component.
     ext_preds_left: Vec<usize>,
     /// comp list each kernel unblocks when globally finished.
@@ -192,6 +231,7 @@ struct Engine<'a> {
 const EPS: f64 = 1e-12;
 
 impl<'a> Engine<'a> {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         dag: &'a Dag,
         partition: &'a Partition,
@@ -199,6 +239,7 @@ impl<'a> Engine<'a> {
         cost: &'a dyn CostModel,
         policy: &'a mut dyn Policy,
         cfg: &'a SimConfig,
+        releases: Option<&[f64]>,
     ) -> Result<Self> {
         let ncomp = partition.components.len();
         // Kernel-level unblock lists: producer kernel -> consumer components.
@@ -220,7 +261,12 @@ impl<'a> Engine<'a> {
         }
         let ext_preds_left: Vec<usize> = ext_pred_sets.iter().map(|s| s.len()).collect();
         let comp_rank = component_ranks(dag, partition, platform, cost);
-        let mut frontier: Vec<usize> = (0..ncomp).filter(|&c| ext_preds_left[c] == 0).collect();
+        let release: Vec<f64> = releases
+            .map(|r| r.to_vec())
+            .unwrap_or_else(|| vec![0.0; ncomp]);
+        let mut frontier: Vec<usize> = (0..ncomp)
+            .filter(|&c| ext_preds_left[c] == 0 && release[c] <= 0.0)
+            .collect();
         frontier.sort_by(|&a, &b| comp_rank[b].total_cmp(&comp_rank[a]));
         let available: Vec<DeviceId> = platform
             .devices
@@ -246,6 +292,8 @@ impl<'a> Engine<'a> {
             comp_rank,
             available,
             est_free: vec![0.0; platform.devices.len()],
+            release,
+            tenants: vec![0; platform.devices.len()],
             ext_preds_left,
             unblocks,
             kernel_finished: vec![false; dag.num_kernels()],
@@ -276,8 +324,19 @@ impl<'a> Engine<'a> {
 
     // ---------------------------------------------------------- scheduling
 
+    /// Current occupancy committed per device (Σ occupancy of running
+    /// kernels) — the cross-DAG load signal exposed to policies.
+    fn device_load(&self) -> Vec<f64> {
+        let mut load = vec![0.0; self.platform.devices.len()];
+        for r in &self.runs {
+            load[r.device] += r.occupancy;
+        }
+        load
+    }
+
     fn scheduler_phase(&mut self) {
         loop {
+            let load = self.device_load();
             let view = SchedView {
                 now: self.now,
                 frontier: &self.frontier,
@@ -286,6 +345,7 @@ impl<'a> Engine<'a> {
                 partition: self.partition,
                 dag: self.dag,
                 est_free: &self.est_free,
+                device_load: &load,
                 cost: self.cost,
             };
             let Some((comp, dev)) = self.policy.select(&view) else {
@@ -299,7 +359,10 @@ impl<'a> Engine<'a> {
         assert!(!self.comp_dispatched[comp], "component {comp} re-dispatched");
         self.comp_dispatched[comp] = true;
         self.frontier.retain(|&c| c != comp);
-        self.available.retain(|&d| d != dev);
+        self.tenants[dev] += 1;
+        if self.tenants[dev] >= self.cfg.max_tenants.max(1) {
+            self.available.retain(|&d| d != dev);
+        }
         self.comp_device[comp] = dev;
 
         // setup_cq runs on a child thread: commands are issuable after the
@@ -318,7 +381,8 @@ impl<'a> Engine<'a> {
             kernel: None,
         });
 
-        // Commit an EFT estimate for HEFT's est_free bookkeeping.
+        // Commit an EFT estimate for HEFT's est_free bookkeeping. Under
+        // multi-tenancy the device backlog accumulates across residents.
         let solo: f64 = self.partition.components[comp]
             .kernels
             .iter()
@@ -330,7 +394,8 @@ impl<'a> Engine<'a> {
             .filter_map(|c| c.transfer_buffer())
             .map(|b| self.platform.transfer_time(dev, self.dag.buffers[b].size_bytes))
             .sum();
-        self.est_free[dev] = ready_at + solo + transfers + self.platform.callback_latency;
+        self.est_free[dev] =
+            self.est_free[dev].max(ready_at) + solo + transfers + self.platform.callback_latency;
 
         let mut kernel_cmds_left: Vec<(KernelId, usize)> = Vec::new();
         for c in &cq.commands {
@@ -448,8 +513,10 @@ impl<'a> Engine<'a> {
                     self.push_ev(t, EvKind::TransferDone { disp: di, cmd });
                 } else {
                     let _ = buffer;
-                    self.copy_engines[0].queue.push_back((di, cmd));
-                    self.pump_copy_engine(0);
+                    // Route to a DMA engine (one per GPU on scaled platforms).
+                    let e = dev_id % self.copy_engines.len();
+                    self.copy_engines[e].queue.push_back((di, cmd));
+                    self.pump_copy_engine(e);
                 }
                 true
             }
@@ -536,29 +603,47 @@ impl<'a> Engine<'a> {
     fn handle_callback(&mut self, di: usize, kernel: KernelId) {
         self.kernel_finished[kernel] = true;
         let comp = self.dispatches[di].cq.component;
-        // update_task_queue: successors that became ready join F.
+        // update_task_queue: successors that became ready join F — unless
+        // their request has not arrived yet (serving), in which case the
+        // release event re-examines them.
         let unblocked = self.unblocks[kernel].clone();
         for uc in unblocked {
             // A component is ready when all external producer kernels done.
             self.ext_preds_left[uc] -= 1;
             if self.ext_preds_left[uc] == 0 && !self.comp_dispatched[uc] {
-                self.frontier.push(uc);
-                let ranks = &self.comp_rank;
-                self.frontier
-                    .sort_by(|&a, &b| ranks[b].total_cmp(&ranks[a]));
+                if self.release[uc] > self.now + EPS {
+                    self.push_ev(self.release[uc], EvKind::Release { comp: uc });
+                } else {
+                    self.enter_frontier(uc);
+                }
             }
         }
-        // return_device once the whole component has finished.
+        // return_device (one tenant slot) once the component has finished.
         let d = &mut self.dispatches[di];
         d.callbacks_left -= 1;
         if d.callbacks_left == 0 {
             debug_assert_eq!(d.cmds_remaining, 0, "callbacks after all commands");
             let dev = d.device;
-            self.available.push(dev);
-            self.est_free[dev] = self.now;
+            self.tenants[dev] -= 1;
+            if !self.available.contains(&dev) {
+                self.available.push(dev);
+            }
+            if self.tenants[dev] == 0 {
+                self.est_free[dev] = self.now;
+            }
             self.comp_finish[comp] = self.now;
             self.comps_done += 1;
         }
+    }
+
+    /// Add a ready, released component to the rank-sorted frontier.
+    fn enter_frontier(&mut self, comp: usize) {
+        if self.comp_dispatched[comp] || self.frontier.contains(&comp) {
+            return;
+        }
+        self.frontier.push(comp);
+        let ranks = &self.comp_rank;
+        self.frontier.sort_by(|&a, &b| ranks[b].total_cmp(&ranks[a]));
     }
 
     // ------------------------------------------------------------- kernels
@@ -594,6 +679,12 @@ impl<'a> Engine<'a> {
 
     fn run(mut self) -> Result<SimResult> {
         let total = self.partition.components.len();
+        // Withheld components (request not yet arrived) wake via events.
+        for c in 0..total {
+            if self.ext_preds_left[c] == 0 && self.release[c] > 0.0 {
+                self.push_ev(self.release[c], EvKind::Release { comp: c });
+            }
+        }
         let mut events = 0usize;
         while self.comps_done < total {
             events += 1;
@@ -671,6 +762,11 @@ impl<'a> Engine<'a> {
                         self.pump_copy_engine(engine);
                     }
                     EvKind::Callback { disp, kernel } => self.handle_callback(disp, kernel),
+                    EvKind::Release { comp } => {
+                        if self.ext_preds_left[comp] == 0 {
+                            self.enter_frontier(comp);
+                        }
+                    }
                 }
             }
         }
@@ -882,5 +978,103 @@ mod tests {
         let platform = Platform::paper_testbed(0, 0);
         let res = simulate(&dag, &singles, &platform, &PaperCost, &mut Clustering, &SimConfig::default());
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn zero_releases_match_plain_simulate() {
+        let (dag, ios) = transformer_dag(2, 128, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let cfg = SimConfig::default();
+        let plain = simulate(&dag, &part, &platform, &PaperCost, &mut Clustering, &cfg)
+            .unwrap()
+            .makespan;
+        let released = simulate_released(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &cfg,
+            &[0.0, 0.0],
+        )
+        .unwrap()
+        .makespan;
+        assert_eq!(plain, released);
+    }
+
+    #[test]
+    fn released_components_wait_for_arrival() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(3, 0);
+        let release_t = 0.050;
+        let r = simulate_released(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+            &[0.0, release_t],
+        )
+        .unwrap();
+        let head1_start = r
+            .trace
+            .spans
+            .iter()
+            .filter(|s| {
+                matches!(s.lane, Lane::Device { .. })
+                    && s.kernel.map(|k| ios[1].kernels.contains(&k)).unwrap_or(false)
+            })
+            .map(|s| s.start)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            head1_start >= release_t - 1e-9,
+            "head 1 started at {head1_start} before its release {release_t}"
+        );
+        assert!(r.component_finish.iter().all(|t| t.is_finite()));
+    }
+
+    #[test]
+    fn release_length_mismatch_errors() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(3, 0);
+        let res = simulate_released(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+            &[0.0],
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn multi_tenancy_overlaps_independent_components() {
+        // Four small heads on one GPU: with max_tenants = 4 the components
+        // share the device and finish faster than the exclusive-lease default.
+        let (dag, ios) = transformer_dag(4, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(3, 0);
+        let run = |tenants: usize| {
+            let cfg = SimConfig {
+                max_tenants: tenants,
+                ..SimConfig::default()
+            };
+            simulate(&dag, &part, &platform, &PaperCost, &mut Clustering, &cfg).unwrap()
+        };
+        let exclusive = run(1);
+        let shared = run(4);
+        assert!(
+            shared.makespan < exclusive.makespan,
+            "tenancy 4 {} !< tenancy 1 {}",
+            shared.makespan,
+            exclusive.makespan
+        );
+        assert!(shared.trace.device_overlap(0) > 0.0);
     }
 }

@@ -7,7 +7,11 @@
 //! ([`crate::cost::contention`]), and callback latency for completion
 //! notification — the five mechanisms that generate every effect the
 //! paper measures (Figs. 4, 5, 11, 12, 13).
+//!
+//! [`simulate_released`] is the multi-DAG serving entry point: components
+//! carry release times (request arrivals) and devices admit several resident
+//! components at once (`SimConfig::max_tenants`) — see [`crate::serve`].
 
 pub mod engine;
 
-pub use engine::{simulate, SimConfig, SimResult};
+pub use engine::{simulate, simulate_released, SimConfig, SimResult};
