@@ -1,0 +1,77 @@
+//! Bench SERVE-DEADLINE — deadline-aware serving: least-loaded (deadline
+//! blind) vs EDF (earliest absolute deadline first, with preemption) under
+//! a tight-deadline seeded Poisson stream. Reports deadline-miss rate,
+//! per-priority p99, and preemption counts — the SLO trajectory the CI
+//! bench smoke tracks next to raw serving throughput.
+
+use pyschedcl::benchkit::bench;
+use pyschedcl::cost::PaperCost;
+use pyschedcl::platform::Platform;
+use pyschedcl::sched::{Edf, LeastLoaded, Policy};
+use pyschedcl::serve::{
+    poisson_arrivals, serve_sim, ServeConfig, ServeReport, ServeRequest, Workload,
+};
+
+/// Mixed-urgency stream: every 4th request is tight (priority 1, small
+/// budget); the rest get a loose budget. Same shape as the CLI's
+/// `--deadline-ms/--deadline-tight-ms/--deadline-tight-every` flags.
+fn stream(n: usize, seed: u64, tight_s: f64, loose_s: f64) -> Vec<ServeRequest> {
+    poisson_arrivals(seed, n, 2000.0)
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let mut r = ServeRequest::new(i, t, Workload::Head { beta: 64 });
+            if i % 4 == 0 {
+                r.deadline = Some(tight_s);
+                r.priority = 1;
+            } else {
+                r.deadline = Some(loose_s);
+            }
+            r
+        })
+        .collect()
+}
+
+fn summarize(label: &str, r: &ServeReport) {
+    println!(
+        "{label:<13} thru {:>7.1} req/s  p99 {:>7.2} ms  miss {:>2}/{:<2} ({:.0}%)  preemptions {}",
+        r.throughput_rps,
+        r.p99_latency * 1e3,
+        r.deadline_misses,
+        r.deadline_total,
+        r.deadline_miss_rate * 100.0,
+        r.preemptions
+    );
+    for (p, l) in &r.per_priority_p99 {
+        println!("    priority {p}: p99 {:.2} ms", l * 1e3);
+    }
+}
+
+fn main() {
+    println!("== serve-deadline: 24 head requests, Poisson(2000/s), seed 7, tight deadlines ==");
+    let requests = stream(24, 7, 0.020, 0.250);
+    let platform = Platform::paper_testbed(3, 0);
+    let cfg = ServeConfig {
+        tenancy: 1,
+        ..ServeConfig::default()
+    };
+    let run = |policy: &mut dyn Policy| {
+        serve_sim(&requests, &platform, &PaperCost, policy, &cfg).unwrap()
+    };
+    let ll = run(&mut LeastLoaded);
+    let edf = run(&mut Edf);
+    summarize("least-loaded", &ll);
+    summarize("edf", &edf);
+    println!(
+        "edf meets {} more deadline(s) than least-loaded",
+        (ll.deadline_misses as i64 - edf.deadline_misses as i64).max(0)
+    );
+
+    println!("\nharness timing:");
+    bench("serve/deadline_24req_least_loaded", 2, 10, || {
+        serve_sim(&requests, &platform, &PaperCost, &mut LeastLoaded, &cfg).unwrap()
+    });
+    bench("serve/deadline_24req_edf", 2, 10, || {
+        serve_sim(&requests, &platform, &PaperCost, &mut Edf, &cfg).unwrap()
+    });
+}

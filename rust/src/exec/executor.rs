@@ -148,6 +148,11 @@ pub fn execute_dag_multi(
         return Err(Error::Sched("no device has command queues".into()));
     }
 
+    // The real path carries no serving metadata yet: policies see neutral
+    // deadlines/priorities (deadline-aware selects degrade to their rank
+    // fallback; preemption is sim-only — OS threads cannot be displaced).
+    let no_deadline = vec![f64::INFINITY; ncomp];
+    let no_priority = vec![0u32; ncomp];
     let shared = Shared {
         dag,
         partition,
@@ -200,6 +205,8 @@ pub fn execute_dag_multi(
                     dag,
                     est_free: &st.est_free,
                     device_load: &load,
+                    deadline: &no_deadline,
+                    priority: &no_priority,
                     cost,
                 };
                 policy.select(&view)

@@ -17,8 +17,15 @@
 //!                 [--rate 2000] [--policy P] [--workload head|layer|mm2|...]
 //!                 [--beta 64] [--heads 4] [--gpus 1] [--cpus 1]
 //!                 [--tenancy 4] [--batch-window-ms 2] [--seed 42]
+//!                 [--deadline-ms F] [--deadline-tight-ms F]
+//!                 [--deadline-tight-every K]
 //!                 [--mode sim|real] [--json OUT]    multi-DAG serving
 //! ```
+//!
+//! Deadline-aware serving: `--policy edf` schedules earliest absolute
+//! deadline first with preemption; `--deadline-ms` gives every request a
+//! latency budget, and `--deadline-tight-ms`/`--deadline-tight-every` mark
+//! every K-th request as a tight-deadline, priority-1 tenant.
 
 use pyschedcl::cost::{CalibratedCost, CostModel, PaperCost};
 use pyschedcl::error::{Error, Result};
@@ -28,7 +35,7 @@ use pyschedcl::platform::{DeviceType, Platform};
 use pyschedcl::report::experiments as expts;
 use pyschedcl::report::{format_serve_comparison, serve_bench_json};
 use pyschedcl::runtime::{manifest::default_artifact_dir, Runtime};
-use pyschedcl::sched::{Clustering, Eager, Heft, LeastLoaded, Policy};
+use pyschedcl::sched::{Clustering, Eager, Edf, Heft, LeastLoaded, Policy};
 use pyschedcl::serve::{
     poisson_arrivals, serve_real, serve_sequential, serve_sim, trace_arrivals, ServeConfig,
     ServeRequest, Workload,
@@ -87,6 +94,7 @@ fn policy_by_name(name: &str) -> Result<Box<dyn Policy>> {
         "eager" => Ok(Box::new(Eager)),
         "heft" => Ok(Box::new(Heft)),
         "least-loaded" => Ok(Box::new(LeastLoaded)),
+        "edf" => Ok(Box::new(Edf)),
         other => Err(Error::Sched(format!("unknown policy '{other}'"))),
     }
 }
@@ -322,10 +330,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )))
         }
     };
+    // Deadline shaping: a uniform budget for everyone, plus an optional
+    // tight budget (and priority 1) for every K-th request — the stream
+    // shape the EDF-vs-least-loaded comparison is about.
+    let deadline_ms = args.get("deadline-ms").and_then(|v| v.parse::<f64>().ok());
+    let tight_ms = args
+        .get("deadline-tight-ms")
+        .and_then(|v| v.parse::<f64>().ok());
+    let tight_every = args.usize_or("deadline-tight-every", 4);
     let requests: Vec<ServeRequest> = arrivals
         .into_iter()
         .enumerate()
-        .map(|(i, t)| ServeRequest::new(i, t, workload.clone()))
+        .map(|(i, t)| {
+            let mut r = ServeRequest::new(i, t, workload.clone());
+            r.deadline = deadline_ms.map(|d| d * 1e-3);
+            if let Some(tight) = tight_ms {
+                if tight_every > 0 && i % tight_every == 0 {
+                    r.deadline = Some(tight * 1e-3);
+                    r.priority = 1;
+                }
+            }
+            r
+        })
         .collect();
 
     let platform = Platform::scaled(
@@ -379,6 +405,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.p50_latency * 1e3,
             report.p99_latency * 1e3
         );
+        if report.deadline_total > 0 {
+            println!(
+                "deadlines: {}/{} missed ({:.1}%)",
+                report.deadline_misses,
+                report.deadline_total,
+                report.deadline_miss_rate * 100.0
+            );
+        }
         for (id, why) in &report.rejected {
             println!("rejected #{id}: {why}");
         }

@@ -10,13 +10,19 @@ fn row(label: &str, r: &ServeReport) -> String {
         .iter()
         .map(|u| format!("{:.0}%", u * 100.0))
         .collect();
+    let miss = if r.deadline_total > 0 {
+        format!("{:.0}%", r.deadline_miss_rate * 100.0)
+    } else {
+        "-".to_string()
+    };
     format!(
-        "{label:<11} | {:>4} | {:>9.1} | {:>10.1} | {:>8.2} | {:>8.2} | {}\n",
+        "{label:<11} | {:>4} | {:>9.1} | {:>10.1} | {:>8.2} | {:>8.2} | {:>5} | {}\n",
         r.outcomes.len(),
         r.makespan * 1e3,
         r.throughput_rps,
         r.p50_latency * 1e3,
         r.p99_latency * 1e3,
+        miss,
         util.join(" ")
     )
 }
@@ -24,8 +30,8 @@ fn row(label: &str, r: &ServeReport) -> String {
 /// Render the comparison table (latencies in ms, throughput in req/s).
 pub fn format_serve_comparison(concurrent: &ServeReport, sequential: &ServeReport) -> String {
     let mut s = String::from(
-        "mode        | reqs | span (ms) | thru (r/s) | p50 (ms) | p99 (ms) | device util\n\
-         ------------+------+-----------+------------+----------+----------+------------\n",
+        "mode        | reqs | span (ms) | thru (r/s) | p50 (ms) | p99 (ms) | miss  | device util\n\
+         ------------+------+-----------+------------+----------+----------+-------+------------\n",
     );
     s.push_str(&row("sequential", sequential));
     s.push_str(&row("concurrent", concurrent));
@@ -34,6 +40,18 @@ pub fn format_serve_comparison(concurrent: &ServeReport, sequential: &ServeRepor
             "concurrent serving speedup over sequential replay: {:.2}x\n",
             sequential.makespan / concurrent.makespan
         ));
+    }
+    if concurrent.deadline_total > 0 {
+        s.push_str(&format!(
+            "deadlines: {}/{} missed ({:.1}%), {} preemption(s)\n",
+            concurrent.deadline_misses,
+            concurrent.deadline_total,
+            concurrent.deadline_miss_rate * 100.0,
+            concurrent.preemptions
+        ));
+        for (p, l) in &concurrent.per_priority_p99 {
+            s.push_str(&format!("  priority {p}: p99 {:.2} ms\n", l * 1e3));
+        }
     }
     if !concurrent.rejected.is_empty() {
         s.push_str(&format!("rejected: {} request(s)\n", concurrent.rejected.len()));
@@ -104,7 +122,31 @@ mod tests {
             assert!(m.get("throughput_rps").and_then(|v| v.as_f64()).is_some());
             assert!(m.get("p50_latency_s").and_then(|v| v.as_f64()).is_some());
             assert!(m.get("p99_latency_s").and_then(|v| v.as_f64()).is_some());
+            assert!(m.get("deadline_miss_rate").and_then(|v| v.as_f64()).is_some());
+            assert!(m.get("preemptions").and_then(|v| v.as_f64()).is_some());
+            assert!(m.get("per_priority_p99_s").is_some());
         }
         assert!(parsed.get("speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_reports_deadline_misses_and_preemptions() {
+        let platform = Platform::paper_testbed(3, 1);
+        let mut requests: Vec<ServeRequest> = (0..4)
+            .map(|i| ServeRequest::new(i, i as f64 * 1e-3, Workload::Head { beta: 64 }))
+            .collect();
+        for r in &mut requests {
+            r.deadline = Some(1e-6); // unmeetably tight: all miss
+        }
+        let cfg = ServeConfig::default();
+        let conc = serve_sim(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap();
+        let seq =
+            serve_sequential(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap();
+        assert_eq!(conc.deadline_total, 4);
+        assert_eq!(conc.deadline_misses, 4);
+        assert!((conc.deadline_miss_rate - 1.0).abs() < 1e-12);
+        let table = format_serve_comparison(&conc, &seq);
+        assert!(table.contains("deadlines: 4/4 missed"), "{table}");
+        assert!(table.contains("preemption"), "{table}");
     }
 }

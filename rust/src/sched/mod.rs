@@ -16,11 +16,15 @@
 //! * [`LeastLoaded`] — serving policy: preference-honouring like clustering,
 //!   but spreads concurrent requests across matching devices by the
 //!   cross-DAG occupancy the multi-tenant [`SchedView`] exposes.
+//! * [`Edf`] — deadline-aware serving policy: earliest absolute deadline
+//!   first (laxity tie-break, rank fallback), with a preemption rule that
+//!   displaces strictly less urgent resident tenants via
+//!   [`Policy::preempt`].
 
 pub mod autotune;
 pub mod policy;
 pub mod ranks;
 
 pub use autotune::{exhaustive, hill_climb, TuneResult, TuneSpace};
-pub use policy::{Clustering, Eager, Heft, LeastLoaded, Policy, SchedView};
+pub use policy::{Clustering, Eager, Edf, Heft, LeastLoaded, Policy, ResidentTenant, SchedView};
 pub use ranks::component_ranks;

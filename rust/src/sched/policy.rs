@@ -28,6 +28,13 @@ pub struct SchedView<'a> {
     /// components — possibly from different requests — share one device, so
     /// `available` alone no longer says how loaded a device is.
     pub device_load: &'a [f64],
+    /// Absolute deadline per component, seconds since the serving epoch
+    /// (`f64::INFINITY` when the request carries none). Threaded from
+    /// `ServeRequest.deadline` through the merged application so
+    /// deadline-aware policies ([`Edf`]) can order the frontier by urgency.
+    pub deadline: &'a [f64],
+    /// Request priority per component (larger = more urgent; 0 default).
+    pub priority: &'a [u32],
     pub cost: &'a dyn CostModel,
 }
 
@@ -40,6 +47,35 @@ impl<'a> SchedView<'a> {
             .map(|&k| self.cost.exec_time(&self.dag.kernels[k], dev))
             .sum()
     }
+
+    /// Laxity of `comp`: slack between its absolute deadline and its
+    /// estimated completion were it dispatched *now* on a device of its
+    /// preferred type (+∞ for deadline-free components). Negative laxity
+    /// means the deadline is already unmeetable under the solo estimate.
+    pub fn laxity(&self, comp: usize) -> f64 {
+        if self.deadline[comp].is_infinite() {
+            return f64::INFINITY;
+        }
+        let want = self.partition.components[comp].dev;
+        let dev = self
+            .platform
+            .devices
+            .iter()
+            .find(|d| d.dtype == want)
+            .or_else(|| self.platform.devices.first());
+        match dev {
+            Some(d) => self.deadline[comp] - self.now - self.component_time(comp, d),
+            None => f64::INFINITY,
+        }
+    }
+}
+
+/// A component currently resident (dispatched, unfinished) on a device —
+/// the candidate victim set offered to [`Policy::preempt`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResidentTenant {
+    pub comp: usize,
+    pub device: DeviceId,
 }
 
 /// The paper's overridable `select` routine: choose a ready component and a
@@ -53,6 +89,25 @@ pub trait Policy: Send {
     /// baselines force a single queue (paper §5 Expts 2–3).
     fn queues_for(&self, device: &Device) -> usize {
         device.num_queues
+    }
+
+    /// Cheap capability probe: when false (the default) the simulator
+    /// skips building the resident-tenant set and never calls
+    /// [`Policy::preempt`], keeping the blocked-select path allocation-free
+    /// for non-preempting policies.
+    fn can_preempt(&self) -> bool {
+        false
+    }
+
+    /// Preemption hook, consulted by the simulator when `select` blocks
+    /// with work still on the frontier (only if [`Policy::can_preempt`]):
+    /// return the resident component to displace (its unfinished commands
+    /// are cancelled at command-queue granularity and it re-enters the
+    /// frontier with remaining solo-seconds preserved), or `None` to wait.
+    /// Policies must only preempt a *strictly less urgent* victim,
+    /// otherwise displacement can ping-pong. Default: never preempt.
+    fn preempt(&mut self, _view: &SchedView, _resident: &[ResidentTenant]) -> Option<usize> {
+        None
     }
 }
 
@@ -178,6 +233,196 @@ impl Policy for LeastLoaded {
     }
 }
 
+/// Deadline-aware serving policy: earliest-absolute-deadline first among
+/// device-type-compatible candidates, laxity tie-break, falling back to
+/// bottom-level rank for deadline-free components. When every compatible
+/// device is occupied, [`Edf::preempt`] displaces the least urgent resident
+/// tenant — but only one *strictly* less urgent than the blocked
+/// head-of-line request. Dominance uses the same lexicographic order as
+/// `select` (earlier deadline first, then laxity, then priority), so a
+/// displaced victim can never be re-selected ahead of the component that
+/// displaced it — displacement cannot ping-pong.
+#[derive(Debug, Default)]
+pub struct Edf;
+
+impl Edf {
+    /// The one urgency comparator behind `select` ordering, the blocked
+    /// head-of-line scan, AND preemption dominance: deadline ascending,
+    /// laxity ascending on exact deadline ties, then priority descending.
+    /// Using a single total order everywhere is what makes the no-ping-pong
+    /// argument sound — a victim re-entering the frontier can never be
+    /// re-selected ahead of the component that displaced it. `la`/`lb` are
+    /// the candidates' laxities, passed in so callers control when the
+    /// cost-model sum behind [`SchedView::laxity`] actually runs.
+    fn cmp_with(view: &SchedView, a: usize, la: f64, b: usize, lb: f64) -> std::cmp::Ordering {
+        view.deadline[a]
+            .total_cmp(&view.deadline[b])
+            .then_with(|| la.total_cmp(&lb))
+            .then_with(|| view.priority[b].cmp(&view.priority[a]))
+    }
+
+    /// Laxity per frontier candidate, computed only where the comparator
+    /// can reach it — on finite deadlines shared by another candidate. The
+    /// placeholder (∞) for untied candidates is never consulted, because
+    /// a distinct deadline decides the comparison first.
+    fn tied_laxities(view: &SchedView) -> Vec<(usize, f64)> {
+        let mut counts: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+        for &c in view.frontier {
+            if view.deadline[c].is_finite() {
+                *counts.entry(view.deadline[c].to_bits()).or_insert(0) += 1;
+            }
+        }
+        view.frontier
+            .iter()
+            .map(|&c| {
+                let d = view.deadline[c];
+                let tied = d.is_finite() && counts.get(&d.to_bits()).is_some_and(|&n| n > 1);
+                (c, if tied { view.laxity(c) } else { f64::INFINITY })
+            })
+            .collect()
+    }
+
+    /// Lazy pairwise form of [`Edf::cmp_with`]: laxity is only computed on
+    /// exact deadline ties (`then_with` short-circuits). Pairwise identical
+    /// to `cmp_with` over [`Edf::tied_laxities`] — tied deadlines get real
+    /// laxities in both, untied ones never reach the laxity term.
+    fn urgency_cmp(view: &SchedView, a: usize, b: usize) -> std::cmp::Ordering {
+        view.deadline[a]
+            .total_cmp(&view.deadline[b])
+            .then_with(|| view.laxity(a).total_cmp(&view.laxity(b)))
+            .then_with(|| view.priority[b].cmp(&view.priority[a]))
+    }
+
+    /// Strict urgency dominance in the select order: true iff `a` is
+    /// strictly more urgent than `b`.
+    fn more_urgent(view: &SchedView, a: usize, b: usize) -> bool {
+        Edf::urgency_cmp(view, a, b).is_lt()
+    }
+
+    /// Least-loaded available device matching `comp`'s type preference.
+    fn best_device(view: &SchedView, comp: usize) -> Option<DeviceId> {
+        let want = view.partition.components[comp].dev;
+        view.available
+            .iter()
+            .copied()
+            .filter(|&d| view.platform.device(d).dtype == want)
+            .min_by(|&a, &b| {
+                view.device_load[a]
+                    .total_cmp(&view.device_load[b])
+                    .then_with(|| view.est_free[a].total_cmp(&view.est_free[b]))
+            })
+    }
+
+    /// Head-of-line blocked candidate: the urgency-order minimum restricted
+    /// to components carrying urgency metadata — one O(F) pass instead of a
+    /// full sort per blocked round.
+    fn most_urgent_candidate(view: &SchedView) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (c, lax) in Edf::tied_laxities(view) {
+            if !(view.deadline[c].is_finite() || view.priority[c] > 0) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((b, bl)) => Edf::cmp_with(view, c, lax, b, bl).is_lt(),
+            };
+            if better {
+                best = Some((c, lax));
+            }
+        }
+        best.map(|(c, _)| c)
+    }
+}
+
+impl Policy for Edf {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        // With no urgency metadata anywhere the order degenerates to the
+        // frontier's native rank order — skip the laxity/sort machinery
+        // entirely (e.g. `--policy edf` without any deadline flags).
+        if view
+            .frontier
+            .iter()
+            .all(|&c| view.deadline[c].is_infinite() && view.priority[c] == 0)
+        {
+            return view
+                .frontier
+                .iter()
+                .find_map(|&c| Edf::best_device(view, c).map(|d| (c, d)));
+        }
+        // Common dispatch path, sort-free: the urgency-order head is
+        // usually placeable. min_by keeps the *first* of equally-minimum
+        // elements — the same candidate a stable sort would put at the
+        // head.
+        let cands = Edf::tied_laxities(view);
+        let head = cands
+            .iter()
+            .copied()
+            .min_by(|&(a, la), &(b, lb)| Edf::cmp_with(view, a, la, b, lb))
+            .map(|(c, _)| c)?;
+        if let Some(dev) = Edf::best_device(view, head) {
+            return Some((head, dev));
+        }
+        // Head unplaceable. Fully-blocked rounds (the other common case)
+        // exit without sorting; the full sort only runs when some *other*
+        // candidate can be placed.
+        if !view
+            .frontier
+            .iter()
+            .any(|&c| Edf::best_device(view, c).is_some())
+        {
+            return None;
+        }
+        let mut order = cands;
+        order.sort_by(|&(a, la), &(b, lb)| Edf::cmp_with(view, a, la, b, lb));
+        for (comp, _) in order {
+            if comp == head {
+                continue;
+            }
+            if let Some(dev) = Edf::best_device(view, comp) {
+                return Some((comp, dev));
+            }
+        }
+        None
+    }
+
+    fn can_preempt(&self) -> bool {
+        true
+    }
+
+    fn preempt(&mut self, view: &SchedView, resident: &[ResidentTenant]) -> Option<usize> {
+        // Head-of-line blocked request: the most urgent frontier component
+        // that actually carries urgency metadata (a finite deadline or a
+        // non-default priority) — rank-only work never preempts. Because
+        // the candidate order and `more_urgent` agree, this is the select
+        // order's head whenever any candidate carries metadata, and the
+        // post-displacement `select` is guaranteed to place it.
+        let urgent = Edf::most_urgent_candidate(view)?;
+        let want = view.partition.components[urgent].dev;
+        // Eligibility is strict dominance in the full select order (the
+        // no-ping-pong invariant) AND a genuine SLO gain — a strictly
+        // earlier deadline or strictly higher priority. Laxity-only
+        // dominance (equal deadline, equal priority) is excluded: that is
+        // typically a sibling component of the same request, and paying a
+        // transfer re-stage to reorder siblings delays the very deadline
+        // being optimized.
+        resident
+            .iter()
+            .filter(|r| view.platform.device(r.device).dtype == want)
+            .filter(|r| {
+                Edf::more_urgent(view, urgent, r.comp)
+                    && (view.deadline[urgent] < view.deadline[r.comp]
+                        || view.priority[urgent] > view.priority[r.comp])
+            })
+            // Least urgent victim = maximum in the shared urgency order.
+            .max_by(|a, b| Edf::urgency_cmp(view, a.comp, b.comp))
+            .map(|r| r.comp)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,7 +430,13 @@ mod tests {
     use crate::platform::DeviceType;
     use crate::transformer::{cluster_by_head, transformer_dag};
 
-    fn view_fixture<'a>(
+    /// Neutral serving metadata: no deadlines, default priority.
+    fn no_meta(ncomp: usize) -> (Vec<f64>, Vec<u32>) {
+        (vec![f64::INFINITY; ncomp], vec![0u32; ncomp])
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn view_meta<'a>(
         dag: &'a Dag,
         part: &'a Partition,
         platform: &'a Platform,
@@ -193,6 +444,8 @@ mod tests {
         available: &'a [DeviceId],
         est_free: &'a [f64],
         device_load: &'a [f64],
+        deadline: &'a [f64],
+        priority: &'a [u32],
     ) -> SchedView<'a> {
         SchedView {
             now: 0.0,
@@ -203,6 +456,8 @@ mod tests {
             dag,
             est_free,
             device_load,
+            deadline,
+            priority,
             cost: &PaperCost,
         }
     }
@@ -215,14 +470,15 @@ mod tests {
         let frontier = [0usize, 1];
         let est = [0.0, 0.0];
         let load = [0.0, 0.0];
+        let (dl, pr) = no_meta(2);
         // Only the CPU (device 1) available: must pick comp 0 (cpu-pref).
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est, &load);
+        let v = view_meta(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
         assert_eq!(Clustering.select(&v), Some((0, 1)));
         // Only the GPU available: must skip comp 0 and pick comp 1.
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[0], &est, &load);
+        let v = view_meta(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
         assert_eq!(Clustering.select(&v), Some((1, 0)));
         // Nothing available: block.
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[], &est, &load);
+        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
         assert_eq!(Clustering.select(&v), None);
     }
 
@@ -234,8 +490,9 @@ mod tests {
         let frontier = [0usize, 1];
         let est = [0.0, 0.0];
         let load = [0.0, 0.0];
+        let (dl, pr) = no_meta(2);
         // CPU-only availability: eager still dispatches there.
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est, &load);
+        let v = view_meta(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
         assert_eq!(Eager.select(&v), Some((0, 1)));
         assert_eq!(Eager.queues_for(platform.device(0)), 1);
     }
@@ -247,14 +504,15 @@ mod tests {
         let platform = Platform::paper_testbed(1, 1);
         let frontier = [0usize];
         let load = [0.0, 0.0];
+        let (dl, pr) = no_meta(1);
         // GPU busy for a short while; CPU idle. GEMM component is far
         // faster on the GPU, so HEFT blocks rather than take the CPU.
         let est = [0.005, 0.0];
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est, &load);
+        let v = view_meta(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
         assert_eq!(Heft.select(&v), None);
         // Once the GPU frees, it dispatches there.
         let est = [0.0, 0.0];
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[0, 1], &est, &load);
+        let v = view_meta(&dag, &part, &platform, &frontier, &[0, 1], &est, &load, &dl, &pr);
         assert_eq!(Heft.select(&v), Some((0, 0)));
     }
 
@@ -266,7 +524,8 @@ mod tests {
         let frontier = [0usize];
         let est = [100.0, 0.0]; // GPU booked out for 100 s
         let load = [0.0, 0.0];
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[1], &est, &load);
+        let (dl, pr) = no_meta(1);
+        let v = view_meta(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
         assert_eq!(Heft.select(&v), Some((0, 1)));
     }
 
@@ -277,13 +536,93 @@ mod tests {
         let platform = Platform::scaled(2, 1, 3, 1); // two GPUs + one CPU
         let frontier = [0usize, 1];
         let est = [0.0, 0.0, 0.0];
+        let (dl, pr) = no_meta(2);
         // GPU 0 is half loaded, GPU 1 idle: pick GPU 1.
         let load = [0.5, 0.0, 0.0];
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[0, 1, 2], &est, &load);
+        let v = view_meta(&dag, &part, &platform, &frontier, &[0, 1, 2], &est, &load, &dl, &pr);
         assert_eq!(LeastLoaded.select(&v), Some((0, 1)));
         // Only the CPU available: a GPU-pref component blocks (preference
         // honoured, unlike eager).
-        let v = view_fixture(&dag, &part, &platform, &frontier, &[2], &est, &load);
+        let v = view_meta(&dag, &part, &platform, &frontier, &[2], &est, &load, &dl, &pr);
         assert_eq!(LeastLoaded.select(&v), None);
+    }
+
+    #[test]
+    fn edf_picks_earliest_absolute_deadline_over_rank() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0); // both GPU-pref
+        let platform = Platform::paper_testbed(3, 1);
+        // Frontier in rank order prefers comp 0; comp 1's deadline is
+        // tighter, so EDF must invert the order.
+        let frontier = [0usize, 1];
+        let est = [0.0, 0.0];
+        let load = [0.0, 0.0];
+        let dl = [0.5, 0.2];
+        let pr = [0u32, 0];
+        let v = view_meta(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
+        assert_eq!(Edf.select(&v), Some((1, 0)));
+        // No deadlines at all: EDF degrades to the rank-order frontier.
+        let (dl, pr) = no_meta(2);
+        let v = view_meta(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
+        assert_eq!(Edf.select(&v), Some((0, 0)));
+    }
+
+    #[test]
+    fn edf_breaks_deadline_ties_by_laxity() {
+        // h_cpu = 1: head 0 prefers the CPU (slow ⇒ little slack), head 1
+        // the GPU (fast ⇒ plenty). Equal absolute deadlines, so laxity is
+        // the tie-break and the CPU-bound component must go first, even
+        // though the rank-ordered frontier lists head 1 ahead of it.
+        let (dag, ios) = transformer_dag(2, 256, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 1);
+        let platform = Platform::paper_testbed(3, 1);
+        let frontier = [1usize, 0];
+        let est = [0.0, 0.0];
+        let load = [0.0, 0.0];
+        let dl = [0.4, 0.4];
+        let pr = [0u32, 0];
+        let v = view_meta(&dag, &part, &platform, &frontier, &[0, 1], &est, &load, &dl, &pr);
+        assert!(v.laxity(0) < v.laxity(1), "CPU comp should have less slack");
+        assert_eq!(Edf.select(&v).map(|(c, _)| c), Some(0));
+        // Equal deadline + equal laxity (identical comps): priority breaks
+        // the tie.
+        let part_gpu = cluster_by_head(&dag, &ios, 0);
+        let pr = [0u32, 3];
+        let v = view_meta(&dag, &part_gpu, &platform, &frontier, &[0, 1], &est, &load, &dl, &pr);
+        assert_eq!(Edf.select(&v).map(|(c, _)| c), Some(1));
+    }
+
+    #[test]
+    fn edf_preempts_only_strictly_less_urgent_residents() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let frontier = [1usize]; // comp 1 blocked (GPU full)
+        let est = [0.0, 0.0];
+        let load = [1.0, 0.0];
+        let resident = [ResidentTenant { comp: 0, device: 0 }];
+        // Urgent comp 1 (tight deadline) vs resident comp 0 (no deadline):
+        // displace comp 0.
+        let dl = [f64::INFINITY, 0.1];
+        let pr = [0u32, 0];
+        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&v, &resident), Some(0));
+        // Resident is *more* urgent (earlier deadline): no preemption.
+        let dl = [0.05, 0.1];
+        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&v, &resident), None);
+        // Equal urgency: no preemption (strictness prevents ping-pong).
+        let dl = [0.1, 0.1];
+        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&v, &resident), None);
+        // Higher priority displaces even without a deadline edge.
+        let dl = [f64::INFINITY, f64::INFINITY];
+        let pr = [0u32, 2];
+        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&v, &resident), Some(0));
+        // Rank-only frontier (no deadline, no priority): never preempts.
+        let pr = [0u32, 0];
+        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&v, &resident), None);
     }
 }

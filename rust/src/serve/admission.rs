@@ -49,28 +49,43 @@ pub struct Batch {
 }
 
 /// Group `requests` (must be sorted by arrival) into batches: a request
-/// joins the open batch iff its workload signature matches the opener's and
-/// it arrives within `window` seconds of the opener. `window <= 0` disables
-/// coalescing (one batch per request).
+/// joins the open batch **of its own workload signature** iff it arrives
+/// within `window` seconds of that batch's opener; otherwise it opens a
+/// fresh batch (replacing any stale open batch of the same signature).
+/// Keeping one open batch *per signature* means interleaved arrivals of
+/// different classes cannot fragment each other's coalescing — A@0,
+/// B@0.5 ms, A@1 ms with a 2 ms window yields two batches, not three.
+/// `window <= 0` disables coalescing (one batch per request). Batches are
+/// returned in opener-arrival order.
 pub fn batch_requests(requests: &[ServeRequest], window: f64) -> Vec<Batch> {
     let mut batches: Vec<Batch> = Vec::new();
-    let mut open: Option<(String, f64)> = None; // (signature, opener arrival)
+    // Open batch per signature: (signature, batch index, opener arrival).
+    let mut open: Vec<(String, usize, f64)> = Vec::new();
     for (i, req) in requests.iter().enumerate() {
         let sig = req.workload.signature();
-        let joins = match (&open, window > 0.0) {
-            (Some((osig, oarr)), true) => *osig == sig && req.arrival <= oarr + window,
-            _ => false,
-        };
-        if joins {
-            let b = batches.last_mut().expect("open batch exists");
-            b.members.push(i);
-            b.release = b.release.max(req.arrival);
+        let joins = if window > 0.0 {
+            open.iter()
+                .find(|(s, _, oarr)| *s == sig && req.arrival <= oarr + window)
+                .map(|&(_, bi, _)| bi)
         } else {
-            open = Some((sig, req.arrival));
-            batches.push(Batch {
-                release: req.arrival,
-                members: vec![i],
-            });
+            None
+        };
+        match joins {
+            Some(bi) => {
+                batches[bi].members.push(i);
+                batches[bi].release = batches[bi].release.max(req.arrival);
+            }
+            None => {
+                let bi = batches.len();
+                batches.push(Batch {
+                    release: req.arrival,
+                    members: vec![i],
+                });
+                match open.iter().position(|(s, _, _)| *s == sig) {
+                    Some(slot) => open[slot] = (sig, bi, req.arrival),
+                    None => open.push((sig, bi, req.arrival)),
+                }
+            }
         }
     }
     batches
@@ -156,5 +171,33 @@ mod tests {
     fn zero_window_disables_coalescing() {
         let reqs = vec![head_req(0, 0.0), head_req(1, 0.0)];
         assert_eq!(batch_requests(&reqs, 0.0).len(), 2);
+    }
+
+    #[test]
+    fn interleaved_signatures_do_not_fragment_batches() {
+        // A@0, B@0.0005, A@0.001 with a 2 ms window: the B arrival must not
+        // close A's open batch — 2 batches, not 3.
+        let reqs = vec![
+            head_req(0, 0.0),
+            ServeRequest::new(1, 0.0005, Workload::Mm2 { beta: 64 }),
+            head_req(2, 0.001),
+        ];
+        let batches = batch_requests(&reqs, 0.002);
+        assert_eq!(batches.len(), 2, "{batches:?}");
+        assert_eq!(batches[0].members, vec![0, 2]);
+        assert!((batches[0].release - 0.001).abs() < 1e-12);
+        assert_eq!(batches[1].members, vec![1]);
+        assert!((batches[1].release - 0.0005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stale_open_batch_is_replaced_per_signature() {
+        // The second A batch opens after the window; a third A arrival
+        // within the *new* opener's window joins the new batch, not the old.
+        let reqs = vec![head_req(0, 0.0), head_req(1, 0.010), head_req(2, 0.011)];
+        let batches = batch_requests(&reqs, 0.002);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].members, vec![0]);
+        assert_eq!(batches[1].members, vec![1, 2]);
     }
 }

@@ -10,7 +10,7 @@ use crate::graph::{Dag, Partition};
 use crate::json::Json;
 use crate::platform::Platform;
 use crate::sched::Policy;
-use crate::sim::{simulate, simulate_released, SimConfig};
+use crate::sim::{simulate, simulate_served, CompMeta, SimConfig};
 use crate::trace::Lane;
 
 /// Serving-layer knobs.
@@ -45,10 +45,38 @@ pub struct RequestOutcome {
     pub release: f64,
     /// Instant the last of its components finished.
     pub finish: f64,
-    /// End-to-end latency: `finish - arrival`.
+    /// End-to-end latency (see [`request_outcome`] for the exact
+    /// semantics, shared by every serving path).
     pub latency: f64,
     /// Whether the deadline was met (requests without deadlines: `None`).
     pub deadline_met: Option<bool>,
+    /// The request's priority (carried through for per-priority tails).
+    pub priority: u32,
+}
+
+/// The single place where latency and deadline semantics are defined, used
+/// by the sim, sequential, and real serving paths alike.
+///
+/// Latency is **end-to-end**: `finish - arrival`, and a deadline of `d`
+/// seconds is met iff `finish - arrival <= d`. One caveat: the real path is
+/// a *closed-loop replay* — the serving loop never sleeps waiting for an
+/// arrival, so wall-clock dispatch can outrun the nominal arrival process.
+/// When a batch starts before a member's arrival instant (`release <
+/// arrival`), `finish - arrival` would under-state the work done; the
+/// latency therefore degenerates to service latency (`finish - release`)
+/// exactly in that case, via `max`. In the sim and sequential paths
+/// `release >= arrival` always holds and the `max` is the identity.
+pub fn request_outcome(req: &ServeRequest, release: f64, finish: f64) -> RequestOutcome {
+    let latency = (finish - req.arrival).max(finish - release);
+    RequestOutcome {
+        id: req.id,
+        arrival: req.arrival,
+        release,
+        finish,
+        latency,
+        deadline_met: req.deadline.map(|d| latency <= d),
+        priority: req.priority,
+    }
 }
 
 /// Aggregate serving statistics for one run.
@@ -65,6 +93,17 @@ pub struct ServeReport {
     pub throughput_rps: f64,
     pub p50_latency: f64,
     pub p99_latency: f64,
+    /// Requests that carried a deadline.
+    pub deadline_total: usize,
+    /// ... of which this many missed it.
+    pub deadline_misses: usize,
+    /// `deadline_misses / deadline_total` (0 when no request has one).
+    pub deadline_miss_rate: f64,
+    /// p99 latency per distinct request priority, ascending priority.
+    pub per_priority_p99: Vec<(u32, f64)>,
+    /// Resident components displaced mid-flight (EDF preemption; 0 for
+    /// deadline-blind policies and the sequential/real paths).
+    pub preemptions: usize,
     /// Compute busy fraction per device over the makespan.
     pub device_util: Vec<f64>,
 }
@@ -81,6 +120,24 @@ impl ServeReport {
             ("throughput_rps", Json::num(self.throughput_rps)),
             ("p50_latency_s", Json::num(self.p50_latency)),
             ("p99_latency_s", Json::num(self.p99_latency)),
+            ("deadline_total", Json::num(self.deadline_total as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("deadline_miss_rate", Json::num(self.deadline_miss_rate)),
+            (
+                "per_priority_p99_s",
+                Json::Arr(
+                    self.per_priority_p99
+                        .iter()
+                        .map(|&(p, l)| {
+                            Json::obj(vec![
+                                ("priority", Json::num(p as f64)),
+                                ("p99_latency_s", Json::num(l)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("preemptions", Json::num(self.preemptions as f64)),
             (
                 "device_util",
                 Json::Arr(self.device_util.iter().map(|&u| Json::num(u)).collect()),
@@ -129,13 +186,43 @@ pub(crate) fn admit_all(requests: &[ServeRequest]) -> Admitted {
     (admitted, apps, rejected)
 }
 
-fn build_report(
+/// Deadline-miss and per-priority tail statistics over a set of outcomes.
+pub(crate) fn deadline_stats(outcomes: &[RequestOutcome]) -> (usize, usize, f64, Vec<(u32, f64)>) {
+    let deadline_total = outcomes.iter().filter(|o| o.deadline_met.is_some()).count();
+    let deadline_misses = outcomes
+        .iter()
+        .filter(|o| o.deadline_met == Some(false))
+        .count();
+    let deadline_miss_rate = if deadline_total > 0 {
+        deadline_misses as f64 / deadline_total as f64
+    } else {
+        0.0
+    };
+    let mut prios: Vec<u32> = outcomes.iter().map(|o| o.priority).collect();
+    prios.sort_unstable();
+    prios.dedup();
+    let per_priority_p99 = prios
+        .into_iter()
+        .map(|p| {
+            let lats: Vec<f64> = outcomes
+                .iter()
+                .filter(|o| o.priority == p)
+                .map(|o| o.latency)
+                .collect();
+            (p, percentile(&lats, 0.99))
+        })
+        .collect();
+    (deadline_total, deadline_misses, deadline_miss_rate, per_priority_p99)
+}
+
+pub(crate) fn build_report(
     mode: &'static str,
     policy: &str,
     outcomes: Vec<RequestOutcome>,
     rejected: Vec<(usize, String)>,
     makespan: f64,
     device_util: Vec<f64>,
+    preemptions: usize,
 ) -> ServeReport {
     let latencies: Vec<f64> = outcomes.iter().map(|o| o.latency).collect();
     let throughput_rps = if makespan > 0.0 {
@@ -143,6 +230,8 @@ fn build_report(
     } else {
         0.0
     };
+    let (deadline_total, deadline_misses, deadline_miss_rate, per_priority_p99) =
+        deadline_stats(&outcomes);
     ServeReport {
         policy: policy.to_string(),
         mode,
@@ -152,14 +241,21 @@ fn build_report(
         throughput_rps,
         p50_latency: percentile(&latencies, 0.50),
         p99_latency: percentile(&latencies, 0.99),
+        deadline_total,
+        deadline_misses,
+        deadline_miss_rate,
+        per_priority_p99,
+        preemptions,
         device_util,
     }
 }
 
 /// Serve the request stream **concurrently**: admit, batch, merge every
 /// admitted app into one multi-tenant application, and run it through
-/// [`simulate_released`] with per-component release times — requests share
-/// devices (up to `cfg.tenancy` residents each) under `policy`.
+/// [`simulate_served`] — per-component release times plus absolute
+/// deadlines and priorities ([`CompMeta`]), so deadline-aware policies
+/// (`edf`) can order and preempt across requests. Requests share devices
+/// (up to `cfg.tenancy` residents each) under `policy`.
 pub fn serve_sim(
     requests: &[ServeRequest],
     platform: &Platform,
@@ -176,28 +272,37 @@ pub fn serve_sim(
             rejected,
             0.0,
             vec![0.0; platform.devices.len()],
+            0,
         ));
     }
     let batches = batch_requests(&admitted, cfg.batch_window);
     let merged = merge_apps(&apps)?;
-    let mut releases = vec![0.0; merged.partition.components.len()];
+    let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
     for b in &batches {
         for &m in &b.members {
             for c in merged.component_ranges[m].clone() {
-                releases[c] = b.release;
+                meta[c].release = b.release;
             }
+        }
+    }
+    // Deadlines are absolute (arrival + budget) so EDF compares requests on
+    // one clock; priorities ride along per component.
+    for (i, req) in admitted.iter().enumerate() {
+        for c in merged.component_ranges[i].clone() {
+            meta[c].deadline = req.deadline.map(|d| req.arrival + d).unwrap_or(f64::INFINITY);
+            meta[c].priority = req.priority;
         }
     }
     let mut sim_cfg = cfg.sim.clone();
     sim_cfg.max_tenants = cfg.tenancy.max(1);
-    let sim = simulate_released(
+    let sim = simulate_served(
         &merged.dag,
         &merged.partition,
         platform,
         cost,
         policy,
         &sim_cfg,
-        &releases,
+        &meta,
     )?;
 
     let outcomes = admitted
@@ -205,19 +310,11 @@ pub fn serve_sim(
         .enumerate()
         .map(|(i, req)| {
             let range = merged.component_ranges[i].clone();
-            let release = releases[range.start];
+            let release = meta[range.start].release;
             let finish = range
                 .map(|c| sim.component_finish[c])
                 .fold(0.0f64, f64::max);
-            let latency = finish - req.arrival;
-            RequestOutcome {
-                id: req.id,
-                arrival: req.arrival,
-                release,
-                finish,
-                latency,
-                deadline_met: req.deadline.map(|d| latency <= d),
-            }
+            request_outcome(req, release, finish)
         })
         .collect();
 
@@ -241,6 +338,7 @@ pub fn serve_sim(
         rejected,
         makespan,
         device_util,
+        sim.preemptions,
     ))
 }
 
@@ -271,15 +369,7 @@ pub fn serve_sequential(
                 .trace
                 .busy_time(|l| matches!(l, Lane::Device { dev, .. } if *dev == d));
         }
-        let latency = finish - req.arrival;
-        outcomes.push(RequestOutcome {
-            id: req.id,
-            arrival: req.arrival,
-            release: start,
-            finish,
-            latency,
-            deadline_met: req.deadline.map(|d| latency <= d),
-        });
+        outcomes.push(request_outcome(req, start, finish));
     }
     let device_util = busy
         .into_iter()
@@ -292,6 +382,7 @@ pub fn serve_sequential(
         rejected,
         clock,
         device_util,
+        0,
     ))
 }
 
@@ -345,5 +436,52 @@ mod tests {
         assert_eq!(percentile(&v, 1.0), 4.0);
         assert_eq!(percentile(&v, 0.5), 3.0); // round(1.5) = 2 → 3.0
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn request_outcome_is_end_to_end_with_closed_loop_clamp() {
+        let mut req = ServeRequest::new(1, 0.010, Workload::Head { beta: 64 });
+        req.deadline = Some(0.050);
+        // Normal case (release after arrival): end-to-end latency.
+        let o = request_outcome(&req, 0.012, 0.040);
+        assert!((o.latency - 0.030).abs() < 1e-12);
+        assert_eq!(o.deadline_met, Some(true));
+        // Closed-loop replay outran the arrival (release < arrival): the
+        // latency degenerates to service latency, never negative.
+        let o = request_outcome(&req, 0.000, 0.008);
+        assert!((o.latency - 0.008).abs() < 1e-12);
+        assert_eq!(o.deadline_met, Some(true));
+        // No deadline → None.
+        req.deadline = None;
+        assert_eq!(request_outcome(&req, 0.012, 0.040).deadline_met, None);
+    }
+
+    #[test]
+    fn deadline_stats_aggregate_misses_and_priorities() {
+        let mk = |met: Option<bool>, priority: u32, latency: f64| RequestOutcome {
+            id: 0,
+            arrival: 0.0,
+            release: 0.0,
+            finish: latency,
+            latency,
+            deadline_met: met,
+            priority,
+        };
+        let outcomes = vec![
+            mk(Some(true), 0, 0.010),
+            mk(Some(false), 0, 0.030),
+            mk(None, 1, 0.005),
+            mk(Some(false), 1, 0.040),
+        ];
+        let (total, misses, rate, per_prio) = deadline_stats(&outcomes);
+        assert_eq!(total, 3);
+        assert_eq!(misses, 2);
+        assert!((rate - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(per_prio.len(), 2);
+        assert_eq!(per_prio[0].0, 0);
+        assert!((per_prio[0].1 - 0.030).abs() < 1e-12);
+        assert_eq!(per_prio[1].0, 1);
+        assert!((per_prio[1].1 - 0.040).abs() < 1e-12);
+        assert_eq!(deadline_stats(&[]).2, 0.0);
     }
 }

@@ -14,7 +14,7 @@
 //! * [`merge`] — fuses many application DAG/partition pairs into one
 //!   multi-tenant application with component↔request maps;
 //! * [`engine`] — the simulated serving path ([`serve_sim`]) over
-//!   [`crate::sim::simulate_released`] and the sequential-replay baseline
+//!   [`crate::sim::simulate_served`] and the sequential-replay baseline
 //!   ([`serve_sequential`]), with per-request makespan/latency accounting;
 //! * [`real`] — the real path over [`crate::exec::execute_dag_multi`]'s
 //!   thread-per-queue machinery (PJRT kernels).
@@ -24,6 +24,13 @@
 //! requests — reside on one device, and the widened
 //! [`crate::sched::SchedView`] exposes the resulting cross-DAG device load
 //! to every [`crate::sched::Policy`].
+//!
+//! Serving is **deadline-aware**: each request's deadline (made absolute)
+//! and priority are threaded through the merge into per-component
+//! [`crate::sim::CompMeta`], so policies like [`crate::sched::Edf`] order
+//! the frontier by urgency and may preempt less urgent resident tenants
+//! ([`crate::sched::Policy::preempt`]). Reports carry deadline-miss rate,
+//! per-priority p99, and the preemption count.
 
 pub mod admission;
 pub mod arrival;
@@ -34,7 +41,9 @@ pub mod request;
 
 pub use admission::{admit, batch_requests, Batch};
 pub use arrival::{poisson_arrivals, trace_arrivals};
-pub use engine::{serve_sequential, serve_sim, RequestOutcome, ServeConfig, ServeReport};
+pub use engine::{
+    request_outcome, serve_sequential, serve_sim, RequestOutcome, ServeConfig, ServeReport,
+};
 pub use merge::{merge_apps, MergedApp};
 pub use real::serve_real;
 pub use request::{ServeRequest, Workload};

@@ -6,14 +6,22 @@
 //! resident per device, so requests genuinely share the PJRT worker pool.
 //!
 //! Arrival times order and coalesce the stream (closed-loop replay): the
-//! serving loop does not sleep between batches, so per-request latency here
-//! is *service* latency (batch start → request completion) and the report's
-//! makespan/throughput are wall-clock. Deadlines are judged on service
-//! latency for the same reason.
+//! serving loop does not sleep between batches, so wall-clock dispatch can
+//! outrun the nominal arrival process. Latency and deadline semantics are
+//! **end-to-end and shared with the sim path** — defined in one place,
+//! [`super::engine::request_outcome`], which also documents the closed-loop
+//! degeneration to service latency. The real path is **deadline-blind at
+//! scheduling time**: `execute_dag_multi` feeds neutral metadata to
+//! `SchedView`, so `edf` degenerates to rank order here (threading
+//! `CompMeta` into the executor is a ROADMAP item), and there is no
+//! preemption (OS threads cannot be displaced mid-kernel). Deadlines are
+//! still *judged* and reported per request.
 
 use super::admission::batch_requests;
-use super::engine::{admit_all, percentile, RequestOutcome, ServeConfig, ServeReport};
-use super::merge::merge_apps;
+use super::engine::{
+    admit_all, build_report, request_outcome, RequestOutcome, ServeConfig, ServeReport,
+};
+use super::merge::{merge_apps, MergedApp};
 use super::request::ServeRequest;
 use crate::cost::CostModel;
 use crate::error::Result;
@@ -40,16 +48,34 @@ fn seeded_input(seed: u64, len: usize) -> Vec<f32> {
         .collect()
 }
 
-/// Seed every isolated input buffer of `dag` (per-request deterministic).
-fn seed_isolated_inputs(dag: &Dag, seed: u64) -> HashMap<usize, Vec<f32>> {
+/// Seed every isolated input buffer of a **merged** batch, keyed by
+/// `(request id, request-local buffer index)` rather than the merged buffer
+/// id: a request's data must not depend on where the merge placed it, i.e.
+/// on batch composition — the per-request deterministic contract. `members`
+/// are the request ids of the batch's apps, in merge order (the merge's
+/// per-app buffer ranges recover each buffer's owner and local index).
+fn seed_isolated_inputs(
+    merged: &MergedApp,
+    members: &[usize],
+    seed: u64,
+) -> HashMap<usize, Vec<f32>> {
     let mut inputs = HashMap::new();
-    for b in &dag.buffers {
-        let is_input = dag.kernels[b.kernel].inputs.contains(&b.id);
-        if is_input && dag.buffer_pred(b.id).is_none() {
-            inputs.insert(
-                b.id,
-                seeded_input(seed ^ (b.id as u64 + 1), (b.size_bytes / 4) as usize),
-            );
+    for (i, &req_id) in members.iter().enumerate() {
+        let lo = merged.buffer_offsets[i];
+        let hi = merged
+            .buffer_offsets
+            .get(i + 1)
+            .copied()
+            .unwrap_or(merged.dag.buffers.len());
+        for b in &merged.dag.buffers[lo..hi] {
+            let is_input = merged.dag.kernels[b.kernel].inputs.contains(&b.id);
+            if is_input && merged.dag.buffer_pred(b.id).is_none() {
+                let local = (b.id - lo) as u64;
+                let key = seed
+                    ^ (req_id as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                    ^ (local + 1).wrapping_mul(0xD1B54A32D192ED03);
+                inputs.insert(b.id, seeded_input(key, (b.size_bytes / 4) as usize));
+            }
         }
     }
     inputs
@@ -78,8 +104,9 @@ pub fn serve_real(
     for batch in &batches {
         let members: Vec<(Dag, Partition)> =
             batch.members.iter().map(|&m| apps[m].clone()).collect();
+        let member_ids: Vec<usize> = batch.members.iter().map(|&m| admitted[m].id).collect();
         let merged = merge_apps(&members)?;
-        let inputs = seed_isolated_inputs(&merged.dag, seed);
+        let inputs = seed_isolated_inputs(&merged, &member_ids, seed);
         let start = epoch.elapsed().as_secs_f64();
         let report = execute_dag_multi(
             &merged.dag,
@@ -98,40 +125,24 @@ pub fn serve_real(
                 .busy_time(|l| matches!(l, Lane::Device { dev, .. } if *dev == d));
         }
         for &m in &batch.members {
-            let req = &admitted[m];
-            let latency = finish - start;
-            outcomes.push(RequestOutcome {
-                id: req.id,
-                arrival: req.arrival,
-                release: start,
-                finish,
-                latency,
-                deadline_met: req.deadline.map(|d| latency <= d),
-            });
+            outcomes.push(request_outcome(&admitted[m], start, finish));
         }
     }
 
     let makespan = epoch.elapsed().as_secs_f64();
-    let latencies: Vec<f64> = outcomes.iter().map(|o| o.latency).collect();
-    let throughput_rps = if makespan > 0.0 {
-        outcomes.len() as f64 / makespan
-    } else {
-        0.0
-    };
-    Ok(ServeReport {
-        policy: policy.name().to_string(),
-        mode: "real",
+    let device_util = busy
+        .into_iter()
+        .map(|b| if makespan > 0.0 { b / makespan } else { 0.0 })
+        .collect();
+    Ok(build_report(
+        "real",
+        policy.name(),
         outcomes,
         rejected,
         makespan,
-        throughput_rps,
-        p50_latency: percentile(&latencies, 0.50),
-        p99_latency: percentile(&latencies, 0.99),
-        device_util: busy
-            .into_iter()
-            .map(|b| if makespan > 0.0 { b / makespan } else { 0.0 })
-            .collect(),
-    })
+        device_util,
+        0,
+    ))
 }
 
 #[cfg(test)]
@@ -171,14 +182,39 @@ mod tests {
 
     #[test]
     fn seeded_inputs_are_deterministic() {
-        let (dag, _) = Workload::Head { beta: 64 }.instantiate().unwrap();
-        let a = seed_isolated_inputs(&dag, 7);
-        let b = seed_isolated_inputs(&dag, 7);
+        let app = Workload::Head { beta: 64 }.instantiate().unwrap();
+        let merged = merge_apps(std::slice::from_ref(&app)).unwrap();
+        let a = seed_isolated_inputs(&merged, &[5], 7);
+        let b = seed_isolated_inputs(&merged, &[5], 7);
         assert_eq!(a.len(), b.len());
         for (k, v) in &a {
             assert_eq!(Some(v), b.get(k));
         }
         // X and the four weights per head: 7 isolated inputs.
         assert_eq!(a.len(), 7);
+        // A different request id yields different data for the same slots.
+        let c = seed_isolated_inputs(&merged, &[6], 7);
+        assert!(a.iter().any(|(k, v)| c.get(k) != Some(v)));
+    }
+
+    #[test]
+    fn seeded_inputs_independent_of_batch_composition() {
+        // The same request (id 5) must see identical input data whether it
+        // is merged alone or behind another request — data is keyed by
+        // (request id, request-local buffer index), not merged buffer id.
+        let app = Workload::Head { beta: 64 }.instantiate().unwrap();
+        let solo = merge_apps(std::slice::from_ref(&app)).unwrap();
+        let solo_inputs = seed_isolated_inputs(&solo, &[5], 7);
+
+        let pair = merge_apps(&[app.clone(), app.clone()]).unwrap();
+        let pair_inputs = seed_isolated_inputs(&pair, &[9, 5], 7);
+        let off = pair.buffer_offsets[1];
+        for (&b, data) in &solo_inputs {
+            assert_eq!(
+                Some(data),
+                pair_inputs.get(&(b + off)),
+                "buffer {b} data depends on batch composition"
+            );
+        }
     }
 }

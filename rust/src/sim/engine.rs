@@ -10,11 +10,35 @@ use crate::error::{Error, Result};
 use crate::graph::{Dag, KernelId, Partition};
 use crate::platform::{DeviceId, Platform};
 use crate::queue::{setup_cq, CmdId, CommandKind, CommandQueues};
-use crate::sched::{component_ranks, Policy, SchedView};
+use crate::sched::{component_ranks, Policy, ResidentTenant, SchedView};
 use crate::trace::{Lane, Span, Trace};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::collections::VecDeque;
+
+/// Per-component serving metadata for [`simulate_served`]: when the
+/// component may start, how urgent it is, and by when it must finish.
+#[derive(Debug, Clone, Copy)]
+pub struct CompMeta {
+    /// Earliest instant the component may join the frontier (its request's
+    /// coalesced arrival).
+    pub release: f64,
+    /// Absolute deadline, seconds since the serving epoch
+    /// (`f64::INFINITY` when the request carries none).
+    pub deadline: f64,
+    /// Request priority (larger = more urgent; 0 default).
+    pub priority: u32,
+}
+
+impl Default for CompMeta {
+    fn default() -> Self {
+        CompMeta {
+            release: 0.0,
+            deadline: f64::INFINITY,
+            priority: 0,
+        }
+    }
+}
 
 /// Simulation tuning knobs beyond what [`Platform`] carries.
 #[derive(Debug, Clone)]
@@ -60,8 +84,12 @@ pub struct SimResult {
     pub policy: String,
     /// Per-component completion times.
     pub component_finish: Vec<f64>,
-    /// Which device each component ran on.
+    /// Which device each component ran on (the last device for components
+    /// that were preempted and re-dispatched).
     pub component_device: Vec<DeviceId>,
+    /// Number of preemptions (resident components displaced mid-flight by
+    /// [`Policy::preempt`]).
+    pub preemptions: usize,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -76,6 +104,14 @@ struct Dispatch {
     device: DeviceId,
     /// Commands become issuable after this instant (select + setup_cq).
     ready_at: f64,
+    /// Set when the component was preempted: the dispatch is dead — no
+    /// further commands issue, in-flight completions are dropped, and a
+    /// fresh dispatch is created when the component is re-selected.
+    cancelled: bool,
+    /// EFT booking added to `est_free[device]` at dispatch — rolled back
+    /// on displacement so repeated preemptions don't inflate the device's
+    /// estimated backlog.
+    est_committed: f64,
     state: Vec<CmdState>,
     /// Next unissued index per queue (in-order execution).
     queue_next: Vec<usize>,
@@ -176,17 +212,50 @@ pub fn simulate_released(
     cfg: &SimConfig,
     releases: &[f64],
 ) -> Result<SimResult> {
-    if releases.len() != partition.components.len() {
+    let meta: Vec<CompMeta> = releases
+        .iter()
+        .map(|&release| CompMeta {
+            release,
+            ..CompMeta::default()
+        })
+        .collect();
+    simulate_served(dag, partition, platform, cost, policy, cfg, &meta)
+}
+
+/// Deadline-aware serving entry point: [`simulate_released`] plus absolute
+/// deadlines and priorities per component, exposed to every policy through
+/// [`SchedView`] and consulted by the preemption hook
+/// ([`Policy::preempt`]). With default metadata this is exactly
+/// [`simulate`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_served(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &SimConfig,
+    meta: &[CompMeta],
+) -> Result<SimResult> {
+    if meta.len() != partition.components.len() {
         return Err(Error::Sched(format!(
-            "release times for {} components, partition has {}",
-            releases.len(),
+            "serving metadata for {} components, partition has {}",
+            meta.len(),
             partition.components.len()
         )));
     }
-    if let Some(t) = releases.iter().find(|t| !t.is_finite() || **t < 0.0) {
-        return Err(Error::Sched(format!("invalid release time {t}")));
+    for m in meta {
+        if !m.release.is_finite() || m.release < 0.0 {
+            return Err(Error::Sched(format!("invalid release time {}", m.release)));
+        }
+        // Deadlines are absolute instants: zero or even negative just means
+        // "already due" (an ordinary miss), so only NaN is malformed.
+        // Relative-budget validation (> 0) belongs to admission.
+        if m.deadline.is_nan() {
+            return Err(Error::Sched("invalid deadline NaN".into()));
+        }
     }
-    Engine::new(dag, partition, platform, cost, policy, cfg, Some(releases))?.run()
+    Engine::new(dag, partition, platform, cost, policy, cfg, Some(meta))?.run()
 }
 
 struct Engine<'a> {
@@ -209,6 +278,10 @@ struct Engine<'a> {
     est_free: Vec<f64>,
     /// Earliest instant each component may join the frontier (serving).
     release: Vec<f64>,
+    /// Absolute deadline per component (∞ when the request has none).
+    deadline: Vec<f64>,
+    /// Request priority per component (0 default).
+    priority: Vec<u32>,
     /// Components currently resident per device (multi-tenant serving).
     tenants: Vec<usize>,
     /// Outstanding external predecessor kernels per component.
@@ -220,6 +293,13 @@ struct Engine<'a> {
     comp_finish: Vec<f64>,
     comp_device: Vec<DeviceId>,
     comps_done: usize,
+    /// Fraction of each kernel's solo execution already performed —
+    /// preserved across preemption so displaced work re-runs only its
+    /// remaining solo-seconds (transfers are re-staged in full).
+    kernel_frac: Vec<f64>,
+    /// Live dispatch index per component (None once finished/displaced).
+    comp_active_disp: Vec<Option<usize>>,
+    preemptions: usize,
 
     // Execution state.
     dispatches: Vec<Dispatch>,
@@ -239,7 +319,7 @@ impl<'a> Engine<'a> {
         cost: &'a dyn CostModel,
         policy: &'a mut dyn Policy,
         cfg: &'a SimConfig,
-        releases: Option<&[f64]>,
+        meta: Option<&[CompMeta]>,
     ) -> Result<Self> {
         let ncomp = partition.components.len();
         // Kernel-level unblock lists: producer kernel -> consumer components.
@@ -261,9 +341,15 @@ impl<'a> Engine<'a> {
         }
         let ext_preds_left: Vec<usize> = ext_pred_sets.iter().map(|s| s.len()).collect();
         let comp_rank = component_ranks(dag, partition, platform, cost);
-        let release: Vec<f64> = releases
-            .map(|r| r.to_vec())
+        let release: Vec<f64> = meta
+            .map(|m| m.iter().map(|c| c.release).collect())
             .unwrap_or_else(|| vec![0.0; ncomp]);
+        let deadline: Vec<f64> = meta
+            .map(|m| m.iter().map(|c| c.deadline).collect())
+            .unwrap_or_else(|| vec![f64::INFINITY; ncomp]);
+        let priority: Vec<u32> = meta
+            .map(|m| m.iter().map(|c| c.priority).collect())
+            .unwrap_or_else(|| vec![0; ncomp]);
         let mut frontier: Vec<usize> = (0..ncomp)
             .filter(|&c| ext_preds_left[c] == 0 && release[c] <= 0.0)
             .collect();
@@ -293,6 +379,8 @@ impl<'a> Engine<'a> {
             available,
             est_free: vec![0.0; platform.devices.len()],
             release,
+            deadline,
+            priority,
             tenants: vec![0; platform.devices.len()],
             ext_preds_left,
             unblocks,
@@ -301,6 +389,9 @@ impl<'a> Engine<'a> {
             comp_finish: vec![f64::NAN; ncomp],
             comp_device: vec![usize::MAX; ncomp],
             comps_done: 0,
+            kernel_frac: vec![0.0; dag.num_kernels()],
+            comp_active_disp: vec![None; ncomp],
+            preemptions: 0,
             dispatches: Vec::new(),
             runs: Vec::new(),
             copy_engines: (0..platform.copy_engines.max(1))
@@ -335,6 +426,17 @@ impl<'a> Engine<'a> {
     }
 
     fn scheduler_phase(&mut self) {
+        // One preemption is allowed per blocked `select`; if the policy
+        // displaces a tenant but *still* cannot place anything, stop —
+        // otherwise a misbehaving policy could spin displacing tenants.
+        // The budget additionally bounds displace→select→displace churn
+        // within one phase: a Policy violating the strict-dominance
+        // contract (preempting a victim it immediately re-selects) would
+        // otherwise livelock here at a fixed timestamp, out of reach of
+        // run()'s max_events backstop. Legitimate chains are bounded by
+        // the component count.
+        let mut preempt_budget = self.partition.components.len().max(8);
+        let mut retry_after_preempt = false;
         loop {
             let load = self.device_load();
             let view = SchedView {
@@ -346,12 +448,49 @@ impl<'a> Engine<'a> {
                 dag: self.dag,
                 est_free: &self.est_free,
                 device_load: &load,
+                deadline: &self.deadline,
+                priority: &self.priority,
                 cost: self.cost,
             };
-            let Some((comp, dev)) = self.policy.select(&view) else {
+            if let Some((comp, dev)) = self.policy.select(&view) {
+                retry_after_preempt = false;
+                self.dispatch(comp, dev);
+                continue;
+            }
+            if retry_after_preempt
+                || preempt_budget == 0
+                || self.frontier.is_empty()
+                || !self.policy.can_preempt()
+            {
                 break;
-            };
-            self.dispatch(comp, dev);
+            }
+            // Candidate victims: resident components with commands still
+            // outstanding. A component that only awaits its completion
+            // callbacks frees no compute when displaced — its tenant slot
+            // returns within ~callback_latency anyway, while a displacement
+            // would force a full transfer re-stage.
+            let resident: Vec<ResidentTenant> = self
+                .comp_active_disp
+                .iter()
+                .enumerate()
+                .filter_map(|(c, di)| {
+                    di.filter(|&d| self.dispatches[d].cmds_remaining > 0)
+                        .map(|d| ResidentTenant {
+                            comp: c,
+                            device: self.dispatches[d].device,
+                        })
+                })
+                .collect();
+            if resident.is_empty() {
+                break;
+            }
+            match self.policy.preempt(&view, &resident) {
+                Some(victim) if self.displace(victim) => {
+                    preempt_budget -= 1;
+                    retry_after_preempt = true;
+                }
+                _ => break,
+            }
         }
     }
 
@@ -394,8 +533,8 @@ impl<'a> Engine<'a> {
             .filter_map(|c| c.transfer_buffer())
             .map(|b| self.platform.transfer_time(dev, self.dag.buffers[b].size_bytes))
             .sum();
-        self.est_free[dev] =
-            self.est_free[dev].max(ready_at) + solo + transfers + self.platform.callback_latency;
+        let est_committed = solo + transfers + self.platform.callback_latency;
+        self.est_free[dev] = self.est_free[dev].max(ready_at) + est_committed;
 
         let mut kernel_cmds_left: Vec<(KernelId, usize)> = Vec::new();
         for c in &cq.commands {
@@ -417,10 +556,88 @@ impl<'a> Engine<'a> {
             cq,
             device: dev,
             ready_at,
+            cancelled: false,
+            est_committed,
         };
         let idx = self.dispatches.len();
         self.dispatches.push(d);
+        self.comp_active_disp[comp] = Some(idx);
         self.push_ev(ready_at, EvKind::DispatchReady(idx));
+    }
+
+    /// Preempt `victim` at command-queue granularity: kernels that already
+    /// completed stay completed (their callbacks still unblock successors),
+    /// running kernels are stopped with their progress credited to
+    /// [`Engine::kernel_frac`] (remaining solo-seconds preserved), queued
+    /// commands are cancelled, the tenant slot is returned, and the
+    /// component re-enters the frontier for a later re-dispatch (which
+    /// re-stages its transfers — the preemption penalty). Returns false if
+    /// `victim` is not currently resident.
+    fn displace(&mut self, victim: usize) -> bool {
+        let Some(di) = self.comp_active_disp.get(victim).copied().flatten() else {
+            return false;
+        };
+        // Stop running kernels of this dispatch, crediting partial work.
+        let mut i = 0;
+        while i < self.runs.len() {
+            if self.runs[i].disp != di {
+                i += 1;
+                continue;
+            }
+            let r = self.runs.swap_remove(i);
+            let device = self.platform.device(r.device);
+            let full = self.cost.exec_time(&self.dag.kernels[r.kernel], device);
+            let done = if full > 0.0 {
+                (1.0 - r.remaining / full).clamp(0.0, 1.0)
+            } else {
+                1.0
+            };
+            self.kernel_frac[r.kernel] = self.kernel_frac[r.kernel].max(done);
+            if self.now > r.started {
+                let name = &self.dag.kernels[r.kernel].name;
+                self.trace.push(Span {
+                    label: format!("{name}{}!", r.kernel),
+                    lane: Lane::Device {
+                        dev: r.device,
+                        slot: r.queue,
+                    },
+                    start: r.started,
+                    end: self.now,
+                    cmd: Some(r.cmd),
+                    kernel: Some(r.kernel),
+                });
+            }
+        }
+        // Drop queued (not yet started) DMA transfers; an in-flight one
+        // finishes physically but its completion is ignored (`cancelled`).
+        for e in &mut self.copy_engines {
+            e.queue.retain(|&(d, _)| d != di);
+        }
+        let dev = self.dispatches[di].device;
+        self.dispatches[di].cancelled = true;
+        self.comp_active_disp[victim] = None;
+        self.comp_dispatched[victim] = false;
+        self.tenants[dev] -= 1;
+        if !self.available.contains(&dev) {
+            self.available.push(dev);
+        }
+        // Roll back the EFT booking made at dispatch (the re-dispatch will
+        // book afresh); partial progress is forfeited with it.
+        self.est_free[dev] = (self.est_free[dev] - self.dispatches[di].est_committed).max(self.now);
+        if self.tenants[dev] == 0 {
+            self.est_free[dev] = self.now;
+        }
+        self.preemptions += 1;
+        self.trace.push(Span {
+            label: format!("preempt c{victim}"),
+            lane: Lane::Host,
+            start: self.now,
+            end: self.now,
+            cmd: None,
+            kernel: None,
+        });
+        self.enter_frontier(victim);
+        true
     }
 
     // ------------------------------------------------------------- issuing
@@ -432,10 +649,12 @@ impl<'a> Engine<'a> {
         while progressed {
             progressed = false;
             for di in 0..self.dispatches.len() {
-                // §Perf: skip drained or not-yet-ready dispatches — dynamic
-                // policies accumulate one dispatch per kernel, and scanning
-                // finished ones made issue_phase O(kernels) per event.
+                // §Perf: skip drained, cancelled, or not-yet-ready
+                // dispatches — dynamic policies accumulate one dispatch per
+                // kernel, and scanning finished ones made issue_phase
+                // O(kernels) per event.
                 if self.dispatches[di].cmds_remaining == 0
+                    || self.dispatches[di].cancelled
                     || self.dispatches[di].ready_at > self.now + EPS
                 {
                     continue;
@@ -492,13 +711,18 @@ impl<'a> Engine<'a> {
                 }
                 let device = self.platform.device(dev_id);
                 let node = &self.dag.kernels[kernel];
+                // Preempted-and-re-dispatched kernels only owe their
+                // remaining solo-seconds (kernel_frac credits prior runs;
+                // fully finished kernels replay instantly).
+                let full = self.cost.exec_time(node, device);
+                let remaining = full * (1.0 - self.kernel_frac[kernel]).max(0.0);
                 self.runs.push(Run {
                     disp: di,
                     cmd,
                     kernel,
                     device: dev_id,
                     queue,
-                    remaining: self.cost.exec_time(node, device),
+                    remaining,
                     occupancy: contention::occupancy(node, device),
                     started: self.now,
                 });
@@ -553,6 +777,12 @@ impl<'a> Engine<'a> {
     // ---------------------------------------------------------- completion
 
     fn command_done(&mut self, di: usize, cmd: CmdId) {
+        if self.dispatches[di].cancelled {
+            // Completion belonging to a preempted dispatch (e.g. an
+            // in-flight DMA or a zero-copy map that outlived displacement):
+            // the work is void, the re-dispatch replays it.
+            return;
+        }
         let d = &mut self.dispatches[di];
         debug_assert_eq!(d.state[cmd], CmdState::Issued);
         d.state[cmd] = CmdState::Done;
@@ -601,22 +831,33 @@ impl<'a> Engine<'a> {
     }
 
     fn handle_callback(&mut self, di: usize, kernel: KernelId) {
+        // A preempted-and-re-run kernel fires its callback again; only the
+        // first firing may decrement successor dependency counts.
+        let first_completion = !self.kernel_finished[kernel];
         self.kernel_finished[kernel] = true;
         let comp = self.dispatches[di].cq.component;
-        // update_task_queue: successors that became ready join F — unless
-        // their request has not arrived yet (serving), in which case the
-        // release event re-examines them.
-        let unblocked = self.unblocks[kernel].clone();
-        for uc in unblocked {
-            // A component is ready when all external producer kernels done.
-            self.ext_preds_left[uc] -= 1;
-            if self.ext_preds_left[uc] == 0 && !self.comp_dispatched[uc] {
-                if self.release[uc] > self.now + EPS {
-                    self.push_ev(self.release[uc], EvKind::Release { comp: uc });
-                } else {
-                    self.enter_frontier(uc);
+        if first_completion {
+            // update_task_queue: successors that became ready join F —
+            // unless their request has not arrived yet (serving), in which
+            // case the release event re-examines them.
+            let unblocked = self.unblocks[kernel].clone();
+            for uc in unblocked {
+                // A component is ready when all external producers are done.
+                self.ext_preds_left[uc] -= 1;
+                if self.ext_preds_left[uc] == 0 && !self.comp_dispatched[uc] {
+                    if self.release[uc] > self.now + EPS {
+                        self.push_ev(self.release[uc], EvKind::Release { comp: uc });
+                    } else {
+                        self.enter_frontier(uc);
+                    }
                 }
             }
+        }
+        if self.dispatches[di].cancelled {
+            // Callback of a displaced dispatch: the tenant slot was already
+            // returned at displacement; completed-kernel bookkeeping above
+            // still counts (command-queue-granularity preemption).
+            return;
         }
         // return_device (one tenant slot) once the component has finished.
         let d = &mut self.dispatches[di];
@@ -632,18 +873,27 @@ impl<'a> Engine<'a> {
                 self.est_free[dev] = self.now;
             }
             self.comp_finish[comp] = self.now;
+            self.comp_active_disp[comp] = None;
             self.comps_done += 1;
         }
     }
 
-    /// Add a ready, released component to the rank-sorted frontier.
+    /// Add a ready, released component to the rank-sorted (descending)
+    /// frontier. Binary-search insertion keeps the invariant in O(log F)
+    /// compares + one shift, instead of the former full `sort_by` per
+    /// callback (a named ROADMAP perf item for large merged DAGs). Equal
+    /// ranks insert after existing entries, matching the stable sort the
+    /// previous implementation used.
     fn enter_frontier(&mut self, comp: usize) {
         if self.comp_dispatched[comp] || self.frontier.contains(&comp) {
             return;
         }
-        self.frontier.push(comp);
+        let rank = self.comp_rank[comp];
         let ranks = &self.comp_rank;
-        self.frontier.sort_by(|&a, &b| ranks[b].total_cmp(&ranks[a]));
+        let idx = self
+            .frontier
+            .partition_point(|&c| ranks[c].total_cmp(&rank).is_ge());
+        self.frontier.insert(idx, comp);
     }
 
     // ------------------------------------------------------------- kernels
@@ -729,6 +979,7 @@ impl<'a> Engine<'a> {
             finished.sort_unstable_by(|a, b| b.cmp(a));
             for i in finished {
                 let r = self.runs.swap_remove(i);
+                self.kernel_frac[r.kernel] = 1.0;
                 let name = &self.dag.kernels[r.kernel].name;
                 self.trace.push(Span {
                     label: format!("{name}{}", r.kernel),
@@ -777,6 +1028,7 @@ impl<'a> Engine<'a> {
             policy: self.policy.name().to_string(),
             component_finish: self.comp_finish,
             component_device: self.comp_device,
+            preemptions: self.preemptions,
         })
     }
 }
@@ -1051,6 +1303,173 @@ mod tests {
             &[0.0],
         );
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn served_default_meta_matches_plain_simulate() {
+        let (dag, ios) = transformer_dag(2, 128, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let cfg = SimConfig::default();
+        let plain = simulate(&dag, &part, &platform, &PaperCost, &mut Clustering, &cfg)
+            .unwrap();
+        let served = simulate_served(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &cfg,
+            &[CompMeta::default(), CompMeta::default()],
+        )
+        .unwrap();
+        assert_eq!(plain.makespan, served.makespan);
+        assert_eq!(served.preemptions, 0);
+    }
+
+    #[test]
+    fn served_meta_rejects_nan_deadline_accepts_already_due() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(3, 0);
+        let bad = CompMeta {
+            deadline: f64::NAN,
+            ..CompMeta::default()
+        };
+        let res = simulate_served(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+            &[bad, CompMeta::default()],
+        );
+        assert!(res.is_err());
+        // An absolute deadline of 0 is "already due", not a config error —
+        // the run proceeds and simply misses it.
+        let due = CompMeta {
+            deadline: 0.0,
+            ..CompMeta::default()
+        };
+        let r = simulate_served(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+            &[due, CompMeta::default()],
+        )
+        .unwrap();
+        assert!(r.component_finish[0] > 0.0);
+    }
+
+    /// Exclusive single-GPU platform, a long-running low-priority resident
+    /// and an urgent late arrival: EDF must displace the resident, the
+    /// urgent request must finish first, and the displaced component must
+    /// still complete (remaining work preserved).
+    #[test]
+    fn edf_preempts_resident_for_urgent_arrival() {
+        use crate::sched::Edf;
+        let (dag, ios) = transformer_dag(2, 256, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(3, 0);
+        let cfg = SimConfig::default(); // max_tenants = 1: GPU is exclusive
+        // Calibrate the scenario in solo-head units so it survives
+        // cost-model changes: one head run exclusively takes `head_t`.
+        let (hdag, hios) = transformer_dag(1, 256, DeviceType::Gpu);
+        let hpart = cluster_by_head(&hdag, &hios, 0);
+        let head_t = simulate(&hdag, &hpart, &platform, &PaperCost, &mut Clustering, &cfg)
+            .unwrap()
+            .makespan;
+        // Component 0: released at 0, no deadline. Component 1: arrives 5%
+        // into component 0's run with a tight deadline and high priority.
+        let meta = [
+            CompMeta::default(),
+            CompMeta {
+                release: 0.05 * head_t,
+                deadline: 1.5 * head_t,
+                priority: 1,
+            },
+        ];
+        let r = simulate_served(&dag, &part, &platform, &PaperCost, &mut Edf, &cfg, &meta)
+            .unwrap();
+        assert!(r.preemptions >= 1, "no preemption happened");
+        assert!(
+            r.component_finish.iter().all(|t| t.is_finite()),
+            "displaced component never completed: {:?}",
+            r.component_finish
+        );
+        assert!(
+            r.component_finish[1] < r.component_finish[0],
+            "urgent component should finish first ({} !< {})",
+            r.component_finish[1],
+            r.component_finish[0]
+        );
+        // Without preemption (least-loaded ignores deadlines), the urgent
+        // request waits behind the resident — strictly later finish.
+        let blind = simulate_served(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut crate::sched::LeastLoaded,
+            &cfg,
+            &meta,
+        )
+        .unwrap();
+        assert_eq!(blind.preemptions, 0);
+        assert!(
+            r.component_finish[1] < blind.component_finish[1],
+            "preemption should speed up the urgent request ({} !< {})",
+            r.component_finish[1],
+            blind.component_finish[1]
+        );
+    }
+
+    /// A preempted component's already-finished kernels stay finished: the
+    /// total simulated makespan with preemption stays bounded (no work is
+    /// silently redone from scratch) and every component completes.
+    #[test]
+    fn preemption_preserves_remaining_work() {
+        use crate::sched::Edf;
+        let (dag, ios) = transformer_dag(3, 128, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(3, 0);
+        let cfg = SimConfig::default();
+        let (hdag, hios) = transformer_dag(1, 128, DeviceType::Gpu);
+        let hpart = cluster_by_head(&hdag, &hios, 0);
+        let head_t = simulate(&hdag, &hpart, &platform, &PaperCost, &mut Clustering, &cfg)
+            .unwrap()
+            .makespan;
+        let meta = [
+            CompMeta::default(),
+            CompMeta {
+                release: 0.02 * head_t,
+                deadline: 1.5 * head_t,
+                priority: 2,
+            },
+            CompMeta {
+                release: 0.04 * head_t,
+                deadline: 1.8 * head_t,
+                priority: 1,
+            },
+        ];
+        let r = simulate_served(&dag, &part, &platform, &PaperCost, &mut Edf, &cfg, &meta)
+            .unwrap();
+        assert!(r.component_finish.iter().all(|t| t.is_finite()));
+        // Solo makespan of the whole partition without any arrivals gives a
+        // generous upper bound when multiplied by the re-staging overhead.
+        let solo = simulate(&dag, &part, &platform, &PaperCost, &mut Clustering, &cfg)
+            .unwrap()
+            .makespan;
+        assert!(
+            r.makespan < solo * 3.0,
+            "preemption re-ran too much work: {} vs solo {}",
+            r.makespan,
+            solo
+        );
     }
 
     #[test]

@@ -11,7 +11,12 @@
 //! [`simulate_released`] is the multi-DAG serving entry point: components
 //! carry release times (request arrivals) and devices admit several resident
 //! components at once (`SimConfig::max_tenants`) — see [`crate::serve`].
+//! [`simulate_served`] additionally threads absolute deadlines and
+//! priorities ([`CompMeta`]) to deadline-aware policies, and honours
+//! [`crate::sched::Policy::preempt`]: an urgent component may displace a
+//! less urgent resident tenant at command-queue granularity, the displaced
+//! work re-entering the frontier with its remaining solo-seconds preserved.
 
 pub mod engine;
 
-pub use engine::{simulate, simulate_released, SimConfig, SimResult};
+pub use engine::{simulate, simulate_released, simulate_served, CompMeta, SimConfig, SimResult};

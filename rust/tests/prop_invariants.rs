@@ -328,3 +328,128 @@ fn prop_queue_structures_execute_all_commands() {
         }
     }
 }
+
+// ------------------------------------------------- serving-layer batching
+
+/// Random request stream: arrival-sorted, signatures drawn from a small
+/// workload pool, occasional simultaneous arrivals.
+fn random_stream(rng: &mut Rng, n: usize) -> Vec<pyschedcl::serve::ServeRequest> {
+    use pyschedcl::serve::{ServeRequest, Workload};
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            if !rng.chance(20) {
+                t += rng.below(30) as f64 * 1e-4; // 0..3 ms gaps
+            }
+            let workload = match rng.below(3) {
+                0 => Workload::Head { beta: 64 },
+                1 => Workload::Head { beta: 128 },
+                _ => Workload::Mm2 { beta: 64 },
+            };
+            ServeRequest::new(i, t, workload)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_batching_invariants() {
+    use pyschedcl::serve::batch_requests;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 1000);
+        let n = 1 + rng.below(24);
+        let requests = random_stream(&mut rng, n);
+        let window = [0.0, 1e-3, 5e-3][rng.below(3)];
+        let batches = batch_requests(&requests, window);
+
+        // Every request lands in exactly one batch.
+        let mut seen = vec![0usize; n];
+        for b in &batches {
+            for &m in &b.members {
+                seen[m] += 1;
+            }
+        }
+        assert!(
+            seen.iter().all(|&c| c == 1),
+            "seed {seed}: membership counts {seen:?}"
+        );
+
+        for (bi, b) in batches.iter().enumerate() {
+            // Members stay in arrival (index) order within a batch.
+            assert!(
+                b.members.windows(2).all(|w| w[0] < w[1]),
+                "seed {seed}: batch {bi} members unsorted {:?}",
+                b.members
+            );
+            // Release = max member arrival (never travels back in time).
+            let max_arrival = b
+                .members
+                .iter()
+                .map(|&m| requests[m].arrival)
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(
+                b.release, max_arrival,
+                "seed {seed}: batch {bi} release mismatch"
+            );
+            // No cross-signature mixing.
+            let sig = requests[b.members[0]].workload.signature();
+            assert!(
+                b.members
+                    .iter()
+                    .all(|&m| requests[m].workload.signature() == sig),
+                "seed {seed}: batch {bi} mixes signatures"
+            );
+            // Every member arrives within `window` of the batch opener.
+            let opener = requests[b.members[0]].arrival;
+            assert!(
+                b.members
+                    .iter()
+                    .all(|&m| requests[m].arrival <= opener + window),
+                "seed {seed}: batch {bi} exceeds its window"
+            );
+        }
+
+        // window = 0 disables coalescing entirely.
+        if window == 0.0 {
+            assert_eq!(batches.len(), n, "seed {seed}: zero window must singleton");
+        }
+    }
+}
+
+#[test]
+fn prop_interleaved_signatures_coalesce_per_signature() {
+    // For any stream, batching must be *at least* as dense as per-signature
+    // sub-streams batched independently would be fragmented by a
+    // single-open-batch scheme: count batches per signature and check each
+    // equals batching that signature's sub-stream alone.
+    use pyschedcl::serve::batch_requests;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 5000);
+        let n = 2 + rng.below(20);
+        let requests = random_stream(&mut rng, n);
+        let window = 2e-3;
+        let batches = batch_requests(&requests, window);
+        let mut sigs: Vec<String> = requests
+            .iter()
+            .map(|r| r.workload.signature())
+            .collect::<Vec<_>>();
+        sigs.sort();
+        sigs.dedup();
+        for sig in &sigs {
+            let sub: Vec<pyschedcl::serve::ServeRequest> = requests
+                .iter()
+                .filter(|r| r.workload.signature() == *sig)
+                .cloned()
+                .collect();
+            let sub_batches = batch_requests(&sub, window);
+            let full_count = batches
+                .iter()
+                .filter(|b| requests[b.members[0]].workload.signature() == *sig)
+                .count();
+            assert_eq!(
+                full_count,
+                sub_batches.len(),
+                "seed {seed}: signature {sig} fragmented by interleaving"
+            );
+        }
+    }
+}
