@@ -17,6 +17,7 @@ use pyschedcl::serve::{
 /// `--deadline-ms/--deadline-tight-ms/--deadline-tight-every` flags.
 fn stream(n: usize, seed: u64, tight_s: f64, loose_s: f64) -> Vec<ServeRequest> {
     poisson_arrivals(seed, n, 2000.0)
+        .expect("valid rate")
         .into_iter()
         .enumerate()
         .map(|(i, t)| {

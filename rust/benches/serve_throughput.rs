@@ -13,6 +13,7 @@ use pyschedcl::serve::{
 
 fn stream(n: usize, seed: u64, beta: u64) -> Vec<ServeRequest> {
     poisson_arrivals(seed, n, 2000.0)
+        .expect("valid rate")
         .into_iter()
         .enumerate()
         .map(|(i, t)| ServeRequest::new(i, t, Workload::Head { beta }))

@@ -22,6 +22,9 @@ pub enum Error {
     Runtime(String),
     /// Real-executor failure.
     Exec(String),
+    /// Bench-regression gate failure (`pyschedcl bench-check`): a metric
+    /// moved beyond the committed baseline's tolerance.
+    Bench(String),
     /// I/O error with context.
     Io(String),
 }
@@ -37,6 +40,7 @@ impl fmt::Display for Error {
             Error::Admission(m) => write!(f, "admission error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Exec(m) => write!(f, "exec error: {m}"),
+            Error::Bench(m) => write!(f, "bench regression: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),
         }
     }

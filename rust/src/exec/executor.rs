@@ -17,6 +17,7 @@ use crate::platform::{DeviceId, Platform};
 use crate::queue::{setup_cq, CommandKind};
 use crate::runtime::Runtime;
 use crate::sched::{component_ranks, Policy, SchedView};
+use crate::sim::CompMeta;
 use crate::trace::{Lane, Span, Trace};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -94,7 +95,9 @@ pub fn execute_dag(
 /// Multi-tenant variant of [`execute_dag`] for the serving layer: up to
 /// `tenancy` components may be resident on one device concurrently, so
 /// independent DAG requests merged into one partition genuinely share the
-/// device's worker pool (bounded by its hardware queue cap).
+/// device's worker pool (bounded by its hardware queue cap). Serving
+/// metadata is neutral — deadline-aware policies degrade to their rank
+/// fallback; use [`execute_dag_served`] to schedule by urgency.
 #[allow(clippy::too_many_arguments)]
 pub fn execute_dag_multi(
     dag: &Dag,
@@ -106,7 +109,41 @@ pub fn execute_dag_multi(
     inputs: &HashMap<BufferId, Vec<f32>>,
     tenancy: usize,
 ) -> Result<ExecReport> {
+    let meta = vec![CompMeta::default(); partition.components.len()];
+    execute_dag_served(
+        dag, partition, platform, cost, policy, runtime, inputs, tenancy, &meta,
+    )
+}
+
+/// Serving variant of [`execute_dag_multi`]: per-component [`CompMeta`]
+/// (absolute deadline + priority, **on the caller's clock starting at this
+/// call** — the serving loop re-bases per batch) is threaded into the
+/// [`SchedView`] every `select` sees, so deadline-aware policies (`edf`)
+/// order real dispatch by urgency exactly as they do in the simulator.
+/// `CompMeta::release` is ignored here: arrival pacing is the serving
+/// loop's job (`--pacing open` sleeps until each batch's release instant),
+/// and preemption stays sim-only — OS threads cannot be displaced
+/// mid-kernel, so [`crate::sched::Policy::preempt`] is never consulted.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_dag_served(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    runtime: &Arc<Runtime>,
+    inputs: &HashMap<BufferId, Vec<f32>>,
+    tenancy: usize,
+    meta: &[CompMeta],
+) -> Result<ExecReport> {
     let tenancy = tenancy.max(1);
+    if meta.len() != partition.components.len() {
+        return Err(Error::Exec(format!(
+            "serving metadata covers {} components, partition has {}",
+            meta.len(),
+            partition.components.len()
+        )));
+    }
     // Every kernel needs a bound artifact for real execution.
     for k in &dag.kernels {
         if k.artifact.is_none() {
@@ -148,11 +185,11 @@ pub fn execute_dag_multi(
         return Err(Error::Sched("no device has command queues".into()));
     }
 
-    // The real path carries no serving metadata yet: policies see neutral
-    // deadlines/priorities (deadline-aware selects degrade to their rank
-    // fallback; preemption is sim-only — OS threads cannot be displaced).
-    let no_deadline = vec![f64::INFINITY; ncomp];
-    let no_priority = vec![0u32; ncomp];
+    // Serving metadata for every SchedView the schedule loop builds:
+    // deadline-aware policies order real dispatch by urgency (preemption
+    // stays sim-only — OS threads cannot be displaced).
+    let deadline: Vec<f64> = meta.iter().map(|m| m.deadline).collect();
+    let priority: Vec<u32> = meta.iter().map(|m| m.priority).collect();
     let shared = Shared {
         dag,
         partition,
@@ -205,8 +242,8 @@ pub fn execute_dag_multi(
                     dag,
                     est_free: &st.est_free,
                     device_load: &load,
-                    deadline: &no_deadline,
-                    priority: &no_priority,
+                    deadline: &deadline,
+                    priority: &priority,
                     cost,
                 };
                 policy.select(&view)

@@ -17,5 +17,5 @@ pub mod executor;
 pub mod memory;
 
 pub use events::Event;
-pub use executor::{execute_dag, execute_dag_multi, ExecReport};
+pub use executor::{execute_dag, execute_dag_multi, execute_dag_served, ExecReport};
 pub use memory::BufferStore;

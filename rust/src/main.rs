@@ -19,26 +19,39 @@
 //!                 [--tenancy 4] [--batch-window-ms 2] [--seed 42]
 //!                 [--deadline-ms F] [--deadline-tight-ms F]
 //!                 [--deadline-tight-every K]
-//!                 [--mode sim|real] [--json OUT]    multi-DAG serving
+//!                 [--mode sim|real] [--pacing closed|open] [--prewarm]
+//!                 [--admission-laxity on|off]
+//!                 [--json OUT]                      multi-DAG serving
+//! pyschedcl bench-check --baseline F --current F [--tolerance 0.15]
+//!                 [--update]       CI bench-regression gate
 //! ```
 //!
 //! Deadline-aware serving: `--policy edf` schedules earliest absolute
 //! deadline first with preemption; `--deadline-ms` gives every request a
 //! latency budget, and `--deadline-tight-ms`/`--deadline-tight-every` mark
-//! every K-th request as a tight-deadline, priority-1 tenant.
+//! every K-th request as a tight-deadline, priority-1 tenant. Requests
+//! whose laxity is already negative at arrival are rejected at admission
+//! (`--admission-laxity off` disables). On the real path `--pacing open`
+//! makes the serving loop sleep until each batch's nominal release instant
+//! (open-loop latency measurement) and `--prewarm` compiles every AOT
+//! artifact before the epoch.
 
 use pyschedcl::cost::{CalibratedCost, CostModel, PaperCost};
 use pyschedcl::error::{Error, Result};
 use pyschedcl::exec::execute_dag;
 use pyschedcl::graph::Partition;
+use pyschedcl::json::Json;
 use pyschedcl::platform::{DeviceType, Platform};
 use pyschedcl::report::experiments as expts;
-use pyschedcl::report::{format_serve_comparison, serve_bench_json};
+use pyschedcl::report::{
+    check_bench, format_gate, format_real_summary, format_serve_comparison, parse_baseline,
+    serve_bench_json, update_baseline,
+};
 use pyschedcl::runtime::{manifest::default_artifact_dir, Runtime};
 use pyschedcl::sched::{Clustering, Eager, Edf, Heft, LeastLoaded, Policy};
 use pyschedcl::serve::{
-    poisson_arrivals, serve_real, serve_sequential, serve_sim, trace_arrivals, ServeConfig,
-    ServeRequest, Workload,
+    parse_rate, poisson_arrivals, serve_real, serve_sequential, serve_sim, trace_arrivals,
+    Pacing, ServeConfig, ServeRequest, Workload,
 };
 use pyschedcl::sim::{simulate, SimConfig};
 use pyschedcl::spec::parse_spec;
@@ -59,7 +72,12 @@ impl Args {
         let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
-                let val = it.next().cloned().unwrap_or_else(|| "true".into());
+                // Bare boolean flags (`--prewarm --json X`): the next token
+                // being another flag means this one carries no value.
+                let val = match it.peek() {
+                    Some(next) if !next.starts_with("--") => it.next().cloned().unwrap(),
+                    _ => "true".into(),
+                };
                 flags.insert(key.to_string(), val);
             } else {
                 positional.push(a.clone());
@@ -301,14 +319,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let beta = args.u64_or("beta", 64);
     let heads = args.usize_or("heads", 4);
     let h_cpu = args.usize_or("h-cpu", 0);
-    let rate = args
-        .get("rate")
-        .and_then(|v| v.parse::<f64>().ok())
-        .unwrap_or(2000.0);
+    // `--rate` is validated, not silently defaulted: garbage and
+    // non-positive rates are typed admission errors (parse_rate).
+    let rate = match args.get("rate") {
+        Some(text) => parse_rate(text)?,
+        None => 2000.0,
+    };
     let workload = Workload::parse(args.get("workload").unwrap_or("head"), heads, beta, h_cpu)?;
 
     let arrivals = match args.get("arrival").unwrap_or("poisson") {
-        "poisson" => poisson_arrivals(seed, n, rate),
+        "poisson" => poisson_arrivals(seed, n, rate)?,
         "trace" => {
             let path = args
                 .get("trace")
@@ -360,6 +380,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.usize_or("queues-gpu", 3),
         args.usize_or("queues-cpu", 1),
     );
+    let pacing = match args.get("pacing").unwrap_or("closed") {
+        "closed" => Pacing::Closed,
+        "open" => Pacing::Open,
+        other => {
+            return Err(Error::Io(format!(
+                "unknown pacing '{other}' (expected closed|open)"
+            )))
+        }
+    };
+    let laxity_admission = match args.get("admission-laxity").unwrap_or("on") {
+        "on" => true,
+        "off" => false,
+        other => {
+            return Err(Error::Io(format!(
+                "unknown admission-laxity '{other}' (expected on|off)"
+            )))
+        }
+    };
+    // A bare `--prewarm` parses as the value "true".
+    let prewarm = match args.get("prewarm") {
+        None | Some("false") | Some("off") => false,
+        Some("true") | Some("on") => true,
+        Some(other) => {
+            return Err(Error::Io(format!(
+                "unknown prewarm '{other}' (expected on|off)"
+            )))
+        }
+    };
     let cfg = ServeConfig {
         batch_window: args
             .get("batch-window-ms")
@@ -367,18 +415,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .unwrap_or(2.0)
             * 1e-3,
         tenancy: args.usize_or("tenancy", 4),
+        pacing,
+        laxity_admission,
+        prewarm,
         sim: SimConfig::default(),
     };
     let policy_name = args.get("policy").unwrap_or("clustering");
 
     println!(
         "serving {n} × {} | arrival={} rate={rate}/s seed={seed} | {} gpu(s) {} cpu(s) \
-         tenancy={} | policy={policy_name}",
+         tenancy={} | policy={policy_name} pacing={}",
         workload.signature(),
         args.get("arrival").unwrap_or("poisson"),
         args.usize_or("gpus", 1),
         args.usize_or("cpus", 1),
         cfg.tenancy,
+        cfg.pacing.as_str(),
     );
 
     if args.get("mode") == Some("real") {
@@ -388,37 +440,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .unwrap_or_else(default_artifact_dir);
         let runtime = Arc::new(Runtime::new(&dir)?);
         let mut policy = policy_by_name(policy_name)?;
+        // Real-path deadlines are wall-clock, so admission/EDF estimates
+        // should be too: prefer the measured table from `pyschedcl
+        // calibrate` when it exists; the paper's modeled times otherwise
+        // (fine for ordering, coarse for admission — see README).
+        let calibrated = CalibratedCost::load(&dir.join("calibration.json")).ok();
+        let cost: &dyn CostModel = match &calibrated {
+            Some(c) => {
+                println!("cost model: calibrated ({}/calibration.json)", dir.display());
+                c
+            }
+            None => &PaperCost,
+        };
         let report = serve_real(
             &requests,
             &runtime,
             &platform,
-            &PaperCost,
+            cost,
             policy.as_mut(),
             &cfg,
             seed,
         )?;
-        println!(
-            "real: served {} request(s) in {:.1} ms -> {:.1} req/s  p50 {:.2} ms  p99 {:.2} ms",
-            report.outcomes.len(),
-            report.makespan * 1e3,
-            report.throughput_rps,
-            report.p50_latency * 1e3,
-            report.p99_latency * 1e3
-        );
-        if report.deadline_total > 0 {
-            println!(
-                "deadlines: {}/{} missed ({:.1}%)",
-                report.deadline_misses,
-                report.deadline_total,
-                report.deadline_miss_rate * 100.0
-            );
-        }
-        for (id, why) in &report.rejected {
-            println!("rejected #{id}: {why}");
-        }
+        print!("{}", format_real_summary(&report));
         if let Some(path) = args.get("json") {
-            let json = pyschedcl::json::Json::obj(vec![
-                ("schema", pyschedcl::json::Json::str("pyschedcl-serve-bench-v1")),
+            let json = Json::obj(vec![
+                ("schema", Json::str("pyschedcl-serve-bench-v1")),
                 ("real", report.to_json()),
             ]);
             std::fs::write(path, json.to_string_pretty())
@@ -443,12 +489,72 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pyschedcl bench-check`: compare a freshly produced `BENCH_*.json`
+/// smoke artifact against a committed baseline and fail (typed
+/// [`Error::Bench`], exit 1) when any gated metric moved beyond tolerance.
+/// `--update` rewrites the baseline's bounds to the observed values
+/// instead — the intentional re-baselining path.
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| Error::Io("bench-check requires --baseline FILE".into()))?;
+    let current_path = args
+        .get("current")
+        .ok_or_else(|| Error::Io("bench-check requires --current FILE".into()))?;
+    let baseline_text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| Error::Io(format!("cannot read {baseline_path}: {e}")))?;
+    let current_text = std::fs::read_to_string(current_path)
+        .map_err(|e| Error::Io(format!("cannot read {current_path}: {e}")))?;
+    let baseline = parse_baseline(&baseline_text)?;
+    let current = Json::parse(&current_text)?;
+
+    // A bare `--update` parses as the value "true".
+    let update = match args.get("update") {
+        None | Some("false") | Some("off") => false,
+        Some("true") | Some("on") => true,
+        Some(other) => {
+            return Err(Error::Io(format!(
+                "unknown update '{other}' (expected on|off)"
+            )))
+        }
+    };
+    if update {
+        let updated = update_baseline(&baseline, &current)?;
+        std::fs::write(baseline_path, updated.to_string_pretty())
+            .map_err(|e| Error::Io(format!("cannot write {baseline_path}: {e}")))?;
+        println!("re-baselined {baseline_path} from {current_path}");
+        return Ok(());
+    }
+
+    let tolerance = match args.get("tolerance") {
+        Some(t) => Some(t.parse::<f64>().map_err(|_| {
+            Error::Io(format!("invalid --tolerance '{t}' (expected a number)"))
+        })?),
+        None => None,
+    };
+    let results = check_bench(&baseline, &current, tolerance);
+    print!("{}", format_gate(&results));
+    let failed = results.iter().filter(|r| !r.ok).count();
+    if failed > 0 {
+        return Err(Error::Bench(format!(
+            "{failed} of {} gated metric(s) in {current_path} moved beyond \
+             {baseline_path}'s tolerance",
+            results.len()
+        )));
+    }
+    println!(
+        "all {} gated metric(s) within tolerance of {baseline_path}",
+        results.len()
+    );
+    Ok(())
+}
+
 fn main_inner() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         eprintln!(
-            "usage: pyschedcl <inspect|simulate|run|serve|motivation|expt1|expt2|expt3|gantt|\
-             calibrate|autotune> ..."
+            "usage: pyschedcl <inspect|simulate|run|serve|bench-check|motivation|expt1|expt2|\
+             expt3|gantt|calibrate|autotune> ..."
         );
         std::process::exit(2);
     };
@@ -458,6 +564,7 @@ fn main_inner() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "bench-check" => cmd_bench_check(&args),
         "motivation" => cmd_motivation(&args),
         "expt1" => {
             let rows = expts::expt1(

@@ -1,0 +1,328 @@
+//! The CI bench-regression gate (`pyschedcl bench-check`).
+//!
+//! A committed **baseline** file (`ci/bench_baselines/BENCH_*.json`) lists
+//! dotted metric paths into a `BENCH_*.json` smoke artifact together with a
+//! `max` and/or `min` bound. The gate re-reads the freshly produced
+//! artifact, resolves each path, widens the bound by the tolerance
+//! (relative) plus an optional per-check absolute `slack`, and fails with a
+//! typed [`Error::Bench`] when any metric moved beyond it — so a latency or
+//! deadline-miss regression fails the CI job instead of silently shipping.
+//!
+//! Re-baselining intentionally is `bench-check --update`: bounds are
+//! rewritten to the observed values (tolerances still apply at check time),
+//! and the updated baseline is committed alongside the change that moved
+//! the numbers.
+//!
+//! Baseline schema (`pyschedcl-bench-baseline-v1`):
+//!
+//! ```json
+//! {
+//!   "schema": "pyschedcl-bench-baseline-v1",
+//!   "tolerance": 0.15,
+//!   "checks": [
+//!     {"path": "concurrent.p99_latency_s", "max": 0.5},
+//!     {"path": "speedup", "min": 1.0, "slack": 0.05}
+//!   ]
+//! }
+//! ```
+
+use crate::error::{Error, Result};
+use crate::json::Json;
+
+/// One gated metric: a dotted path into the bench JSON plus bounds.
+#[derive(Debug, Clone)]
+pub struct CheckSpec {
+    /// Dotted path into the bench artifact, e.g. `"concurrent.p99_latency_s"`.
+    pub path: String,
+    /// Upper bound (higher-is-worse metrics: latency, miss rate).
+    pub max: Option<f64>,
+    /// Lower bound (lower-is-worse metrics: throughput, speedup, cache hits).
+    pub min: Option<f64>,
+    /// Absolute slack added on top of the relative tolerance — lets a
+    /// zero-valued bound (e.g. `miss_rate` max 0) tolerate noise.
+    pub slack: f64,
+    /// Per-check tolerance override. Takes precedence over both the
+    /// file-level tolerance and the CLI `--tolerance` — exact-count
+    /// invariants (served-request counts, cache hits) set `0` so a widened
+    /// gate can never accept silently dropped requests.
+    pub tolerance: Option<f64>,
+}
+
+/// A parsed baseline file.
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    /// Relative tolerance applied to every bound (overridable per run).
+    pub tolerance: f64,
+    pub checks: Vec<CheckSpec>,
+}
+
+pub const BASELINE_SCHEMA: &str = "pyschedcl-bench-baseline-v1";
+
+/// Parse a committed baseline file.
+pub fn parse_baseline(text: &str) -> Result<Baseline> {
+    let root = Json::parse(text)?;
+    let schema = root.get("schema").and_then(|s| s.as_str());
+    if schema != Some(BASELINE_SCHEMA) {
+        return Err(Error::Bench(format!(
+            "baseline schema {:?}, expected {BASELINE_SCHEMA:?}",
+            schema.unwrap_or("<missing>")
+        )));
+    }
+    let tolerance = root
+        .get("tolerance")
+        .and_then(|t| t.as_f64())
+        .unwrap_or(0.15);
+    let arr = root
+        .get("checks")
+        .and_then(|c| c.as_arr())
+        .ok_or_else(|| Error::Bench("baseline has no 'checks' array".into()))?;
+    let mut checks = Vec::with_capacity(arr.len());
+    for c in arr {
+        let path = c
+            .get("path")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| Error::Bench("baseline check without 'path'".into()))?
+            .to_string();
+        let max = c.get("max").and_then(|v| v.as_f64());
+        let min = c.get("min").and_then(|v| v.as_f64());
+        if max.is_none() && min.is_none() {
+            return Err(Error::Bench(format!("check '{path}' has neither max nor min")));
+        }
+        checks.push(CheckSpec {
+            path,
+            max,
+            min,
+            slack: c.get("slack").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            tolerance: c.get("tolerance").and_then(|v| v.as_f64()),
+        });
+    }
+    Ok(Baseline { tolerance, checks })
+}
+
+/// Resolve a dotted path (`"concurrent.p99_latency_s"`) to a number.
+pub fn lookup_metric(root: &Json, path: &str) -> Option<f64> {
+    let mut node = root;
+    for key in path.split('.') {
+        node = node.get(key)?;
+    }
+    node.as_f64()
+}
+
+/// One check's verdict.
+#[derive(Debug, Clone)]
+pub struct GateResult {
+    pub path: String,
+    /// `None` when the path is missing from the artifact (schema drift —
+    /// always a failure).
+    pub observed: Option<f64>,
+    /// Human-readable allowed range after tolerance/slack widening.
+    pub allowed: String,
+    pub ok: bool,
+}
+
+/// Run every baseline check against the freshly produced bench artifact.
+/// `tolerance` overrides the baseline's file-level tolerance when given.
+pub fn check_bench(baseline: &Baseline, current: &Json, tolerance: Option<f64>) -> Vec<GateResult> {
+    baseline
+        .checks
+        .iter()
+        .map(|c| {
+            // Per-check tolerance is authoritative (exact-count gates pin
+            // it to 0); otherwise the CLI override, then the file default.
+            let tol = c
+                .tolerance
+                .or(tolerance)
+                .unwrap_or(baseline.tolerance)
+                .max(0.0);
+            let observed = lookup_metric(current, &c.path);
+            // Widen multiplicatively away from the allowed region, plus
+            // absolute slack (a negative bound widens toward -∞ via abs).
+            let hi = c.max.map(|m| m + m.abs() * tol + c.slack);
+            let lo = c.min.map(|m| m - m.abs() * tol - c.slack);
+            let allowed = match (lo, hi) {
+                (Some(l), Some(h)) => format!("[{l:.6}, {h:.6}]"),
+                (Some(l), None) => format!(">= {l:.6}"),
+                (None, Some(h)) => format!("<= {h:.6}"),
+                (None, None) => "(unbounded)".into(),
+            };
+            let ok = match observed {
+                None => false,
+                Some(v) => {
+                    v.is_finite()
+                        && hi.map(|h| v <= h).unwrap_or(true)
+                        && lo.map(|l| v >= l).unwrap_or(true)
+                }
+            };
+            GateResult {
+                path: c.path.clone(),
+                observed,
+                allowed,
+                ok,
+            }
+        })
+        .collect()
+}
+
+/// Render the verdict table.
+pub fn format_gate(results: &[GateResult]) -> String {
+    let mut s = String::from(
+        "metric                                   | observed     | allowed              | verdict\n\
+         -----------------------------------------+--------------+----------------------+--------\n",
+    );
+    for r in results {
+        let obs = match r.observed {
+            Some(v) => format!("{v:.6}"),
+            None => "<missing>".into(),
+        };
+        s.push_str(&format!(
+            "{:<40} | {:>12} | {:<20} | {}\n",
+            r.path,
+            obs,
+            r.allowed,
+            if r.ok { "ok" } else { "FAIL" }
+        ));
+    }
+    s
+}
+
+/// Re-baseline: rewrite every check's bounds to the observed values
+/// (tolerance/slack still widen them at check time). Missing metrics are a
+/// typed error — re-baselining must not silently drop coverage.
+pub fn update_baseline(baseline: &Baseline, current: &Json) -> Result<Json> {
+    let mut checks = Vec::with_capacity(baseline.checks.len());
+    for c in &baseline.checks {
+        let observed = lookup_metric(current, &c.path).ok_or_else(|| {
+            Error::Bench(format!("cannot re-baseline '{}': metric missing", c.path))
+        })?;
+        let mut fields = vec![("path", Json::str(c.path.clone()))];
+        if c.max.is_some() {
+            fields.push(("max", Json::num(observed)));
+        }
+        if c.min.is_some() {
+            fields.push(("min", Json::num(observed)));
+        }
+        if c.slack != 0.0 {
+            fields.push(("slack", Json::num(c.slack)));
+        }
+        if let Some(t) = c.tolerance {
+            fields.push(("tolerance", Json::num(t)));
+        }
+        checks.push(Json::obj(fields));
+    }
+    Ok(Json::obj(vec![
+        ("schema", Json::str(BASELINE_SCHEMA)),
+        ("tolerance", Json::num(baseline.tolerance)),
+        ("checks", Json::Arr(checks)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASE: &str = r#"{
+        "schema": "pyschedcl-bench-baseline-v1",
+        "tolerance": 0.10,
+        "checks": [
+            {"path": "concurrent.p99_latency_s", "max": 0.100},
+            {"path": "concurrent.throughput_rps", "min": 100.0},
+            {"path": "concurrent.deadline_miss_rate", "max": 0.0, "slack": 0.05},
+            {"path": "concurrent.requests", "min": 32, "tolerance": 0}
+        ]
+    }"#;
+
+    fn bench_n(p99: f64, thru: f64, miss: f64, requests: f64) -> Json {
+        Json::obj(vec![(
+            "concurrent",
+            Json::obj(vec![
+                ("p99_latency_s", Json::num(p99)),
+                ("throughput_rps", Json::num(thru)),
+                ("deadline_miss_rate", Json::num(miss)),
+                ("requests", Json::num(requests)),
+            ]),
+        )])
+    }
+
+    fn bench(p99: f64, thru: f64, miss: f64) -> Json {
+        bench_n(p99, thru, miss, 32.0)
+    }
+
+    #[test]
+    fn parses_baseline_and_checks_within_tolerance() {
+        let b = parse_baseline(BASE).unwrap();
+        assert_eq!(b.checks.len(), 4);
+        assert!((b.tolerance - 0.10).abs() < 1e-12);
+        // p99 10% worse than baseline is exactly at the widened bound.
+        let ok = check_bench(&b, &bench(0.109, 100.0, 0.04), None);
+        assert!(ok.iter().all(|r| r.ok), "{}", format_gate(&ok));
+    }
+
+    #[test]
+    fn regressions_beyond_tolerance_fail() {
+        let b = parse_baseline(BASE).unwrap();
+        // p99 regressed 20% (> 10% tolerance).
+        let r = check_bench(&b, &bench(0.120, 100.0, 0.0), None);
+        assert!(!r[0].ok, "{}", format_gate(&r));
+        assert!(r[1].ok && r[2].ok);
+        // Throughput collapsed below min*(1-tol).
+        let r = check_bench(&b, &bench(0.05, 80.0, 0.0), None);
+        assert!(!r[1].ok);
+        // Miss rate beyond the absolute slack of a zero bound.
+        let r = check_bench(&b, &bench(0.05, 100.0, 0.2), None);
+        assert!(!r[2].ok);
+        // The CLI override widens the gate.
+        let r = check_bench(&b, &bench(0.120, 100.0, 0.0), Some(0.5));
+        assert!(r[0].ok);
+    }
+
+    #[test]
+    fn exact_count_checks_ignore_relative_tolerance() {
+        // "requests min 32, tolerance 0": one dropped request fails even
+        // though the file tolerance (10%) — or a generous CLI override —
+        // would have widened the bound to ~28.
+        let b = parse_baseline(BASE).unwrap();
+        let r = check_bench(&b, &bench_n(0.05, 100.0, 0.0, 31.0), None);
+        assert!(!r[3].ok, "{}", format_gate(&r));
+        let r = check_bench(&b, &bench_n(0.05, 100.0, 0.0, 31.0), Some(0.5));
+        assert!(!r[3].ok, "per-check tolerance must beat the CLI override");
+        let r = check_bench(&b, &bench_n(0.05, 100.0, 0.0, 32.0), None);
+        assert!(r[3].ok);
+    }
+
+    #[test]
+    fn missing_metric_is_a_failure_not_a_pass() {
+        let b = parse_baseline(BASE).unwrap();
+        let r = check_bench(&b, &Json::obj(vec![]), None);
+        assert!(r.iter().all(|x| !x.ok));
+        assert!(format_gate(&r).contains("<missing>"));
+    }
+
+    #[test]
+    fn malformed_baselines_are_typed_errors() {
+        assert!(matches!(parse_baseline("{}"), Err(Error::Bench(_))));
+        let wrong_schema = r#"{"schema": "nope", "checks": []}"#;
+        assert!(matches!(parse_baseline(wrong_schema), Err(Error::Bench(_))));
+        let no_bound = r#"{"schema": "pyschedcl-bench-baseline-v1",
+                           "checks": [{"path": "x"}]}"#;
+        assert!(matches!(parse_baseline(no_bound), Err(Error::Bench(_))));
+    }
+
+    #[test]
+    fn update_rewrites_bounds_to_observed_values() {
+        let b = parse_baseline(BASE).unwrap();
+        let updated = update_baseline(&b, &bench(0.080, 140.0, 0.01)).unwrap();
+        let b2 = parse_baseline(&updated.to_string_pretty()).unwrap();
+        assert!((b2.checks[0].max.unwrap() - 0.080).abs() < 1e-9);
+        assert!((b2.checks[1].min.unwrap() - 140.0).abs() < 1e-9);
+        // Slack survives the rewrite; the observed run then passes its own
+        // updated baseline.
+        assert!((b2.checks[2].slack - 0.05).abs() < 1e-12);
+        let r = check_bench(&b2, &bench(0.080, 140.0, 0.01), None);
+        assert!(r.iter().all(|x| x.ok), "{}", format_gate(&r));
+        // A metric missing from the artifact refuses to re-baseline.
+        assert!(matches!(
+            update_baseline(&b, &Json::obj(vec![])),
+            Err(Error::Bench(_))
+        ));
+    }
+}

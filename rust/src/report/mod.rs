@@ -11,13 +11,20 @@
 //! integration tests) and renders the paper-style table via `Display`.
 //!
 //! [`serving`] adds the multi-DAG serving comparison (sequential replay vs
-//! concurrent multi-tenant serving) and the CI bench artifact.
+//! concurrent multi-tenant serving) and the CI bench artifact; [`benchgate`]
+//! the bench-regression gate that compares those artifacts against the
+//! committed baselines (`pyschedcl bench-check`).
 
+pub mod benchgate;
 pub mod experiments;
 pub mod serving;
 
+pub use benchgate::{
+    check_bench, format_gate, lookup_metric, parse_baseline, update_baseline, Baseline,
+    CheckSpec, GateResult,
+};
 pub use experiments::{
     expt1, expt2, expt3, gantt, motivation, BaselineRow, Expt1Row, MappingConfig,
     MotivationResult,
 };
-pub use serving::{format_serve_comparison, serve_bench_json};
+pub use serving::{format_real_summary, format_serve_comparison, serve_bench_json};

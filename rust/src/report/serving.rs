@@ -53,12 +53,55 @@ pub fn format_serve_comparison(concurrent: &ServeReport, sequential: &ServeRepor
             s.push_str(&format!("  priority {p}: p99 {:.2} ms\n", l * 1e3));
         }
     }
-    if !concurrent.rejected.is_empty() {
-        s.push_str(&format!("rejected: {} request(s)\n", concurrent.rejected.len()));
-        for (id, why) in &concurrent.rejected {
-            s.push_str(&format!("  #{id}: {why}\n"));
-        }
+    push_rejections(&mut s, concurrent);
+    s
+}
+
+/// The per-request rejection block shared by the comparison table and the
+/// real-path summary (count, laxity tally, one line per rejection).
+fn push_rejections(s: &mut String, r: &ServeReport) {
+    if r.rejected.is_empty() {
+        return;
     }
+    s.push_str(&format!(
+        "rejected: {} request(s) ({} laxity-negative at admission)\n",
+        r.rejected.len(),
+        r.laxity_rejections
+    ));
+    for (id, why) in &r.rejected {
+        s.push_str(&format!("  #{id}: {why}\n"));
+    }
+}
+
+/// Render the real-path summary: pacing, executable-cache behaviour, and
+/// admission-control rejections next to the latency headline.
+pub fn format_real_summary(r: &ServeReport) -> String {
+    let mut s = format!(
+        "real ({} pacing): served {} request(s) in {:.1} ms -> {:.1} req/s  \
+         p50 {:.2} ms  p99 {:.2} ms\n",
+        r.pacing,
+        r.outcomes.len(),
+        r.makespan * 1e3,
+        r.throughput_rps,
+        r.p50_latency * 1e3,
+        r.p99_latency * 1e3
+    );
+    s.push_str(&format!(
+        "executable cache: {} hit(s), {} miss(es); cold batch {:.2} ms, warm batch {:.2} ms\n",
+        r.exec_cache_hits,
+        r.exec_cache_misses,
+        r.cold_batch_latency * 1e3,
+        r.warm_batch_latency * 1e3
+    ));
+    if r.deadline_total > 0 {
+        s.push_str(&format!(
+            "deadlines: {}/{} missed ({:.1}%)\n",
+            r.deadline_misses,
+            r.deadline_total,
+            r.deadline_miss_rate * 100.0
+        ));
+    }
+    push_rejections(&mut s, r);
     s
 }
 
@@ -125,6 +168,14 @@ mod tests {
             assert!(m.get("deadline_miss_rate").and_then(|v| v.as_f64()).is_some());
             assert!(m.get("preemptions").and_then(|v| v.as_f64()).is_some());
             assert!(m.get("per_priority_p99_s").is_some());
+            // Serving-at-scale fields (PR 3): pacing, admission control,
+            // executable-cache accounting.
+            assert_eq!(m.get("pacing").and_then(|v| v.as_str()), Some("virtual"));
+            assert!(m.get("laxity_rejections").and_then(|v| v.as_f64()).is_some());
+            assert!(m.get("exec_cache_hits").and_then(|v| v.as_f64()).is_some());
+            assert!(m.get("exec_cache_misses").and_then(|v| v.as_f64()).is_some());
+            assert!(m.get("cold_batch_latency_s").and_then(|v| v.as_f64()).is_some());
+            assert!(m.get("warm_batch_latency_s").and_then(|v| v.as_f64()).is_some());
         }
         assert!(parsed.get("speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
     }
@@ -138,7 +189,12 @@ mod tests {
         for r in &mut requests {
             r.deadline = Some(1e-6); // unmeetably tight: all miss
         }
-        let cfg = ServeConfig::default();
+        // Laxity admission would (correctly) reject these at arrival; turn
+        // it off — this test is about miss *accounting*, not admission.
+        let cfg = ServeConfig {
+            laxity_admission: false,
+            ..ServeConfig::default()
+        };
         let conc = serve_sim(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap();
         let seq =
             serve_sequential(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap();
@@ -148,5 +204,22 @@ mod tests {
         let table = format_serve_comparison(&conc, &seq);
         assert!(table.contains("deadlines: 4/4 missed"), "{table}");
         assert!(table.contains("preemption"), "{table}");
+    }
+
+    #[test]
+    fn table_counts_laxity_rejections_at_admission() {
+        let platform = Platform::paper_testbed(3, 1);
+        let mut tight = ServeRequest::new(0, 0.0, Workload::Head { beta: 64 });
+        tight.deadline = Some(1e-9);
+        let ok = ServeRequest::new(1, 0.0, Workload::Head { beta: 64 });
+        let cfg = ServeConfig::default(); // laxity admission on
+        let conc =
+            serve_sim(&[tight.clone(), ok.clone()], &platform, &PaperCost, &mut Clustering, &cfg)
+                .unwrap();
+        let seq = serve_sequential(&[tight, ok], &platform, &PaperCost, &mut Clustering, &cfg)
+            .unwrap();
+        assert_eq!(conc.laxity_rejections, 1);
+        let table = format_serve_comparison(&conc, &seq);
+        assert!(table.contains("1 laxity-negative at admission"), "{table}");
     }
 }

@@ -9,9 +9,10 @@
 use super::backend as xla;
 use super::manifest::Manifest;
 use crate::error::{Error, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// A compiled executable, shareable across the executor's queue threads.
 ///
@@ -24,10 +25,27 @@ unsafe impl Send for Shared {}
 unsafe impl Sync for Shared {}
 
 /// The L3-side runtime: one PJRT CPU client + a name→executable cache.
+///
+/// The cache is **warm across serving batches**: one `Runtime` serves every
+/// batch of a `pyschedcl serve --mode real` run, so an artifact is lowered
+/// and compiled exactly once per process, on the first batch whose workload
+/// needs it. The hit/miss counters ([`Runtime::cache_stats`]) let the
+/// serving report attribute first-vs-warm batch latency to compilation.
 pub struct Runtime {
     client: Mutex<xla::PjRtClient>,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Shared>>>,
+    /// Artifacts currently being lowered+compiled by some thread. Keeps
+    /// compilation exactly-once per artifact *without* holding the cache
+    /// lock across the compile, so warm hits never stall behind a cold
+    /// compile on the serving hot path.
+    in_flight: Mutex<HashSet<String>>,
+    in_flight_cv: Condvar,
+    /// [`Runtime::load`] calls served from `cache`.
+    cache_hits: AtomicUsize,
+    /// Artifacts actually lowered + compiled (one per distinct artifact;
+    /// threads that waited on another thread's compile count as hits).
+    cache_misses: AtomicUsize,
 }
 
 // SAFETY: PjRtClient wraps xla::PjRtClient (thread-safe in C++); all rust
@@ -48,7 +66,21 @@ impl Runtime {
             client: Mutex::new(client),
             manifest,
             cache: Mutex::new(HashMap::new()),
+            in_flight: Mutex::new(HashSet::new()),
+            in_flight_cv: Condvar::new(),
+            cache_hits: AtomicUsize::new(0),
+            cache_misses: AtomicUsize::new(0),
         })
+    }
+
+    /// `(hits, misses)` of the executable cache since construction.
+    /// Monotone counters — serving paths snapshot before/after a run and
+    /// report the delta.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+        )
     }
 
     /// Platform string of the backing PJRT client (e.g. "cpu").
@@ -57,10 +89,49 @@ impl Runtime {
     }
 
     /// Fetch (compiling on first use) the executable for `name`.
+    ///
+    /// Concurrent first loads of one artifact from the executor's queue
+    /// threads must not each lower and compile a duplicate (which would
+    /// also make the miss counter load-dependent) — yet a cold compile
+    /// must not stall warm hits of *other* artifacts. So the cache lock is
+    /// only ever held briefly: the first loader marks the artifact
+    /// in-flight and compiles outside the lock; rivals wait on the condvar
+    /// and then take the published executable as an ordinary hit.
     pub fn load(&self, name: &str) -> Result<Arc<Shared>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
+        loop {
+            if let Some(exe) = self.cache.lock().unwrap().get(name) {
+                self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(exe.clone());
+            }
+            let mut in_flight = self.in_flight.lock().unwrap();
+            // Re-check under the in-flight lock: the compiler publishes to
+            // the cache *before* clearing the marker, so a missing entry
+            // plus a clear marker really means nobody is compiling.
+            if let Some(exe) = self.cache.lock().unwrap().get(name) {
+                self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(exe.clone());
+            }
+            if in_flight.insert(name.to_string()) {
+                break; // this thread compiles
+            }
+            // Another thread is compiling this artifact: wait and retry.
+            let _waited = self.in_flight_cv.wait(in_flight).unwrap();
         }
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let built = self.compile_artifact(name);
+        if let Ok(shared) = &built {
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(name.to_string(), shared.clone());
+        }
+        self.in_flight.lock().unwrap().remove(name);
+        self.in_flight_cv.notify_all();
+        built
+    }
+
+    /// Lower the HLO text and compile it — the cold path of [`Runtime::load`].
+    fn compile_artifact(&self, name: &str) -> Result<Arc<Shared>> {
         let path = self.manifest.path_of(name)?;
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str()
@@ -72,12 +143,7 @@ impl Runtime {
             let client = self.client.lock().unwrap();
             client.compile(&comp).map_err(xerr)?
         };
-        let shared = Arc::new(Shared(exe));
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), shared.clone());
-        Ok(shared)
+        Ok(Arc::new(Shared(exe)))
     }
 
     /// Eagerly compile every artifact (used by the serving-style example to
@@ -210,8 +276,27 @@ mod tests {
         let Some(rt) = runtime() else {
             return;
         };
+        let (h0, m0) = rt.cache_stats();
+        assert_eq!((h0, m0), (0, 0));
         let a = rt.load("gemm_b32").unwrap();
         let b = rt.load("gemm_b32").unwrap();
         assert!(Arc::ptr_eq(&a, &b));
+        let (h1, m1) = rt.cache_stats();
+        assert_eq!((h1, m1), (1, 1), "second load must hit the cache");
+    }
+
+    #[test]
+    fn cache_entries_do_not_alias_across_artifacts() {
+        let Some(rt) = runtime() else {
+            return;
+        };
+        // Distinct artifact names (different workload sizes) must compile
+        // and cache independently — never serve one for the other.
+        let a = rt.load("gemm_b32").unwrap();
+        let b = rt.load("gemm_b64").unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        let (hits, misses) = rt.cache_stats();
+        assert_eq!(misses, 2, "each artifact is its own cache entry");
+        assert_eq!(hits, 0);
     }
 }

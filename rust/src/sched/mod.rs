@@ -26,5 +26,7 @@ pub mod policy;
 pub mod ranks;
 
 pub use autotune::{exhaustive, hill_climb, TuneResult, TuneSpace};
-pub use policy::{Clustering, Eager, Edf, Heft, LeastLoaded, Policy, ResidentTenant, SchedView};
+pub use policy::{
+    app_solo_estimate, Clustering, Eager, Edf, Heft, LeastLoaded, Policy, ResidentTenant, SchedView,
+};
 pub use ranks::component_ranks;

@@ -70,6 +70,48 @@ impl<'a> SchedView<'a> {
     }
 }
 
+/// Optimistic solo-seconds estimate of one whole application — a true
+/// **lower bound** on its makespan. Components are independent (they could
+/// run fully in parallel) and a component's kernels overlap across the
+/// device's command queues, so the only schedule-independent floor is the
+/// single longest kernel anywhere in the application, evaluated on each
+/// component's preferred device type (first platform device as a
+/// fallback). The serving layer's laxity-based admission control compares
+/// a request's deadline budget against this: a budget below the floor
+/// cannot be met by *any* policy **under the supplied cost model**, so
+/// rejecting at arrival never discards work that model deems feasible —
+/// deliberately optimistic, never an overestimate. The guarantee is only
+/// as faithful as the model: real-path wall-clock deadlines should be
+/// admitted with a measured table (`pyschedcl calibrate` →
+/// `CalibratedCost`, auto-loaded by `pyschedcl serve --mode real`), not
+/// the paper's modeled device times.
+pub fn app_solo_estimate(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+) -> f64 {
+    partition
+        .components
+        .iter()
+        .map(|c| {
+            let dev = platform
+                .devices
+                .iter()
+                .find(|d| d.dtype == c.dev)
+                .or_else(|| platform.devices.first());
+            match dev {
+                Some(d) => c
+                    .kernels
+                    .iter()
+                    .map(|&k| cost.exec_time(&dag.kernels[k], d))
+                    .fold(0.0, f64::max),
+                None => 0.0,
+            }
+        })
+        .fold(0.0, f64::max)
+}
+
 /// A component currently resident (dispatched, unfinished) on a device —
 /// the candidate victim set offered to [`Policy::preempt`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -460,6 +502,32 @@ mod tests {
             priority,
             cost: &PaperCost,
         }
+    }
+
+    #[test]
+    fn app_solo_estimate_is_a_makespan_lower_bound() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0); // both components GPU-pref
+        let platform = Platform::paper_testbed(3, 1);
+        let est = app_solo_estimate(&dag, &part, &platform, &PaperCost);
+        assert!(est > 0.0 && est.is_finite());
+        // The floor is the longest single kernel on the preferred device —
+        // never the per-component sum (queues overlap independent kernels,
+        // so the sum would overestimate and admission would reject feasible
+        // requests).
+        let gpu = platform.device(0);
+        let longest = dag
+            .kernels
+            .iter()
+            .map(|k| PaperCost.exec_time(k, gpu))
+            .fold(0.0f64, f64::max);
+        let sum: f64 = part.components[0]
+            .kernels
+            .iter()
+            .map(|&k| PaperCost.exec_time(&dag.kernels[k], gpu))
+            .sum();
+        assert!((est - longest).abs() < 1e-12, "est {est} vs longest {longest}");
+        assert!(est < sum, "floor {est} must undercut the serial sum {sum}");
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Admission control and the batching front-end.
 
 use super::request::ServeRequest;
+use crate::cost::CostModel;
 use crate::error::{Error, Result};
 use crate::graph::{Dag, Partition};
+use crate::platform::Platform;
+use crate::sched::app_solo_estimate;
 
 /// Validate one request and materialize its application. Every rejection is
 /// a typed [`Error::Admission`] naming the request id.
@@ -35,6 +38,49 @@ pub fn admit(req: &ServeRequest) -> Result<(Dag, Partition)> {
         return Err(reject("partition has no components".into()));
     }
     Ok((dag, partition))
+}
+
+/// Laxity-based admission control over an already-admitted application: a
+/// deadline-carrying request whose laxity is already negative *at arrival*
+/// — its budget is smaller than the optimistic solo estimate of its own
+/// work ([`app_solo_estimate`]) — cannot be served on time by any policy,
+/// so it is rejected up front instead of occupying devices only to miss.
+/// Laxity at arrival needs no clock: `deadline_absolute - arrival -
+/// estimate` is exactly `budget - estimate`. Deadline-free requests are
+/// never laxity-rejected.
+pub fn check_laxity(
+    req: &ServeRequest,
+    app: &(Dag, Partition),
+    platform: &Platform,
+    cost: &dyn CostModel,
+) -> Result<()> {
+    if let Some(budget) = req.deadline {
+        let estimate = app_solo_estimate(&app.0, &app.1, platform, cost);
+        let laxity = budget - estimate;
+        if laxity < 0.0 {
+            return Err(Error::Admission(format!(
+                "request {}: negative laxity at arrival ({:.3} ms): deadline budget \
+                 {:.3} ms < solo estimate {:.3} ms",
+                req.id,
+                laxity * 1e3,
+                budget * 1e3,
+                estimate * 1e3
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// [`admit`] plus [`check_laxity`] in one call — the SLO-aware admission
+/// front door, rejecting with a typed [`Error::Admission`] either way.
+pub fn admit_slo(
+    req: &ServeRequest,
+    platform: &Platform,
+    cost: &dyn CostModel,
+) -> Result<(Dag, Partition)> {
+    let app = admit(req)?;
+    check_laxity(req, &app, platform, cost)?;
+    Ok(app)
 }
 
 /// A coalesced dispatch group: compatible requests arriving within the
@@ -149,6 +195,25 @@ mod tests {
         );
         let e = admit(&r).unwrap_err();
         assert!(matches!(e, Error::Admission(_)), "{e}");
+    }
+
+    #[test]
+    fn admit_slo_rejects_negative_laxity_at_arrival() {
+        use crate::cost::PaperCost;
+        let platform = Platform::paper_testbed(3, 1);
+        // A budget no schedule can meet: far below the solo estimate.
+        let mut r = head_req(4, 0.0);
+        r.deadline = Some(1e-9);
+        let e = admit_slo(&r, &platform, &PaperCost).unwrap_err();
+        assert!(matches!(e, Error::Admission(_)), "{e}");
+        assert!(e.to_string().contains("negative laxity"), "{e}");
+        assert!(e.to_string().contains("request 4"), "{e}");
+        // A generous budget admits.
+        r.deadline = Some(10.0);
+        admit_slo(&r, &platform, &PaperCost).unwrap();
+        // Deadline-free requests are never laxity-rejected.
+        r.deadline = None;
+        admit_slo(&r, &platform, &PaperCost).unwrap();
     }
 
     #[test]

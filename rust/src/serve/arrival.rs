@@ -23,18 +23,43 @@ impl Rng {
     }
 }
 
+/// The one rate-domain rule: arrival rates must be finite and positive.
+fn validate_rate(rate: f64) -> Result<f64> {
+    if !rate.is_finite() || rate <= 0.0 {
+        return Err(Error::Admission(format!(
+            "arrival rate must be finite and positive, got {rate}"
+        )));
+    }
+    Ok(rate)
+}
+
 /// `n` Poisson arrivals at `rate` requests/second: exponential
 /// inter-arrival gaps via inverse-CDF sampling, seeded and reproducible.
-pub fn poisson_arrivals(seed: u64, n: usize, rate: f64) -> Vec<f64> {
-    let rate = if rate.is_finite() && rate > 0.0 { rate } else { 1.0 };
+/// A non-finite or non-positive rate is a typed [`Error::Admission`] — it
+/// used to be silently clamped to 1.0, which made `--rate 0` look like a
+/// valid (and surprisingly slow) arrival process.
+pub fn poisson_arrivals(seed: u64, n: usize, rate: f64) -> Result<Vec<f64>> {
+    let rate = validate_rate(rate)?;
     let mut rng = Rng::new(seed);
     let mut t = 0.0;
-    (0..n)
+    Ok((0..n)
         .map(|_| {
             t += -rng.next_unit().ln() / rate;
             t
         })
-        .collect()
+        .collect())
+}
+
+/// Parse a CLI `--rate` value: a finite, positive requests/second figure
+/// (same domain rule as [`poisson_arrivals`]). Unparseable text and
+/// out-of-domain values are typed [`Error::Admission`]s, not silent
+/// fallbacks to a default rate.
+pub fn parse_rate(text: &str) -> Result<f64> {
+    let rate: f64 = text
+        .trim()
+        .parse()
+        .map_err(|_| Error::Admission(format!("invalid arrival rate '{text}'")))?;
+    validate_rate(rate)
 }
 
 /// Parse a trace file: a JSON array of non-negative arrival instants
@@ -64,20 +89,38 @@ mod tests {
 
     #[test]
     fn poisson_is_deterministic_and_monotone() {
-        let a = poisson_arrivals(42, 64, 500.0);
-        let b = poisson_arrivals(42, 64, 500.0);
+        let a = poisson_arrivals(42, 64, 500.0).unwrap();
+        let b = poisson_arrivals(42, 64, 500.0).unwrap();
         assert_eq!(a, b);
         assert!(a.windows(2).all(|w| w[1] >= w[0]));
         assert!(a.iter().all(|&t| t > 0.0 && t.is_finite()));
         // Different seed, different stream.
-        assert_ne!(a, poisson_arrivals(43, 64, 500.0));
+        assert_ne!(a, poisson_arrivals(43, 64, 500.0).unwrap());
     }
 
     #[test]
     fn poisson_mean_gap_tracks_rate() {
-        let a = poisson_arrivals(7, 4000, 100.0);
+        let a = poisson_arrivals(7, 4000, 100.0).unwrap();
         let mean_gap = a.last().unwrap() / a.len() as f64;
         assert!((mean_gap - 0.01).abs() < 0.002, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn poisson_rejects_degenerate_rates_with_typed_error() {
+        for rate in [0.0, -5.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let e = poisson_arrivals(7, 4, rate).unwrap_err();
+            assert!(matches!(e, Error::Admission(_)), "rate {rate}: {e}");
+        }
+    }
+
+    #[test]
+    fn parse_rate_covers_the_cli_rate_path() {
+        assert_eq!(parse_rate("2000").unwrap(), 2000.0);
+        assert_eq!(parse_rate(" 12.5 ").unwrap(), 12.5);
+        for bad in ["soon", "", "0", "-3", "inf", "nan"] {
+            let e = parse_rate(bad).unwrap_err();
+            assert!(matches!(e, Error::Admission(_)), "'{bad}': {e}");
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The serving engine: concurrent multi-DAG scheduling over the simulator,
 //! plus the sequential-replay baseline every serving run is judged against.
 
-use super::admission::{admit, batch_requests};
+use super::admission::{admit, batch_requests, check_laxity};
 use super::merge::merge_apps;
 use super::request::ServeRequest;
 use crate::cost::CostModel;
@@ -13,6 +13,40 @@ use crate::sched::Policy;
 use crate::sim::{simulate, simulate_served, CompMeta, SimConfig};
 use crate::trace::Lane;
 
+/// Arrival pacing of the real serving loop.
+///
+/// * `Closed` — replay: the loop dispatches each batch as soon as the
+///   previous one completes, so wall-clock dispatch can outrun the nominal
+///   arrival process and latency degenerates to service latency
+///   ([`request_outcome`] documents the clamp).
+/// * `Open` — open-loop: the loop **sleeps until each batch's nominal
+///   release instant** before dispatching, so measured latencies are
+///   genuinely end-to-end against the arrival process — the only numbers a
+///   deadline/SLO evaluation can trust (Clipper/Clockwork-style serving
+///   methodology).
+///
+/// The simulated paths are inherently open-loop (virtual time honours
+/// release instants by construction), so this knob only changes
+/// [`super::serve_real`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Pacing {
+    /// Closed-loop replay (dispatch as fast as batches complete).
+    #[default]
+    Closed,
+    /// Open-loop (sleep until each batch's nominal release instant).
+    Open,
+}
+
+impl Pacing {
+    /// Report/CLI spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Pacing::Closed => "closed",
+            Pacing::Open => "open",
+        }
+    }
+}
+
 /// Serving-layer knobs.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -21,6 +55,18 @@ pub struct ServeConfig {
     pub batch_window: f64,
     /// Max task components resident per device at once (multi-tenancy).
     pub tenancy: usize,
+    /// Arrival pacing of the real serving loop (sim paths ignore this —
+    /// virtual time is always open-loop).
+    pub pacing: Pacing,
+    /// Laxity-based admission control: reject deadline-carrying requests
+    /// whose laxity is already negative at arrival
+    /// ([`super::admission::admit_slo`]). On by default; turn off to let
+    /// unmeetable requests through and count their misses instead.
+    pub laxity_admission: bool,
+    /// Real path only: eagerly compile every AOT artifact before the epoch
+    /// (Clockwork-style), moving executable lowering off the request path.
+    /// Leave off to measure cold-vs-warm batch latency.
+    pub prewarm: bool,
     /// Underlying simulator knobs.
     pub sim: SimConfig,
 }
@@ -30,6 +76,9 @@ impl Default for ServeConfig {
         ServeConfig {
             batch_window: 2e-3,
             tenancy: 4,
+            pacing: Pacing::Closed,
+            laxity_admission: true,
+            prewarm: false,
             sim: SimConfig::default(),
         }
     }
@@ -58,16 +107,29 @@ pub struct RequestOutcome {
 /// by the sim, sequential, and real serving paths alike.
 ///
 /// Latency is **end-to-end**: `finish - arrival`, and a deadline of `d`
-/// seconds is met iff `finish - arrival <= d`. One caveat: the real path is
-/// a *closed-loop replay* — the serving loop never sleeps waiting for an
-/// arrival, so wall-clock dispatch can outrun the nominal arrival process.
-/// When a batch starts before a member's arrival instant (`release <
-/// arrival`), `finish - arrival` would under-state the work done; the
-/// latency therefore degenerates to service latency (`finish - release`)
-/// exactly in that case, via `max`. In the sim and sequential paths
-/// `release >= arrival` always holds and the `max` is the identity.
-pub fn request_outcome(req: &ServeRequest, release: f64, finish: f64) -> RequestOutcome {
-    let latency = (finish - req.arrival).max(finish - release);
+/// seconds is met iff `finish - arrival <= d`. Under [`Pacing::Open`] that
+/// is the whole story: the serving loop slept until each batch's nominal
+/// release instant, so `release >= arrival` holds by construction and every
+/// latency is measured against the arrival process. The sim and sequential
+/// paths guarantee the same invariant in virtual time and also pass
+/// `Open`.
+///
+/// One caveat remains, now confined to [`Pacing::Closed`]: a closed-loop
+/// replay never sleeps waiting for an arrival, so wall-clock dispatch can
+/// outrun the nominal arrival process. When a batch starts before a
+/// member's arrival instant (`release < arrival`), `finish - arrival` would
+/// under-state the work done; the latency therefore degenerates to service
+/// latency (`finish - release`) exactly in that case, via `max`.
+pub fn request_outcome(
+    req: &ServeRequest,
+    release: f64,
+    finish: f64,
+    pacing: Pacing,
+) -> RequestOutcome {
+    let latency = match pacing {
+        Pacing::Open => finish - req.arrival,
+        Pacing::Closed => (finish - req.arrival).max(finish - release),
+    };
     RequestOutcome {
         id: req.id,
         arrival: req.arrival,
@@ -106,6 +168,30 @@ pub struct ServeReport {
     pub preemptions: usize,
     /// Compute busy fraction per device over the makespan.
     pub device_util: Vec<f64>,
+    /// Arrival pacing the run used: `"open"`, `"closed"`, or `"virtual"`
+    /// (simulated paths — virtual time is always open-loop).
+    pub pacing: &'static str,
+    /// ... of the rejections, how many were laxity-based admission-control
+    /// rejections (deadline budget below the solo estimate at arrival).
+    pub laxity_rejections: usize,
+    /// Real path: PJRT executable-cache hits over the run (0 in sim),
+    /// counted per kernel execution — kernels sharing an artifact hit
+    /// within a single batch too, so treat this as a sanity floor. The
+    /// cross-batch-reuse guarantee is the *miss* count staying at one per
+    /// distinct artifact for the whole run.
+    pub exec_cache_hits: usize,
+    /// Real path: executables actually lowered + compiled (one per
+    /// distinct artifact when the cache works; growth per batch means
+    /// recompilation regressed).
+    pub exec_cache_misses: usize,
+    /// Real path: mean service latency of *cold* batches — batches that
+    /// actually lowered at least one executable (nonzero per-batch
+    /// cache-miss delta); typically the first batch of each signature on a
+    /// fresh runtime. 0 when the run had none (prewarmed runtime, sim).
+    pub cold_batch_latency: f64,
+    /// Real path: mean service latency of *warm* batches — served entirely
+    /// from the executable cache (0 when none).
+    pub warm_batch_latency: f64,
 }
 
 impl ServeReport {
@@ -142,6 +228,12 @@ impl ServeReport {
                 "device_util",
                 Json::Arr(self.device_util.iter().map(|&u| Json::num(u)).collect()),
             ),
+            ("pacing", Json::str(self.pacing)),
+            ("laxity_rejections", Json::num(self.laxity_rejections as f64)),
+            ("exec_cache_hits", Json::num(self.exec_cache_hits as f64)),
+            ("exec_cache_misses", Json::num(self.exec_cache_misses as f64)),
+            ("cold_batch_latency_s", Json::num(self.cold_batch_latency)),
+            ("warm_batch_latency_s", Json::num(self.warm_batch_latency)),
         ])
     }
 }
@@ -157,13 +249,27 @@ pub fn percentile(values: &[f64], q: f64) -> f64 {
     sorted[idx]
 }
 
-/// Sort by arrival, admit each request; returns (admitted requests,
-/// their instantiated apps, typed rejections).
-pub(crate) type Admitted = (Vec<ServeRequest>, Vec<(Dag, Partition)>, Vec<(usize, String)>);
+/// Sort by arrival, admit each request; returns (admitted requests, their
+/// instantiated apps, typed rejections, laxity-rejection count).
+pub(crate) type Admitted = (
+    Vec<ServeRequest>,
+    Vec<(Dag, Partition)>,
+    Vec<(usize, String)>,
+    usize,
+);
 
 /// Shared admission front-end for the sim and real serving paths: arrival
-/// order, priority-descending tie-break, then id.
-pub(crate) fn admit_all(requests: &[ServeRequest]) -> Admitted {
+/// order, priority-descending tie-break, then id. With
+/// `ServeConfig::laxity_admission` on, deadline-carrying requests whose
+/// laxity is already negative at arrival are rejected up front
+/// ([`check_laxity`]) and counted in the returned tally (typed, not
+/// inferred from rejection messages).
+pub(crate) fn admit_all(
+    requests: &[ServeRequest],
+    platform: &Platform,
+    cost: &dyn CostModel,
+    laxity_admission: bool,
+) -> Admitted {
     let mut sorted: Vec<ServeRequest> = requests.to_vec();
     sorted.sort_by(|a, b| {
         a.arrival
@@ -174,16 +280,24 @@ pub(crate) fn admit_all(requests: &[ServeRequest]) -> Admitted {
     let mut admitted = Vec::new();
     let mut apps = Vec::new();
     let mut rejected = Vec::new();
+    let mut laxity_rejections = 0usize;
     for req in sorted {
         match admit(&req) {
             Ok(app) => {
+                if laxity_admission {
+                    if let Err(e) = check_laxity(&req, &app, platform, cost) {
+                        laxity_rejections += 1;
+                        rejected.push((req.id, e.to_string()));
+                        continue;
+                    }
+                }
                 admitted.push(req);
                 apps.push(app);
             }
             Err(e) => rejected.push((req.id, e.to_string())),
         }
     }
-    (admitted, apps, rejected)
+    (admitted, apps, rejected, laxity_rejections)
 }
 
 /// Deadline-miss and per-priority tail statistics over a set of outcomes.
@@ -215,11 +329,13 @@ pub(crate) fn deadline_stats(outcomes: &[RequestOutcome]) -> (usize, usize, f64,
     (deadline_total, deadline_misses, deadline_miss_rate, per_priority_p99)
 }
 
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn build_report(
     mode: &'static str,
     policy: &str,
     outcomes: Vec<RequestOutcome>,
     rejected: Vec<(usize, String)>,
+    laxity_rejections: usize,
     makespan: f64,
     device_util: Vec<f64>,
     preemptions: usize,
@@ -247,6 +363,12 @@ pub(crate) fn build_report(
         per_priority_p99,
         preemptions,
         device_util,
+        pacing: "virtual",
+        laxity_rejections,
+        exec_cache_hits: 0,
+        exec_cache_misses: 0,
+        cold_batch_latency: 0.0,
+        warm_batch_latency: 0.0,
     }
 }
 
@@ -263,13 +385,15 @@ pub fn serve_sim(
     policy: &mut dyn Policy,
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
-    let (admitted, apps, rejected) = admit_all(requests);
+    let (admitted, apps, rejected, laxity_rejections) =
+        admit_all(requests, platform, cost, cfg.laxity_admission);
     if admitted.is_empty() {
         return Ok(build_report(
             "concurrent",
             policy.name(),
             Vec::new(),
             rejected,
+            laxity_rejections,
             0.0,
             vec![0.0; platform.devices.len()],
             0,
@@ -314,7 +438,7 @@ pub fn serve_sim(
             let finish = range
                 .map(|c| sim.component_finish[c])
                 .fold(0.0f64, f64::max);
-            request_outcome(req, release, finish)
+            request_outcome(req, release, finish, Pacing::Open)
         })
         .collect();
 
@@ -336,6 +460,7 @@ pub fn serve_sim(
         &sim.policy,
         outcomes,
         rejected,
+        laxity_rejections,
         makespan,
         device_util,
         sim.preemptions,
@@ -353,7 +478,8 @@ pub fn serve_sequential(
     policy: &mut dyn Policy,
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
-    let (admitted, apps, rejected) = admit_all(requests);
+    let (admitted, apps, rejected, laxity_rejections) =
+        admit_all(requests, platform, cost, cfg.laxity_admission);
     let mut sim_cfg = cfg.sim.clone();
     sim_cfg.max_tenants = 1;
     let mut clock = 0.0f64;
@@ -369,7 +495,7 @@ pub fn serve_sequential(
                 .trace
                 .busy_time(|l| matches!(l, Lane::Device { dev, .. } if *dev == d));
         }
-        outcomes.push(request_outcome(req, start, finish));
+        outcomes.push(request_outcome(req, start, finish, Pacing::Open));
     }
     let device_util = busy
         .into_iter()
@@ -380,6 +506,7 @@ pub fn serve_sequential(
         policy.name(),
         outcomes,
         rejected,
+        laxity_rejections,
         clock,
         device_util,
         0,
@@ -442,18 +569,61 @@ mod tests {
     fn request_outcome_is_end_to_end_with_closed_loop_clamp() {
         let mut req = ServeRequest::new(1, 0.010, Workload::Head { beta: 64 });
         req.deadline = Some(0.050);
-        // Normal case (release after arrival): end-to-end latency.
-        let o = request_outcome(&req, 0.012, 0.040);
-        assert!((o.latency - 0.030).abs() < 1e-12);
-        assert_eq!(o.deadline_met, Some(true));
+        // Normal case (release after arrival): end-to-end latency, same
+        // under either pacing.
+        for pacing in [Pacing::Open, Pacing::Closed] {
+            let o = request_outcome(&req, 0.012, 0.040, pacing);
+            assert!((o.latency - 0.030).abs() < 1e-12);
+            assert_eq!(o.deadline_met, Some(true));
+        }
         // Closed-loop replay outran the arrival (release < arrival): the
         // latency degenerates to service latency, never negative.
-        let o = request_outcome(&req, 0.000, 0.008);
+        let o = request_outcome(&req, 0.000, 0.008, Pacing::Closed);
         assert!((o.latency - 0.008).abs() < 1e-12);
         assert_eq!(o.deadline_met, Some(true));
+        // Open pacing has no clamp: release >= arrival holds by
+        // construction (the loop slept), so latency is always measured
+        // against the nominal arrival instant.
+        let o = request_outcome(&req, 0.015, 0.040, Pacing::Open);
+        assert!((o.latency - 0.030).abs() < 1e-12);
         // No deadline → None.
         req.deadline = None;
-        assert_eq!(request_outcome(&req, 0.012, 0.040).deadline_met, None);
+        assert_eq!(
+            request_outcome(&req, 0.012, 0.040, Pacing::Open).deadline_met,
+            None
+        );
+    }
+
+    #[test]
+    fn negative_laxity_arrivals_are_rejected_and_counted() {
+        let platform = Platform::paper_testbed(3, 1);
+        let mut tight = ServeRequest::new(0, 0.0, Workload::Head { beta: 64 });
+        tight.deadline = Some(1e-9); // below any solo estimate
+        let ok = ServeRequest::new(1, 0.0, Workload::Head { beta: 64 });
+        let cfg = ServeConfig::default();
+        let r = serve_sim(
+            &[tight.clone(), ok.clone()],
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(r.outcomes.len(), 1);
+        assert_eq!(r.rejected.len(), 1);
+        assert_eq!(r.rejected[0].0, 0);
+        assert!(r.rejected[0].1.contains("negative laxity"), "{}", r.rejected[0].1);
+        assert_eq!(r.laxity_rejections, 1);
+        // With admission control off the request is admitted and its miss
+        // is counted instead.
+        let off = ServeConfig {
+            laxity_admission: false,
+            ..ServeConfig::default()
+        };
+        let r = serve_sim(&[tight, ok], &platform, &PaperCost, &mut Clustering, &off).unwrap();
+        assert_eq!(r.outcomes.len(), 2);
+        assert_eq!(r.laxity_rejections, 0);
+        assert_eq!(r.deadline_misses, 1);
     }
 
     #[test]

@@ -16,8 +16,11 @@
 //! * [`engine`] — the simulated serving path ([`serve_sim`]) over
 //!   [`crate::sim::simulate_served`] and the sequential-replay baseline
 //!   ([`serve_sequential`]), with per-request makespan/latency accounting;
-//! * [`real`] — the real path over [`crate::exec::execute_dag_multi`]'s
-//!   thread-per-queue machinery (PJRT kernels).
+//! * [`real`] — the real path over [`crate::exec::execute_dag_served`]'s
+//!   thread-per-queue machinery (PJRT kernels), with open- or closed-loop
+//!   arrival pacing ([`Pacing`]), per-component deadline metadata threaded
+//!   into the executor's `SchedView`, and a warm executable cache whose
+//!   hit/miss counts and cold-vs-warm batch latency the report carries.
 //!
 //! Multi-tenancy itself lives one layer down: `SimConfig::max_tenants` /
 //! `execute_dag_multi`'s `tenancy` let several components — from different
@@ -30,7 +33,11 @@
 //! [`crate::sim::CompMeta`], so policies like [`crate::sched::Edf`] order
 //! the frontier by urgency and may preempt less urgent resident tenants
 //! ([`crate::sched::Policy::preempt`]). Reports carry deadline-miss rate,
-//! per-priority p99, and the preemption count.
+//! per-priority p99, and the preemption count. Admission is **SLO-aware**:
+//! requests whose laxity is already negative at arrival (deadline budget
+//! below the optimistic solo estimate) are rejected up front
+//! ([`admission::admit_slo`]) and counted in
+//! [`ServeReport::laxity_rejections`].
 
 pub mod admission;
 pub mod arrival;
@@ -39,10 +46,10 @@ pub mod merge;
 pub mod real;
 pub mod request;
 
-pub use admission::{admit, batch_requests, Batch};
-pub use arrival::{poisson_arrivals, trace_arrivals};
+pub use admission::{admit, admit_slo, batch_requests, check_laxity, Batch};
+pub use arrival::{parse_rate, poisson_arrivals, trace_arrivals};
 pub use engine::{
-    request_outcome, serve_sequential, serve_sim, RequestOutcome, ServeConfig, ServeReport,
+    request_outcome, serve_sequential, serve_sim, Pacing, RequestOutcome, ServeConfig, ServeReport,
 };
 pub use merge::{merge_apps, MergedApp};
 pub use real::serve_real;

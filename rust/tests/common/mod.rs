@@ -1,0 +1,29 @@
+//! Helpers shared by the serving integration suites. Each test binary only
+//! uses the helpers it needs, hence the file-level dead_code allowance.
+#![allow(dead_code)]
+
+use pyschedcl::runtime::Runtime;
+use pyschedcl::serve::ServeReport;
+use std::path::Path;
+use std::sync::Arc;
+
+/// The AOT runtime when artifacts are built, else `None` (tests skip).
+/// Build with `cd python && python -m compile.aot` — the CI bench job does.
+pub fn artifact_runtime() -> Option<Arc<Runtime>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::new(&dir) {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(_) => {
+            eprintln!("skipping: artifacts not built (cd python && python -m compile.aot)");
+            None
+        }
+    }
+}
+
+/// Requests that met their deadline in a serving report.
+pub fn met_count(r: &ServeReport) -> usize {
+    r.outcomes
+        .iter()
+        .filter(|o| o.deadline_met == Some(true))
+        .count()
+}

@@ -4,6 +4,9 @@
 //! `simulate` exactly, (c) admission rejects malformed specs with a typed
 //! error, plus determinism and multi-tenant overlap evidence.
 
+mod common;
+
+use common::met_count;
 use pyschedcl::cost::PaperCost;
 use pyschedcl::error::Error;
 use pyschedcl::graph::Partition;
@@ -17,6 +20,7 @@ use pyschedcl::sim::{simulate, SimConfig};
 
 fn head_stream(n: usize, seed: u64, rate: f64) -> Vec<ServeRequest> {
     poisson_arrivals(seed, n, rate)
+        .expect("valid rate")
         .into_iter()
         .enumerate()
         .map(|(i, t)| ServeRequest::new(i, t, Workload::Head { beta: 64 }))
@@ -149,7 +153,7 @@ fn serving_is_deterministic_under_a_fixed_seed() {
     let b = run();
     assert_eq!(a.makespan, b.makespan);
     assert_eq!(a.throughput_rps, b.throughput_rps);
-    let lat = |r: &pyschedcl::serve::ServeReport| -> Vec<f64> {
+    let lat = |r: &ServeReport| -> Vec<f64> {
         r.outcomes.iter().map(|o| o.latency).collect()
     };
     assert_eq!(lat(&a), lat(&b));
@@ -264,13 +268,6 @@ fn solo_cycle(beta: u64, cfg: &ServeConfig, platform: &Platform) -> f64 {
     )
     .unwrap();
     r.outcomes[0].finish
-}
-
-fn met_count(r: &ServeReport) -> usize {
-    r.outcomes
-        .iter()
-        .filter(|o| o.deadline_met == Some(true))
-        .count()
 }
 
 /// ISSUE acceptance: under a tight-deadline seeded stream on a contended

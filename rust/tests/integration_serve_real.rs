@@ -1,0 +1,95 @@
+//! Integration: the real serving path at scale (ISSUE 3 acceptance).
+//!
+//! Artifact-gated — every test skips when the AOT artifacts are absent
+//! (build them with `cd python && python -m compile.aot`), exactly like the
+//! other real-execution tests. With artifacts present (the CI bench job
+//! builds them) these exercise the real thread-per-queue executor:
+//!
+//! * real-path `edf` with threaded deadline metadata meets strictly more
+//!   deadlines than deadline-blind dispatch on a tight-deadline stream;
+//! * the warm executable cache spans policy runs of one process.
+
+mod common;
+
+use common::{artifact_runtime, met_count};
+use pyschedcl::cost::PaperCost;
+use pyschedcl::platform::Platform;
+use pyschedcl::sched::{Clustering, Edf, Policy};
+use pyschedcl::serve::{serve_real, ServeConfig, ServeRequest, Workload};
+
+/// Real-path `edf` must reorder dispatch by urgency now that per-component
+/// deadline metadata reaches the executor's `SchedView`. Scenario: eight
+/// simultaneous arrivals of one signature coalesce into a single batch on
+/// an exclusive single-GPU platform (tenancy 1 ⇒ strictly sequential
+/// service). Only the *last* admitted request carries a deadline of 2.5
+/// warm service cycles: a deadline-blind policy serves in rank order and
+/// finishes it after ~8 cycles (miss); `edf` serves it first (~1 cycle,
+/// met) — strictly more deadlines met, from scheduling alone.
+#[test]
+fn real_edf_meets_strictly_more_deadlines_than_deadline_blind() {
+    let Some(rt) = artifact_runtime() else {
+        return;
+    };
+    let platform = Platform::paper_testbed(3, 0);
+    let cfg = ServeConfig {
+        tenancy: 1,
+        // Decouple the scheduling comparison from the admission estimate.
+        laxity_admission: false,
+        ..ServeConfig::default()
+    };
+
+    // Calibrate one warm service cycle: first run pays compilation (cold),
+    // the second reflects steady-state service — the unit the deadline is
+    // phrased in, so the test holds across machines.
+    let calibrate = || {
+        let req = ServeRequest::new(0, 0.0, Workload::Head { beta: 128 });
+        serve_real(
+            std::slice::from_ref(&req),
+            &rt,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &cfg,
+            7,
+        )
+        .unwrap()
+        .makespan
+    };
+    let _cold = calibrate();
+    let cycle = calibrate();
+    assert!(cycle > 0.0);
+
+    let requests: Vec<ServeRequest> = (0..8)
+        .map(|i| {
+            let mut r = ServeRequest::new(i, 0.0, Workload::Head { beta: 128 });
+            if i == 7 {
+                r.deadline = Some(2.5 * cycle);
+            }
+            r
+        })
+        .collect();
+    let run = |policy: &mut dyn Policy| {
+        serve_real(&requests, &rt, &platform, &PaperCost, policy, &cfg, 7).unwrap()
+    };
+    let edf = run(&mut Edf);
+    let blind = run(&mut Clustering);
+    assert_eq!(edf.outcomes.len(), 8);
+    assert_eq!(blind.outcomes.len(), 8);
+    assert_eq!(edf.deadline_total, 1);
+    assert_eq!(blind.deadline_total, 1);
+    assert!(
+        met_count(&edf) > met_count(&blind),
+        "edf met {} deadline(s), deadline-blind met {} (cycle {:.4}s, edf tight latency {:.4}s, \
+         blind tight latency {:.4}s)",
+        met_count(&edf),
+        met_count(&blind),
+        cycle,
+        edf.outcomes.iter().find(|o| o.id == 7).unwrap().latency,
+        blind.outcomes.iter().find(|o| o.id == 7).unwrap().latency
+    );
+    // Both policy runs were served from the warm executable cache (the
+    // calibration runs compiled every artifact): all hits, no misses.
+    assert!(edf.exec_cache_hits > 0);
+    assert_eq!(edf.exec_cache_misses, 0);
+    assert_eq!(blind.exec_cache_misses, 0);
+}
