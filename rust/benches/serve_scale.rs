@@ -1,0 +1,137 @@
+//! Bench SERVE-SCALE — the 10k-request scale proof for the allocation-free
+//! serving hot path (ISSUE 4): a seeded Poisson stream of 10,000
+//! attention-head requests served concurrently across 4 scaled GPUs via
+//! `serve_sim`, emitting `BENCH_serve_scale.json` (wall seconds, bench
+//! requests/second, template-cache hit/miss counts) which
+//! `pyschedcl bench-check` gates against
+//! `ci/bench_baselines/BENCH_serve_scale.json`.
+//!
+//! A smaller before/after slice (1k requests) additionally times the
+//! verbatim pre-refactor engine + per-request merge pipeline
+//! (`pyschedcl::sim::reference`) against the optimized path, so the
+//! speedup is measured — not asserted — on every CI run. The old path is
+//! quadratic in dispatches per event, which is exactly why the slice is
+//! 1k and the gated run 10k.
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::json::Json;
+use pyschedcl::platform::Platform;
+use pyschedcl::sched::LeastLoaded;
+use pyschedcl::serve::{
+    batch_requests, merge_apps, poisson_arrivals, serve_sim, ServeConfig, ServeRequest, Workload,
+};
+use pyschedcl::sim::reference::simulate_served_ref;
+use pyschedcl::sim::CompMeta;
+use std::time::Instant;
+
+fn stream(n: usize, seed: u64, rate: f64) -> Vec<ServeRequest> {
+    poisson_arrivals(seed, n, rate)
+        .expect("valid rate")
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| ServeRequest::new(i, t, Workload::Head { beta: 64 }))
+        .collect()
+}
+
+/// The pre-refactor serving pipeline, replayed by hand: per-request
+/// instantiate, admitted-order `merge_apps`, reference engine. Returns its
+/// wall seconds.
+fn old_pipeline_wall(requests: &[ServeRequest], platform: &Platform, cfg: &ServeConfig) -> f64 {
+    let t0 = Instant::now();
+    let apps: Vec<_> = requests
+        .iter()
+        .map(|r| r.workload.instantiate().expect("valid workload"))
+        .collect();
+    let batches = batch_requests(requests, cfg.batch_window);
+    let merged = merge_apps(&apps).expect("merge");
+    let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
+    for b in &batches {
+        for &m in &b.members {
+            for c in merged.component_ranges[m].clone() {
+                meta[c].release = b.release;
+            }
+        }
+    }
+    let mut sim_cfg = cfg.sim.clone();
+    sim_cfg.max_tenants = cfg.tenancy;
+    simulate_served_ref(
+        &merged.dag,
+        &merged.partition,
+        platform,
+        &PaperCost,
+        &mut LeastLoaded,
+        &sim_cfg,
+        &meta,
+    )
+    .expect("reference sim");
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let n = 10_000usize;
+    let rate = 1000.0;
+    let platform = Platform::scaled(4, 1, 3, 1);
+    let cfg = ServeConfig::default(); // tenancy 4, 2 ms batch window
+
+    // Before/after slice: 1k requests through the old and new pipelines.
+    let slice = stream(1_000, 11, rate);
+    let t0 = Instant::now();
+    let slice_report = serve_sim(&slice, &platform, &PaperCost, &mut LeastLoaded, &cfg)
+        .expect("slice serve");
+    let new_slice_wall = t0.elapsed().as_secs_f64();
+    let old_slice_wall = old_pipeline_wall(&slice, &platform, &cfg);
+    println!(
+        "1k-slice before/after: old {:.2}s -> new {:.2}s ({:.1}x), slice p99 {:.2} ms",
+        old_slice_wall,
+        new_slice_wall,
+        old_slice_wall / new_slice_wall.max(1e-9),
+        slice_report.p99_latency * 1e3
+    );
+
+    // The gated 10k run.
+    let requests = stream(n, 11, rate);
+    let t0 = Instant::now();
+    let report = serve_sim(&requests, &platform, &PaperCost, &mut LeastLoaded, &cfg)
+        .expect("scale serve");
+    let wall = t0.elapsed().as_secs_f64();
+    let bench_rps = n as f64 / wall.max(1e-9);
+    println!(
+        "serve-scale: {} requests / 4 GPUs in {:.2}s wall -> {:.0} req/s (bench), \
+         sim makespan {:.2}s, sim throughput {:.0} req/s, p99 {:.2} ms",
+        report.outcomes.len(),
+        wall,
+        bench_rps,
+        report.makespan,
+        report.throughput_rps,
+        report.p99_latency * 1e3
+    );
+    println!(
+        "template cache: {} hit(s), {} miss(es) over {} requests",
+        report.template_cache_hits, report.template_cache_misses, n
+    );
+
+    let json = Json::obj(vec![
+        ("schema", Json::str("pyschedcl-serve-scale-bench-v1")),
+        ("requests", Json::num(n as f64)),
+        ("gpus", Json::num(4.0)),
+        ("arrival_rate_rps", Json::num(rate)),
+        ("wall_seconds", Json::num(wall)),
+        ("bench_requests_per_second", Json::num(bench_rps)),
+        ("old_pipeline_1k_wall_seconds", Json::num(old_slice_wall)),
+        ("new_pipeline_1k_wall_seconds", Json::num(new_slice_wall)),
+        (
+            "pipeline_speedup_1k",
+            Json::num(old_slice_wall / new_slice_wall.max(1e-9)),
+        ),
+        ("sim", report.to_json()),
+    ]);
+    // Cargo runs benches with cwd = the package root (rust/); the CI gate
+    // and artifact upload expect the JSON at the repository root, like the
+    // serve smokes' outputs.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_serve_scale.json"))
+        .unwrap_or_else(|| "BENCH_serve_scale.json".into());
+    std::fs::write(&path, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {}", path.display());
+}

@@ -39,11 +39,23 @@ pub fn shared_speeds(us: &[f64]) -> Vec<f64> {
 /// [`shared_speeds`] with an explicit interference efficiency `eta`
 /// (ablation knob — see `rust/benches/ablations.rs`).
 pub fn shared_speeds_with(us: &[f64], eta: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    shared_speeds_into(us, eta, &mut out);
+    out
+}
+
+/// Allocation-free [`shared_speeds_with`]: writes the multipliers into a
+/// caller-owned buffer (cleared first). The simulator calls this once per
+/// device per event — the reusable buffer is what keeps the hot loop
+/// allocation-free. Identical floating-point expressions to the allocating
+/// form, so results are bit-equal.
+pub fn shared_speeds_into(us: &[f64], eta: f64, out: &mut Vec<f64>) {
+    out.clear();
     let total: f64 = us.iter().sum();
     if total <= 1.0 {
-        us.to_vec()
+        out.extend_from_slice(us);
     } else {
-        us.iter().map(|u| u / total * eta).collect()
+        out.extend(us.iter().map(|u| u / total * eta));
     }
 }
 

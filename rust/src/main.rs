@@ -35,6 +35,14 @@
 //! makes the serving loop sleep until each batch's nominal release instant
 //! (open-loop latency measurement) and `--prewarm` compiles every AOT
 //! artifact before the epoch.
+//!
+//! Serving hot path (PR 4): both serve modes reuse per-signature app
+//! templates and pre-merged (signature, batch-size) blocks
+//! ([`pyschedcl::serve::TemplateCache`]); the report prints the cache's
+//! hit/miss line and the BENCH JSON carries `template_cache_hits/misses`.
+//! The 10k-request scale proof lives in `benches/serve_scale.rs`
+//! (`cargo bench --bench serve_scale`), gated in CI via `bench-check`
+//! against `ci/bench_baselines/BENCH_serve_scale.json`.
 
 use pyschedcl::cost::{CalibratedCost, CostModel, PaperCost};
 use pyschedcl::error::{Error, Result};

@@ -53,8 +53,20 @@ pub fn format_serve_comparison(concurrent: &ServeReport, sequential: &ServeRepor
             s.push_str(&format!("  priority {p}: p99 {:.2} ms\n", l * 1e3));
         }
     }
+    push_template_cache(&mut s, concurrent);
     push_rejections(&mut s, concurrent);
     s
+}
+
+/// The merged-template cache line (sim-side analog of the executable
+/// cache), shown whenever the run exercised the cache at all.
+fn push_template_cache(s: &mut String, r: &ServeReport) {
+    if r.template_cache_hits + r.template_cache_misses > 0 {
+        s.push_str(&format!(
+            "template cache: {} hit(s), {} merged block(s) built\n",
+            r.template_cache_hits, r.template_cache_misses
+        ));
+    }
 }
 
 /// The per-request rejection block shared by the comparison table and the
@@ -101,6 +113,7 @@ pub fn format_real_summary(r: &ServeReport) -> String {
             r.deadline_miss_rate * 100.0
         ));
     }
+    push_template_cache(&mut s, r);
     push_rejections(&mut s, r);
     s
 }
@@ -176,6 +189,12 @@ mod tests {
             assert!(m.get("exec_cache_misses").and_then(|v| v.as_f64()).is_some());
             assert!(m.get("cold_batch_latency_s").and_then(|v| v.as_f64()).is_some());
             assert!(m.get("warm_batch_latency_s").and_then(|v| v.as_f64()).is_some());
+            // Merged-template cache accounting (PR 4).
+            assert!(m.get("template_cache_hits").and_then(|v| v.as_f64()).is_some());
+            assert!(m
+                .get("template_cache_misses")
+                .and_then(|v| v.as_f64())
+                .is_some());
         }
         assert!(parsed.get("speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
     }

@@ -21,7 +21,9 @@ pub struct SchedView<'a> {
     pub est_free: &'a [f64],
     /// Cross-DAG busyness signal per device: 0 when idle, growing as the
     /// device takes on work. The simulator reports Σ occupancy of running
-    /// kernels (may exceed 1.0); the real executor reports the
+    /// kernels (may exceed 1.0), served from an incrementally-invalidated
+    /// cache — policies must treat it as read-only state, never as a value
+    /// they can perturb; the real executor reports the
     /// resident-component fraction (tenants/tenancy, capped at 1.0).
     /// Policies should compare devices *relatively* (less vs more loaded),
     /// not against absolute thresholds. Under multi-tenant serving several
@@ -306,9 +308,12 @@ impl Edf {
     /// Laxity per frontier candidate, computed only where the comparator
     /// can reach it — on finite deadlines shared by another candidate. The
     /// placeholder (∞) for untied candidates is never consulted, because
-    /// a distinct deadline decides the comparison first.
+    /// a distinct deadline decides the comparison first. The map is
+    /// pre-sized to the frontier (this runs once per `select`; growth
+    /// rehashes were measurable on large serving frontiers).
     fn tied_laxities(view: &SchedView) -> Vec<(usize, f64)> {
-        let mut counts: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+        let mut counts: std::collections::HashMap<u64, u32> =
+            std::collections::HashMap::with_capacity(view.frontier.len());
         for &c in view.frontier {
             if view.deadline[c].is_finite() {
                 *counts.entry(view.deadline[c].to_bits()).or_insert(0) += 1;

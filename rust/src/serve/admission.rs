@@ -7,9 +7,10 @@ use crate::graph::{Dag, Partition};
 use crate::platform::Platform;
 use crate::sched::app_solo_estimate;
 
-/// Validate one request and materialize its application. Every rejection is
-/// a typed [`Error::Admission`] naming the request id.
-pub fn admit(req: &ServeRequest) -> Result<(Dag, Partition)> {
+/// Request-level validation (arrival, deadline budget) — the per-request
+/// half of [`admit`], split out so the template cache can skip re-running
+/// the *application*-level half for an already-validated cached template.
+pub(crate) fn validate_request(req: &ServeRequest) -> Result<()> {
     let reject = |msg: String| Error::Admission(format!("request {}: {msg}", req.id));
     if !req.arrival.is_finite() || req.arrival < 0.0 {
         return Err(reject(format!("invalid arrival time {}", req.arrival)));
@@ -19,10 +20,15 @@ pub fn admit(req: &ServeRequest) -> Result<(Dag, Partition)> {
             return Err(reject(format!("non-positive deadline {d}")));
         }
     }
-    let (dag, partition) = req
-        .workload
-        .instantiate()
-        .map_err(|e| reject(e.to_string()))?;
+    Ok(())
+}
+
+/// Application-level validation — structural checks over an instantiated
+/// workload, rejections typed and naming the request id. Run once per
+/// *template* under the cache (the result is workload-determined), once
+/// per request for uncacheable workloads.
+pub(crate) fn validate_app(req: &ServeRequest, dag: &Dag, partition: &Partition) -> Result<()> {
+    let reject = |msg: String| Error::Admission(format!("request {}: {msg}", req.id));
     if dag.num_kernels() == 0 {
         return Err(reject("empty DAG".into()));
     }
@@ -37,6 +43,18 @@ pub fn admit(req: &ServeRequest) -> Result<(Dag, Partition)> {
     if partition.components.is_empty() {
         return Err(reject("partition has no components".into()));
     }
+    Ok(())
+}
+
+/// Validate one request and materialize its application. Every rejection is
+/// a typed [`Error::Admission`] naming the request id.
+pub fn admit(req: &ServeRequest) -> Result<(Dag, Partition)> {
+    validate_request(req)?;
+    let (dag, partition) = req
+        .workload
+        .instantiate()
+        .map_err(|e| Error::Admission(format!("request {}: {e}", req.id)))?;
+    validate_app(req, &dag, &partition)?;
     Ok((dag, partition))
 }
 
@@ -54,8 +72,19 @@ pub fn check_laxity(
     platform: &Platform,
     cost: &dyn CostModel,
 ) -> Result<()> {
-    if let Some(budget) = req.deadline {
+    if req.deadline.is_some() {
         let estimate = app_solo_estimate(&app.0, &app.1, platform, cost);
+        return check_laxity_estimate(req, estimate);
+    }
+    Ok(())
+}
+
+/// [`check_laxity`] against a precomputed solo estimate — the admission
+/// loop memoizes the estimate per workload signature (it is a pure
+/// function of the app/platform/cost model), so a 10k-request stream of
+/// one signature prices its laxity gate once instead of 10k times.
+pub(crate) fn check_laxity_estimate(req: &ServeRequest, estimate: f64) -> Result<()> {
+    if let Some(budget) = req.deadline {
         let laxity = budget - estimate;
         if laxity < 0.0 {
             return Err(Error::Admission(format!(

@@ -1,0 +1,175 @@
+//! The merged-template cache — the sim-side analog of the real path's PJRT
+//! executable cache (PR 3).
+//!
+//! Serving a stream means instantiating the *same* workload signature over
+//! and over: every request used to pay a fresh `Workload::instantiate` +
+//! structural validation, and every batch a fresh `merge_apps` deep-clone
+//! of all member apps. Both are pure functions of (signature) and
+//! (signature, batch size) respectively, so [`TemplateCache`] memoizes
+//! them:
+//!
+//! * **App templates**, keyed by workload signature: instantiated and
+//!   validated once, shared via `Arc` — a 10k-request single-signature
+//!   stream builds its DAG once instead of 10k times.
+//! * **Merged batch blocks**, keyed by `(signature, batch size)`: a
+//!   pre-merged [`MergedApp`] of `B` template instances, built once and
+//!   appended to the run-wide assembly as one contiguous block
+//!   ([`crate::serve::merge::MergedAssembly::append_merged`]) for every
+//!   later batch of the same shape. Hit/miss counters surface in
+//!   [`crate::serve::ServeReport`].
+//!
+//! `Workload::Spec` is never cached — its signature is not injective
+//! ([`crate::serve::Workload::cacheable`]); such requests take the
+//! uncached instantiate +
+//! per-app append path, bit-identical to the cached one (proven by the
+//! `block_append_equals_per_app_append` merge test and the warm-vs-cold
+//! serve equivalence test).
+
+use super::admission::{validate_app, validate_request};
+use super::merge::{merge_apps_refs, MergedApp};
+use super::request::ServeRequest;
+use crate::error::Result;
+use crate::graph::{Dag, Partition};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Signature-keyed app-template + merged-batch-block cache. One instance
+/// serves one `serve_*` run by default (hits accrue across batches within
+/// the run); hold it across runs for cross-stream reuse.
+#[derive(Debug, Default)]
+pub struct TemplateCache {
+    /// Workload signature → instantiated, validated application template.
+    apps: HashMap<String, Arc<(Dag, Partition)>>,
+    /// Signature → batch size → pre-merged block of that many templates.
+    /// Nested so a hit probes by `&str` without allocating an owned key.
+    merged: HashMap<String, HashMap<usize, Arc<MergedApp>>>,
+    merged_hits: usize,
+    merged_misses: usize,
+}
+
+impl TemplateCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit one request through the cache: request-level checks always
+    /// run; the application template is instantiated + validated only on
+    /// the first encounter of a cacheable signature (uncacheable workloads
+    /// instantiate fresh every time). Rejections are the same typed
+    /// [`crate::error::Error::Admission`] values `admit` produces.
+    pub fn admit_app(&mut self, req: &ServeRequest) -> Result<Arc<(Dag, Partition)>> {
+        validate_request(req)?;
+        if !req.workload.cacheable() {
+            let (dag, partition) = req
+                .workload
+                .instantiate()
+                .map_err(|e| crate::error::Error::Admission(format!("request {}: {e}", req.id)))?;
+            validate_app(req, &dag, &partition)?;
+            return Ok(Arc::new((dag, partition)));
+        }
+        let sig = req.workload.signature();
+        if let Some(app) = self.apps.get(&sig) {
+            return Ok(Arc::clone(app));
+        }
+        let (dag, partition) = req
+            .workload
+            .instantiate()
+            .map_err(|e| crate::error::Error::Admission(format!("request {}: {e}", req.id)))?;
+        validate_app(req, &dag, &partition)?;
+        let app = Arc::new((dag, partition));
+        self.apps.insert(sig, Arc::clone(&app));
+        Ok(app)
+    }
+
+    /// The pre-merged block of `batch` instances of `template`, building
+    /// (and validating) it on first encounter of this `(signature, batch)`
+    /// shape. Counts a hit or a miss.
+    pub fn merged_block(
+        &mut self,
+        signature: &str,
+        batch: usize,
+        template: &Arc<(Dag, Partition)>,
+    ) -> Result<Arc<MergedApp>> {
+        if let Some(block) = self.merged.get(signature).and_then(|m| m.get(&batch)) {
+            self.merged_hits += 1;
+            return Ok(Arc::clone(block));
+        }
+        self.merged_misses += 1;
+        let refs: Vec<&(Dag, Partition)> = (0..batch).map(|_| template.as_ref()).collect();
+        let block = Arc::new(merge_apps_refs(&refs)?);
+        self.merged
+            .entry(signature.to_string())
+            .or_default()
+            .insert(batch, Arc::clone(&block));
+        Ok(block)
+    }
+
+    /// (merged-block hits, merged-block misses) so far.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.merged_hits, self.merged_misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::Workload;
+
+    #[test]
+    fn app_templates_are_shared_per_signature() {
+        let mut cache = TemplateCache::new();
+        let a = cache
+            .admit_app(&ServeRequest::new(0, 0.0, Workload::Head { beta: 64 }))
+            .unwrap();
+        let b = cache
+            .admit_app(&ServeRequest::new(1, 0.001, Workload::Head { beta: 64 }))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same signature must share one template");
+        let c = cache
+            .admit_app(&ServeRequest::new(2, 0.002, Workload::Head { beta: 128 }))
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "different signatures must not alias");
+    }
+
+    #[test]
+    fn request_level_rejections_still_fire_on_cached_signatures() {
+        let mut cache = TemplateCache::new();
+        cache
+            .admit_app(&ServeRequest::new(0, 0.0, Workload::Head { beta: 64 }))
+            .unwrap();
+        // Same (cached) signature, bad deadline: rejected before the cache.
+        let mut bad = ServeRequest::new(1, 0.0, Workload::Head { beta: 64 });
+        bad.deadline = Some(-1.0);
+        let e = cache.admit_app(&bad).unwrap_err();
+        assert!(e.to_string().contains("request 1"), "{e}");
+    }
+
+    #[test]
+    fn merged_blocks_hit_per_signature_and_size() {
+        let mut cache = TemplateCache::new();
+        let app = cache
+            .admit_app(&ServeRequest::new(0, 0.0, Workload::Head { beta: 64 }))
+            .unwrap();
+        let b1 = cache.merged_block("head_b64", 3, &app).unwrap();
+        assert_eq!(cache.stats(), (0, 1));
+        let b2 = cache.merged_block("head_b64", 3, &app).unwrap();
+        assert_eq!(cache.stats(), (1, 1));
+        assert!(Arc::ptr_eq(&b1, &b2));
+        // A different batch size is a different block.
+        let b3 = cache.merged_block("head_b64", 2, &app).unwrap();
+        assert_eq!(cache.stats(), (1, 2));
+        assert_eq!(b3.partition.components.len(), 2);
+        assert_eq!(b1.partition.components.len(), 3);
+    }
+
+    #[test]
+    fn spec_workloads_are_never_cached() {
+        let (dag, partition) = Workload::Head { beta: 64 }.instantiate().unwrap();
+        let spec = Workload::Spec { dag, partition };
+        assert!(!spec.cacheable());
+        let mut cache = TemplateCache::new();
+        let a = cache.admit_app(&ServeRequest::new(0, 0.0, spec.clone())).unwrap();
+        let b = cache.admit_app(&ServeRequest::new(1, 0.0, spec)).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "Spec templates must stay per-request");
+    }
+}

@@ -1,17 +1,28 @@
 //! The serving engine: concurrent multi-DAG scheduling over the simulator,
 //! plus the sequential-replay baseline every serving run is judged against.
+//!
+//! §Perf (PR 4): the sim path assembles its run-wide application
+//! **batch-by-batch from pre-merged templates** ([`TemplateCache`]) instead
+//! of instantiating and deep-cloning every request's app individually, and
+//! admission sorts an index permutation instead of cloning the request
+//! vector. Report percentiles sort each latency vector once and take
+//! nearest-rank cuts from the shared sorted buffer.
 
-use super::admission::{admit, batch_requests, check_laxity};
-use super::merge::merge_apps;
+use super::admission::{batch_requests, check_laxity_estimate};
+use super::cache::TemplateCache;
+use super::merge::MergedAssembly;
 use super::request::ServeRequest;
 use crate::cost::CostModel;
 use crate::error::Result;
 use crate::graph::{Dag, Partition};
 use crate::json::Json;
 use crate::platform::Platform;
-use crate::sched::Policy;
+use crate::sched::{app_solo_estimate, Policy};
 use crate::sim::{simulate, simulate_served, CompMeta, SimConfig};
 use crate::trace::Lane;
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::Arc;
 
 /// Arrival pacing of the real serving loop.
 ///
@@ -192,6 +203,14 @@ pub struct ServeReport {
     /// Real path: mean service latency of *warm* batches — served entirely
     /// from the executable cache (0 when none).
     pub warm_batch_latency: f64,
+    /// Merged-template cache hits over the run: batches instantiated from
+    /// a pre-merged (signature, batch-size) block instead of deep-cloning
+    /// every member app through `merge_apps` ([`TemplateCache`] — the
+    /// sim-side analog of the executable cache).
+    pub template_cache_hits: usize,
+    /// Merged-template blocks actually built (one per distinct
+    /// (signature, batch-size) shape when the cache works).
+    pub template_cache_misses: usize,
 }
 
 impl ServeReport {
@@ -234,64 +253,94 @@ impl ServeReport {
             ("exec_cache_misses", Json::num(self.exec_cache_misses as f64)),
             ("cold_batch_latency_s", Json::num(self.cold_batch_latency)),
             ("warm_batch_latency_s", Json::num(self.warm_batch_latency)),
+            (
+                "template_cache_hits",
+                Json::num(self.template_cache_hits as f64),
+            ),
+            (
+                "template_cache_misses",
+                Json::num(self.template_cache_misses as f64),
+            ),
         ])
     }
 }
 
-/// Nearest-rank percentile over unsorted latencies; 0 when empty.
+/// Nearest-rank percentile over unsorted values; 0 when empty. Clones and
+/// sorts per call — when cutting several ranks from one vector (every
+/// report does), sort once and use [`percentile_sorted`].
 pub fn percentile(values: &[f64], q: f64) -> f64 {
-    if values.is_empty() {
-        return 0.0;
-    }
     let mut sorted = values.to_vec();
     sorted.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(&sorted, q)
+}
+
+/// Nearest-rank percentile over an **ascending-sorted** slice; 0 when
+/// empty. The shared-sorted-buffer fast path behind [`percentile`].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let idx = ((sorted.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
     sorted[idx]
 }
 
 /// Sort by arrival, admit each request; returns (admitted requests, their
-/// instantiated apps, typed rejections, laxity-rejection count).
+/// shared application templates, typed rejections, laxity-rejection count).
 pub(crate) type Admitted = (
     Vec<ServeRequest>,
-    Vec<(Dag, Partition)>,
+    Vec<Arc<(Dag, Partition)>>,
     Vec<(usize, String)>,
     usize,
 );
 
 /// Shared admission front-end for the sim and real serving paths: arrival
-/// order, priority-descending tie-break, then id. With
-/// `ServeConfig::laxity_admission` on, deadline-carrying requests whose
-/// laxity is already negative at arrival are rejected up front
-/// ([`check_laxity`]) and counted in the returned tally (typed, not
-/// inferred from rejection messages).
+/// order, priority-descending tie-break, then id — sorted as an **index
+/// permutation** (the former `requests.to_vec()` deep-cloned every request,
+/// workload payload included, just to sort). Applications come from the
+/// template cache (one instantiate + validate per cacheable signature).
+/// With `ServeConfig::laxity_admission` on, deadline-carrying requests
+/// whose laxity is already negative at arrival are rejected up front and
+/// counted in the returned tally (typed, not inferred from rejection
+/// messages); the solo estimate behind the gate is memoized per signature.
 pub(crate) fn admit_all(
     requests: &[ServeRequest],
     platform: &Platform,
     cost: &dyn CostModel,
     laxity_admission: bool,
+    cache: &mut TemplateCache,
 ) -> Admitted {
-    let mut sorted: Vec<ServeRequest> = requests.to_vec();
-    sorted.sort_by(|a, b| {
-        a.arrival
-            .total_cmp(&b.arrival)
-            .then_with(|| b.priority.cmp(&a.priority))
-            .then_with(|| a.id.cmp(&b.id))
+    let mut order: Vec<usize> = (0..requests.len()).collect();
+    order.sort_by(|&a, &b| {
+        requests[a]
+            .arrival
+            .total_cmp(&requests[b].arrival)
+            .then_with(|| requests[b].priority.cmp(&requests[a].priority))
+            .then_with(|| requests[a].id.cmp(&requests[b].id))
     });
     let mut admitted = Vec::new();
     let mut apps = Vec::new();
     let mut rejected = Vec::new();
     let mut laxity_rejections = 0usize;
-    for req in sorted {
-        match admit(&req) {
+    let mut solo_memo: HashMap<String, f64> = HashMap::new();
+    for &ri in &order {
+        let req = &requests[ri];
+        match cache.admit_app(req) {
             Ok(app) => {
-                if laxity_admission {
-                    if let Err(e) = check_laxity(&req, &app, platform, cost) {
+                if laxity_admission && req.deadline.is_some() {
+                    let estimate = if req.workload.cacheable() {
+                        *solo_memo
+                            .entry(req.workload.signature())
+                            .or_insert_with(|| app_solo_estimate(&app.0, &app.1, platform, cost))
+                    } else {
+                        app_solo_estimate(&app.0, &app.1, platform, cost)
+                    };
+                    if let Err(e) = check_laxity_estimate(req, estimate) {
                         laxity_rejections += 1;
                         rejected.push((req.id, e.to_string()));
                         continue;
                     }
                 }
-                admitted.push(req);
+                admitted.push(req.clone());
                 apps.push(app);
             }
             Err(e) => rejected.push((req.id, e.to_string())),
@@ -301,6 +350,10 @@ pub(crate) fn admit_all(
 }
 
 /// Deadline-miss and per-priority tail statistics over a set of outcomes.
+/// One sort of (priority, latency) pairs: each priority class becomes a
+/// contiguous latency-ascending slice, and every p99 is a nearest-rank cut
+/// from that shared sorted buffer (the former shape re-collected and
+/// re-sorted per class via [`percentile`]).
 pub(crate) fn deadline_stats(outcomes: &[RequestOutcome]) -> (usize, usize, f64, Vec<(u32, f64)>) {
     let deadline_total = outcomes.iter().filter(|o| o.deadline_met.is_some()).count();
     let deadline_misses = outcomes
@@ -312,20 +365,18 @@ pub(crate) fn deadline_stats(outcomes: &[RequestOutcome]) -> (usize, usize, f64,
     } else {
         0.0
     };
-    let mut prios: Vec<u32> = outcomes.iter().map(|o| o.priority).collect();
-    prios.sort_unstable();
-    prios.dedup();
-    let per_priority_p99 = prios
-        .into_iter()
-        .map(|p| {
-            let lats: Vec<f64> = outcomes
-                .iter()
-                .filter(|o| o.priority == p)
-                .map(|o| o.latency)
-                .collect();
-            (p, percentile(&lats, 0.99))
-        })
-        .collect();
+    let mut pairs: Vec<(u32, f64)> = outcomes.iter().map(|o| (o.priority, o.latency)).collect();
+    pairs.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.total_cmp(&b.1)));
+    let mut per_priority_p99 = Vec::new();
+    let mut start = 0usize;
+    while start < pairs.len() {
+        let p = pairs[start].0;
+        let end = start + pairs[start..].partition_point(|&(q, _)| q == p);
+        let group = &pairs[start..end];
+        let idx = ((group.len() as f64 - 1.0) * 0.99).round() as usize;
+        per_priority_p99.push((p, group[idx].1));
+        start = end;
+    }
     (deadline_total, deadline_misses, deadline_miss_rate, per_priority_p99)
 }
 
@@ -340,7 +391,9 @@ pub(crate) fn build_report(
     device_util: Vec<f64>,
     preemptions: usize,
 ) -> ServeReport {
-    let latencies: Vec<f64> = outcomes.iter().map(|o| o.latency).collect();
+    // One sort; p50 and p99 are nearest-rank cuts from the same buffer.
+    let mut latencies: Vec<f64> = outcomes.iter().map(|o| o.latency).collect();
+    latencies.sort_by(|a, b| a.total_cmp(b));
     let throughput_rps = if makespan > 0.0 {
         outcomes.len() as f64 / makespan
     } else {
@@ -355,8 +408,8 @@ pub(crate) fn build_report(
         rejected,
         makespan,
         throughput_rps,
-        p50_latency: percentile(&latencies, 0.50),
-        p99_latency: percentile(&latencies, 0.99),
+        p50_latency: percentile_sorted(&latencies, 0.50),
+        p99_latency: percentile_sorted(&latencies, 0.99),
         deadline_total,
         deadline_misses,
         deadline_miss_rate,
@@ -369,6 +422,8 @@ pub(crate) fn build_report(
         exec_cache_misses: 0,
         cold_batch_latency: 0.0,
         warm_batch_latency: 0.0,
+        template_cache_hits: 0,
+        template_cache_misses: 0,
     }
 }
 
@@ -378,6 +433,9 @@ pub(crate) fn build_report(
 /// deadlines and priorities ([`CompMeta`]), so deadline-aware policies
 /// (`edf`) can order and preempt across requests. Requests share devices
 /// (up to `cfg.tenancy` residents each) under `policy`.
+///
+/// Uses a fresh per-run [`TemplateCache`]; hold one across runs via
+/// [`serve_sim_cached`] for cross-stream template reuse.
 pub fn serve_sim(
     requests: &[ServeRequest],
     platform: &Platform,
@@ -385,10 +443,29 @@ pub fn serve_sim(
     policy: &mut dyn Policy,
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
+    let mut cache = TemplateCache::new();
+    serve_sim_cached(requests, platform, cost, policy, cfg, &mut cache)
+}
+
+/// [`serve_sim`] with a caller-held [`TemplateCache`]. The run-wide merged
+/// application is assembled **batch-block by batch-block**: every batch of
+/// a cacheable signature appends a pre-merged `(signature, batch-size)`
+/// template ([`MergedAssembly::append_merged`]) instead of deep-cloning
+/// each member app through `merge_apps`; the report carries this run's
+/// cache hit/miss delta.
+pub fn serve_sim_cached(
+    requests: &[ServeRequest],
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &ServeConfig,
+    cache: &mut TemplateCache,
+) -> Result<ServeReport> {
+    let (hits0, misses0) = cache.stats();
     let (admitted, apps, rejected, laxity_rejections) =
-        admit_all(requests, platform, cost, cfg.laxity_admission);
+        admit_all(requests, platform, cost, cfg.laxity_admission, cache);
     if admitted.is_empty() {
-        return Ok(build_report(
+        let mut report = build_report(
             "concurrent",
             policy.name(),
             Vec::new(),
@@ -397,14 +474,40 @@ pub fn serve_sim(
             0.0,
             vec![0.0; platform.devices.len()],
             0,
-        ));
+        );
+        let (hits1, misses1) = cache.stats();
+        report.template_cache_hits = hits1 - hits0;
+        report.template_cache_misses = misses1 - misses0;
+        return Ok(report);
     }
     let batches = batch_requests(&admitted, cfg.batch_window);
-    let merged = merge_apps(&apps)?;
+    // Batch-block assembly. Requests of one batch occupy one contiguous
+    // component run; `req_range[i]` maps admitted request `i` back to its
+    // components, whatever order its batch was appended in.
+    let mut asm = MergedAssembly::new();
+    let mut req_range: Vec<Range<usize>> = vec![0..0; admitted.len()];
+    for b in &batches {
+        let cacheable = b.members.iter().all(|&m| admitted[m].workload.cacheable());
+        if cacheable {
+            // All members share the signature (batching invariant), hence
+            // the same cached template.
+            let sig = admitted[b.members[0]].workload.signature();
+            let block = cache.merged_block(&sig, b.members.len(), &apps[b.members[0]])?;
+            let ranges = asm.append_merged(&block);
+            for (r, &m) in ranges.into_iter().zip(&b.members) {
+                req_range[m] = r;
+            }
+        } else {
+            for &m in &b.members {
+                req_range[m] = asm.append_app(&apps[m]);
+            }
+        }
+    }
+    let merged = asm.finish()?;
     let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
     for b in &batches {
         for &m in &b.members {
-            for c in merged.component_ranges[m].clone() {
+            for c in req_range[m].clone() {
                 meta[c].release = b.release;
             }
         }
@@ -412,7 +515,7 @@ pub fn serve_sim(
     // Deadlines are absolute (arrival + budget) so EDF compares requests on
     // one clock; priorities ride along per component.
     for (i, req) in admitted.iter().enumerate() {
-        for c in merged.component_ranges[i].clone() {
+        for c in req_range[i].clone() {
             meta[c].deadline = req.deadline.map(|d| req.arrival + d).unwrap_or(f64::INFINITY);
             meta[c].priority = req.priority;
         }
@@ -433,7 +536,7 @@ pub fn serve_sim(
         .iter()
         .enumerate()
         .map(|(i, req)| {
-            let range = merged.component_ranges[i].clone();
+            let range = req_range[i].clone();
             let release = meta[range.start].release;
             let finish = range
                 .map(|c| sim.component_finish[c])
@@ -455,7 +558,7 @@ pub fn serve_sim(
             }
         })
         .collect();
-    Ok(build_report(
+    let mut report = build_report(
         "concurrent",
         &sim.policy,
         outcomes,
@@ -464,7 +567,11 @@ pub fn serve_sim(
         makespan,
         device_util,
         sim.preemptions,
-    ))
+    );
+    let (hits1, misses1) = cache.stats();
+    report.template_cache_hits = hits1 - hits0;
+    report.template_cache_misses = misses1 - misses0;
+    Ok(report)
 }
 
 /// The baseline: replay the same stream **sequentially** — each admitted
@@ -478,14 +585,16 @@ pub fn serve_sequential(
     policy: &mut dyn Policy,
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
+    let mut cache = TemplateCache::new();
     let (admitted, apps, rejected, laxity_rejections) =
-        admit_all(requests, platform, cost, cfg.laxity_admission);
+        admit_all(requests, platform, cost, cfg.laxity_admission, &mut cache);
     let mut sim_cfg = cfg.sim.clone();
     sim_cfg.max_tenants = 1;
     let mut clock = 0.0f64;
     let mut busy = vec![0.0f64; platform.devices.len()];
     let mut outcomes = Vec::with_capacity(admitted.len());
-    for (req, (dag, part)) in admitted.iter().zip(&apps) {
+    for (req, app) in admitted.iter().zip(&apps) {
+        let (dag, part) = app.as_ref();
         let r = simulate(dag, part, platform, cost, policy, &sim_cfg)?;
         let start = clock.max(req.arrival);
         let finish = start + r.makespan;
@@ -534,6 +643,8 @@ mod tests {
         assert_eq!(r.outcomes.len(), 0);
         assert_eq!(r.makespan, 0.0);
         assert_eq!(r.throughput_rps, 0.0);
+        assert_eq!(r.template_cache_hits, 0);
+        assert_eq!(r.template_cache_misses, 0);
     }
 
     #[test]
@@ -563,6 +674,12 @@ mod tests {
         assert_eq!(percentile(&v, 1.0), 4.0);
         assert_eq!(percentile(&v, 0.5), 3.0); // round(1.5) = 2 → 3.0
         assert_eq!(percentile(&[], 0.5), 0.0);
+        // The shared-sorted-buffer fast path agrees with the sorting form.
+        let sorted = [1.0, 2.0, 3.0, 4.0];
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(percentile_sorted(&sorted, q), percentile(&v, q));
+        }
+        assert_eq!(percentile_sorted(&[], 0.5), 0.0);
     }
 
     #[test]
@@ -653,5 +770,106 @@ mod tests {
         assert_eq!(per_prio[1].0, 1);
         assert!((per_prio[1].1 - 0.040).abs() < 1e-12);
         assert_eq!(deadline_stats(&[]).2, 0.0);
+    }
+
+    /// A stream whose batch shapes repeat must hit the merged-template
+    /// cache, and the warm-cache run must be **bit-identical** to the cold
+    /// one — memoizing a deterministic construction may never change the
+    /// simulation.
+    #[test]
+    fn warm_template_cache_is_bit_identical_to_cold() {
+        use crate::serve::arrival::poisson_arrivals;
+        let platform = Platform::paper_testbed(3, 1);
+        let cfg = ServeConfig::default();
+        let requests: Vec<ServeRequest> = poisson_arrivals(17, 24, 3000.0)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| ServeRequest::new(i, t, Workload::Head { beta: 64 }))
+            .collect();
+        let mut cache = TemplateCache::new();
+        let cold = serve_sim_cached(
+            &requests,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &cfg,
+            &mut cache,
+        )
+        .unwrap();
+        assert_eq!(cold.outcomes.len(), 24);
+        assert!(
+            cold.template_cache_misses > 0,
+            "first run must build at least one block"
+        );
+        let warm = serve_sim_cached(
+            &requests,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &cfg,
+            &mut cache,
+        )
+        .unwrap();
+        // Every block shape was cached by the cold run.
+        assert_eq!(warm.template_cache_misses, 0, "warm run rebuilt a block");
+        assert!(warm.template_cache_hits > 0);
+        assert_eq!(warm.makespan.to_bits(), cold.makespan.to_bits());
+        for (a, b) in warm.outcomes.iter().zip(&cold.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        }
+    }
+
+    /// Repeated batch shapes within a single run surface as hits in the
+    /// report (zero-window: every request is its own size-1 batch, so the
+    /// first builds the block and the rest hit).
+    #[test]
+    fn template_cache_hits_surface_in_report() {
+        let platform = Platform::paper_testbed(3, 1);
+        let cfg = ServeConfig {
+            batch_window: 0.0,
+            ..ServeConfig::default()
+        };
+        let requests: Vec<ServeRequest> = (0..6)
+            .map(|i| ServeRequest::new(i, i as f64 * 1e-3, Workload::Head { beta: 64 }))
+            .collect();
+        let r = serve_sim(&requests, &platform, &PaperCost, &mut Clustering, &cfg).unwrap();
+        assert_eq!(r.outcomes.len(), 6);
+        assert_eq!(r.template_cache_misses, 1, "one (head_b64, 1) block");
+        assert_eq!(r.template_cache_hits, 5, "five repeats of that shape");
+    }
+
+    /// Spec workloads bypass the cache (their signature is not injective)
+    /// yet serve identically through the per-app append path.
+    #[test]
+    fn spec_workloads_serve_uncached() {
+        let platform = Platform::paper_testbed(3, 1);
+        let (dag, partition) = Workload::Head { beta: 64 }.instantiate().unwrap();
+        let requests: Vec<ServeRequest> = (0..3)
+            .map(|i| {
+                ServeRequest::new(
+                    i,
+                    i as f64 * 1e-4,
+                    Workload::Spec {
+                        dag: dag.clone(),
+                        partition: partition.clone(),
+                    },
+                )
+            })
+            .collect();
+        let r = serve_sim(
+            &requests,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &ServeConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(r.outcomes.len(), 3);
+        assert_eq!(r.template_cache_hits, 0);
+        assert_eq!(r.template_cache_misses, 0);
+        assert!(r.outcomes.iter().all(|o| o.finish.is_finite()));
     }
 }

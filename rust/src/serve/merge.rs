@@ -5,9 +5,16 @@
 //! scheduler then sees one frontier spanning every admitted request — which
 //! is exactly what lets the existing `Policy` trait arbitrate *between*
 //! requests with no API change.
+//!
+//! §Perf (PR 4): [`MergedAssembly`] is the incremental builder behind both
+//! [`merge_apps`] and the serving engine's batch-block assembly — a
+//! pre-merged batch template ([`crate::serve::TemplateCache`]) is appended
+//! as one contiguous block ([`MergedAssembly::append_merged`]) instead of
+//! re-cloning and re-validating every constituent app per batch.
 
 use crate::error::Result;
 use crate::graph::{Dag, Partition};
+use crate::platform::DeviceType;
 use std::ops::Range;
 
 /// The merged application plus the maps back to its constituent apps.
@@ -23,53 +30,142 @@ pub struct MergedApp {
     pub buffer_offsets: Vec<usize>,
 }
 
-/// Disjoint union of `apps` (each a validated dag + partition).
-pub fn merge_apps(apps: &[(Dag, Partition)]) -> Result<MergedApp> {
-    let mut dag = Dag::default();
-    let mut groups: Vec<(Vec<usize>, crate::platform::DeviceType)> = Vec::new();
-    let mut component_ranges = Vec::with_capacity(apps.len());
-    let mut kernel_offsets = Vec::with_capacity(apps.len());
-    let mut buffer_offsets = Vec::with_capacity(apps.len());
+/// Incremental disjoint-union builder. Append validated apps (or whole
+/// pre-merged blocks), then [`MergedAssembly::finish`]. The appended
+/// content is **trusted to be individually validated** (admission validates
+/// every app; cached blocks are validated once when built): a disjoint
+/// union of valid DAGs is valid, so `finish` skips the O(V+E) revalidation
+/// the one-shot [`merge_apps`] entry point still performs.
+#[derive(Debug, Default)]
+pub struct MergedAssembly {
+    dag: Dag,
+    groups: Vec<(Vec<usize>, DeviceType)>,
+    component_ranges: Vec<Range<usize>>,
+    kernel_offsets: Vec<usize>,
+    buffer_offsets: Vec<usize>,
+}
 
-    for (app_dag, app_part) in apps {
-        let ko = dag.kernels.len();
-        let bo = dag.buffers.len();
-        kernel_offsets.push(ko);
-        buffer_offsets.push(bo);
+impl MergedAssembly {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of apps appended so far.
+    pub fn num_apps(&self) -> usize {
+        self.kernel_offsets.len()
+    }
+
+    /// Append one application; returns its component range in the merged
+    /// partition.
+    pub fn append_app(&mut self, app: &(Dag, Partition)) -> Range<usize> {
+        let (app_dag, app_part) = app;
+        let ko = self.dag.kernels.len();
+        let bo = self.dag.buffers.len();
+        self.kernel_offsets.push(ko);
+        self.buffer_offsets.push(bo);
         for k in &app_dag.kernels {
             let mut k = k.clone();
             k.id += ko;
             for b in k.inputs.iter_mut().chain(k.outputs.iter_mut()) {
                 *b += bo;
             }
-            dag.kernels.push(k);
+            self.dag.kernels.push(k);
         }
         for b in &app_dag.buffers {
             let mut b = b.clone();
             b.id += bo;
             b.kernel += ko;
-            dag.buffers.push(b);
+            self.dag.buffers.push(b);
         }
         for &(src, dst) in &app_dag.buffer_edges {
-            dag.buffer_edges.push((src + bo, dst + bo));
+            self.dag.buffer_edges.push((src + bo, dst + bo));
         }
-        let comp_base = groups.len();
+        let comp_base = self.groups.len();
         for c in &app_part.components {
-            groups.push((c.kernels.iter().map(|&k| k + ko).collect(), c.dev));
+            self.groups
+                .push((c.kernels.iter().map(|&k| k + ko).collect(), c.dev));
         }
-        component_ranges.push(comp_base..groups.len());
+        let range = comp_base..self.groups.len();
+        self.component_ranges.push(range.clone());
+        range
     }
 
-    dag.reindex();
-    dag.validate()?;
-    let partition = Partition::new(&dag, groups)?;
-    Ok(MergedApp {
-        dag,
-        partition,
-        component_ranges,
-        kernel_offsets,
-        buffer_offsets,
-    })
+    /// Append a whole pre-merged block (e.g. a cached batch template) as
+    /// one contiguous run of apps: ids are shifted by the current offsets
+    /// in a single pass over the block, and the block's own per-app maps
+    /// are rebased — no per-app loops, no revalidation. Returns the
+    /// component range of each app *inside the block*, in block order.
+    pub fn append_merged(&mut self, block: &MergedApp) -> Vec<Range<usize>> {
+        let ko = self.dag.kernels.len();
+        let bo = self.dag.buffers.len();
+        let comp_base = self.groups.len();
+        for k in &block.dag.kernels {
+            let mut k = k.clone();
+            k.id += ko;
+            for b in k.inputs.iter_mut().chain(k.outputs.iter_mut()) {
+                *b += bo;
+            }
+            self.dag.kernels.push(k);
+        }
+        for b in &block.dag.buffers {
+            let mut b = b.clone();
+            b.id += bo;
+            b.kernel += ko;
+            self.dag.buffers.push(b);
+        }
+        for &(src, dst) in &block.dag.buffer_edges {
+            self.dag.buffer_edges.push((src + bo, dst + bo));
+        }
+        for c in &block.partition.components {
+            self.groups
+                .push((c.kernels.iter().map(|&k| k + ko).collect(), c.dev));
+        }
+        let mut ranges = Vec::with_capacity(block.component_ranges.len());
+        for (i, r) in block.component_ranges.iter().enumerate() {
+            self.kernel_offsets.push(ko + block.kernel_offsets[i]);
+            self.buffer_offsets.push(bo + block.buffer_offsets[i]);
+            let shifted = (comp_base + r.start)..(comp_base + r.end);
+            self.component_ranges.push(shifted.clone());
+            ranges.push(shifted);
+        }
+        ranges
+    }
+
+    /// Seal the assembly: rebuild the adjacency index and the partition.
+    /// Structural *validation* of the union is intentionally skipped — see
+    /// the type-level contract above; [`merge_apps`] revalidates for
+    /// untrusted inputs.
+    pub fn finish(self) -> Result<MergedApp> {
+        let mut dag = self.dag;
+        dag.reindex();
+        let partition = Partition::new(&dag, self.groups)?;
+        Ok(MergedApp {
+            dag,
+            partition,
+            component_ranges: self.component_ranges,
+            kernel_offsets: self.kernel_offsets,
+            buffer_offsets: self.buffer_offsets,
+        })
+    }
+}
+
+/// Disjoint union of `apps` (each a validated dag + partition), by
+/// reference — the allocation the serving layer avoids is the caller-side
+/// deep clone into a contiguous `Vec<(Dag, Partition)>`.
+pub fn merge_apps_refs(apps: &[&(Dag, Partition)]) -> Result<MergedApp> {
+    let mut asm = MergedAssembly::new();
+    for app in apps {
+        asm.append_app(app);
+    }
+    let merged = asm.finish()?;
+    merged.dag.validate()?;
+    Ok(merged)
+}
+
+/// Disjoint union of `apps` (each a validated dag + partition).
+pub fn merge_apps(apps: &[(Dag, Partition)]) -> Result<MergedApp> {
+    let refs: Vec<&(Dag, Partition)> = apps.iter().collect();
+    merge_apps_refs(&refs)
 }
 
 #[cfg(test)]
@@ -129,5 +225,48 @@ mod tests {
         let vadd_merged = vks[0] + m.kernel_offsets[1];
         let vsin_merged = vks[1] + m.kernel_offsets[1];
         assert_eq!(m.dag.kernel_succs(vadd_merged), vec![vsin_merged]);
+    }
+
+    /// Appending a pre-merged block must produce byte-for-byte the same
+    /// merged application as appending its constituent apps one by one —
+    /// the invariant the serving engine's template cache rests on.
+    #[test]
+    fn block_append_equals_per_app_append() {
+        let a = head_app();
+        let (vdag, _) = vadd_vsin_dag(4096);
+        let vpart = Partition::singletons(&vdag);
+        let b = (vdag, vpart);
+
+        // Flat: [b, a, a, a] appended app by app.
+        let flat = merge_apps(&[b.clone(), a.clone(), a.clone(), a.clone()]).unwrap();
+
+        // Blocked: [b] appended, then a pre-merged [a, a, a] block.
+        let block = merge_apps(&[a.clone(), a.clone(), a.clone()]).unwrap();
+        let mut asm = MergedAssembly::new();
+        let r0 = asm.append_app(&b);
+        let rs = asm.append_merged(&block);
+        let m = asm.finish().unwrap();
+        m.dag.validate().unwrap();
+
+        assert_eq!(m.dag.num_kernels(), flat.dag.num_kernels());
+        assert_eq!(m.dag.buffer_edges, flat.dag.buffer_edges);
+        assert_eq!(m.partition.assignment, flat.partition.assignment);
+        assert_eq!(m.kernel_offsets, flat.kernel_offsets);
+        assert_eq!(m.buffer_offsets, flat.buffer_offsets);
+        assert_eq!(m.component_ranges, flat.component_ranges);
+        assert_eq!(r0, flat.component_ranges[0]);
+        assert_eq!(rs, flat.component_ranges[1..].to_vec());
+        // Kernel/buffer contents line up (ids + wiring).
+        for (k1, k2) in m.dag.kernels.iter().zip(&flat.dag.kernels) {
+            assert_eq!(k1.id, k2.id);
+            assert_eq!(k1.name, k2.name);
+            assert_eq!(k1.inputs, k2.inputs);
+            assert_eq!(k1.outputs, k2.outputs);
+        }
+        for (b1, b2) in m.dag.buffers.iter().zip(&flat.dag.buffers) {
+            assert_eq!(b1.id, b2.id);
+            assert_eq!(b1.kernel, b2.kernel);
+            assert_eq!(b1.size_bytes, b2.size_bytes);
+        }
     }
 }

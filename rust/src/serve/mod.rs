@@ -12,7 +12,14 @@
 //!   rejections, plus the batching front-end that coalesces compatible
 //!   requests arriving within a window;
 //! * [`merge`] — fuses many application DAG/partition pairs into one
-//!   multi-tenant application with component↔request maps;
+//!   multi-tenant application with component↔request maps
+//!   ([`MergedAssembly`] appends validated apps or whole pre-merged blocks
+//!   incrementally);
+//! * [`cache`] — the merged-template cache ([`TemplateCache`]): app
+//!   templates per workload signature and pre-merged batch blocks per
+//!   (signature, batch size), the sim-side analog of the real path's PJRT
+//!   executable cache, with hit/miss counters surfaced in
+//!   [`ServeReport::template_cache_hits`];
 //! * [`engine`] — the simulated serving path ([`serve_sim`]) over
 //!   [`crate::sim::simulate_served`] and the sequential-replay baseline
 //!   ([`serve_sequential`]), with per-request makespan/latency accounting;
@@ -41,6 +48,7 @@
 
 pub mod admission;
 pub mod arrival;
+pub mod cache;
 pub mod engine;
 pub mod merge;
 pub mod real;
@@ -48,9 +56,11 @@ pub mod request;
 
 pub use admission::{admit, admit_slo, batch_requests, check_laxity, Batch};
 pub use arrival::{parse_rate, poisson_arrivals, trace_arrivals};
+pub use cache::TemplateCache;
 pub use engine::{
-    request_outcome, serve_sequential, serve_sim, Pacing, RequestOutcome, ServeConfig, ServeReport,
+    percentile_sorted, request_outcome, serve_sequential, serve_sim, serve_sim_cached, Pacing,
+    RequestOutcome, ServeConfig, ServeReport,
 };
-pub use merge::{merge_apps, MergedApp};
+pub use merge::{merge_apps, merge_apps_refs, MergedApp, MergedAssembly};
 pub use real::serve_real;
 pub use request::{ServeRequest, Workload};

@@ -21,10 +21,11 @@
 //! prewarmed runs are served warm).
 
 use super::admission::batch_requests;
+use super::cache::TemplateCache;
 use super::engine::{
     admit_all, build_report, request_outcome, Pacing, RequestOutcome, ServeConfig, ServeReport,
 };
-use super::merge::{merge_apps, MergedApp};
+use super::merge::{merge_apps_refs, MergedApp};
 use super::request::ServeRequest;
 use crate::cost::CostModel;
 use crate::error::Result;
@@ -117,12 +118,15 @@ pub fn serve_real(
 ) -> Result<ServeReport> {
     // Admission: same rules and ordering as the sim path (including
     // laxity-based rejection of requests that cannot meet their deadline).
+    // The template cache also serves the per-batch merges below, so a
+    // repeated (signature, batch-size) shape merges once per run.
+    let mut cache = TemplateCache::new();
     let (admitted, apps, rejected, laxity_rejections): (
         Vec<ServeRequest>,
-        Vec<(Dag, Partition)>,
+        Vec<Arc<(Dag, Partition)>>,
         _,
         usize,
-    ) = admit_all(requests, platform, cost, cfg.laxity_admission);
+    ) = admit_all(requests, platform, cost, cfg.laxity_admission, &mut cache);
 
     let batches = batch_requests(&admitted, cfg.batch_window);
     if cfg.prewarm {
@@ -142,10 +146,18 @@ pub fn serve_real(
     let mut cold: Vec<f64> = Vec::new();
     let mut warm: Vec<f64> = Vec::new();
     for batch in &batches {
-        let members: Vec<(Dag, Partition)> =
-            batch.members.iter().map(|&m| apps[m].clone()).collect();
         let member_ids: Vec<usize> = batch.members.iter().map(|&m| admitted[m].id).collect();
-        let merged = merge_apps(&members)?;
+        // Cacheable batches (the common case) reuse the pre-merged
+        // (signature, batch-size) block; Spec workloads merge fresh.
+        let cacheable = batch.members.iter().all(|&m| admitted[m].workload.cacheable());
+        let merged: Arc<MergedApp> = if cacheable {
+            let sig = admitted[batch.members[0]].workload.signature();
+            cache.merged_block(&sig, batch.members.len(), &apps[batch.members[0]])?
+        } else {
+            let refs: Vec<&(Dag, Partition)> =
+                batch.members.iter().map(|&m| apps[m].as_ref()).collect();
+            Arc::new(merge_apps_refs(&refs)?)
+        };
         let inputs = seed_isolated_inputs(&merged, &member_ids, seed);
         if cfg.pacing == Pacing::Open {
             // Dispatch no earlier than the nominal release instant: the
@@ -245,6 +257,9 @@ pub fn serve_real(
     report.exec_cache_misses = misses1 - misses0;
     report.cold_batch_latency = mean(&cold);
     report.warm_batch_latency = mean(&warm);
+    let (t_hits, t_misses) = cache.stats();
+    report.template_cache_hits = t_hits;
+    report.template_cache_misses = t_misses;
     Ok(report)
 }
 
@@ -253,6 +268,7 @@ mod tests {
     use super::*;
     use crate::cost::PaperCost;
     use crate::sched::Clustering;
+    use crate::serve::merge::merge_apps;
     use crate::serve::request::Workload;
     use std::path::Path;
 
@@ -454,6 +470,68 @@ mod tests {
         }
         // The run cannot finish before the last nominal arrival.
         assert!(report.makespan >= 0.060);
+    }
+
+    /// Per-request numerics cross-check (ROADMAP open item): a request
+    /// served *inside a multi-tenant batch* must produce bit-identical
+    /// outputs to a solo [`crate::exec::execute_dag`] run of the same
+    /// seeded request — batching, merging, and concurrent dispatch may
+    /// never change what a request computes, only when.
+    #[test]
+    fn served_request_outputs_match_solo_execution() {
+        use crate::exec::{execute_dag, execute_dag_multi};
+        let Some(rt) = artifact_runtime() else {
+            return;
+        };
+        let platform = Platform::paper_testbed(3, 1);
+        let app = Workload::Head { beta: 32 }.instantiate().unwrap();
+        // Request id 5 served mid-batch between two neighbours.
+        let batch = merge_apps(&[app.clone(), app.clone(), app.clone()]).unwrap();
+        let inputs = seed_isolated_inputs(&batch, &[9, 5, 7], 11);
+        let served = execute_dag_multi(
+            &batch.dag,
+            &batch.partition,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &rt,
+            &inputs,
+            4,
+        )
+        .unwrap();
+        // Solo run of request 5 with the same per-request seeded inputs
+        // (seeding is keyed by request id + request-local buffer index, so
+        // the data is batch-composition independent).
+        let solo = merge_apps(std::slice::from_ref(&app)).unwrap();
+        let solo_inputs = seed_isolated_inputs(&solo, &[5], 11);
+        let solo_report = execute_dag(
+            &solo.dag,
+            &solo.partition,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &rt,
+            &solo_inputs,
+        )
+        .unwrap();
+        // Request 5 is batch member 1: its buffers live at that offset.
+        let off = batch.buffer_offsets[1];
+        let mut compared = 0usize;
+        for k in solo.dag.sink_kernels() {
+            for &b in &solo.dag.kernels[k].outputs {
+                let solo_out = solo_report.store.host(b).expect("solo output read back");
+                let served_out = served
+                    .store
+                    .host(b + off)
+                    .expect("served output read back");
+                assert_eq!(
+                    solo_out, served_out,
+                    "output buffer {b} diverged between solo and served"
+                );
+                compared += 1;
+            }
+        }
+        assert!(compared > 0, "no sink outputs compared");
     }
 
     #[test]

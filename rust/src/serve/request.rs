@@ -70,6 +70,16 @@ impl Workload {
         }
     }
 
+    /// Whether [`Workload::signature`] uniquely identifies the
+    /// instantiated application, i.e. whether the template cache may key
+    /// this workload by signature. Generator variants are pure functions
+    /// of their parameters (all of which the signature encodes); `Spec`
+    /// carries an arbitrary pre-built app whose signature (kernel count)
+    /// is *not* injective, so it is never cached.
+    pub fn cacheable(&self) -> bool {
+        !matches!(self, Workload::Spec { .. })
+    }
+
     /// Materialize the application DAG and its task-component partition.
     pub fn instantiate(&self) -> Result<(Dag, Partition)> {
         let whole_gpu = |dag: Dag| -> Result<(Dag, Partition)> {

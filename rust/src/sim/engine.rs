@@ -4,6 +4,33 @@
 //! change whenever the running set changes), so the loop alternates:
 //! advance all running kernels to the next event instant, deduct progress,
 //! then handle every event due at that instant.
+//!
+//! §Perf (PR 4): the engine is the serving hot path — every `serve --mode
+//! sim` decision and every bench runs through it, and a 10k-request merged
+//! application has ~10k components and dispatches. The inner loop is
+//! therefore **index-based and allocation-free in steady state**:
+//!
+//! * `issue_phase` walks a sorted *live-dispatch index* (`active_disp`)
+//!   instead of every dispatch ever created (was O(total dispatches) per
+//!   event — quadratic over a serving run);
+//! * membership tests use boolean bitsets (`in_frontier`, `dev_available`,
+//!   `is_cb_kernel`, `is_async_kernel`) and per-kernel counters
+//!   (`kernel_cmds_left`) instead of `Vec::contains` / linear
+//!   `(KernelId, usize)` walks;
+//! * `unblocks` / external-predecessor counts are built by sort+dedup over
+//!   the edge list (was O(E·deg) repeated `contains`), preserving the
+//!   first-encounter order the old dedup produced;
+//! * the cross-DAG `device_load` signal is a cached per-device accumulator
+//!   refreshed only when the running set actually changed (was a fresh
+//!   Vec + full `runs` scan per policy call);
+//! * per-event kernel-rate computation reuses scratch buffers
+//!   ([`contention::shared_speeds_into`]) instead of allocating four
+//!   vectors per event.
+//!
+//! Every change preserves the exact event order and floating-point
+//! operation order of the pre-refactor engine — proven byte-identical
+//! against the verbatim copy in [`super::reference`] by the
+//! `integration_sim_equiv` suite.
 
 use crate::cost::{contention, CostModel};
 use crate::error::{Error, Result};
@@ -116,14 +143,12 @@ struct Dispatch {
     /// Next unissued index per queue (in-order execution).
     queue_next: Vec<usize>,
     cmds_remaining: usize,
-    /// Remaining commands per kernel (callback firing condition).
-    kernel_cmds_left: Vec<(KernelId, usize)>,
-    /// Kernels with registered callbacks not yet fired.
+    /// Callback firings still outstanding (the count comes from the
+    /// engine-wide per-component `cb_count`; per-kernel classification
+    /// lives in the engine-wide `is_cb_kernel` / `is_async_kernel`
+    /// bitsets — the former per-dispatch `Vec` walks were a per-completion
+    /// linear scan).
     callbacks_left: usize,
-    /// Precomputed callback classification (§Perf: recomputing FRONT/END
-    /// per command completion dominated the simulator profile).
-    cb_kernels: Vec<KernelId>,
-    async_kernels: Vec<KernelId>,
 }
 
 struct Run {
@@ -140,9 +165,8 @@ struct Run {
 
 #[derive(Debug, Clone, Copy)]
 enum EvKind {
-    /// setup_cq finished; dispatch commands may issue (the id is carried
-    /// for trace/debug symmetry; issue_phase scans ready dispatches).
-    #[allow(dead_code)]
+    /// setup_cq finished; the dispatch joins the live-dispatch index and
+    /// its commands may issue.
     DispatchReady(usize),
     /// A host-side (CPU shared-memory) transfer completed.
     TransferDone { disp: usize, cmd: CmdId },
@@ -273,8 +297,12 @@ struct Engine<'a> {
 
     // Scheduler state (Algorithm 1).
     frontier: Vec<usize>,
+    /// O(1) frontier membership (mirror of `frontier`).
+    in_frontier: Vec<bool>,
     comp_rank: Vec<f64>,
     available: Vec<DeviceId>,
+    /// O(1) available-set membership (mirror of `available`).
+    dev_available: Vec<bool>,
     est_free: Vec<f64>,
     /// Earliest instant each component may join the frontier (serving).
     release: Vec<f64>,
@@ -299,13 +327,49 @@ struct Engine<'a> {
     kernel_frac: Vec<f64>,
     /// Live dispatch index per component (None once finished/displaced).
     comp_active_disp: Vec<Option<usize>>,
+    /// Components with a live dispatch, ascending — the preemption victim
+    /// candidates, maintained incrementally instead of scanning every
+    /// component per blocked select.
+    resident_comps: Vec<usize>,
     preemptions: usize,
 
     // Execution state.
     dispatches: Vec<Dispatch>,
+    /// Live-dispatch index: dispatch ids that are ready, uncancelled, and
+    /// still have commands to issue — sorted ascending so `issue_phase`
+    /// visits dispatches in exactly the order the former full scan did.
+    active_disp: Vec<usize>,
     runs: Vec<Run>,
+    /// Running-kernel count per device (the hardware concurrency gate —
+    /// was a full `runs` filter per NdRange issue).
+    runs_per_dev: Vec<usize>,
     copy_engines: Vec<CopyEngine>,
     last_cmd_done: f64,
+
+    // Per-kernel bookkeeping, engine-wide (each kernel belongs to exactly
+    // one component, so a flat per-kernel slot replaces the former
+    // per-dispatch association lists).
+    /// Remaining commands per kernel (callback firing condition); reset at
+    /// (re-)dispatch of the owning component.
+    kernel_cmds_left: Vec<usize>,
+    /// Kernel carries a completion callback (END ∪ terminal sinks).
+    is_cb_kernel: Vec<bool>,
+    /// Callback must take the asynchronous clSetEventCallback path.
+    is_async_kernel: Vec<bool>,
+    /// Callback-kernel count per component (`callbacks_left` seed).
+    cb_count: Vec<usize>,
+
+    // Cached cross-DAG load signal + reusable per-event scratch.
+    /// Σ occupancy of running kernels per device; refreshed from `runs`
+    /// (same iteration order as the former per-call recompute, so values
+    /// are bit-identical) only when the running set changed.
+    device_load_cache: Vec<f64>,
+    load_dirty: bool,
+    rates: Vec<f64>,
+    scratch_idx: Vec<usize>,
+    scratch_us: Vec<f64>,
+    scratch_speeds: Vec<f64>,
+    scratch_finished: Vec<usize>,
 }
 
 const EPS: f64 = 1e-12;
@@ -322,24 +386,55 @@ impl<'a> Engine<'a> {
         meta: Option<&[CompMeta]>,
     ) -> Result<Self> {
         let ncomp = partition.components.len();
-        // Kernel-level unblock lists: producer kernel -> consumer components.
-        let mut unblocks: Vec<Vec<usize>> = vec![Vec::new(); dag.num_kernels()];
-        let mut ext_pred_sets: Vec<Vec<KernelId>> = vec![Vec::new(); ncomp];
-        for &(src, dst) in &dag.buffer_edges {
+        let nk = dag.num_kernels();
+        // Kernel-level unblock lists (producer kernel -> consumer
+        // components) and external-predecessor counts, deduplicated by
+        // sort+dedup over the edge list instead of the former per-edge
+        // `Vec::contains` walk (O(E·deg)). `unblocks` preserves the
+        // first-encounter edge order the old dedup produced: stable-sort by
+        // (kernel, component) keeps the earliest edge of every pair, and
+        // the re-sort by edge index restores encounter order.
+        let mut pairs: Vec<(KernelId, usize, usize)> = Vec::new();
+        let mut pred_pairs: Vec<(usize, KernelId)> = Vec::new();
+        for (idx, &(src, dst)) in dag.buffer_edges.iter().enumerate() {
             let pk = dag.buffers[src].kernel;
             let ck = dag.buffers[dst].kernel;
             let pc = partition.assignment[pk];
             let cc = partition.assignment[ck];
             if pc != cc {
-                if !unblocks[pk].contains(&cc) {
-                    unblocks[pk].push(cc);
-                }
-                if !ext_pred_sets[cc].contains(&pk) {
-                    ext_pred_sets[cc].push(pk);
-                }
+                pairs.push((pk, cc, idx));
+                pred_pairs.push((cc, pk));
             }
         }
-        let ext_preds_left: Vec<usize> = ext_pred_sets.iter().map(|s| s.len()).collect();
+        pairs.sort_by_key(|&(pk, cc, _)| (pk, cc));
+        pairs.dedup_by_key(|p| (p.0, p.1));
+        pairs.sort_unstable_by_key(|&(_, _, idx)| idx);
+        let mut unblocks: Vec<Vec<usize>> = vec![Vec::new(); nk];
+        for &(pk, cc, _) in &pairs {
+            unblocks[pk].push(cc);
+        }
+        pred_pairs.sort_unstable();
+        pred_pairs.dedup();
+        let mut ext_preds_left = vec![0usize; ncomp];
+        for &(cc, _) in &pred_pairs {
+            ext_preds_left[cc] += 1;
+        }
+        // Callback classification is static per kernel (each kernel belongs
+        // to exactly one component): compute once up front instead of per
+        // dispatch, into O(1) bitsets.
+        let mut is_cb_kernel = vec![false; nk];
+        let mut is_async_kernel = vec![false; nk];
+        let mut cb_count = vec![0usize; ncomp];
+        for c in 0..ncomp {
+            let cbs = partition.callback_kernels(dag, c);
+            cb_count[c] = cbs.len();
+            for k in cbs {
+                is_cb_kernel[k] = true;
+            }
+            for k in partition.async_callback_kernels(dag, c) {
+                is_async_kernel[k] = true;
+            }
+        }
         let comp_rank = component_ranks(dag, partition, platform, cost);
         let release: Vec<f64> = meta
             .map(|m| m.iter().map(|c| c.release).collect())
@@ -354,6 +449,10 @@ impl<'a> Engine<'a> {
             .filter(|&c| ext_preds_left[c] == 0 && release[c] <= 0.0)
             .collect();
         frontier.sort_by(|&a, &b| comp_rank[b].total_cmp(&comp_rank[a]));
+        let mut in_frontier = vec![false; ncomp];
+        for &c in &frontier {
+            in_frontier[c] = true;
+        }
         let available: Vec<DeviceId> = platform
             .devices
             .iter()
@@ -362,6 +461,11 @@ impl<'a> Engine<'a> {
             .collect();
         if available.is_empty() {
             return Err(Error::Sched("no device has command queues".into()));
+        }
+        let ndev = platform.devices.len();
+        let mut dev_available = vec![false; ndev];
+        for &d in &available {
+            dev_available[d] = true;
         }
         Ok(Engine {
             dag,
@@ -375,25 +479,30 @@ impl<'a> Engine<'a> {
             heap: BinaryHeap::new(),
             trace: Trace::default(),
             frontier,
+            in_frontier,
             comp_rank,
             available,
-            est_free: vec![0.0; platform.devices.len()],
+            dev_available,
+            est_free: vec![0.0; ndev],
             release,
             deadline,
             priority,
-            tenants: vec![0; platform.devices.len()],
+            tenants: vec![0; ndev],
             ext_preds_left,
             unblocks,
-            kernel_finished: vec![false; dag.num_kernels()],
+            kernel_finished: vec![false; nk],
             comp_dispatched: vec![false; ncomp],
             comp_finish: vec![f64::NAN; ncomp],
             comp_device: vec![usize::MAX; ncomp],
             comps_done: 0,
-            kernel_frac: vec![0.0; dag.num_kernels()],
+            kernel_frac: vec![0.0; nk],
             comp_active_disp: vec![None; ncomp],
+            resident_comps: Vec::new(),
             preemptions: 0,
             dispatches: Vec::new(),
+            active_disp: Vec::new(),
             runs: Vec::new(),
+            runs_per_dev: vec![0; ndev],
             copy_engines: (0..platform.copy_engines.max(1))
                 .map(|_| CopyEngine {
                     queue: VecDeque::new(),
@@ -401,6 +510,17 @@ impl<'a> Engine<'a> {
                 })
                 .collect(),
             last_cmd_done: 0.0,
+            kernel_cmds_left: vec![0; nk],
+            is_cb_kernel,
+            is_async_kernel,
+            cb_count,
+            device_load_cache: vec![0.0; ndev],
+            load_dirty: false,
+            rates: Vec::new(),
+            scratch_idx: Vec::new(),
+            scratch_us: Vec::new(),
+            scratch_speeds: Vec::new(),
+            scratch_finished: Vec::new(),
         })
     }
 
@@ -413,16 +533,92 @@ impl<'a> Engine<'a> {
         }));
     }
 
+    // ------------------------------------------------------ index upkeep
+
+    /// Insert `di` into the sorted live-dispatch index (no-op if present).
+    fn active_insert(&mut self, di: usize) {
+        if let Err(pos) = self.active_disp.binary_search(&di) {
+            self.active_disp.insert(pos, di);
+        }
+    }
+
+    /// Remove `di` from the live-dispatch index (no-op if absent).
+    fn active_remove(&mut self, di: usize) {
+        if let Ok(pos) = self.active_disp.binary_search(&di) {
+            self.active_disp.remove(pos);
+        }
+    }
+
+    /// Insert `comp` into the sorted resident-component list.
+    fn resident_insert(&mut self, comp: usize) {
+        if let Err(pos) = self.resident_comps.binary_search(&comp) {
+            self.resident_comps.insert(pos, comp);
+        }
+    }
+
+    /// Remove `comp` from the resident-component list (no-op if absent).
+    fn resident_remove(&mut self, comp: usize) {
+        if let Ok(pos) = self.resident_comps.binary_search(&comp) {
+            self.resident_comps.remove(pos);
+        }
+    }
+
+    /// Remove `comp` from the rank-ordered frontier + membership bitset.
+    /// Policies overwhelmingly select at or near the head, so the position
+    /// scan is effectively O(1); a plain `retain` always walked all of `F`.
+    fn frontier_remove(&mut self, comp: usize) {
+        if !self.in_frontier[comp] {
+            return;
+        }
+        self.in_frontier[comp] = false;
+        let pos = self
+            .frontier
+            .iter()
+            .position(|&c| c == comp)
+            .expect("bitset says comp is in frontier");
+        self.frontier.remove(pos);
+    }
+
+    /// Return `dev` to the available set (no-op if already present).
+    fn available_add(&mut self, dev: DeviceId) {
+        if !self.dev_available[dev] {
+            self.dev_available[dev] = true;
+            self.available.push(dev);
+        }
+    }
+
+    /// Remove `dev` from the available set (no-op if absent), preserving
+    /// the set's order for the policies that scan it.
+    fn available_remove(&mut self, dev: DeviceId) {
+        if !self.dev_available[dev] {
+            return;
+        }
+        self.dev_available[dev] = false;
+        let pos = self
+            .available
+            .iter()
+            .position(|&d| d == dev)
+            .expect("bitset says dev is available");
+        self.available.remove(pos);
+    }
+
     // ---------------------------------------------------------- scheduling
 
-    /// Current occupancy committed per device (Σ occupancy of running
-    /// kernels) — the cross-DAG load signal exposed to policies.
-    fn device_load(&self) -> Vec<f64> {
-        let mut load = vec![0.0; self.platform.devices.len()];
-        for r in &self.runs {
-            load[r.device] += r.occupancy;
+    /// Refresh the cached per-device load (Σ occupancy of running kernels
+    /// — the cross-DAG load signal exposed to policies). Iterates `runs`
+    /// in the same order the former per-call recompute did, so the sums
+    /// are bit-identical; the cache is only invalidated when the running
+    /// set actually changes, so a scheduler phase that dispatches K
+    /// components pays one refresh instead of K+1 full scans + Vec
+    /// allocations.
+    fn refresh_device_load(&mut self) {
+        for l in self.device_load_cache.iter_mut() {
+            *l = 0.0;
         }
-        load
+        for r in &self.runs {
+            self.device_load_cache[r.device] += r.occupancy;
+        }
+        self.load_dirty = false;
     }
 
     fn scheduler_phase(&mut self) {
@@ -438,7 +634,9 @@ impl<'a> Engine<'a> {
         let mut preempt_budget = self.partition.components.len().max(8);
         let mut retry_after_preempt = false;
         loop {
-            let load = self.device_load();
+            if self.load_dirty {
+                self.refresh_device_load();
+            }
             let view = SchedView {
                 now: self.now,
                 frontier: &self.frontier,
@@ -447,7 +645,7 @@ impl<'a> Engine<'a> {
                 partition: self.partition,
                 dag: self.dag,
                 est_free: &self.est_free,
-                device_load: &load,
+                device_load: &self.device_load_cache,
                 deadline: &self.deadline,
                 priority: &self.priority,
                 cost: self.cost,
@@ -468,13 +666,15 @@ impl<'a> Engine<'a> {
             // outstanding. A component that only awaits its completion
             // callbacks frees no compute when displaced — its tenant slot
             // returns within ~callback_latency anyway, while a displacement
-            // would force a full transfer re-stage.
+            // would force a full transfer re-stage. `resident_comps` is
+            // maintained sorted ascending, matching the component order the
+            // former full `comp_active_disp` scan produced.
             let resident: Vec<ResidentTenant> = self
-                .comp_active_disp
+                .resident_comps
                 .iter()
-                .enumerate()
-                .filter_map(|(c, di)| {
-                    di.filter(|&d| self.dispatches[d].cmds_remaining > 0)
+                .filter_map(|&c| {
+                    self.comp_active_disp[c]
+                        .filter(|&d| self.dispatches[d].cmds_remaining > 0)
                         .map(|d| ResidentTenant {
                             comp: c,
                             device: self.dispatches[d].device,
@@ -497,10 +697,10 @@ impl<'a> Engine<'a> {
     fn dispatch(&mut self, comp: usize, dev: DeviceId) {
         assert!(!self.comp_dispatched[comp], "component {comp} re-dispatched");
         self.comp_dispatched[comp] = true;
-        self.frontier.retain(|&c| c != comp);
+        self.frontier_remove(comp);
         self.tenants[dev] += 1;
         if self.tenants[dev] >= self.cfg.max_tenants.max(1) {
-            self.available.retain(|&d| d != dev);
+            self.available_remove(dev);
         }
         self.comp_device[comp] = dev;
 
@@ -536,23 +736,20 @@ impl<'a> Engine<'a> {
         let est_committed = solo + transfers + self.platform.callback_latency;
         self.est_free[dev] = self.est_free[dev].max(ready_at) + est_committed;
 
-        let mut kernel_cmds_left: Vec<(KernelId, usize)> = Vec::new();
+        // Per-kernel outstanding-command counts, in the engine-wide flat
+        // table (zeroed first: a preempted component's stale counts die
+        // with its cancelled dispatch).
         for c in &cq.commands {
-            match kernel_cmds_left.iter_mut().find(|(k, _)| *k == c.kernel) {
-                Some((_, n)) => *n += 1,
-                None => kernel_cmds_left.push((c.kernel, 1)),
-            }
+            self.kernel_cmds_left[c.kernel] = 0;
         }
-        let cb_kernels = self.partition.callback_kernels(self.dag, comp);
-        let async_kernels = self.partition.async_callback_kernels(self.dag, comp);
+        for c in &cq.commands {
+            self.kernel_cmds_left[c.kernel] += 1;
+        }
         let d = Dispatch {
             state: vec![CmdState::Pending; cq.num_commands()],
             queue_next: vec![0; cq.queues.len()],
             cmds_remaining: cq.num_commands(),
-            kernel_cmds_left,
-            callbacks_left: cb_kernels.len(),
-            cb_kernels,
-            async_kernels,
+            callbacks_left: self.cb_count[comp],
             cq,
             device: dev,
             ready_at,
@@ -562,6 +759,12 @@ impl<'a> Engine<'a> {
         let idx = self.dispatches.len();
         self.dispatches.push(d);
         self.comp_active_disp[comp] = Some(idx);
+        self.resident_insert(comp);
+        if ready_at <= self.now + EPS {
+            // Zero setup overhead: issuable in this very phase, exactly as
+            // the former ready_at scan would have found it.
+            self.active_insert(idx);
+        }
         self.push_ev(ready_at, EvKind::DispatchReady(idx));
     }
 
@@ -585,6 +788,8 @@ impl<'a> Engine<'a> {
                 continue;
             }
             let r = self.runs.swap_remove(i);
+            self.runs_per_dev[r.device] -= 1;
+            self.load_dirty = true;
             let device = self.platform.device(r.device);
             let full = self.cost.exec_time(&self.dag.kernels[r.kernel], device);
             let done = if full > 0.0 {
@@ -615,12 +820,12 @@ impl<'a> Engine<'a> {
         }
         let dev = self.dispatches[di].device;
         self.dispatches[di].cancelled = true;
+        self.active_remove(di);
         self.comp_active_disp[victim] = None;
+        self.resident_remove(victim);
         self.comp_dispatched[victim] = false;
         self.tenants[dev] -= 1;
-        if !self.available.contains(&dev) {
-            self.available.push(dev);
-        }
+        self.available_add(dev);
         // Roll back the EFT booking made at dispatch (the re-dispatch will
         // book afresh); partial progress is forfeited with it.
         self.est_free[dev] = (self.est_free[dev] - self.dispatches[di].est_committed).max(self.now);
@@ -644,21 +849,24 @@ impl<'a> Engine<'a> {
 
     /// Issue every currently eligible command. In-order queues: only each
     /// queue's head candidate is considered; cross-queue deps must be Done.
+    /// Walks the live-dispatch index only — drained, cancelled, and
+    /// not-yet-ready dispatches never enter it, so a serving run with
+    /// thousands of completed dispatches pays nothing for them (the former
+    /// full scan made this O(total dispatches) per event).
     fn issue_phase(&mut self) {
         let mut progressed = true;
         while progressed {
             progressed = false;
-            for di in 0..self.dispatches.len() {
-                // §Perf: skip drained, cancelled, or not-yet-ready
-                // dispatches — dynamic policies accumulate one dispatch per
-                // kernel, and scanning finished ones made issue_phase
-                // O(kernels) per event.
-                if self.dispatches[di].cmds_remaining == 0
-                    || self.dispatches[di].cancelled
-                    || self.dispatches[di].ready_at > self.now + EPS
-                {
-                    continue;
-                }
+            let mut ai = 0;
+            while ai < self.active_disp.len() {
+                let di = self.active_disp[ai];
+                ai += 1;
+                debug_assert!(
+                    !self.dispatches[di].cancelled
+                        && self.dispatches[di].cmds_remaining > 0
+                        && self.dispatches[di].ready_at <= self.now + EPS,
+                    "stale dispatch {di} in live index"
+                );
                 for q in 0..self.dispatches[di].cq.queues.len() {
                     // In-order queue: a command may issue only once every
                     // earlier command in the same queue has *completed*.
@@ -675,11 +883,14 @@ impl<'a> Engine<'a> {
                             CmdState::Issued => break, // head still running
                             CmdState::Pending => {}
                         }
+                        // Inline over `e_q` (deps_of would allocate a Vec
+                        // per probe — this runs once per issue attempt).
                         let deps_ok = d
                             .cq
-                            .deps_of(cmd)
+                            .e_q
                             .iter()
-                            .all(|&dep| d.state[dep] == CmdState::Done);
+                            .filter(|&&(_, a)| a == cmd)
+                            .all(|&(b, _)| d.state[b] == CmdState::Done);
                         if !deps_ok || !self.try_issue(di, cmd) {
                             break;
                         }
@@ -700,13 +911,9 @@ impl<'a> Engine<'a> {
         let queue = d.cq.commands[cmd].queue;
         match kind {
             CommandKind::NdRange => {
-                // Hardware concurrency cap (Hyper-Q / CPU fission width).
-                let running = self
-                    .runs
-                    .iter()
-                    .filter(|r| r.device == dev_id)
-                    .count();
-                if running >= self.platform.device(dev_id).hw_queues {
+                // Hardware concurrency cap (Hyper-Q / CPU fission width),
+                // from the per-device running counter.
+                if self.runs_per_dev[dev_id] >= self.platform.device(dev_id).hw_queues {
                     return false;
                 }
                 let device = self.platform.device(dev_id);
@@ -726,6 +933,8 @@ impl<'a> Engine<'a> {
                     occupancy: contention::occupancy(node, device),
                     started: self.now,
                 });
+                self.runs_per_dev[dev_id] += 1;
+                self.load_dirty = true;
                 self.dispatches[di].state[cmd] = CmdState::Issued;
                 true
             }
@@ -783,24 +992,19 @@ impl<'a> Engine<'a> {
             // the work is void, the re-dispatch replays it.
             return;
         }
-        let d = &mut self.dispatches[di];
-        debug_assert_eq!(d.state[cmd], CmdState::Issued);
-        d.state[cmd] = CmdState::Done;
-        d.cmds_remaining -= 1;
+        debug_assert_eq!(self.dispatches[di].state[cmd], CmdState::Issued);
+        self.dispatches[di].state[cmd] = CmdState::Done;
+        self.dispatches[di].cmds_remaining -= 1;
+        if self.dispatches[di].cmds_remaining == 0 {
+            // Drained: out of the live index (callbacks may still fire).
+            self.active_remove(di);
+        }
         self.last_cmd_done = self.last_cmd_done.max(self.now);
-        let kernel = d.cq.commands[cmd].kernel;
-        let entry = d
-            .kernel_cmds_left
-            .iter_mut()
-            .find(|(k, _)| *k == kernel)
-            .expect("kernel tracked");
-        entry.1 -= 1;
-        let kernel_complete = entry.1 == 0;
-        if kernel_complete {
-            let tracked = d.cb_kernels.contains(&kernel);
-            if tracked {
-                let needs_async = d.async_kernels.contains(&kernel);
-                let delay = if needs_async {
+        let kernel = self.dispatches[di].cq.commands[cmd].kernel;
+        self.kernel_cmds_left[kernel] -= 1;
+        if self.kernel_cmds_left[kernel] == 0 {
+            if self.is_cb_kernel[kernel] {
+                let delay = if self.is_async_kernel[kernel] {
                     // clSetEventCallback path: base thread latency plus host
                     // starvation while the CPU device crunches kernels
                     // (Fig. 13(a)): the callback thread waits for a share of
@@ -839,9 +1043,13 @@ impl<'a> Engine<'a> {
         if first_completion {
             // update_task_queue: successors that became ready join F —
             // unless their request has not arrived yet (serving), in which
-            // case the release event re-examines them.
-            let unblocked = self.unblocks[kernel].clone();
-            for uc in unblocked {
+            // case the release event re-examines them. (Index loop: the
+            // former per-callback `unblocks` clone is gone; the list is
+            // never mutated after construction, but the &mut self calls in
+            // the body forbid holding an iterator over it.)
+            #[allow(clippy::needless_range_loop)]
+            for u in 0..self.unblocks[kernel].len() {
+                let uc = self.unblocks[kernel][u];
                 // A component is ready when all external producers are done.
                 self.ext_preds_left[uc] -= 1;
                 if self.ext_preds_left[uc] == 0 && !self.comp_dispatched[uc] {
@@ -860,34 +1068,35 @@ impl<'a> Engine<'a> {
             return;
         }
         // return_device (one tenant slot) once the component has finished.
-        let d = &mut self.dispatches[di];
-        d.callbacks_left -= 1;
-        if d.callbacks_left == 0 {
-            debug_assert_eq!(d.cmds_remaining, 0, "callbacks after all commands");
-            let dev = d.device;
+        self.dispatches[di].callbacks_left -= 1;
+        if self.dispatches[di].callbacks_left == 0 {
+            debug_assert_eq!(
+                self.dispatches[di].cmds_remaining, 0,
+                "callbacks after all commands"
+            );
+            let dev = self.dispatches[di].device;
             self.tenants[dev] -= 1;
-            if !self.available.contains(&dev) {
-                self.available.push(dev);
-            }
+            self.available_add(dev);
             if self.tenants[dev] == 0 {
                 self.est_free[dev] = self.now;
             }
             self.comp_finish[comp] = self.now;
             self.comp_active_disp[comp] = None;
+            self.resident_remove(comp);
             self.comps_done += 1;
         }
     }
 
     /// Add a ready, released component to the rank-sorted (descending)
     /// frontier. Binary-search insertion keeps the invariant in O(log F)
-    /// compares + one shift, instead of the former full `sort_by` per
-    /// callback (a named ROADMAP perf item for large merged DAGs). Equal
-    /// ranks insert after existing entries, matching the stable sort the
-    /// previous implementation used.
+    /// compares + one shift; the membership guard is the O(1) bitset.
+    /// Equal ranks insert after existing entries, matching the stable sort
+    /// the original implementation used.
     fn enter_frontier(&mut self, comp: usize) {
-        if self.comp_dispatched[comp] || self.frontier.contains(&comp) {
+        if self.comp_dispatched[comp] || self.in_frontier[comp] {
             return;
         }
+        self.in_frontier[comp] = true;
         let rank = self.comp_rank[comp];
         let ranks = &self.comp_rank;
         let idx = self
@@ -898,29 +1107,40 @@ impl<'a> Engine<'a> {
 
     // ------------------------------------------------------------- kernels
 
-    /// Per-run speed multipliers (relative to solo execution) per device.
-    fn run_rates(&self) -> Vec<f64> {
-        let mut rates = vec![1.0; self.runs.len()];
+    /// Per-run speed multipliers (relative to solo execution) per device,
+    /// into the reusable `rates` buffer. Gather order per device matches
+    /// the former allocating version (ascending `runs` index), so the
+    /// contention math is bit-identical.
+    fn compute_run_rates(&mut self) {
+        self.rates.clear();
+        self.rates.resize(self.runs.len(), 1.0);
         for dev in 0..self.platform.devices.len() {
-            let idxs: Vec<usize> = (0..self.runs.len())
-                .filter(|&i| self.runs[i].device == dev)
-                .collect();
-            if idxs.is_empty() {
+            if self.runs_per_dev[dev] == 0 {
                 continue;
             }
-            let us: Vec<f64> = idxs.iter().map(|&i| self.runs[i].occupancy).collect();
-            let speeds = contention::shared_speeds_with(&us, self.cfg.contention_efficiency);
-            for (j, &i) in idxs.iter().enumerate() {
-                rates[i] = speeds[j] / us[j];
+            self.scratch_idx.clear();
+            self.scratch_us.clear();
+            for (i, r) in self.runs.iter().enumerate() {
+                if r.device == dev {
+                    self.scratch_idx.push(i);
+                    self.scratch_us.push(r.occupancy);
+                }
+            }
+            contention::shared_speeds_into(
+                &self.scratch_us,
+                self.cfg.contention_efficiency,
+                &mut self.scratch_speeds,
+            );
+            for (j, &i) in self.scratch_idx.iter().enumerate() {
+                self.rates[i] = self.scratch_speeds[j] / self.scratch_us[j];
             }
         }
-        rates
     }
 
-    fn next_kernel_completion(&self, rates: &[f64]) -> Option<f64> {
+    fn next_kernel_completion(&self) -> Option<f64> {
         self.runs
             .iter()
-            .zip(rates)
+            .zip(&self.rates)
             .map(|(r, &rate)| self.now + r.remaining / rate)
             .min_by(|a, b| a.total_cmp(b))
     }
@@ -950,8 +1170,8 @@ impl<'a> Engine<'a> {
                 break;
             }
 
-            let rates = self.run_rates();
-            let t_kernel = self.next_kernel_completion(&rates);
+            self.compute_run_rates();
+            let t_kernel = self.next_kernel_completion();
             let t_heap = self.heap.peek().map(|Reverse(e)| e.t);
             let t_next = match (t_kernel, t_heap) {
                 (Some(a), Some(b)) => a.min(b),
@@ -967,18 +1187,28 @@ impl<'a> Engine<'a> {
             let dt = (t_next - self.now).max(0.0);
 
             // Advance all running kernels by dt at their current rates.
-            for (r, &rate) in self.runs.iter_mut().zip(&rates) {
+            for (r, &rate) in self.runs.iter_mut().zip(&self.rates) {
                 r.remaining -= dt * rate;
             }
             self.now = t_next;
 
-            // Retire kernels that finished exactly now.
-            let mut finished: Vec<usize> = (0..self.runs.len())
-                .filter(|&i| self.runs[i].remaining <= 1e-9)
-                .collect();
-            finished.sort_unstable_by(|a, b| b.cmp(a));
-            for i in finished {
+            // Retire kernels that finished exactly now (descending index
+            // order keeps swap_remove targets valid; scratch reused).
+            self.scratch_finished.clear();
+            for i in 0..self.runs.len() {
+                if self.runs[i].remaining <= 1e-9 {
+                    self.scratch_finished.push(i);
+                }
+            }
+            self.scratch_finished.sort_unstable_by(|a, b| b.cmp(a));
+            // Index loop: command_done below needs &mut self, so no
+            // iterator over the scratch buffer may be live.
+            #[allow(clippy::needless_range_loop)]
+            for fi in 0..self.scratch_finished.len() {
+                let i = self.scratch_finished[fi];
                 let r = self.runs.swap_remove(i);
+                self.runs_per_dev[r.device] -= 1;
+                self.load_dirty = true;
                 self.kernel_frac[r.kernel] = 1.0;
                 let name = &self.dag.kernels[r.kernel].name;
                 self.trace.push(Span {
@@ -1002,7 +1232,15 @@ impl<'a> Engine<'a> {
                 }
                 let Reverse(e) = self.heap.pop().unwrap();
                 match e.kind {
-                    EvKind::DispatchReady(_) => { /* issue phase picks it up */ }
+                    EvKind::DispatchReady(di) => {
+                        // Joins the live index unless it was displaced (or
+                        // somehow drained) before its setup completed.
+                        if !self.dispatches[di].cancelled
+                            && self.dispatches[di].cmds_remaining > 0
+                        {
+                            self.active_insert(di);
+                        }
+                    }
                     EvKind::TransferDone { disp, cmd } => self.command_done(disp, cmd),
                     EvKind::CopyDone { engine } => {
                         let (di, cmd) = self.copy_engines[engine]
@@ -1032,7 +1270,6 @@ impl<'a> Engine<'a> {
         })
     }
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1495,5 +1732,60 @@ mod tests {
             exclusive.makespan
         );
         assert!(shared.trace.device_overlap(0) > 0.0);
+    }
+
+    /// The indexed engine must be byte-identical to the verbatim
+    /// pre-refactor copy in [`crate::sim::reference`] — same makespan
+    /// bits, same per-component finish/device, same preemption count —
+    /// including under EDF preemption (the full equivalence matrix over
+    /// seeded serve streams lives in `tests/integration_sim_equiv.rs`).
+    #[test]
+    fn optimized_engine_matches_reference_bitwise() {
+        use crate::sim::reference::simulate_served_ref;
+        let (dag, ios) = transformer_dag(3, 128, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 1);
+        let platform = Platform::paper_testbed(3, 1);
+        let cfg = SimConfig {
+            max_tenants: 2,
+            ..SimConfig::default()
+        };
+        let meta = [
+            CompMeta::default(),
+            CompMeta {
+                release: 0.002,
+                deadline: 0.5,
+                priority: 1,
+            },
+            CompMeta {
+                release: 0.004,
+                deadline: 0.4,
+                priority: 0,
+            },
+        ];
+        let new = simulate_served(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut crate::sched::Edf,
+            &cfg,
+            &meta,
+        )
+        .unwrap();
+        let old = simulate_served_ref(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut crate::sched::Edf,
+            &cfg,
+            &meta,
+        )
+        .unwrap();
+        assert_eq!(new.makespan.to_bits(), old.makespan.to_bits());
+        assert_eq!(new.preemptions, old.preemptions);
+        assert_eq!(new.component_device, old.component_device);
+        let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+        assert_eq!(bits(&new.component_finish), bits(&old.component_finish));
     }
 }

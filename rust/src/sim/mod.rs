@@ -18,5 +18,7 @@
 //! work re-entering the frontier with its remaining solo-seconds preserved.
 
 pub mod engine;
+#[doc(hidden)]
+pub mod reference;
 
 pub use engine::{simulate, simulate_released, simulate_served, CompMeta, SimConfig, SimResult};

@@ -1,0 +1,937 @@
+//! **Test-only reference engine** — the pre-refactor (PR 3) event-driven
+//! simulator, kept verbatim so the optimized [`super::engine`] can be
+//! proven byte-identical against it on seeded serve streams (the
+//! `integration_sim_equiv` suite). Per-event costs here are deliberately
+//! the *old* linear scans (`issue_phase` over every dispatch ever created,
+//! `retain`/`contains` membership walks, `device_load` recomputed per
+//! policy call); do **not** use it outside equivalence tests or the
+//! before/after rows of `benches/serve_scale.rs`.
+
+use super::engine::{CompMeta, SimConfig, SimResult};
+use crate::cost::{contention, CostModel};
+use crate::error::{Error, Result};
+use crate::graph::{Dag, KernelId, Partition};
+use crate::platform::{DeviceId, Platform};
+use crate::queue::{setup_cq, CmdId, CommandKind, CommandQueues};
+use crate::sched::{component_ranks, Policy, ResidentTenant, SchedView};
+use crate::trace::{Lane, Span, Trace};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum CmdState {
+    Pending,
+    Issued,
+    Done,
+}
+
+struct Dispatch {
+    cq: CommandQueues,
+    device: DeviceId,
+    /// Commands become issuable after this instant (select + setup_cq).
+    ready_at: f64,
+    /// Set when the component was preempted: the dispatch is dead — no
+    /// further commands issue, in-flight completions are dropped, and a
+    /// fresh dispatch is created when the component is re-selected.
+    cancelled: bool,
+    /// EFT booking added to `est_free[device]` at dispatch — rolled back
+    /// on displacement so repeated preemptions don't inflate the device's
+    /// estimated backlog.
+    est_committed: f64,
+    state: Vec<CmdState>,
+    /// Next unissued index per queue (in-order execution).
+    queue_next: Vec<usize>,
+    cmds_remaining: usize,
+    /// Remaining commands per kernel (callback firing condition).
+    kernel_cmds_left: Vec<(KernelId, usize)>,
+    /// Kernels with registered callbacks not yet fired.
+    callbacks_left: usize,
+    /// Precomputed callback classification (§Perf: recomputing FRONT/END
+    /// per command completion dominated the simulator profile).
+    cb_kernels: Vec<KernelId>,
+    async_kernels: Vec<KernelId>,
+}
+
+struct Run {
+    disp: usize,
+    cmd: CmdId,
+    kernel: KernelId,
+    device: DeviceId,
+    queue: usize,
+    /// Remaining work in solo-seconds.
+    remaining: f64,
+    occupancy: f64,
+    started: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum EvKind {
+    /// setup_cq finished; dispatch commands may issue (the id is carried
+    /// for trace/debug symmetry; issue_phase scans ready dispatches).
+    #[allow(dead_code)]
+    DispatchReady(usize),
+    /// A host-side (CPU shared-memory) transfer completed.
+    TransferDone { disp: usize, cmd: CmdId },
+    /// The DMA copy engine finished its current transfer.
+    CopyDone { engine: usize },
+    /// A kernel's completion callback ran on the host.
+    Callback { disp: usize, kernel: KernelId },
+    /// A served DAG request arrived: its component may now join the frontier
+    /// (multi-DAG serving; never emitted when all release times are zero).
+    Release { comp: usize },
+}
+
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&o.t)
+            .then_with(|| self.seq.cmp(&o.seq))
+    }
+}
+
+struct CopyEngine {
+    /// FIFO of queued transfers.
+    queue: VecDeque<(usize, CmdId)>,
+    /// Currently transferring, if any.
+    current: Option<(usize, CmdId)>,
+}
+
+/// Pre-refactor [`super::engine::simulate`], verbatim — equivalence-test
+/// reference only.
+pub fn simulate_ref(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &SimConfig,
+) -> Result<SimResult> {
+    Engine::new(dag, partition, platform, cost, policy, cfg, None)?.run()
+}
+
+/// Pre-refactor [`super::engine::simulate_served`], verbatim —
+/// equivalence-test reference only.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_served_ref(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &SimConfig,
+    meta: &[CompMeta],
+) -> Result<SimResult> {
+    if meta.len() != partition.components.len() {
+        return Err(Error::Sched(format!(
+            "serving metadata for {} components, partition has {}",
+            meta.len(),
+            partition.components.len()
+        )));
+    }
+    for m in meta {
+        if !m.release.is_finite() || m.release < 0.0 {
+            return Err(Error::Sched(format!("invalid release time {}", m.release)));
+        }
+        // Deadlines are absolute instants: zero or even negative just means
+        // "already due" (an ordinary miss), so only NaN is malformed.
+        // Relative-budget validation (> 0) belongs to admission.
+        if m.deadline.is_nan() {
+            return Err(Error::Sched("invalid deadline NaN".into()));
+        }
+    }
+    Engine::new(dag, partition, platform, cost, policy, cfg, Some(meta))?.run()
+}
+
+struct Engine<'a> {
+    dag: &'a Dag,
+    partition: &'a Partition,
+    platform: &'a Platform,
+    cost: &'a dyn CostModel,
+    policy: &'a mut dyn Policy,
+    cfg: &'a SimConfig,
+
+    now: f64,
+    seq: u64,
+    heap: BinaryHeap<Reverse<Ev>>,
+    trace: Trace,
+
+    // Scheduler state (Algorithm 1).
+    frontier: Vec<usize>,
+    comp_rank: Vec<f64>,
+    available: Vec<DeviceId>,
+    est_free: Vec<f64>,
+    /// Earliest instant each component may join the frontier (serving).
+    release: Vec<f64>,
+    /// Absolute deadline per component (∞ when the request has none).
+    deadline: Vec<f64>,
+    /// Request priority per component (0 default).
+    priority: Vec<u32>,
+    /// Components currently resident per device (multi-tenant serving).
+    tenants: Vec<usize>,
+    /// Outstanding external predecessor kernels per component.
+    ext_preds_left: Vec<usize>,
+    /// comp list each kernel unblocks when globally finished.
+    unblocks: Vec<Vec<usize>>,
+    kernel_finished: Vec<bool>,
+    comp_dispatched: Vec<bool>,
+    comp_finish: Vec<f64>,
+    comp_device: Vec<DeviceId>,
+    comps_done: usize,
+    /// Fraction of each kernel's solo execution already performed —
+    /// preserved across preemption so displaced work re-runs only its
+    /// remaining solo-seconds (transfers are re-staged in full).
+    kernel_frac: Vec<f64>,
+    /// Live dispatch index per component (None once finished/displaced).
+    comp_active_disp: Vec<Option<usize>>,
+    preemptions: usize,
+
+    // Execution state.
+    dispatches: Vec<Dispatch>,
+    runs: Vec<Run>,
+    copy_engines: Vec<CopyEngine>,
+    last_cmd_done: f64,
+}
+
+const EPS: f64 = 1e-12;
+
+impl<'a> Engine<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        dag: &'a Dag,
+        partition: &'a Partition,
+        platform: &'a Platform,
+        cost: &'a dyn CostModel,
+        policy: &'a mut dyn Policy,
+        cfg: &'a SimConfig,
+        meta: Option<&[CompMeta]>,
+    ) -> Result<Self> {
+        let ncomp = partition.components.len();
+        // Kernel-level unblock lists: producer kernel -> consumer components.
+        let mut unblocks: Vec<Vec<usize>> = vec![Vec::new(); dag.num_kernels()];
+        let mut ext_pred_sets: Vec<Vec<KernelId>> = vec![Vec::new(); ncomp];
+        for &(src, dst) in &dag.buffer_edges {
+            let pk = dag.buffers[src].kernel;
+            let ck = dag.buffers[dst].kernel;
+            let pc = partition.assignment[pk];
+            let cc = partition.assignment[ck];
+            if pc != cc {
+                if !unblocks[pk].contains(&cc) {
+                    unblocks[pk].push(cc);
+                }
+                if !ext_pred_sets[cc].contains(&pk) {
+                    ext_pred_sets[cc].push(pk);
+                }
+            }
+        }
+        let ext_preds_left: Vec<usize> = ext_pred_sets.iter().map(|s| s.len()).collect();
+        let comp_rank = component_ranks(dag, partition, platform, cost);
+        let release: Vec<f64> = meta
+            .map(|m| m.iter().map(|c| c.release).collect())
+            .unwrap_or_else(|| vec![0.0; ncomp]);
+        let deadline: Vec<f64> = meta
+            .map(|m| m.iter().map(|c| c.deadline).collect())
+            .unwrap_or_else(|| vec![f64::INFINITY; ncomp]);
+        let priority: Vec<u32> = meta
+            .map(|m| m.iter().map(|c| c.priority).collect())
+            .unwrap_or_else(|| vec![0; ncomp]);
+        let mut frontier: Vec<usize> = (0..ncomp)
+            .filter(|&c| ext_preds_left[c] == 0 && release[c] <= 0.0)
+            .collect();
+        frontier.sort_by(|&a, &b| comp_rank[b].total_cmp(&comp_rank[a]));
+        let available: Vec<DeviceId> = platform
+            .devices
+            .iter()
+            .filter(|d| d.num_queues > 0)
+            .map(|d| d.id)
+            .collect();
+        if available.is_empty() {
+            return Err(Error::Sched("no device has command queues".into()));
+        }
+        Ok(Engine {
+            dag,
+            partition,
+            platform,
+            cost,
+            policy,
+            cfg,
+            now: 0.0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            trace: Trace::default(),
+            frontier,
+            comp_rank,
+            available,
+            est_free: vec![0.0; platform.devices.len()],
+            release,
+            deadline,
+            priority,
+            tenants: vec![0; platform.devices.len()],
+            ext_preds_left,
+            unblocks,
+            kernel_finished: vec![false; dag.num_kernels()],
+            comp_dispatched: vec![false; ncomp],
+            comp_finish: vec![f64::NAN; ncomp],
+            comp_device: vec![usize::MAX; ncomp],
+            comps_done: 0,
+            kernel_frac: vec![0.0; dag.num_kernels()],
+            comp_active_disp: vec![None; ncomp],
+            preemptions: 0,
+            dispatches: Vec::new(),
+            runs: Vec::new(),
+            copy_engines: (0..platform.copy_engines.max(1))
+                .map(|_| CopyEngine {
+                    queue: VecDeque::new(),
+                    current: None,
+                })
+                .collect(),
+            last_cmd_done: 0.0,
+        })
+    }
+
+    fn push_ev(&mut self, t: f64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Ev {
+            t,
+            seq: self.seq,
+            kind,
+        }));
+    }
+
+    // ---------------------------------------------------------- scheduling
+
+    /// Current occupancy committed per device (Σ occupancy of running
+    /// kernels) — the cross-DAG load signal exposed to policies.
+    fn device_load(&self) -> Vec<f64> {
+        let mut load = vec![0.0; self.platform.devices.len()];
+        for r in &self.runs {
+            load[r.device] += r.occupancy;
+        }
+        load
+    }
+
+    fn scheduler_phase(&mut self) {
+        // One preemption is allowed per blocked `select`; if the policy
+        // displaces a tenant but *still* cannot place anything, stop —
+        // otherwise a misbehaving policy could spin displacing tenants.
+        // The budget additionally bounds displace→select→displace churn
+        // within one phase: a Policy violating the strict-dominance
+        // contract (preempting a victim it immediately re-selects) would
+        // otherwise livelock here at a fixed timestamp, out of reach of
+        // run()'s max_events backstop. Legitimate chains are bounded by
+        // the component count.
+        let mut preempt_budget = self.partition.components.len().max(8);
+        let mut retry_after_preempt = false;
+        loop {
+            let load = self.device_load();
+            let view = SchedView {
+                now: self.now,
+                frontier: &self.frontier,
+                available: &self.available,
+                platform: self.platform,
+                partition: self.partition,
+                dag: self.dag,
+                est_free: &self.est_free,
+                device_load: &load,
+                deadline: &self.deadline,
+                priority: &self.priority,
+                cost: self.cost,
+            };
+            if let Some((comp, dev)) = self.policy.select(&view) {
+                retry_after_preempt = false;
+                self.dispatch(comp, dev);
+                continue;
+            }
+            if retry_after_preempt
+                || preempt_budget == 0
+                || self.frontier.is_empty()
+                || !self.policy.can_preempt()
+            {
+                break;
+            }
+            // Candidate victims: resident components with commands still
+            // outstanding. A component that only awaits its completion
+            // callbacks frees no compute when displaced — its tenant slot
+            // returns within ~callback_latency anyway, while a displacement
+            // would force a full transfer re-stage.
+            let resident: Vec<ResidentTenant> = self
+                .comp_active_disp
+                .iter()
+                .enumerate()
+                .filter_map(|(c, di)| {
+                    di.filter(|&d| self.dispatches[d].cmds_remaining > 0)
+                        .map(|d| ResidentTenant {
+                            comp: c,
+                            device: self.dispatches[d].device,
+                        })
+                })
+                .collect();
+            if resident.is_empty() {
+                break;
+            }
+            match self.policy.preempt(&view, &resident) {
+                Some(victim) if self.displace(victim) => {
+                    preempt_budget -= 1;
+                    retry_after_preempt = true;
+                }
+                _ => break,
+            }
+        }
+    }
+
+    fn dispatch(&mut self, comp: usize, dev: DeviceId) {
+        assert!(!self.comp_dispatched[comp], "component {comp} re-dispatched");
+        self.comp_dispatched[comp] = true;
+        self.frontier.retain(|&c| c != comp);
+        self.tenants[dev] += 1;
+        if self.tenants[dev] >= self.cfg.max_tenants.max(1) {
+            self.available.retain(|&d| d != dev);
+        }
+        self.comp_device[comp] = dev;
+
+        // setup_cq runs on a child thread: commands are issuable after the
+        // per-command enqueue overhead has elapsed.
+        let mut device = self.platform.device(dev).clone();
+        device.num_queues = self.policy.queues_for(&device);
+        let cq = setup_cq(self.dag, self.partition, comp, &device);
+        let setup = cq.num_commands() as f64 * self.platform.enqueue_overhead;
+        let ready_at = self.now + setup;
+        self.trace.push(Span {
+            label: format!("setup c{comp}"),
+            lane: Lane::Host,
+            start: self.now,
+            end: ready_at,
+            cmd: None,
+            kernel: None,
+        });
+
+        // Commit an EFT estimate for HEFT's est_free bookkeeping. Under
+        // multi-tenancy the device backlog accumulates across residents.
+        let solo: f64 = self.partition.components[comp]
+            .kernels
+            .iter()
+            .map(|&k| self.cost.exec_time(&self.dag.kernels[k], &device))
+            .sum();
+        let transfers: f64 = cq
+            .commands
+            .iter()
+            .filter_map(|c| c.transfer_buffer())
+            .map(|b| self.platform.transfer_time(dev, self.dag.buffers[b].size_bytes))
+            .sum();
+        let est_committed = solo + transfers + self.platform.callback_latency;
+        self.est_free[dev] = self.est_free[dev].max(ready_at) + est_committed;
+
+        let mut kernel_cmds_left: Vec<(KernelId, usize)> = Vec::new();
+        for c in &cq.commands {
+            match kernel_cmds_left.iter_mut().find(|(k, _)| *k == c.kernel) {
+                Some((_, n)) => *n += 1,
+                None => kernel_cmds_left.push((c.kernel, 1)),
+            }
+        }
+        let cb_kernels = self.partition.callback_kernels(self.dag, comp);
+        let async_kernels = self.partition.async_callback_kernels(self.dag, comp);
+        let d = Dispatch {
+            state: vec![CmdState::Pending; cq.num_commands()],
+            queue_next: vec![0; cq.queues.len()],
+            cmds_remaining: cq.num_commands(),
+            kernel_cmds_left,
+            callbacks_left: cb_kernels.len(),
+            cb_kernels,
+            async_kernels,
+            cq,
+            device: dev,
+            ready_at,
+            cancelled: false,
+            est_committed,
+        };
+        let idx = self.dispatches.len();
+        self.dispatches.push(d);
+        self.comp_active_disp[comp] = Some(idx);
+        self.push_ev(ready_at, EvKind::DispatchReady(idx));
+    }
+
+    /// Preempt `victim` at command-queue granularity: kernels that already
+    /// completed stay completed (their callbacks still unblock successors),
+    /// running kernels are stopped with their progress credited to
+    /// [`Engine::kernel_frac`] (remaining solo-seconds preserved), queued
+    /// commands are cancelled, the tenant slot is returned, and the
+    /// component re-enters the frontier for a later re-dispatch (which
+    /// re-stages its transfers — the preemption penalty). Returns false if
+    /// `victim` is not currently resident.
+    fn displace(&mut self, victim: usize) -> bool {
+        let Some(di) = self.comp_active_disp.get(victim).copied().flatten() else {
+            return false;
+        };
+        // Stop running kernels of this dispatch, crediting partial work.
+        let mut i = 0;
+        while i < self.runs.len() {
+            if self.runs[i].disp != di {
+                i += 1;
+                continue;
+            }
+            let r = self.runs.swap_remove(i);
+            let device = self.platform.device(r.device);
+            let full = self.cost.exec_time(&self.dag.kernels[r.kernel], device);
+            let done = if full > 0.0 {
+                (1.0 - r.remaining / full).clamp(0.0, 1.0)
+            } else {
+                1.0
+            };
+            self.kernel_frac[r.kernel] = self.kernel_frac[r.kernel].max(done);
+            if self.now > r.started {
+                let name = &self.dag.kernels[r.kernel].name;
+                self.trace.push(Span {
+                    label: format!("{name}{}!", r.kernel),
+                    lane: Lane::Device {
+                        dev: r.device,
+                        slot: r.queue,
+                    },
+                    start: r.started,
+                    end: self.now,
+                    cmd: Some(r.cmd),
+                    kernel: Some(r.kernel),
+                });
+            }
+        }
+        // Drop queued (not yet started) DMA transfers; an in-flight one
+        // finishes physically but its completion is ignored (`cancelled`).
+        for e in &mut self.copy_engines {
+            e.queue.retain(|&(d, _)| d != di);
+        }
+        let dev = self.dispatches[di].device;
+        self.dispatches[di].cancelled = true;
+        self.comp_active_disp[victim] = None;
+        self.comp_dispatched[victim] = false;
+        self.tenants[dev] -= 1;
+        if !self.available.contains(&dev) {
+            self.available.push(dev);
+        }
+        // Roll back the EFT booking made at dispatch (the re-dispatch will
+        // book afresh); partial progress is forfeited with it.
+        self.est_free[dev] = (self.est_free[dev] - self.dispatches[di].est_committed).max(self.now);
+        if self.tenants[dev] == 0 {
+            self.est_free[dev] = self.now;
+        }
+        self.preemptions += 1;
+        self.trace.push(Span {
+            label: format!("preempt c{victim}"),
+            lane: Lane::Host,
+            start: self.now,
+            end: self.now,
+            cmd: None,
+            kernel: None,
+        });
+        self.enter_frontier(victim);
+        true
+    }
+
+    // ------------------------------------------------------------- issuing
+
+    /// Issue every currently eligible command. In-order queues: only each
+    /// queue's head candidate is considered; cross-queue deps must be Done.
+    fn issue_phase(&mut self) {
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            for di in 0..self.dispatches.len() {
+                // §Perf: skip drained, cancelled, or not-yet-ready
+                // dispatches — dynamic policies accumulate one dispatch per
+                // kernel, and scanning finished ones made issue_phase
+                // O(kernels) per event.
+                if self.dispatches[di].cmds_remaining == 0
+                    || self.dispatches[di].cancelled
+                    || self.dispatches[di].ready_at > self.now + EPS
+                {
+                    continue;
+                }
+                for q in 0..self.dispatches[di].cq.queues.len() {
+                    // In-order queue: a command may issue only once every
+                    // earlier command in the same queue has *completed*.
+                    loop {
+                        let d = &self.dispatches[di];
+                        let Some(&cmd) = d.cq.queues[q].get(d.queue_next[q]) else {
+                            break;
+                        };
+                        match d.state[cmd] {
+                            CmdState::Done => {
+                                self.dispatches[di].queue_next[q] += 1;
+                                continue;
+                            }
+                            CmdState::Issued => break, // head still running
+                            CmdState::Pending => {}
+                        }
+                        let deps_ok = d
+                            .cq
+                            .deps_of(cmd)
+                            .iter()
+                            .all(|&dep| d.state[dep] == CmdState::Done);
+                        if !deps_ok || !self.try_issue(di, cmd) {
+                            break;
+                        }
+                        progressed = true;
+                        break; // issued: wait for completion before the next
+                    }
+                }
+            }
+        }
+    }
+
+    /// Attempt to issue one command; false if a resource gate blocks it.
+    fn try_issue(&mut self, di: usize, cmd: CmdId) -> bool {
+        let d = &self.dispatches[di];
+        let dev_id = d.device;
+        let kind = d.cq.commands[cmd].kind;
+        let kernel = d.cq.commands[cmd].kernel;
+        let queue = d.cq.commands[cmd].queue;
+        match kind {
+            CommandKind::NdRange => {
+                // Hardware concurrency cap (Hyper-Q / CPU fission width).
+                let running = self
+                    .runs
+                    .iter()
+                    .filter(|r| r.device == dev_id)
+                    .count();
+                if running >= self.platform.device(dev_id).hw_queues {
+                    return false;
+                }
+                let device = self.platform.device(dev_id);
+                let node = &self.dag.kernels[kernel];
+                // Preempted-and-re-dispatched kernels only owe their
+                // remaining solo-seconds (kernel_frac credits prior runs;
+                // fully finished kernels replay instantly).
+                let full = self.cost.exec_time(node, device);
+                let remaining = full * (1.0 - self.kernel_frac[kernel]).max(0.0);
+                self.runs.push(Run {
+                    disp: di,
+                    cmd,
+                    kernel,
+                    device: dev_id,
+                    queue,
+                    remaining,
+                    occupancy: contention::occupancy(node, device),
+                    started: self.now,
+                });
+                self.dispatches[di].state[cmd] = CmdState::Issued;
+                true
+            }
+            CommandKind::Write { buffer } | CommandKind::Read { buffer } => {
+                self.dispatches[di].state[cmd] = CmdState::Issued;
+                if self.platform.device(dev_id).shares_host_memory {
+                    // Zero-copy map: completes after a token latency, no DMA.
+                    let t = self.now + self.platform.transfer_time(dev_id, 0);
+                    self.push_ev(t, EvKind::TransferDone { disp: di, cmd });
+                } else {
+                    let _ = buffer;
+                    // Route to a DMA engine (one per GPU on scaled platforms).
+                    let e = dev_id % self.copy_engines.len();
+                    self.copy_engines[e].queue.push_back((di, cmd));
+                    self.pump_copy_engine(e);
+                }
+                true
+            }
+        }
+    }
+
+    fn pump_copy_engine(&mut self, e: usize) {
+        if self.copy_engines[e].current.is_some() {
+            return;
+        }
+        let Some((di, cmd)) = self.copy_engines[e].queue.pop_front() else {
+            return;
+        };
+        let d = &self.dispatches[di];
+        let buffer = d.cq.commands[cmd].transfer_buffer().expect("transfer cmd");
+        let bytes = self.dag.buffers[buffer].size_bytes;
+        let dt = self.platform.transfer_time(d.device, bytes);
+        let dir = match d.cq.commands[cmd].kind {
+            CommandKind::Write { .. } => "w",
+            _ => "r",
+        };
+        self.trace.push(Span {
+            label: format!("{dir}{buffer}"),
+            lane: Lane::CopyEngine { idx: e },
+            start: self.now,
+            end: self.now + dt,
+            cmd: Some(cmd),
+            kernel: Some(d.cq.commands[cmd].kernel),
+        });
+        self.copy_engines[e].current = Some((di, cmd));
+        self.push_ev(self.now + dt, EvKind::CopyDone { engine: e });
+    }
+
+    // ---------------------------------------------------------- completion
+
+    fn command_done(&mut self, di: usize, cmd: CmdId) {
+        if self.dispatches[di].cancelled {
+            // Completion belonging to a preempted dispatch (e.g. an
+            // in-flight DMA or a zero-copy map that outlived displacement):
+            // the work is void, the re-dispatch replays it.
+            return;
+        }
+        let d = &mut self.dispatches[di];
+        debug_assert_eq!(d.state[cmd], CmdState::Issued);
+        d.state[cmd] = CmdState::Done;
+        d.cmds_remaining -= 1;
+        self.last_cmd_done = self.last_cmd_done.max(self.now);
+        let kernel = d.cq.commands[cmd].kernel;
+        let entry = d
+            .kernel_cmds_left
+            .iter_mut()
+            .find(|(k, _)| *k == kernel)
+            .expect("kernel tracked");
+        entry.1 -= 1;
+        let kernel_complete = entry.1 == 0;
+        if kernel_complete {
+            let tracked = d.cb_kernels.contains(&kernel);
+            if tracked {
+                let needs_async = d.async_kernels.contains(&kernel);
+                let delay = if needs_async {
+                    // clSetEventCallback path: base thread latency plus host
+                    // starvation while the CPU device crunches kernels
+                    // (Fig. 13(a)): the callback thread waits for a share of
+                    // the largest remaining CPU kernel.
+                    let cpu_remaining = self
+                        .runs
+                        .iter()
+                        .filter(|r| {
+                            self.platform.device(r.device).dtype
+                                == crate::platform::DeviceType::Cpu
+                        })
+                        .map(|r| r.remaining)
+                        .fold(0.0, f64::max);
+                    self.platform.callback_latency
+                        + self.cfg.host_starvation_fraction * cpu_remaining
+                } else {
+                    // Blocking-wait path (no inter-edge reads): the dispatch
+                    // child thread wakes straight out of clFinish — the
+                    // clustering advantage (§5 comparative evaluation).
+                    self.platform.wait_latency
+                };
+                self.push_ev(self.now + delay, EvKind::Callback { disp: di, kernel });
+            } else {
+                // IN(T) kernels finish silently (intra deps only).
+                self.kernel_finished[kernel] = true;
+            }
+        }
+    }
+
+    fn handle_callback(&mut self, di: usize, kernel: KernelId) {
+        // A preempted-and-re-run kernel fires its callback again; only the
+        // first firing may decrement successor dependency counts.
+        let first_completion = !self.kernel_finished[kernel];
+        self.kernel_finished[kernel] = true;
+        let comp = self.dispatches[di].cq.component;
+        if first_completion {
+            // update_task_queue: successors that became ready join F —
+            // unless their request has not arrived yet (serving), in which
+            // case the release event re-examines them.
+            let unblocked = self.unblocks[kernel].clone();
+            for uc in unblocked {
+                // A component is ready when all external producers are done.
+                self.ext_preds_left[uc] -= 1;
+                if self.ext_preds_left[uc] == 0 && !self.comp_dispatched[uc] {
+                    if self.release[uc] > self.now + EPS {
+                        self.push_ev(self.release[uc], EvKind::Release { comp: uc });
+                    } else {
+                        self.enter_frontier(uc);
+                    }
+                }
+            }
+        }
+        if self.dispatches[di].cancelled {
+            // Callback of a displaced dispatch: the tenant slot was already
+            // returned at displacement; completed-kernel bookkeeping above
+            // still counts (command-queue-granularity preemption).
+            return;
+        }
+        // return_device (one tenant slot) once the component has finished.
+        let d = &mut self.dispatches[di];
+        d.callbacks_left -= 1;
+        if d.callbacks_left == 0 {
+            debug_assert_eq!(d.cmds_remaining, 0, "callbacks after all commands");
+            let dev = d.device;
+            self.tenants[dev] -= 1;
+            if !self.available.contains(&dev) {
+                self.available.push(dev);
+            }
+            if self.tenants[dev] == 0 {
+                self.est_free[dev] = self.now;
+            }
+            self.comp_finish[comp] = self.now;
+            self.comp_active_disp[comp] = None;
+            self.comps_done += 1;
+        }
+    }
+
+    /// Add a ready, released component to the rank-sorted (descending)
+    /// frontier. Binary-search insertion keeps the invariant in O(log F)
+    /// compares + one shift, instead of the former full `sort_by` per
+    /// callback (a named ROADMAP perf item for large merged DAGs). Equal
+    /// ranks insert after existing entries, matching the stable sort the
+    /// previous implementation used.
+    fn enter_frontier(&mut self, comp: usize) {
+        if self.comp_dispatched[comp] || self.frontier.contains(&comp) {
+            return;
+        }
+        let rank = self.comp_rank[comp];
+        let ranks = &self.comp_rank;
+        let idx = self
+            .frontier
+            .partition_point(|&c| ranks[c].total_cmp(&rank).is_ge());
+        self.frontier.insert(idx, comp);
+    }
+
+    // ------------------------------------------------------------- kernels
+
+    /// Per-run speed multipliers (relative to solo execution) per device.
+    fn run_rates(&self) -> Vec<f64> {
+        let mut rates = vec![1.0; self.runs.len()];
+        for dev in 0..self.platform.devices.len() {
+            let idxs: Vec<usize> = (0..self.runs.len())
+                .filter(|&i| self.runs[i].device == dev)
+                .collect();
+            if idxs.is_empty() {
+                continue;
+            }
+            let us: Vec<f64> = idxs.iter().map(|&i| self.runs[i].occupancy).collect();
+            let speeds = contention::shared_speeds_with(&us, self.cfg.contention_efficiency);
+            for (j, &i) in idxs.iter().enumerate() {
+                rates[i] = speeds[j] / us[j];
+            }
+        }
+        rates
+    }
+
+    fn next_kernel_completion(&self, rates: &[f64]) -> Option<f64> {
+        self.runs
+            .iter()
+            .zip(rates)
+            .map(|(r, &rate)| self.now + r.remaining / rate)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    // ------------------------------------------------------------ main loop
+
+    fn run(mut self) -> Result<SimResult> {
+        let total = self.partition.components.len();
+        // Withheld components (request not yet arrived) wake via events.
+        for c in 0..total {
+            if self.ext_preds_left[c] == 0 && self.release[c] > 0.0 {
+                self.push_ev(self.release[c], EvKind::Release { comp: c });
+            }
+        }
+        let mut events = 0usize;
+        while self.comps_done < total {
+            events += 1;
+            if events > self.cfg.max_events {
+                return Err(Error::Sched(format!(
+                    "simulation exceeded {} events (deadlock?)",
+                    self.cfg.max_events
+                )));
+            }
+            self.scheduler_phase();
+            self.issue_phase();
+            if self.comps_done == total {
+                break;
+            }
+
+            let rates = self.run_rates();
+            let t_kernel = self.next_kernel_completion(&rates);
+            let t_heap = self.heap.peek().map(|Reverse(e)| e.t);
+            let t_next = match (t_kernel, t_heap) {
+                (Some(a), Some(b)) => a.min(b),
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (None, None) => {
+                    return Err(Error::Sched(
+                        "simulation stalled: no events, no running kernels".into(),
+                    ))
+                }
+            };
+            debug_assert!(t_next >= self.now - EPS, "time went backwards");
+            let dt = (t_next - self.now).max(0.0);
+
+            // Advance all running kernels by dt at their current rates.
+            for (r, &rate) in self.runs.iter_mut().zip(&rates) {
+                r.remaining -= dt * rate;
+            }
+            self.now = t_next;
+
+            // Retire kernels that finished exactly now.
+            let mut finished: Vec<usize> = (0..self.runs.len())
+                .filter(|&i| self.runs[i].remaining <= 1e-9)
+                .collect();
+            finished.sort_unstable_by(|a, b| b.cmp(a));
+            for i in finished {
+                let r = self.runs.swap_remove(i);
+                self.kernel_frac[r.kernel] = 1.0;
+                let name = &self.dag.kernels[r.kernel].name;
+                self.trace.push(Span {
+                    label: format!("{name}{}", r.kernel),
+                    lane: Lane::Device {
+                        dev: r.device,
+                        slot: r.queue,
+                    },
+                    start: r.started,
+                    end: self.now,
+                    cmd: Some(r.cmd),
+                    kernel: Some(r.kernel),
+                });
+                self.command_done(r.disp, r.cmd);
+            }
+
+            // Handle all heap events due now.
+            while let Some(Reverse(e)) = self.heap.peek() {
+                if e.t > self.now + EPS {
+                    break;
+                }
+                let Reverse(e) = self.heap.pop().unwrap();
+                match e.kind {
+                    EvKind::DispatchReady(_) => { /* issue phase picks it up */ }
+                    EvKind::TransferDone { disp, cmd } => self.command_done(disp, cmd),
+                    EvKind::CopyDone { engine } => {
+                        let (di, cmd) = self.copy_engines[engine]
+                            .current
+                            .take()
+                            .expect("engine busy");
+                        self.command_done(di, cmd);
+                        self.pump_copy_engine(engine);
+                    }
+                    EvKind::Callback { disp, kernel } => self.handle_callback(disp, kernel),
+                    EvKind::Release { comp } => {
+                        if self.ext_preds_left[comp] == 0 {
+                            self.enter_frontier(comp);
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(SimResult {
+            makespan: self.last_cmd_done,
+            trace: self.trace,
+            policy: self.policy.name().to_string(),
+            component_finish: self.comp_finish,
+            component_device: self.comp_device,
+            preemptions: self.preemptions,
+        })
+    }
+}
+

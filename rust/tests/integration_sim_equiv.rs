@@ -1,0 +1,272 @@
+//! ISSUE acceptance: the indexed, allocation-free engine must yield
+//! **byte-identical** `SimResult`s (makespan, per-component finish/device,
+//! preemption count) to the verbatim pre-refactor engine
+//! (`pyschedcl::sim::reference`) on seeded serve streams — including EDF
+//! with preemption — and the batch-block + template-cache serving pipeline
+//! must reproduce the old admitted-order pipeline bit-for-bit on
+//! single-signature streams (where the old assembly order is well-defined
+//! to be identical).
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::platform::Platform;
+use pyschedcl::sched::{Clustering, Edf, LeastLoaded, Policy};
+use pyschedcl::serve::{
+    batch_requests, merge_apps, poisson_arrivals, serve_sim, ServeConfig, ServeRequest, Workload,
+};
+use pyschedcl::sim::reference::simulate_served_ref;
+use pyschedcl::sim::{simulate_served, CompMeta, SimConfig, SimResult};
+
+fn assert_bit_identical(new: &SimResult, old: &SimResult, what: &str) {
+    assert_eq!(
+        new.makespan.to_bits(),
+        old.makespan.to_bits(),
+        "{what}: makespan diverged ({} vs {})",
+        new.makespan,
+        old.makespan
+    );
+    assert_eq!(new.preemptions, old.preemptions, "{what}: preemption count");
+    assert_eq!(
+        new.component_device, old.component_device,
+        "{what}: component device placement"
+    );
+    let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+    assert_eq!(
+        bits(&new.component_finish),
+        bits(&old.component_finish),
+        "{what}: component finish times"
+    );
+}
+
+/// Run both engines on one merged serve input and compare bitwise.
+fn both(
+    dag: &pyschedcl::graph::Dag,
+    part: &pyschedcl::graph::Partition,
+    platform: &Platform,
+    mk_policy: impl Fn() -> Box<dyn Policy>,
+    cfg: &SimConfig,
+    meta: &[CompMeta],
+    what: &str,
+) -> (SimResult, SimResult) {
+    let mut p_new = mk_policy();
+    let new = simulate_served(dag, part, platform, &PaperCost, p_new.as_mut(), cfg, meta)
+        .expect("optimized engine");
+    let mut p_old = mk_policy();
+    let old = simulate_served_ref(dag, part, platform, &PaperCost, p_old.as_mut(), cfg, meta)
+        .expect("reference engine");
+    assert_bit_identical(&new, &old, what);
+    (new, old)
+}
+
+/// Stream 1: seeded Poisson head stream, clustering, multi-tenant GPU+CPU.
+#[test]
+fn equivalence_poisson_head_stream_clustering() {
+    let arrivals = poisson_arrivals(7, 16, 2000.0).unwrap();
+    let apps: Vec<_> = arrivals
+        .iter()
+        .map(|_| Workload::Head { beta: 64 }.instantiate().unwrap())
+        .collect();
+    let merged = merge_apps(&apps).unwrap();
+    let meta: Vec<CompMeta> = (0..merged.partition.components.len())
+        .map(|c| {
+            // One component per head app: component c belongs to request c.
+            CompMeta {
+                release: arrivals[c],
+                ..CompMeta::default()
+            }
+        })
+        .collect();
+    let platform = Platform::paper_testbed(3, 1);
+    let cfg = SimConfig {
+        max_tenants: 4,
+        ..SimConfig::default()
+    };
+    let (new, _) = both(
+        &merged.dag,
+        &merged.partition,
+        &platform,
+        || Box::new(Clustering),
+        &cfg,
+        &meta,
+        "poisson head stream",
+    );
+    assert!(new.component_finish.iter().all(|t| t.is_finite()));
+}
+
+/// Stream 2: mixed workloads with deadlines/priorities on a 2-GPU scaled
+/// platform under least-loaded.
+#[test]
+fn equivalence_mixed_stream_least_loaded() {
+    let arrivals = poisson_arrivals(11, 12, 3000.0).unwrap();
+    let workloads = [
+        Workload::Head { beta: 64 },
+        Workload::Mm2 { beta: 64 },
+        Workload::Layer {
+            heads: 2,
+            beta: 64,
+            h_cpu: 0,
+        },
+    ];
+    let apps: Vec<_> = (0..12)
+        .map(|i| workloads[i % 3].instantiate().unwrap())
+        .collect();
+    let merged = merge_apps(&apps).unwrap();
+    let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
+    for (i, r) in merged.component_ranges.iter().enumerate() {
+        for c in r.clone() {
+            meta[c].release = arrivals[i];
+            meta[c].deadline = arrivals[i] + 0.25;
+            meta[c].priority = (i % 2) as u32;
+        }
+    }
+    let platform = Platform::scaled(2, 1, 3, 1);
+    let cfg = SimConfig {
+        max_tenants: 2,
+        ..SimConfig::default()
+    };
+    both(
+        &merged.dag,
+        &merged.partition,
+        &platform,
+        || Box::new(LeastLoaded),
+        &cfg,
+        &meta,
+        "mixed stream",
+    );
+}
+
+/// Stream 3: EDF with a genuine preemption — an urgent late arrival
+/// displaces a deadline-free resident on an exclusive GPU. Both engines
+/// must preempt, and everything must match bitwise.
+#[test]
+fn equivalence_edf_stream_with_preemption() {
+    let apps: Vec<_> = (0..2)
+        .map(|_| Workload::Head { beta: 256 }.instantiate().unwrap())
+        .collect();
+    let merged = merge_apps(&apps).unwrap();
+    let platform = Platform::paper_testbed(3, 0);
+    let cfg = SimConfig::default(); // max_tenants = 1: exclusive GPU
+    // Calibrate in solo units so the scenario survives cost-model changes.
+    let solo = simulate_served(
+        &apps[0].0,
+        &apps[0].1,
+        &platform,
+        &PaperCost,
+        &mut Clustering,
+        &cfg,
+        &[CompMeta::default()],
+    )
+    .unwrap()
+    .makespan;
+    let meta = [
+        CompMeta::default(),
+        CompMeta {
+            release: 0.05 * solo,
+            deadline: 1.5 * solo,
+            priority: 1,
+        },
+    ];
+    let (new, old) = both(
+        &merged.dag,
+        &merged.partition,
+        &platform,
+        || Box::new(Edf),
+        &cfg,
+        &meta,
+        "edf preemption stream",
+    );
+    assert!(new.preemptions >= 1, "scenario must actually preempt");
+    assert_eq!(new.preemptions, old.preemptions);
+}
+
+/// Pipeline-level equivalence: on a single-signature stream the batch-block
+/// assembly appends components in exactly the old admitted order, so the
+/// whole optimized `serve_sim` (template cache included) must reproduce an
+/// old-style pipeline — admitted-order `merge_apps`, old-style meta, and
+/// the *reference* engine — bit-for-bit, per request.
+#[test]
+fn serve_sim_matches_old_pipeline_on_single_signature_stream() {
+    let requests: Vec<ServeRequest> = poisson_arrivals(42, 20, 2500.0)
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let mut r = ServeRequest::new(i, t, Workload::Head { beta: 64 });
+            r.deadline = Some(0.5);
+            r.priority = (i % 3) as u32;
+            r
+        })
+        .collect();
+    let platform = Platform::paper_testbed(3, 1);
+    let cfg = ServeConfig::default();
+
+    // New pipeline.
+    let report = serve_sim(&requests, &platform, &PaperCost, &mut Edf, &cfg).unwrap();
+    assert_eq!(report.outcomes.len(), 20);
+    assert!(
+        report.template_cache_misses > 0,
+        "cache must have built blocks"
+    );
+
+    // Old pipeline, replayed by hand: admission order (arrival, priority
+    // desc, id), per-request instantiate, admitted-order merge, reference
+    // engine.
+    let mut admitted = requests.clone();
+    admitted.sort_by(|a, b| {
+        a.arrival
+            .total_cmp(&b.arrival)
+            .then_with(|| b.priority.cmp(&a.priority))
+            .then_with(|| a.id.cmp(&b.id))
+    });
+    let apps: Vec<_> = admitted
+        .iter()
+        .map(|r| r.workload.instantiate().unwrap())
+        .collect();
+    let batches = batch_requests(&admitted, cfg.batch_window);
+    let merged = merge_apps(&apps).unwrap();
+    let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
+    for b in &batches {
+        for &m in &b.members {
+            for c in merged.component_ranges[m].clone() {
+                meta[c].release = b.release;
+            }
+        }
+    }
+    for (i, req) in admitted.iter().enumerate() {
+        for c in merged.component_ranges[i].clone() {
+            meta[c].deadline = req.arrival + req.deadline.unwrap();
+            meta[c].priority = req.priority;
+        }
+    }
+    let mut sim_cfg = cfg.sim.clone();
+    sim_cfg.max_tenants = cfg.tenancy;
+    let old = simulate_served_ref(
+        &merged.dag,
+        &merged.partition,
+        &platform,
+        &PaperCost,
+        &mut Edf,
+        &sim_cfg,
+        &meta,
+    )
+    .unwrap();
+
+    assert_eq!(report.makespan.to_bits(), old.makespan.to_bits());
+    assert_eq!(report.preemptions, old.preemptions);
+    for (i, req) in admitted.iter().enumerate() {
+        let finish = merged.component_ranges[i]
+            .clone()
+            .map(|c| old.component_finish[c])
+            .fold(0.0f64, f64::max);
+        let outcome = report
+            .outcomes
+            .iter()
+            .find(|o| o.id == req.id)
+            .expect("request served");
+        assert_eq!(
+            outcome.finish.to_bits(),
+            finish.to_bits(),
+            "request {} finish diverged",
+            req.id
+        );
+    }
+}
