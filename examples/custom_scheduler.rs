@@ -13,7 +13,7 @@
 
 use pyschedcl::cost::PaperCost;
 use pyschedcl::platform::{DeviceId, DeviceType, Platform};
-use pyschedcl::sched::{Clustering, Eager, Policy, SchedView};
+use pyschedcl::sched::{Clustering, Eager, Policy, SchedState};
 use pyschedcl::sim::{simulate, SimConfig};
 use pyschedcl::transformer::{cluster_by_head, transformer_dag};
 
@@ -28,29 +28,25 @@ impl Policy for GpuGreedySpill {
         "gpu-greedy-spill"
     }
 
-    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
-        for &comp in view.frontier {
-            // Prefer an idle GPU.
-            if let Some(&gpu) = view
-                .available
-                .iter()
-                .find(|&&d| view.platform.device(d).dtype == DeviceType::Gpu)
-            {
-                return Some((comp, gpu));
-            }
-            // GPU busy: consider spilling to an idle CPU.
-            if let Some(&cpu) = view
-                .available
-                .iter()
-                .find(|&&d| view.platform.device(d).dtype == DeviceType::Cpu)
-            {
-                let cpu_t = view.component_time(comp, view.platform.device(cpu));
-                let gpu_dev = &view.platform.devices[0];
-                let gpu_wait = (view.est_free[gpu_dev.id] - view.now).max(0.0);
-                let gpu_t = view.component_time(comp, gpu_dev);
-                if cpu_t < self.spill_factor * (gpu_wait + gpu_t) {
-                    return Some((comp, cpu));
-                }
+    fn select(&mut self, state: &mut SchedState) -> Option<(usize, DeviceId)> {
+        // Prefer an idle GPU for the head of the rank-ordered frontier —
+        // an O(log F) head query on the indexed scheduler state.
+        if let Some(gpu) = state.first_available_of(DeviceType::Gpu) {
+            let comp = state.rank_head()?;
+            return Some((comp, gpu));
+        }
+        // GPU busy: consider spilling to an idle CPU. `frontier_ranked`
+        // is the documented O(F log F) escape hatch for custom policies
+        // that genuinely need to walk the whole frontier.
+        let cpu = state.first_available_of(DeviceType::Cpu)?;
+        let platform = state.platform;
+        let gpu_dev = &platform.devices[0];
+        for comp in state.frontier_ranked() {
+            let cpu_t = state.component_time(comp, platform.device(cpu));
+            let gpu_wait = (state.est_free[gpu_dev.id] - state.now).max(0.0);
+            let gpu_t = state.component_time(comp, gpu_dev);
+            if cpu_t < self.spill_factor * (gpu_wait + gpu_t) {
+                return Some((comp, cpu));
             }
         }
         None

@@ -1,0 +1,169 @@
+//! Bench SERVE-OVERLOAD — the scaling proof for the event-driven
+//! scheduler core (ISSUE 5): a sustained-overload stream (arrival rate ≫
+//! service capacity, so thousands of requests are resident in the
+//! frontier at once) served with the deadline-aware `edf` policy, the
+//! worst case for the pre-indexed O(frontier)-per-select policies.
+//! Emits `BENCH_serve_overload.json` (wall seconds, bench req/s,
+//! preemption/rejection decision counts) which `pyschedcl bench-check`
+//! gates against `ci/bench_baselines/BENCH_serve_overload.json`.
+//!
+//! A smaller slice (1k requests) additionally times the verbatim
+//! pre-refactor stack — reference engine + view-based `sched::reference`
+//! EDF, per-request instantiate + admitted-order merge — against the
+//! indexed pipeline, so the policy-side speedup is measured (not
+//! asserted) on every CI run, and the two slices are checked
+//! bit-identical (same makespan) so the comparison is between equal work.
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::json::Json;
+use pyschedcl::platform::Platform;
+use pyschedcl::sched::{reference, Edf};
+use pyschedcl::serve::{
+    batch_requests, merge_apps, poisson_arrivals, serve_sim, ServeConfig, ServeRequest, Workload,
+};
+use pyschedcl::sim::reference::simulate_served_ref;
+use pyschedcl::sim::CompMeta;
+use std::time::Instant;
+
+/// Arrival rate far above the single-GPU service capacity: the whole
+/// stream lands within a fraction of a second of virtual time, so the
+/// frontier holds a sustained multi-thousand-entry backlog.
+const RATE: f64 = 50_000.0;
+/// Generous deadline budget (seconds): everything passes laxity
+/// admission, every component carries a finite deadline, and the EDF
+/// urgency heap is exercised on every decision.
+const BUDGET: f64 = 10.0;
+
+fn stream(n: usize, seed: u64) -> Vec<ServeRequest> {
+    poisson_arrivals(seed, n, RATE)
+        .expect("valid rate")
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let mut r = ServeRequest::new(i, t, Workload::Head { beta: 64 });
+            r.deadline = Some(BUDGET);
+            if i % 3 == 0 {
+                r.priority = 1;
+            }
+            r
+        })
+        .collect()
+}
+
+/// The pre-PR-5 stack, replayed by hand: admission order, per-request
+/// instantiate, admitted-order `merge_apps`, reference engine driving the
+/// view-based reference EDF (O(frontier) per select). Returns (wall
+/// seconds, sim makespan).
+fn old_stack_wall(requests: &[ServeRequest], platform: &Platform, cfg: &ServeConfig) -> (f64, f64) {
+    let t0 = Instant::now();
+    let mut admitted = requests.to_vec();
+    admitted.sort_by(|a, b| {
+        a.arrival
+            .total_cmp(&b.arrival)
+            .then_with(|| b.priority.cmp(&a.priority))
+            .then_with(|| a.id.cmp(&b.id))
+    });
+    let apps: Vec<_> = admitted
+        .iter()
+        .map(|r| r.workload.instantiate().expect("valid workload"))
+        .collect();
+    let batches = batch_requests(&admitted, cfg.batch_window);
+    let merged = merge_apps(&apps).expect("merge");
+    let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
+    for b in &batches {
+        for &m in &b.members {
+            for c in merged.component_ranges[m].clone() {
+                meta[c].release = b.release;
+            }
+        }
+    }
+    for (i, req) in admitted.iter().enumerate() {
+        for c in merged.component_ranges[i].clone() {
+            meta[c].deadline = req.arrival + req.deadline.expect("budget set");
+            meta[c].priority = req.priority;
+        }
+    }
+    let mut sim_cfg = cfg.sim.clone();
+    sim_cfg.max_tenants = cfg.tenancy;
+    let r = simulate_served_ref(
+        &merged.dag,
+        &merged.partition,
+        platform,
+        &PaperCost,
+        &mut reference::Edf,
+        &sim_cfg,
+        &meta,
+    )
+    .expect("reference sim");
+    (t0.elapsed().as_secs_f64(), r.makespan)
+}
+
+fn main() {
+    let n = 6_000usize;
+    let platform = Platform::scaled(1, 1, 3, 1); // one GPU: rate >> capacity
+    let cfg = ServeConfig::default(); // tenancy 4, 2 ms batch window
+
+    // Before/after slice: 1k requests through the old and new stacks.
+    // Single-signature stream, so both pipelines assemble the same merged
+    // application — the makespans must agree bitwise (equal work).
+    let slice = stream(1_000, 23);
+    let t0 = Instant::now();
+    let slice_report = serve_sim(&slice, &platform, &PaperCost, &mut Edf, &cfg)
+        .expect("slice serve");
+    let new_slice_wall = t0.elapsed().as_secs_f64();
+    let (old_slice_wall, old_makespan) = old_stack_wall(&slice, &platform, &cfg);
+    assert_eq!(
+        slice_report.makespan.to_bits(),
+        old_makespan.to_bits(),
+        "indexed and reference stacks simulated different schedules"
+    );
+    println!(
+        "1k-slice before/after (edf, overload): old {:.2}s -> new {:.2}s ({:.1}x)",
+        old_slice_wall,
+        new_slice_wall,
+        old_slice_wall / new_slice_wall.max(1e-9)
+    );
+
+    // The gated overload run: 6k resident-frontier requests, indexed EDF.
+    let requests = stream(n, 23);
+    let t0 = Instant::now();
+    let report = serve_sim(&requests, &platform, &PaperCost, &mut Edf, &cfg)
+        .expect("overload serve");
+    let wall = t0.elapsed().as_secs_f64();
+    let bench_rps = n as f64 / wall.max(1e-9);
+    println!(
+        "serve-overload: {} requests / 1 GPU in {:.2}s wall -> {:.0} req/s (bench), \
+         sim makespan {:.2}s, miss rate {:.3}, preemptions {}, rejected {}",
+        report.outcomes.len(),
+        wall,
+        bench_rps,
+        report.makespan,
+        report.deadline_miss_rate,
+        report.preemptions,
+        report.rejected.len()
+    );
+
+    let json = Json::obj(vec![
+        ("schema", Json::str("pyschedcl-serve-overload-bench-v1")),
+        ("requests", Json::num(n as f64)),
+        ("gpus", Json::num(1.0)),
+        ("arrival_rate_rps", Json::num(RATE)),
+        ("wall_seconds", Json::num(wall)),
+        ("bench_requests_per_second", Json::num(bench_rps)),
+        ("old_policy_1k_wall_seconds", Json::num(old_slice_wall)),
+        ("new_policy_1k_wall_seconds", Json::num(new_slice_wall)),
+        (
+            "policy_speedup_1k",
+            Json::num(old_slice_wall / new_slice_wall.max(1e-9)),
+        ),
+        ("sim", report.to_json()),
+    ]);
+    // Cargo runs benches with cwd = the package root (rust/); the CI gate
+    // and artifact upload expect the JSON at the repository root.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_serve_overload.json"))
+        .unwrap_or_else(|| "BENCH_serve_overload.json".into());
+    std::fs::write(&path, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {}", path.display());
+}

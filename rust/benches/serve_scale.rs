@@ -59,7 +59,7 @@ fn old_pipeline_wall(requests: &[ServeRequest], platform: &Platform, cfg: &Serve
         &merged.partition,
         platform,
         &PaperCost,
-        &mut LeastLoaded,
+        &mut pyschedcl::sched::reference::LeastLoaded,
         &sim_cfg,
         &meta,
     )

@@ -16,7 +16,7 @@ use crate::graph::{BufferId, Dag, Partition};
 use crate::platform::{DeviceId, Platform};
 use crate::queue::{setup_cq, CommandKind};
 use crate::runtime::Runtime;
-use crate::sched::{component_ranks, Policy, SchedView};
+use crate::sched::{Policy, SchedState};
 use crate::sim::CompMeta;
 use crate::trace::{Lane, Span, Trace};
 use std::collections::HashMap;
@@ -34,12 +34,13 @@ pub struct ExecReport {
     pub store: BufferStore,
 }
 
-struct State {
-    frontier: Vec<usize>,
-    available: Vec<DeviceId>,
-    est_free: Vec<f64>,
-    /// Components currently resident per device (multi-tenant serving).
-    tenants: Vec<usize>,
+struct State<'a> {
+    /// The shared scheduler core — the *same* incrementally indexed
+    /// [`SchedState`] the simulator drives (PR 5): frontier buckets,
+    /// availability, tenancy, `est_free`, and the resident-fraction
+    /// device-load signal. Policies query it in O(log frontier) under the
+    /// scheduler lock instead of scanning a per-select view.
+    sched: SchedState<'a>,
     ext_preds_left: Vec<usize>,
     comp_dispatched: Vec<bool>,
     comp_device: Vec<DeviceId>,
@@ -50,13 +51,14 @@ struct State {
 struct Shared<'a> {
     dag: &'a Dag,
     partition: &'a Partition,
-    state: Mutex<State>,
+    state: Mutex<State<'a>>,
     cv: Condvar,
     store: BufferStore,
     trace: Mutex<Trace>,
     t0: Instant,
     unblocks: Vec<Vec<usize>>,
-    comp_rank: Vec<f64>,
+    /// Per-device resident cap (for the resident-fraction load signal).
+    tenancy: usize,
 }
 
 impl<'a> Shared<'a> {
@@ -118,7 +120,7 @@ pub fn execute_dag_multi(
 /// Serving variant of [`execute_dag_multi`]: per-component [`CompMeta`]
 /// (absolute deadline + priority, **on the caller's clock starting at this
 /// call** — the serving loop re-bases per batch) is threaded into the
-/// [`SchedView`] every `select` sees, so deadline-aware policies (`edf`)
+/// shared [`SchedState`] every `select` queries, so deadline-aware policies (`edf`)
 /// order real dispatch by urgency exactly as they do in the simulator.
 /// `CompMeta::release` is ignored here: arrival pacing is the serving
 /// loop's job (`--pacing open` sleeps until each batch's release instant),
@@ -171,33 +173,24 @@ pub fn execute_dag_served(
             }
         }
     }
-    let comp_rank = component_ranks(dag, partition, platform, cost);
-    let mut frontier: Vec<usize> =
-        (0..ncomp).filter(|&c| ext_preds_left[c] == 0).collect();
-    frontier.sort_by(|&a, &b| comp_rank[b].total_cmp(&comp_rank[a]));
-    let available: Vec<DeviceId> = platform
-        .devices
-        .iter()
-        .filter(|d| d.num_queues > 0)
-        .map(|d| d.id)
-        .collect();
-    if available.is_empty() {
-        return Err(Error::Sched("no device has command queues".into()));
-    }
-
-    // Serving metadata for every SchedView the schedule loop builds:
+    // Serving metadata threaded into the shared scheduler state:
     // deadline-aware policies order real dispatch by urgency (preemption
     // stays sim-only — OS threads cannot be displaced).
     let deadline: Vec<f64> = meta.iter().map(|m| m.deadline).collect();
     let priority: Vec<u32> = meta.iter().map(|m| m.priority).collect();
+    let mut sched = SchedState::new(dag, partition, platform, cost, tenancy, deadline, priority)?;
+    // Initially ready components enter in ascending id order — FIFO seqs
+    // reproduce the stable rank sort the pre-indexed frontier used.
+    for c in 0..ncomp {
+        if ext_preds_left[c] == 0 {
+            sched.on_ready(c);
+        }
+    }
     let shared = Shared {
         dag,
         partition,
         state: Mutex::new(State {
-            frontier,
-            available,
-            est_free: vec![0.0; platform.devices.len()],
-            tenants: vec![0; platform.devices.len()],
+            sched,
             ext_preds_left,
             comp_dispatched: vec![false; ncomp],
             comp_device: vec![usize::MAX; ncomp],
@@ -209,7 +202,7 @@ pub fn execute_dag_served(
         trace: Mutex::new(Trace::default()),
         t0: Instant::now(),
         unblocks,
-        comp_rank,
+        tenancy,
     };
     for (&b, data) in inputs {
         shared.store.set_host(b, data.clone());
@@ -227,34 +220,16 @@ pub fn execute_dag_served(
                 break;
             }
             let selection = {
-                // Cross-DAG load: resident-component fraction per device.
-                let load: Vec<f64> = st
-                    .tenants
-                    .iter()
-                    .map(|&t| t as f64 / tenancy as f64)
-                    .collect();
-                let view = SchedView {
-                    now: shared.now(),
-                    frontier: &st.frontier,
-                    available: &st.available,
-                    platform,
-                    partition,
-                    dag,
-                    est_free: &st.est_free,
-                    device_load: &load,
-                    deadline: &deadline,
-                    priority: &priority,
-                    cost,
-                };
-                policy.select(&view)
+                st.sched.now = shared.now();
+                policy.select(&mut st.sched)
             };
             match selection {
                 Some((comp, dev)) => {
-                    st.frontier.retain(|&c| c != comp);
-                    st.tenants[dev] += 1;
-                    if st.tenants[dev] >= tenancy {
-                        st.available.retain(|&d| d != dev);
-                    }
+                    // Frontier exit + tenant/availability accounting, then
+                    // the resident-fraction cross-DAG load signal.
+                    st.sched.on_dispatch(comp, dev);
+                    let frac = st.sched.tenants[dev] as f64 / tenancy as f64;
+                    st.sched.device_load[dev] = frac;
                     st.comp_dispatched[comp] = true;
                     st.comp_device[comp] = dev;
                     // EFT bookkeeping for HEFT; the backlog accumulates
@@ -265,7 +240,7 @@ pub fn execute_dag_served(
                         .iter()
                         .map(|&k| cost.exec_time(&dag.kernels[k], device))
                         .sum();
-                    st.est_free[dev] = st.est_free[dev].max(shared.now()) + solo;
+                    st.sched.est_free[dev] = st.sched.est_free[dev].max(shared.now()) + solo;
                     drop(st);
                     let sh = &shared;
                     let pf = platform;
@@ -387,18 +362,15 @@ fn run_component(
                 for &uc in &shared.unblocks[k] {
                     st.ext_preds_left[uc] -= 1;
                     if st.ext_preds_left[uc] == 0 && !st.comp_dispatched[uc] {
-                        st.frontier.push(uc);
+                        st.sched.on_ready(uc);
                     }
                 }
             }
-            let ranks = &shared.comp_rank;
-            st.frontier.sort_by(|&a, &b| ranks[b].total_cmp(&ranks[a]));
-            st.tenants[dev] -= 1;
-            if !st.available.contains(&dev) {
-                st.available.push(dev);
-            }
-            if st.tenants[dev] == 0 {
-                st.est_free[dev] = shared.now();
+            st.sched.on_complete(dev);
+            let frac = st.sched.tenants[dev] as f64 / shared.tenancy as f64;
+            st.sched.device_load[dev] = frac;
+            if st.sched.tenants[dev] == 0 {
+                st.sched.est_free[dev] = shared.now();
             }
             st.comps_done += 1;
             shared.cv.notify_all();

@@ -21,6 +21,7 @@
 //!                 [--deadline-tight-every K]
 //!                 [--mode sim|real] [--pacing closed|open] [--prewarm]
 //!                 [--admission-laxity on|off]
+//!                 [--autoscale-target F] [--autoscale-max-gpus N]
 //!                 [--json OUT]                      multi-DAG serving
 //! pyschedcl bench-check --baseline F --current F [--tolerance 0.15]
 //!                 [--update]       CI bench-regression gate
@@ -31,7 +32,11 @@
 //! latency budget, and `--deadline-tight-ms`/`--deadline-tight-every` mark
 //! every K-th request as a tight-deadline, priority-1 tenant. Requests
 //! whose laxity is already negative at arrival are rejected at admission
-//! (`--admission-laxity off` disables). On the real path `--pacing open`
+//! (`--admission-laxity off` disables). `--autoscale-target F` (sim only)
+//! loops `serve_sim` over `Platform::scaled` GPU counts (up to
+//! `--autoscale-max-gpus`, default 8) until the deadline-miss rate is ≤ F,
+//! reports the chosen scale, and serves the comparison there — the
+//! SLO-aware capacity-planning experiment. On the real path `--pacing open`
 //! makes the serving loop sleep until each batch's nominal release instant
 //! (open-loop latency measurement) and `--prewarm` compiles every AOT
 //! artifact before the epoch.
@@ -382,7 +387,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
 
-    let platform = Platform::scaled(
+    let mut platform = Platform::scaled(
         args.usize_or("gpus", 1),
         args.usize_or("cpus", 1),
         args.usize_or("queues-gpu", 3),
@@ -442,6 +447,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
 
     if args.get("mode") == Some("real") {
+        if args.get("autoscale-target").is_some() {
+            return Err(Error::Io(
+                "--autoscale-target searches simulated platforms and is sim-only \
+                 (drop --mode real)"
+                    .into(),
+            ));
+        }
         let dir = args
             .get("artifacts")
             .map(PathBuf::from)
@@ -480,6 +492,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("wrote {path}");
         }
         return Ok(());
+    }
+
+    // SLO-aware autoscaling experiment: find the smallest GPU count whose
+    // simulated deadline-miss rate meets the target, then serve the final
+    // comparison at that scale.
+    if let Some(target_text) = args.get("autoscale-target") {
+        let target: f64 = target_text.parse().map_err(|_| {
+            Error::Io(format!(
+                "invalid --autoscale-target '{target_text}' (expected a miss-rate fraction)"
+            ))
+        })?;
+        if !(0.0..=1.0).contains(&target) {
+            return Err(Error::Io(format!(
+                "--autoscale-target {target} out of range (expected within [0, 1])"
+            )));
+        }
+        let max_gpus = args.usize_or("autoscale-max-gpus", 8).max(1);
+        let cpus = args.usize_or("cpus", 1);
+        let q_gpu = args.usize_or("queues-gpu", 3);
+        let q_cpu = args.usize_or("queues-cpu", 1);
+        println!("autoscale: smallest GPU count with deadline-miss rate <= {target}");
+        let mut chosen = max_gpus;
+        let mut reached = false;
+        for gpus in 1..=max_gpus {
+            let candidate = Platform::scaled(gpus, cpus, q_gpu, q_cpu);
+            let mut pol = policy_by_name(policy_name)?;
+            let r = serve_sim(&requests, &candidate, &PaperCost, pol.as_mut(), &cfg)?;
+            println!(
+                "  gpus={gpus}: miss rate {:.3} ({} of {} deadlines missed, p99 {:.1} ms)",
+                r.deadline_miss_rate,
+                r.deadline_misses,
+                r.deadline_total,
+                r.p99_latency * 1e3
+            );
+            if r.deadline_miss_rate <= target {
+                chosen = gpus;
+                reached = true;
+                break;
+            }
+        }
+        if reached {
+            println!("autoscale: chose {chosen} GPU(s)");
+        } else {
+            println!(
+                "autoscale: target {target} unreachable within {max_gpus} GPU(s); \
+                 serving at the cap"
+            );
+        }
+        platform = Platform::scaled(chosen, cpus, q_gpu, q_cpu);
     }
 
     let mut policy = policy_by_name(policy_name)?;

@@ -5,7 +5,15 @@
 //! the modeled platform, [`crate::exec`] for real PJRT execution); this
 //! module defines the pluggable pieces:
 //!
-//! * [`Policy`] — the paper's overridable `select` routine.
+//! * [`SchedState`] — the **incrementally maintained scheduler core**
+//!   (PR 5): per-device-type frontier buckets, a deadline-keyed urgency
+//!   heap, a rank-keyed heap, and cached device load/tenancy counters, all
+//!   updated by narrow events (`on_ready`/`on_dispatch`/`on_complete`/
+//!   `on_preempt`) instead of reconstructed per decision. Both engines
+//!   drive one `SchedState`, so sim and real share a single scheduler
+//!   core, and every shipped policy's `select` is O(log frontier).
+//! * [`Policy`] — the paper's overridable `select` routine, redesigned
+//!   around the indexed state.
 //! * [`Clustering`] — static fine-grained scheme (Expt 1): components are
 //!   dispatched to devices matching their preference, ordered by bottom-level
 //!   rank.
@@ -15,18 +23,26 @@
 //!   device choice using profiled execution times.
 //! * [`LeastLoaded`] — serving policy: preference-honouring like clustering,
 //!   but spreads concurrent requests across matching devices by the
-//!   cross-DAG occupancy the multi-tenant [`SchedView`] exposes.
+//!   cross-DAG occupancy the multi-tenant state exposes.
 //! * [`Edf`] — deadline-aware serving policy: earliest absolute deadline
 //!   first (laxity tie-break, rank fallback), with a preemption rule that
 //!   displaces strictly less urgent resident tenants via
 //!   [`Policy::preempt`].
+//!
+//! The pre-PR-5 view-based trait and policies are preserved verbatim in
+//! [`reference`] (doc-hidden), proven decision- and bit-identical by the
+//! `prop_policy_equiv` and `integration_sim_equiv` suites.
 
 pub mod autotune;
 pub mod policy;
 pub mod ranks;
+#[doc(hidden)]
+pub mod reference;
+pub mod state;
 
 pub use autotune::{exhaustive, hill_climb, TuneResult, TuneSpace};
 pub use policy::{
-    app_solo_estimate, Clustering, Eager, Edf, Heft, LeastLoaded, Policy, ResidentTenant, SchedView,
+    app_solo_estimate, Clustering, Eager, Edf, Heft, LeastLoaded, Policy, ResidentTenant,
 };
 pub use ranks::component_ranks;
+pub use state::SchedState;

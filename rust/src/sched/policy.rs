@@ -1,76 +1,28 @@
-//! The pluggable `select` routine of Algorithm 1 and the three policies the
-//! paper evaluates.
+//! The pluggable `select` routine of Algorithm 1, redesigned around the
+//! incrementally maintained [`SchedState`] (PR 5).
+//!
+//! A policy no longer receives a freshly materialized frontier snapshot to
+//! scan — it *queries* the indexed scheduler state ([`SchedState`]'s
+//! per-device-type rank buckets, deadline heap, and fallback heap), making
+//! every shipped policy's `select` O(log frontier) instead of O(frontier).
+//! The pre-PR-5 view-based trait and policies are preserved verbatim in
+//! [`super::reference`] and proven decision-identical by
+//! `tests/prop_policy_equiv.rs` plus the bit-identical `SimResult`
+//! equivalence suite (`tests/integration_sim_equiv.rs`).
+//!
+//! Writing a new policy: implement [`Policy::select`] against the
+//! [`SchedState`] query API — `rank_head` / `rank_head_placeable` for the
+//! rank-ordered frontier, `urgency_head` for the EDF order,
+//! `first_available_of` / `least_loaded_available_of` for device choice,
+//! plus the raw `est_free` / `device_load` / `deadline` / `priority`
+//! fields. `select` may mutate the state only through its query methods
+//! (lazy heap pruning); the engines apply the returned decision via the
+//! event API.
 
+use super::state::SchedState;
 use crate::cost::CostModel;
 use crate::graph::{Dag, Partition};
 use crate::platform::{Device, DeviceId, Platform};
-
-/// Read-only scheduler state offered to `select` (Algorithm 1 line 5):
-/// the frontier `F` (rank-sorted, descending), the available-device set `A`,
-/// and auxiliary estimates for EFT-style policies.
-pub struct SchedView<'a> {
-    pub now: f64,
-    /// Ready component ids, sorted by bottom-level rank, best first.
-    pub frontier: &'a [usize],
-    /// Available (idle) devices.
-    pub available: &'a [DeviceId],
-    pub platform: &'a Platform,
-    pub partition: &'a Partition,
-    pub dag: &'a Dag,
-    /// Estimated time each device becomes free (≤ now when idle).
-    pub est_free: &'a [f64],
-    /// Cross-DAG busyness signal per device: 0 when idle, growing as the
-    /// device takes on work. The simulator reports Σ occupancy of running
-    /// kernels (may exceed 1.0), served from an incrementally-invalidated
-    /// cache — policies must treat it as read-only state, never as a value
-    /// they can perturb; the real executor reports the
-    /// resident-component fraction (tenants/tenancy, capped at 1.0).
-    /// Policies should compare devices *relatively* (less vs more loaded),
-    /// not against absolute thresholds. Under multi-tenant serving several
-    /// components — possibly from different requests — share one device, so
-    /// `available` alone no longer says how loaded a device is.
-    pub device_load: &'a [f64],
-    /// Absolute deadline per component, seconds since the serving epoch
-    /// (`f64::INFINITY` when the request carries none). Threaded from
-    /// `ServeRequest.deadline` through the merged application so
-    /// deadline-aware policies ([`Edf`]) can order the frontier by urgency.
-    pub deadline: &'a [f64],
-    /// Request priority per component (larger = more urgent; 0 default).
-    pub priority: &'a [u32],
-    pub cost: &'a dyn CostModel,
-}
-
-impl<'a> SchedView<'a> {
-    /// Solo execution-time estimate of an entire component on a device.
-    pub fn component_time(&self, comp: usize, dev: &Device) -> f64 {
-        self.partition.components[comp]
-            .kernels
-            .iter()
-            .map(|&k| self.cost.exec_time(&self.dag.kernels[k], dev))
-            .sum()
-    }
-
-    /// Laxity of `comp`: slack between its absolute deadline and its
-    /// estimated completion were it dispatched *now* on a device of its
-    /// preferred type (+∞ for deadline-free components). Negative laxity
-    /// means the deadline is already unmeetable under the solo estimate.
-    pub fn laxity(&self, comp: usize) -> f64 {
-        if self.deadline[comp].is_infinite() {
-            return f64::INFINITY;
-        }
-        let want = self.partition.components[comp].dev;
-        let dev = self
-            .platform
-            .devices
-            .iter()
-            .find(|d| d.dtype == want)
-            .or_else(|| self.platform.devices.first());
-        match dev {
-            Some(d) => self.deadline[comp] - self.now - self.component_time(comp, d),
-            None => f64::INFINITY,
-        }
-    }
-}
 
 /// Optimistic solo-seconds estimate of one whole application — a true
 /// **lower bound** on its makespan. Components are independent (they could
@@ -122,12 +74,18 @@ pub struct ResidentTenant {
     pub device: DeviceId,
 }
 
-/// The paper's overridable `select` routine: choose a ready component and a
-/// device, or `None` to block until a callback updates `F`/`A`.
+/// The paper's overridable `select` routine over the event-driven
+/// scheduler core: choose a ready component and a device, or `None` to
+/// block until an event updates the state.
 pub trait Policy: Send {
     fn name(&self) -> &'static str;
 
-    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)>;
+    /// Pick `(component, device)` from the indexed frontier, or `None` to
+    /// block. The state is `&mut` because head queries prune lazily
+    /// deleted heap entries; `select` must not consume frontier entries
+    /// itself — the engine applies the decision via
+    /// [`SchedState::on_dispatch`].
+    fn select(&mut self, state: &mut SchedState) -> Option<(usize, DeviceId)>;
 
     /// Command queues this policy sets up on `device`. Dynamic coarse-grained
     /// baselines force a single queue (paper §5 Expts 2–3).
@@ -135,8 +93,8 @@ pub trait Policy: Send {
         device.num_queues
     }
 
-    /// Cheap capability probe: when false (the default) the simulator
-    /// skips building the resident-tenant set and never calls
+    /// Cheap capability probe: when false (the default) the engines skip
+    /// building the resident-tenant set and never call
     /// [`Policy::preempt`], keeping the blocked-select path allocation-free
     /// for non-preempting policies.
     fn can_preempt(&self) -> bool {
@@ -150,13 +108,15 @@ pub trait Policy: Send {
     /// frontier with remaining solo-seconds preserved), or `None` to wait.
     /// Policies must only preempt a *strictly less urgent* victim,
     /// otherwise displacement can ping-pong. Default: never preempt.
-    fn preempt(&mut self, _view: &SchedView, _resident: &[ResidentTenant]) -> Option<usize> {
+    fn preempt(&mut self, _state: &mut SchedState, _resident: &[ResidentTenant]) -> Option<usize> {
         None
     }
 }
 
 /// Static fine-grained *clustering* (Expt 1): dispatch the highest-ranked
-/// component whose device preference matches an available device.
+/// component whose device preference matches an available device — one
+/// bucket-head comparison per device type plus the first matching device
+/// in available-set order, O(log F).
 #[derive(Debug, Default)]
 pub struct Clustering;
 
@@ -165,18 +125,10 @@ impl Policy for Clustering {
         "clustering"
     }
 
-    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
-        for &comp in view.frontier {
-            let want = view.partition.components[comp].dev;
-            if let Some(&dev) = view
-                .available
-                .iter()
-                .find(|&&d| view.platform.device(d).dtype == want)
-            {
-                return Some((comp, dev));
-            }
-        }
-        None
+    fn select(&mut self, state: &mut SchedState) -> Option<(usize, DeviceId)> {
+        let comp = state.rank_head_placeable()?;
+        let dev = state.first_available_of(state.pref(comp))?;
+        Some((comp, dev))
     }
 }
 
@@ -192,9 +144,9 @@ impl Policy for Eager {
         "eager"
     }
 
-    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
-        let comp = *view.frontier.first()?;
-        let dev = *view.available.first()?;
+    fn select(&mut self, state: &mut SchedState) -> Option<(usize, DeviceId)> {
+        let comp = state.rank_head()?;
+        let dev = state.available().first().copied()?;
         Some((comp, dev))
     }
 
@@ -215,15 +167,15 @@ impl Policy for Heft {
         "heft"
     }
 
-    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
-        let comp = *view.frontier.first()?;
+    fn select(&mut self, state: &mut SchedState) -> Option<(usize, DeviceId)> {
+        let comp = state.rank_head()?;
         // argmin over ALL devices of EFT = max(now, est_free) + exec.
         let mut best: Option<(DeviceId, f64)> = None;
-        for d in &view.platform.devices {
+        for d in &state.platform.devices {
             if d.num_queues == 0 {
                 continue;
             }
-            let eft = view.est_free[d.id].max(view.now) + view.component_time(comp, d);
+            let eft = state.est_free[d.id].max(state.now) + state.component_time(comp, d);
             if best.map(|(_, t)| eft < t).unwrap_or(true) {
                 best = Some((d.id, eft));
             }
@@ -231,7 +183,7 @@ impl Policy for Heft {
         let (dev, _) = best?;
         // Dispatch only once the EFT-optimal device is actually free;
         // otherwise block (the component keeps its frontier slot).
-        if view.available.contains(&dev) {
+        if state.is_available(dev) {
             Some((comp, dev))
         } else {
             None
@@ -256,24 +208,10 @@ impl Policy for LeastLoaded {
         "least-loaded"
     }
 
-    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
-        for &comp in view.frontier {
-            let want = view.partition.components[comp].dev;
-            let best = view
-                .available
-                .iter()
-                .copied()
-                .filter(|&d| view.platform.device(d).dtype == want)
-                .min_by(|&a, &b| {
-                    view.device_load[a]
-                        .total_cmp(&view.device_load[b])
-                        .then_with(|| view.est_free[a].total_cmp(&view.est_free[b]))
-                });
-            if let Some(dev) = best {
-                return Some((comp, dev));
-            }
-        }
-        None
+    fn select(&mut self, state: &mut SchedState) -> Option<(usize, DeviceId)> {
+        let comp = state.rank_head_placeable()?;
+        let dev = state.least_loaded_available_of(state.pref(comp))?;
+        Some((comp, dev))
     }
 }
 
@@ -286,187 +224,86 @@ impl Policy for LeastLoaded {
 /// `select` (earlier deadline first, then laxity, then priority), so a
 /// displaced victim can never be re-selected ahead of the component that
 /// displaced it — displacement cannot ping-pong.
+///
+/// On the indexed state the urgency order is served by the per-type
+/// deadline heaps (finite deadlines) and fallback heaps (∞ deadlines):
+/// the head is O(T · log F) where T is the number of components tied
+/// bitwise at the minimum deadline — the view-based implementation
+/// re-derived the whole order in O(F) (plus an O(F) laxity-tie hashmap)
+/// per call.
 #[derive(Debug, Default)]
 pub struct Edf;
-
-impl Edf {
-    /// The one urgency comparator behind `select` ordering, the blocked
-    /// head-of-line scan, AND preemption dominance: deadline ascending,
-    /// laxity ascending on exact deadline ties, then priority descending.
-    /// Using a single total order everywhere is what makes the no-ping-pong
-    /// argument sound — a victim re-entering the frontier can never be
-    /// re-selected ahead of the component that displaced it. `la`/`lb` are
-    /// the candidates' laxities, passed in so callers control when the
-    /// cost-model sum behind [`SchedView::laxity`] actually runs.
-    fn cmp_with(view: &SchedView, a: usize, la: f64, b: usize, lb: f64) -> std::cmp::Ordering {
-        view.deadline[a]
-            .total_cmp(&view.deadline[b])
-            .then_with(|| la.total_cmp(&lb))
-            .then_with(|| view.priority[b].cmp(&view.priority[a]))
-    }
-
-    /// Laxity per frontier candidate, computed only where the comparator
-    /// can reach it — on finite deadlines shared by another candidate. The
-    /// placeholder (∞) for untied candidates is never consulted, because
-    /// a distinct deadline decides the comparison first. The map is
-    /// pre-sized to the frontier (this runs once per `select`; growth
-    /// rehashes were measurable on large serving frontiers).
-    fn tied_laxities(view: &SchedView) -> Vec<(usize, f64)> {
-        let mut counts: std::collections::HashMap<u64, u32> =
-            std::collections::HashMap::with_capacity(view.frontier.len());
-        for &c in view.frontier {
-            if view.deadline[c].is_finite() {
-                *counts.entry(view.deadline[c].to_bits()).or_insert(0) += 1;
-            }
-        }
-        view.frontier
-            .iter()
-            .map(|&c| {
-                let d = view.deadline[c];
-                let tied = d.is_finite() && counts.get(&d.to_bits()).is_some_and(|&n| n > 1);
-                (c, if tied { view.laxity(c) } else { f64::INFINITY })
-            })
-            .collect()
-    }
-
-    /// Lazy pairwise form of [`Edf::cmp_with`]: laxity is only computed on
-    /// exact deadline ties (`then_with` short-circuits). Pairwise identical
-    /// to `cmp_with` over [`Edf::tied_laxities`] — tied deadlines get real
-    /// laxities in both, untied ones never reach the laxity term.
-    fn urgency_cmp(view: &SchedView, a: usize, b: usize) -> std::cmp::Ordering {
-        view.deadline[a]
-            .total_cmp(&view.deadline[b])
-            .then_with(|| view.laxity(a).total_cmp(&view.laxity(b)))
-            .then_with(|| view.priority[b].cmp(&view.priority[a]))
-    }
-
-    /// Strict urgency dominance in the select order: true iff `a` is
-    /// strictly more urgent than `b`.
-    fn more_urgent(view: &SchedView, a: usize, b: usize) -> bool {
-        Edf::urgency_cmp(view, a, b).is_lt()
-    }
-
-    /// Least-loaded available device matching `comp`'s type preference.
-    fn best_device(view: &SchedView, comp: usize) -> Option<DeviceId> {
-        let want = view.partition.components[comp].dev;
-        view.available
-            .iter()
-            .copied()
-            .filter(|&d| view.platform.device(d).dtype == want)
-            .min_by(|&a, &b| {
-                view.device_load[a]
-                    .total_cmp(&view.device_load[b])
-                    .then_with(|| view.est_free[a].total_cmp(&view.est_free[b]))
-            })
-    }
-
-    /// Head-of-line blocked candidate: the urgency-order minimum restricted
-    /// to components carrying urgency metadata — one O(F) pass instead of a
-    /// full sort per blocked round.
-    fn most_urgent_candidate(view: &SchedView) -> Option<usize> {
-        let mut best: Option<(usize, f64)> = None;
-        for (c, lax) in Edf::tied_laxities(view) {
-            if !(view.deadline[c].is_finite() || view.priority[c] > 0) {
-                continue;
-            }
-            let better = match best {
-                None => true,
-                Some((b, bl)) => Edf::cmp_with(view, c, lax, b, bl).is_lt(),
-            };
-            if better {
-                best = Some((c, lax));
-            }
-        }
-        best.map(|(c, _)| c)
-    }
-}
 
 impl Policy for Edf {
     fn name(&self) -> &'static str {
         "edf"
     }
 
-    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+    fn select(&mut self, state: &mut SchedState) -> Option<(usize, DeviceId)> {
         // With no urgency metadata anywhere the order degenerates to the
-        // frontier's native rank order — skip the laxity/sort machinery
-        // entirely (e.g. `--policy edf` without any deadline flags).
-        if view
-            .frontier
-            .iter()
-            .all(|&c| view.deadline[c].is_infinite() && view.priority[c] == 0)
-        {
-            return view
-                .frontier
-                .iter()
-                .find_map(|&c| Edf::best_device(view, c).map(|d| (c, d)));
+        // frontier's native rank order — the carrier counter makes the
+        // probe O(1) (e.g. `--policy edf` without any deadline flags).
+        if state.meta_carriers() == 0 {
+            let comp = state.rank_head_placeable()?;
+            let dev = state.least_loaded_available_of(state.pref(comp))?;
+            return Some((comp, dev));
         }
-        // Common dispatch path, sort-free: the urgency-order head is
-        // usually placeable. min_by keeps the *first* of equally-minimum
-        // elements — the same candidate a stable sort would put at the
-        // head.
-        let cands = Edf::tied_laxities(view);
-        let head = cands
-            .iter()
-            .copied()
-            .min_by(|&(a, la), &(b, lb)| Edf::cmp_with(view, a, la, b, lb))
-            .map(|(c, _)| c)?;
-        if let Some(dev) = Edf::best_device(view, head) {
+        // Common dispatch path: the urgency-order head is usually
+        // placeable.
+        let head = state.urgency_head(false)?;
+        if let Some(dev) = state.least_loaded_available_of(state.pref(head)) {
             return Some((head, dev));
         }
-        // Head unplaceable. Fully-blocked rounds (the other common case)
-        // exit without sorting; the full sort only runs when some *other*
-        // candidate can be placed.
-        if !view
-            .frontier
-            .iter()
-            .any(|&c| Edf::best_device(view, c).is_some())
-        {
-            return None;
-        }
-        let mut order = cands;
-        order.sort_by(|&(a, la), &(b, lb)| Edf::cmp_with(view, a, la, b, lb));
-        for (comp, _) in order {
-            if comp == head {
-                continue;
-            }
-            if let Some(dev) = Edf::best_device(view, comp) {
-                return Some((comp, dev));
-            }
-        }
-        None
+        // Head unplaceable: the most urgent component among those whose
+        // preferred type still has availability — `None` when the frontier
+        // is fully blocked. (The view-based policy sorted the entire
+        // frontier here.)
+        let next = state.urgency_head(true)?;
+        let dev = state.least_loaded_available_of(state.pref(next))?;
+        Some((next, dev))
     }
 
     fn can_preempt(&self) -> bool {
         true
     }
 
-    fn preempt(&mut self, view: &SchedView, resident: &[ResidentTenant]) -> Option<usize> {
+    fn preempt(&mut self, state: &mut SchedState, resident: &[ResidentTenant]) -> Option<usize> {
         // Head-of-line blocked request: the most urgent frontier component
         // that actually carries urgency metadata (a finite deadline or a
-        // non-default priority) — rank-only work never preempts. Because
-        // the candidate order and `more_urgent` agree, this is the select
-        // order's head whenever any candidate carries metadata, and the
-        // post-displacement `select` is guaranteed to place it.
-        let urgent = Edf::most_urgent_candidate(view)?;
-        let want = view.partition.components[urgent].dev;
+        // non-default priority) — rank-only work never preempts. Any
+        // carrier is strictly more urgent than any non-carrier in the
+        // shared order, so with carriers present the global urgency head
+        // *is* the most urgent carrier.
+        if state.meta_carriers() == 0 {
+            return None;
+        }
+        let urgent = state.urgency_head(false)?;
+        let want = state.pref(urgent);
         // Eligibility is strict dominance in the full select order (the
         // no-ping-pong invariant) AND a genuine SLO gain — a strictly
         // earlier deadline or strictly higher priority. Laxity-only
         // dominance (equal deadline, equal priority) is excluded: that is
         // typically a sibling component of the same request, and paying a
         // transfer re-stage to reorder siblings delays the very deadline
-        // being optimized.
-        resident
-            .iter()
-            .filter(|r| view.platform.device(r.device).dtype == want)
-            .filter(|r| {
-                Edf::more_urgent(view, urgent, r.comp)
-                    && (view.deadline[urgent] < view.deadline[r.comp]
-                        || view.priority[urgent] > view.priority[r.comp])
-            })
-            // Least urgent victim = maximum in the shared urgency order.
-            .max_by(|a, b| Edf::urgency_cmp(view, a.comp, b.comp))
-            .map(|r| r.comp)
+        // being optimized. Least urgent victim = maximum in the shared
+        // urgency order (last of equals, matching the view-based max_by).
+        let mut victim: Option<usize> = None;
+        for r in resident {
+            if state.platform.device(r.device).dtype != want {
+                continue;
+            }
+            let dominated = state.urgency_cmp(urgent, r.comp).is_lt()
+                && (state.deadline[urgent] < state.deadline[r.comp]
+                    || state.priority[urgent] > state.priority[r.comp]);
+            if !dominated {
+                continue;
+            }
+            victim = match victim {
+                Some(v) if state.urgency_cmp(r.comp, v).is_lt() => Some(v),
+                _ => Some(r.comp),
+            };
+        }
+        victim
     }
 }
 
@@ -477,36 +314,46 @@ mod tests {
     use crate::platform::DeviceType;
     use crate::transformer::{cluster_by_head, transformer_dag};
 
-    /// Neutral serving metadata: no deadlines, default priority.
-    fn no_meta(ncomp: usize) -> (Vec<f64>, Vec<u32>) {
-        (vec![f64::INFINITY; ncomp], vec![0u32; ncomp])
-    }
-
+    /// Build a state with `frontier` fed in order (FIFO seq order) and
+    /// only `available` devices left in the available set.
     #[allow(clippy::too_many_arguments)]
-    fn view_meta<'a>(
+    fn state_with<'a>(
         dag: &'a Dag,
         part: &'a Partition,
         platform: &'a Platform,
-        frontier: &'a [usize],
-        available: &'a [DeviceId],
-        est_free: &'a [f64],
-        device_load: &'a [f64],
-        deadline: &'a [f64],
-        priority: &'a [u32],
-    ) -> SchedView<'a> {
-        SchedView {
-            now: 0.0,
-            frontier,
-            available,
-            platform,
-            partition: part,
+        frontier: &[usize],
+        available: &[DeviceId],
+        est_free: &[f64],
+        device_load: &[f64],
+        deadline: &[f64],
+        priority: &[u32],
+    ) -> SchedState<'a> {
+        let mut st = SchedState::new(
             dag,
-            est_free,
-            device_load,
-            deadline,
-            priority,
-            cost: &PaperCost,
+            part,
+            platform,
+            &PaperCost,
+            1,
+            deadline.to_vec(),
+            priority.to_vec(),
+        )
+        .unwrap();
+        for &c in frontier {
+            st.on_ready(c);
         }
+        for d in 0..platform.devices.len() {
+            if !available.contains(&d) {
+                st.mark_unavailable(d);
+            }
+        }
+        st.est_free.copy_from_slice(est_free);
+        st.device_load.copy_from_slice(device_load);
+        st
+    }
+
+    /// Neutral serving metadata: no deadlines, default priority.
+    fn no_meta(ncomp: usize) -> (Vec<f64>, Vec<u32>) {
+        (vec![f64::INFINITY; ncomp], vec![0u32; ncomp])
     }
 
     #[test]
@@ -545,14 +392,14 @@ mod tests {
         let load = [0.0, 0.0];
         let (dl, pr) = no_meta(2);
         // Only the CPU (device 1) available: must pick comp 0 (cpu-pref).
-        let v = view_meta(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
-        assert_eq!(Clustering.select(&v), Some((0, 1)));
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
+        assert_eq!(Clustering.select(&mut v), Some((0, 1)));
         // Only the GPU available: must skip comp 0 and pick comp 1.
-        let v = view_meta(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
-        assert_eq!(Clustering.select(&v), Some((1, 0)));
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
+        assert_eq!(Clustering.select(&mut v), Some((1, 0)));
         // Nothing available: block.
-        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
-        assert_eq!(Clustering.select(&v), None);
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Clustering.select(&mut v), None);
     }
 
     #[test]
@@ -565,8 +412,8 @@ mod tests {
         let load = [0.0, 0.0];
         let (dl, pr) = no_meta(2);
         // CPU-only availability: eager still dispatches there.
-        let v = view_meta(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
-        assert_eq!(Eager.select(&v), Some((0, 1)));
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
+        assert_eq!(Eager.select(&mut v), Some((0, 1)));
         assert_eq!(Eager.queues_for(platform.device(0)), 1);
     }
 
@@ -581,12 +428,13 @@ mod tests {
         // GPU busy for a short while; CPU idle. GEMM component is far
         // faster on the GPU, so HEFT blocks rather than take the CPU.
         let est = [0.005, 0.0];
-        let v = view_meta(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
-        assert_eq!(Heft.select(&v), None);
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
+        assert_eq!(Heft.select(&mut v), None);
         // Once the GPU frees, it dispatches there.
         let est = [0.0, 0.0];
-        let v = view_meta(&dag, &part, &platform, &frontier, &[0, 1], &est, &load, &dl, &pr);
-        assert_eq!(Heft.select(&v), Some((0, 0)));
+        let mut v =
+            state_with(&dag, &part, &platform, &frontier, &[0, 1], &est, &load, &dl, &pr);
+        assert_eq!(Heft.select(&mut v), Some((0, 0)));
     }
 
     #[test]
@@ -598,8 +446,8 @@ mod tests {
         let est = [100.0, 0.0]; // GPU booked out for 100 s
         let load = [0.0, 0.0];
         let (dl, pr) = no_meta(1);
-        let v = view_meta(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
-        assert_eq!(Heft.select(&v), Some((0, 1)));
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
+        assert_eq!(Heft.select(&mut v), Some((0, 1)));
     }
 
     #[test]
@@ -612,12 +460,14 @@ mod tests {
         let (dl, pr) = no_meta(2);
         // GPU 0 is half loaded, GPU 1 idle: pick GPU 1.
         let load = [0.5, 0.0, 0.0];
-        let v = view_meta(&dag, &part, &platform, &frontier, &[0, 1, 2], &est, &load, &dl, &pr);
-        assert_eq!(LeastLoaded.select(&v), Some((0, 1)));
+        let mut v = state_with(
+            &dag, &part, &platform, &frontier, &[0, 1, 2], &est, &load, &dl, &pr,
+        );
+        assert_eq!(LeastLoaded.select(&mut v), Some((0, 1)));
         // Only the CPU available: a GPU-pref component blocks (preference
         // honoured, unlike eager).
-        let v = view_meta(&dag, &part, &platform, &frontier, &[2], &est, &load, &dl, &pr);
-        assert_eq!(LeastLoaded.select(&v), None);
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[2], &est, &load, &dl, &pr);
+        assert_eq!(LeastLoaded.select(&mut v), None);
     }
 
     #[test]
@@ -632,12 +482,12 @@ mod tests {
         let load = [0.0, 0.0];
         let dl = [0.5, 0.2];
         let pr = [0u32, 0];
-        let v = view_meta(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
-        assert_eq!(Edf.select(&v), Some((1, 0)));
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
+        assert_eq!(Edf.select(&mut v), Some((1, 0)));
         // No deadlines at all: EDF degrades to the rank-order frontier.
         let (dl, pr) = no_meta(2);
-        let v = view_meta(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
-        assert_eq!(Edf.select(&v), Some((0, 0)));
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
+        assert_eq!(Edf.select(&mut v), Some((0, 0)));
     }
 
     #[test]
@@ -645,7 +495,7 @@ mod tests {
         // h_cpu = 1: head 0 prefers the CPU (slow ⇒ little slack), head 1
         // the GPU (fast ⇒ plenty). Equal absolute deadlines, so laxity is
         // the tie-break and the CPU-bound component must go first, even
-        // though the rank-ordered frontier lists head 1 ahead of it.
+        // though the frontier lists head 1 ahead of it.
         let (dag, ios) = transformer_dag(2, 256, DeviceType::Gpu);
         let part = cluster_by_head(&dag, &ios, 1);
         let platform = Platform::paper_testbed(3, 1);
@@ -654,15 +504,19 @@ mod tests {
         let load = [0.0, 0.0];
         let dl = [0.4, 0.4];
         let pr = [0u32, 0];
-        let v = view_meta(&dag, &part, &platform, &frontier, &[0, 1], &est, &load, &dl, &pr);
+        let mut v = state_with(
+            &dag, &part, &platform, &frontier, &[0, 1], &est, &load, &dl, &pr,
+        );
         assert!(v.laxity(0) < v.laxity(1), "CPU comp should have less slack");
-        assert_eq!(Edf.select(&v).map(|(c, _)| c), Some(0));
+        assert_eq!(Edf.select(&mut v).map(|(c, _)| c), Some(0));
         // Equal deadline + equal laxity (identical comps): priority breaks
         // the tie.
         let part_gpu = cluster_by_head(&dag, &ios, 0);
         let pr = [0u32, 3];
-        let v = view_meta(&dag, &part_gpu, &platform, &frontier, &[0, 1], &est, &load, &dl, &pr);
-        assert_eq!(Edf.select(&v).map(|(c, _)| c), Some(1));
+        let mut v = state_with(
+            &dag, &part_gpu, &platform, &frontier, &[0, 1], &est, &load, &dl, &pr,
+        );
+        assert_eq!(Edf.select(&mut v).map(|(c, _)| c), Some(1));
     }
 
     #[test]
@@ -678,24 +532,24 @@ mod tests {
         // displace comp 0.
         let dl = [f64::INFINITY, 0.1];
         let pr = [0u32, 0];
-        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
-        assert_eq!(Edf.preempt(&v, &resident), Some(0));
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&mut v, &resident), Some(0));
         // Resident is *more* urgent (earlier deadline): no preemption.
         let dl = [0.05, 0.1];
-        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
-        assert_eq!(Edf.preempt(&v, &resident), None);
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&mut v, &resident), None);
         // Equal urgency: no preemption (strictness prevents ping-pong).
         let dl = [0.1, 0.1];
-        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
-        assert_eq!(Edf.preempt(&v, &resident), None);
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&mut v, &resident), None);
         // Higher priority displaces even without a deadline edge.
         let dl = [f64::INFINITY, f64::INFINITY];
         let pr = [0u32, 2];
-        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
-        assert_eq!(Edf.preempt(&v, &resident), Some(0));
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&mut v, &resident), Some(0));
         // Rank-only frontier (no deadline, no priority): never preempts.
         let pr = [0u32, 0];
-        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
-        assert_eq!(Edf.preempt(&v, &resident), None);
+        let mut v = state_with(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&mut v, &resident), None);
     }
 }

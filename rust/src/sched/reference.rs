@@ -1,0 +1,457 @@
+//! **Reference view-based scheduler API** — the pre-PR-5 `Policy` trait
+//! and policies, kept callable so the indexed [`super::SchedState`] world
+//! can be proven equivalent against them (mirroring the
+//! [`crate::sim::reference`] engine pattern).
+//!
+//! Here `select` receives a freshly materialized [`SchedView`] and scans
+//! the whole frontier — O(F) per decision (plus an O(F) laxity-tie
+//! hashmap for `edf`). Do **not** use these outside equivalence/property
+//! tests ([`crate::sim::reference`] builds these views) or the
+//! before/after rows of `benches/serve_overload.rs` /
+//! `benches/serve_scale.rs`; production paths run the indexed policies in
+//! [`super::policy`].
+
+use super::ResidentTenant;
+use crate::cost::CostModel;
+use crate::graph::{Dag, Partition};
+use crate::platform::{Device, DeviceId, Platform};
+
+/// Read-only scheduler state offered to the reference `select` (Algorithm
+/// 1 line 5): the frontier `F` (rank-sorted, descending), the
+/// available-device set `A`, and auxiliary estimates for EFT-style
+/// policies.
+pub struct SchedView<'a> {
+    pub now: f64,
+    /// Ready component ids, sorted by bottom-level rank, best first.
+    pub frontier: &'a [usize],
+    /// Available (idle) devices.
+    pub available: &'a [DeviceId],
+    pub platform: &'a Platform,
+    pub partition: &'a Partition,
+    pub dag: &'a Dag,
+    /// Estimated time each device becomes free (≤ now when idle).
+    pub est_free: &'a [f64],
+    /// Cross-DAG busyness signal per device: 0 when idle, growing as the
+    /// device takes on work. Policies should compare devices *relatively*
+    /// (less vs more loaded), not against absolute thresholds.
+    pub device_load: &'a [f64],
+    /// Absolute deadline per component, seconds since the serving epoch
+    /// (`f64::INFINITY` when the request carries none).
+    pub deadline: &'a [f64],
+    /// Request priority per component (larger = more urgent; 0 default).
+    pub priority: &'a [u32],
+    pub cost: &'a dyn CostModel,
+}
+
+impl<'a> SchedView<'a> {
+    /// Solo execution-time estimate of an entire component on a device.
+    pub fn component_time(&self, comp: usize, dev: &Device) -> f64 {
+        self.partition.components[comp]
+            .kernels
+            .iter()
+            .map(|&k| self.cost.exec_time(&self.dag.kernels[k], dev))
+            .sum()
+    }
+
+    /// Laxity of `comp`: slack between its absolute deadline and its
+    /// estimated completion were it dispatched *now* on a device of its
+    /// preferred type (+∞ for deadline-free components). Negative laxity
+    /// means the deadline is already unmeetable under the solo estimate.
+    pub fn laxity(&self, comp: usize) -> f64 {
+        if self.deadline[comp].is_infinite() {
+            return f64::INFINITY;
+        }
+        let want = self.partition.components[comp].dev;
+        let dev = self
+            .platform
+            .devices
+            .iter()
+            .find(|d| d.dtype == want)
+            .or_else(|| self.platform.devices.first());
+        match dev {
+            Some(d) => self.deadline[comp] - self.now - self.component_time(comp, d),
+            None => f64::INFINITY,
+        }
+    }
+}
+
+/// The reference (view-based) `select` routine: choose a ready component
+/// and a device, or `None` to block until a callback updates `F`/`A`.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)>;
+
+    /// Command queues this policy sets up on `device`.
+    fn queues_for(&self, device: &Device) -> usize {
+        device.num_queues
+    }
+
+    /// See [`super::Policy::can_preempt`].
+    fn can_preempt(&self) -> bool {
+        false
+    }
+
+    /// See [`super::Policy::preempt`].
+    fn preempt(&mut self, _view: &SchedView, _resident: &[ResidentTenant]) -> Option<usize> {
+        None
+    }
+}
+
+/// Reference *clustering*: O(F) scan for the highest-ranked component
+/// whose device preference matches an available device.
+#[derive(Debug, Default)]
+pub struct Clustering;
+
+impl Policy for Clustering {
+    fn name(&self) -> &'static str {
+        "clustering"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        for &comp in view.frontier {
+            let want = view.partition.components[comp].dev;
+            if let Some(&dev) = view
+                .available
+                .iter()
+                .find(|&&d| view.platform.device(d).dtype == want)
+            {
+                return Some((comp, dev));
+            }
+        }
+        None
+    }
+}
+
+/// Reference *eager*: highest-ranked component onto any available device.
+#[derive(Debug, Default)]
+pub struct Eager;
+
+impl Policy for Eager {
+    fn name(&self) -> &'static str {
+        "eager"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        let comp = *view.frontier.first()?;
+        let dev = *view.available.first()?;
+        Some((comp, dev))
+    }
+
+    fn queues_for(&self, _device: &Device) -> usize {
+        1
+    }
+}
+
+/// Reference *HEFT*: highest-ranked component onto the earliest-finishing
+/// device, blocking while the EFT-optimal device is busy.
+#[derive(Debug, Default)]
+pub struct Heft;
+
+impl Policy for Heft {
+    fn name(&self) -> &'static str {
+        "heft"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        let comp = *view.frontier.first()?;
+        // argmin over ALL devices of EFT = max(now, est_free) + exec.
+        let mut best: Option<(DeviceId, f64)> = None;
+        for d in &view.platform.devices {
+            if d.num_queues == 0 {
+                continue;
+            }
+            let eft = view.est_free[d.id].max(view.now) + view.component_time(comp, d);
+            if best.map(|(_, t)| eft < t).unwrap_or(true) {
+                best = Some((d.id, eft));
+            }
+        }
+        let (dev, _) = best?;
+        if view.available.contains(&dev) {
+            Some((comp, dev))
+        } else {
+            None
+        }
+    }
+
+    fn queues_for(&self, _device: &Device) -> usize {
+        1
+    }
+}
+
+/// Reference *least-loaded*: preference-honouring, least cross-DAG
+/// occupancy among matching available devices (O(F) frontier scan).
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl Policy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        for &comp in view.frontier {
+            let want = view.partition.components[comp].dev;
+            let best = view
+                .available
+                .iter()
+                .copied()
+                .filter(|&d| view.platform.device(d).dtype == want)
+                .min_by(|&a, &b| {
+                    view.device_load[a]
+                        .total_cmp(&view.device_load[b])
+                        .then_with(|| view.est_free[a].total_cmp(&view.est_free[b]))
+                });
+            if let Some(dev) = best {
+                return Some((comp, dev));
+            }
+        }
+        None
+    }
+}
+
+/// Reference *EDF*: earliest-absolute-deadline first with laxity
+/// tie-break, rank fallback, and strict-dominance preemption. Re-derives
+/// the urgency order per call: an O(F) laxity-tie hashmap, an O(F) head
+/// scan, and a full O(F log F) sort on blocked-but-placeable rounds.
+#[derive(Debug, Default)]
+pub struct Edf;
+
+impl Edf {
+    /// The one urgency comparator behind `select` ordering, the blocked
+    /// head-of-line scan, AND preemption dominance: deadline ascending,
+    /// laxity ascending on exact deadline ties, then priority descending.
+    fn cmp_with(view: &SchedView, a: usize, la: f64, b: usize, lb: f64) -> std::cmp::Ordering {
+        view.deadline[a]
+            .total_cmp(&view.deadline[b])
+            .then_with(|| la.total_cmp(&lb))
+            .then_with(|| view.priority[b].cmp(&view.priority[a]))
+    }
+
+    /// Laxity per frontier candidate, computed only where the comparator
+    /// can reach it — on finite deadlines shared by another candidate.
+    fn tied_laxities(view: &SchedView) -> Vec<(usize, f64)> {
+        let mut counts: std::collections::HashMap<u64, u32> =
+            std::collections::HashMap::with_capacity(view.frontier.len());
+        for &c in view.frontier {
+            if view.deadline[c].is_finite() {
+                *counts.entry(view.deadline[c].to_bits()).or_insert(0) += 1;
+            }
+        }
+        view.frontier
+            .iter()
+            .map(|&c| {
+                let d = view.deadline[c];
+                let tied = d.is_finite() && counts.get(&d.to_bits()).is_some_and(|&n| n > 1);
+                (c, if tied { view.laxity(c) } else { f64::INFINITY })
+            })
+            .collect()
+    }
+
+    /// Lazy pairwise form of [`Edf::cmp_with`]: laxity is only computed on
+    /// exact deadline ties (`then_with` short-circuits).
+    fn urgency_cmp(view: &SchedView, a: usize, b: usize) -> std::cmp::Ordering {
+        view.deadline[a]
+            .total_cmp(&view.deadline[b])
+            .then_with(|| view.laxity(a).total_cmp(&view.laxity(b)))
+            .then_with(|| view.priority[b].cmp(&view.priority[a]))
+    }
+
+    /// Strict urgency dominance in the select order.
+    fn more_urgent(view: &SchedView, a: usize, b: usize) -> bool {
+        Edf::urgency_cmp(view, a, b).is_lt()
+    }
+
+    /// Least-loaded available device matching `comp`'s type preference.
+    fn best_device(view: &SchedView, comp: usize) -> Option<DeviceId> {
+        let want = view.partition.components[comp].dev;
+        view.available
+            .iter()
+            .copied()
+            .filter(|&d| view.platform.device(d).dtype == want)
+            .min_by(|&a, &b| {
+                view.device_load[a]
+                    .total_cmp(&view.device_load[b])
+                    .then_with(|| view.est_free[a].total_cmp(&view.est_free[b]))
+            })
+    }
+
+    /// Head-of-line blocked candidate: the urgency-order minimum restricted
+    /// to components carrying urgency metadata.
+    fn most_urgent_candidate(view: &SchedView) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (c, lax) in Edf::tied_laxities(view) {
+            if !(view.deadline[c].is_finite() || view.priority[c] > 0) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((b, bl)) => Edf::cmp_with(view, c, lax, b, bl).is_lt(),
+            };
+            if better {
+                best = Some((c, lax));
+            }
+        }
+        best.map(|(c, _)| c)
+    }
+}
+
+impl Policy for Edf {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn select(&mut self, view: &SchedView) -> Option<(usize, DeviceId)> {
+        // With no urgency metadata anywhere the order degenerates to the
+        // frontier's native rank order.
+        if view
+            .frontier
+            .iter()
+            .all(|&c| view.deadline[c].is_infinite() && view.priority[c] == 0)
+        {
+            return view
+                .frontier
+                .iter()
+                .find_map(|&c| Edf::best_device(view, c).map(|d| (c, d)));
+        }
+        // Common dispatch path, sort-free: the urgency-order head is
+        // usually placeable.
+        let cands = Edf::tied_laxities(view);
+        let head = cands
+            .iter()
+            .copied()
+            .min_by(|&(a, la), &(b, lb)| Edf::cmp_with(view, a, la, b, lb))
+            .map(|(c, _)| c)?;
+        if let Some(dev) = Edf::best_device(view, head) {
+            return Some((head, dev));
+        }
+        // Head unplaceable. Fully-blocked rounds exit without sorting; the
+        // full sort only runs when some *other* candidate can be placed.
+        if !view
+            .frontier
+            .iter()
+            .any(|&c| Edf::best_device(view, c).is_some())
+        {
+            return None;
+        }
+        let mut order = cands;
+        order.sort_by(|&(a, la), &(b, lb)| Edf::cmp_with(view, a, la, b, lb));
+        for (comp, _) in order {
+            if comp == head {
+                continue;
+            }
+            if let Some(dev) = Edf::best_device(view, comp) {
+                return Some((comp, dev));
+            }
+        }
+        None
+    }
+
+    fn can_preempt(&self) -> bool {
+        true
+    }
+
+    fn preempt(&mut self, view: &SchedView, resident: &[ResidentTenant]) -> Option<usize> {
+        let urgent = Edf::most_urgent_candidate(view)?;
+        let want = view.partition.components[urgent].dev;
+        resident
+            .iter()
+            .filter(|r| view.platform.device(r.device).dtype == want)
+            .filter(|r| {
+                Edf::more_urgent(view, urgent, r.comp)
+                    && (view.deadline[urgent] < view.deadline[r.comp]
+                        || view.priority[urgent] > view.priority[r.comp])
+            })
+            // Least urgent victim = maximum in the shared urgency order.
+            .max_by(|a, b| Edf::urgency_cmp(view, a.comp, b.comp))
+            .map(|r| r.comp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::platform::DeviceType;
+    use crate::transformer::{cluster_by_head, transformer_dag};
+
+    /// Neutral serving metadata: no deadlines, default priority.
+    fn no_meta(ncomp: usize) -> (Vec<f64>, Vec<u32>) {
+        (vec![f64::INFINITY; ncomp], vec![0u32; ncomp])
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn view_meta<'a>(
+        dag: &'a Dag,
+        part: &'a Partition,
+        platform: &'a Platform,
+        frontier: &'a [usize],
+        available: &'a [DeviceId],
+        est_free: &'a [f64],
+        device_load: &'a [f64],
+        deadline: &'a [f64],
+        priority: &'a [u32],
+    ) -> SchedView<'a> {
+        SchedView {
+            now: 0.0,
+            frontier,
+            available,
+            platform,
+            partition: part,
+            dag,
+            est_free,
+            device_load,
+            deadline,
+            priority,
+            cost: &PaperCost,
+        }
+    }
+
+    /// The reference policies' semantics are what the equivalence suite
+    /// pins the indexed policies against — keep a behavioural anchor for
+    /// each family here.
+    #[test]
+    fn reference_policies_keep_their_selection_rules() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 1); // head 0 on CPU
+        let platform = Platform::paper_testbed(2, 1);
+        let frontier = [0usize, 1];
+        let est = [0.0, 0.0];
+        let load = [0.0, 0.0];
+        let (dl, pr) = no_meta(2);
+        // Clustering honours the preference.
+        let v = view_meta(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
+        assert_eq!(Clustering.select(&v), Some((0, 1)));
+        let v = view_meta(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
+        assert_eq!(Clustering.select(&v), Some((1, 0)));
+        // Eager ignores it.
+        let v = view_meta(&dag, &part, &platform, &frontier, &[1], &est, &load, &dl, &pr);
+        assert_eq!(Eager.select(&v), Some((0, 1)));
+        // Blocked frontier.
+        let v = view_meta(&dag, &part, &platform, &frontier, &[], &est, &load, &dl, &pr);
+        assert_eq!(Clustering.select(&v), None);
+    }
+
+    #[test]
+    fn reference_edf_orders_by_deadline_and_preempts_strictly() {
+        let (dag, ios) = transformer_dag(2, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let frontier = [0usize, 1];
+        let est = [0.0, 0.0];
+        let load = [0.0, 0.0];
+        let dl = [0.5, 0.2];
+        let pr = [0u32, 0];
+        let v = view_meta(&dag, &part, &platform, &frontier, &[0], &est, &load, &dl, &pr);
+        assert_eq!(Edf.select(&v), Some((1, 0)));
+        // Preemption: strict dominance only.
+        let blocked = [1usize];
+        let resident = [ResidentTenant { comp: 0, device: 0 }];
+        let dl = [f64::INFINITY, 0.1];
+        let v = view_meta(&dag, &part, &platform, &blocked, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&v, &resident), Some(0));
+        let dl = [0.1, 0.1];
+        let v = view_meta(&dag, &part, &platform, &blocked, &[], &est, &load, &dl, &pr);
+        assert_eq!(Edf.preempt(&v, &resident), None);
+    }
+}

@@ -1,0 +1,847 @@
+//! The incrementally maintained scheduler core (`SchedState`).
+//!
+//! Until PR 5 every [`Policy::select`](super::Policy::select) call received
+//! a freshly materialized [`super::reference::SchedView`] and linearly
+//! scanned the whole frontier — O(F) per decision, the dominant
+//! blocked-phase cost under sustained overload backlogs (thousands of
+//! resident frontier entries). `SchedState` replaces the rebuild-per-call
+//! view with **indexed scheduler state updated by narrow events**:
+//!
+//! * [`SchedState::on_ready`] — a component joined the frontier;
+//! * [`SchedState::on_dispatch`] — a component left the frontier for a
+//!   device (tenant accounting + availability);
+//! * [`SchedState::on_complete`] — a resident component finished (tenant
+//!   slot returned);
+//! * [`SchedState::on_preempt`] — a resident component was displaced (the
+//!   caller re-enters it via `on_ready`).
+//!
+//! Internally the frontier lives in **per-device-type buckets**, each
+//! holding three heaps:
+//!
+//! * a *rank heap* ordered by (bottom-level rank desc, entry seq asc) —
+//!   exactly the rank-sorted frontier order the view-based policies
+//!   scanned (`clustering`, `eager`, `heft`, `least-loaded`, and `edf`'s
+//!   metadata-free fallback);
+//! * a *deadline heap* over finite-deadline components ordered by absolute
+//!   deadline — the EDF urgency head; exact deadline ties are resolved at
+//!   select time with the same laxity/priority/frontier-order tie-break
+//!   the reference comparator uses (laxity depends on `now`, so it cannot
+//!   be a static heap key — but on equal deadlines the laxity *order* only
+//!   depends on static component times, and the values are recomputed with
+//!   the reference float-op order so the comparison is bit-identical);
+//! * a *fallback heap* over ∞-deadline components ordered by (priority
+//!   desc, rank desc, seq asc) — the statically known remainder of the
+//!   urgency order (∞-deadline laxities are always the ∞ placeholder).
+//!
+//! Removal is **lazy**: each frontier entry carries the sequence number it
+//! was inserted with, and `entry_seq`/`in_frontier` invalidate stale heap
+//! entries on peek (a preempted component re-enters with a fresh seq, so
+//! its old entries are skipped). Every event is O(log F); every shipped
+//! policy's `select` is O(log F) plus O(#devices) for the device choice.
+//!
+//! Cached device state rides along: the order-preserving available set
+//! (policies depend on its FIFO order), per-type availability counts,
+//! tenancy counters, `est_free` EFT bookkeeping, and the cross-DAG
+//! `device_load` signal the engines refresh incrementally.
+//!
+//! Both execution engines drive one `SchedState` ([`crate::sim`] feeds it
+//! the frontier deltas its event loop already computes; the real
+//! [`crate::exec`] executor mutates it under its scheduler lock), so sim
+//! and real share a single scheduler core.
+
+use crate::cost::CostModel;
+use crate::error::{Error, Result};
+use crate::graph::{Dag, Partition};
+use crate::platform::{Device, DeviceId, DeviceType, Platform};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Number of device-type buckets ([`DeviceType`] is `Gpu | Cpu`).
+const NTYPES: usize = 2;
+
+/// Bucket index of a device type.
+fn ti(t: DeviceType) -> usize {
+    match t {
+        DeviceType::Gpu => 0,
+        DeviceType::Cpu => 1,
+    }
+}
+
+/// Rank-bucket entry: max-heap order = frontier order (rank descending,
+/// insertion seq ascending — ties between equal ranks stay FIFO, exactly
+/// the stable order the view-based frontier `Vec` maintained).
+#[derive(Clone, Copy)]
+struct RankEntry {
+    rank: f64,
+    seq: u64,
+    comp: usize,
+}
+
+impl PartialEq for RankEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+impl Eq for RankEntry {}
+impl PartialOrd for RankEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for RankEntry {
+    fn cmp(&self, o: &Self) -> Ordering {
+        self.rank
+            .total_cmp(&o.rank)
+            .then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+
+/// Deadline-bucket entry: max-heap order = earliest absolute deadline
+/// first. Ties are *not* decided here — the select path collects every
+/// entry tied at the minimum deadline and applies the full urgency
+/// tie-break (laxity, priority, frontier order) itself.
+#[derive(Clone, Copy)]
+struct DlEntry {
+    deadline: f64,
+    seq: u64,
+    comp: usize,
+}
+
+impl PartialEq for DlEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+impl Eq for DlEntry {}
+impl PartialOrd for DlEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for DlEntry {
+    fn cmp(&self, o: &Self) -> Ordering {
+        o.deadline
+            .total_cmp(&self.deadline)
+            .then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+
+/// Fallback-bucket entry (∞-deadline components): max-heap order =
+/// urgency order restricted to that population — priority descending,
+/// then frontier order (rank desc, seq asc). Static, because ∞-deadline
+/// laxities are always the ∞ placeholder in the reference comparator.
+#[derive(Clone, Copy)]
+struct FbEntry {
+    priority: u32,
+    rank: f64,
+    seq: u64,
+    comp: usize,
+}
+
+impl PartialEq for FbEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+impl Eq for FbEntry {}
+impl PartialOrd for FbEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for FbEntry {
+    fn cmp(&self, o: &Self) -> Ordering {
+        self.priority
+            .cmp(&o.priority)
+            .then_with(|| self.rank.total_cmp(&o.rank))
+            .then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+
+/// Prune stale heads (component left the frontier, or re-entered with a
+/// newer seq) and return the current valid head without removing it.
+macro_rules! prune_peek {
+    ($heap:expr, $in_frontier:expr, $entry_seq:expr) => {{
+        loop {
+            match $heap.peek() {
+                None => break None,
+                Some(e) => {
+                    if $in_frontier[e.comp] && $entry_seq[e.comp] == e.seq {
+                        break Some(*e);
+                    }
+                }
+            }
+            $heap.pop();
+        }
+    }};
+}
+
+/// Incrementally maintained scheduler state shared by the simulator and
+/// the real executor — see the module docs for the index layout. Public
+/// fields are the raw scheduler inputs the engines own (`now`, `est_free`,
+/// `device_load`, serving metadata); the frontier and availability indexes
+/// are private and only change through the event API.
+pub struct SchedState<'a> {
+    /// Current scheduling instant (virtual time in the simulator, seconds
+    /// since the call epoch in the real executor). The engine sets this
+    /// before every scheduler phase; EDF laxities are computed against it.
+    pub now: f64,
+    pub platform: &'a Platform,
+    pub partition: &'a Partition,
+    pub dag: &'a Dag,
+    pub cost: &'a dyn CostModel,
+    /// Estimated time each device becomes free (≤ now when idle) — HEFT's
+    /// EFT bookkeeping, maintained by the engines.
+    pub est_free: Vec<f64>,
+    /// Cross-DAG busyness per device (Σ occupancy of running kernels in
+    /// the simulator; resident-fraction in the real executor). Policies
+    /// compare devices *relatively*; engines refresh it incrementally.
+    pub device_load: Vec<f64>,
+    /// Resident-component count per device (multi-tenant serving).
+    pub tenants: Vec<usize>,
+    /// Absolute deadline per component (∞ when the request carries none).
+    pub deadline: Vec<f64>,
+    /// Request priority per component (larger = more urgent; 0 default).
+    pub priority: Vec<u32>,
+
+    /// Residents a device admits before it leaves the available set.
+    tenancy: usize,
+    comp_rank: Vec<f64>,
+    comp_pref: Vec<DeviceType>,
+    /// Device backing [`SchedState::laxity`] per component (preferred-type
+    /// device, first platform device as fallback) and the memoized solo
+    /// component time on it — static, so laxity is O(1) per query.
+    lax_dev: Vec<Option<DeviceId>>,
+    lax_time: Vec<f64>,
+
+    /// Available (idle/under-tenancy) devices, **order-preserving**: the
+    /// FIFO add/remove order the view-based policies scanned. Device
+    /// choice rules (`first available of type`, `least-loaded of type`)
+    /// depend on this order for their tie-breaks.
+    available: Vec<DeviceId>,
+    dev_available: Vec<bool>,
+    avail_per_type: [usize; NTYPES],
+
+    in_frontier: Vec<bool>,
+    entry_seq: Vec<u64>,
+    next_seq: u64,
+    frontier_len: usize,
+    /// Frontier components carrying urgency metadata (finite deadline or
+    /// non-default priority) — EDF's "any metadata at all?" fast path.
+    meta_carriers: usize,
+
+    rank_heap: [BinaryHeap<RankEntry>; NTYPES],
+    dl_heap: [BinaryHeap<DlEntry>; NTYPES],
+    fb_heap: [BinaryHeap<FbEntry>; NTYPES],
+    /// Scratch for deadline-tie collection (reused across selects).
+    tie_scratch: Vec<DlEntry>,
+}
+
+impl<'a> SchedState<'a> {
+    /// Build the indexed state for one scheduling run. `tenancy` is the
+    /// per-device resident cap (≥ 1); `deadline`/`priority` are the
+    /// per-component serving metadata (static for the run). Errors when no
+    /// platform device has command queues — the same guard both engines
+    /// applied.
+    pub fn new(
+        dag: &'a Dag,
+        partition: &'a Partition,
+        platform: &'a Platform,
+        cost: &'a dyn CostModel,
+        tenancy: usize,
+        deadline: Vec<f64>,
+        priority: Vec<u32>,
+    ) -> Result<SchedState<'a>> {
+        let ncomp = partition.components.len();
+        let ndev = platform.devices.len();
+        let available: Vec<DeviceId> = platform
+            .devices
+            .iter()
+            .filter(|d| d.num_queues > 0)
+            .map(|d| d.id)
+            .collect();
+        if available.is_empty() {
+            return Err(Error::Sched("no device has command queues".into()));
+        }
+        let mut dev_available = vec![false; ndev];
+        let mut avail_per_type = [0usize; NTYPES];
+        for &d in &available {
+            dev_available[d] = true;
+            avail_per_type[ti(platform.device(d).dtype)] += 1;
+        }
+        let comp_rank = super::component_ranks(dag, partition, platform, cost);
+        let comp_pref: Vec<DeviceType> = partition.components.iter().map(|c| c.dev).collect();
+        let lax_dev: Vec<Option<DeviceId>> = partition
+            .components
+            .iter()
+            .map(|c| {
+                platform
+                    .devices
+                    .iter()
+                    .find(|d| d.dtype == c.dev)
+                    .or_else(|| platform.devices.first())
+                    .map(|d| d.id)
+            })
+            .collect();
+        let lax_time: Vec<f64> = (0..ncomp)
+            .map(|c| match lax_dev[c] {
+                Some(d) => {
+                    let dev = platform.device(d);
+                    partition.components[c]
+                        .kernels
+                        .iter()
+                        .map(|&k| cost.exec_time(&dag.kernels[k], dev))
+                        .sum()
+                }
+                None => 0.0,
+            })
+            .collect();
+        Ok(SchedState {
+            now: 0.0,
+            platform,
+            partition,
+            dag,
+            cost,
+            est_free: vec![0.0; ndev],
+            device_load: vec![0.0; ndev],
+            tenants: vec![0; ndev],
+            deadline,
+            priority,
+            tenancy: tenancy.max(1),
+            comp_rank,
+            comp_pref,
+            lax_dev,
+            lax_time,
+            available,
+            dev_available,
+            avail_per_type,
+            in_frontier: vec![false; ncomp],
+            entry_seq: vec![0; ncomp],
+            next_seq: 0,
+            frontier_len: 0,
+            meta_carriers: 0,
+            rank_heap: [BinaryHeap::new(), BinaryHeap::new()],
+            dl_heap: [BinaryHeap::new(), BinaryHeap::new()],
+            fb_heap: [BinaryHeap::new(), BinaryHeap::new()],
+            tie_scratch: Vec::new(),
+        })
+    }
+
+    // ------------------------------------------------------------- events
+
+    /// A component became ready (dependencies met, request released) and
+    /// joins the frontier. No-op when already present. O(log F).
+    pub fn on_ready(&mut self, comp: usize) {
+        if self.in_frontier[comp] {
+            return;
+        }
+        self.in_frontier[comp] = true;
+        self.frontier_len += 1;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.entry_seq[comp] = seq;
+        let t = ti(self.comp_pref[comp]);
+        let rank = self.comp_rank[comp];
+        self.rank_heap[t].push(RankEntry { rank, seq, comp });
+        if self.deadline[comp].is_finite() {
+            self.dl_heap[t].push(DlEntry {
+                deadline: self.deadline[comp],
+                seq,
+                comp,
+            });
+        } else {
+            self.fb_heap[t].push(FbEntry {
+                priority: self.priority[comp],
+                rank,
+                seq,
+                comp,
+            });
+        }
+        if self.carries_meta(comp) {
+            self.meta_carriers += 1;
+        }
+    }
+
+    /// The policy dispatched `comp` to `dev`: the component leaves the
+    /// frontier and occupies one tenant slot; the device leaves the
+    /// available set when it reaches the tenancy cap. O(log F) amortized
+    /// (stale heap entries die lazily on later peeks).
+    pub fn on_dispatch(&mut self, comp: usize, dev: DeviceId) {
+        debug_assert!(self.in_frontier[comp], "dispatching a non-frontier component");
+        self.frontier_leave(comp);
+        self.tenants[dev] += 1;
+        if self.tenants[dev] >= self.tenancy {
+            self.device_remove(dev);
+        }
+    }
+
+    /// A resident component on `dev` completed: the tenant slot returns
+    /// and the device re-enters the available set.
+    pub fn on_complete(&mut self, dev: DeviceId) {
+        self.tenants[dev] -= 1;
+        self.device_add(dev);
+    }
+
+    /// A resident component on `dev` was displaced mid-flight: the tenant
+    /// slot returns immediately. The caller re-enters the victim via
+    /// [`SchedState::on_ready`] (it gets a fresh entry seq, so its stale
+    /// heap entries are skipped).
+    pub fn on_preempt(&mut self, dev: DeviceId) {
+        self.tenants[dev] -= 1;
+        self.device_add(dev);
+    }
+
+    fn frontier_leave(&mut self, comp: usize) {
+        if !self.in_frontier[comp] {
+            return;
+        }
+        self.in_frontier[comp] = false;
+        self.frontier_len -= 1;
+        if self.carries_meta(comp) {
+            self.meta_carriers -= 1;
+        }
+    }
+
+    fn carries_meta(&self, comp: usize) -> bool {
+        self.deadline[comp].is_finite() || self.priority[comp] > 0
+    }
+
+    // ------------------------------------------------------ device state
+
+    /// Return `dev` to the available set (no-op if present), preserving
+    /// FIFO order exactly as the view-based engines did.
+    fn device_add(&mut self, dev: DeviceId) {
+        if !self.dev_available[dev] {
+            self.dev_available[dev] = true;
+            self.available.push(dev);
+            self.avail_per_type[ti(self.platform.device(dev).dtype)] += 1;
+        }
+    }
+
+    /// Remove `dev` from the available set (no-op if absent), preserving
+    /// the order of the remaining entries.
+    fn device_remove(&mut self, dev: DeviceId) {
+        if !self.dev_available[dev] {
+            return;
+        }
+        self.dev_available[dev] = false;
+        self.avail_per_type[ti(self.platform.device(dev).dtype)] -= 1;
+        let pos = self
+            .available
+            .iter()
+            .position(|&d| d == dev)
+            .expect("bitset says dev is available");
+        self.available.remove(pos);
+    }
+
+    /// Force `dev` out of the available set without touching tenancy —
+    /// test/bench scaffolding for constructing specific availability
+    /// pictures (the engines only move devices through the event API).
+    #[doc(hidden)]
+    pub fn mark_unavailable(&mut self, dev: DeviceId) {
+        self.device_remove(dev);
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// The available-device set, in the FIFO order policies scan.
+    pub fn available(&self) -> &[DeviceId] {
+        &self.available
+    }
+
+    pub fn is_available(&self, dev: DeviceId) -> bool {
+        self.dev_available[dev]
+    }
+
+    /// Whether any device of type `t` is currently available.
+    pub fn has_available(&self, t: DeviceType) -> bool {
+        self.avail_per_type[ti(t)] > 0
+    }
+
+    pub fn frontier_len(&self) -> usize {
+        self.frontier_len
+    }
+
+    pub fn frontier_is_empty(&self) -> bool {
+        self.frontier_len == 0
+    }
+
+    pub fn in_frontier(&self, comp: usize) -> bool {
+        self.in_frontier[comp]
+    }
+
+    /// Frontier components carrying urgency metadata (finite deadline or
+    /// non-default priority).
+    pub fn meta_carriers(&self) -> usize {
+        self.meta_carriers
+    }
+
+    /// `comp`'s preferred device type.
+    pub fn pref(&self, comp: usize) -> DeviceType {
+        self.comp_pref[comp]
+    }
+
+    /// `comp`'s bottom-level rank.
+    pub fn rank(&self, comp: usize) -> f64 {
+        self.comp_rank[comp]
+    }
+
+    /// Solo execution-time estimate of a whole component on a device —
+    /// the same kernel-order sum the view API exposed.
+    pub fn component_time(&self, comp: usize, dev: &Device) -> f64 {
+        self.partition.components[comp]
+            .kernels
+            .iter()
+            .map(|&k| self.cost.exec_time(&self.dag.kernels[k], dev))
+            .sum()
+    }
+
+    /// Laxity of `comp` at the current `now`: slack between its absolute
+    /// deadline and its estimated completion were it dispatched now on a
+    /// device of its preferred type (+∞ for deadline-free components).
+    /// O(1) — the component time on the laxity device is memoized; the
+    /// float-op order matches the view-based computation bit for bit.
+    pub fn laxity(&self, comp: usize) -> f64 {
+        if self.deadline[comp].is_infinite() {
+            return f64::INFINITY;
+        }
+        match self.lax_dev[comp] {
+            Some(_) => self.deadline[comp] - self.now - self.lax_time[comp],
+            None => f64::INFINITY,
+        }
+    }
+
+    /// First available device of type `t`, in available-set order — the
+    /// clustering device rule.
+    pub fn first_available_of(&self, t: DeviceType) -> Option<DeviceId> {
+        self.available
+            .iter()
+            .copied()
+            .find(|&d| self.platform.device(d).dtype == t)
+    }
+
+    /// Least-loaded available device of type `t` (ties broken by earliest
+    /// `est_free`, then available-set order) — the serving device rule
+    /// shared by `least-loaded` and `edf`.
+    pub fn least_loaded_available_of(&self, t: DeviceType) -> Option<DeviceId> {
+        self.available
+            .iter()
+            .copied()
+            .filter(|&d| self.platform.device(d).dtype == t)
+            .min_by(|&a, &b| {
+                self.device_load[a]
+                    .total_cmp(&self.device_load[b])
+                    .then_with(|| self.est_free[a].total_cmp(&self.est_free[b]))
+            })
+    }
+
+    // ----------------------------------------------------- frontier heads
+
+    fn rank_peek(&mut self, t: usize) -> Option<RankEntry> {
+        prune_peek!(&mut self.rank_heap[t], self.in_frontier, self.entry_seq)
+    }
+
+    fn dl_peek(&mut self, t: usize) -> Option<DlEntry> {
+        prune_peek!(&mut self.dl_heap[t], self.in_frontier, self.entry_seq)
+    }
+
+    fn fb_peek(&mut self, t: usize) -> Option<FbEntry> {
+        prune_peek!(&mut self.fb_heap[t], self.in_frontier, self.entry_seq)
+    }
+
+    /// Head of the whole frontier in rank order — `frontier[0]` of the
+    /// view API. O(log F).
+    pub fn rank_head(&mut self) -> Option<usize> {
+        let mut best: Option<RankEntry> = None;
+        for t in 0..NTYPES {
+            if let Some(e) = self.rank_peek(t) {
+                if best.map(|b| e > b).unwrap_or(true) {
+                    best = Some(e);
+                }
+            }
+        }
+        best.map(|e| e.comp)
+    }
+
+    /// First frontier component (rank order) whose preferred device type
+    /// currently has an available device — the component the view-based
+    /// `clustering`/`least-loaded` scan found in O(F), now O(log F).
+    pub fn rank_head_placeable(&mut self) -> Option<usize> {
+        let mut best: Option<RankEntry> = None;
+        for t in 0..NTYPES {
+            if self.avail_per_type[t] == 0 {
+                continue;
+            }
+            if let Some(e) = self.rank_peek(t) {
+                if best.map(|b| e > b).unwrap_or(true) {
+                    best = Some(e);
+                }
+            }
+        }
+        best.map(|e| e.comp)
+    }
+
+    /// Most urgent frontier component in the full EDF order (deadline asc,
+    /// laxity asc on exact deadline ties, priority desc, frontier order).
+    /// With `require_available`, only components whose preferred type has
+    /// an available device are considered (the "first placeable in urgency
+    /// order" step of a blocked EDF round). O(T · log F) where T is the
+    /// number of components tied bitwise at the minimum deadline.
+    pub fn urgency_head(&mut self, require_available: bool) -> Option<usize> {
+        // Minimum finite deadline across the considered buckets.
+        let mut min_dl: Option<f64> = None;
+        for t in 0..NTYPES {
+            if require_available && self.avail_per_type[t] == 0 {
+                continue;
+            }
+            if let Some(e) = self.dl_peek(t) {
+                min_dl = Some(match min_dl {
+                    None => e.deadline,
+                    Some(m) if e.deadline.total_cmp(&m).is_lt() => e.deadline,
+                    Some(m) => m,
+                });
+            }
+        }
+        if let Some(d0) = min_dl {
+            // Collect every entry tied bitwise at d0 (lazy-stale entries
+            // were already pruned by dl_peek above), resolve the tie with
+            // the reference comparator, then restore the entries — select
+            // must not consume the frontier.
+            let mut tied = std::mem::take(&mut self.tie_scratch);
+            tied.clear();
+            for t in 0..NTYPES {
+                if require_available && self.avail_per_type[t] == 0 {
+                    continue;
+                }
+                while let Some(e) = self.dl_peek(t) {
+                    if e.deadline.total_cmp(&d0).is_ne() {
+                        break;
+                    }
+                    self.dl_heap[t].pop();
+                    tied.push(e);
+                }
+            }
+            let mut best: Option<(usize, f64)> = None;
+            for e in tied.iter() {
+                let lax = self.laxity(e.comp);
+                let better = match best {
+                    None => true,
+                    Some((b, bl)) => {
+                        lax.total_cmp(&bl)
+                            .then_with(|| self.priority[b].cmp(&self.priority[e.comp]))
+                            .then_with(|| {
+                                self.comp_rank[b].total_cmp(&self.comp_rank[e.comp])
+                            })
+                            .then_with(|| {
+                                self.entry_seq[e.comp].cmp(&self.entry_seq[b])
+                            })
+                            .is_lt()
+                    }
+                };
+                if better {
+                    best = Some((e.comp, lax));
+                }
+            }
+            for e in tied.iter() {
+                self.dl_heap[ti(self.comp_pref[e.comp])].push(*e);
+            }
+            self.tie_scratch = tied;
+            return best.map(|(c, _)| c);
+        }
+        // No finite deadlines in scope: the fallback heaps' static
+        // (priority desc, rank desc, seq asc) order is the urgency order.
+        let mut best: Option<FbEntry> = None;
+        for t in 0..NTYPES {
+            if require_available && self.avail_per_type[t] == 0 {
+                continue;
+            }
+            if let Some(e) = self.fb_peek(t) {
+                if best.map(|b| e > b).unwrap_or(true) {
+                    best = Some(e);
+                }
+            }
+        }
+        best.map(|e| e.comp)
+    }
+
+    /// The full EDF urgency order between two (not necessarily frontier)
+    /// components: deadline ascending, laxity ascending on ties, priority
+    /// descending — [`super::reference::Edf`]'s `urgency_cmp`, served from
+    /// the memoized laxity times.
+    pub fn urgency_cmp(&self, a: usize, b: usize) -> Ordering {
+        self.deadline[a]
+            .total_cmp(&self.deadline[b])
+            .then_with(|| self.laxity(a).total_cmp(&self.laxity(b)))
+            .then_with(|| self.priority[b].cmp(&self.priority[a]))
+    }
+
+    /// The whole frontier in rank order — O(F log F), **not** a hot-path
+    /// API. Escape hatch for custom policies that genuinely need to walk
+    /// the frontier (see `examples/custom_scheduler.rs`) and for tests.
+    pub fn frontier_ranked(&mut self) -> Vec<usize> {
+        let mut entries: Vec<RankEntry> = Vec::with_capacity(self.frontier_len);
+        for t in 0..NTYPES {
+            entries.extend(
+                self.rank_heap[t]
+                    .iter()
+                    .filter(|e| self.in_frontier[e.comp] && self.entry_seq[e.comp] == e.seq)
+                    .copied(),
+            );
+        }
+        entries.sort_by(|a, b| b.cmp(a));
+        entries.into_iter().map(|e| e.comp).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::transformer::{cluster_by_head, transformer_dag};
+
+    fn state_for(
+        dag: &Dag,
+        part: &Partition,
+        platform: &Platform,
+        deadline: Vec<f64>,
+        priority: Vec<u32>,
+    ) -> SchedState<'static> {
+        // Tests leak the inputs to get a 'static state — fine for a test
+        // process, and it keeps call sites free of lifetime gymnastics.
+        let dag: &'static Dag = Box::leak(Box::new(dag.clone()));
+        let part: &'static Partition = Box::leak(Box::new(part.clone()));
+        let platform: &'static Platform = Box::leak(Box::new(platform.clone()));
+        SchedState::new(dag, part, platform, &PaperCost, 1, deadline, priority).unwrap()
+    }
+
+    fn heads_app(n: usize, h_cpu: usize) -> (Dag, Partition) {
+        let (dag, ios) = transformer_dag(n, 64, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, h_cpu);
+        (dag, part)
+    }
+
+    #[test]
+    fn frontier_order_is_rank_desc_then_fifo() {
+        let (dag, part) = heads_app(3, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let n = part.components.len();
+        let mut st = state_for(&dag, &part, &platform, vec![f64::INFINITY; n], vec![0; n]);
+        // Equal ranks (identical heads): order must be insertion order.
+        st.on_ready(2);
+        st.on_ready(0);
+        st.on_ready(1);
+        assert_eq!(st.frontier_ranked(), vec![2, 0, 1]);
+        assert_eq!(st.rank_head(), Some(2));
+        assert_eq!(st.frontier_len(), 3);
+    }
+
+    #[test]
+    fn dispatch_and_tenancy_track_availability() {
+        let (dag, part) = heads_app(2, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let n = part.components.len();
+        let mut st = state_for(&dag, &part, &platform, vec![f64::INFINITY; n], vec![0; n]);
+        st.on_ready(0);
+        st.on_ready(1);
+        assert!(st.has_available(DeviceType::Gpu));
+        st.on_dispatch(0, 0);
+        // tenancy 1: the GPU leaves the available set.
+        assert!(!st.has_available(DeviceType::Gpu));
+        assert!(st.has_available(DeviceType::Cpu));
+        assert_eq!(st.frontier_len(), 1);
+        assert_eq!(st.rank_head(), Some(1));
+        st.on_complete(0);
+        assert!(st.has_available(DeviceType::Gpu));
+        // Available order is FIFO: CPU (never removed) first, GPU re-added.
+        assert_eq!(st.available().to_vec(), vec![1, 0]);
+    }
+
+    /// Preemption re-entry must invalidate the victim's stale heap entries:
+    /// the re-entered component gets a fresh seq and (with equal ranks)
+    /// moves to the back of the FIFO tier.
+    #[test]
+    fn preempt_reentry_skips_stale_entries() {
+        let (dag, part) = heads_app(3, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let n = part.components.len();
+        let mut st = state_for(&dag, &part, &platform, vec![f64::INFINITY; n], vec![0; n]);
+        st.on_ready(0);
+        st.on_ready(1);
+        st.on_ready(2);
+        st.on_dispatch(0, 0);
+        assert_eq!(st.tenants[0], 1);
+        st.on_preempt(0);
+        assert_eq!(st.tenants[0], 0);
+        assert!(st.has_available(DeviceType::Gpu));
+        st.on_ready(0); // fresh seq: equal rank ⇒ now behind 1 and 2
+        assert_eq!(st.frontier_ranked(), vec![1, 2, 0]);
+        assert_eq!(st.rank_head(), Some(1));
+        // The stale seq-0 entry for comp 0 must not resurface after the
+        // head is consumed.
+        st.on_dispatch(1, 0);
+        st.on_complete(0);
+        assert_eq!(st.frontier_ranked(), vec![2, 0]);
+        assert_eq!(st.rank_head(), Some(2));
+    }
+
+    #[test]
+    fn urgency_head_orders_by_deadline_then_static_fallback() {
+        let (dag, part) = heads_app(3, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let n = part.components.len();
+        let mut st = state_for(
+            &dag,
+            &part,
+            &platform,
+            vec![0.5, 0.2, f64::INFINITY],
+            vec![0, 0, 7],
+        );
+        st.on_ready(0);
+        st.on_ready(1);
+        st.on_ready(2);
+        assert_eq!(st.meta_carriers(), 3);
+        // Finite deadlines beat any priority on an ∞ deadline.
+        assert_eq!(st.urgency_head(false), Some(1));
+        st.on_dispatch(1, 0);
+        assert_eq!(st.urgency_head(false), Some(0));
+        st.on_complete(0);
+        st.on_dispatch(0, 0);
+        // Only the ∞-deadline carrier remains.
+        assert_eq!(st.urgency_head(false), Some(2));
+        assert_eq!(st.meta_carriers(), 1);
+    }
+
+    /// Exact deadline ties resolve by laxity: a CPU-preferring component
+    /// (slow ⇒ less slack) must come first even though the GPU component
+    /// outranks it in FIFO terms.
+    #[test]
+    fn urgency_tie_breaks_by_laxity_across_buckets() {
+        let (dag, part) = heads_app(2, 1); // head 0 on CPU, head 1 on GPU
+        let platform = Platform::paper_testbed(3, 1);
+        let n = part.components.len();
+        let mut st = state_for(&dag, &part, &platform, vec![0.4, 0.4], vec![0; n]);
+        st.on_ready(1);
+        st.on_ready(0);
+        assert!(st.laxity(0) < st.laxity(1), "CPU comp should have less slack");
+        assert_eq!(st.urgency_head(false), Some(0));
+        // Restricted to available types: with the CPU bucket masked out the
+        // GPU component is the most urgent placeable one.
+        while let Some(d) = st.first_available_of(DeviceType::Cpu) {
+            st.mark_unavailable(d);
+        }
+        assert_eq!(st.urgency_head(true), Some(1));
+    }
+
+    #[test]
+    fn urgency_head_consumes_nothing() {
+        let (dag, part) = heads_app(2, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let mut st = state_for(&dag, &part, &platform, vec![0.3, 0.3], vec![0, 0]);
+        st.on_ready(0);
+        st.on_ready(1);
+        let first = st.urgency_head(false);
+        let second = st.urgency_head(false);
+        assert_eq!(first, second, "urgency peek must be idempotent");
+        assert_eq!(st.frontier_len(), 2);
+    }
+}

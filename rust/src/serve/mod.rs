@@ -26,13 +26,13 @@
 //! * [`real`] — the real path over [`crate::exec::execute_dag_served`]'s
 //!   thread-per-queue machinery (PJRT kernels), with open- or closed-loop
 //!   arrival pacing ([`Pacing`]), per-component deadline metadata threaded
-//!   into the executor's `SchedView`, and a warm executable cache whose
+//!   into the executor's scheduler state, and a warm executable cache whose
 //!   hit/miss counts and cold-vs-warm batch latency the report carries.
 //!
 //! Multi-tenancy itself lives one layer down: `SimConfig::max_tenants` /
 //! `execute_dag_multi`'s `tenancy` let several components — from different
-//! requests — reside on one device, and the widened
-//! [`crate::sched::SchedView`] exposes the resulting cross-DAG device load
+//! requests — reside on one device, and the shared
+//! [`crate::sched::SchedState`] exposes the resulting cross-DAG device load
 //! to every [`crate::sched::Policy`].
 //!
 //! Serving is **deadline-aware**: each request's deadline (made absolute)

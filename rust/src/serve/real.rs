@@ -12,7 +12,7 @@
 //! latency degenerates to service latency when the loop outruns arrivals
 //! ([`super::engine::request_outcome`] defines both semantics in one
 //! place). **Deadline metadata** is threaded per component into the
-//! executor's `SchedView` (re-based to each batch's clock), so `edf` orders
+//! executor's scheduler state (re-based to each batch's clock), so `edf` orders
 //! real dispatch by urgency too; preemption stays sim-only — OS threads
 //! cannot be displaced mid-kernel. **Executable cache**: one
 //! [`Runtime`] serves every batch, so artifacts compile once per process —
@@ -171,7 +171,7 @@ pub fn serve_real(
         }
         let (_, batch_misses0) = runtime.cache_stats();
         let start = epoch.elapsed().as_secs_f64();
-        // Deadline/priority metadata for the executor's SchedView, re-based
+        // Deadline/priority metadata for the executor's SchedState, re-based
         // to the batch's clock (the executor's `now` starts at 0 per call):
         // absolute deadline on the serving epoch minus the batch start.
         let mut meta = vec![CompMeta::default(); merged.partition.components.len()];

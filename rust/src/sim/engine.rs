@@ -31,13 +31,24 @@
 //! operation order of the pre-refactor engine — proven byte-identical
 //! against the verbatim copy in [`super::reference`] by the
 //! `integration_sim_equiv` suite.
+//!
+//! §Scheduler core (PR 5): the engine no longer owns the frontier/device
+//! scheduler bookkeeping — it drives the shared, incrementally indexed
+//! [`SchedState`] with the deltas its event loop already computes
+//! (`on_ready` on release/unblock, `on_dispatch`, `on_complete` on the
+//! final callback, `on_preempt` on displacement), and policies query that
+//! state in O(log frontier) instead of scanning a per-call `SchedView`.
+//! The real executor ([`crate::exec`]) drives the *same* state type, so
+//! sim and real share one scheduler core. Decision equivalence against
+//! the view-based reference policies is proven by `prop_policy_equiv` and
+//! the bit-identical `integration_sim_equiv` suite.
 
 use crate::cost::{contention, CostModel};
 use crate::error::{Error, Result};
 use crate::graph::{Dag, KernelId, Partition};
 use crate::platform::{DeviceId, Platform};
 use crate::queue::{setup_cq, CmdId, CommandKind, CommandQueues};
-use crate::sched::{component_ranks, Policy, ResidentTenant, SchedView};
+use crate::sched::{Policy, ResidentTenant, SchedState};
 use crate::trace::{Lane, Span, Trace};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -248,7 +259,7 @@ pub fn simulate_released(
 
 /// Deadline-aware serving entry point: [`simulate_released`] plus absolute
 /// deadlines and priorities per component, exposed to every policy through
-/// [`SchedView`] and consulted by the preemption hook
+/// the shared [`SchedState`] and consulted by the preemption hook
 /// ([`Policy::preempt`]). With default metadata this is exactly
 /// [`simulate`].
 #[allow(clippy::too_many_arguments)]
@@ -295,23 +306,11 @@ struct Engine<'a> {
     heap: BinaryHeap<Reverse<Ev>>,
     trace: Trace,
 
-    // Scheduler state (Algorithm 1).
-    frontier: Vec<usize>,
-    /// O(1) frontier membership (mirror of `frontier`).
-    in_frontier: Vec<bool>,
-    comp_rank: Vec<f64>,
-    available: Vec<DeviceId>,
-    /// O(1) available-set membership (mirror of `available`).
-    dev_available: Vec<bool>,
-    est_free: Vec<f64>,
+    // Scheduler state (Algorithm 1): the shared incrementally indexed
+    // core — frontier buckets, availability, tenancy, est_free, load.
+    state: SchedState<'a>,
     /// Earliest instant each component may join the frontier (serving).
     release: Vec<f64>,
-    /// Absolute deadline per component (∞ when the request has none).
-    deadline: Vec<f64>,
-    /// Request priority per component (0 default).
-    priority: Vec<u32>,
-    /// Components currently resident per device (multi-tenant serving).
-    tenants: Vec<usize>,
     /// Outstanding external predecessor kernels per component.
     ext_preds_left: Vec<usize>,
     /// comp list each kernel unblocks when globally finished.
@@ -359,11 +358,10 @@ struct Engine<'a> {
     /// Callback-kernel count per component (`callbacks_left` seed).
     cb_count: Vec<usize>,
 
-    // Cached cross-DAG load signal + reusable per-event scratch.
-    /// Σ occupancy of running kernels per device; refreshed from `runs`
-    /// (same iteration order as the former per-call recompute, so values
-    /// are bit-identical) only when the running set changed.
-    device_load_cache: Vec<f64>,
+    // Cross-DAG load refresh flag + reusable per-event scratch. The load
+    // itself lives in `SchedState::device_load`; it is refreshed from
+    // `runs` (same iteration order as the former per-call recompute, so
+    // values are bit-identical) only when the running set changed.
     load_dirty: bool,
     rates: Vec<f64>,
     scratch_idx: Vec<usize>,
@@ -435,7 +433,6 @@ impl<'a> Engine<'a> {
                 is_async_kernel[k] = true;
             }
         }
-        let comp_rank = component_ranks(dag, partition, platform, cost);
         let release: Vec<f64> = meta
             .map(|m| m.iter().map(|c| c.release).collect())
             .unwrap_or_else(|| vec![0.0; ncomp]);
@@ -445,28 +442,24 @@ impl<'a> Engine<'a> {
         let priority: Vec<u32> = meta
             .map(|m| m.iter().map(|c| c.priority).collect())
             .unwrap_or_else(|| vec![0; ncomp]);
-        let mut frontier: Vec<usize> = (0..ncomp)
-            .filter(|&c| ext_preds_left[c] == 0 && release[c] <= 0.0)
-            .collect();
-        frontier.sort_by(|&a, &b| comp_rank[b].total_cmp(&comp_rank[a]));
-        let mut in_frontier = vec![false; ncomp];
-        for &c in &frontier {
-            in_frontier[c] = true;
-        }
-        let available: Vec<DeviceId> = platform
-            .devices
-            .iter()
-            .filter(|d| d.num_queues > 0)
-            .map(|d| d.id)
-            .collect();
-        if available.is_empty() {
-            return Err(Error::Sched("no device has command queues".into()));
+        let mut state = SchedState::new(
+            dag,
+            partition,
+            platform,
+            cost,
+            cfg.max_tenants.max(1),
+            deadline,
+            priority,
+        )?;
+        // Initially ready components enter in ascending id order, which
+        // assigns FIFO seqs matching the stable rank sort the pre-indexed
+        // engine applied (equal ranks stay in component-id order).
+        for c in 0..ncomp {
+            if ext_preds_left[c] == 0 && release[c] <= 0.0 {
+                state.on_ready(c);
+            }
         }
         let ndev = platform.devices.len();
-        let mut dev_available = vec![false; ndev];
-        for &d in &available {
-            dev_available[d] = true;
-        }
         Ok(Engine {
             dag,
             partition,
@@ -478,16 +471,8 @@ impl<'a> Engine<'a> {
             seq: 0,
             heap: BinaryHeap::new(),
             trace: Trace::default(),
-            frontier,
-            in_frontier,
-            comp_rank,
-            available,
-            dev_available,
-            est_free: vec![0.0; ndev],
+            state,
             release,
-            deadline,
-            priority,
-            tenants: vec![0; ndev],
             ext_preds_left,
             unblocks,
             kernel_finished: vec![false; nk],
@@ -514,7 +499,6 @@ impl<'a> Engine<'a> {
             is_cb_kernel,
             is_async_kernel,
             cb_count,
-            device_load_cache: vec![0.0; ndev],
             load_dirty: false,
             rates: Vec::new(),
             scratch_idx: Vec::new(),
@@ -563,60 +547,19 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Remove `comp` from the rank-ordered frontier + membership bitset.
-    /// Policies overwhelmingly select at or near the head, so the position
-    /// scan is effectively O(1); a plain `retain` always walked all of `F`.
-    fn frontier_remove(&mut self, comp: usize) {
-        if !self.in_frontier[comp] {
-            return;
-        }
-        self.in_frontier[comp] = false;
-        let pos = self
-            .frontier
-            .iter()
-            .position(|&c| c == comp)
-            .expect("bitset says comp is in frontier");
-        self.frontier.remove(pos);
-    }
-
-    /// Return `dev` to the available set (no-op if already present).
-    fn available_add(&mut self, dev: DeviceId) {
-        if !self.dev_available[dev] {
-            self.dev_available[dev] = true;
-            self.available.push(dev);
-        }
-    }
-
-    /// Remove `dev` from the available set (no-op if absent), preserving
-    /// the set's order for the policies that scan it.
-    fn available_remove(&mut self, dev: DeviceId) {
-        if !self.dev_available[dev] {
-            return;
-        }
-        self.dev_available[dev] = false;
-        let pos = self
-            .available
-            .iter()
-            .position(|&d| d == dev)
-            .expect("bitset says dev is available");
-        self.available.remove(pos);
-    }
-
     // ---------------------------------------------------------- scheduling
 
-    /// Refresh the cached per-device load (Σ occupancy of running kernels
-    /// — the cross-DAG load signal exposed to policies). Iterates `runs`
-    /// in the same order the former per-call recompute did, so the sums
-    /// are bit-identical; the cache is only invalidated when the running
-    /// set actually changes, so a scheduler phase that dispatches K
-    /// components pays one refresh instead of K+1 full scans + Vec
-    /// allocations.
+    /// Refresh the per-device load cached in the scheduler state
+    /// (Σ occupancy of running kernels — the cross-DAG load signal exposed
+    /// to policies). Iterates `runs` in the same order the former per-call
+    /// recompute did, so the sums are bit-identical; the cache is only
+    /// invalidated when the running set actually changes.
     fn refresh_device_load(&mut self) {
-        for l in self.device_load_cache.iter_mut() {
+        for l in self.state.device_load.iter_mut() {
             *l = 0.0;
         }
         for r in &self.runs {
-            self.device_load_cache[r.device] += r.occupancy;
+            self.state.device_load[r.device] += r.occupancy;
         }
         self.load_dirty = false;
     }
@@ -633,31 +576,21 @@ impl<'a> Engine<'a> {
         // the component count.
         let mut preempt_budget = self.partition.components.len().max(8);
         let mut retry_after_preempt = false;
+        // One clock update per phase: every select/preempt in this phase
+        // sees the same `now` the former per-call view carried.
+        self.state.now = self.now;
         loop {
             if self.load_dirty {
                 self.refresh_device_load();
             }
-            let view = SchedView {
-                now: self.now,
-                frontier: &self.frontier,
-                available: &self.available,
-                platform: self.platform,
-                partition: self.partition,
-                dag: self.dag,
-                est_free: &self.est_free,
-                device_load: &self.device_load_cache,
-                deadline: &self.deadline,
-                priority: &self.priority,
-                cost: self.cost,
-            };
-            if let Some((comp, dev)) = self.policy.select(&view) {
+            if let Some((comp, dev)) = self.policy.select(&mut self.state) {
                 retry_after_preempt = false;
                 self.dispatch(comp, dev);
                 continue;
             }
             if retry_after_preempt
                 || preempt_budget == 0
-                || self.frontier.is_empty()
+                || self.state.frontier_is_empty()
                 || !self.policy.can_preempt()
             {
                 break;
@@ -684,7 +617,7 @@ impl<'a> Engine<'a> {
             if resident.is_empty() {
                 break;
             }
-            match self.policy.preempt(&view, &resident) {
+            match self.policy.preempt(&mut self.state, &resident) {
                 Some(victim) if self.displace(victim) => {
                     preempt_budget -= 1;
                     retry_after_preempt = true;
@@ -697,11 +630,8 @@ impl<'a> Engine<'a> {
     fn dispatch(&mut self, comp: usize, dev: DeviceId) {
         assert!(!self.comp_dispatched[comp], "component {comp} re-dispatched");
         self.comp_dispatched[comp] = true;
-        self.frontier_remove(comp);
-        self.tenants[dev] += 1;
-        if self.tenants[dev] >= self.cfg.max_tenants.max(1) {
-            self.available_remove(dev);
-        }
+        // Frontier exit + tenant accounting + availability, in one event.
+        self.state.on_dispatch(comp, dev);
         self.comp_device[comp] = dev;
 
         // setup_cq runs on a child thread: commands are issuable after the
@@ -734,7 +664,7 @@ impl<'a> Engine<'a> {
             .map(|b| self.platform.transfer_time(dev, self.dag.buffers[b].size_bytes))
             .sum();
         let est_committed = solo + transfers + self.platform.callback_latency;
-        self.est_free[dev] = self.est_free[dev].max(ready_at) + est_committed;
+        self.state.est_free[dev] = self.state.est_free[dev].max(ready_at) + est_committed;
 
         // Per-kernel outstanding-command counts, in the engine-wide flat
         // table (zeroed first: a preempted component's stale counts die
@@ -824,13 +754,13 @@ impl<'a> Engine<'a> {
         self.comp_active_disp[victim] = None;
         self.resident_remove(victim);
         self.comp_dispatched[victim] = false;
-        self.tenants[dev] -= 1;
-        self.available_add(dev);
+        self.state.on_preempt(dev);
         // Roll back the EFT booking made at dispatch (the re-dispatch will
         // book afresh); partial progress is forfeited with it.
-        self.est_free[dev] = (self.est_free[dev] - self.dispatches[di].est_committed).max(self.now);
-        if self.tenants[dev] == 0 {
-            self.est_free[dev] = self.now;
+        self.state.est_free[dev] =
+            (self.state.est_free[dev] - self.dispatches[di].est_committed).max(self.now);
+        if self.state.tenants[dev] == 0 {
+            self.state.est_free[dev] = self.now;
         }
         self.preemptions += 1;
         self.trace.push(Span {
@@ -1075,10 +1005,9 @@ impl<'a> Engine<'a> {
                 "callbacks after all commands"
             );
             let dev = self.dispatches[di].device;
-            self.tenants[dev] -= 1;
-            self.available_add(dev);
-            if self.tenants[dev] == 0 {
-                self.est_free[dev] = self.now;
+            self.state.on_complete(dev);
+            if self.state.tenants[dev] == 0 {
+                self.state.est_free[dev] = self.now;
             }
             self.comp_finish[comp] = self.now;
             self.comp_active_disp[comp] = None;
@@ -1087,22 +1016,14 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Add a ready, released component to the rank-sorted (descending)
-    /// frontier. Binary-search insertion keeps the invariant in O(log F)
-    /// compares + one shift; the membership guard is the O(1) bitset.
-    /// Equal ranks insert after existing entries, matching the stable sort
-    /// the original implementation used.
+    /// Add a ready, released component to the indexed frontier. The state
+    /// assigns a fresh FIFO seq, so equal ranks order behind existing
+    /// entries — the same stable order the pre-indexed sorted `Vec` kept.
     fn enter_frontier(&mut self, comp: usize) {
-        if self.comp_dispatched[comp] || self.in_frontier[comp] {
+        if self.comp_dispatched[comp] {
             return;
         }
-        self.in_frontier[comp] = true;
-        let rank = self.comp_rank[comp];
-        let ranks = &self.comp_rank;
-        let idx = self
-            .frontier
-            .partition_point(|&c| ranks[c].total_cmp(&rank).is_ge());
-        self.frontier.insert(idx, comp);
+        self.state.on_ready(comp);
     }
 
     // ------------------------------------------------------------- kernels
@@ -1777,7 +1698,7 @@ mod tests {
             &part,
             &platform,
             &PaperCost,
-            &mut crate::sched::Edf,
+            &mut crate::sched::reference::Edf,
             &cfg,
             &meta,
         )

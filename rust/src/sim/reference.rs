@@ -5,7 +5,10 @@
 //! the *old* linear scans (`issue_phase` over every dispatch ever created,
 //! `retain`/`contains` membership walks, `device_load` recomputed per
 //! policy call); do **not** use it outside equivalence tests or the
-//! before/after rows of `benches/serve_scale.rs`.
+//! before/after rows of `benches/serve_scale.rs` /
+//! `benches/serve_overload.rs`. It schedules through the **view-based
+//! reference policies** ([`crate::sched::reference`]) — the pre-PR-5
+//! `Policy` trait whose `select` scans a per-call [`SchedView`].
 
 use super::engine::{CompMeta, SimConfig, SimResult};
 use crate::cost::{contention, CostModel};
@@ -13,7 +16,8 @@ use crate::error::{Error, Result};
 use crate::graph::{Dag, KernelId, Partition};
 use crate::platform::{DeviceId, Platform};
 use crate::queue::{setup_cq, CmdId, CommandKind, CommandQueues};
-use crate::sched::{component_ranks, Policy, ResidentTenant, SchedView};
+use crate::sched::reference::{Policy, SchedView};
+use crate::sched::{component_ranks, ResidentTenant};
 use crate::trace::{Lane, Span, Trace};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

@@ -18,7 +18,7 @@ use pyschedcl::sched::{Clustering, Edf, Policy};
 use pyschedcl::serve::{serve_real, ServeConfig, ServeRequest, Workload};
 
 /// Real-path `edf` must reorder dispatch by urgency now that per-component
-/// deadline metadata reaches the executor's `SchedView`. Scenario: eight
+/// deadline metadata reaches the executor's scheduler state. Scenario: eight
 /// simultaneous arrivals of one signature coalesce into a single batch on
 /// an exclusive single-GPU platform (tenancy 1 ⇒ strictly sequential
 /// service). Only the *last* admitted request carries a deadline of 2.5

@@ -1,15 +1,17 @@
-//! ISSUE acceptance: the indexed, allocation-free engine must yield
-//! **byte-identical** `SimResult`s (makespan, per-component finish/device,
-//! preemption count) to the verbatim pre-refactor engine
-//! (`pyschedcl::sim::reference`) on seeded serve streams — including EDF
-//! with preemption — and the batch-block + template-cache serving pipeline
+//! ISSUE acceptance: the indexed stack — the allocation-free engine
+//! driving the event-driven `SchedState` with **indexed policies** — must
+//! yield **byte-identical** `SimResult`s (makespan, per-component
+//! finish/device, preemption count) to the verbatim pre-refactor stack
+//! (`pyschedcl::sim::reference` engine + `pyschedcl::sched::reference`
+//! view-based policies) on seeded serve streams — including EDF with
+//! preemption — and the batch-block + template-cache serving pipeline
 //! must reproduce the old admitted-order pipeline bit-for-bit on
 //! single-signature streams (where the old assembly order is well-defined
 //! to be identical).
 
 use pyschedcl::cost::PaperCost;
 use pyschedcl::platform::Platform;
-use pyschedcl::sched::{Clustering, Edf, LeastLoaded, Policy};
+use pyschedcl::sched::{reference, Clustering, Edf, LeastLoaded, Policy};
 use pyschedcl::serve::{
     batch_requests, merge_apps, poisson_arrivals, serve_sim, ServeConfig, ServeRequest, Workload,
 };
@@ -37,20 +39,24 @@ fn assert_bit_identical(new: &SimResult, old: &SimResult, what: &str) {
     );
 }
 
-/// Run both engines on one merged serve input and compare bitwise.
+/// Run both full stacks — the indexed engine + indexed policy vs the
+/// reference engine + view-based reference policy — on one merged serve
+/// input and compare bitwise.
+#[allow(clippy::too_many_arguments)]
 fn both(
     dag: &pyschedcl::graph::Dag,
     part: &pyschedcl::graph::Partition,
     platform: &Platform,
-    mk_policy: impl Fn() -> Box<dyn Policy>,
+    mk_new: impl Fn() -> Box<dyn Policy>,
+    mk_old: impl Fn() -> Box<dyn reference::Policy>,
     cfg: &SimConfig,
     meta: &[CompMeta],
     what: &str,
 ) -> (SimResult, SimResult) {
-    let mut p_new = mk_policy();
+    let mut p_new = mk_new();
     let new = simulate_served(dag, part, platform, &PaperCost, p_new.as_mut(), cfg, meta)
         .expect("optimized engine");
-    let mut p_old = mk_policy();
+    let mut p_old = mk_old();
     let old = simulate_served_ref(dag, part, platform, &PaperCost, p_old.as_mut(), cfg, meta)
         .expect("reference engine");
     assert_bit_identical(&new, &old, what);
@@ -85,6 +91,7 @@ fn equivalence_poisson_head_stream_clustering() {
         &merged.partition,
         &platform,
         || Box::new(Clustering),
+        || Box::new(reference::Clustering),
         &cfg,
         &meta,
         "poisson head stream",
@@ -128,6 +135,7 @@ fn equivalence_mixed_stream_least_loaded() {
         &merged.partition,
         &platform,
         || Box::new(LeastLoaded),
+        || Box::new(reference::LeastLoaded),
         &cfg,
         &meta,
         "mixed stream",
@@ -170,6 +178,7 @@ fn equivalence_edf_stream_with_preemption() {
         &merged.partition,
         &platform,
         || Box::new(Edf),
+        || Box::new(reference::Edf),
         &cfg,
         &meta,
         "edf preemption stream",
@@ -244,7 +253,7 @@ fn serve_sim_matches_old_pipeline_on_single_signature_stream() {
         &merged.partition,
         &platform,
         &PaperCost,
-        &mut Edf,
+        &mut reference::Edf,
         &sim_cfg,
         &meta,
     )
