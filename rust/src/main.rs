@@ -22,6 +22,7 @@
 //!                 [--mode sim|real] [--pacing closed|open] [--prewarm]
 //!                 [--admission-laxity on|off]
 //!                 [--autoscale-target F] [--autoscale-max-gpus N]
+//!                 [--streaming] [--window 512] [--outcomes-jsonl OUT]
 //!                 [--json OUT]                      multi-DAG serving
 //! pyschedcl bench-check --baseline F --current F [--tolerance 0.15]
 //!                 [--update]       CI bench-regression gate
@@ -48,6 +49,14 @@
 //! The 10k-request scale proof lives in `benches/serve_scale.rs`
 //! (`cargo bench --bench serve_scale`), gated in CI via `bench-check`
 //! against `ci/bench_baselines/BENCH_serve_scale.json`.
+//!
+//! Always-on serving (PR 6): `--streaming` runs the same stream through the
+//! long-lived bounded-memory server ([`pyschedcl::serve::serve_stream`]) —
+//! admission interleaves with execution under a `--window N` live-request
+//! bound, completed requests are retired, and `--outcomes-jsonl OUT`
+//! streams one JSON object per completion instead of accumulating a report
+//! vector. The 1M-request soak proof lives in `benches/serve_soak.rs`,
+//! gated in CI against `ci/bench_baselines/BENCH_serve_soak.json`.
 
 use pyschedcl::cost::{CalibratedCost, CostModel, PaperCost};
 use pyschedcl::error::{Error, Result};
@@ -57,14 +66,16 @@ use pyschedcl::json::Json;
 use pyschedcl::platform::{DeviceType, Platform};
 use pyschedcl::report::experiments as expts;
 use pyschedcl::report::{
-    check_bench, format_gate, format_real_summary, format_serve_comparison, parse_baseline,
-    serve_bench_json, update_baseline,
+    check_bench, format_gate, format_real_summary, format_serve_comparison,
+    format_stream_summary, parse_baseline, peak_rss_mb, serve_bench_json, serve_soak_json,
+    update_baseline,
 };
 use pyschedcl::runtime::{manifest::default_artifact_dir, Runtime};
 use pyschedcl::sched::{Clustering, Eager, Edf, Heft, LeastLoaded, Policy};
 use pyschedcl::serve::{
-    parse_rate, poisson_arrivals, serve_real, serve_sequential, serve_sim, trace_arrivals,
-    Pacing, ServeConfig, ServeRequest, Workload,
+    parse_rate, poisson_arrivals, serve_real, serve_sequential, serve_sim, serve_stream,
+    trace_arrivals, JsonlSink, NullSink, Pacing, ServeConfig, ServeRequest, StreamingConfig,
+    Workload,
 };
 use pyschedcl::sim::{simulate, SimConfig};
 use pyschedcl::spec::parse_spec;
@@ -445,6 +456,72 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.tenancy,
         cfg.pacing.as_str(),
     );
+
+    // A bare `--streaming` parses as the value "true".
+    let streaming = match args.get("streaming") {
+        None | Some("false") | Some("off") => false,
+        Some("true") | Some("on") => true,
+        Some(other) => {
+            return Err(Error::Io(format!(
+                "unknown streaming '{other}' (expected on|off)"
+            )))
+        }
+    };
+    if streaming {
+        if args.get("mode") == Some("real") {
+            return Err(Error::Io(
+                "--streaming runs the simulated always-on server (drop --mode real)".into(),
+            ));
+        }
+        if args.get("autoscale-target").is_some() {
+            return Err(Error::Io(
+                "--autoscale-target is a batch-mode experiment (drop --streaming)".into(),
+            ));
+        }
+        let scfg = StreamingConfig {
+            window: args.usize_or("window", 512),
+            batch_window: cfg.batch_window,
+            tenancy: cfg.tenancy,
+            laxity_admission: cfg.laxity_admission,
+            sim: SimConfig::default(),
+        };
+        let mut policy = policy_by_name(policy_name)?;
+        let wall = std::time::Instant::now();
+        let report = match args.get("outcomes-jsonl") {
+            Some(path) => {
+                let file = std::fs::File::create(path)
+                    .map_err(|e| Error::Io(format!("cannot create {path}: {e}")))?;
+                let mut sink = JsonlSink::new(std::io::BufWriter::new(file));
+                let r = serve_stream(
+                    requests,
+                    &platform,
+                    &PaperCost,
+                    policy.as_mut(),
+                    &scfg,
+                    &mut sink,
+                )?;
+                println!("wrote per-request outcomes to {path}");
+                r
+            }
+            None => serve_stream(
+                requests,
+                &platform,
+                &PaperCost,
+                policy.as_mut(),
+                &scfg,
+                &mut NullSink,
+            )?,
+        };
+        let wall_seconds = wall.elapsed().as_secs_f64();
+        print!("{}", format_stream_summary(&report));
+        if let Some(path) = args.get("json") {
+            let json = serve_soak_json(&report, wall_seconds, peak_rss_mb());
+            std::fs::write(path, json.to_string_pretty())
+                .map_err(|e| Error::Io(format!("cannot write {path}: {e}")))?;
+            println!("wrote {path}");
+        }
+        return Ok(());
+    }
 
     if args.get("mode") == Some("real") {
         if args.get("autoscale-target").is_some() {

@@ -46,6 +46,11 @@ pub struct CheckSpec {
     /// invariants (served-request counts, cache hits) set `0` so a widened
     /// gate can never accept silently dropped requests.
     pub tolerance: Option<f64>,
+    /// Platform-dependent metrics (e.g. `peak_rss_mb`, emitted only on
+    /// Linux) set this: a *missing* metric is skipped instead of failed.
+    /// A present metric is still checked normally — optional never weakens
+    /// the bound, only the presence requirement.
+    pub optional: bool,
 }
 
 /// A parsed baseline file.
@@ -94,6 +99,7 @@ pub fn parse_baseline(text: &str) -> Result<Baseline> {
             min,
             slack: c.get("slack").and_then(|v| v.as_f64()).unwrap_or(0.0),
             tolerance: c.get("tolerance").and_then(|v| v.as_f64()),
+            optional: c.get("optional").and_then(|v| v.as_bool()).unwrap_or(false),
         });
     }
     Ok(Baseline { tolerance, checks })
@@ -113,7 +119,7 @@ pub fn lookup_metric(root: &Json, path: &str) -> Option<f64> {
 pub struct GateResult {
     pub path: String,
     /// `None` when the path is missing from the artifact (schema drift —
-    /// always a failure).
+    /// a failure unless the check is marked `optional`).
     pub observed: Option<f64>,
     /// Human-readable allowed range after tolerance/slack widening.
     pub allowed: String,
@@ -146,7 +152,7 @@ pub fn check_bench(baseline: &Baseline, current: &Json, tolerance: Option<f64>) 
                 (None, None) => "(unbounded)".into(),
             };
             let ok = match observed {
-                None => false,
+                None => c.optional,
                 Some(v) => {
                     v.is_finite()
                         && hi.map(|h| v <= h).unwrap_or(true)
@@ -187,25 +193,38 @@ pub fn format_gate(results: &[GateResult]) -> String {
 
 /// Re-baseline: rewrite every check's bounds to the observed values
 /// (tolerance/slack still widen them at check time). Missing metrics are a
-/// typed error — re-baselining must not silently drop coverage.
+/// typed error — re-baselining must not silently drop coverage — except
+/// for `optional` checks, whose committed bounds are preserved verbatim
+/// when the metric is absent (re-baselining on a platform that cannot emit
+/// the metric must not erase the bound other platforms are gated by).
 pub fn update_baseline(baseline: &Baseline, current: &Json) -> Result<Json> {
     let mut checks = Vec::with_capacity(baseline.checks.len());
     for c in &baseline.checks {
-        let observed = lookup_metric(current, &c.path).ok_or_else(|| {
-            Error::Bench(format!("cannot re-baseline '{}': metric missing", c.path))
-        })?;
+        let observed = match lookup_metric(current, &c.path) {
+            Some(v) => Some(v),
+            None if c.optional => None,
+            None => {
+                return Err(Error::Bench(format!(
+                    "cannot re-baseline '{}': metric missing",
+                    c.path
+                )))
+            }
+        };
         let mut fields = vec![("path", Json::str(c.path.clone()))];
-        if c.max.is_some() {
-            fields.push(("max", Json::num(observed)));
+        if let Some(m) = c.max {
+            fields.push(("max", Json::num(observed.unwrap_or(m))));
         }
-        if c.min.is_some() {
-            fields.push(("min", Json::num(observed)));
+        if let Some(m) = c.min {
+            fields.push(("min", Json::num(observed.unwrap_or(m))));
         }
         if c.slack != 0.0 {
             fields.push(("slack", Json::num(c.slack)));
         }
         if let Some(t) = c.tolerance {
             fields.push(("tolerance", Json::num(t)));
+        }
+        if c.optional {
+            fields.push(("optional", Json::Bool(true)));
         }
         checks.push(Json::obj(fields));
     }
@@ -287,6 +306,44 @@ mod tests {
         assert!(!r[3].ok, "per-check tolerance must beat the CLI override");
         let r = check_bench(&b, &bench_n(0.05, 100.0, 0.0, 32.0), None);
         assert!(r[3].ok);
+    }
+
+    #[test]
+    fn optional_checks_skip_missing_metrics_but_gate_present_ones() {
+        let base = r#"{
+            "schema": "pyschedcl-bench-baseline-v1",
+            "checks": [
+                {"path": "peak_rss_mb", "max": 1024.0, "optional": true},
+                {"path": "requests", "min": 32, "tolerance": 0}
+            ]
+        }"#;
+        let b = parse_baseline(base).unwrap();
+        assert!(b.checks[0].optional && !b.checks[1].optional);
+        // Metric absent (non-Linux runner): the optional check passes, the
+        // mandatory one still gates.
+        let current = Json::obj(vec![("requests", Json::num(32.0))]);
+        let r = check_bench(&b, &current, None);
+        assert!(r[0].ok && r[1].ok, "{}", format_gate(&r));
+        // Metric present: the bound applies with full force.
+        let fat = Json::obj(vec![
+            ("peak_rss_mb", Json::num(90000.0)),
+            ("requests", Json::num(32.0)),
+        ]);
+        let r = check_bench(&b, &fat, None);
+        assert!(!r[0].ok, "{}", format_gate(&r));
+        // Re-baselining without the metric preserves the committed bound
+        // and the optional flag.
+        let updated = update_baseline(&b, &current).unwrap();
+        let b2 = parse_baseline(&updated.to_string_pretty()).unwrap();
+        assert!((b2.checks[0].max.unwrap() - 1024.0).abs() < 1e-9);
+        assert!(b2.checks[0].optional);
+        // Re-baselining with it rewrites the bound as usual.
+        let slim = Json::obj(vec![
+            ("peak_rss_mb", Json::num(256.0)),
+            ("requests", Json::num(32.0)),
+        ]);
+        let b3 = parse_baseline(&update_baseline(&b, &slim).unwrap().to_string_pretty()).unwrap();
+        assert!((b3.checks[0].max.unwrap() - 256.0).abs() < 1e-9);
     }
 
     #[test]

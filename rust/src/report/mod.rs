@@ -27,4 +27,7 @@ pub use experiments::{
     expt1, expt2, expt3, gantt, motivation, BaselineRow, Expt1Row, MappingConfig,
     MotivationResult,
 };
-pub use serving::{format_real_summary, format_serve_comparison, serve_bench_json};
+pub use serving::{
+    format_real_summary, format_serve_comparison, format_stream_summary, peak_rss_mb,
+    serve_bench_json, serve_soak_json,
+};

@@ -1,8 +1,10 @@
-//! Serving-layer reporting: the sequential-vs-concurrent comparison table
-//! and the `BENCH_serve.json` artifact the CI bench smoke uploads.
+//! Serving-layer reporting: the sequential-vs-concurrent comparison table,
+//! the `BENCH_serve.json` artifact the CI bench smoke uploads, and the
+//! streaming-soak artifact (`BENCH_serve_soak.json`) with its bounded-state
+//! witnesses (peak live components, peak RSS).
 
 use crate::json::Json;
-use crate::serve::ServeReport;
+use crate::serve::{ServeReport, StreamReport};
 
 fn row(label: &str, r: &ServeReport) -> String {
     let util: Vec<String> = r
@@ -134,6 +136,130 @@ pub fn serve_bench_json(concurrent: &ServeReport, sequential: &ServeReport) -> J
     ])
 }
 
+/// Peak resident-set size of this process in MiB, from `/proc/self/status`
+/// `VmHWM` (the kernel's high-water mark — exactly the "did memory stay
+/// bounded" witness the soak bench wants). `None` off Linux or when the
+/// field is unreadable; the soak artifact then omits `peak_rss_mb` and the
+/// baseline's `optional` gate skips it.
+pub fn peak_rss_mb() -> Option<f64> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: f64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+                return Some(kb / 1024.0);
+            }
+        }
+        None
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// The `BENCH_serve_soak.json` schema: sustained streaming throughput and
+/// the bounded-state witnesses. `wall_seconds` is the bench's wall-clock
+/// measurement (virtual-time simulation driven as fast as the host can);
+/// `bench_requests_per_second` is requests over that wall time — the CI
+/// regression axis. `peak_rss_mb` is present only when the platform can
+/// report it ([`peak_rss_mb`]).
+pub fn serve_soak_json(r: &StreamReport, wall_seconds: f64, rss_mb: Option<f64>) -> Json {
+    let bench_rps = if wall_seconds > 0.0 {
+        r.served as f64 / wall_seconds
+    } else {
+        0.0
+    };
+    let mut fields = vec![
+        ("schema", Json::str("pyschedcl-serve-soak-v1")),
+        ("streaming", r.to_json()),
+        ("requests", Json::num(r.served as f64)),
+        ("window", Json::num(r.window as f64)),
+        ("wall_seconds", Json::num(wall_seconds)),
+        ("bench_requests_per_second", Json::num(bench_rps)),
+        ("throughput_rps", Json::num(r.throughput_rps)),
+        ("p99_latency_s", Json::num(r.p99_latency)),
+        ("preemptions", Json::num(r.preemptions as f64)),
+        ("events", Json::num(r.events as f64)),
+        ("peak_live_requests", Json::num(r.peak_live_requests as f64)),
+        (
+            "peak_live_components",
+            Json::num(r.peak_live_components as f64),
+        ),
+    ];
+    if let Some(mb) = rss_mb {
+        fields.push(("peak_rss_mb", Json::num(mb)));
+    }
+    Json::obj(fields)
+}
+
+/// Render the streaming-run summary (the `serve --streaming` footer).
+pub fn format_stream_summary(r: &StreamReport) -> String {
+    let util: Vec<String> = r
+        .device_util
+        .iter()
+        .map(|u| format!("{:.0}%", u * 100.0))
+        .collect();
+    let mut s = format!(
+        "streaming ({}): served {} request(s) in {:.1} ms virtual -> {:.1} req/s  \
+         p50 {:.2} ms  p99 {:.2} ms\n",
+        r.policy,
+        r.served,
+        r.makespan * 1e3,
+        r.throughput_rps,
+        r.p50_latency * 1e3,
+        r.p99_latency * 1e3
+    );
+    s.push_str(&format!(
+        "bounded state: window {} -> peak {} live request(s), {} live component(s); \
+         {} event(s)\n",
+        if r.window == 0 {
+            "unbounded".to_string()
+        } else {
+            r.window.to_string()
+        },
+        r.peak_live_requests,
+        r.peak_live_components,
+        r.events
+    ));
+    s.push_str(&format!("device util: {}\n", util.join(" ")));
+    if r.deadline_total > 0 {
+        s.push_str(&format!(
+            "deadlines: {}/{} missed ({:.1}%), {} preemption(s)\n",
+            r.deadline_misses,
+            r.deadline_total,
+            r.deadline_miss_rate * 100.0,
+            r.preemptions
+        ));
+        for (p, l) in &r.per_priority_p99 {
+            s.push_str(&format!("  priority {p}: p99 {:.2} ms\n", l * 1e3));
+        }
+    }
+    if r.template_cache_hits + r.template_cache_misses > 0 {
+        s.push_str(&format!(
+            "template cache: {} hit(s), {} merged block(s) built\n",
+            r.template_cache_hits, r.template_cache_misses
+        ));
+    }
+    if r.rejected > 0 {
+        s.push_str(&format!(
+            "rejected: {} request(s) ({} laxity-negative at admission)\n",
+            r.rejected, r.laxity_rejections
+        ));
+        for (id, why) in &r.rejected_sample {
+            s.push_str(&format!("  #{id}: {why}\n"));
+        }
+        if r.rejected > r.rejected_sample.len() {
+            s.push_str(&format!(
+                "  ... and {} more\n",
+                r.rejected - r.rejected_sample.len()
+            ));
+        }
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +323,73 @@ mod tests {
                 .is_some());
         }
         assert!(parsed.get("speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn soak_json_carries_bounded_state_witnesses() {
+        let platform = Platform::paper_testbed(3, 1);
+        let requests: Vec<ServeRequest> = (0..8)
+            .map(|i| ServeRequest::new(i, i as f64 * 1e-3, Workload::Head { beta: 64 }))
+            .collect();
+        let cfg = crate::serve::StreamingConfig::default();
+        let mut sink = crate::serve::NullSink;
+        let report = crate::serve::serve_stream(
+            requests,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &cfg,
+            &mut sink,
+        )
+        .unwrap();
+        let summary = format_stream_summary(&report);
+        assert!(summary.contains("streaming"), "{summary}");
+        assert!(summary.contains("bounded state"), "{summary}");
+
+        let json = serve_soak_json(&report, 0.5, Some(123.0));
+        let parsed = Json::parse(&json.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("schema").and_then(|s| s.as_str()),
+            Some("pyschedcl-serve-soak-v1")
+        );
+        assert_eq!(parsed.get("requests").and_then(|v| v.as_f64()), Some(8.0));
+        assert_eq!(
+            parsed.get("bench_requests_per_second").and_then(|v| v.as_f64()),
+            Some(16.0)
+        );
+        for key in [
+            "window",
+            "wall_seconds",
+            "throughput_rps",
+            "p99_latency_s",
+            "preemptions",
+            "events",
+            "peak_live_requests",
+            "peak_live_components",
+            "peak_rss_mb",
+        ] {
+            assert!(parsed.get(key).and_then(|v| v.as_f64()).is_some(), "{key}");
+        }
+        assert!(parsed.get("streaming").is_some());
+        // Without an RSS reading the field is omitted, not zeroed — the
+        // baseline gate marks it optional for exactly this case.
+        let without = serve_soak_json(&report, 0.5, None);
+        assert!(Json::parse(&without.to_string_pretty())
+            .unwrap()
+            .get("peak_rss_mb")
+            .is_none());
+    }
+
+    #[test]
+    fn peak_rss_reads_the_linux_high_water_mark() {
+        // On Linux (every CI runner) the reading must exist and be sane;
+        // elsewhere the function degrades to None by design.
+        if cfg!(target_os = "linux") {
+            let mb = peak_rss_mb().expect("VmHWM missing from /proc/self/status");
+            assert!(mb > 0.0 && mb < 1024.0 * 1024.0, "peak RSS {mb} MiB");
+        } else {
+            assert!(peak_rss_mb().is_none());
+        }
     }
 
     #[test]

@@ -235,6 +235,17 @@ pub struct SchedState<'a> {
     fb_heap: [BinaryHeap<FbEntry>; NTYPES],
     /// Scratch for deadline-tie collection (reused across selects).
     tie_scratch: Vec<DlEntry>,
+
+    /// Streaming slot mode ([`SchedState::for_streaming`]): component ids
+    /// are reusable *slots* owned by the streaming simulator, not indices
+    /// into `partition`/`dag` (which are empty placeholders). Per-slot
+    /// facts arrive via [`SchedState::set_slot`]; [`SchedState::component_time`]
+    /// reads the memoized per-device table instead of walking the DAG.
+    slot_mode: bool,
+    /// Slot mode only: solo component time per `[slot * ndev + device id]`,
+    /// precomputed at admission with the same kernel-order sum as the
+    /// non-slot `component_time` (bit-identical values).
+    slot_times: Vec<f64>,
 }
 
 impl<'a> SchedState<'a> {
@@ -324,7 +335,112 @@ impl<'a> SchedState<'a> {
             dl_heap: [BinaryHeap::new(), BinaryHeap::new()],
             fb_heap: [BinaryHeap::new(), BinaryHeap::new()],
             tie_scratch: Vec::new(),
+            slot_mode: false,
+            slot_times: Vec::new(),
         })
+    }
+
+    // -------------------------------------------------- streaming slot mode
+
+    /// Build a **slot-mode** state for the always-on streaming simulator
+    /// ([`crate::sim::stream`]): one persistent `SchedState` whose
+    /// component ids are reusable slots, delta-updated as requests are
+    /// admitted and retired, instead of a state rebuilt per merged app.
+    /// `dag`/`partition` are caller-owned empty placeholders (slot mode
+    /// never reads them); per-slot metadata arrives via
+    /// [`SchedState::set_slot`] and every per-slot vector grows to the
+    /// peak live-slot count, **not** the stream length — the bounded-memory
+    /// contract.
+    pub fn for_streaming(
+        dag: &'a Dag,
+        partition: &'a Partition,
+        platform: &'a Platform,
+        cost: &'a dyn CostModel,
+        tenancy: usize,
+    ) -> Result<SchedState<'a>> {
+        let mut st = Self::new(dag, partition, platform, cost, tenancy, Vec::new(), Vec::new())?;
+        st.slot_mode = true;
+        Ok(st)
+    }
+
+    /// (Re)bind slot `slot` to a newly admitted component's static facts:
+    /// bottom-level rank, preferred device type, serving metadata, and the
+    /// solo component time per platform device (`dev_times[d]`, indexed by
+    /// device id — also the source of the laxity memo: the laxity device is
+    /// the first device of the preferred type, first platform device as
+    /// fallback, exactly as [`SchedState::new`] derives it). The slot must
+    /// not currently be in the frontier. Slots are dense and reusable:
+    /// setting slot `n` with `n == live capacity` grows every per-slot
+    /// vector by one; setting a retired slot overwrites in place.
+    pub fn set_slot(
+        &mut self,
+        slot: usize,
+        rank: f64,
+        pref: DeviceType,
+        deadline: f64,
+        priority: u32,
+        dev_times: &[f64],
+    ) {
+        debug_assert!(self.slot_mode, "set_slot outside streaming slot mode");
+        debug_assert_eq!(dev_times.len(), self.platform.devices.len());
+        let ndev = self.platform.devices.len();
+        if slot >= self.comp_rank.len() {
+            debug_assert_eq!(slot, self.comp_rank.len(), "slots must stay dense");
+            self.comp_rank.push(0.0);
+            self.comp_pref.push(DeviceType::Gpu);
+            self.lax_dev.push(None);
+            self.lax_time.push(0.0);
+            self.deadline.push(f64::INFINITY);
+            self.priority.push(0);
+            self.in_frontier.push(false);
+            self.entry_seq.push(0);
+            self.slot_times.extend(std::iter::repeat(0.0).take(ndev));
+        }
+        debug_assert!(!self.in_frontier[slot], "rebinding a live frontier slot");
+        self.comp_rank[slot] = rank;
+        self.comp_pref[slot] = pref;
+        self.deadline[slot] = deadline;
+        self.priority[slot] = priority;
+        let lax_dev = self
+            .platform
+            .devices
+            .iter()
+            .find(|d| d.dtype == pref)
+            .or_else(|| self.platform.devices.first())
+            .map(|d| d.id);
+        self.lax_dev[slot] = lax_dev;
+        self.lax_time[slot] = match lax_dev {
+            Some(d) => dev_times[d],
+            None => 0.0,
+        };
+        self.slot_times[slot * ndev..(slot + 1) * ndev].copy_from_slice(dev_times);
+    }
+
+    /// Total entries currently held by the frontier heaps, live and stale.
+    /// Lazy deletion leaves stale entries behind until a peek walks over
+    /// them; under an unbounded stream the driver compares this against
+    /// [`SchedState::frontier_len`] and triggers [`SchedState::compact_heaps`]
+    /// so heap memory stays bounded by the live window, not the stream.
+    pub fn heap_entries(&self) -> usize {
+        (0..NTYPES)
+            .map(|t| self.rank_heap[t].len() + self.dl_heap[t].len() + self.fb_heap[t].len())
+            .sum()
+    }
+
+    /// Drop every stale (retired / re-entered) heap entry and rebuild the
+    /// heaps from the live ones. Pop order is unchanged — entries order by
+    /// (key, seq), a total order independent of heap layout — so compaction
+    /// is behavior-neutral; it only reclaims memory. O(E) for E entries.
+    pub fn compact_heaps(&mut self) {
+        for t in 0..NTYPES {
+            let live = |comp: usize, seq: u64| self.in_frontier[comp] && self.entry_seq[comp] == seq;
+            let h = std::mem::take(&mut self.rank_heap[t]);
+            self.rank_heap[t] = h.into_iter().filter(|e| live(e.comp, e.seq)).collect();
+            let h = std::mem::take(&mut self.dl_heap[t]);
+            self.dl_heap[t] = h.into_iter().filter(|e| live(e.comp, e.seq)).collect();
+            let h = std::mem::take(&mut self.fb_heap[t]);
+            self.fb_heap[t] = h.into_iter().filter(|e| live(e.comp, e.seq)).collect();
+        }
     }
 
     // ------------------------------------------------------------- events
@@ -487,8 +603,15 @@ impl<'a> SchedState<'a> {
     }
 
     /// Solo execution-time estimate of a whole component on a device —
-    /// the same kernel-order sum the view API exposed.
+    /// the same kernel-order sum the view API exposed. In streaming slot
+    /// mode the value comes from the per-slot table filled by
+    /// [`SchedState::set_slot`] (the placeholder `partition`/`dag` are
+    /// empty); the table is computed with the identical kernel-order sum,
+    /// so policies read bit-identical values either way.
     pub fn component_time(&self, comp: usize, dev: &Device) -> f64 {
+        if self.slot_mode {
+            return self.slot_times[comp * self.platform.devices.len() + dev.id];
+        }
         self.partition.components[comp]
             .kernels
             .iter()
@@ -843,5 +966,112 @@ mod tests {
         let second = st.urgency_head(false);
         assert_eq!(first, second, "urgency peek must be idempotent");
         assert_eq!(st.frontier_len(), 2);
+    }
+
+    fn slot_state(platform: &Platform, tenancy: usize) -> SchedState<'static> {
+        let dag: &'static Dag = Box::leak(Box::new(Dag::default()));
+        let part: &'static Partition = Box::leak(Box::new(Partition {
+            components: Vec::new(),
+            assignment: Vec::new(),
+        }));
+        let platform: &'static Platform = Box::leak(Box::new(platform.clone()));
+        SchedState::for_streaming(dag, part, platform, &PaperCost, tenancy).unwrap()
+    }
+
+    /// Slot mode must reproduce the rebuilt state bit for bit: same
+    /// `component_time` on every device, same laxity, same selection heads.
+    #[test]
+    fn slot_mode_matches_rebuilt_state() {
+        let (dag, part) = heads_app(2, 1); // head 0 on CPU, head 1 on GPU
+        let platform = Platform::paper_testbed(3, 1);
+        let n = part.components.len();
+        let deadline = vec![0.4, 0.4];
+        let priority = vec![0u32, 3];
+        let mut reference = state_for(&dag, &part, &platform, deadline.clone(), priority.clone());
+
+        let ranks = crate::sched::component_ranks(&dag, &part, &platform, &PaperCost);
+        let mut st = slot_state(&platform, 1);
+        for c in 0..n {
+            let dev_times: Vec<f64> = platform
+                .devices
+                .iter()
+                .map(|d| {
+                    part.components[c]
+                        .kernels
+                        .iter()
+                        .map(|&k| PaperCost.exec_time(&dag.kernels[k], d))
+                        .sum()
+                })
+                .collect();
+            st.set_slot(c, ranks[c], part.components[c].dev, deadline[c], priority[c], &dev_times);
+        }
+        for c in 0..n {
+            for d in &platform.devices {
+                assert_eq!(
+                    st.component_time(c, d).to_bits(),
+                    reference.component_time(c, d).to_bits(),
+                    "slot table must be bit-identical to the DAG walk"
+                );
+            }
+            assert_eq!(st.laxity(c).to_bits(), reference.laxity(c).to_bits());
+            assert_eq!(st.rank(c).to_bits(), reference.rank(c).to_bits());
+            assert_eq!(st.pref(c), reference.pref(c));
+        }
+        reference.on_ready(0);
+        reference.on_ready(1);
+        st.on_ready(0);
+        st.on_ready(1);
+        assert_eq!(st.urgency_head(false), reference.urgency_head(false));
+        assert_eq!(st.rank_head(), reference.rank_head());
+        assert_eq!(st.frontier_ranked(), reference.frontier_ranked());
+    }
+
+    /// Retired slots are rebound in place: per-slot vectors stay at the
+    /// peak live count and the new metadata fully replaces the old.
+    #[test]
+    fn slot_reuse_overwrites_retired_metadata() {
+        let platform = Platform::paper_testbed(3, 1);
+        let ndev = platform.devices.len();
+        let mut st = slot_state(&platform, 4);
+        st.set_slot(0, 5.0, DeviceType::Gpu, f64::INFINITY, 0, &vec![1.0; ndev]);
+        st.on_ready(0);
+        st.on_dispatch(0, 0);
+        st.on_complete(0); // slot 0 retired
+        st.set_slot(0, 2.0, DeviceType::Cpu, 0.5, 9, &vec![0.25; ndev]);
+        assert_eq!(st.rank(0), 2.0);
+        assert_eq!(st.pref(0), DeviceType::Cpu);
+        assert_eq!(st.priority[0], 9);
+        st.now = 0.1;
+        assert!((st.laxity(0) - (0.5 - 0.1 - 0.25)).abs() < 1e-12);
+        st.on_ready(0);
+        assert_eq!(st.frontier_len(), 1);
+        assert_eq!(st.urgency_head(false), Some(0));
+    }
+
+    /// Heap compaction drops only stale entries: pop order of live ones is
+    /// unchanged, and the entry count collapses back to the live frontier.
+    #[test]
+    fn compact_heaps_is_behavior_neutral() {
+        let platform = Platform::paper_testbed(3, 1);
+        let ndev = platform.devices.len();
+        let mut st = slot_state(&platform, 4);
+        for s in 0..8 {
+            st.set_slot(s, 1.0 + s as f64, DeviceType::Gpu, f64::INFINITY, 0, &vec![1.0; ndev]);
+            st.on_ready(s);
+        }
+        // Churn slots 0..6 through dispatch/complete/rebind: the heaps keep
+        // their stale entries (lazy deletion).
+        for s in 0..6 {
+            st.on_dispatch(s, 0);
+            st.on_complete(s);
+            st.set_slot(s, 0.5, DeviceType::Gpu, f64::INFINITY, 0, &vec![1.0; ndev]);
+            st.on_ready(s);
+        }
+        assert!(st.heap_entries() > st.frontier_len());
+        let before = st.frontier_ranked();
+        st.compact_heaps();
+        assert_eq!(st.heap_entries(), st.frontier_len());
+        assert_eq!(st.frontier_ranked(), before);
+        assert_eq!(st.rank_head(), Some(7), "highest-rank live slot survives");
     }
 }

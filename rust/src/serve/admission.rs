@@ -166,6 +166,98 @@ pub fn batch_requests(requests: &[ServeRequest], window: f64) -> Vec<Batch> {
     batches
 }
 
+/// An open (still-growing) batch inside [`StreamBatcher`]: the streaming
+/// analog of [`Batch`], carrying its opener arrival and workload signature
+/// so later arrivals can join or expire it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenBatch {
+    /// Workload signature shared by every member.
+    pub signature: String,
+    /// Arrival of the request that opened the batch (the coalescing
+    /// window is measured from here).
+    pub opener: f64,
+    /// Coalesced dispatch instant so far: the latest member arrival.
+    pub release: f64,
+    /// Request ids (caller-chosen), arrival order.
+    pub members: Vec<usize>,
+}
+
+/// Incremental [`batch_requests`]: arrivals are offered one at a time (in
+/// nondecreasing arrival order) and batches are emitted as soon as they
+/// provably cannot grow — when some later arrival falls outside their
+/// opener's window. Openers ascend, so expired batches always form a
+/// prefix of the open list and batches close in opener order: the closed
+/// sequence is **exactly** the [`batch_requests`] output for the same
+/// stream (proven by `stream_batcher_matches_batch_requests`).
+///
+/// [`StreamBatcher::horizon`] is the earliest open opener — the streaming
+/// driver must not simulate past it, because a batch releases no earlier
+/// than its opener and must be admitted before the simulator reaches its
+/// release.
+#[derive(Debug, Default)]
+pub struct StreamBatcher {
+    window: f64,
+    /// Open batches, opener-ascending. At most one per signature: a stale
+    /// same-signature batch is necessarily expired (that is *why* the new
+    /// opener did not join it) and was closed by the prefix rule.
+    open: Vec<OpenBatch>,
+}
+
+impl StreamBatcher {
+    /// `window <= 0` disables coalescing (one batch per request).
+    pub fn new(window: f64) -> Self {
+        StreamBatcher {
+            window,
+            open: Vec::new(),
+        }
+    }
+
+    /// Number of batches still open.
+    pub fn open_len(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Earliest instant the simulator may not advance past while batches
+    /// are open ([`f64::INFINITY`] when none are).
+    pub fn horizon(&self) -> f64 {
+        self.open.first().map(|b| b.opener).unwrap_or(f64::INFINITY)
+    }
+
+    /// Offer the next arrival (nondecreasing `arrival` across calls);
+    /// batches this arrival expires are appended to `closed` in opener
+    /// order, then the request joins its signature's open batch or opens a
+    /// fresh one.
+    pub fn offer(&mut self, id: usize, signature: &str, arrival: f64, closed: &mut Vec<OpenBatch>) {
+        // Prefix-close every batch this arrival can no longer join. Any
+        // future arrival is >= this one, so expiry is permanent.
+        let expired = self
+            .open
+            .iter()
+            .take_while(|b| !(self.window > 0.0 && arrival <= b.opener + self.window))
+            .count();
+        closed.extend(self.open.drain(..expired));
+        if self.window > 0.0 {
+            if let Some(b) = self.open.iter_mut().find(|b| b.signature == signature) {
+                debug_assert!(arrival <= b.opener + self.window);
+                b.members.push(id);
+                b.release = b.release.max(arrival);
+                return;
+            }
+        }
+        self.open.push(OpenBatch {
+            signature: signature.to_string(),
+            opener: arrival,
+            release: arrival,
+            members: vec![id],
+        });
+    }
+
+    /// End of stream: close every remaining open batch, in opener order.
+    pub fn flush(&mut self, closed: &mut Vec<OpenBatch>) {
+        closed.append(&mut self.open);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,5 +385,73 @@ mod tests {
         assert_eq!(batches.len(), 2);
         assert_eq!(batches[0].members, vec![0]);
         assert_eq!(batches[1].members, vec![1, 2]);
+    }
+
+    /// Run the same stream through [`batch_requests`] and the incremental
+    /// [`StreamBatcher`], asserting identical batches in identical order.
+    fn assert_stream_batcher_matches(reqs: &[ServeRequest], window: f64) {
+        let want = batch_requests(reqs, window);
+        let mut batcher = StreamBatcher::new(window);
+        let mut got: Vec<OpenBatch> = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            batcher.offer(i, &r.workload.signature(), r.arrival, &mut got);
+        }
+        batcher.flush(&mut got);
+        assert_eq!(got.len(), want.len(), "window {window}: batch count");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.members, w.members, "window {window}");
+            assert_eq!(g.release.to_bits(), w.release.to_bits(), "window {window}");
+        }
+    }
+
+    #[test]
+    fn stream_batcher_matches_batch_requests() {
+        // Interleaved signatures, joins, window expiries, duplicates.
+        let reqs = vec![
+            head_req(0, 0.000),
+            head_req(1, 0.001),
+            ServeRequest::new(2, 0.0015, Workload::Mm2 { beta: 64 }),
+            ServeRequest::new(3, 0.0016, Workload::Mm2 { beta: 64 }),
+            head_req(4, 0.0019),
+            head_req(5, 0.010),
+            ServeRequest::new(6, 0.0105, Workload::Mm2 { beta: 64 }),
+            head_req(7, 0.011),
+            head_req(8, 0.030),
+        ];
+        for window in [0.0, 0.001, 0.002, 0.005, 1.0] {
+            assert_stream_batcher_matches(&reqs, window);
+        }
+    }
+
+    #[test]
+    fn stream_batcher_closes_expired_batches_incrementally() {
+        let mut b = StreamBatcher::new(0.002);
+        let mut closed = Vec::new();
+        b.offer(0, "A", 0.0, &mut closed);
+        b.offer(1, "A", 0.001, &mut closed);
+        assert!(closed.is_empty());
+        assert_eq!(b.horizon(), 0.0);
+        // An arrival past the opener's window closes the batch even though
+        // it belongs to a different signature.
+        b.offer(2, "B", 0.005, &mut closed);
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].members, vec![0, 1]);
+        assert!((closed[0].release - 0.001).abs() < 1e-12);
+        assert_eq!(b.horizon(), 0.005);
+        assert_eq!(b.open_len(), 1);
+        b.flush(&mut closed);
+        assert_eq!(closed.len(), 2);
+        assert_eq!(b.horizon(), f64::INFINITY);
+    }
+
+    #[test]
+    fn stream_batcher_zero_window_yields_singletons() {
+        let mut b = StreamBatcher::new(0.0);
+        let mut closed = Vec::new();
+        b.offer(0, "A", 0.0, &mut closed);
+        b.offer(1, "A", 0.0, &mut closed);
+        b.flush(&mut closed);
+        assert_eq!(closed.len(), 2);
+        assert!(closed.iter().all(|c| c.members.len() == 1));
     }
 }

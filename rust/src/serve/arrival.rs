@@ -50,6 +50,38 @@ pub fn poisson_arrivals(seed: u64, n: usize, rate: f64) -> Result<Vec<f64>> {
         .collect())
 }
 
+/// Lazy Poisson arrival stream: the iterator form of [`poisson_arrivals`],
+/// with **identical** RNG math — the first `n` items equal
+/// `poisson_arrivals(seed, n, rate)` element for element. The streaming
+/// soak bench walks millions of arrivals through this without ever
+/// materializing the arrival vector (bounded memory starts at the arrival
+/// process).
+pub struct PoissonStream {
+    rng: Rng,
+    rate: f64,
+    t: f64,
+}
+
+impl PoissonStream {
+    pub fn new(seed: u64, rate: f64) -> Result<Self> {
+        let rate = validate_rate(rate)?;
+        Ok(PoissonStream {
+            rng: Rng::new(seed),
+            rate,
+            t: 0.0,
+        })
+    }
+}
+
+impl Iterator for PoissonStream {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        self.t += -self.rng.next_unit().ln() / self.rate;
+        Some(self.t)
+    }
+}
+
 /// Parse a CLI `--rate` value: a finite, positive requests/second figure
 /// (same domain rule as [`poisson_arrivals`]). Unparseable text and
 /// out-of-domain values are typed [`Error::Admission`]s, not silent
@@ -96,6 +128,17 @@ mod tests {
         assert!(a.iter().all(|&t| t > 0.0 && t.is_finite()));
         // Different seed, different stream.
         assert_ne!(a, poisson_arrivals(43, 64, 500.0).unwrap());
+    }
+
+    #[test]
+    fn poisson_stream_matches_materialized_arrivals() {
+        let want = poisson_arrivals(42, 256, 1500.0).unwrap();
+        let got: Vec<f64> = PoissonStream::new(42, 1500.0).unwrap().take(256).collect();
+        assert_eq!(got, want);
+        assert!(matches!(
+            PoissonStream::new(1, 0.0),
+            Err(Error::Admission(_))
+        ));
     }
 
     #[test]

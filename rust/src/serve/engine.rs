@@ -137,18 +137,42 @@ pub fn request_outcome(
     finish: f64,
     pacing: Pacing,
 ) -> RequestOutcome {
+    outcome_fields(
+        req.id,
+        req.arrival,
+        req.deadline,
+        req.priority,
+        release,
+        finish,
+        pacing,
+    )
+}
+
+/// [`request_outcome`] from bare fields, for paths that no longer hold the
+/// `ServeRequest` when a request finishes (the streaming server retires
+/// request records at batch close and carries only these scalars).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn outcome_fields(
+    id: usize,
+    arrival: f64,
+    deadline: Option<f64>,
+    priority: u32,
+    release: f64,
+    finish: f64,
+    pacing: Pacing,
+) -> RequestOutcome {
     let latency = match pacing {
-        Pacing::Open => finish - req.arrival,
-        Pacing::Closed => (finish - req.arrival).max(finish - release),
+        Pacing::Open => finish - arrival,
+        Pacing::Closed => (finish - arrival).max(finish - release),
     };
     RequestOutcome {
-        id: req.id,
-        arrival: req.arrival,
+        id,
+        arrival,
         release,
         finish,
         latency,
-        deadline_met: req.deadline.map(|d| latency <= d),
-        priority: req.priority,
+        deadline_met: deadline.map(|d| latency <= d),
+        priority,
     }
 }
 

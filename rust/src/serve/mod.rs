@@ -23,6 +23,11 @@
 //! * [`engine`] — the simulated serving path ([`serve_sim`]) over
 //!   [`crate::sim::simulate_served`] and the sequential-replay baseline
 //!   ([`serve_sequential`]), with per-request makespan/latency accounting;
+//! * [`streaming`] — the always-on serving path ([`serve_stream`]): a
+//!   long-lived [`crate::sim::StreamSim`] admits batches while earlier
+//!   requests execute, retires completed requests (bounded memory), and
+//!   emits each outcome incrementally through an [`OutcomeSink`] (JSONL or
+//!   custom) instead of accumulating report vectors;
 //! * [`real`] — the real path over [`crate::exec::execute_dag_served`]'s
 //!   thread-per-queue machinery (PJRT kernels), with open- or closed-loop
 //!   arrival pacing ([`Pacing`]), per-component deadline metadata threaded
@@ -53,9 +58,10 @@ pub mod engine;
 pub mod merge;
 pub mod real;
 pub mod request;
+pub mod streaming;
 
-pub use admission::{admit, admit_slo, batch_requests, check_laxity, Batch};
-pub use arrival::{parse_rate, poisson_arrivals, trace_arrivals};
+pub use admission::{admit, admit_slo, batch_requests, check_laxity, Batch, OpenBatch, StreamBatcher};
+pub use arrival::{parse_rate, poisson_arrivals, trace_arrivals, PoissonStream};
 pub use cache::TemplateCache;
 pub use engine::{
     percentile_sorted, request_outcome, serve_sequential, serve_sim, serve_sim_cached, Pacing,
@@ -64,3 +70,7 @@ pub use engine::{
 pub use merge::{merge_apps, merge_apps_refs, MergedApp, MergedAssembly};
 pub use real::serve_real;
 pub use request::{ServeRequest, Workload};
+pub use streaming::{
+    serve_stream, serve_stream_cached, CollectSink, JsonlSink, NullSink, OutcomeSink,
+    StreamReport, StreamingConfig,
+};

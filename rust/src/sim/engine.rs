@@ -130,52 +130,60 @@ pub struct SimResult {
     pub preemptions: usize,
 }
 
+// The execution substrate below (`CmdState`, `Dispatch`, `Run`, `EvKind`,
+// `Ev`, `CopyEngine`, `EPS`) is `pub(crate)`: the always-on streaming
+// simulator ([`super::stream`]) reuses the exact same command/dispatch/run
+// state machine, adding only unit indirection and retirement on top, so
+// the two engines cannot drift apart mechanically.
 #[derive(Debug, Clone, Copy, PartialEq)]
-enum CmdState {
+pub(crate) enum CmdState {
     Pending,
     Issued,
     Done,
 }
 
-struct Dispatch {
-    cq: CommandQueues,
-    device: DeviceId,
+pub(crate) struct Dispatch {
+    pub(crate) cq: CommandQueues,
+    pub(crate) device: DeviceId,
     /// Commands become issuable after this instant (select + setup_cq).
-    ready_at: f64,
+    pub(crate) ready_at: f64,
     /// Set when the component was preempted: the dispatch is dead — no
     /// further commands issue, in-flight completions are dropped, and a
     /// fresh dispatch is created when the component is re-selected.
-    cancelled: bool,
+    pub(crate) cancelled: bool,
     /// EFT booking added to `est_free[device]` at dispatch — rolled back
     /// on displacement so repeated preemptions don't inflate the device's
     /// estimated backlog.
-    est_committed: f64,
-    state: Vec<CmdState>,
+    pub(crate) est_committed: f64,
+    pub(crate) state: Vec<CmdState>,
     /// Next unissued index per queue (in-order execution).
-    queue_next: Vec<usize>,
-    cmds_remaining: usize,
+    pub(crate) queue_next: Vec<usize>,
+    pub(crate) cmds_remaining: usize,
     /// Callback firings still outstanding (the count comes from the
     /// engine-wide per-component `cb_count`; per-kernel classification
     /// lives in the engine-wide `is_cb_kernel` / `is_async_kernel`
     /// bitsets — the former per-dispatch `Vec` walks were a per-completion
     /// linear scan).
-    callbacks_left: usize,
+    pub(crate) callbacks_left: usize,
 }
 
-struct Run {
-    disp: usize,
-    cmd: CmdId,
-    kernel: KernelId,
-    device: DeviceId,
-    queue: usize,
+pub(crate) struct Run {
+    pub(crate) disp: usize,
+    pub(crate) cmd: CmdId,
+    /// Kernel id in the owning application DAG (the merged DAG here; the
+    /// streaming engine reuses `Run` with *unit-local* kernel ids — the
+    /// unit is reachable through `disp`).
+    pub(crate) kernel: KernelId,
+    pub(crate) device: DeviceId,
+    pub(crate) queue: usize,
     /// Remaining work in solo-seconds.
-    remaining: f64,
-    occupancy: f64,
-    started: f64,
+    pub(crate) remaining: f64,
+    pub(crate) occupancy: f64,
+    pub(crate) started: f64,
 }
 
 #[derive(Debug, Clone, Copy)]
-enum EvKind {
+pub(crate) enum EvKind {
     /// setup_cq finished; the dispatch joins the live-dispatch index and
     /// its commands may issue.
     DispatchReady(usize),
@@ -190,10 +198,10 @@ enum EvKind {
     Release { comp: usize },
 }
 
-struct Ev {
-    t: f64,
-    seq: u64,
-    kind: EvKind,
+pub(crate) struct Ev {
+    pub(crate) t: f64,
+    pub(crate) seq: u64,
+    pub(crate) kind: EvKind,
 }
 
 impl PartialEq for Ev {
@@ -215,11 +223,11 @@ impl Ord for Ev {
     }
 }
 
-struct CopyEngine {
+pub(crate) struct CopyEngine {
     /// FIFO of queued transfers.
-    queue: VecDeque<(usize, CmdId)>,
+    pub(crate) queue: VecDeque<(usize, CmdId)>,
     /// Currently transferring, if any.
-    current: Option<(usize, CmdId)>,
+    pub(crate) current: Option<(usize, CmdId)>,
 }
 
 /// Simulate `policy` scheduling `partition` of `dag` onto `platform`.
@@ -370,7 +378,7 @@ struct Engine<'a> {
     scratch_finished: Vec<usize>,
 }
 
-const EPS: f64 = 1e-12;
+pub(crate) const EPS: f64 = 1e-12;
 
 impl<'a> Engine<'a> {
     #[allow(clippy::too_many_arguments)]

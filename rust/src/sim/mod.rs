@@ -16,9 +16,17 @@
 //! [`crate::sched::Policy::preempt`]: an urgent component may displace a
 //! less urgent resident tenant at command-queue granularity, the displaced
 //! work re-entering the frontier with its remaining solo-seconds preserved.
+//!
+//! [`stream`] is the always-on variant: [`StreamSim`] runs the same
+//! execution machinery over an *unbounded* admission stream with bounded
+//! memory — units are admitted while earlier ones execute and fully
+//! retired (slots, dispatch records, scheduler entries reclaimed) when
+//! they finish — see [`crate::serve`]'s streaming driver.
 
 pub mod engine;
 #[doc(hidden)]
 pub mod reference;
+pub mod stream;
 
 pub use engine::{simulate, simulate_released, simulate_served, CompMeta, SimConfig, SimResult};
+pub use stream::{AdmitUnit, FinishedRequest, MemberSpec, PumpStop, StreamSim, Template};
