@@ -7,6 +7,12 @@
 //!   [`Event`]s — exactly the `E_Q` constraints);
 //! * completion updates the frontier/device set under a lock and notifies
 //!   the scheduler, like the thread-safe callback `cb` of Algorithm 1.
+//!
+//! [`execute_dag_served`] is the serving entry point: per-component
+//! deadline/priority metadata threaded into the scheduler state plus a
+//! tenancy bound — it backs both batch `serve_real` and the always-on
+//! `RealBackend` of the unified serve core ([`crate::serve::serve_core`]),
+//! which calls it once per admitted unit.
 
 use super::events::Event;
 use super::memory::BufferStore;

@@ -51,12 +51,21 @@
 //! against `ci/bench_baselines/BENCH_serve_scale.json`.
 //!
 //! Always-on serving (PR 6): `--streaming` runs the same stream through the
-//! long-lived bounded-memory server ([`pyschedcl::serve::serve_stream`]) —
-//! admission interleaves with execution under a `--window N` live-request
-//! bound, completed requests are retired, and `--outcomes-jsonl OUT`
-//! streams one JSON object per completion instead of accumulating a report
-//! vector. The 1M-request soak proof lives in `benches/serve_soak.rs`,
-//! gated in CI against `ci/bench_baselines/BENCH_serve_soak.json`.
+//! long-lived bounded-memory server — admission interleaves with execution
+//! under a `--window N` live-request bound, completed requests are retired,
+//! and `--outcomes-jsonl OUT` streams one JSON object per completion
+//! instead of accumulating a report vector. The 1M-request soak proof lives
+//! in `benches/serve_soak.rs`, gated in CI against
+//! `ci/bench_baselines/BENCH_serve_soak.json`.
+//!
+//! Unified serve core (PR 7): every serving mode routes through
+//! [`pyschedcl::serve::serve_core`] over a `ServeBackend` — `--streaming`
+//! composes with `--mode real` ([`pyschedcl::serve::serve_real_stream`]):
+//! the always-on admission/backpressure loop drives real PJRT execution
+//! with `--pacing open|closed`, bounded live state, and the
+//! `BENCH_serve_real_stream.json` artifact via `--json` (gated in CI
+//! against `ci/bench_baselines/BENCH_serve_real_stream.json`). Batch modes
+//! are the same core at window 0.
 
 use pyschedcl::cost::{CalibratedCost, CostModel, PaperCost};
 use pyschedcl::error::{Error, Result};
@@ -67,15 +76,15 @@ use pyschedcl::platform::{DeviceType, Platform};
 use pyschedcl::report::experiments as expts;
 use pyschedcl::report::{
     check_bench, format_gate, format_real_summary, format_serve_comparison,
-    format_stream_summary, parse_baseline, peak_rss_mb, serve_bench_json, serve_soak_json,
-    update_baseline,
+    format_stream_summary, parse_baseline, peak_rss_mb, serve_bench_json,
+    serve_real_stream_json, serve_soak_json, update_baseline,
 };
 use pyschedcl::runtime::{manifest::default_artifact_dir, Runtime};
 use pyschedcl::sched::{Clustering, Eager, Edf, Heft, LeastLoaded, Policy};
 use pyschedcl::serve::{
-    parse_rate, poisson_arrivals, serve_real, serve_sequential, serve_sim, serve_stream,
-    trace_arrivals, JsonlSink, NullSink, Pacing, ServeConfig, ServeRequest, StreamingConfig,
-    Workload,
+    parse_rate, poisson_arrivals, serve_real, serve_real_stream, serve_sequential, serve_sim,
+    serve_stream, trace_arrivals, JsonlSink, NullSink, Pacing, ServeConfig, ServeRequest,
+    StreamingConfig, Workload,
 };
 use pyschedcl::sim::{simulate, SimConfig};
 use pyschedcl::spec::parse_spec;
@@ -468,11 +477,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
     if streaming {
-        if args.get("mode") == Some("real") {
-            return Err(Error::Io(
-                "--streaming runs the simulated always-on server (drop --mode real)".into(),
-            ));
-        }
         if args.get("autoscale-target").is_some() {
             return Err(Error::Io(
                 "--autoscale-target is a batch-mode experiment (drop --streaming)".into(),
@@ -486,6 +490,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
             sim: SimConfig::default(),
         };
         let mut policy = policy_by_name(policy_name)?;
+
+        if args.get("mode") == Some("real") {
+            // Always-on real serving: the serve core's admission/
+            // backpressure loop over the RealBackend (PJRT execution,
+            // wall-clock pacing, bounded live state).
+            let dir = args
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(default_artifact_dir);
+            let runtime = Arc::new(Runtime::new(&dir)?);
+            let calibrated = CalibratedCost::load(&dir.join("calibration.json")).ok();
+            let cost: &dyn CostModel = match &calibrated {
+                Some(c) => {
+                    println!("cost model: calibrated ({}/calibration.json)", dir.display());
+                    c
+                }
+                None => &PaperCost,
+            };
+            let wall = std::time::Instant::now();
+            let report = match args.get("outcomes-jsonl") {
+                Some(path) => {
+                    let file = std::fs::File::create(path)
+                        .map_err(|e| Error::Io(format!("cannot create {path}: {e}")))?;
+                    let mut sink = JsonlSink::new(std::io::BufWriter::new(file));
+                    let r = serve_real_stream(
+                        requests,
+                        &runtime,
+                        &platform,
+                        cost,
+                        policy.as_mut(),
+                        &scfg,
+                        pacing,
+                        prewarm,
+                        seed,
+                        &mut sink,
+                    )?;
+                    println!("wrote per-request outcomes to {path}");
+                    r
+                }
+                None => serve_real_stream(
+                    requests,
+                    &runtime,
+                    &platform,
+                    cost,
+                    policy.as_mut(),
+                    &scfg,
+                    pacing,
+                    prewarm,
+                    seed,
+                    &mut NullSink,
+                )?,
+            };
+            let wall_seconds = wall.elapsed().as_secs_f64();
+            print!("{}", format_stream_summary(&report));
+            if let Some(path) = args.get("json") {
+                let json = serve_real_stream_json(&report, wall_seconds);
+                std::fs::write(path, json.to_string_pretty())
+                    .map_err(|e| Error::Io(format!("cannot write {path}: {e}")))?;
+                println!("wrote {path}");
+            }
+            return Ok(());
+        }
+
         let wall = std::time::Instant::now();
         let report = match args.get("outcomes-jsonl") {
             Some(path) => {

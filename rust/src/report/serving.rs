@@ -1,7 +1,9 @@
 //! Serving-layer reporting: the sequential-vs-concurrent comparison table,
-//! the `BENCH_serve.json` artifact the CI bench smoke uploads, and the
+//! the `BENCH_serve.json` artifact the CI bench smoke uploads, the
 //! streaming-soak artifact (`BENCH_serve_soak.json`) with its bounded-state
-//! witnesses (peak live components, peak RSS).
+//! witnesses (peak live components, peak RSS), and the real-path streaming
+//! artifact (`BENCH_serve_real_stream.json`) gating
+//! `serve --streaming --mode real` in CI.
 
 use crate::json::Json;
 use crate::serve::{ServeReport, StreamReport};
@@ -194,15 +196,50 @@ pub fn serve_soak_json(r: &StreamReport, wall_seconds: f64, rss_mb: Option<f64>)
     Json::obj(fields)
 }
 
-/// Render the streaming-run summary (the `serve --streaming` footer).
+/// The `BENCH_serve_real_stream.json` schema: the real-path streaming
+/// smoke's gate surface — tail latency, miss rate, backpressure witness,
+/// and executable-cache behaviour, with the full [`StreamReport`] nested
+/// under `streaming` for inspection.
+pub fn serve_real_stream_json(r: &StreamReport, wall_seconds: f64) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str("pyschedcl-serve-real-stream-v1")),
+        ("streaming", r.to_json()),
+        ("requests", Json::num(r.served as f64)),
+        ("rejected", Json::num(r.rejected as f64)),
+        ("window", Json::num(r.window as f64)),
+        ("wall_seconds", Json::num(wall_seconds)),
+        ("p99_latency_s", Json::num(r.p99_latency)),
+        ("deadline_miss_rate", Json::num(r.deadline_miss_rate)),
+        ("peak_live_requests", Json::num(r.peak_live_requests as f64)),
+        (
+            "peak_live_components",
+            Json::num(r.peak_live_components as f64),
+        ),
+        ("exec_cache_hits", Json::num(r.exec_cache_hits as f64)),
+        ("exec_cache_misses", Json::num(r.exec_cache_misses as f64)),
+        (
+            "template_cache_misses",
+            Json::num(r.template_cache_misses as f64),
+        ),
+    ])
+}
+
+/// Render the streaming-run summary (the `serve --streaming` footer, both
+/// backends: `"virtual"` pacing means the sim backend's virtual clock,
+/// `"open"`/`"closed"` the real backend's wall clock).
 pub fn format_stream_summary(r: &StreamReport) -> String {
     let util: Vec<String> = r
         .device_util
         .iter()
         .map(|u| format!("{:.0}%", u * 100.0))
         .collect();
+    let clock = if r.pacing == "virtual" {
+        "virtual".to_string()
+    } else {
+        format!("wall, {} pacing", r.pacing)
+    };
     let mut s = format!(
-        "streaming ({}): served {} request(s) in {:.1} ms virtual -> {:.1} req/s  \
+        "streaming ({}): served {} request(s) in {:.1} ms {clock} -> {:.1} req/s  \
          p50 {:.2} ms  p99 {:.2} ms\n",
         r.policy,
         r.served,
@@ -211,6 +248,15 @@ pub fn format_stream_summary(r: &StreamReport) -> String {
         r.p50_latency * 1e3,
         r.p99_latency * 1e3
     );
+    if r.exec_cache_hits + r.exec_cache_misses > 0 {
+        s.push_str(&format!(
+            "executable cache: {} hit(s), {} miss(es); cold batch {:.2} ms, warm batch {:.2} ms\n",
+            r.exec_cache_hits,
+            r.exec_cache_misses,
+            r.cold_batch_latency * 1e3,
+            r.warm_batch_latency * 1e3
+        ));
+    }
     s.push_str(&format!(
         "bounded state: window {} -> peak {} live request(s), {} live component(s); \
          {} event(s)\n",
@@ -378,6 +424,50 @@ mod tests {
             .unwrap()
             .get("peak_rss_mb")
             .is_none());
+    }
+
+    #[test]
+    fn real_stream_json_carries_the_gate_surface() {
+        let platform = Platform::paper_testbed(3, 1);
+        let requests: Vec<ServeRequest> = (0..6)
+            .map(|i| ServeRequest::new(i, i as f64 * 1e-3, Workload::Head { beta: 64 }))
+            .collect();
+        let cfg = crate::serve::StreamingConfig {
+            window: 8,
+            ..crate::serve::StreamingConfig::default()
+        };
+        let mut sink = crate::serve::NullSink;
+        let report = crate::serve::serve_stream(
+            requests,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &cfg,
+            &mut sink,
+        )
+        .unwrap();
+        let json = serve_real_stream_json(&report, 1.5);
+        let parsed = Json::parse(&json.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("schema").and_then(|s| s.as_str()),
+            Some("pyschedcl-serve-real-stream-v1")
+        );
+        assert_eq!(parsed.get("requests").and_then(|v| v.as_f64()), Some(6.0));
+        assert_eq!(parsed.get("window").and_then(|v| v.as_f64()), Some(8.0));
+        for key in [
+            "rejected",
+            "wall_seconds",
+            "p99_latency_s",
+            "deadline_miss_rate",
+            "peak_live_requests",
+            "peak_live_components",
+            "exec_cache_hits",
+            "exec_cache_misses",
+            "template_cache_misses",
+        ] {
+            assert!(parsed.get(key).and_then(|v| v.as_f64()).is_some(), "{key}");
+        }
+        assert!(parsed.get("streaming").is_some());
     }
 
     #[test]

@@ -6,6 +6,7 @@ use crate::error::{Error, Result};
 use crate::graph::{Dag, Partition};
 use crate::platform::Platform;
 use crate::sched::app_solo_estimate;
+use std::collections::HashMap;
 
 /// Request-level validation (arrival, deadline budget) — the per-request
 /// half of [`admit`], split out so the template cache can skip re-running
@@ -98,6 +99,50 @@ pub(crate) fn check_laxity_estimate(req: &ServeRequest, estimate: f64) -> Result
         }
     }
     Ok(())
+}
+
+/// The memoized laxity gate shared by every serving path: one instance per
+/// run holds the per-signature solo-estimate memo, so a 10k-request stream
+/// of one signature prices its laxity check once. With `laxity_admission`
+/// off (or for deadline-free requests) [`check`](Self::check) is a no-op —
+/// the same short-circuit the former `admit_all` loop applied inline.
+#[derive(Debug, Default)]
+pub(crate) struct AdmissionGate {
+    laxity_admission: bool,
+    solo_memo: HashMap<String, f64>,
+}
+
+impl AdmissionGate {
+    pub(crate) fn new(laxity_admission: bool) -> Self {
+        AdmissionGate {
+            laxity_admission,
+            solo_memo: HashMap::new(),
+        }
+    }
+
+    /// Laxity-check one admitted request against its application template.
+    /// Uncacheable workloads bypass the memo (their signature is not
+    /// injective, so a cached estimate could belong to a different app).
+    pub(crate) fn check(
+        &mut self,
+        req: &ServeRequest,
+        app: &(Dag, Partition),
+        platform: &Platform,
+        cost: &dyn CostModel,
+    ) -> Result<()> {
+        if !self.laxity_admission || req.deadline.is_none() {
+            return Ok(());
+        }
+        let estimate = if req.workload.cacheable() {
+            *self
+                .solo_memo
+                .entry(req.workload.signature())
+                .or_insert_with(|| app_solo_estimate(&app.0, &app.1, platform, cost))
+        } else {
+            app_solo_estimate(&app.0, &app.1, platform, cost)
+        };
+        check_laxity_estimate(req, estimate)
+    }
 }
 
 /// [`admit`] plus [`check_laxity`] in one call — the SLO-aware admission

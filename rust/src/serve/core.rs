@@ -1,0 +1,764 @@
+//! The unified serve core: **one** admission/backpressure loop for every
+//! serving mode, parameterized by a [`ServeBackend`].
+//!
+//! PySchedCL's premise is that concurrency-aware scheduling should be
+//! written once and applied uniformly across heterogeneous execution
+//! targets. The serve layer had drifted into three near-duplicate
+//! pipelines (batch sim, batch real, streaming sim), each re-implementing
+//! admission, batching, outcome emission, and accounting. This module is
+//! the EngineCL-style consolidation: [`serve_core`] owns the pipeline —
+//! arrival-iterator ingestion, [`StreamBatcher`] batching, memoized
+//! template + laxity admission ([`AdmissionGate`]), `window`-bounded
+//! backpressure, [`OutcomeSink`] emission, and report accounting — and a
+//! [`ServeBackend`] owns only *execution*: take an [`AdmitUnit`], make
+//! progress, hand back [`FinishedRequest`]s.
+//!
+//! Two backends exist:
+//!
+//! * [`SimBackend`](super::streaming::SimBackend) — virtual time through
+//!   the long-lived [`crate::sim::StreamSim`];
+//! * [`RealBackend`](super::real::RealBackend) — wall-clock execution
+//!   through [`crate::exec::execute_dag_served`] and the PJRT stand-in
+//!   [`crate::runtime::Runtime`], with open/closed pacing.
+//!
+//! The batch entry points (`serve_sim_cached`, `serve_real`) are thin
+//! wrappers: sort the request vector into admission order and run the core
+//! at `window: 0`. Equivalence with the pre-refactor monoliths is enforced
+//! bit-for-bit by `serve::reference` and the artifact-gated real-path
+//! tests.
+//!
+//! # Memory profile
+//!
+//! Held for the whole run: the latency histogram (fixed bins per priority
+//! class — [`LatencyHistogram`]), the template cache, and the backend's
+//! live state (bounded by the window). Held transiently: pending request
+//! records between admission and batch close, and queued [`AdmitUnit`]s
+//! under backpressure (the inherent arrival backlog of an open-loop system
+//! in overload).
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::sync::Arc;
+
+use super::admission::{AdmissionGate, OpenBatch, StreamBatcher};
+use super::cache::TemplateCache;
+use super::engine::{outcome_fields, Pacing, RequestOutcome};
+use super::histogram::LatencyHistogram;
+use super::request::ServeRequest;
+use crate::cost::CostModel;
+use crate::error::{Error, Result};
+use crate::graph::{Dag, Partition};
+use crate::json::Json;
+use crate::platform::{DeviceId, Platform};
+use crate::sim::{AdmitUnit, FinishedRequest, MemberSpec, PumpStop, SimConfig, Template};
+
+/// Streaming-server knobs. The subset of [`super::ServeConfig`] that is
+/// meaningful for an always-on run, plus the admission window.
+#[derive(Debug, Clone)]
+pub struct StreamingConfig {
+    /// Admission window: max requests live in the backend at once
+    /// (`0` = unbounded, the equivalence-test setting). A closed batch
+    /// larger than the window is admitted whole once the server drains
+    /// idle, so oversized batches stall but never wedge.
+    pub window: usize,
+    /// Batching window (seconds from a batch opener), as in
+    /// [`super::ServeConfig::batch_window`].
+    pub batch_window: f64,
+    /// Max task components resident per device (multi-tenancy).
+    pub tenancy: usize,
+    /// Laxity-based admission control (see [`super::admission::admit_slo`]).
+    pub laxity_admission: bool,
+    /// Underlying simulator knobs (sim backend only). `max_events` is the
+    /// per-pump runaway guard here, not a whole-run cap.
+    pub sim: SimConfig,
+}
+
+impl Default for StreamingConfig {
+    fn default() -> Self {
+        StreamingConfig {
+            window: 512,
+            batch_window: 2e-3,
+            tenancy: 4,
+            laxity_admission: true,
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+/// Where per-request outcomes go, one call per completion, in completion
+/// order. The serve core never accumulates an outcome vector — this sink
+/// is the only place results exist.
+pub trait OutcomeSink {
+    /// `devices` is the device each of the request's components ran on,
+    /// in component order (last device for preempted components).
+    fn emit(&mut self, outcome: &RequestOutcome, devices: &[DeviceId]) -> Result<()>;
+
+    /// Flush any buffered output; called once at end of stream.
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Discards outcomes (throughput benches: accounting without I/O).
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl OutcomeSink for NullSink {
+    fn emit(&mut self, _outcome: &RequestOutcome, _devices: &[DeviceId]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Collects outcomes in memory — for tests and for the batch-mode wrappers
+/// that still return an outcome vector (which defeats bounded memory;
+/// don't use it on unbounded streams).
+#[derive(Debug, Default)]
+pub struct CollectSink {
+    pub outcomes: Vec<RequestOutcome>,
+}
+
+impl OutcomeSink for CollectSink {
+    fn emit(&mut self, outcome: &RequestOutcome, _devices: &[DeviceId]) -> Result<()> {
+        self.outcomes.push(outcome.clone());
+        Ok(())
+    }
+}
+
+/// Streams outcomes as JSON Lines: one object per request with fixed keys
+/// `id`, `arrival`, `release`, `finish`, `latency_s`, `deadline_met`
+/// (bool or null), `priority`, `devices` (array of device ids). Wrap the
+/// writer in a `BufWriter` for file targets — emit is called per request.
+///
+/// Write and flush failures surface as typed [`Error::Io`] from
+/// [`emit`](OutcomeSink::emit)/[`flush`](OutcomeSink::flush), aborting the
+/// run rather than silently dropping outcomes; dropping the sink flushes
+/// whatever buffered output remains (best-effort — drop cannot report).
+#[derive(Debug)]
+pub struct JsonlSink<W: Write> {
+    w: W,
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(w: W) -> Self {
+        JsonlSink { w }
+    }
+}
+
+impl<W: Write> Drop for JsonlSink<W> {
+    fn drop(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+impl<W: Write> OutcomeSink for JsonlSink<W> {
+    fn emit(&mut self, o: &RequestOutcome, devices: &[DeviceId]) -> Result<()> {
+        let met = match o.deadline_met {
+            Some(true) => "true",
+            Some(false) => "false",
+            None => "null",
+        };
+        write!(
+            self.w,
+            "{{\"id\":{},\"arrival\":{},\"release\":{},\"finish\":{},\"latency_s\":{},\"deadline_met\":{},\"priority\":{},\"devices\":[",
+            o.id, o.arrival, o.release, o.finish, o.latency, met, o.priority
+        )?;
+        for (i, d) in devices.iter().enumerate() {
+            if i > 0 {
+                write!(self.w, ",")?;
+            }
+            write!(self.w, "{d}")?;
+        }
+        writeln!(self.w, "]}}")?;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Aggregate statistics of one core-driven serving run — the scalars a
+/// long-lived server can afford to keep (no per-request vectors at all;
+/// percentiles come from the fixed-bin [`LatencyHistogram`]).
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub policy: String,
+    /// Requests that completed (every admitted request completes — the
+    /// stream is drained before returning).
+    pub served: usize,
+    /// Total admission rejections over the stream.
+    pub rejected: usize,
+    /// First few `(request id, admission error)` rejections, capped — the
+    /// full list would grow with the stream.
+    pub rejected_sample: Vec<(usize, String)>,
+    /// ... of the rejections, how many were laxity-based.
+    pub laxity_rejections: usize,
+    /// Last completion instant (virtual seconds on the sim backend, wall
+    /// seconds from the epoch on the real backend).
+    pub makespan: f64,
+    pub throughput_rps: f64,
+    /// p50/p99 latency from the log-scale histogram (≤1% relative error —
+    /// [`LatencyHistogram`]).
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub deadline_total: usize,
+    pub deadline_misses: usize,
+    pub deadline_miss_rate: f64,
+    /// p99 latency per distinct priority, ascending priority.
+    pub per_priority_p99: Vec<(u32, f64)>,
+    pub preemptions: usize,
+    /// Compute busy fraction per device over the makespan.
+    pub device_util: Vec<f64>,
+    /// The admission window the run used (0 = unbounded).
+    pub window: usize,
+    /// High-water mark of requests live in the backend at once — the
+    /// bounded-memory witness (≤ window when the window binds).
+    pub peak_live_requests: usize,
+    /// High-water mark of live components (slots) — what the soak bench
+    /// gates in CI.
+    pub peak_live_components: usize,
+    /// Events processed (simulated events on the sim backend, executed
+    /// kernel spans on the real backend).
+    pub events: u64,
+    /// Arrival pacing: `"virtual"` on the sim backend (virtual time is
+    /// always open-loop), `"open"`/`"closed"` on the real backend.
+    pub pacing: &'static str,
+    /// Real backend: PJRT executable-cache hits/misses over the run
+    /// (0 in sim) — see [`super::ServeReport::exec_cache_hits`].
+    pub exec_cache_hits: usize,
+    pub exec_cache_misses: usize,
+    /// Real backend: mean service latency of cold / warm batches
+    /// (0 when none, and always 0 in sim).
+    pub cold_batch_latency: f64,
+    pub warm_batch_latency: f64,
+    /// Merged-template cache hits/misses over this run.
+    pub template_cache_hits: usize,
+    pub template_cache_misses: usize,
+}
+
+impl StreamReport {
+    /// The BENCH_serve_soak.json / BENCH_serve_real_stream.json building
+    /// block.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str("streaming")),
+            ("policy", Json::str(self.policy.clone())),
+            ("pacing", Json::str(self.pacing)),
+            ("requests", Json::num(self.served as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("laxity_rejections", Json::num(self.laxity_rejections as f64)),
+            ("makespan_s", Json::num(self.makespan)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("p50_latency_s", Json::num(self.p50_latency)),
+            ("p99_latency_s", Json::num(self.p99_latency)),
+            ("deadline_total", Json::num(self.deadline_total as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("deadline_miss_rate", Json::num(self.deadline_miss_rate)),
+            (
+                "per_priority_p99_s",
+                Json::Arr(
+                    self.per_priority_p99
+                        .iter()
+                        .map(|&(p, l)| {
+                            Json::obj(vec![
+                                ("priority", Json::num(p as f64)),
+                                ("p99_latency_s", Json::num(l)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            (
+                "device_util",
+                Json::Arr(self.device_util.iter().map(|&u| Json::num(u)).collect()),
+            ),
+            ("window", Json::num(self.window as f64)),
+            (
+                "peak_live_requests",
+                Json::num(self.peak_live_requests as f64),
+            ),
+            (
+                "peak_live_components",
+                Json::num(self.peak_live_components as f64),
+            ),
+            ("events", Json::num(self.events as f64)),
+            ("exec_cache_hits", Json::num(self.exec_cache_hits as f64)),
+            ("exec_cache_misses", Json::num(self.exec_cache_misses as f64)),
+            ("cold_batch_latency_s", Json::num(self.cold_batch_latency)),
+            ("warm_batch_latency_s", Json::num(self.warm_batch_latency)),
+            (
+                "template_cache_hits",
+                Json::num(self.template_cache_hits as f64),
+            ),
+            (
+                "template_cache_misses",
+                Json::num(self.template_cache_misses as f64),
+            ),
+        ])
+    }
+}
+
+/// A request admitted but not yet batch-closed: the scalars the core keeps
+/// between admission and batch close (the `ServeRequest` itself — workload
+/// payload included — is dropped at admission).
+struct PendingReq {
+    arrival: f64,
+    deadline: Option<f64>,
+    priority: u32,
+    cacheable: bool,
+    app: Arc<(Dag, Partition)>,
+}
+
+/// Rejection-sample cap for the always-on entry points (the batch-mode
+/// wrappers pass `usize::MAX` — their reports have always carried the full
+/// rejection list).
+pub(crate) const REJECT_SAMPLE_CAP: usize = 32;
+
+/// End-of-run execution statistics a backend reports to the core.
+#[derive(Debug, Clone)]
+pub struct BackendStats {
+    /// Last completion instant (virtual or wall seconds from the epoch).
+    pub makespan: f64,
+    /// Resident components displaced mid-flight (0 where unsupported).
+    pub preemptions: usize,
+    /// Compute busy seconds per device (the core divides by makespan).
+    pub device_busy: Vec<f64>,
+    /// Events processed (simulated events / executed kernel spans).
+    pub events: u64,
+    /// High-water mark of live requests.
+    pub peak_live_requests: usize,
+    /// High-water mark of live components.
+    pub peak_live_components: usize,
+}
+
+/// An execution target for [`serve_core`]: the core owns admission,
+/// batching, backpressure, and accounting; the backend owns only how
+/// admitted units actually run.
+///
+/// # Contract
+///
+/// * [`admit`](Self::admit) takes ownership of a unit; its members count as
+///   *live* until they reappear via
+///   [`drain_finished_into`](Self::drain_finished_into).
+/// * [`pump`](Self::pump) makes progress up to `horizon` (a time on the
+///   backend's own clock; `INFINITY` = run until something completes or
+///   nothing is left). Returning [`PumpStop::Idle`] means *nothing left to
+///   execute*; the core treats Idle-with-queued-work after end of stream as
+///   a stall and aborts rather than spinning.
+/// * A backend may defer execution of an admitted unit whose release lies
+///   beyond `horizon` — the core always pumps again after ingesting more
+///   arrivals, and pumps to `INFINITY` once the stream is exhausted.
+pub trait ServeBackend {
+    /// Accept one admission unit (a closed batch or a single uncacheable
+    /// request) for execution at-or-after `unit.release`.
+    fn admit(&mut self, unit: AdmitUnit) -> Result<()>;
+
+    /// Make execution progress up to `horizon` on this backend's clock.
+    fn pump(&mut self, horizon: f64) -> Result<PumpStop>;
+
+    /// Move every request completed since the last call into `out`,
+    /// retiring its live state.
+    fn drain_finished_into(&mut self, out: &mut Vec<FinishedRequest>);
+
+    /// Requests admitted and not yet drained — what the admission window
+    /// bounds.
+    fn live_requests(&self) -> usize;
+
+    /// Pacing label for latency semantics ([`outcome_fields`]): sim time is
+    /// inherently open-loop ([`Pacing::Open`]); a closed-loop real replay
+    /// returns [`Pacing::Closed`] so outcomes get the service-latency
+    /// clamp.
+    fn pacing(&self) -> Pacing;
+
+    /// End-of-run execution statistics.
+    fn stats(&self) -> BackendStats;
+
+    /// Backend-specific report fields (pacing label, executable-cache
+    /// counters, cold/warm batch latency). Called once, last.
+    fn finalize_report(&self, _report: &mut StreamReport) {}
+}
+
+/// Drive an arrival-ordered request stream through `backend` — the one
+/// serving loop behind every mode (`serve_sim_cached` / `serve_real` at
+/// `window: 0`, `serve_stream*` / `serve_real_stream` with a finite
+/// window).
+///
+/// The loop interleaves four activities until the stream and the backend
+/// are both drained:
+///
+/// 1. **admit** queued closed batches while live requests fit the window
+///    (an idle backend takes any unit, so oversized batches stall but
+///    never wedge);
+/// 2. **pump** the backend to the next admission boundary — the earliest
+///    of the first open batch's opener and the next arrival instant (so
+///    execution never overtakes a batch that is still coalescing);
+/// 3. **drain** completed requests into the sink, retiring their state;
+/// 4. **ingest** one arrival: admission checks (template cache + laxity
+///    gate, both memoized per signature exactly as the batch path's
+///    `admit_all` does), then offer it to the [`StreamBatcher`]; batches
+///    it closes become [`AdmitUnit`]s.
+///
+/// Arrivals must be non-decreasing (an arrival stream, not a request bag);
+/// an out-of-order arrival is a typed [`Error::Admission`] that aborts the
+/// run — incremental batching is ill-defined on it.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_core<I>(
+    requests: I,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    backend: &mut dyn ServeBackend,
+    cfg: &StreamingConfig,
+    cache: &mut TemplateCache,
+    sink: &mut dyn OutcomeSink,
+    policy_name: &str,
+    reject_sample_cap: usize,
+) -> Result<StreamReport>
+where
+    I: IntoIterator<Item = ServeRequest>,
+{
+    let (hits0, misses0) = cache.stats();
+    let pacing = backend.pacing();
+
+    let mut it = requests.into_iter();
+    let mut next_arr = it.next();
+    let mut last_arrival = f64::NEG_INFINITY;
+    let mut batcher = StreamBatcher::new(cfg.batch_window);
+    let mut closed: Vec<OpenBatch> = Vec::new();
+    let mut admit_q: VecDeque<AdmitUnit> = VecDeque::new();
+    let mut pending: HashMap<usize, PendingReq> = HashMap::new();
+    let mut gate = AdmissionGate::new(cfg.laxity_admission);
+    let mut finished: Vec<FinishedRequest> = Vec::new();
+
+    let mut served = 0usize;
+    let mut rejected = 0usize;
+    let mut rejected_sample: Vec<(usize, String)> = Vec::new();
+    let mut laxity_rejections = 0usize;
+    let mut deadline_total = 0usize;
+    let mut deadline_misses = 0usize;
+    // Fixed-bin log-scale histogram: the only latency state kept to the
+    // end, O(1) in the stream length.
+    let mut hist = LatencyHistogram::new();
+
+    let mut reject = |id: usize, e: Error, rejected: &mut usize| {
+        *rejected += 1;
+        if rejected_sample.len() < reject_sample_cap {
+            rejected_sample.push((id, e.to_string()));
+        }
+    };
+
+    loop {
+        // (1) Admit queued units while the window admits them. An idle
+        // backend takes any unit (oversized batches must not wedge).
+        let mut admitted_any = false;
+        while let Some(u) = admit_q.front() {
+            let live = backend.live_requests();
+            if cfg.window == 0 || live == 0 || live + u.members.len() <= cfg.window {
+                let u = admit_q.pop_front().expect("front() was Some");
+                backend.admit(u)?;
+                admitted_any = true;
+            } else {
+                break;
+            }
+        }
+
+        // (2) Advance the backend to the next admission boundary. While a
+        // batch is open its *opener* is the bound: the batch may close with
+        // a release at or after the opener, and admission must happen
+        // before backend time reaches it (the monolithic run has had the
+        // release event queued since t = 0).
+        let h_arr = next_arr
+            .as_ref()
+            .map(|r: &ServeRequest| r.arrival)
+            .unwrap_or(f64::INFINITY);
+        let stop = backend.pump(batcher.horizon().min(h_arr))?;
+
+        // (3) Retire completions into the sink.
+        backend.drain_finished_into(&mut finished);
+        let emitted = finished.len();
+        for f in finished.drain(..) {
+            let o = outcome_fields(
+                f.id, f.arrival, f.deadline, f.priority, f.release, f.finish, pacing,
+            );
+            if let Some(met) = o.deadline_met {
+                deadline_total += 1;
+                if !met {
+                    deadline_misses += 1;
+                }
+            }
+            hist.record(o.priority, o.latency);
+            served += 1;
+            sink.emit(&o, &f.devices)?;
+        }
+        if admitted_any || emitted > 0 {
+            // Progress was made — capacity may have freed or new units may
+            // now fit; go admit/pump again before touching the arrival
+            // stream.
+            continue;
+        }
+
+        // (4) Ingest exactly one arrival, mirroring admit_all's per-request
+        // admission pipeline.
+        if let Some(req) = next_arr.take() {
+            next_arr = it.next();
+            match cache.admit_app(&req) {
+                Ok(app) => {
+                    if req.arrival < last_arrival {
+                        return Err(Error::Admission(format!(
+                            "streaming arrivals must be non-decreasing: request {} \
+                             arrived at {} after {}",
+                            req.id, req.arrival, last_arrival
+                        )));
+                    }
+                    last_arrival = req.arrival;
+                    if pending.contains_key(&req.id) {
+                        reject(
+                            req.id,
+                            Error::Admission(format!(
+                                "request {}: duplicate id in flight",
+                                req.id
+                            )),
+                            &mut rejected,
+                        );
+                        continue;
+                    }
+                    if let Err(e) = gate.check(&req, app.as_ref(), platform, cost) {
+                        laxity_rejections += 1;
+                        reject(req.id, e, &mut rejected);
+                        continue;
+                    }
+                    let sig = req.workload.signature();
+                    batcher.offer(req.id, &sig, req.arrival, &mut closed);
+                    pending.insert(
+                        req.id,
+                        PendingReq {
+                            arrival: req.arrival,
+                            deadline: req.deadline,
+                            priority: req.priority,
+                            cacheable: req.workload.cacheable(),
+                            app,
+                        },
+                    );
+                    units_from_closed(&mut closed, &mut pending, cache, &mut admit_q)?;
+                }
+                Err(e) => reject(req.id, e, &mut rejected),
+            }
+            continue;
+        }
+
+        // (5) End of stream: close the still-open batches, once.
+        if batcher.open_len() > 0 {
+            batcher.flush(&mut closed);
+            units_from_closed(&mut closed, &mut pending, cache, &mut admit_q)?;
+            continue;
+        }
+
+        // (6) Drained?
+        if admit_q.is_empty() && backend.live_requests() == 0 {
+            break;
+        }
+
+        // (7) Work remains but nothing was admitted, nothing completed, and
+        // the stream is exhausted. An idle backend here is a wedge.
+        if stop == PumpStop::Idle {
+            return Err(Error::Sched(format!(
+                "streaming stall: {} queued unit(s), {} live request(s), \
+                 backend idle",
+                admit_q.len(),
+                backend.live_requests()
+            )));
+        }
+    }
+    sink.flush()?;
+
+    debug_assert!(pending.is_empty(), "requests left pending at end of stream");
+
+    let stats = backend.stats();
+    let makespan = stats.makespan;
+    let device_util = stats
+        .device_busy
+        .iter()
+        .map(|&busy| if makespan > 0.0 { busy / makespan } else { 0.0 })
+        .collect();
+    let (hits1, misses1) = cache.stats();
+    let mut report = StreamReport {
+        policy: policy_name.to_string(),
+        served,
+        rejected,
+        rejected_sample,
+        laxity_rejections,
+        makespan,
+        throughput_rps: if makespan > 0.0 {
+            served as f64 / makespan
+        } else {
+            0.0
+        },
+        p50_latency: hist.quantile(0.50),
+        p99_latency: hist.quantile(0.99),
+        deadline_total,
+        deadline_misses,
+        deadline_miss_rate: if deadline_total > 0 {
+            deadline_misses as f64 / deadline_total as f64
+        } else {
+            0.0
+        },
+        per_priority_p99: hist.per_priority_quantile(0.99),
+        preemptions: stats.preemptions,
+        device_util,
+        window: cfg.window,
+        peak_live_requests: stats.peak_live_requests,
+        peak_live_components: stats.peak_live_components,
+        events: stats.events,
+        pacing: "virtual",
+        exec_cache_hits: 0,
+        exec_cache_misses: 0,
+        cold_batch_latency: 0.0,
+        warm_batch_latency: 0.0,
+        template_cache_hits: hits1 - hits0,
+        template_cache_misses: misses1 - misses0,
+    };
+    backend.finalize_report(&mut report);
+    Ok(report)
+}
+
+/// Turn closed batches into admission units, in close order. A fully
+/// cacheable batch becomes **one** merged-block unit (all sizes go through
+/// the template cache, size-1 included — counter parity with
+/// [`super::serve_sim_cached`]); a batch with any uncacheable member
+/// becomes one single-app unit **per member**, in member order — exactly
+/// the component layout the monolithic assembly would append.
+pub(crate) fn units_from_closed(
+    closed: &mut Vec<OpenBatch>,
+    pending: &mut HashMap<usize, PendingReq>,
+    cache: &mut TemplateCache,
+    out: &mut VecDeque<AdmitUnit>,
+) -> Result<()> {
+    for b in closed.drain(..) {
+        let missing = || Error::Admission("internal: batch member not pending".into());
+        let cacheable = b
+            .members
+            .iter()
+            .all(|id| pending.get(id).map(|p| p.cacheable).unwrap_or(false));
+        if cacheable {
+            let first = pending.get(&b.members[0]).ok_or_else(missing)?;
+            let block = cache.merged_block(&b.signature, b.members.len(), &first.app)?;
+            let mut members = Vec::with_capacity(b.members.len());
+            for (i, &id) in b.members.iter().enumerate() {
+                let p = pending.remove(&id).ok_or_else(missing)?;
+                members.push(MemberSpec {
+                    id,
+                    arrival: p.arrival,
+                    deadline: p.deadline,
+                    priority: p.priority,
+                    comps: block.component_ranges[i].clone(),
+                });
+            }
+            out.push_back(AdmitUnit {
+                tmpl: Template::Merged(block),
+                release: b.release,
+                members,
+            });
+        } else {
+            for &id in &b.members {
+                let p = pending.remove(&id).ok_or_else(missing)?;
+                let ncomp = p.app.1.components.len();
+                out.push_back(AdmitUnit {
+                    tmpl: Template::Single(p.app),
+                    release: b.release,
+                    members: vec![MemberSpec {
+                        id,
+                        arrival: p.arrival,
+                        deadline: p.deadline,
+                        priority: p.priority,
+                        comps: 0..ncomp,
+                    }],
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::sched::LeastLoaded;
+    use crate::serve::arrival::poisson_arrivals;
+    use crate::serve::request::Workload;
+    use crate::serve::streaming::serve_stream;
+    use std::cell::Cell;
+    use std::io;
+    use std::rc::Rc;
+
+    fn stream(n: usize, rate: f64) -> Vec<ServeRequest> {
+        poisson_arrivals(7, n, rate)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| ServeRequest::new(i, t, Workload::Head { beta: 64 }))
+            .collect()
+    }
+
+    /// Writer that fails with a typed io error after `ok_writes` successful
+    /// write calls — a disk filling up mid-stream.
+    struct FailingWriter {
+        ok_writes: usize,
+    }
+
+    impl Write for FailingWriter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.ok_writes == 0 {
+                return Err(io::Error::new(io::ErrorKind::Other, "disk full"));
+            }
+            self.ok_writes -= 1;
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn failing_sink_writer_surfaces_a_typed_io_error_mid_stream() {
+        let platform = Platform::scaled(2, 1, 3, 1);
+        let mut pol = LeastLoaded;
+        let cfg = StreamingConfig::default();
+        let mut sink = JsonlSink::new(FailingWriter { ok_writes: 3 });
+        let e = serve_stream(
+            stream(24, 2000.0),
+            &platform,
+            &PaperCost,
+            &mut pol,
+            &cfg,
+            &mut sink,
+        )
+        .unwrap_err();
+        assert!(matches!(e, Error::Io(_)), "{e}");
+        assert!(e.to_string().contains("disk full"), "{e}");
+    }
+
+    #[derive(Clone, Default)]
+    struct FlushProbe {
+        flushed: Rc<Cell<bool>>,
+    }
+
+    impl Write for FlushProbe {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            self.flushed.set(true);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_flushes_on_drop() {
+        let probe = FlushProbe::default();
+        let flushed = probe.flushed.clone();
+        drop(JsonlSink::new(probe));
+        assert!(flushed.get(), "JsonlSink dropped without flushing");
+    }
+}

@@ -1,27 +1,33 @@
-//! The serving engine: concurrent multi-DAG scheduling over the simulator,
-//! plus the sequential-replay baseline every serving run is judged against.
+//! The serving engine: batch-mode entry points, shared report/outcome
+//! vocabulary, and the sequential-replay baseline every serving run is
+//! judged against.
 //!
-//! §Perf (PR 4): the sim path assembles its run-wide application
-//! **batch-by-batch from pre-merged templates** ([`TemplateCache`]) instead
-//! of instantiating and deep-cloning every request's app individually, and
-//! admission sorts an index permutation instead of cloning the request
-//! vector. Report percentiles sort each latency vector once and take
-//! nearest-rank cuts from the shared sorted buffer.
+//! §Perf (PR 4): applications come from the [`TemplateCache`] (one
+//! instantiate + validate per cacheable signature) and admission sorts an
+//! index permutation instead of cloning the request vector. Report
+//! percentiles sort each latency vector once and take nearest-rank cuts
+//! from the shared sorted buffer.
+//!
+//! §Refactor (PR 7): [`serve_sim_cached`] is no longer a monolith — it is
+//! a thin wrapper that sorts the request vector into admission order and
+//! drives the unified serve core ([`super::core::serve_core`]) at
+//! `window: 0` over the simulator backend. The frozen pre-refactor
+//! pipeline lives in `serve::reference`, which enforces bit-equality
+//! against this wrapper.
 
-use super::admission::{batch_requests, check_laxity_estimate};
+use super::admission::AdmissionGate;
 use super::cache::TemplateCache;
-use super::merge::MergedAssembly;
+use super::core::{CollectSink, StreamReport, StreamingConfig};
 use super::request::ServeRequest;
+use super::streaming::run_sim_core;
 use crate::cost::CostModel;
 use crate::error::Result;
 use crate::graph::{Dag, Partition};
 use crate::json::Json;
 use crate::platform::Platform;
-use crate::sched::{app_solo_estimate, Policy};
-use crate::sim::{simulate, simulate_served, CompMeta, SimConfig};
+use crate::sched::Policy;
+use crate::sim::{simulate, SimConfig};
 use crate::trace::Lane;
-use std::collections::HashMap;
-use std::ops::Range;
 use std::sync::Arc;
 
 /// Arrival pacing of the real serving loop.
@@ -317,22 +323,11 @@ pub(crate) type Admitted = (
     usize,
 );
 
-/// Shared admission front-end for the sim and real serving paths: arrival
-/// order, priority-descending tie-break, then id — sorted as an **index
-/// permutation** (the former `requests.to_vec()` deep-cloned every request,
-/// workload payload included, just to sort). Applications come from the
-/// template cache (one instantiate + validate per cacheable signature).
-/// With `ServeConfig::laxity_admission` on, deadline-carrying requests
-/// whose laxity is already negative at arrival are rejected up front and
-/// counted in the returned tally (typed, not inferred from rejection
-/// messages); the solo estimate behind the gate is memoized per signature.
-pub(crate) fn admit_all(
-    requests: &[ServeRequest],
-    platform: &Platform,
-    cost: &dyn CostModel,
-    laxity_admission: bool,
-    cache: &mut TemplateCache,
-) -> Admitted {
+/// The admission sort as an **index permutation**: arrival order,
+/// priority-descending tie-break, then id. This is the order every batch
+/// entry point feeds the serve core (the former `requests.to_vec()`
+/// deep-cloned every request, workload payload included, just to sort).
+pub(crate) fn admission_order(requests: &[ServeRequest]) -> Vec<usize> {
     let mut order: Vec<usize> = (0..requests.len()).collect();
     order.sort_by(|&a, &b| {
         requests[a]
@@ -341,28 +336,34 @@ pub(crate) fn admit_all(
             .then_with(|| requests[b].priority.cmp(&requests[a].priority))
             .then_with(|| requests[a].id.cmp(&requests[b].id))
     });
+    order
+}
+
+/// Shared admission front-end for the batch serving paths: sort via
+/// [`admission_order`], admit each request's application through the
+/// template cache, laxity-gate deadline-carrying requests through the
+/// memoized [`AdmissionGate`] — the same per-request pipeline the serve
+/// core applies incrementally.
+pub(crate) fn admit_all(
+    requests: &[ServeRequest],
+    platform: &Platform,
+    cost: &dyn CostModel,
+    laxity_admission: bool,
+    cache: &mut TemplateCache,
+) -> Admitted {
     let mut admitted = Vec::new();
     let mut apps = Vec::new();
     let mut rejected = Vec::new();
     let mut laxity_rejections = 0usize;
-    let mut solo_memo: HashMap<String, f64> = HashMap::new();
-    for &ri in &order {
+    let mut gate = AdmissionGate::new(laxity_admission);
+    for &ri in &admission_order(requests) {
         let req = &requests[ri];
         match cache.admit_app(req) {
             Ok(app) => {
-                if laxity_admission && req.deadline.is_some() {
-                    let estimate = if req.workload.cacheable() {
-                        *solo_memo
-                            .entry(req.workload.signature())
-                            .or_insert_with(|| app_solo_estimate(&app.0, &app.1, platform, cost))
-                    } else {
-                        app_solo_estimate(&app.0, &app.1, platform, cost)
-                    };
-                    if let Err(e) = check_laxity_estimate(req, estimate) {
-                        laxity_rejections += 1;
-                        rejected.push((req.id, e.to_string()));
-                        continue;
-                    }
+                if let Err(e) = gate.check(req, app.as_ref(), platform, cost) {
+                    laxity_rejections += 1;
+                    rejected.push((req.id, e.to_string()));
+                    continue;
                 }
                 admitted.push(req.clone());
                 apps.push(app);
@@ -471,12 +472,13 @@ pub fn serve_sim(
     serve_sim_cached(requests, platform, cost, policy, cfg, &mut cache)
 }
 
-/// [`serve_sim`] with a caller-held [`TemplateCache`]. The run-wide merged
-/// application is assembled **batch-block by batch-block**: every batch of
-/// a cacheable signature appends a pre-merged `(signature, batch-size)`
-/// template ([`MergedAssembly::append_merged`]) instead of deep-cloning
-/// each member app through `merge_apps`; the report carries this run's
-/// cache hit/miss delta.
+/// [`serve_sim`] with a caller-held [`TemplateCache`] — since PR 7 a thin
+/// wrapper over the unified serve core: sort the request vector into
+/// admission order, run [`super::core::serve_core`] at `window: 0`
+/// (everything admitted up front, as the monolith did) over the simulator
+/// backend, and re-sort the completion-ordered outcomes back into
+/// admission order for the classic batch report. Bit-equality with the
+/// frozen pre-refactor pipeline is enforced by `serve::reference`.
 pub fn serve_sim_cached(
     requests: &[ServeRequest],
     platform: &Platform,
@@ -485,116 +487,59 @@ pub fn serve_sim_cached(
     cfg: &ServeConfig,
     cache: &mut TemplateCache,
 ) -> Result<ServeReport> {
-    let (hits0, misses0) = cache.stats();
-    let (admitted, apps, rejected, laxity_rejections) =
-        admit_all(requests, platform, cost, cfg.laxity_admission, cache);
-    if admitted.is_empty() {
-        let mut report = build_report(
-            "concurrent",
-            policy.name(),
-            Vec::new(),
-            rejected,
-            laxity_rejections,
-            0.0,
-            vec![0.0; platform.devices.len()],
-            0,
-        );
-        let (hits1, misses1) = cache.stats();
-        report.template_cache_hits = hits1 - hits0;
-        report.template_cache_misses = misses1 - misses0;
-        return Ok(report);
-    }
-    let batches = batch_requests(&admitted, cfg.batch_window);
-    // Batch-block assembly. Requests of one batch occupy one contiguous
-    // component run; `req_range[i]` maps admitted request `i` back to its
-    // components, whatever order its batch was appended in.
-    let mut asm = MergedAssembly::new();
-    let mut req_range: Vec<Range<usize>> = vec![0..0; admitted.len()];
-    for b in &batches {
-        let cacheable = b.members.iter().all(|&m| admitted[m].workload.cacheable());
-        if cacheable {
-            // All members share the signature (batching invariant), hence
-            // the same cached template.
-            let sig = admitted[b.members[0]].workload.signature();
-            let block = cache.merged_block(&sig, b.members.len(), &apps[b.members[0]])?;
-            let ranges = asm.append_merged(&block);
-            for (r, &m) in ranges.into_iter().zip(&b.members) {
-                req_range[m] = r;
-            }
-        } else {
-            for &m in &b.members {
-                req_range[m] = asm.append_app(&apps[m]);
-            }
-        }
-    }
-    let merged = asm.finish()?;
-    let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
-    for b in &batches {
-        for &m in &b.members {
-            for c in req_range[m].clone() {
-                meta[c].release = b.release;
-            }
-        }
-    }
-    // Deadlines are absolute (arrival + budget) so EDF compares requests on
-    // one clock; priorities ride along per component.
-    for (i, req) in admitted.iter().enumerate() {
-        for c in req_range[i].clone() {
-            meta[c].deadline = req.deadline.map(|d| req.arrival + d).unwrap_or(f64::INFINITY);
-            meta[c].priority = req.priority;
-        }
-    }
-    let mut sim_cfg = cfg.sim.clone();
-    sim_cfg.max_tenants = cfg.tenancy.max(1);
-    let sim = simulate_served(
-        &merged.dag,
-        &merged.partition,
+    let policy_name = policy.name().to_string();
+    let order = admission_order(requests);
+    let scfg = StreamingConfig {
+        window: 0,
+        batch_window: cfg.batch_window,
+        tenancy: cfg.tenancy,
+        laxity_admission: cfg.laxity_admission,
+        sim: cfg.sim.clone(),
+    };
+    let mut sink = CollectSink::default();
+    // Uncapped rejection sample: the batch report carries the full list.
+    let sreport = run_sim_core(
+        order.iter().map(|&i| requests[i].clone()),
         platform,
         cost,
         policy,
-        &sim_cfg,
-        &meta,
+        &scfg,
+        cache,
+        &mut sink,
+        usize::MAX,
     )?;
-
-    let outcomes = admitted
-        .iter()
-        .enumerate()
-        .map(|(i, req)| {
-            let range = req_range[i].clone();
-            let release = meta[range.start].release;
-            let finish = range
-                .map(|c| sim.component_finish[c])
-                .fold(0.0f64, f64::max);
-            request_outcome(req, release, finish, Pacing::Open)
-        })
-        .collect();
-
-    let makespan = sim.makespan;
-    let device_util = (0..platform.devices.len())
-        .map(|d| {
-            let busy = sim
-                .trace
-                .busy_time(|l| matches!(l, Lane::Device { dev, .. } if *dev == d));
-            if makespan > 0.0 {
-                busy / makespan
-            } else {
-                0.0
-            }
-        })
-        .collect();
-    let mut report = build_report(
-        "concurrent",
-        &sim.policy,
-        outcomes,
-        rejected,
+    // The sink emits in completion order; the batch report has always been
+    // in admission order. The admission key is unique per request (id
+    // breaks every tie), so this re-sort reproduces it exactly.
+    let mut outcomes = sink.outcomes;
+    outcomes.sort_by(|a, b| {
+        a.arrival
+            .total_cmp(&b.arrival)
+            .then_with(|| b.priority.cmp(&a.priority))
+            .then_with(|| a.id.cmp(&b.id))
+    });
+    let StreamReport {
+        rejected_sample,
         laxity_rejections,
         makespan,
         device_util,
-        sim.preemptions,
+        preemptions,
+        template_cache_hits,
+        template_cache_misses,
+        ..
+    } = sreport;
+    let mut report = build_report(
+        "concurrent",
+        &policy_name,
+        outcomes,
+        rejected_sample,
+        laxity_rejections,
+        makespan,
+        device_util,
+        preemptions,
     );
-    let (hits1, misses1) = cache.stats();
-    report.template_cache_hits = hits1 - hits0;
-    report.template_cache_misses = misses1 - misses0;
+    report.template_cache_hits = template_cache_hits;
+    report.template_cache_misses = template_cache_misses;
     Ok(report)
 }
 

@@ -1,0 +1,218 @@
+//! Streaming latency percentiles in O(1) memory per priority class.
+//!
+//! The streaming server used to retain one `(priority, latency)` pair per
+//! served request (16 bytes/request) so the final report could cut exact
+//! p50/p99 percentiles — flat-slope, but still O(served). This module
+//! replaces that with a **fixed-bin log-scale histogram**
+//! ([`LatencyHistogram`]): latencies are counted into geometrically spaced
+//! bins, and a percentile query walks the cumulative counts and returns the
+//! geometric midpoint of the bin holding the requested rank.
+//!
+//! # Error bound
+//!
+//! Bin edges grow by [`GROWTH`] (2% per bin) across the representable range
+//! `[`[`MIN_LATENCY`]`, `[`MAX_LATENCY`]`)`. A value in bin `i` lies in
+//! `[MIN·G^i, MIN·G^(i+1))` and is reported as the geometric midpoint
+//! `MIN·G^(i+0.5)`, so the multiplicative error is at most `G^0.5 ≈ 1.00995`
+//! — **≤ 1% relative error** for any in-range latency, at any quantile.
+//! Latencies outside the range clamp to the first/last bin: below a
+//! microsecond or above ~2.8 hours the reported percentile saturates (no
+//! real serving latency lives there; the bound is documented, not silent).
+//!
+//! # Memory
+//!
+//! ~1.2k `u64` bins (≈ 9 KiB) per **distinct priority class**, independent
+//! of the stream length — the soak bench's RSS ceiling tightens on the back
+//! of this (`ci/bench_baselines/BENCH_serve_soak.json`).
+
+use std::collections::BTreeMap;
+
+/// Lower edge of the first bin: 1 µs. Smaller latencies clamp here.
+const MIN_LATENCY: f64 = 1e-6;
+/// Upper edge of the last bin: 10 000 s. Larger latencies clamp here.
+const MAX_LATENCY: f64 = 1e4;
+/// Geometric bin growth factor; `sqrt(GROWTH)` bounds the relative error.
+const GROWTH: f64 = 1.02;
+
+/// Fixed-bin log-scale latency histogram, bucketed per priority class so
+/// one structure serves both the merged p50/p99 cuts and the per-priority
+/// tail report.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bin counts per priority, ascending priority (BTreeMap order is the
+    /// report order).
+    per_priority: BTreeMap<u32, Vec<u64>>,
+    nbins: usize,
+    count: usize,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // ln(MAX/MIN)/ln(G) ≈ 1163 bins; +1 absorbs the ceil boundary.
+        let nbins = ((MAX_LATENCY / MIN_LATENCY).ln() / GROWTH.ln()).ceil() as usize + 1;
+        LatencyHistogram {
+            per_priority: BTreeMap::new(),
+            nbins,
+            count: 0,
+        }
+    }
+
+    fn bin(&self, latency: f64) -> usize {
+        if !(latency > MIN_LATENCY) {
+            // Sub-microsecond, zero, or NaN: clamp to the first bin.
+            return 0;
+        }
+        (((latency / MIN_LATENCY).ln() / GROWTH.ln()) as usize).min(self.nbins - 1)
+    }
+
+    /// Geometric midpoint of bin `i` — the value a percentile query reports.
+    fn representative(&self, i: usize) -> f64 {
+        MIN_LATENCY * GROWTH.powf(i as f64 + 0.5)
+    }
+
+    /// Count one served request's latency under its priority class.
+    pub fn record(&mut self, priority: u32, latency: f64) {
+        let nbins = self.nbins;
+        let bins = self
+            .per_priority
+            .entry(priority)
+            .or_insert_with(|| vec![0u64; nbins]);
+        let b = self.bin(latency);
+        bins[b] += 1;
+        self.count += 1;
+    }
+
+    /// Total recorded latencies across every priority.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Nearest-rank quantile over **all** priorities merged, matching
+    /// [`super::percentile_sorted`]'s rank convention
+    /// (`round((n-1)·q)`); 0.0 when empty, representative within 1% of the
+    /// exact order statistic otherwise.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((self.count as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+        let mut seen = 0usize;
+        for i in 0..self.nbins {
+            let c: u64 = self
+                .per_priority
+                .values()
+                .map(|bins| bins[i])
+                .sum();
+            seen += c as usize;
+            if seen > rank {
+                return self.representative(i);
+            }
+        }
+        self.representative(self.nbins - 1)
+    }
+
+    /// Nearest-rank quantile per distinct priority, ascending priority —
+    /// the shape of `per_priority_p99` in the streaming report.
+    pub fn per_priority_quantile(&self, q: f64) -> Vec<(u32, f64)> {
+        let mut out = Vec::with_capacity(self.per_priority.len());
+        for (&p, bins) in &self.per_priority {
+            let total: u64 = bins.iter().sum();
+            if total == 0 {
+                continue;
+            }
+            let rank = ((total as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as u64;
+            let mut seen = 0u64;
+            for (i, &c) in bins.iter().enumerate() {
+                seen += c;
+                if seen > rank {
+                    out.push((p, self.representative(i)));
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exact nearest-rank percentile (the shape the histogram approximates).
+    fn exact(values: &[f64], q: f64) -> f64 {
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((sorted.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+        sorted[idx]
+    }
+
+    #[test]
+    fn quantiles_are_within_one_percent_of_exact() {
+        // 300 values spanning ~4 decades (0.1 ms .. 0.7 s) — every serving
+        // regime the reports see.
+        let values: Vec<f64> = (0..300).map(|i| 1e-4 * 1.03f64.powi(i)).collect();
+        let mut h = LatencyHistogram::new();
+        for &v in &values {
+            h.record(0, v);
+        }
+        assert_eq!(h.count(), 300);
+        for q in [0.0, 0.1, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let e = exact(&values, q);
+            let got = h.quantile(q);
+            let rel = (got - e).abs() / e;
+            assert!(rel <= 0.0101, "q={q}: exact {e}, histogram {got}, rel {rel}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_cuts_zero_like_percentile_sorted() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert!(h.per_priority_quantile(0.99).is_empty());
+    }
+
+    #[test]
+    fn out_of_range_latencies_clamp_to_the_edge_bins() {
+        let mut h = LatencyHistogram::new();
+        h.record(0, 1e-9); // below MIN: first bin
+        h.record(0, 1e9); // above MAX: last bin
+        assert_eq!(h.count(), 2);
+        let lo = h.quantile(0.0);
+        let hi = h.quantile(1.0);
+        assert!((MIN_LATENCY..MIN_LATENCY * 1.1).contains(&lo), "{lo}");
+        assert!((MAX_LATENCY * 0.97..=MAX_LATENCY * 1.02).contains(&hi), "{hi}");
+    }
+
+    #[test]
+    fn per_priority_quantiles_track_each_class() {
+        let fast: Vec<f64> = (0..100).map(|i| 1e-3 + i as f64 * 1e-5).collect();
+        let slow: Vec<f64> = (0..100).map(|i| 1e-1 + i as f64 * 1e-3).collect();
+        let mut h = LatencyHistogram::new();
+        for &v in &fast {
+            h.record(0, v);
+        }
+        for &v in &slow {
+            h.record(2, v);
+        }
+        let cuts = h.per_priority_quantile(0.99);
+        assert_eq!(cuts.len(), 2);
+        assert_eq!(cuts[0].0, 0);
+        assert_eq!(cuts[1].0, 2);
+        for (vals, &(_, got)) in [(&fast, &cuts[0]), (&slow, &cuts[1])] {
+            let e = exact(vals, 0.99);
+            assert!((got - e).abs() / e <= 0.0101, "exact {e}, got {got}");
+        }
+        // The merged cut sits in the slow class's range (it owns the tail).
+        assert!(h.quantile(0.99) > 0.1);
+    }
+}

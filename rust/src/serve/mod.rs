@@ -9,8 +9,8 @@
 //! * [`arrival`] — deterministic seeded Poisson and trace-file arrival
 //!   processes;
 //! * [`admission`] — request validation with typed [`crate::Error::Admission`]
-//!   rejections, plus the batching front-end that coalesces compatible
-//!   requests arriving within a window;
+//!   rejections, the memoized laxity gate, and the batching front-end
+//!   (batch-mode [`batch_requests`] and the incremental [`StreamBatcher`]);
 //! * [`merge`] — fuses many application DAG/partition pairs into one
 //!   multi-tenant application with component↔request maps
 //!   ([`MergedAssembly`] appends validated apps or whole pre-merged blocks
@@ -20,19 +20,28 @@
 //!   (signature, batch size), the sim-side analog of the real path's PJRT
 //!   executable cache, with hit/miss counters surfaced in
 //!   [`ServeReport::template_cache_hits`];
-//! * [`engine`] — the simulated serving path ([`serve_sim`]) over
-//!   [`crate::sim::simulate_served`] and the sequential-replay baseline
-//!   ([`serve_sequential`]), with per-request makespan/latency accounting;
-//! * [`streaming`] — the always-on serving path ([`serve_stream`]): a
-//!   long-lived [`crate::sim::StreamSim`] admits batches while earlier
-//!   requests execute, retires completed requests (bounded memory), and
-//!   emits each outcome incrementally through an [`OutcomeSink`] (JSONL or
-//!   custom) instead of accumulating report vectors;
-//! * [`real`] — the real path over [`crate::exec::execute_dag_served`]'s
-//!   thread-per-queue machinery (PJRT kernels), with open- or closed-loop
-//!   arrival pacing ([`Pacing`]), per-component deadline metadata threaded
-//!   into the executor's scheduler state, and a warm executable cache whose
-//!   hit/miss counts and cold-vs-warm batch latency the report carries.
+//! * [`core`] — **the unified serve core** ([`serve_core`]): the one
+//!   admission/backpressure loop every serving mode runs through —
+//!   arrival-iterator ingestion, incremental batching, windowed
+//!   backpressure, [`OutcomeSink`] emission, histogram-based percentile
+//!   accounting — parameterized by a [`ServeBackend`] (execution only);
+//! * [`histogram`] — fixed-bin log-scale latency histogram
+//!   ([`LatencyHistogram`]): streaming p50/p99 within 1% relative error in
+//!   O(1) memory per priority class;
+//! * [`engine`] — batch-mode entry points ([`serve_sim`],
+//!   [`serve_sim_cached`] — a `window: 0` wrapper over the core), the
+//!   shared report/outcome vocabulary, and the sequential-replay baseline
+//!   ([`serve_sequential`]);
+//! * [`streaming`] — the sim execution backend ([`SimBackend`] over a
+//!   long-lived [`crate::sim::StreamSim`]) and the always-on sim entry
+//!   points ([`serve_stream`], [`serve_stream_cached`]);
+//! * [`real`] — the real execution backend ([`RealBackend`] over
+//!   [`crate::exec::execute_dag_served`]'s thread-per-queue machinery and
+//!   PJRT kernels) with open/closed arrival pacing ([`Pacing`]), and the
+//!   real entry points: batch [`serve_real`] and always-on
+//!   [`serve_real_stream`];
+//! * `reference` (doc-hidden) — the frozen pre-refactor pipeline, kept as
+//!   the bit-equality oracle for the core refactor.
 //!
 //! Multi-tenancy itself lives one layer down: `SimConfig::max_tenants` /
 //! `execute_dag_multi`'s `tenancy` let several components — from different
@@ -54,9 +63,13 @@
 pub mod admission;
 pub mod arrival;
 pub mod cache;
+pub mod core;
 pub mod engine;
+pub mod histogram;
 pub mod merge;
 pub mod real;
+#[doc(hidden)]
+pub mod reference;
 pub mod request;
 pub mod streaming;
 
@@ -67,10 +80,12 @@ pub use engine::{
     percentile_sorted, request_outcome, serve_sequential, serve_sim, serve_sim_cached, Pacing,
     RequestOutcome, ServeConfig, ServeReport,
 };
+pub use histogram::LatencyHistogram;
 pub use merge::{merge_apps, merge_apps_refs, MergedApp, MergedAssembly};
-pub use real::serve_real;
+pub use real::{serve_real, serve_real_stream, RealBackend};
 pub use request::{ServeRequest, Workload};
-pub use streaming::{
-    serve_stream, serve_stream_cached, CollectSink, JsonlSink, NullSink, OutcomeSink,
+pub use self::core::{
+    serve_core, BackendStats, CollectSink, JsonlSink, NullSink, OutcomeSink, ServeBackend,
     StreamReport, StreamingConfig,
 };
+pub use streaming::{serve_stream, serve_stream_cached, SimBackend};

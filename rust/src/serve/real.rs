@@ -1,40 +1,63 @@
-//! The real serving path: batched requests over the threaded executor.
+//! The real serving path: [`RealBackend`] plugs the threaded executor and
+//! the PJRT stand-in [`Runtime`] into the unified serve core.
 //!
-//! Each batch's apps are merged into one multi-tenant application and run
-//! through [`execute_dag_served`] — the same thread-per-queue Algorithm-1
-//! machinery as single-DAG execution, with up to `cfg.tenancy` components
-//! resident per device, so requests genuinely share the PJRT worker pool.
+//! Each admission unit's apps are merged into one multi-tenant application
+//! and run through [`execute_dag_served`] — the same thread-per-queue
+//! Algorithm-1 machinery as single-DAG execution, with up to `tenancy`
+//! components resident per device, so requests genuinely share the PJRT
+//! worker pool. Completed requests retire incrementally through the core's
+//! drain, so a paced open-loop run with a finite `--window` holds bounded
+//! state (`live_requests ≤ window`) exactly like the sim backend — the
+//! always-on real server the ROADMAP asked for.
 //!
-//! **Pacing** ([`Pacing`]): under `--pacing open` the serving loop sleeps
-//! until each batch's nominal release instant before dispatching, so
-//! wall-clock latencies reflect the arrival process (open-loop serving
-//! methodology); under `closed` it replays as fast as batches complete and
-//! latency degenerates to service latency when the loop outruns arrivals
+//! Two entry points:
+//!
+//! * [`serve_real`] — the batch-mode wrapper: sorts the request vector into
+//!   admission order and runs the core at `window: 0` (whole stream
+//!   admitted, classic [`ServeReport`] out).
+//! * [`serve_real_stream`] — the always-on path behind
+//!   `serve --streaming --mode real`: arrival iterator in, windowed
+//!   backpressure, per-completion [`OutcomeSink`] emission,
+//!   [`StreamReport`] out.
+//!
+//! **Pacing** ([`Pacing`]): under `open` the backend sleeps until each
+//! unit's nominal release instant before dispatching, so wall-clock
+//! latencies reflect the arrival process (open-loop serving methodology);
+//! under `closed` it replays as fast as units complete and latency
+//! degenerates to service latency when the loop outruns arrivals
 //! ([`super::engine::request_outcome`] defines both semantics in one
 //! place). **Deadline metadata** is threaded per component into the
-//! executor's scheduler state (re-based to each batch's clock), so `edf` orders
-//! real dispatch by urgency too; preemption stays sim-only — OS threads
-//! cannot be displaced mid-kernel. **Executable cache**: one
-//! [`Runtime`] serves every batch, so artifacts compile once per process —
+//! executor's scheduler state (re-based to each unit's dispatch clock), so
+//! `edf` orders real dispatch by urgency too; preemption stays sim-only —
+//! OS threads cannot be displaced mid-kernel. **Executable cache**: one
+//! [`Runtime`] serves every unit, so artifacts compile once per process —
 //! the report carries hit/miss counts and cold-vs-warm batch latency (a
-//! batch is cold iff it actually lowered an executable; repeats and
+//! unit is cold iff it actually lowered an executable; repeats and
 //! prewarmed runs are served warm).
+//!
+//! One documented divergence from the pre-core batch loop: a batch with an
+//! *uncacheable* (Spec) member used to execute as one whole-batch merge;
+//! the core splits such batches into one single-app unit per member
+//! (executed in member order). Outcome order and request data are
+//! unchanged — inputs are keyed by request id and request-local buffer
+//! index, independent of batch composition — only wall-clock overlap
+//! within those rare batches differs.
 
-use super::admission::batch_requests;
 use super::cache::TemplateCache;
-use super::engine::{
-    admit_all, build_report, request_outcome, Pacing, RequestOutcome, ServeConfig, ServeReport,
+use super::core::{
+    serve_core, BackendStats, CollectSink, OutcomeSink, ServeBackend, StreamReport,
+    StreamingConfig, REJECT_SAMPLE_CAP,
 };
+use super::engine::{admission_order, build_report, Pacing, ServeConfig, ServeReport};
 use super::merge::{merge_apps_refs, MergedApp};
 use super::request::ServeRequest;
 use crate::cost::CostModel;
 use crate::error::Result;
 use crate::exec::execute_dag_served;
-use crate::graph::{Dag, Partition};
 use crate::platform::Platform;
 use crate::runtime::Runtime;
 use crate::sched::Policy;
-use crate::sim::CompMeta;
+use crate::sim::{AdmitUnit, CompMeta, FinishedRequest, PumpStop, Template};
 use crate::trace::Lane;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -92,11 +115,11 @@ fn seed_isolated_inputs(
 /// would make open-loop latencies negative).
 const MAX_PACE_WAIT_S: f64 = 3600.0;
 
-/// Open-loop pacing: the next sleep chunk so the batch is dispatched no
+/// Open-loop pacing: the next sleep chunk so the unit is dispatched no
 /// earlier than its nominal `release` instant (`now` = seconds since the
 /// serving epoch). `None` when the release is already due. Non-finite
 /// releases yield `None` as pure defense — admission and the arrival
-/// parsers already reject non-finite instants, and `Batch::release` is a
+/// parsers already reject non-finite instants, and a unit's release is a
 /// max over admitted arrivals.
 fn pace_wait(release: f64, now: f64) -> Option<Duration> {
     let wait = release - now;
@@ -104,111 +127,144 @@ fn pace_wait(release: f64, now: f64) -> Option<Duration> {
         .then(|| Duration::from_secs_f64(wait.min(MAX_PACE_WAIT_S)))
 }
 
-/// Serve the stream for real. Requires every kernel of every admitted
-/// workload to carry an AOT artifact (generator workloads do at the AOT β
-/// sizes); missing artifacts reject the batch with a typed executor error.
-pub fn serve_real(
-    requests: &[ServeRequest],
-    runtime: &Arc<Runtime>,
-    platform: &Platform,
-    cost: &dyn CostModel,
-    policy: &mut dyn Policy,
-    cfg: &ServeConfig,
+/// [`ServeBackend`] over the threaded executor: admitted units queue in
+/// release order and execute one per [`pump`](ServeBackend::pump) on the
+/// wall clock (seconds since the backend's construction epoch). A unit
+/// whose release lies beyond the pump horizon is deferred — the core
+/// ingests more arrivals first and pumps to `INFINITY` once the stream
+/// ends, so deferral never wedges.
+pub struct RealBackend<'a> {
+    runtime: &'a Arc<Runtime>,
+    platform: &'a Platform,
+    cost: &'a dyn CostModel,
+    policy: &'a mut dyn Policy,
+    tenancy: usize,
+    pacing: Pacing,
     seed: u64,
-) -> Result<ServeReport> {
-    // Admission: same rules and ordering as the sim path (including
-    // laxity-based rejection of requests that cannot meet their deadline).
-    // The template cache also serves the per-batch merges below, so a
-    // repeated (signature, batch-size) shape merges once per run.
-    let mut cache = TemplateCache::new();
-    let (admitted, apps, rejected, laxity_rejections): (
-        Vec<ServeRequest>,
-        Vec<Arc<(Dag, Partition)>>,
-        _,
-        usize,
-    ) = admit_all(requests, platform, cost, cfg.laxity_admission, &mut cache);
+    epoch: Instant,
+    queue: std::collections::VecDeque<AdmitUnit>,
+    finished: Vec<FinishedRequest>,
+    live: usize,
+    live_components: usize,
+    peak_live: usize,
+    peak_live_components: usize,
+    busy: Vec<f64>,
+    /// Executed kernel spans (the real-path analog of simulated events).
+    events: u64,
+    makespan: f64,
+    cold: Vec<f64>,
+    warm: Vec<f64>,
+    hits0: usize,
+    misses0: usize,
+}
 
-    let batches = batch_requests(&admitted, cfg.batch_window);
-    if cfg.prewarm {
-        // Clockwork-style: compile every artifact before the epoch so no
-        // request pays lowering (cold ≈ warm afterwards).
-        runtime.warmup()?;
+impl<'a> RealBackend<'a> {
+    /// The epoch (t = 0 for releases and outcomes) and the executable-cache
+    /// baseline are captured here — construct after any prewarm so warmup
+    /// compiles don't count as this run's misses.
+    pub fn new(
+        runtime: &'a Arc<Runtime>,
+        platform: &'a Platform,
+        cost: &'a dyn CostModel,
+        policy: &'a mut dyn Policy,
+        tenancy: usize,
+        pacing: Pacing,
+        seed: u64,
+    ) -> Self {
+        let (hits0, misses0) = runtime.cache_stats();
+        RealBackend {
+            runtime,
+            platform,
+            cost,
+            policy,
+            tenancy,
+            pacing,
+            seed,
+            epoch: Instant::now(),
+            queue: std::collections::VecDeque::new(),
+            finished: Vec::new(),
+            live: 0,
+            live_components: 0,
+            peak_live: 0,
+            peak_live_components: 0,
+            busy: vec![0.0; platform.devices.len()],
+            events: 0,
+            makespan: 0.0,
+            cold: Vec::new(),
+            warm: Vec::new(),
+            hits0,
+            misses0,
+        }
     }
-    let (hits0, misses0) = runtime.cache_stats();
-    let epoch = Instant::now();
-    let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(admitted.len());
-    let mut busy = vec![0.0f64; platform.devices.len()];
-    // Cold vs warm batch service latency — the observable cost of the
-    // executable cache. A batch is *cold* iff it actually lowered at least
-    // one executable (per-batch cache-miss delta), so a run on an
-    // already-warm runtime (prewarm, or a second stream in one process)
-    // correctly reports every batch warm.
-    let mut cold: Vec<f64> = Vec::new();
-    let mut warm: Vec<f64> = Vec::new();
-    for batch in &batches {
-        let member_ids: Vec<usize> = batch.members.iter().map(|&m| admitted[m].id).collect();
-        // Cacheable batches (the common case) reuse the pre-merged
-        // (signature, batch-size) block; Spec workloads merge fresh.
-        let cacheable = batch.members.iter().all(|&m| admitted[m].workload.cacheable());
-        let merged: Arc<MergedApp> = if cacheable {
-            let sig = admitted[batch.members[0]].workload.signature();
-            cache.merged_block(&sig, batch.members.len(), &apps[batch.members[0]])?
-        } else {
-            let refs: Vec<&(Dag, Partition)> =
-                batch.members.iter().map(|&m| apps[m].as_ref()).collect();
-            Arc::new(merge_apps_refs(&refs)?)
-        };
-        let inputs = seed_isolated_inputs(&merged, &member_ids, seed);
-        if cfg.pacing == Pacing::Open {
+
+    /// Execute one unit end-to-end: pace to its release (open pacing),
+    /// merge-or-reuse the template, seed per-request inputs, run the
+    /// threaded executor with per-component deadline metadata, and retire
+    /// every member with its own trace-derived finish instant.
+    fn execute_unit(&mut self, unit: AdmitUnit) -> Result<()> {
+        if self.pacing == Pacing::Open {
             // Dispatch no earlier than the nominal release instant: the
             // open-loop clock that makes latency-vs-arrival measurements
             // meaningful. Chunked so a distant release neither overflows
-            // the Duration conversion nor dispatches early (a runaway
-            // trace is bounded by the CI job timeout, not by pacing).
-            while let Some(wait) = pace_wait(batch.release, epoch.elapsed().as_secs_f64()) {
+            // the Duration conversion nor dispatches early.
+            while let Some(wait) = pace_wait(unit.release, self.epoch.elapsed().as_secs_f64()) {
                 std::thread::sleep(wait);
             }
         }
-        let (_, batch_misses0) = runtime.cache_stats();
-        let start = epoch.elapsed().as_secs_f64();
+        let member_ids: Vec<usize> = unit.members.iter().map(|m| m.id).collect();
+        let merged: Arc<MergedApp> = match &unit.tmpl {
+            Template::Merged(block) => block.clone(),
+            // Single-app units go through the identity merge: same
+            // component/buffer layout as the app itself, so member `comps`
+            // ranges stay valid.
+            Template::Single(app) => Arc::new(merge_apps_refs(&[app.as_ref()])?),
+        };
+        let inputs = seed_isolated_inputs(&merged, &member_ids, self.seed);
+        let (_, batch_misses0) = self.runtime.cache_stats();
+        let start = self.epoch.elapsed().as_secs_f64();
         // Deadline/priority metadata for the executor's SchedState, re-based
-        // to the batch's clock (the executor's `now` starts at 0 per call):
-        // absolute deadline on the serving epoch minus the batch start.
+        // to the unit's clock (the executor's `now` starts at 0 per call):
+        // absolute deadline on the serving epoch minus the dispatch start.
         let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
-        for (i, &m) in batch.members.iter().enumerate() {
-            let req = &admitted[m];
-            for c in merged.component_ranges[i].clone() {
-                meta[c].deadline = req
+        for m in &unit.members {
+            for c in m.comps.clone() {
+                meta[c].deadline = m
                     .deadline
-                    .map(|d| req.arrival + d - start)
+                    .map(|d| m.arrival + d - start)
                     .unwrap_or(f64::INFINITY);
-                meta[c].priority = req.priority;
+                meta[c].priority = m.priority;
             }
         }
         let report = execute_dag_served(
             &merged.dag,
             &merged.partition,
-            platform,
-            cost,
-            policy,
-            runtime,
+            self.platform,
+            self.cost,
+            &mut *self.policy,
+            self.runtime,
             &inputs,
-            cfg.tenancy.max(1),
+            self.tenancy.max(1),
             &meta,
         )?;
-        let finish = epoch.elapsed().as_secs_f64();
-        let (_, batch_misses1) = runtime.cache_stats();
+        let finish = self.epoch.elapsed().as_secs_f64();
+        let (_, batch_misses1) = self.runtime.cache_stats();
+        // Cold vs warm unit service latency — the observable cost of the
+        // executable cache. A unit is *cold* iff it actually lowered at
+        // least one executable (per-unit cache-miss delta), so a run on an
+        // already-warm runtime (prewarm, or a second stream in one process)
+        // correctly reports every unit warm.
         if batch_misses1 > batch_misses0 {
-            cold.push(finish - start);
+            self.cold.push(finish - start);
         } else {
-            warm.push(finish - start);
+            self.warm.push(finish - start);
         }
-        for (d, b) in busy.iter_mut().enumerate() {
+        for (d, b) in self.busy.iter_mut().enumerate() {
             *b += report
                 .trace
                 .busy_time(|l| matches!(l, Lane::Device { dev, .. } if *dev == d));
         }
-        // Per-request finish from the executor trace (the batch-level
+        self.events += report.trace.spans.len() as u64;
+        // Per-request finish from the executor trace (the unit-level
         // `finish` would charge every member the slowest member's tail —
         // erasing exactly the reordering a deadline-aware policy buys).
         // Span ends are on the executor's clock, which starts ≈ `start` on
@@ -220,46 +276,222 @@ pub fn serve_real(
                 comp_finish[c] = comp_finish[c].max(span.end);
             }
         }
-        for (i, &m) in batch.members.iter().enumerate() {
-            let fin = merged.component_ranges[i]
+        for m in &unit.members {
+            let fin = m
+                .comps
                 .clone()
                 .map(|c| start + comp_finish[c])
                 .fold(start, f64::max);
-            outcomes.push(request_outcome(&admitted[m], start, fin, cfg.pacing));
+            let devices = m.comps.clone().map(|c| report.component_device[c]).collect();
+            self.finished.push(FinishedRequest {
+                id: m.id,
+                arrival: m.arrival,
+                deadline: m.deadline,
+                priority: m.priority,
+                release: start,
+                finish: fin,
+                devices,
+            });
+        }
+        self.live -= unit.members.len();
+        self.live_components -= merged.partition.components.len();
+        self.makespan = self.epoch.elapsed().as_secs_f64();
+        Ok(())
+    }
+}
+
+impl ServeBackend for RealBackend<'_> {
+    fn admit(&mut self, unit: AdmitUnit) -> Result<()> {
+        self.live += unit.members.len();
+        self.live_components += unit.tmpl.partition().components.len();
+        self.peak_live = self.peak_live.max(self.live);
+        self.peak_live_components = self.peak_live_components.max(self.live_components);
+        self.queue.push_back(unit);
+        Ok(())
+    }
+
+    fn pump(&mut self, horizon: f64) -> Result<PumpStop> {
+        let Some(front) = self.queue.front() else {
+            return Ok(PumpStop::Idle);
+        };
+        if horizon.is_finite() && front.release > horizon {
+            // The unit is not due within the core's admission boundary:
+            // defer so arrivals that belong before it can still batch. The
+            // core pumps to INFINITY after the stream ends, so deferred
+            // units always execute eventually.
+            return Ok(PumpStop::Horizon);
+        }
+        let unit = self.queue.pop_front().expect("front() was Some");
+        self.execute_unit(unit)?;
+        Ok(PumpStop::Horizon)
+    }
+
+    fn drain_finished_into(&mut self, out: &mut Vec<FinishedRequest>) {
+        out.append(&mut self.finished);
+    }
+
+    fn live_requests(&self) -> usize {
+        self.live
+    }
+
+    fn pacing(&self) -> Pacing {
+        self.pacing
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats {
+            makespan: self.makespan,
+            // OS threads cannot be displaced mid-kernel: preemption is
+            // sim-only.
+            preemptions: 0,
+            device_busy: self.busy.clone(),
+            events: self.events,
+            peak_live_requests: self.peak_live,
+            peak_live_components: self.peak_live_components,
         }
     }
 
-    let makespan = epoch.elapsed().as_secs_f64();
-    let device_util = busy
-        .into_iter()
-        .map(|b| if makespan > 0.0 { b / makespan } else { 0.0 })
-        .collect();
-    let (hits1, misses1) = runtime.cache_stats();
-    let mean = |v: &[f64]| {
-        if v.is_empty() {
-            0.0
-        } else {
-            v.iter().sum::<f64>() / v.len() as f64
-        }
+    fn finalize_report(&self, report: &mut StreamReport) {
+        report.pacing = self.pacing.as_str();
+        let (hits1, misses1) = self.runtime.cache_stats();
+        report.exec_cache_hits = hits1 - self.hits0;
+        report.exec_cache_misses = misses1 - self.misses0;
+        let mean = |v: &[f64]| {
+            if v.is_empty() {
+                0.0
+            } else {
+                v.iter().sum::<f64>() / v.len() as f64
+            }
+        };
+        report.cold_batch_latency = mean(&self.cold);
+        report.warm_batch_latency = mean(&self.warm);
+    }
+}
+
+/// The always-on real serving path (`serve --streaming --mode real`):
+/// [`serve_core`] over a [`RealBackend`] — arrival-iterator ingestion,
+/// incremental batching, `cfg.window` backpressure, per-completion sink
+/// emission, bounded live state. Requires every kernel of every admitted
+/// workload to carry an AOT artifact (generator workloads do at the AOT β
+/// sizes); missing artifacts reject the unit with a typed executor error.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_real_stream<I>(
+    requests: I,
+    runtime: &Arc<Runtime>,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &StreamingConfig,
+    pacing: Pacing,
+    prewarm: bool,
+    seed: u64,
+    sink: &mut dyn OutcomeSink,
+) -> Result<StreamReport>
+where
+    I: IntoIterator<Item = ServeRequest>,
+{
+    let policy_name = policy.name().to_string();
+    if prewarm {
+        // Clockwork-style: compile every artifact before the epoch so no
+        // request pays lowering (the backend's cache baseline is captured
+        // after, so warmup compiles don't count as this run's misses).
+        runtime.warmup()?;
+    }
+    let mut cache = TemplateCache::new();
+    let mut backend =
+        RealBackend::new(runtime, platform, cost, policy, cfg.tenancy, pacing, seed);
+    serve_core(
+        requests,
+        platform,
+        cost,
+        &mut backend,
+        cfg,
+        &mut cache,
+        sink,
+        &policy_name,
+        REJECT_SAMPLE_CAP,
+    )
+}
+
+/// Serve the stream for real, batch mode: sort into admission order and
+/// run the core at `window: 0` (whole stream admitted up front — the
+/// pre-core behavior, now a thin wrapper). Requires every kernel of every
+/// admitted workload to carry an AOT artifact.
+pub fn serve_real(
+    requests: &[ServeRequest],
+    runtime: &Arc<Runtime>,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &ServeConfig,
+    seed: u64,
+) -> Result<ServeReport> {
+    let policy_name = policy.name().to_string();
+    if cfg.prewarm {
+        runtime.warmup()?;
+    }
+    // The core ingests arrivals in order; feed it the same admission order
+    // the sim path uses (arrival, priority desc, id) as an index
+    // permutation.
+    let order = admission_order(requests);
+    let scfg = StreamingConfig {
+        window: 0,
+        batch_window: cfg.batch_window,
+        tenancy: cfg.tenancy,
+        laxity_admission: cfg.laxity_admission,
+        sim: cfg.sim.clone(),
     };
+    let mut cache = TemplateCache::new();
+    let mut backend =
+        RealBackend::new(runtime, platform, cost, policy, cfg.tenancy, cfg.pacing, seed);
+    let mut sink = CollectSink::default();
+    // Uncapped rejection sample: the batch report has always carried the
+    // full rejection list.
+    let sreport = serve_core(
+        order.iter().map(|&i| requests[i].clone()),
+        platform,
+        cost,
+        &mut backend,
+        &scfg,
+        &mut cache,
+        &mut sink,
+        &policy_name,
+        usize::MAX,
+    )?;
+    // Units execute in batch-close order and members in member order, so
+    // the sink's emission order *is* the old batch loop's outcome order —
+    // no re-sort needed.
+    let StreamReport {
+        rejected_sample,
+        laxity_rejections,
+        makespan,
+        device_util,
+        pacing,
+        exec_cache_hits,
+        exec_cache_misses,
+        cold_batch_latency,
+        warm_batch_latency,
+        template_cache_hits,
+        template_cache_misses,
+        ..
+    } = sreport;
     let mut report = build_report(
         "real",
-        policy.name(),
-        outcomes,
-        rejected,
+        &policy_name,
+        sink.outcomes,
+        rejected_sample,
         laxity_rejections,
         makespan,
         device_util,
         0,
     );
-    report.pacing = cfg.pacing.as_str();
-    report.exec_cache_hits = hits1 - hits0;
-    report.exec_cache_misses = misses1 - misses0;
-    report.cold_batch_latency = mean(&cold);
-    report.warm_batch_latency = mean(&warm);
-    let (t_hits, t_misses) = cache.stats();
-    report.template_cache_hits = t_hits;
-    report.template_cache_misses = t_misses;
+    report.pacing = pacing;
+    report.exec_cache_hits = exec_cache_hits;
+    report.exec_cache_misses = exec_cache_misses;
+    report.cold_batch_latency = cold_batch_latency;
+    report.warm_batch_latency = warm_batch_latency;
+    report.template_cache_hits = template_cache_hits;
+    report.template_cache_misses = template_cache_misses;
     Ok(report)
 }
 
@@ -268,8 +500,11 @@ mod tests {
     use super::*;
     use crate::cost::PaperCost;
     use crate::sched::Clustering;
+    use crate::serve::core::NullSink;
+    use crate::serve::engine::RequestOutcome;
     use crate::serve::merge::merge_apps;
     use crate::serve::request::Workload;
+    use std::collections::HashSet;
     use std::path::Path;
 
     fn artifact_runtime() -> Option<Arc<Runtime>> {
@@ -569,6 +804,130 @@ mod tests {
                 pair_inputs.get(&(b + off)),
                 "buffer {b} data depends on batch composition"
             );
+        }
+    }
+
+    /// Tentpole equivalence on the real path: `--streaming --mode real` at
+    /// `window: 0` must match batch `serve_real` per-request outcomes —
+    /// same served-id set, same rejections, same deadline verdicts (under
+    /// budgets generous enough that wall-clock jitter cannot flip them),
+    /// and identical lowering work on fresh runtimes.
+    #[test]
+    fn streaming_real_window0_matches_batch_serve_real() {
+        let Some(rt_batch) = artifact_runtime() else {
+            return;
+        };
+        let Some(rt_stream) = artifact_runtime() else {
+            return;
+        };
+        let platform = Platform::paper_testbed(3, 1);
+        let requests: Vec<ServeRequest> = (0..6)
+            .map(|i| {
+                let mut r = ServeRequest::new(i, i as f64 * 0.002, Workload::Head { beta: 32 });
+                if i % 2 == 0 {
+                    r.deadline = Some(5.0);
+                    r.priority = 1;
+                }
+                r
+            })
+            .collect();
+        let cfg = ServeConfig::default();
+        let batch = serve_real(
+            &requests,
+            &rt_batch,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &cfg,
+            7,
+        )
+        .unwrap();
+
+        let scfg = StreamingConfig {
+            window: 0,
+            batch_window: cfg.batch_window,
+            tenancy: cfg.tenancy,
+            laxity_admission: cfg.laxity_admission,
+            sim: cfg.sim.clone(),
+        };
+        let mut sink = CollectSink::default();
+        let streamed = serve_real_stream(
+            requests.clone(),
+            &rt_stream,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &scfg,
+            Pacing::Closed,
+            false,
+            7,
+            &mut sink,
+        )
+        .unwrap();
+
+        assert_eq!(streamed.served, batch.outcomes.len());
+        assert_eq!(streamed.rejected, batch.rejected.len());
+        assert_eq!(streamed.rejected, 0);
+        let batch_ids: HashSet<usize> = batch.outcomes.iter().map(|o| o.id).collect();
+        let stream_ids: HashSet<usize> = sink.outcomes.iter().map(|o| o.id).collect();
+        assert_eq!(batch_ids, stream_ids);
+        let by_id: HashMap<usize, &RequestOutcome> =
+            batch.outcomes.iter().map(|o| (o.id, o)).collect();
+        for o in &sink.outcomes {
+            assert_eq!(o.deadline_met, by_id[&o.id].deadline_met, "id {}", o.id);
+            assert_eq!(o.priority, by_id[&o.id].priority, "id {}", o.id);
+        }
+        // Fresh runtimes on both sides → identical lowering and merge work.
+        assert_eq!(streamed.exec_cache_misses, batch.exec_cache_misses);
+        assert_eq!(
+            (streamed.template_cache_hits, streamed.template_cache_misses),
+            (batch.template_cache_hits, batch.template_cache_misses)
+        );
+        assert_eq!(streamed.pacing, "closed");
+        assert_eq!(streamed.window, 0);
+    }
+
+    /// Property: the real backend honours the admission window — across
+    /// window sizes, live requests never exceed it, and every request is
+    /// accounted for. `batch_window: 0` keeps units singleton so the bound
+    /// is airtight.
+    #[test]
+    fn real_backend_live_requests_bounded_by_window() {
+        let Some(rt) = artifact_runtime() else {
+            return;
+        };
+        let platform = Platform::paper_testbed(3, 1);
+        for &window in &[1usize, 2, 4] {
+            let n = 8;
+            let requests: Vec<ServeRequest> = (0..n)
+                .map(|i| ServeRequest::new(i, i as f64 * 1e-4, Workload::Head { beta: 32 }))
+                .collect();
+            let scfg = StreamingConfig {
+                window,
+                batch_window: 0.0,
+                ..StreamingConfig::default()
+            };
+            let report = serve_real_stream(
+                requests,
+                &rt,
+                &platform,
+                &PaperCost,
+                &mut Clustering,
+                &scfg,
+                Pacing::Closed,
+                false,
+                7,
+                &mut NullSink,
+            )
+            .unwrap();
+            assert_eq!(report.served + report.rejected, n, "window {window}");
+            assert_eq!(report.served, n, "window {window}: unexpected rejections");
+            assert!(
+                report.peak_live_requests <= window,
+                "window {window}: peak {} live requests",
+                report.peak_live_requests
+            );
+            assert_eq!(report.window, window);
         }
     }
 }

@@ -1,0 +1,315 @@
+//! Frozen pre-refactor serving pipeline, kept verbatim as the equivalence
+//! oracle for the unified serve core (the PR 4–6 proof pattern:
+//! `sim::reference` gates the indexed engine, `sched::reference` gates the
+//! incremental scheduler state — this module gates `serve::core`).
+//!
+//! [`serve_sim_cached_ref`] is the monolithic batch-mode sim pipeline
+//! exactly as it shipped before `serve_sim_cached` became a thin wrapper
+//! over [`super::core::serve_core`]: sort-everything admission
+//! ([`admit_all_ref`]), whole-run [`MergedAssembly`] construction, one
+//! [`simulate_served`] call. The tests below demand **bit** equality
+//! (latency/makespan/utilization `to_bits()`, exact rejection lists, exact
+//! cache counters) between this frozen path and the core-routed wrapper.
+//!
+//! Nothing here is part of the public API; it exists so a schedule-changing
+//! regression in the core refactor fails a test instead of silently
+//! shifting benchmark numbers.
+
+use super::admission::{batch_requests, check_laxity_estimate};
+use super::cache::TemplateCache;
+use super::engine::{build_report, request_outcome, Pacing, ServeConfig, ServeReport};
+use super::merge::MergedAssembly;
+use super::request::ServeRequest;
+use crate::cost::CostModel;
+use crate::error::Result;
+use crate::graph::{Dag, Partition};
+use crate::platform::Platform;
+use crate::sched::{app_solo_estimate, Policy};
+use crate::sim::{simulate_served, CompMeta};
+use crate::trace::Lane;
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::Arc;
+
+type AdmittedRef = (
+    Vec<ServeRequest>,
+    Vec<Arc<(Dag, Partition)>>,
+    Vec<(usize, String)>,
+    usize,
+);
+
+/// The pre-refactor admission front-end, verbatim (the live path now
+/// routes the same checks through `AdmissionGate`).
+fn admit_all_ref(
+    requests: &[ServeRequest],
+    platform: &Platform,
+    cost: &dyn CostModel,
+    laxity_admission: bool,
+    cache: &mut TemplateCache,
+) -> AdmittedRef {
+    let mut order: Vec<usize> = (0..requests.len()).collect();
+    order.sort_by(|&a, &b| {
+        requests[a]
+            .arrival
+            .total_cmp(&requests[b].arrival)
+            .then_with(|| requests[b].priority.cmp(&requests[a].priority))
+            .then_with(|| requests[a].id.cmp(&requests[b].id))
+    });
+    let mut admitted = Vec::new();
+    let mut apps = Vec::new();
+    let mut rejected = Vec::new();
+    let mut laxity_rejections = 0usize;
+    let mut solo_memo: HashMap<String, f64> = HashMap::new();
+    for &ri in &order {
+        let req = &requests[ri];
+        match cache.admit_app(req) {
+            Ok(app) => {
+                if laxity_admission && req.deadline.is_some() {
+                    let estimate = if req.workload.cacheable() {
+                        *solo_memo
+                            .entry(req.workload.signature())
+                            .or_insert_with(|| app_solo_estimate(&app.0, &app.1, platform, cost))
+                    } else {
+                        app_solo_estimate(&app.0, &app.1, platform, cost)
+                    };
+                    if let Err(e) = check_laxity_estimate(req, estimate) {
+                        laxity_rejections += 1;
+                        rejected.push((req.id, e.to_string()));
+                        continue;
+                    }
+                }
+                admitted.push(req.clone());
+                apps.push(app);
+            }
+            Err(e) => rejected.push((req.id, e.to_string())),
+        }
+    }
+    (admitted, apps, rejected, laxity_rejections)
+}
+
+/// The pre-refactor `serve_sim_cached`, verbatim: admit everything up
+/// front, assemble the whole run into one merged application, simulate
+/// once, and read outcomes back out of the component-finish array.
+pub fn serve_sim_cached_ref(
+    requests: &[ServeRequest],
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &ServeConfig,
+    cache: &mut TemplateCache,
+) -> Result<ServeReport> {
+    let (hits0, misses0) = cache.stats();
+    let (admitted, apps, rejected, laxity_rejections) =
+        admit_all_ref(requests, platform, cost, cfg.laxity_admission, cache);
+    if admitted.is_empty() {
+        let mut report = build_report(
+            "concurrent",
+            policy.name(),
+            Vec::new(),
+            rejected,
+            laxity_rejections,
+            0.0,
+            vec![0.0; platform.devices.len()],
+            0,
+        );
+        let (hits1, misses1) = cache.stats();
+        report.template_cache_hits = hits1 - hits0;
+        report.template_cache_misses = misses1 - misses0;
+        return Ok(report);
+    }
+    let batches = batch_requests(&admitted, cfg.batch_window);
+    // Batch-block assembly. Requests of one batch occupy one contiguous
+    // component run; `req_range[i]` maps admitted request `i` back to its
+    // components, whatever order its batch was appended in.
+    let mut asm = MergedAssembly::new();
+    let mut req_range: Vec<Range<usize>> = vec![0..0; admitted.len()];
+    for b in &batches {
+        let cacheable = b.members.iter().all(|&m| admitted[m].workload.cacheable());
+        if cacheable {
+            // All members share the signature (batching invariant), hence
+            // the same cached template.
+            let sig = admitted[b.members[0]].workload.signature();
+            let block = cache.merged_block(&sig, b.members.len(), &apps[b.members[0]])?;
+            let ranges = asm.append_merged(&block);
+            for (r, &m) in ranges.into_iter().zip(&b.members) {
+                req_range[m] = r;
+            }
+        } else {
+            for &m in &b.members {
+                req_range[m] = asm.append_app(&apps[m]);
+            }
+        }
+    }
+    let merged = asm.finish()?;
+    let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
+    for b in &batches {
+        for &m in &b.members {
+            for c in req_range[m].clone() {
+                meta[c].release = b.release;
+            }
+        }
+    }
+    // Deadlines are absolute (arrival + budget) so EDF compares requests on
+    // one clock; priorities ride along per component.
+    for (i, req) in admitted.iter().enumerate() {
+        for c in req_range[i].clone() {
+            meta[c].deadline = req.deadline.map(|d| req.arrival + d).unwrap_or(f64::INFINITY);
+            meta[c].priority = req.priority;
+        }
+    }
+    let mut sim_cfg = cfg.sim.clone();
+    sim_cfg.max_tenants = cfg.tenancy.max(1);
+    let sim = simulate_served(
+        &merged.dag,
+        &merged.partition,
+        platform,
+        cost,
+        policy,
+        &sim_cfg,
+        &meta,
+    )?;
+
+    let outcomes = admitted
+        .iter()
+        .enumerate()
+        .map(|(i, req)| {
+            let range = req_range[i].clone();
+            let release = meta[range.start].release;
+            let finish = range
+                .map(|c| sim.component_finish[c])
+                .fold(0.0f64, f64::max);
+            request_outcome(req, release, finish, Pacing::Open)
+        })
+        .collect();
+
+    let makespan = sim.makespan;
+    let device_util = (0..platform.devices.len())
+        .map(|d| {
+            let busy = sim
+                .trace
+                .busy_time(|l| matches!(l, Lane::Device { dev, .. } if *dev == d));
+            if makespan > 0.0 {
+                busy / makespan
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut report = build_report(
+        "concurrent",
+        &sim.policy,
+        outcomes,
+        rejected,
+        laxity_rejections,
+        makespan,
+        device_util,
+        sim.preemptions,
+    );
+    let (hits1, misses1) = cache.stats();
+    report.template_cache_hits = hits1 - hits0;
+    report.template_cache_misses = misses1 - misses0;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::sched::{Edf, LeastLoaded};
+    use crate::serve::arrival::poisson_arrivals;
+    use crate::serve::engine::serve_sim_cached;
+    use crate::serve::request::Workload;
+
+    /// Mixed stream exercising every admission path: two batch signatures,
+    /// deadline-bearing high-priority requests, one malformed deadline
+    /// (admission rejection), one unmeetable deadline (laxity rejection).
+    fn stream(n: usize, seed: u64, rate: f64) -> Vec<ServeRequest> {
+        let mut requests: Vec<ServeRequest> = poisson_arrivals(seed, n, rate)
+            .expect("valid rate")
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let beta = if i % 4 == 3 { 128 } else { 64 };
+                let mut r = ServeRequest::new(i, t, Workload::Head { beta });
+                if i % 5 == 0 {
+                    r.deadline = Some(2.0);
+                    r.priority = 1;
+                }
+                if i % 7 == 3 {
+                    r.deadline = Some(0.05);
+                    r.priority = 2;
+                }
+                r
+            })
+            .collect();
+        let mut bad = ServeRequest::new(n, 0.015, Workload::Head { beta: 64 });
+        bad.deadline = Some(-1.0); // admission rejection
+        requests.push(bad);
+        let mut hopeless = ServeRequest::new(n + 1, 0.016, Workload::Head { beta: 64 });
+        hopeless.deadline = Some(1e-9); // laxity rejection
+        requests.push(hopeless);
+        requests
+    }
+
+    fn assert_bit_equal(policy: &mut dyn Policy, reference: &mut dyn Policy) {
+        let requests = stream(96, 13, 2500.0);
+        let platform = Platform::scaled(2, 1, 3, 1);
+        let cfg = ServeConfig::default();
+
+        let mut cache_new = TemplateCache::new();
+        let new = serve_sim_cached(
+            &requests,
+            &platform,
+            &PaperCost,
+            policy,
+            &cfg,
+            &mut cache_new,
+        )
+        .unwrap();
+        let mut cache_ref = TemplateCache::new();
+        let old = serve_sim_cached_ref(
+            &requests,
+            &platform,
+            &PaperCost,
+            reference,
+            &cfg,
+            &mut cache_ref,
+        )
+        .unwrap();
+
+        // Both report in admission order: compare positionally, bit for bit.
+        assert_eq!(new.outcomes.len(), old.outcomes.len());
+        for (a, b) in new.outcomes.iter().zip(&old.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.release.to_bits(), b.release.to_bits(), "id {}", a.id);
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "id {}", a.id);
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits(), "id {}", a.id);
+            assert_eq!(a.deadline_met, b.deadline_met, "id {}", a.id);
+        }
+        assert_eq!(new.rejected, old.rejected);
+        assert!(!new.rejected.is_empty(), "stream must exercise rejection");
+        assert_eq!(new.laxity_rejections, old.laxity_rejections);
+        assert_eq!(new.laxity_rejections, 1);
+        assert_eq!(new.makespan.to_bits(), old.makespan.to_bits());
+        assert_eq!(new.preemptions, old.preemptions);
+        assert_eq!(new.device_util.len(), old.device_util.len());
+        for (a, b) in new.device_util.iter().zip(&old.device_util) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(new.template_cache_hits, old.template_cache_hits);
+        assert_eq!(new.template_cache_misses, old.template_cache_misses);
+    }
+
+    #[test]
+    fn core_routed_serve_sim_matches_reference_least_loaded() {
+        assert_bit_equal(&mut LeastLoaded, &mut LeastLoaded);
+    }
+
+    #[test]
+    fn core_routed_serve_sim_matches_reference_edf() {
+        // Deadline-aware ordering (and possible preemption) must survive
+        // the core refactor identically too.
+        assert_bit_equal(&mut Edf, &mut Edf);
+    }
+}

@@ -1,283 +1,130 @@
-//! The always-on streaming serving path.
+//! The simulated always-on serving path: [`SimBackend`] plugs the
+//! long-lived [`StreamSim`] into the unified serve core.
 //!
 //! [`serve_sim_cached`](super::serve_sim_cached) is a **closed-world** run:
-//! it admits the whole request vector up front, merges every batch into one
-//! monolithic application, and simulates it in one shot — memory grows with
-//! the stream length, which caps how long a "server" it can model. This
-//! module is the open-world counterpart: [`serve_stream`] walks an arrival
-//! *iterator* (never materialized), admits batches into a long-lived
-//! [`StreamSim`] while earlier requests are still executing, and emits each
-//! per-request outcome through an [`OutcomeSink`] the moment it completes.
-//! Completed requests are fully retired inside the simulator — slots,
-//! dispatch records, and scheduler entries are reclaimed and reused — so
-//! live state is bounded by the admission window, not the stream length.
+//! the whole request vector is known up front. This module is the
+//! open-world counterpart: [`serve_stream`] walks an arrival *iterator*
+//! (never materialized) through [`serve_core`] — incremental batching,
+//! windowed backpressure, per-completion [`OutcomeSink`] emission — with
+//! the simulator as the execution backend. Completed requests are fully
+//! retired inside the simulator — slots, dispatch records, and scheduler
+//! entries are reclaimed and reused — so live state is bounded by the
+//! admission window, not the stream length.
 //!
 //! # Equivalence contract
 //!
 //! With an unbounded window (`window == 0`), `serve_stream` reproduces
-//! `serve_sim_cached` **bit for bit** on the same arrival-ordered stream:
-//! identical batch membership ([`StreamBatcher`] vs
-//! [`batch_requests`](super::batch_requests)), identical admission decisions
-//! (same laxity memo), and identical simulated event sequence
-//! ([`StreamSim`]'s contract). Retirement changes memory, never outcomes.
+//! `serve_sim_cached` **bit for bit** on the same arrival-ordered stream
+//! (which is itself a `window: 0` wrapper over the same core — the frozen
+//! pre-refactor monolith lives in `serve::reference` and gates both):
+//! identical batch membership, identical admission decisions, identical
+//! simulated event sequence. Retirement changes memory, never outcomes.
 //! A *finite* window adds backpressure — admission of a closed batch waits
 //! until live requests fit under the window — which legitimately changes
 //! schedules under overload; that is the knob doing its job, not a
 //! divergence bug.
-//!
-//! # Memory profile
-//!
-//! Held for the whole run: per-request `(priority, latency)` scalars for
-//! the final percentile cuts (16 bytes/request), the template cache, and
-//! the simulator arena (bounded by the window). Held transiently: pending
-//! request records between admission and batch close, and queued
-//! [`AdmitUnit`]s under backpressure (the inherent arrival backlog of an
-//! open-loop system in overload).
 
-use std::collections::{HashMap, VecDeque};
-use std::io::Write;
-use std::sync::Arc;
-
-use super::admission::{check_laxity_estimate, OpenBatch, StreamBatcher};
 use super::cache::TemplateCache;
-use super::engine::{outcome_fields, percentile_sorted, Pacing, RequestOutcome};
+use super::core::{
+    serve_core, BackendStats, OutcomeSink, ServeBackend, StreamReport, StreamingConfig,
+    REJECT_SAMPLE_CAP,
+};
+use super::engine::Pacing;
 use super::request::ServeRequest;
 use crate::cost::CostModel;
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::graph::{Dag, Partition};
-use crate::json::Json;
-use crate::platform::{DeviceId, Platform};
-use crate::sched::{app_solo_estimate, Policy};
-use crate::sim::{AdmitUnit, FinishedRequest, MemberSpec, PumpStop, SimConfig, StreamSim, Template};
+use crate::platform::Platform;
+use crate::sched::Policy;
+use crate::sim::{AdmitUnit, FinishedRequest, PumpStop, StreamSim};
 
-/// Streaming-server knobs. The subset of [`super::ServeConfig`] that is
-/// meaningful for an always-on run, plus the admission window.
-#[derive(Debug, Clone)]
-pub struct StreamingConfig {
-    /// Admission window: max requests live in the simulator at once
-    /// (`0` = unbounded, the equivalence-test setting). A closed batch
-    /// larger than the window is admitted whole once the server drains
-    /// idle, so oversized batches stall but never wedge.
-    pub window: usize,
-    /// Batching window (seconds from a batch opener), as in
-    /// [`super::ServeConfig::batch_window`].
-    pub batch_window: f64,
-    /// Max task components resident per device (multi-tenancy).
-    pub tenancy: usize,
-    /// Laxity-based admission control (see [`super::admission::admit_slo`]).
-    pub laxity_admission: bool,
-    /// Underlying simulator knobs. `max_events` is the per-pump runaway
-    /// guard here, not a whole-run cap.
-    pub sim: SimConfig,
+/// [`ServeBackend`] over the long-lived event-driven simulator: units admit
+/// into [`StreamSim`], virtual time advances on [`pump`](ServeBackend::pump),
+/// completions retire through the simulator's own drain. Virtual time is
+/// inherently open-loop, so the backend reports [`Pacing::Open`] and the
+/// final report keeps the `"virtual"` pacing label.
+pub struct SimBackend<'a> {
+    sim: StreamSim<'a>,
 }
 
-impl Default for StreamingConfig {
-    fn default() -> Self {
-        StreamingConfig {
-            window: 512,
-            batch_window: 2e-3,
-            tenancy: 4,
-            laxity_admission: true,
-            sim: SimConfig::default(),
+impl<'a> SimBackend<'a> {
+    pub fn new(sim: StreamSim<'a>) -> Self {
+        SimBackend { sim }
+    }
+}
+
+impl ServeBackend for SimBackend<'_> {
+    fn admit(&mut self, unit: AdmitUnit) -> Result<()> {
+        self.sim.admit(unit)
+    }
+
+    fn pump(&mut self, horizon: f64) -> Result<PumpStop> {
+        self.sim.pump(horizon)
+    }
+
+    fn drain_finished_into(&mut self, out: &mut Vec<FinishedRequest>) {
+        self.sim.drain_finished_into(out);
+    }
+
+    fn live_requests(&self) -> usize {
+        self.sim.live_members()
+    }
+
+    fn pacing(&self) -> Pacing {
+        Pacing::Open
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats {
+            makespan: self.sim.makespan(),
+            preemptions: self.sim.preemptions(),
+            device_busy: self.sim.device_busy().to_vec(),
+            events: self.sim.events(),
+            peak_live_requests: self.sim.peak_live_members(),
+            peak_live_components: self.sim.peak_live_components(),
         }
     }
 }
 
-/// Where per-request outcomes go, one call per completion, in completion
-/// order. The streaming server never accumulates an outcome vector — this
-/// sink is the only place results exist.
-pub trait OutcomeSink {
-    /// `devices` is the device each of the request's components ran on,
-    /// in component order (last device for preempted components).
-    fn emit(&mut self, outcome: &RequestOutcome, devices: &[DeviceId]) -> Result<()>;
-
-    /// Flush any buffered output; called once at end of stream.
-    fn flush(&mut self) -> Result<()> {
-        Ok(())
-    }
+/// Run the serve core over a fresh [`SimBackend`] — the shared body of
+/// [`serve_stream_cached`] and the batch-mode
+/// [`serve_sim_cached`](super::serve_sim_cached) wrapper (which passes
+/// `window: 0` and an uncapped rejection sample).
+pub(crate) fn run_sim_core<I>(
+    requests: I,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &StreamingConfig,
+    cache: &mut TemplateCache,
+    sink: &mut dyn OutcomeSink,
+    reject_sample_cap: usize,
+) -> Result<StreamReport>
+where
+    I: IntoIterator<Item = ServeRequest>,
+{
+    let policy_name = policy.name().to_string();
+    let empty_dag = Dag::default();
+    let empty_part = Partition {
+        components: Vec::new(),
+        assignment: Vec::new(),
+    };
+    let mut sim_cfg = cfg.sim.clone();
+    sim_cfg.max_tenants = cfg.tenancy.max(1);
+    let sim = StreamSim::new(&empty_dag, &empty_part, platform, cost, policy, &sim_cfg)?;
+    let mut backend = SimBackend::new(sim);
+    serve_core(
+        requests,
+        platform,
+        cost,
+        &mut backend,
+        cfg,
+        cache,
+        sink,
+        &policy_name,
+        reject_sample_cap,
+    )
 }
-
-/// Discards outcomes (throughput benches: accounting without I/O).
-#[derive(Debug, Default)]
-pub struct NullSink;
-
-impl OutcomeSink for NullSink {
-    fn emit(&mut self, _outcome: &RequestOutcome, _devices: &[DeviceId]) -> Result<()> {
-        Ok(())
-    }
-}
-
-/// Collects outcomes in memory — for tests comparing the streaming path
-/// against the build-once pipeline (which defeats bounded memory; don't use
-/// it on unbounded streams).
-#[derive(Debug, Default)]
-pub struct CollectSink {
-    pub outcomes: Vec<RequestOutcome>,
-}
-
-impl OutcomeSink for CollectSink {
-    fn emit(&mut self, outcome: &RequestOutcome, _devices: &[DeviceId]) -> Result<()> {
-        self.outcomes.push(outcome.clone());
-        Ok(())
-    }
-}
-
-/// Streams outcomes as JSON Lines: one object per request with fixed keys
-/// `id`, `arrival`, `release`, `finish`, `latency_s`, `deadline_met`
-/// (bool or null), `priority`, `devices` (array of device ids). Wrap the
-/// writer in a `BufWriter` for file targets — emit is called per request.
-#[derive(Debug)]
-pub struct JsonlSink<W: Write> {
-    w: W,
-}
-
-impl<W: Write> JsonlSink<W> {
-    pub fn new(w: W) -> Self {
-        JsonlSink { w }
-    }
-}
-
-impl<W: Write> OutcomeSink for JsonlSink<W> {
-    fn emit(&mut self, o: &RequestOutcome, devices: &[DeviceId]) -> Result<()> {
-        let met = match o.deadline_met {
-            Some(true) => "true",
-            Some(false) => "false",
-            None => "null",
-        };
-        write!(
-            self.w,
-            "{{\"id\":{},\"arrival\":{},\"release\":{},\"finish\":{},\"latency_s\":{},\"deadline_met\":{},\"priority\":{},\"devices\":[",
-            o.id, o.arrival, o.release, o.finish, o.latency, met, o.priority
-        )?;
-        for (i, d) in devices.iter().enumerate() {
-            if i > 0 {
-                write!(self.w, ",")?;
-            }
-            write!(self.w, "{d}")?;
-        }
-        writeln!(self.w, "]}}")?;
-        Ok(())
-    }
-
-    fn flush(&mut self) -> Result<()> {
-        self.w.flush()?;
-        Ok(())
-    }
-}
-
-/// Aggregate statistics of one streaming run — the scalars a long-lived
-/// server can afford to keep (no per-request vectors beyond the
-/// percentile-cut pairs).
-#[derive(Debug, Clone)]
-pub struct StreamReport {
-    pub policy: String,
-    /// Requests that completed (every admitted request completes — the
-    /// stream is drained before returning).
-    pub served: usize,
-    /// Total admission rejections over the stream.
-    pub rejected: usize,
-    /// First few `(request id, admission error)` rejections, capped — the
-    /// full list would grow with the stream.
-    pub rejected_sample: Vec<(usize, String)>,
-    /// ... of the rejections, how many were laxity-based.
-    pub laxity_rejections: usize,
-    /// Last completion instant (virtual seconds from the epoch).
-    pub makespan: f64,
-    pub throughput_rps: f64,
-    pub p50_latency: f64,
-    pub p99_latency: f64,
-    pub deadline_total: usize,
-    pub deadline_misses: usize,
-    pub deadline_miss_rate: f64,
-    /// p99 latency per distinct priority, ascending priority.
-    pub per_priority_p99: Vec<(u32, f64)>,
-    pub preemptions: usize,
-    /// Compute busy fraction per device over the makespan.
-    pub device_util: Vec<f64>,
-    /// The admission window the run used (0 = unbounded).
-    pub window: usize,
-    /// High-water mark of requests live in the simulator at once — the
-    /// bounded-memory witness (≤ window when the window binds).
-    pub peak_live_requests: usize,
-    /// High-water mark of live components (slots) — what the soak bench
-    /// gates in CI.
-    pub peak_live_components: usize,
-    /// Simulated events processed.
-    pub events: u64,
-    /// Merged-template cache hits/misses over this run.
-    pub template_cache_hits: usize,
-    pub template_cache_misses: usize,
-}
-
-impl StreamReport {
-    /// The BENCH_serve_soak.json building block.
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("mode", Json::str("streaming")),
-            ("policy", Json::str(self.policy.clone())),
-            ("requests", Json::num(self.served as f64)),
-            ("rejected", Json::num(self.rejected as f64)),
-            ("laxity_rejections", Json::num(self.laxity_rejections as f64)),
-            ("makespan_s", Json::num(self.makespan)),
-            ("throughput_rps", Json::num(self.throughput_rps)),
-            ("p50_latency_s", Json::num(self.p50_latency)),
-            ("p99_latency_s", Json::num(self.p99_latency)),
-            ("deadline_total", Json::num(self.deadline_total as f64)),
-            ("deadline_misses", Json::num(self.deadline_misses as f64)),
-            ("deadline_miss_rate", Json::num(self.deadline_miss_rate)),
-            (
-                "per_priority_p99_s",
-                Json::Arr(
-                    self.per_priority_p99
-                        .iter()
-                        .map(|&(p, l)| {
-                            Json::obj(vec![
-                                ("priority", Json::num(p as f64)),
-                                ("p99_latency_s", Json::num(l)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-            ("preemptions", Json::num(self.preemptions as f64)),
-            (
-                "device_util",
-                Json::Arr(self.device_util.iter().map(|&u| Json::num(u)).collect()),
-            ),
-            ("window", Json::num(self.window as f64)),
-            (
-                "peak_live_requests",
-                Json::num(self.peak_live_requests as f64),
-            ),
-            (
-                "peak_live_components",
-                Json::num(self.peak_live_components as f64),
-            ),
-            ("events", Json::num(self.events as f64)),
-            (
-                "template_cache_hits",
-                Json::num(self.template_cache_hits as f64),
-            ),
-            (
-                "template_cache_misses",
-                Json::num(self.template_cache_misses as f64),
-            ),
-        ])
-    }
-}
-
-/// A request admitted but not yet batch-closed: the scalars the streaming
-/// server keeps between admission and batch close (the `ServeRequest`
-/// itself — workload payload included — is dropped at admission).
-struct PendingReq {
-    arrival: f64,
-    deadline: Option<f64>,
-    priority: u32,
-    cacheable: bool,
-    app: Arc<(Dag, Partition)>,
-}
-
-const REJECT_SAMPLE_CAP: usize = 32;
 
 /// [`serve_stream_cached`] with a fresh per-run [`TemplateCache`].
 pub fn serve_stream<I>(
@@ -296,24 +143,8 @@ where
 }
 
 /// Serve an arrival-ordered request stream through the long-lived
-/// [`StreamSim`], with a caller-held [`TemplateCache`].
-///
-/// The loop interleaves four activities until the stream and the simulator
-/// are both drained:
-///
-/// 1. **admit** queued closed batches while live requests fit the window;
-/// 2. **pump** virtual time to the next admission boundary — the earliest
-///    of the first open batch's opener and the next arrival instant (so
-///    simulated time never overtakes a batch that is still coalescing);
-/// 3. **drain** completed requests into the sink, retiring their state;
-/// 4. **ingest** one arrival: admission checks (template cache + laxity
-///    gate, both memoized per signature exactly as
-///    [`admit_all`](super::engine) does), then offer it to the
-///    [`StreamBatcher`]; batches it closes become [`AdmitUnit`]s.
-///
-/// Arrivals must be non-decreasing (an arrival stream, not a request bag);
-/// an out-of-order arrival is a typed [`Error::Admission`] that aborts the
-/// run — incremental batching is ill-defined on it.
+/// [`StreamSim`], with a caller-held [`TemplateCache`] — [`serve_core`]
+/// over a [`SimBackend`]; see the core for the loop's contract.
 #[allow(clippy::too_many_arguments)]
 pub fn serve_stream_cached<I>(
     requests: I,
@@ -327,304 +158,30 @@ pub fn serve_stream_cached<I>(
 where
     I: IntoIterator<Item = ServeRequest>,
 {
-    let policy_name = policy.name().to_string();
-    let (hits0, misses0) = cache.stats();
-    let empty_dag = Dag::default();
-    let empty_part = Partition {
-        components: Vec::new(),
-        assignment: Vec::new(),
-    };
-    let mut sim_cfg = cfg.sim.clone();
-    sim_cfg.max_tenants = cfg.tenancy.max(1);
-    let mut sim = StreamSim::new(&empty_dag, &empty_part, platform, cost, policy, &sim_cfg)?;
-
-    let mut it = requests.into_iter();
-    let mut next_arr = it.next();
-    let mut last_arrival = f64::NEG_INFINITY;
-    let mut batcher = StreamBatcher::new(cfg.batch_window);
-    let mut closed: Vec<OpenBatch> = Vec::new();
-    let mut admit_q: VecDeque<AdmitUnit> = VecDeque::new();
-    let mut pending: HashMap<usize, PendingReq> = HashMap::new();
-    let mut solo_memo: HashMap<String, f64> = HashMap::new();
-    let mut finished: Vec<FinishedRequest> = Vec::new();
-
-    let mut served = 0usize;
-    let mut rejected = 0usize;
-    let mut rejected_sample: Vec<(usize, String)> = Vec::new();
-    let mut laxity_rejections = 0usize;
-    let mut deadline_total = 0usize;
-    let mut deadline_misses = 0usize;
-    // (priority, latency) per served request — the only per-request state
-    // kept to the end, for the percentile cuts.
-    let mut pairs: Vec<(u32, f64)> = Vec::new();
-
-    let mut reject = |id: usize, e: Error, rejected: &mut usize| {
-        *rejected += 1;
-        if rejected_sample.len() < REJECT_SAMPLE_CAP {
-            rejected_sample.push((id, e.to_string()));
-        }
-    };
-
-    loop {
-        // (1) Admit queued units while the window admits them. An idle
-        // server takes any unit (oversized batches must not wedge).
-        let mut admitted_any = false;
-        while let Some(u) = admit_q.front() {
-            let live = sim.live_members();
-            if cfg.window == 0 || live == 0 || live + u.members.len() <= cfg.window {
-                let u = admit_q.pop_front().expect("front() was Some");
-                sim.admit(u)?;
-                admitted_any = true;
-            } else {
-                break;
-            }
-        }
-
-        // (2) Advance virtual time to the next admission boundary. While a
-        // batch is open its *opener* is the bound: the batch may close with
-        // a release at or after the opener, and admission must happen
-        // before simulated time reaches it (the monolithic run has had the
-        // release event queued since t = 0).
-        let h_arr = next_arr
-            .as_ref()
-            .map(|r: &ServeRequest| r.arrival)
-            .unwrap_or(f64::INFINITY);
-        let stop = sim.pump(batcher.horizon().min(h_arr))?;
-
-        // (3) Retire completions into the sink.
-        sim.drain_finished_into(&mut finished);
-        let emitted = finished.len();
-        for f in finished.drain(..) {
-            let o = outcome_fields(
-                f.id, f.arrival, f.deadline, f.priority, f.release, f.finish, Pacing::Open,
-            );
-            if let Some(met) = o.deadline_met {
-                deadline_total += 1;
-                if !met {
-                    deadline_misses += 1;
-                }
-            }
-            pairs.push((o.priority, o.latency));
-            served += 1;
-            sink.emit(&o, &f.devices)?;
-        }
-        if admitted_any || emitted > 0 {
-            // Progress was made — capacity may have freed or new units may
-            // now fit; go admit/pump again before touching the arrival
-            // stream.
-            continue;
-        }
-
-        // (4) Ingest exactly one arrival, mirroring admit_all's per-request
-        // admission pipeline.
-        if let Some(req) = next_arr.take() {
-            next_arr = it.next();
-            match cache.admit_app(&req) {
-                Ok(app) => {
-                    if req.arrival < last_arrival {
-                        return Err(Error::Admission(format!(
-                            "streaming arrivals must be non-decreasing: request {} \
-                             arrived at {} after {}",
-                            req.id, req.arrival, last_arrival
-                        )));
-                    }
-                    last_arrival = req.arrival;
-                    if pending.contains_key(&req.id) {
-                        reject(
-                            req.id,
-                            Error::Admission(format!(
-                                "request {}: duplicate id in flight",
-                                req.id
-                            )),
-                            &mut rejected,
-                        );
-                        continue;
-                    }
-                    if cfg.laxity_admission && req.deadline.is_some() {
-                        let estimate = if req.workload.cacheable() {
-                            *solo_memo
-                                .entry(req.workload.signature())
-                                .or_insert_with(|| {
-                                    app_solo_estimate(&app.0, &app.1, platform, cost)
-                                })
-                        } else {
-                            app_solo_estimate(&app.0, &app.1, platform, cost)
-                        };
-                        if let Err(e) = check_laxity_estimate(&req, estimate) {
-                            laxity_rejections += 1;
-                            reject(req.id, e, &mut rejected);
-                            continue;
-                        }
-                    }
-                    let sig = req.workload.signature();
-                    batcher.offer(req.id, &sig, req.arrival, &mut closed);
-                    pending.insert(
-                        req.id,
-                        PendingReq {
-                            arrival: req.arrival,
-                            deadline: req.deadline,
-                            priority: req.priority,
-                            cacheable: req.workload.cacheable(),
-                            app,
-                        },
-                    );
-                    units_from_closed(&mut closed, &mut pending, cache, &mut admit_q)?;
-                }
-                Err(e) => reject(req.id, e, &mut rejected),
-            }
-            continue;
-        }
-
-        // (5) End of stream: close the still-open batches, once.
-        if batcher.open_len() > 0 {
-            batcher.flush(&mut closed);
-            units_from_closed(&mut closed, &mut pending, cache, &mut admit_q)?;
-            continue;
-        }
-
-        // (6) Drained?
-        if admit_q.is_empty() && sim.live_members() == 0 {
-            break;
-        }
-
-        // (7) Work remains but nothing was admitted, nothing completed, and
-        // the stream is exhausted. An idle simulator here is a wedge.
-        if stop == PumpStop::Idle {
-            return Err(Error::Sched(format!(
-                "streaming stall: {} queued unit(s), {} live request(s), \
-                 simulator idle",
-                admit_q.len(),
-                sim.live_members()
-            )));
-        }
-    }
-    sink.flush()?;
-
-    debug_assert!(pending.is_empty(), "requests left pending at end of stream");
-
-    // Final accounting: one latency sort for p50/p99, one (priority,
-    // latency) sort for the per-priority tails (the deadline_stats shape,
-    // over scalars instead of outcomes).
-    let makespan = sim.makespan();
-    let mut latencies: Vec<f64> = pairs.iter().map(|&(_, l)| l).collect();
-    latencies.sort_by(|a, b| a.total_cmp(b));
-    pairs.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.total_cmp(&b.1)));
-    let mut per_priority_p99 = Vec::new();
-    let mut start = 0usize;
-    while start < pairs.len() {
-        let p = pairs[start].0;
-        let end = start + pairs[start..].partition_point(|&(q, _)| q == p);
-        let group = &pairs[start..end];
-        let idx = ((group.len() as f64 - 1.0) * 0.99).round() as usize;
-        per_priority_p99.push((p, group[idx].1));
-        start = end;
-    }
-    let device_util = sim
-        .device_busy()
-        .iter()
-        .map(|&busy| if makespan > 0.0 { busy / makespan } else { 0.0 })
-        .collect();
-    let (hits1, misses1) = cache.stats();
-    Ok(StreamReport {
-        policy: policy_name,
-        served,
-        rejected,
-        rejected_sample,
-        laxity_rejections,
-        makespan,
-        throughput_rps: if makespan > 0.0 {
-            served as f64 / makespan
-        } else {
-            0.0
-        },
-        p50_latency: percentile_sorted(&latencies, 0.50),
-        p99_latency: percentile_sorted(&latencies, 0.99),
-        deadline_total,
-        deadline_misses,
-        deadline_miss_rate: if deadline_total > 0 {
-            deadline_misses as f64 / deadline_total as f64
-        } else {
-            0.0
-        },
-        per_priority_p99,
-        preemptions: sim.preemptions(),
-        device_util,
-        window: cfg.window,
-        peak_live_requests: sim.peak_live_members(),
-        peak_live_components: sim.peak_live_components(),
-        events: sim.events(),
-        template_cache_hits: hits1 - hits0,
-        template_cache_misses: misses1 - misses0,
-    })
-}
-
-/// Turn closed batches into admission units, in close order. A fully
-/// cacheable batch becomes **one** merged-block unit (all sizes go through
-/// the template cache, size-1 included — counter parity with
-/// [`serve_sim_cached`](super::serve_sim_cached)); a batch with any
-/// uncacheable member becomes one single-app unit **per member**, in member
-/// order — exactly the component layout the monolithic assembly would
-/// append.
-fn units_from_closed(
-    closed: &mut Vec<OpenBatch>,
-    pending: &mut HashMap<usize, PendingReq>,
-    cache: &mut TemplateCache,
-    out: &mut VecDeque<AdmitUnit>,
-) -> Result<()> {
-    for b in closed.drain(..) {
-        let missing = || Error::Admission("internal: batch member not pending".into());
-        let cacheable = b
-            .members
-            .iter()
-            .all(|id| pending.get(id).map(|p| p.cacheable).unwrap_or(false));
-        if cacheable {
-            let first = pending.get(&b.members[0]).ok_or_else(missing)?;
-            let block = cache.merged_block(&b.signature, b.members.len(), &first.app)?;
-            let mut members = Vec::with_capacity(b.members.len());
-            for (i, &id) in b.members.iter().enumerate() {
-                let p = pending.remove(&id).ok_or_else(missing)?;
-                members.push(MemberSpec {
-                    id,
-                    arrival: p.arrival,
-                    deadline: p.deadline,
-                    priority: p.priority,
-                    comps: block.component_ranges[i].clone(),
-                });
-            }
-            out.push_back(AdmitUnit {
-                tmpl: Template::Merged(block),
-                release: b.release,
-                members,
-            });
-        } else {
-            for &id in &b.members {
-                let p = pending.remove(&id).ok_or_else(missing)?;
-                let ncomp = p.app.1.components.len();
-                out.push_back(AdmitUnit {
-                    tmpl: Template::Single(p.app),
-                    release: b.release,
-                    members: vec![MemberSpec {
-                        id,
-                        arrival: p.arrival,
-                        deadline: p.deadline,
-                        priority: p.priority,
-                        comps: 0..ncomp,
-                    }],
-                });
-            }
-        }
-    }
-    Ok(())
+    run_sim_core(
+        requests,
+        platform,
+        cost,
+        policy,
+        cfg,
+        cache,
+        sink,
+        REJECT_SAMPLE_CAP,
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cost::PaperCost;
+    use crate::error::Error;
+    use crate::json::Json;
     use crate::sched::LeastLoaded;
     use crate::serve::arrival::poisson_arrivals;
-    use crate::serve::engine::{serve_sim_cached, ServeConfig};
+    use crate::serve::core::{CollectSink, JsonlSink, NullSink};
+    use crate::serve::engine::{serve_sim_cached, RequestOutcome, ServeConfig};
     use crate::serve::request::Workload;
+    use std::collections::HashMap;
 
     fn stream(n: usize, rate: f64) -> Vec<ServeRequest> {
         let arrivals = poisson_arrivals(7, n, rate).unwrap();

@@ -19,9 +19,12 @@
 //!   stream — no per-request rebuild; stale heap entries are compacted
 //!   when they outnumber the live frontier.
 //! * [`StreamSim::pump`] advances virtual time up to a caller-supplied
-//!   horizon so the driver ([`crate::serve::streaming`]) can interleave
-//!   admission with execution without ever letting the simulator run past
-//!   an unadmitted unit's release instant.
+//!   horizon so the driver can interleave admission with execution without
+//!   ever letting the simulator run past an unadmitted unit's release
+//!   instant. Since PR 7 that driver is the unified serve core
+//!   ([`crate::serve::serve_core`]), which consumes this simulator through
+//!   the `SimBackend` implementation of `ServeBackend` — the admit/pump/
+//!   drain trio below is exactly that trait's contract.
 //!
 //! **Equivalence contract.** For an arrival stream with strictly
 //! increasing, distinct arrival instants and a never-binding admission
