@@ -25,7 +25,10 @@
 //!                 [--streaming] [--window 512] [--outcomes-jsonl OUT]
 //!                 [--json OUT]                      multi-DAG serving
 //! pyschedcl bench-check --baseline F --current F [--tolerance 0.15]
-//!                 [--update]       CI bench-regression gate
+//!                 [--update] [--validate]       CI bench-regression gate
+//! pyschedcl fuzz [--seeds N] [--start S] [--orderings K] [--seed X]
+//!                 [--shrink] [--corpus DIR] [--report-dir DIR] [--verbose]
+//!                 deterministic scheduler-core concurrency fuzzer
 //! ```
 //!
 //! Deadline-aware serving: `--policy edf` schedules earliest absolute
@@ -75,9 +78,9 @@ use pyschedcl::json::Json;
 use pyschedcl::platform::{DeviceType, Platform};
 use pyschedcl::report::experiments as expts;
 use pyschedcl::report::{
-    check_bench, format_gate, format_real_summary, format_serve_comparison,
-    format_stream_summary, parse_baseline, peak_rss_mb, serve_bench_json,
-    serve_real_stream_json, serve_soak_json, update_baseline,
+    check_bench, format_gate, format_gate_markdown, format_real_summary,
+    format_serve_comparison, format_stream_summary, load_baseline, peak_rss_mb,
+    serve_bench_json, serve_real_stream_json, serve_soak_json, update_baseline,
 };
 use pyschedcl::runtime::{manifest::default_artifact_dir, Runtime};
 use pyschedcl::sched::{Clustering, Eager, Edf, Heft, LeastLoaded, Policy};
@@ -711,14 +714,24 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
     let baseline_path = args
         .get("baseline")
         .ok_or_else(|| Error::Io("bench-check requires --baseline FILE".into()))?;
+    // Baseline problems (deleted, renamed, unparseable) are surfaced first
+    // with a path-qualified message — CI fails the gate step early and
+    // clearly instead of producing a confusing comparison failure. With
+    // `--validate`, that is the *whole* job: CI loops it over every
+    // committed baseline before spending minutes producing bench artifacts.
+    let baseline = load_baseline(std::path::Path::new(baseline_path))?;
+    if on_off_flag(args, "validate")? {
+        println!(
+            "baseline {baseline_path}: ok ({} check(s))",
+            baseline.checks.len()
+        );
+        return Ok(());
+    }
     let current_path = args
         .get("current")
         .ok_or_else(|| Error::Io("bench-check requires --current FILE".into()))?;
-    let baseline_text = std::fs::read_to_string(baseline_path)
-        .map_err(|e| Error::Io(format!("cannot read {baseline_path}: {e}")))?;
     let current_text = std::fs::read_to_string(current_path)
         .map_err(|e| Error::Io(format!("cannot read {current_path}: {e}")))?;
-    let baseline = parse_baseline(&baseline_text)?;
     let current = Json::parse(&current_text)?;
 
     // A bare `--update` parses as the value "true".
@@ -747,6 +760,24 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
     };
     let results = check_bench(&baseline, &current, tolerance);
     print!("{}", format_gate(&results));
+    // Inside a GitHub Actions step, also append the markdown flavor to the
+    // job summary — on success as well as failure, so every green run still
+    // shows the remaining headroom per gate. Best-effort: a summary-file IO
+    // problem must not flip the gate's verdict.
+    if let Ok(summary_path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        if !summary_path.is_empty() {
+            use std::io::Write as _;
+            let md = format_gate_markdown(current_path, &results);
+            let appended = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&summary_path)
+                .and_then(|mut f| f.write_all(md.as_bytes()));
+            if let Err(e) = appended {
+                eprintln!("warning: cannot append to GITHUB_STEP_SUMMARY ({summary_path}): {e}");
+            }
+        }
+    }
     let failed = results.iter().filter(|r| !r.ok).count();
     if failed > 0 {
         return Err(Error::Bench(format!(
@@ -762,12 +793,190 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Strict on/off flag in the house style (`--shrink`, bare = "true").
+fn on_off_flag(args: &Args, key: &str) -> Result<bool> {
+    match args.get(key) {
+        None | Some("false") | Some("off") => Ok(false),
+        Some("true") | Some("on") => Ok(true),
+        Some(other) => Err(Error::Io(format!(
+            "unknown {key} '{other}' (expected on|off)"
+        ))),
+    }
+}
+
+/// One committed corpus seed: `{"seed": N, "orderings": K, "note": "..."}`.
+fn parse_corpus_seed(text: &str) -> Result<(u64, usize, String)> {
+    let json = Json::parse(text)?;
+    let seed = json
+        .field("seed")?
+        .as_u64()
+        .ok_or_else(|| Error::Io("corpus field 'seed' is not a u64".into()))?;
+    let orderings = json
+        .field("orderings")?
+        .as_usize()
+        .ok_or_else(|| Error::Io("corpus field 'orderings' is not a usize".into()))?;
+    let note = json
+        .get("note")
+        .and_then(|n| n.as_str())
+        .unwrap_or("")
+        .to_string();
+    Ok((seed, orderings, note))
+}
+
+/// `pyschedcl fuzz`: deterministic concurrency fuzzer for the scheduler
+/// core ([`pyschedcl::sched::fuzz`]). Three modes:
+///
+/// * `--seeds N [--start S]` — sweep N seeds, print the aggregate
+///   coverage table, and fail unless every ambiguity class provably
+///   executed ≥ 2 distinct same-instant orderings;
+/// * `--seed X [--shrink]` — replay one seed with its full deterministic
+///   log, optionally shrinking a failure to a minimal reproducer;
+/// * `--corpus DIR` — replay every committed `*.json` seed (the per-PR
+///   CI regression gate), checking invariants and replay determinism.
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    // Panics inside the fuzzed engines are caught and reported as
+    // failures; silence the default hook so its stderr spew cannot make
+    // two runs of the same seed differ.
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let out = cmd_fuzz_inner(args);
+    std::panic::set_hook(hook);
+    out
+}
+
+fn cmd_fuzz_inner(args: &Args) -> Result<()> {
+    use pyschedcl::sched::fuzz::{run_many, run_seed, shrink_seed, FuzzConfig};
+    let cfg = FuzzConfig {
+        orderings: args.usize_or("orderings", 4).max(1),
+        budget: args.get("budget").and_then(|v| v.parse().ok()),
+        oracle_steps: args.usize_or("oracle-steps", 120),
+    };
+    let verbose = on_off_flag(args, "verbose")?;
+    let shrink = on_off_flag(args, "shrink")?;
+
+    // Corpus replay: the committed regression seeds.
+    if let Some(dir) = args.get("corpus") {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| Error::Io(format!("cannot read corpus dir {dir}: {e}")))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            return Err(Error::Io(format!("no *.json corpus seeds in {dir}")));
+        }
+        let mut failed = 0usize;
+        for p in &paths {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| Error::Io(format!("cannot read {}: {e}", p.display())))?;
+            let (seed, orderings, note) =
+                parse_corpus_seed(&text).map_err(|e| Error::Io(format!("{}: {e}", p.display())))?;
+            let ccfg = FuzzConfig { orderings, ..cfg };
+            let rep = run_seed(seed, &ccfg);
+            let replay_identical = run_seed(seed, &ccfg).log == rep.log;
+            let ok = rep.ok() && replay_identical;
+            println!(
+                "corpus {}: seed {seed} [{note}] {}",
+                p.file_name().and_then(|n| n.to_str()).unwrap_or("?"),
+                if ok { "ok" } else { "FAIL" }
+            );
+            if verbose {
+                print!("{}", rep.log);
+            }
+            if !ok {
+                for f in &rep.failures {
+                    println!("  {f}");
+                }
+                if !replay_identical {
+                    println!("  replay log diverged (non-deterministic)");
+                }
+                failed += 1;
+            }
+        }
+        if failed > 0 {
+            return Err(Error::Sched(format!("{failed} corpus seed(s) failed")));
+        }
+        println!("corpus: all {} seed(s) green", paths.len());
+        return Ok(());
+    }
+
+    // Single-seed replay (and optional shrink).
+    if let Some(seed_text) = args.get("seed") {
+        let seed: u64 = seed_text
+            .parse()
+            .map_err(|_| Error::Io(format!("invalid --seed '{seed_text}' (expected a u64)")))?;
+        let rep = run_seed(seed, &cfg);
+        print!("{}", rep.log);
+        if shrink {
+            match shrink_seed(seed, &cfg) {
+                Some(s) => print!("{}", s.log),
+                None => println!("shrink: seed {seed} passes every ordering; nothing to shrink"),
+            }
+        }
+        if !rep.ok() {
+            return Err(Error::Sched(format!(
+                "fuzz seed {seed} failed: {}",
+                rep.failures[0]
+            )));
+        }
+        return Ok(());
+    }
+
+    // Seed sweep with the coverage assertion.
+    let n = args.u64_or("seeds", 50).max(1);
+    let start = args.u64_or("start", 0);
+    let summary = run_many(start, n, &cfg, |rep| {
+        if verbose {
+            print!("{}", rep.log);
+        } else if !rep.ok() {
+            println!("seed {}: FAIL ({})", rep.seed, rep.failures[0]);
+        }
+    });
+    print!("{}", summary.render());
+
+    if let Some(seed) = summary.failures.first().map(|(s, _)| *s) {
+        let shrunk = shrink_seed(seed, &cfg);
+        if let Some(s) = &shrunk {
+            print!("{}", s.log);
+        }
+        if let Some(dir) = args.get("report-dir") {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| Error::Io(format!("cannot create {dir}: {e}")))?;
+            let failing = format!("{dir}/fuzz_failing_seed.txt");
+            std::fs::write(&failing, &run_seed(seed, &cfg).log)
+                .map_err(|e| Error::Io(format!("cannot write {failing}: {e}")))?;
+            println!("wrote {failing}");
+            if let Some(s) = &shrunk {
+                let repro = format!("{dir}/fuzz_reproducer.txt");
+                std::fs::write(&repro, &s.log)
+                    .map_err(|e| Error::Io(format!("cannot write {repro}: {e}")))?;
+                println!("wrote {repro}");
+            }
+        }
+        return Err(Error::Sched(format!(
+            "{} of {n} fuzz seed(s) failed",
+            summary.failures.len()
+        )));
+    }
+    let unproven = summary.unproven_classes();
+    if !unproven.is_empty() {
+        return Err(Error::Sched(format!(
+            "ambiguity classes without >=2 distinct executed orderings: {unproven:?}"
+        )));
+    }
+    println!(
+        "fuzz: {n} seed(s) green; every ambiguity class executed >=2 distinct orderings"
+    );
+    Ok(())
+}
+
 fn main_inner() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         eprintln!(
-            "usage: pyschedcl <inspect|simulate|run|serve|bench-check|motivation|expt1|expt2|\
-             expt3|gantt|calibrate|autotune> ..."
+            "usage: pyschedcl <inspect|simulate|run|serve|bench-check|fuzz|motivation|expt1|\
+             expt2|expt3|gantt|calibrate|autotune> ..."
         );
         std::process::exit(2);
     };
@@ -778,6 +987,7 @@ fn main_inner() -> Result<()> {
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
         "bench-check" => cmd_bench_check(&args),
+        "fuzz" => cmd_fuzz(&args),
         "motivation" => cmd_motivation(&args),
         "expt1" => {
             let rows = expts::expt1(

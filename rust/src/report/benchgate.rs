@@ -28,6 +28,7 @@
 
 use crate::error::{Error, Result};
 use crate::json::Json;
+use std::path::Path;
 
 /// One gated metric: a dotted path into the bench JSON plus bounds.
 #[derive(Debug, Clone)]
@@ -62,6 +63,21 @@ pub struct Baseline {
 }
 
 pub const BASELINE_SCHEMA: &str = "pyschedcl-bench-baseline-v1";
+
+/// Read and parse a committed baseline file with a path-qualified typed
+/// error. The CI gate calls this first so a missing, renamed, or
+/// unparseable baseline fails the step early with a clear message instead
+/// of surfacing as a confusing downstream comparison failure.
+pub fn load_baseline(path: &Path) -> Result<Baseline> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        Error::Bench(format!(
+            "cannot read committed baseline {}: {e} (was it deleted or renamed?)",
+            path.display()
+        ))
+    })?;
+    parse_baseline(&text)
+        .map_err(|e| Error::Bench(format!("committed baseline {} is invalid: {e}", path.display())))
+}
 
 /// Parse a committed baseline file.
 pub fn parse_baseline(text: &str) -> Result<Baseline> {
@@ -123,6 +139,10 @@ pub struct GateResult {
     pub observed: Option<f64>,
     /// Human-readable allowed range after tolerance/slack widening.
     pub allowed: String,
+    /// Distance from the observed value to the nearest widened bound
+    /// (positive = headroom, negative = overshoot). `None` when the
+    /// metric is missing or non-finite.
+    pub margin: Option<f64>,
     pub ok: bool,
 }
 
@@ -159,21 +179,40 @@ pub fn check_bench(baseline: &Baseline, current: &Json, tolerance: Option<f64>) 
                         && lo.map(|l| v >= l).unwrap_or(true)
                 }
             };
+            let margin = observed.filter(|v| v.is_finite()).and_then(|v| {
+                match (hi.map(|h| h - v), lo.map(|l| v - l)) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (Some(a), None) => Some(a),
+                    (None, Some(b)) => Some(b),
+                    (None, None) => None,
+                }
+            });
             GateResult {
                 path: c.path.clone(),
                 observed,
                 allowed,
+                margin,
                 ok,
             }
         })
         .collect()
 }
 
-/// Render the verdict table.
+fn margin_cell(r: &GateResult) -> String {
+    match r.margin {
+        Some(m) => format!("{m:+.6}"),
+        None => "-".into(),
+    }
+}
+
+/// Render the verdict table — printed on success as well as failure, so a
+/// green CI run still shows how much headroom every gate has left.
 pub fn format_gate(results: &[GateResult]) -> String {
     let mut s = String::from(
-        "metric                                   | observed     | allowed              | verdict\n\
-         -----------------------------------------+--------------+----------------------+--------\n",
+        "metric                                   | observed     | allowed              \
+         | margin       | verdict\n\
+         -----------------------------------------+--------------+----------------------\
+         +--------------+--------\n",
     );
     for r in results {
         let obs = match r.observed {
@@ -181,13 +220,41 @@ pub fn format_gate(results: &[GateResult]) -> String {
             None => "<missing>".into(),
         };
         s.push_str(&format!(
-            "{:<40} | {:>12} | {:<20} | {}\n",
+            "{:<40} | {:>12} | {:<20} | {:>12} | {}\n",
             r.path,
             obs,
             r.allowed,
+            margin_cell(r),
             if r.ok { "ok" } else { "FAIL" }
         ));
     }
+    s
+}
+
+/// Markdown flavor of the verdict table, appended to
+/// `$GITHUB_STEP_SUMMARY` by `pyschedcl bench-check` when the variable is
+/// set (i.e. inside a GitHub Actions step).
+pub fn format_gate_markdown(title: &str, results: &[GateResult]) -> String {
+    let mut s = format!(
+        "### bench-check: {title}\n\n\
+         | metric | observed | allowed | margin | verdict |\n\
+         |---|---|---|---|---|\n"
+    );
+    for r in results {
+        let obs = match r.observed {
+            Some(v) => format!("{v:.6}"),
+            None => "&lt;missing&gt;".into(),
+        };
+        s.push_str(&format!(
+            "| `{}` | {} | `{}` | {} | {} |\n",
+            r.path,
+            obs,
+            r.allowed,
+            margin_cell(r),
+            if r.ok { "ok" } else { "**FAIL**" }
+        ));
+    }
+    s.push('\n');
     s
 }
 
@@ -362,6 +429,60 @@ mod tests {
         let no_bound = r#"{"schema": "pyschedcl-bench-baseline-v1",
                            "checks": [{"path": "x"}]}"#;
         assert!(matches!(parse_baseline(no_bound), Err(Error::Bench(_))));
+    }
+
+    #[test]
+    fn margins_report_headroom_and_overshoot() {
+        let b = parse_baseline(BASE).unwrap();
+        // p99 max 0.100, tol 10% → widened bound 0.110; observed 0.09 →
+        // margin +0.02. Throughput min 100, widened 90; observed 100 →
+        // margin +10.
+        let r = check_bench(&b, &bench(0.09, 100.0, 0.0), None);
+        assert!((r[0].margin.unwrap() - 0.02).abs() < 1e-9, "{:?}", r[0]);
+        assert!((r[1].margin.unwrap() - 10.0).abs() < 1e-9, "{:?}", r[1]);
+        // A failing gate reports a negative margin.
+        let r = check_bench(&b, &bench(0.120, 100.0, 0.0), None);
+        assert!(r[0].margin.unwrap() < 0.0);
+        assert!(!r[0].ok);
+        // Missing metrics have no margin and render as "-" / <missing>.
+        let r = check_bench(&b, &Json::obj(vec![]), None);
+        assert!(r[0].margin.is_none());
+        assert!(format_gate(&r).contains(" - "));
+        // Both renderers carry the margin column.
+        let r = check_bench(&b, &bench(0.09, 100.0, 0.0), None);
+        assert!(format_gate(&r).contains("margin"));
+        let md = format_gate_markdown("BENCH_x.json", &r);
+        assert!(md.contains("| margin |") && md.contains("`concurrent.p99_latency_s`"));
+    }
+
+    #[test]
+    fn load_baseline_fails_early_with_clear_messages() {
+        // Missing file: path-qualified typed error.
+        let missing = Path::new("/nonexistent/ci/bench_baselines/BENCH_gone.json");
+        match load_baseline(missing) {
+            Err(Error::Bench(msg)) => {
+                assert!(msg.contains("BENCH_gone.json"), "{msg}");
+                assert!(msg.contains("cannot read committed baseline"), "{msg}");
+            }
+            other => panic!("expected Error::Bench, got {other:?}"),
+        }
+        // Unparseable file: path-qualified typed error.
+        let dir = std::env::temp_dir().join("pyschedcl_benchgate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("BENCH_bad.json");
+        std::fs::write(&bad, "{ not json").unwrap();
+        match load_baseline(&bad) {
+            Err(Error::Bench(msg)) => {
+                assert!(msg.contains("BENCH_bad.json"), "{msg}");
+                assert!(msg.contains("invalid"), "{msg}");
+            }
+            other => panic!("expected Error::Bench, got {other:?}"),
+        }
+        // A good file round-trips.
+        let good = dir.join("BENCH_good.json");
+        std::fs::write(&good, BASE).unwrap();
+        assert_eq!(load_baseline(&good).unwrap().checks.len(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -20,8 +20,8 @@ pub mod experiments;
 pub mod serving;
 
 pub use benchgate::{
-    check_bench, format_gate, lookup_metric, parse_baseline, update_baseline, Baseline,
-    CheckSpec, GateResult,
+    check_bench, format_gate, format_gate_markdown, load_baseline, lookup_metric,
+    parse_baseline, update_baseline, Baseline, CheckSpec, GateResult,
 };
 pub use experiments::{
     expt1, expt2, expt3, gantt, motivation, BaselineRow, Expt1Row, MappingConfig,

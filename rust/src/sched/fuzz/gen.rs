@@ -1,0 +1,380 @@
+//! Seeded workload generation for the concurrency fuzzer.
+//!
+//! Every workload is a pure function of its seed. Two seeds are *crafted*
+//! shapes that guarantee choice-point coverage for specific ambiguity
+//! classes on every fuzz run (so the coverage assertion in the report can
+//! never go flaky), the rest are randomized over the repo's application
+//! generators with **gridded** time values — releases and deadlines drawn
+//! from a coarse lattice, plus forced bitwise-equal deadline copies — so
+//! same-instant collisions and exact tie-breaks are common instead of
+//! measure-zero:
+//!
+//! * seed 0 (`twin-ties`): identical independent GPU components with one
+//!   shared bitwise deadline on a two-GPU platform — guaranteed
+//!   dispatch-tie, simultaneous-completion, and callback-batch sites.
+//! * seed 1 (`preempt-storm`): two ∞-deadline tenants filling both GPUs,
+//!   then a tight-deadline arrival that must displace one — guaranteed
+//!   preempt-race (two equal victims) and re-entry sites.
+
+use crate::cost::{CostModel, PaperCost};
+use crate::graph::{Dag, Partition};
+use crate::platform::{DeviceType, Platform};
+use crate::sched::{Clustering, Edf, LeastLoaded, Policy};
+use crate::sim::{CompMeta, SimConfig};
+use crate::transformer::{cluster_by_head, transformer_dag};
+
+/// The repo-standard xorshift64* stream (same constants as
+/// `tests/prop_invariants.rs`).
+pub(crate) struct Rng(u64);
+
+impl Rng {
+    pub(crate) fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1))
+    }
+
+    pub(crate) fn next(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    pub(crate) fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+
+    pub(crate) fn chance(&mut self, one_in: usize) -> bool {
+        self.below(one_in) == 0
+    }
+}
+
+/// Which policy a workload runs under. Edf-biased: it is the only shipped
+/// policy with a preemption rule, so it exercises every ambiguity class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Edf,
+    LeastLoaded,
+    Clustering,
+}
+
+impl PolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Edf => "edf",
+            PolicyKind::LeastLoaded => "least-loaded",
+            PolicyKind::Clustering => "clustering",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn Policy> {
+        match self {
+            PolicyKind::Edf => Box::new(Edf),
+            PolicyKind::LeastLoaded => Box::new(LeastLoaded),
+            PolicyKind::Clustering => Box::new(Clustering),
+        }
+    }
+}
+
+/// One engine-path fuzz workload: a served application plus everything
+/// `simulate_served` needs.
+pub struct Workload {
+    pub label: String,
+    pub dag: Dag,
+    pub partition: Partition,
+    pub platform: Platform,
+    pub cfg: SimConfig,
+    pub meta: Vec<CompMeta>,
+    pub policy: PolicyKind,
+}
+
+/// One admitted unit of a stream-path fuzz plan: the whole template enters
+/// as a single request at `release`.
+pub struct UnitPlan {
+    pub release: f64,
+    /// Relative deadline budget (absolute = release + budget).
+    pub deadline: Option<f64>,
+    pub priority: u32,
+}
+
+/// A stream-path fuzz plan: several units of one template admitted up
+/// front, then pumped to idle.
+pub struct StreamPlan {
+    pub label: String,
+    pub dag: Dag,
+    pub partition: Partition,
+    pub platform: Platform,
+    pub cfg: SimConfig,
+    pub policy: PolicyKind,
+    pub units: Vec<UnitPlan>,
+}
+
+fn template(heads: usize, beta: u64, h_cpu: usize) -> (Dag, Partition) {
+    let (dag, ios) = transformer_dag(heads, beta, DeviceType::Gpu);
+    let part = cluster_by_head(&dag, &ios, h_cpu);
+    (dag, part)
+}
+
+fn cfg_with_tenants(max_tenants: usize) -> SimConfig {
+    SimConfig {
+        max_tenants,
+        ..SimConfig::default()
+    }
+}
+
+/// The coarse time lattice: multiples of 1.5 ms, far above the platform's
+/// sub-millisecond overheads, so distinct grid points never collide by
+/// accident while equal ones collide exactly.
+const GRID: f64 = 1.5e-3;
+
+/// Solo GPU seconds of one head of `dag` (total serial work over `heads`):
+/// the calibration unit for the crafted preemption shape, so its tight
+/// arrival is guaranteed to land while the residents are still mid-run
+/// whatever the cost model says.
+fn head_solo_seconds(dag: &Dag, platform: &Platform, heads: usize) -> f64 {
+    let gpu = &platform.devices[0];
+    let total: f64 = dag.kernels.iter().map(|k| PaperCost.exec_time(k, gpu)).sum();
+    total / heads as f64
+}
+
+/// The engine-path workload for `seed` (pure function of the seed).
+pub fn engine_workload(seed: u64) -> Workload {
+    match seed {
+        0 => {
+            let (dag, partition) = template(4, 64, 0);
+            let ncomp = partition.components.len();
+            let meta = vec![
+                CompMeta {
+                    release: 0.0,
+                    deadline: 0.05,
+                    priority: 0,
+                };
+                ncomp
+            ];
+            Workload {
+                label: "twin-ties: 4 identical comps, shared bitwise deadline, 2 GPUs".into(),
+                dag,
+                partition,
+                platform: Platform::scaled(2, 1, 2, 1),
+                cfg: cfg_with_tenants(2),
+                meta,
+                policy: PolicyKind::Edf,
+            }
+        }
+        1 => {
+            let (dag, partition) = template(3, 128, 0);
+            let ncomp = partition.components.len();
+            let platform = Platform::scaled(2, 1, 2, 1);
+            let head_t = head_solo_seconds(&dag, &platform, 3);
+            let mut meta = vec![CompMeta::default(); ncomp];
+            // Last component: a late, tight-deadline arrival (5% into the
+            // residents' runs) that must displace one of the two equally
+            // unhurried residents.
+            meta[ncomp - 1] = CompMeta {
+                release: 0.05 * head_t,
+                deadline: 0.05 * head_t + 1.5 * head_t,
+                priority: 1,
+            };
+            Workload {
+                label: "preempt-storm: 2 resident ∞-deadline tenants + tight arrival".into(),
+                dag,
+                partition,
+                platform,
+                cfg: cfg_with_tenants(1),
+                meta,
+                policy: PolicyKind::Edf,
+            }
+        }
+        _ => {
+            let mut rng = Rng::new(seed);
+            let heads = 2 + rng.below(3);
+            let beta = [32u64, 64, 128][rng.below(3)];
+            let h_cpu = rng.below(2).min(heads - 1);
+            let (dag, partition) = template(heads, beta, h_cpu);
+            let ncomp = partition.components.len();
+            let platform = Platform::scaled(1 + rng.below(2), 1, 1 + rng.below(2), 1);
+            let cfg = cfg_with_tenants(1 + rng.below(2));
+            let policy = match rng.below(4) {
+                0 => PolicyKind::LeastLoaded,
+                1 => PolicyKind::Clustering,
+                _ => PolicyKind::Edf,
+            };
+            let mut meta = Vec::with_capacity(ncomp);
+            for c in 0..ncomp {
+                let release = if rng.chance(2) {
+                    0.0
+                } else {
+                    rng.below(4) as f64 * GRID
+                };
+                let deadline = if rng.chance(3) {
+                    f64::INFINITY
+                } else {
+                    release + (1 + rng.below(4)) as f64 * 4.0 * GRID
+                };
+                let mut m = CompMeta {
+                    release,
+                    deadline,
+                    priority: rng.below(2) as u32,
+                };
+                // Forced bitwise deadline tie with the previous component.
+                if c > 0 && rng.chance(4) {
+                    let prev: &CompMeta = &meta[c - 1];
+                    m.deadline = prev.deadline;
+                    m.priority = prev.priority;
+                }
+                meta.push(m);
+            }
+            Workload {
+                label: format!(
+                    "random: {heads}x beta={beta} h_cpu={h_cpu} tenants={} policy={}",
+                    cfg.max_tenants,
+                    policy.name()
+                ),
+                dag,
+                partition,
+                platform,
+                cfg,
+                meta,
+                policy,
+            }
+        }
+    }
+}
+
+/// The stream-path plan for `seed` (pure function of the seed).
+pub fn stream_plan(seed: u64) -> StreamPlan {
+    match seed {
+        0 => {
+            let (dag, partition) = template(4, 64, 0);
+            StreamPlan {
+                label: "twin-ties stream: two units, same release instant".into(),
+                dag,
+                partition,
+                platform: Platform::scaled(2, 1, 2, 1),
+                cfg: cfg_with_tenants(2),
+                policy: PolicyKind::Edf,
+                units: vec![
+                    UnitPlan {
+                        release: 0.0,
+                        deadline: Some(0.05),
+                        priority: 0,
+                    },
+                    UnitPlan {
+                        release: 0.0,
+                        deadline: Some(0.05),
+                        priority: 0,
+                    },
+                ],
+            }
+        }
+        1 => {
+            let (dag, partition) = template(3, 128, 0);
+            let platform = Platform::scaled(2, 1, 2, 1);
+            let head_t = head_solo_seconds(&dag, &platform, 3);
+            StreamPlan {
+                label: "preempt-storm stream: ∞-deadline unit + tight arrival".into(),
+                dag,
+                partition,
+                platform,
+                cfg: cfg_with_tenants(1),
+                policy: PolicyKind::Edf,
+                units: vec![
+                    UnitPlan {
+                        release: 0.0,
+                        deadline: None,
+                        priority: 0,
+                    },
+                    UnitPlan {
+                        release: 0.05 * head_t,
+                        deadline: Some(1.5 * head_t),
+                        priority: 1,
+                    },
+                ],
+            }
+        }
+        _ => {
+            let mut rng = Rng::new(seed ^ 0xB5AD_4ECE_DA1C_E2A9);
+            let heads = 2 + rng.below(3);
+            let beta = [32u64, 64, 128][rng.below(3)];
+            let h_cpu = rng.below(2).min(heads - 1);
+            let (dag, partition) = template(heads, beta, h_cpu);
+            let platform = Platform::scaled(1 + rng.below(2), 1, 1 + rng.below(2), 1);
+            let cfg = cfg_with_tenants(1 + rng.below(2));
+            let policy = if rng.below(4) == 0 {
+                PolicyKind::LeastLoaded
+            } else {
+                PolicyKind::Edf
+            };
+            let n_units = 2 + rng.below(2);
+            let mut units = Vec::with_capacity(n_units);
+            for _ in 0..n_units {
+                let release = if rng.chance(2) {
+                    0.0
+                } else {
+                    rng.below(4) as f64 * GRID
+                };
+                units.push(UnitPlan {
+                    release,
+                    deadline: if rng.chance(3) {
+                        None
+                    } else {
+                        Some((1 + rng.below(4)) as f64 * 4.0 * GRID)
+                    },
+                    priority: rng.below(2) as u32,
+                });
+            }
+            StreamPlan {
+                label: format!(
+                    "random stream: {n_units} units of {heads}x beta={beta} tenants={} policy={}",
+                    cfg.max_tenants,
+                    policy.name()
+                ),
+                dag,
+                partition,
+                platform,
+                cfg,
+                policy,
+                units,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workloads_are_pure_functions_of_the_seed() {
+        for seed in [0u64, 1, 2, 17, 123] {
+            let a = engine_workload(seed);
+            let b = engine_workload(seed);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.meta.len(), b.meta.len());
+            for (x, y) in a.meta.iter().zip(&b.meta) {
+                assert_eq!(x.release.to_bits(), y.release.to_bits());
+                assert_eq!(x.deadline.to_bits(), y.deadline.to_bits());
+                assert_eq!(x.priority, y.priority);
+            }
+            let p = stream_plan(seed);
+            let q = stream_plan(seed);
+            assert_eq!(p.label, q.label);
+            assert_eq!(p.units.len(), q.units.len());
+        }
+    }
+
+    #[test]
+    fn crafted_shapes_have_the_advertised_structure() {
+        let w = engine_workload(0);
+        assert!(w.meta.len() >= 4);
+        let d0 = w.meta[0].deadline.to_bits();
+        assert!(w.meta.iter().all(|m| m.deadline.to_bits() == d0));
+        assert!(w.meta.iter().all(|m| m.release == 0.0));
+
+        let w = engine_workload(1);
+        let n = w.meta.len();
+        assert!(w.meta[..n - 1].iter().all(|m| m.deadline.is_infinite()));
+        assert!(w.meta[n - 1].deadline.is_finite());
+        assert!(w.meta[n - 1].release > 0.0);
+        assert_eq!(w.cfg.max_tenants, 1);
+    }
+}

@@ -1,0 +1,748 @@
+//! Deterministic concurrency fuzzer for the scheduler core.
+//!
+//! Production schedulers break on the orderings nobody wrote a test for:
+//! two kernels completing at the same instant, callbacks firing in a
+//! different interleaving than the dispatches that armed them, a
+//! preemption racing a completion. The event loops in [`crate::sim`] pick
+//! *one* canonical order for each of those ambiguities; this module
+//! replays seeded workloads through the same loops while permuting every
+//! same-instant choice the loops admit, and checks ordering-independent
+//! invariants across all permutations of one workload:
+//!
+//! * every run completes — no lost or duplicated dispatch (a duplicate
+//!   trips the engines' own debug assertions, a loss shows up as a
+//!   component that never finishes);
+//! * every component finishes at a finite instant no earlier than its
+//!   release;
+//! * the makespan stays within a provable envelope — at least the
+//!   min-device critical path, at most a contention- and
+//!   preemption-scaled multiple of the total serial work;
+//! * no preemption ping-pong: displacements per component are bounded;
+//! * the streaming path drains every admitted request and ends with zero
+//!   live components;
+//! * replaying any ordering is bit-identical (same makespan bits, same
+//!   decision log).
+//!
+//! The pieces: [`seam`] (the [`OrderSeam`] choice-point the event loops
+//! consult, with per-class coverage counters), [`gen`] (seeded workload
+//! generation with crafted always-covering shapes), [`oracle`] (the
+//! [`crate::sched::SchedState`] event fuzzer with a from-scratch rebuild
+//! oracle), [`shrink`] (minimal-deviation reproducers), and this driver,
+//! which the `pyschedcl fuzz` subcommand and the committed
+//! `ci/fuzz_corpus/` regression seeds call into.
+
+pub mod gen;
+pub mod oracle;
+pub mod seam;
+pub mod shrink;
+
+pub use gen::{engine_workload, stream_plan, PolicyKind, StreamPlan, UnitPlan, Workload};
+pub use oracle::{fuzz_state_events, OracleStats};
+pub use seam::{Ambiguity, ClassCoverage, Decision, OrderSeam};
+pub use shrink::{shrink_seed, FailingRun, ShrinkResult};
+
+use crate::cost::{CostModel, PaperCost};
+use crate::graph::{Dag, Partition};
+use crate::platform::Platform;
+use crate::sim::{
+    simulate_served_fuzzed, AdmitUnit, MemberSpec, PumpStop, SimConfig, SimResult, StreamSim,
+    Template,
+};
+use std::fmt::Write as _;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+const EPS: f64 = 1e-9;
+
+/// Tunables for a fuzz run.
+#[derive(Clone, Copy, Debug)]
+pub struct FuzzConfig {
+    /// Orderings explored per seed. Ordering 0 is always the canonical
+    /// (identity-seam) order; the rest permute freely.
+    pub orderings: usize,
+    /// Deviation budget for orderings ≥ 1 (`None` = unlimited); the
+    /// shrinker binary-searches this.
+    pub budget: Option<u64>,
+    /// Event count for the [`SchedState`](crate::sched::SchedState)
+    /// rebuild oracle run folded into each seed.
+    pub oracle_steps: usize,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> FuzzConfig {
+        FuzzConfig {
+            orderings: 4,
+            budget: None,
+            oracle_steps: 120,
+        }
+    }
+}
+
+/// Seam seed for ordering `o` of workload `seed`: a splitmix-style spread
+/// so consecutive orderings get unrelated permutation streams.
+fn seam_seed(seed: u64, ordering: usize) -> u64 {
+    seed ^ (ordering as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xA076_1D64_78BD_642F
+}
+
+/// Ordering 0 is the identity seam (canonical order through the seamed
+/// code paths, so choice sites still count toward coverage).
+fn ordering_budget(cfg: &FuzzConfig, ordering: usize) -> Option<u64> {
+    if ordering == 0 {
+        Some(0)
+    } else {
+        cfg.budget
+    }
+}
+
+// --------------------------------------------------------------- fingerprints
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// Bit-level digest of one run: makespan and finish instants by their
+/// exact bits plus the full seam decision log. Two runs of the same
+/// (seed, ordering) must produce equal fingerprints or the fuzzer itself
+/// is non-deterministic.
+fn run_fingerprint(makespan: f64, preemptions: usize, finishes: &[f64], seam: &OrderSeam) -> u64 {
+    let mut h = FNV_OFFSET;
+    h = fnv(h, makespan.to_bits());
+    h = fnv(h, preemptions as u64);
+    for &f in finishes {
+        h = fnv(h, f.to_bits());
+    }
+    for d in seam.decisions() {
+        h = fnv(h, d.class.idx() as u64);
+        h = fnv(h, d.site);
+        h = fnv(h, d.n as u64);
+    }
+    h
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+// ------------------------------------------------------------------ path runs
+
+/// Outcome of one (workload, ordering) run through one execution path.
+pub(crate) struct PathRun {
+    pub(crate) failure: Option<String>,
+    pub(crate) makespan: f64,
+    pub(crate) preemptions: usize,
+    pub(crate) coverage: [ClassCoverage; Ambiguity::COUNT],
+    pub(crate) distinct: [usize; Ambiguity::COUNT],
+    pub(crate) deviations: u64,
+    pub(crate) decisions: Vec<Decision>,
+    pub(crate) fingerprint: u64,
+}
+
+impl PathRun {
+    fn failed(msg: String) -> PathRun {
+        PathRun {
+            failure: Some(msg),
+            makespan: f64::NAN,
+            preemptions: 0,
+            coverage: [ClassCoverage::default(); Ambiguity::COUNT],
+            distinct: [0; Ambiguity::COUNT],
+            deviations: 0,
+            decisions: Vec::new(),
+            fingerprint: 0,
+        }
+    }
+
+    fn absorb_seam(&mut self, seam: &OrderSeam) {
+        self.coverage = *seam.coverage();
+        for (i, &a) in Ambiguity::ALL.iter().enumerate() {
+            self.distinct[i] = seam.distinct_orderings(a);
+        }
+        self.deviations = seam.deviations_total();
+        self.decisions = seam.decisions().to_vec();
+    }
+
+    fn line(&self) -> String {
+        match &self.failure {
+            Some(f) => format!("FAIL ({f})"),
+            None => format!(
+                "makespan={:.9e} preemptions={} deviations={}",
+                self.makespan, self.preemptions, self.deviations
+            ),
+        }
+    }
+}
+
+/// Run the engine path of `seed` under one permuted ordering.
+pub(crate) fn run_engine_path(seed: u64, ordering: usize, budget: Option<u64>) -> PathRun {
+    let wl = engine_workload(seed);
+    let mut policy = wl.policy.build();
+    let mut seam = OrderSeam::with_budget(seam_seed(seed, ordering), budget);
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        simulate_served_fuzzed(
+            &wl.dag,
+            &wl.partition,
+            &wl.platform,
+            &PaperCost,
+            policy.as_mut(),
+            &wl.cfg,
+            &wl.meta,
+            &mut seam,
+        )
+    }));
+    let mut run = match res {
+        Err(p) => PathRun::failed(format!("engine panicked: {}", panic_message(p.as_ref()))),
+        Ok(Err(e)) => PathRun::failed(format!("engine error: {e}")),
+        Ok(Ok(sim)) => PathRun {
+            failure: check_engine_invariants(&wl, &sim).err(),
+            fingerprint: run_fingerprint(
+                sim.makespan,
+                sim.preemptions,
+                &sim.component_finish,
+                &seam,
+            ),
+            makespan: sim.makespan,
+            preemptions: sim.preemptions,
+            coverage: [ClassCoverage::default(); Ambiguity::COUNT],
+            distinct: [0; Ambiguity::COUNT],
+            deviations: 0,
+            decisions: Vec::new(),
+        },
+    };
+    run.absorb_seam(&seam);
+    run
+}
+
+/// Run the streaming path of `seed` under one permuted ordering.
+pub(crate) fn run_stream_path(seed: u64, ordering: usize, budget: Option<u64>) -> PathRun {
+    let StreamPlan {
+        label: _,
+        dag,
+        partition,
+        platform,
+        cfg,
+        policy: pk,
+        units,
+    } = stream_plan(seed);
+    let tmpl = Arc::new((dag, partition));
+    let ncomp = tmpl.1.components.len();
+    let n_units = units.len();
+    let max_release = units.iter().map(|u| u.release).fold(0.0, f64::max);
+    let empty_dag = Dag::default();
+    let empty_part = Partition {
+        components: Vec::new(),
+        assignment: Vec::new(),
+    };
+    let mut policy = pk.build();
+    let res = catch_unwind(AssertUnwindSafe(
+        || -> std::result::Result<(f64, usize, Vec<f64>, OrderSeam), String> {
+            let mut sim = StreamSim::new(
+                &empty_dag,
+                &empty_part,
+                &platform,
+                &PaperCost,
+                policy.as_mut(),
+                &cfg,
+            )
+            .map_err(|e| format!("stream construction: {e}"))?;
+            sim.install_seam(OrderSeam::with_budget(seam_seed(seed, ordering), budget));
+            for (i, u) in units.iter().enumerate() {
+                sim.admit(AdmitUnit {
+                    tmpl: Template::Single(tmpl.clone()),
+                    release: u.release,
+                    members: vec![MemberSpec {
+                        id: i,
+                        arrival: u.release,
+                        deadline: u.deadline,
+                        priority: u.priority,
+                        comps: 0..ncomp,
+                    }],
+                })
+                .map_err(|e| format!("admit unit {i}: {e}"))?;
+            }
+            let stop = sim.pump(f64::INFINITY).map_err(|e| format!("pump: {e}"))?;
+            if stop != PumpStop::Idle {
+                return Err(format!("pump stopped at {stop:?} before going idle"));
+            }
+            let mut fin = Vec::new();
+            sim.drain_finished_into(&mut fin);
+            if fin.len() != n_units {
+                return Err(format!(
+                    "{} of {n_units} requests drained (lost request)",
+                    fin.len()
+                ));
+            }
+            if sim.live_components() != 0 {
+                return Err(format!(
+                    "{} live components after full drain",
+                    sim.live_components()
+                ));
+            }
+            fin.sort_by_key(|f| f.id);
+            for f in &fin {
+                if !f.finish.is_finite() || f.finish + EPS < f.release {
+                    return Err(format!(
+                        "request {} finished at {:.6} vs release {:.6}",
+                        f.id, f.finish, f.release
+                    ));
+                }
+            }
+            let finishes: Vec<f64> = fin.iter().map(|f| f.finish).collect();
+            let seam = sim.take_seam().expect("seam was installed");
+            Ok((sim.makespan(), sim.preemptions(), finishes, seam))
+        },
+    ));
+    match res {
+        Err(p) => PathRun::failed(format!("stream panicked: {}", panic_message(p.as_ref()))),
+        Ok(Err(e)) => PathRun::failed(e),
+        Ok(Ok((makespan, preemptions, finishes, seam))) => {
+            let mut failure = None;
+            let lo = max_release + makespan_lower_bound(&tmpl.0, &platform);
+            if makespan + EPS < lo {
+                failure = Some(format!(
+                    "makespan {makespan:.6} below the provable floor {lo:.6}"
+                ));
+            }
+            let hi = makespan_envelope(&tmpl.0, &platform, &cfg, max_release, preemptions, n_units);
+            if makespan > hi {
+                failure = Some(format!(
+                    "makespan {makespan:.6} above the envelope {hi:.6} (preemptions {preemptions})"
+                ));
+            }
+            let mut run = PathRun {
+                failure,
+                fingerprint: run_fingerprint(makespan, preemptions, &finishes, &seam),
+                makespan,
+                preemptions,
+                coverage: [ClassCoverage::default(); Ambiguity::COUNT],
+                distinct: [0; Ambiguity::COUNT],
+                deviations: 0,
+                decisions: Vec::new(),
+            };
+            run.absorb_seam(&seam);
+            run
+        }
+    }
+}
+
+// ------------------------------------------------------------ invariant math
+
+/// Provable makespan floor: the DAG's critical path with every kernel at
+/// its fastest device, ignoring transfers, overheads, and contention.
+fn makespan_lower_bound(dag: &Dag, platform: &Platform) -> f64 {
+    let w: Vec<f64> = dag
+        .kernels
+        .iter()
+        .map(|k| {
+            platform
+                .devices
+                .iter()
+                .map(|d| PaperCost.exec_time(k, d))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    crate::graph::rank::critical_path(dag, &w)
+}
+
+/// Provable makespan ceiling: even a worst-case schedule cannot exceed
+/// running all `copies` of the DAG serially at the slowest device under
+/// the worst contention share, re-doing the work once per preemption,
+/// plus generous per-kernel overhead and a constant slack. Deliberately
+/// loose — it catches runaway schedules (re-execution loops, lost-wakeup
+/// stalls resolved by a later unrelated event), not small regressions.
+fn makespan_envelope(
+    dag: &Dag,
+    platform: &Platform,
+    cfg: &SimConfig,
+    max_release: f64,
+    preemptions: usize,
+    copies: usize,
+) -> f64 {
+    let serial: f64 = dag
+        .kernels
+        .iter()
+        .map(|k| {
+            platform
+                .devices
+                .iter()
+                .map(|d| PaperCost.exec_time(k, d))
+                .fold(0.0, f64::max)
+        })
+        .sum();
+    let xfer: f64 = dag
+        .buffers
+        .iter()
+        .map(|b| {
+            platform
+                .devices
+                .iter()
+                .map(|d| platform.transfer_time(d.id, b.size_bytes))
+                .fold(0.0, f64::max)
+        })
+        .sum();
+    let nk = dag.kernels.len() as f64 * copies as f64;
+    let over = nk
+        * 8.0
+        * (platform.enqueue_overhead + platform.callback_latency + platform.wait_latency);
+    let eff = cfg.contention_efficiency.clamp(0.25, 1.0);
+    let per_copy = (copies as f64) * (serial / eff + xfer) + over;
+    max_release + (1.0 + preemptions as f64) * per_copy * 4.0 + 1.0
+}
+
+fn check_engine_invariants(wl: &Workload, sim: &SimResult) -> std::result::Result<(), String> {
+    let ncomp = wl.partition.components.len();
+    if sim.component_finish.len() != ncomp {
+        return Err(format!(
+            "{} finish entries for {ncomp} components",
+            sim.component_finish.len()
+        ));
+    }
+    let mut max_release: f64 = 0.0;
+    for (c, m) in wl.meta.iter().enumerate() {
+        max_release = max_release.max(m.release);
+        let f = sim.component_finish[c];
+        if !f.is_finite() {
+            return Err(format!("component {c} never finished (lost dispatch)"));
+        }
+        if f + EPS < m.release {
+            return Err(format!(
+                "component {c} finished at {f:.6} before its release {:.6}",
+                m.release
+            ));
+        }
+    }
+    let lo = makespan_lower_bound(&wl.dag, &wl.platform).max(max_release);
+    if sim.makespan + EPS < lo {
+        return Err(format!(
+            "makespan {:.6} below the provable floor {lo:.6}",
+            sim.makespan
+        ));
+    }
+    let hi = makespan_envelope(&wl.dag, &wl.platform, &wl.cfg, max_release, sim.preemptions, 1);
+    if sim.makespan > hi {
+        return Err(format!(
+            "makespan {:.6} above the envelope {hi:.6} (preemptions {})",
+            sim.makespan, sim.preemptions
+        ));
+    }
+    // No preemption ping-pong: displacements per victim are bounded. The
+    // engine stamps one `preempt c{victim}` span per displacement.
+    let mut per = vec![0usize; ncomp];
+    for span in &sim.trace.spans {
+        if let Some(v) = span
+            .label
+            .strip_prefix("preempt c")
+            .and_then(|rest| rest.parse::<usize>().ok())
+        {
+            if v < ncomp {
+                per[v] += 1;
+            }
+        }
+    }
+    let bound = 2 * ncomp + 4;
+    for (c, &n) in per.iter().enumerate() {
+        if n > bound {
+            return Err(format!(
+                "component {c} displaced {n} times (ping-pong; bound {bound})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- reports
+
+/// Everything one fuzz seed produced: failures, aggregated coverage, and
+/// a deterministic replay log (same seed + config ⇒ byte-identical log).
+pub struct SeedReport {
+    pub seed: u64,
+    pub failures: Vec<String>,
+    pub coverage: [ClassCoverage; Ambiguity::COUNT],
+    pub distinct: [usize; Ambiguity::COUNT],
+    pub log: String,
+}
+
+impl SeedReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+fn merge_run(
+    cov: &mut [ClassCoverage; Ambiguity::COUNT],
+    distinct: &mut [usize; Ambiguity::COUNT],
+    run: &PathRun,
+) {
+    for i in 0..Ambiguity::COUNT {
+        cov[i].sites += run.coverage[i].sites;
+        cov[i].identity += run.coverage[i].identity;
+        cov[i].deviations += run.coverage[i].deviations;
+        distinct[i] = distinct[i].max(run.distinct[i]);
+    }
+}
+
+/// Fuzz one seed: both execution paths under every ordering, a replay
+/// determinism check, and one state-oracle run.
+pub fn run_seed(seed: u64, cfg: &FuzzConfig) -> SeedReport {
+    let mut rep = SeedReport {
+        seed,
+        failures: Vec::new(),
+        coverage: [ClassCoverage::default(); Ambiguity::COUNT],
+        distinct: [0; Ambiguity::COUNT],
+        log: String::new(),
+    };
+    let orderings = cfg.orderings.max(1);
+    let _ = writeln!(rep.log, "seed {seed}");
+
+    let _ = writeln!(rep.log, "  engine: {}", engine_workload(seed).label);
+    let mut engine_fp = 0u64;
+    for o in 0..orderings {
+        let run = run_engine_path(seed, o, ordering_budget(cfg, o));
+        merge_run(&mut rep.coverage, &mut rep.distinct, &run);
+        let _ = writeln!(rep.log, "    ordering {o}: {}", run.line());
+        if let Some(f) = &run.failure {
+            rep.failures.push(format!("engine ordering {o}: {f}"));
+        }
+        engine_fp = run.fingerprint;
+    }
+
+    let _ = writeln!(rep.log, "  stream: {}", stream_plan(seed).label);
+    let mut stream_fp = 0u64;
+    for o in 0..orderings {
+        let run = run_stream_path(seed, o, ordering_budget(cfg, o));
+        merge_run(&mut rep.coverage, &mut rep.distinct, &run);
+        let _ = writeln!(rep.log, "    ordering {o}: {}", run.line());
+        if let Some(f) = &run.failure {
+            rep.failures.push(format!("stream ordering {o}: {f}"));
+        }
+        stream_fp = run.fingerprint;
+    }
+
+    // Determinism: replaying the last ordering must be bit-identical
+    // (same makespan bits, same decision log).
+    let o = orderings - 1;
+    let budget = ordering_budget(cfg, o);
+    let engine_det = run_engine_path(seed, o, budget).fingerprint == engine_fp;
+    let stream_det = run_stream_path(seed, o, budget).fingerprint == stream_fp;
+    let _ = writeln!(
+        rep.log,
+        "  determinism: engine {} stream {}",
+        if engine_det { "ok" } else { "DIVERGED" },
+        if stream_det { "ok" } else { "DIVERGED" },
+    );
+    if !engine_det {
+        rep.failures
+            .push(format!("engine ordering {o} replay diverged (non-deterministic)"));
+    }
+    if !stream_det {
+        rep.failures
+            .push(format!("stream ordering {o} replay diverged (non-deterministic)"));
+    }
+
+    match fuzz_state_events(seed, cfg.oracle_steps) {
+        Ok(st) => {
+            let _ = writeln!(
+                rep.log,
+                "  oracle: steps={} rebuilds={} compactions={} ok",
+                st.steps, st.rebuilds, st.compactions
+            );
+        }
+        Err(e) => {
+            let _ = writeln!(rep.log, "  oracle: FAIL ({e})");
+            rep.failures.push(format!("state oracle: {e}"));
+        }
+    }
+
+    for (i, a) in Ambiguity::ALL.iter().enumerate() {
+        let c = rep.coverage[i];
+        let _ = writeln!(
+            rep.log,
+            "  coverage {:<12} sites={} identity={} deviations={} distinct={}",
+            a.name(),
+            c.sites,
+            c.identity,
+            c.deviations,
+            rep.distinct[i]
+        );
+    }
+    let _ = writeln!(
+        rep.log,
+        "  seed {seed}: {}",
+        if rep.ok() { "ok" } else { "FAIL" }
+    );
+    rep
+}
+
+/// Aggregate over a seed range.
+pub struct FuzzSummary {
+    pub seeds: u64,
+    /// First failure message per failing seed.
+    pub failures: Vec<(u64, String)>,
+    pub coverage: [ClassCoverage; Ambiguity::COUNT],
+    pub distinct: [usize; Ambiguity::COUNT],
+}
+
+impl FuzzSummary {
+    /// Ambiguity classes *without* proven ordering diversity. A class is
+    /// proven when at least one choice site kept the canonical order and
+    /// at least one deviated — i.e. ≥ 2 distinct same-instant orderings
+    /// were actually executed, not just reachable.
+    pub fn unproven_classes(&self) -> Vec<&'static str> {
+        Ambiguity::ALL
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| self.coverage[i].identity < 1 || self.coverage[i].deviations < 1)
+            .map(|(_, a)| a.name())
+            .collect()
+    }
+
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty() && self.unproven_classes().is_empty()
+    }
+
+    /// Human-readable coverage table plus failures, deterministic.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "fuzz: {} seeds, {} failing",
+            self.seeds,
+            self.failures.len()
+        );
+        let _ = writeln!(
+            s,
+            "{:<14} {:>8} {:>10} {:>11} {:>9}",
+            "class", "sites", "identity", "deviations", "distinct"
+        );
+        for (i, a) in Ambiguity::ALL.iter().enumerate() {
+            let c = self.coverage[i];
+            let _ = writeln!(
+                s,
+                "{:<14} {:>8} {:>10} {:>11} {:>9}",
+                a.name(),
+                c.sites,
+                c.identity,
+                c.deviations,
+                self.distinct[i]
+            );
+        }
+        for (seed, f) in &self.failures {
+            let _ = writeln!(s, "FAIL seed {seed}: {f}");
+        }
+        s
+    }
+}
+
+/// Fuzz `count` seeds starting at `start`, feeding each finished
+/// [`SeedReport`] to `per_seed` (print it, collect it, ignore it).
+pub fn run_many(
+    start: u64,
+    count: u64,
+    cfg: &FuzzConfig,
+    mut per_seed: impl FnMut(&SeedReport),
+) -> FuzzSummary {
+    let mut sum = FuzzSummary {
+        seeds: count,
+        failures: Vec::new(),
+        coverage: [ClassCoverage::default(); Ambiguity::COUNT],
+        distinct: [0; Ambiguity::COUNT],
+    };
+    for seed in start..start.saturating_add(count) {
+        let rep = run_seed(seed, cfg);
+        for i in 0..Ambiguity::COUNT {
+            sum.coverage[i].sites += rep.coverage[i].sites;
+            sum.coverage[i].identity += rep.coverage[i].identity;
+            sum.coverage[i].deviations += rep.coverage[i].deviations;
+            sum.distinct[i] = sum.distinct[i].max(rep.distinct[i]);
+        }
+        if let Some(f) = rep.failures.first() {
+            sum.failures.push((seed, f.clone()));
+        }
+        per_seed(&rep);
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tentpole acceptance invariant in test form: the crafted shapes
+    /// plus a few random seeds execute ≥ 2 distinct same-instant
+    /// orderings in *every* ambiguity class, and nothing fails.
+    #[test]
+    fn crafted_seeds_prove_every_ambiguity_class() {
+        let cfg = FuzzConfig {
+            orderings: 8,
+            ..FuzzConfig::default()
+        };
+        let sum = run_many(0, 8, &cfg, |_| {});
+        assert!(
+            sum.failures.is_empty(),
+            "fuzz failures:\n{}",
+            sum.render()
+        );
+        assert!(
+            sum.unproven_classes().is_empty(),
+            "unproven classes {:?}\n{}",
+            sum.unproven_classes(),
+            sum.render()
+        );
+    }
+
+    #[test]
+    fn fuzz_reports_are_deterministic() {
+        let cfg = FuzzConfig::default();
+        let a = run_seed(3, &cfg);
+        let b = run_seed(3, &cfg);
+        assert_eq!(a.log, b.log, "same seed must produce a byte-identical log");
+        assert!(a.ok(), "{}", a.log);
+    }
+
+    /// Ordering 0 (identity seam) tracks the unseamed serving path: same
+    /// preemption count, same makespan up to the ≤1e-9 retire-batching
+    /// residue the fuzz path's two-phase retirement introduces.
+    #[test]
+    fn canonical_ordering_matches_unseamed_engine() {
+        for seed in [0u64, 1, 5] {
+            let wl = engine_workload(seed);
+            let mut policy = wl.policy.build();
+            let base = crate::sim::simulate_served(
+                &wl.dag,
+                &wl.partition,
+                &wl.platform,
+                &PaperCost,
+                policy.as_mut(),
+                &wl.cfg,
+                &wl.meta,
+            )
+            .unwrap();
+            let run = run_engine_path(seed, 0, Some(0));
+            assert!(run.failure.is_none(), "seed {seed}: {:?}", run.failure);
+            let tol = 1e-6 * base.makespan.abs().max(1e-3);
+            assert!(
+                (run.makespan - base.makespan).abs() <= tol,
+                "seed {seed}: canonical fuzz makespan {} vs engine {}",
+                run.makespan,
+                base.makespan
+            );
+            assert_eq!(run.preemptions, base.preemptions, "seed {seed}");
+        }
+    }
+
+    /// The crafted preemption shape actually preempts — the PreemptRace
+    /// and Reentry guarantees rest on it.
+    #[test]
+    fn preempt_storm_preempts() {
+        let run = run_engine_path(1, 0, Some(0));
+        assert!(run.failure.is_none(), "{:?}", run.failure);
+        assert!(run.preemptions >= 1, "crafted shape 1 must preempt");
+    }
+}

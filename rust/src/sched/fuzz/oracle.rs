@@ -1,0 +1,322 @@
+//! The fuzzer's core oracle: drive a slot-mode [`SchedState`] through a
+//! seeded random event sequence while checking, after **every** event,
+//! that
+//!
+//! 1. the state's internal structural invariants hold
+//!    ([`SchedState::check_invariants`]): frontier count, tenancy /
+//!    availability bookkeeping, and every live heap entry's key matching
+//!    the component facts it indexes;
+//! 2. a `SchedState` **rebuilt from scratch** — fresh state, same slot
+//!    bindings, the current frontier re-entered in its original ready
+//!    order, the current residents re-dispatched in their original
+//!    dispatch order — answers every scheduling query identically to the
+//!    incrementally maintained one (same frontier order, same heads, same
+//!    tie lists, same tenancy, bit-equal laxities); and
+//! 3. [`SchedState::compact_heaps`] is behavior-neutral (identical
+//!    queries before and after).
+//!
+//! The rebuild oracle replays from an **independent shadow model** (its
+//! own ready/dispatch chronology), not from the state's internals, so a
+//! lost, duplicated, or mis-keyed heap entry in the incremental path
+//! cannot hide itself.
+
+use super::gen::Rng;
+use crate::cost::PaperCost;
+use crate::graph::{Dag, Partition};
+use crate::platform::{DeviceType, Platform};
+use crate::sched::SchedState;
+
+#[derive(Clone, Copy, PartialEq)]
+enum SlotState {
+    /// Bound but not in the frontier and not resident.
+    Idle,
+    Ready,
+    Resident(usize),
+}
+
+#[derive(Clone)]
+struct SlotFacts {
+    rank: f64,
+    pref: DeviceType,
+    deadline: f64,
+    priority: u32,
+    dev_times: Vec<f64>,
+}
+
+/// Counters from one oracle run, for the fuzz report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OracleStats {
+    pub steps: usize,
+    pub rebuilds: usize,
+    pub compactions: usize,
+}
+
+/// Snapshot of every order-sensitive query, for before/after comparisons.
+fn query_snapshot(st: &mut SchedState) -> (Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>) {
+    (
+        st.frontier_ranked(),
+        st.rank_head_ties(),
+        st.urgency_head_ties(false),
+        st.urgency_head_ties(true),
+    )
+}
+
+/// Run `steps` random events against one persistent slot-mode state,
+/// checking the three oracle properties throughout. Returns counters, or a
+/// divergence description.
+pub fn fuzz_state_events(seed: u64, steps: usize) -> Result<OracleStats, String> {
+    let empty_dag = Dag::default();
+    let empty_part = Partition {
+        components: Vec::new(),
+        assignment: Vec::new(),
+    };
+    let mut rng = Rng::new(seed ^ 0xD6E8_FEB8_6659_FD93);
+    let platform = Platform::scaled(2, 1, 2, 1);
+    let cost = PaperCost;
+    let tenancy = 1 + rng.below(2);
+    let ndev = platform.devices.len();
+
+    let mut inc = SchedState::for_streaming(&empty_dag, &empty_part, &platform, &cost, tenancy)
+        .map_err(|e| format!("state construction failed: {e}"))?;
+
+    let nslots = 4 + rng.below(5);
+    let mut facts: Vec<SlotFacts> = Vec::with_capacity(nslots);
+    let mut slot_state = vec![SlotState::Idle; nslots];
+    // Independent chronology shadows: frontier-entry order and dispatch
+    // order of the *currently* live population.
+    let mut ready_order: Vec<usize> = Vec::new();
+    let mut resident_order: Vec<(usize, usize)> = Vec::new();
+
+    let bind = |rng: &mut Rng| -> SlotFacts {
+        SlotFacts {
+            // Coarse grids force bitwise rank/deadline ties.
+            rank: (1 + rng.below(3)) as f64,
+            pref: if rng.below(3) == 0 {
+                DeviceType::Cpu
+            } else {
+                DeviceType::Gpu
+            },
+            deadline: if rng.below(3) == 0 {
+                f64::INFINITY
+            } else {
+                (1 + rng.below(4)) as f64 * 0.01
+            },
+            priority: rng.below(3) as u32,
+            dev_times: (0..ndev).map(|d| (1 + (d + 1) % 3) as f64 * 1e-3).collect(),
+        }
+    };
+    for slot in 0..nslots {
+        let f = bind(&mut rng);
+        inc.set_slot(slot, f.rank, f.pref, f.deadline, f.priority, &f.dev_times);
+        facts.push(f);
+    }
+
+    let mut stats = OracleStats::default();
+    for step in 0..steps {
+        inc.now = step as f64 * 1e-3;
+        // Pick an applicable random action.
+        match rng.below(6) {
+            // Ready an idle slot.
+            0 | 1 => {
+                let idle: Vec<usize> = (0..nslots)
+                    .filter(|&s| slot_state[s] == SlotState::Idle)
+                    .collect();
+                if let Some(&s) = idle.get(rng.below(idle.len().max(1))) {
+                    inc.on_ready(s);
+                    slot_state[s] = SlotState::Ready;
+                    ready_order.push(s);
+                }
+            }
+            // Dispatch a frontier slot to an available device.
+            2 | 3 => {
+                let ready: Vec<usize> = (0..nslots)
+                    .filter(|&s| slot_state[s] == SlotState::Ready)
+                    .collect();
+                let avail: Vec<usize> = (0..ndev).filter(|&d| inc.is_available(d)).collect();
+                if !ready.is_empty() && !avail.is_empty() {
+                    let s = ready[rng.below(ready.len())];
+                    let d = avail[rng.below(avail.len())];
+                    inc.on_dispatch(s, d);
+                    slot_state[s] = SlotState::Resident(d);
+                    ready_order.retain(|&x| x != s);
+                    resident_order.push((s, d));
+                }
+            }
+            // Complete a resident slot, sometimes rebinding it (slot reuse).
+            4 => {
+                if let Some(i) = pick_resident(&resident_order, &mut rng) {
+                    let (s, d) = resident_order.remove(i);
+                    inc.on_complete(d);
+                    slot_state[s] = SlotState::Idle;
+                    if rng.chance(2) {
+                        let f = bind(&mut rng);
+                        inc.set_slot(s, f.rank, f.pref, f.deadline, f.priority, &f.dev_times);
+                        facts[s] = f;
+                    }
+                }
+            }
+            // Preempt a resident slot; usually re-enter it immediately.
+            _ => {
+                if let Some(i) = pick_resident(&resident_order, &mut rng) {
+                    let (s, d) = resident_order.remove(i);
+                    inc.on_preempt(d);
+                    if rng.chance(4) {
+                        slot_state[s] = SlotState::Idle;
+                    } else {
+                        inc.on_ready(s);
+                        slot_state[s] = SlotState::Ready;
+                        ready_order.push(s);
+                    }
+                }
+            }
+        }
+        // Exercise the documented on_ready no-op path.
+        if rng.chance(8) {
+            if let Some(&s) = ready_order.first() {
+                inc.on_ready(s);
+            }
+        }
+        stats.steps += 1;
+
+        // Oracle 1: structural invariants after every event.
+        inc.check_invariants()
+            .map_err(|e| format!("step {step}: invariants violated: {e}"))?;
+
+        // Oracle 3: compaction neutrality, occasionally.
+        if rng.chance(9) {
+            let before = query_snapshot(&mut inc);
+            inc.compact_heaps();
+            let after = query_snapshot(&mut inc);
+            if before != after {
+                return Err(format!(
+                    "step {step}: compact_heaps changed query results: {before:?} vs {after:?}"
+                ));
+            }
+            inc.check_invariants()
+                .map_err(|e| format!("step {step}: invariants violated after compaction: {e}"))?;
+            stats.compactions += 1;
+        }
+
+        // Oracle 2: from-scratch rebuild equivalence, every few events.
+        if step % 5 == 4 {
+            rebuild_and_compare(
+                &mut inc,
+                &platform,
+                &cost,
+                tenancy,
+                &facts,
+                &ready_order,
+                &resident_order,
+            )
+            .map_err(|e| format!("step {step}: rebuild divergence: {e}"))?;
+            stats.rebuilds += 1;
+        }
+    }
+    Ok(stats)
+}
+
+fn pick_resident(resident: &[(usize, usize)], rng: &mut Rng) -> Option<usize> {
+    if resident.is_empty() {
+        None
+    } else {
+        Some(rng.below(resident.len()))
+    }
+}
+
+/// Build a fresh state from the shadow chronology and compare every
+/// scheduling query against the incrementally maintained state.
+fn rebuild_and_compare(
+    inc: &mut SchedState,
+    platform: &Platform,
+    cost: &PaperCost,
+    tenancy: usize,
+    facts: &[SlotFacts],
+    ready_order: &[usize],
+    resident_order: &[(usize, usize)],
+) -> Result<(), String> {
+    let empty_dag = Dag::default();
+    let empty_part = Partition {
+        components: Vec::new(),
+        assignment: Vec::new(),
+    };
+    let mut fresh = SchedState::for_streaming(&empty_dag, &empty_part, platform, cost, tenancy)
+        .map_err(|e| format!("fresh state construction failed: {e}"))?;
+    for (slot, f) in facts.iter().enumerate() {
+        fresh.set_slot(slot, f.rank, f.pref, f.deadline, f.priority, &f.dev_times);
+    }
+    // Residents first (ready + dispatch in dispatch chronology), then the
+    // live frontier in its entry chronology — the live entry seqs end up
+    // in the same relative order as the incremental state's.
+    for &(s, d) in resident_order {
+        fresh.on_ready(s);
+        fresh.on_dispatch(s, d);
+    }
+    for &s in ready_order {
+        fresh.on_ready(s);
+    }
+    // Engine-owned inputs are copied, not reconstructed.
+    fresh.now = inc.now;
+    fresh.est_free.copy_from_slice(&inc.est_free);
+    fresh.device_load.copy_from_slice(&inc.device_load);
+
+    fresh
+        .check_invariants()
+        .map_err(|e| format!("rebuilt state invariants: {e}"))?;
+    if fresh.frontier_len() != inc.frontier_len() {
+        return Err(format!(
+            "frontier_len {} vs rebuilt {}",
+            inc.frontier_len(),
+            fresh.frontier_len()
+        ));
+    }
+    if fresh.tenants != inc.tenants {
+        return Err(format!("tenants {:?} vs rebuilt {:?}", inc.tenants, fresh.tenants));
+    }
+    for d in 0..platform.devices.len() {
+        if fresh.is_available(d) != inc.is_available(d) {
+            return Err(format!("device {d} availability diverged"));
+        }
+    }
+    let a = query_snapshot(inc);
+    let b = query_snapshot(&mut fresh);
+    if a != b {
+        return Err(format!("query snapshot {a:?} vs rebuilt {b:?}"));
+    }
+    if inc.rank_head() != fresh.rank_head()
+        || inc.urgency_head(false) != fresh.urgency_head(false)
+        || inc.urgency_head(true) != fresh.urgency_head(true)
+        || inc.rank_head_placeable() != fresh.rank_head_placeable()
+    {
+        return Err("head query diverged".into());
+    }
+    for &c in &a.0 {
+        if inc.laxity(c).to_bits() != fresh.laxity(c).to_bits() {
+            return Err(format!("laxity of component {c} diverged"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_runs_clean_over_many_seeds() {
+        for seed in 0..40u64 {
+            let stats = fuzz_state_events(seed, 120)
+                .unwrap_or_else(|e| panic!("oracle seed {seed}: {e}"));
+            assert_eq!(stats.steps, 120);
+            assert!(stats.rebuilds >= 20, "seed {seed}: too few rebuilds");
+        }
+    }
+
+    #[test]
+    fn oracle_is_deterministic() {
+        let a = fuzz_state_events(7, 200).unwrap();
+        let b = fuzz_state_events(7, 200).unwrap();
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.rebuilds, b.rebuilds);
+        assert_eq!(a.compactions, b.compactions);
+    }
+}

@@ -1,0 +1,446 @@
+//! The order-permutation seam: a seeded, deterministic source of
+//! *same-instant ordering choices* for the concurrency fuzzer.
+//!
+//! The event loops ([`crate::sim::engine`], [`crate::sim::stream`]) are
+//! deterministic: wherever several things happen "at the same instant" —
+//! simultaneous kernel completions, a batch of due callbacks, a batch of
+//! components entering the frontier together, the preemption victim scan,
+//! victim re-entry — they fall back to a fixed canonical order (creation
+//! order, heap seq, ascending index). Each such point is an *ambiguity*:
+//! on real hardware the order is whatever the OS/driver race resolved to,
+//! and the scheduler must produce an equivalent outcome for every
+//! resolution.
+//!
+//! An [`OrderSeam`] threaded through the loops turns each ambiguity into
+//! an explicit choice: the loop hands the seam the canonical batch, the
+//! seam returns a (possibly) permuted order drawn from a seeded xorshift
+//! stream. With no seam installed the loops run the canonical order,
+//! byte-identically to the un-instrumented build. The seam also records
+//! coverage — how many choice points each [`Ambiguity`] class hit, how
+//! often the drawn order deviated from canonical, and a fingerprint set of
+//! the distinct permutations exercised — which the fuzz report uses to
+//! *prove* each class was genuinely permuted, and a bounded decision log
+//! that the shrinker replays.
+//!
+//! Determinism contract: the permutation stream is a pure function of the
+//! seed and the sequence of choice points the run presents. A run with
+//! deviation budget `b` is identical to the unlimited run up through its
+//! `b`-th deviating choice and canonical after — which is what lets the
+//! shrinker binary-search the smallest deviation prefix that still fails.
+
+/// One class of same-instant ambiguity the event loops admit.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Ambiguity {
+    /// Simultaneous kernel-run completions: retirement order of runs
+    /// finishing at the same instant.
+    Completion,
+    /// A same-instant batch of due events (callback firing, transfer
+    /// completions, copy-engine completions, releases): inter-dispatch
+    /// firing order. Events of one dispatch keep their relative order —
+    /// a queue cannot reorder against itself.
+    Callback,
+    /// Tie-broken dispatch order: the frontier-entry order of components
+    /// becoming ready at the same instant (initial readies, unblock
+    /// batches, re-entries), which decides every bitwise rank/deadline
+    /// tie-break downstream.
+    DispatchTie,
+    /// Preemption-vs-completion races: the order of the resident-victim
+    /// candidate list handed to `Policy::preempt`, which decides which of
+    /// several equally urgent victims is displaced.
+    PreemptRace,
+    /// Re-entry order after preemption: whether a displaced victim
+    /// re-enters the frontier immediately or after the scheduler phase
+    /// that displaced it finishes.
+    Reentry,
+}
+
+impl Ambiguity {
+    /// Number of ambiguity classes.
+    pub const COUNT: usize = 5;
+    /// Every class, in report order.
+    pub const ALL: [Ambiguity; Self::COUNT] = [
+        Ambiguity::Completion,
+        Ambiguity::Callback,
+        Ambiguity::DispatchTie,
+        Ambiguity::PreemptRace,
+        Ambiguity::Reentry,
+    ];
+
+    /// Dense index of this class (report/coverage array slot).
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Stable report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Ambiguity::Completion => "completion",
+            Ambiguity::Callback => "callback",
+            Ambiguity::DispatchTie => "dispatch-tie",
+            Ambiguity::PreemptRace => "preempt-race",
+            Ambiguity::Reentry => "reentry",
+        }
+    }
+}
+
+/// Per-class choice-point accounting. A *site* is a choice point that
+/// admitted at least two orders (a batch of one, or a batch whose every
+/// element shares one group, is not a site). Every site resolves to either
+/// the canonical order (`identity`) or a permuted one (`deviations`);
+/// `identity ≥ 1 && deviations ≥ 1` therefore proves the run exercised at
+/// least two distinct same-instant orderings of that class.
+#[derive(Clone, Copy, Default, Debug, PartialEq, Eq)]
+pub struct ClassCoverage {
+    /// Choice points admitting ≥ 2 orders.
+    pub sites: u64,
+    /// Sites resolved to the canonical order.
+    pub identity: u64,
+    /// Sites resolved to a non-canonical order.
+    pub deviations: u64,
+}
+
+/// One deviating choice, in the order taken — the shrinker's replay unit.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    /// Class of the choice point.
+    pub class: Ambiguity,
+    /// Global choice-point ordinal within the run (sites of every class
+    /// share one counter, so the log reads as an event-order trace).
+    pub site: u64,
+    /// Batch size at the choice point (2 for a boolean flip).
+    pub n: usize,
+}
+
+/// Cap on retained permutation fingerprints per class and on the decision
+/// log — keeps seam memory bounded on deep runs without affecting the
+/// permutation stream.
+const FP_CAP: usize = 4096;
+const DECISION_CAP: usize = 4096;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// Seeded deterministic order permuter — see the module docs.
+pub struct OrderSeam {
+    rng: u64,
+    /// Remaining deviating choices allowed: `None` = unlimited, `Some(0)`
+    /// = canonical orders only (coverage still recorded).
+    budget: Option<u64>,
+    next_site: u64,
+    coverage: [ClassCoverage; Ambiguity::COUNT],
+    fingerprints: [Vec<u64>; Ambiguity::COUNT],
+    decisions: Vec<Decision>,
+}
+
+impl OrderSeam {
+    /// Unlimited-deviation seam for `seed`.
+    pub fn new(seed: u64) -> OrderSeam {
+        OrderSeam::with_budget(seed, None)
+    }
+
+    /// Seam with a deviation budget: after `budget` deviating choices every
+    /// later site resolves canonically. `Some(0)` never deviates — the
+    /// canonical ordering driven through the seamed code path, used as
+    /// ordering 0 of every workload and as the shrinker's lower bound.
+    pub fn with_budget(seed: u64, budget: Option<u64>) -> OrderSeam {
+        OrderSeam {
+            rng: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1),
+            budget,
+            next_site: 0,
+            coverage: [ClassCoverage::default(); Ambiguity::COUNT],
+            fingerprints: std::array::from_fn(|_| Vec::new()),
+            decisions: Vec::new(),
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // xorshift64* — the repo's standard deterministic stream.
+        let mut x = self.rng;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Permute `items` freely (every element its own group).
+    pub fn shuffle<T: Copy>(&mut self, class: Ambiguity, items: &mut [T]) {
+        self.shuffle_grouped(class, items, |_| None);
+    }
+
+    /// Permute `items`, preserving the relative order of elements sharing a
+    /// `key` (`None` = unconstrained singleton). This is the Callback-class
+    /// constraint: events of one dispatch — a command-queue's own stream —
+    /// may not reorder against each other, only against other dispatches'.
+    /// A batch admitting a single order (len < 2, or all elements in one
+    /// group) is passed through untouched and not counted as a site.
+    pub fn shuffle_grouped<T: Copy>(
+        &mut self,
+        class: Ambiguity,
+        items: &mut [T],
+        key: impl Fn(&T) -> Option<usize>,
+    ) {
+        let n = items.len();
+        if n < 2 {
+            return;
+        }
+        let keys: Vec<Option<usize>> = items.iter().map(&key).collect();
+        if keys[0].is_some() && keys.iter().all(|k| *k == keys[0]) {
+            return;
+        }
+        let ci = class.idx();
+        let site = self.next_site;
+        self.next_site += 1;
+        self.coverage[ci].sites += 1;
+        let mut idx: Vec<usize> = (0..n).collect();
+        if self.budget != Some(0) {
+            for i in (1..n).rev() {
+                let j = self.below(i + 1);
+                idx.swap(i, j);
+            }
+            // Group fixup: grouped elements keep their canonical relative
+            // order. Sorted (key, slot-position) zips against sorted
+            // (key, original-index) — per-key counts agree, so the j-th
+            // slot of a key receives its j-th member. No hash maps: the
+            // fixup itself must be deterministic.
+            let mut slots: Vec<(usize, usize)> = Vec::new();
+            for (pos, &i) in idx.iter().enumerate() {
+                if let Some(k) = keys[i] {
+                    slots.push((k, pos));
+                }
+            }
+            slots.sort_unstable();
+            let mut members: Vec<(usize, usize)> = Vec::new();
+            for (i, k) in keys.iter().enumerate() {
+                if let Some(k) = *k {
+                    members.push((k, i));
+                }
+            }
+            members.sort_unstable();
+            for (s, m) in slots.iter().zip(members.iter()) {
+                idx[s.1] = m.1;
+            }
+        }
+        let identity = idx.iter().enumerate().all(|(p, &i)| p == i);
+        if identity {
+            self.coverage[ci].identity += 1;
+        } else {
+            self.coverage[ci].deviations += 1;
+            if let Some(b) = self.budget.as_mut() {
+                *b = b.saturating_sub(1);
+            }
+            if self.decisions.len() < DECISION_CAP {
+                self.decisions.push(Decision { class, site, n });
+            }
+        }
+        let mut h = fnv(FNV_OFFSET, n as u64);
+        for &i in &idx {
+            h = fnv(h, i as u64);
+        }
+        if self.fingerprints[ci].len() < FP_CAP {
+            self.fingerprints[ci].push(h);
+        }
+        let orig: Vec<T> = items.to_vec();
+        for (p, &i) in idx.iter().enumerate() {
+            items[p] = orig[i];
+        }
+    }
+
+    /// A two-outcome choice point (`false` = canonical). Used for the
+    /// Reentry class: defer a displaced victim's frontier re-entry to the
+    /// end of the displacing scheduler phase instead of immediately.
+    pub fn flip(&mut self, class: Ambiguity) -> bool {
+        let ci = class.idx();
+        let site = self.next_site;
+        self.next_site += 1;
+        self.coverage[ci].sites += 1;
+        let deviate = self.budget != Some(0) && self.next_u64() & 1 == 1;
+        let mut h = fnv(FNV_OFFSET, 2);
+        if deviate {
+            h = fnv(h, 1);
+            h = fnv(h, 0);
+            self.coverage[ci].deviations += 1;
+            if let Some(b) = self.budget.as_mut() {
+                *b = b.saturating_sub(1);
+            }
+            if self.decisions.len() < DECISION_CAP {
+                self.decisions.push(Decision { class, site, n: 2 });
+            }
+        } else {
+            h = fnv(h, 0);
+            h = fnv(h, 1);
+            self.coverage[ci].identity += 1;
+        }
+        if self.fingerprints[ci].len() < FP_CAP {
+            self.fingerprints[ci].push(h);
+        }
+        deviate
+    }
+
+    /// Per-class coverage counters.
+    pub fn coverage(&self) -> &[ClassCoverage; Ambiguity::COUNT] {
+        &self.coverage
+    }
+
+    /// Raw permutation fingerprints recorded for `class` (unsorted, capped).
+    pub fn fingerprints(&self, class: Ambiguity) -> &[u64] {
+        &self.fingerprints[class.idx()]
+    }
+
+    /// Number of distinct permutations exercised for `class`.
+    pub fn distinct_orderings(&self, class: Ambiguity) -> usize {
+        let mut v = self.fingerprints[class.idx()].clone();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    }
+
+    /// The deviating choices taken, in order (capped log).
+    pub fn decisions(&self) -> &[Decision] {
+        &self.decisions
+    }
+
+    /// Total deviating choices across classes.
+    pub fn deviations_total(&self) -> u64 {
+        self.coverage.iter().map(|c| c.deviations).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_permutations() {
+        for seed in [1u64, 7, 99] {
+            let mut a = OrderSeam::new(seed);
+            let mut b = OrderSeam::new(seed);
+            for round in 0..50usize {
+                let mut xs: Vec<usize> = (0..(round % 7 + 2)).collect();
+                let mut ys = xs.clone();
+                a.shuffle(Ambiguity::Completion, &mut xs);
+                b.shuffle(Ambiguity::Completion, &mut ys);
+                assert_eq!(xs, ys, "seed {seed} round {round}");
+                assert_eq!(a.flip(Ambiguity::Reentry), b.flip(Ambiguity::Reentry));
+            }
+            assert_eq!(a.coverage(), b.coverage());
+        }
+    }
+
+    #[test]
+    fn zero_budget_is_canonical_and_still_counts() {
+        let mut s = OrderSeam::with_budget(42, Some(0));
+        let mut xs: Vec<u32> = (0..6).collect();
+        s.shuffle(Ambiguity::Callback, &mut xs);
+        assert_eq!(xs, (0..6).collect::<Vec<u32>>());
+        assert!(!s.flip(Ambiguity::Reentry));
+        let cov = s.coverage();
+        assert_eq!(cov[Ambiguity::Callback.idx()].sites, 1);
+        assert_eq!(cov[Ambiguity::Callback.idx()].identity, 1);
+        assert_eq!(cov[Ambiguity::Callback.idx()].deviations, 0);
+        assert_eq!(cov[Ambiguity::Reentry.idx()].sites, 1);
+        assert_eq!(s.deviations_total(), 0);
+        assert_eq!(s.distinct_orderings(Ambiguity::Callback), 1);
+    }
+
+    #[test]
+    fn budget_limits_deviations_then_goes_canonical() {
+        let mut s = OrderSeam::with_budget(3, Some(2));
+        let mut devs = 0u64;
+        for _ in 0..200 {
+            let mut xs: Vec<usize> = (0..8).collect();
+            s.shuffle(Ambiguity::DispatchTie, &mut xs);
+            if xs != (0..8).collect::<Vec<usize>>() {
+                devs += 1;
+            }
+        }
+        assert_eq!(devs, 2, "exactly the budgeted deviations occur");
+        assert_eq!(s.deviations_total(), 2);
+        assert_eq!(s.decisions().len(), 2);
+    }
+
+    /// A budgeted run must replay the unlimited run's deviation prefix:
+    /// identical permutations up through the budget'th deviation.
+    #[test]
+    fn budget_run_is_a_prefix_of_the_unlimited_run() {
+        let seed = 77;
+        let mut full = OrderSeam::new(seed);
+        let mut cut = OrderSeam::with_budget(seed, Some(3));
+        let mut diverged = false;
+        for _ in 0..100 {
+            let mut xs: Vec<usize> = (0..5).collect();
+            let mut ys = xs.clone();
+            full.shuffle(Ambiguity::Completion, &mut xs);
+            cut.shuffle(Ambiguity::Completion, &mut ys);
+            if cut.deviations_total() < 3 && !diverged {
+                assert_eq!(xs, ys, "identical until the budget is spent");
+            }
+            if xs != ys {
+                diverged = true;
+            }
+        }
+        assert_eq!(cut.deviations_total(), 3);
+        assert!(full.deviations_total() > 3);
+    }
+
+    #[test]
+    fn grouped_shuffle_preserves_intra_group_order() {
+        let mut s = OrderSeam::new(11);
+        for round in 0..100 {
+            // (group, ordinal-within-group) pairs; Nones are singletons.
+            let mut xs: Vec<(usize, usize)> = vec![
+                (0, 0),
+                (0, 1),
+                (1, 0),
+                (0, 2),
+                (1, 1),
+                (2, 0),
+                (3, 0),
+            ];
+            s.shuffle_grouped(Ambiguity::Callback, &mut xs, |&(g, _)| {
+                (g < 2).then_some(g)
+            });
+            for g in 0..2usize {
+                let ords: Vec<usize> =
+                    xs.iter().filter(|&&(x, _)| x == g).map(|&(_, o)| o).collect();
+                let sorted = {
+                    let mut v = ords.clone();
+                    v.sort_unstable();
+                    v
+                };
+                assert_eq!(ords, sorted, "round {round} group {g} order broken");
+            }
+            let mut all = xs.clone();
+            all.sort_unstable();
+            assert_eq!(
+                all,
+                vec![(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (2, 0), (3, 0)],
+                "no element lost or duplicated"
+            );
+        }
+        let cov = s.coverage()[Ambiguity::Callback.idx()];
+        assert_eq!(cov.sites, 100);
+        assert!(cov.deviations > 0, "free elements must actually move");
+        assert!(s.distinct_orderings(Ambiguity::Callback) > 1);
+    }
+
+    #[test]
+    fn single_order_batches_are_not_sites() {
+        let mut s = OrderSeam::new(5);
+        let mut one = [7u32];
+        s.shuffle(Ambiguity::Completion, &mut one);
+        let mut same_group = [(9usize, 0usize), (9, 1), (9, 2)];
+        s.shuffle_grouped(Ambiguity::Callback, &mut same_group, |&(g, _)| Some(g));
+        assert_eq!(same_group, [(9, 0), (9, 1), (9, 2)]);
+        assert_eq!(s.coverage()[Ambiguity::Completion.idx()].sites, 0);
+        assert_eq!(s.coverage()[Ambiguity::Callback.idx()].sites, 0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Minimal-deviation reproducers for failing fuzz seeds.
+//!
+//! A failing ordering may have deviated from the canonical order at
+//! hundreds of choice sites; almost all of those deviations are noise.
+//! The [`OrderSeam`](super::OrderSeam) budget gives an exact prefix
+//! semantics — a budget-`b` run is bit-identical to the unrestricted run
+//! up through its `b`-th deviation and canonical afterwards — so the
+//! shrinker can binary-search the smallest deviation prefix that still
+//! reproduces the failure. The result is what gets pasted into a corpus
+//! seed note: "seed S, ordering O, fails with N deviation(s)".
+
+use super::{run_engine_path, run_stream_path, Decision, FuzzConfig, PathRun};
+use std::fmt::Write as _;
+
+/// Which execution path a failure came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailingRun {
+    Engine,
+    Stream,
+}
+
+impl FailingRun {
+    pub fn name(self) -> &'static str {
+        match self {
+            FailingRun::Engine => "engine",
+            FailingRun::Stream => "stream",
+        }
+    }
+}
+
+/// A shrunk reproducer: the failing (seed, ordering, path) plus the
+/// smallest verified-failing deviation budget and its decision log.
+pub struct ShrinkResult {
+    pub seed: u64,
+    pub ordering: usize,
+    pub path: FailingRun,
+    /// Deviations the unrestricted failing run made.
+    pub full_deviations: u64,
+    /// Smallest verified-failing deviation budget found. Replay with
+    /// `OrderSeam::with_budget(seam_seed, Some(minimal_budget))`.
+    pub minimal_budget: u64,
+    /// Failure message of the minimal run.
+    pub failure: String,
+    /// Decision log of the minimal run.
+    pub decisions: Vec<Decision>,
+    /// Deterministic human-readable transcript of the shrink.
+    pub log: String,
+}
+
+fn run_path(path: FailingRun, seed: u64, ordering: usize, budget: Option<u64>) -> PathRun {
+    match path {
+        FailingRun::Engine => run_engine_path(seed, ordering, budget),
+        FailingRun::Stream => run_stream_path(seed, ordering, budget),
+    }
+}
+
+/// Re-scan `seed` for a failure and shrink it. Returns `None` when every
+/// ordering of every path passes (nothing to shrink).
+///
+/// The search keeps the classic invariant "`hi` is a verified-failing
+/// budget": failures need not be monotone in the budget (a shorter
+/// deviation prefix can dodge the bug), so the result is a *verified*
+/// small reproducer, not necessarily the global minimum.
+pub fn shrink_seed(seed: u64, cfg: &FuzzConfig) -> Option<ShrinkResult> {
+    let orderings = cfg.orderings.max(1);
+    let mut found: Option<(FailingRun, usize, PathRun)> = None;
+    'scan: for o in 0..orderings {
+        let budget = super::ordering_budget(cfg, o);
+        for path in [FailingRun::Engine, FailingRun::Stream] {
+            let run = run_path(path, seed, o, budget);
+            if run.failure.is_some() {
+                found = Some((path, o, run));
+                break 'scan;
+            }
+        }
+    }
+    let (path, ordering, full) = found?;
+    let full_deviations = full.deviations;
+
+    let mut log = String::new();
+    let _ = writeln!(
+        log,
+        "shrink seed {seed}: {} ordering {ordering} fails with {full_deviations} deviation(s)",
+        path.name()
+    );
+    let _ = writeln!(
+        log,
+        "  full failure: {}",
+        full.failure.as_deref().unwrap_or("<none>")
+    );
+
+    // Outcome of the current best (smallest verified-failing) budget.
+    let mut best = (
+        full.failure.clone().unwrap_or_default(),
+        full.decisions.clone(),
+    );
+    let mut lo = 0u64;
+    let mut hi = full_deviations;
+    // An exact-budget replay is bit-identical to the unrestricted run by
+    // construction; verify rather than assume.
+    match run_path(path, seed, ordering, Some(hi)).failure {
+        Some(f) => {
+            best.0 = f;
+        }
+        None => {
+            let _ = writeln!(
+                log,
+                "  WARNING: exact-budget replay passed; reporting the unrestricted run"
+            );
+            lo = hi;
+        }
+    }
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        let run = run_path(path, seed, ordering, Some(mid));
+        match run.failure {
+            Some(f) => {
+                let _ = writeln!(log, "  budget {mid}: FAIL ({f})");
+                best = (f, run.decisions);
+                hi = mid;
+            }
+            None => {
+                let _ = writeln!(log, "  budget {mid}: ok");
+                lo = mid + 1;
+            }
+        }
+    }
+    let _ = writeln!(log, "  minimal verified budget: {hi}");
+    for d in &best.1 {
+        let _ = writeln!(
+            log,
+            "  decision {} site={} n={}",
+            d.class.name(),
+            d.site,
+            d.n
+        );
+    }
+    Some(ShrinkResult {
+        seed,
+        ordering,
+        path,
+        full_deviations,
+        minimal_budget: hi,
+        failure: best.0,
+        decisions: best.1,
+        log,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_seeds_do_not_shrink() {
+        let cfg = FuzzConfig::default();
+        assert!(shrink_seed(0, &cfg).is_none());
+        assert!(shrink_seed(1, &cfg).is_none());
+    }
+}

@@ -34,6 +34,7 @@
 //! `prop_policy_equiv` and `integration_sim_equiv` suites.
 
 pub mod autotune;
+pub mod fuzz;
 pub mod policy;
 pub mod ranks;
 #[doc(hidden)]

@@ -814,6 +814,252 @@ impl<'a> SchedState<'a> {
         entries.sort_by(|a, b| b.cmp(a));
         entries.into_iter().map(|e| e.comp).collect()
     }
+
+    // ------------------------------------------------- ambiguity choice lists
+    //
+    // The concurrency fuzzer's instrumentation seam: the scheduler's
+    // tie-break points surfaced as *explicit choice lists*. Each returns
+    // every frontier component tied bitwise at the relevant head key, in
+    // entry-seq (FIFO) order — the deterministic winner is element 0, and
+    // any other element is a same-instant ordering the event loop could
+    // have produced had the tied components entered the frontier in a
+    // different order. `sched::fuzz` permutes frontier-entry batches and
+    // uses these lists to prove the permutation actually moved a tie.
+
+    /// Every frontier component tied bitwise with [`SchedState::rank_head`]
+    /// (rank-order dispatch ties), FIFO order. Empty iff the frontier is.
+    /// Peek-only: the frontier is left untouched.
+    pub fn rank_head_ties(&mut self) -> Vec<usize> {
+        let mut best: Option<RankEntry> = None;
+        for t in 0..NTYPES {
+            if let Some(e) = self.rank_peek(t) {
+                if best.map(|b| e > b).unwrap_or(true) {
+                    best = Some(e);
+                }
+            }
+        }
+        let Some(head) = best else {
+            return Vec::new();
+        };
+        let mut tied: Vec<RankEntry> = Vec::new();
+        for t in 0..NTYPES {
+            let first = tied.len();
+            while let Some(e) = self.rank_peek(t) {
+                if e.rank.total_cmp(&head.rank).is_ne() {
+                    break;
+                }
+                self.rank_heap[t].pop();
+                tied.push(e);
+            }
+            for e in &tied[first..] {
+                self.rank_heap[t].push(*e);
+            }
+        }
+        tied.sort_by_key(|e| e.seq);
+        tied.into_iter().map(|e| e.comp).collect()
+    }
+
+    /// Every frontier component tied bitwise at the urgency head's key
+    /// (minimum finite deadline, or — when no finite deadline is in scope —
+    /// the fallback heaps' (priority, rank) head), FIFO order. These are the
+    /// EDF dispatch ties the select-time laxity/priority/frontier-order
+    /// tie-break resolves; permuting their frontier-entry order permutes the
+    /// final `seq` criterion. Peek-only.
+    pub fn urgency_head_ties(&mut self, require_available: bool) -> Vec<usize> {
+        let mut min_dl: Option<f64> = None;
+        for t in 0..NTYPES {
+            if require_available && self.avail_per_type[t] == 0 {
+                continue;
+            }
+            if let Some(e) = self.dl_peek(t) {
+                min_dl = Some(match min_dl {
+                    None => e.deadline,
+                    Some(m) if e.deadline.total_cmp(&m).is_lt() => e.deadline,
+                    Some(m) => m,
+                });
+            }
+        }
+        if let Some(d0) = min_dl {
+            let mut tied: Vec<DlEntry> = Vec::new();
+            for t in 0..NTYPES {
+                if require_available && self.avail_per_type[t] == 0 {
+                    continue;
+                }
+                let first = tied.len();
+                while let Some(e) = self.dl_peek(t) {
+                    if e.deadline.total_cmp(&d0).is_ne() {
+                        break;
+                    }
+                    self.dl_heap[t].pop();
+                    tied.push(e);
+                }
+                for e in &tied[first..] {
+                    self.dl_heap[t].push(*e);
+                }
+            }
+            tied.sort_by_key(|e| e.seq);
+            return tied.into_iter().map(|e| e.comp).collect();
+        }
+        let mut best: Option<FbEntry> = None;
+        for t in 0..NTYPES {
+            if require_available && self.avail_per_type[t] == 0 {
+                continue;
+            }
+            if let Some(e) = self.fb_peek(t) {
+                if best.map(|b| e > b).unwrap_or(true) {
+                    best = Some(e);
+                }
+            }
+        }
+        let Some(head) = best else {
+            return Vec::new();
+        };
+        let mut tied: Vec<FbEntry> = Vec::new();
+        for t in 0..NTYPES {
+            if require_available && self.avail_per_type[t] == 0 {
+                continue;
+            }
+            let first = tied.len();
+            while let Some(e) = self.fb_peek(t) {
+                if e.priority != head.priority || e.rank.total_cmp(&head.rank).is_ne() {
+                    break;
+                }
+                self.fb_heap[t].pop();
+                tied.push(e);
+            }
+            for e in &tied[first..] {
+                self.fb_heap[t].push(*e);
+            }
+        }
+        tied.sort_by_key(|e| e.seq);
+        tied.into_iter().map(|e| e.comp).collect()
+    }
+
+    /// The frontier-entry sequence number of `comp`, if it is currently in
+    /// the frontier. Exposes the FIFO tier order for rebuild-equivalence
+    /// oracles (a rebuilt state re-enters components in ascending entry
+    /// seq to land in the same relative order).
+    pub fn entry_seq_of(&self, comp: usize) -> Option<u64> {
+        self.in_frontier[comp].then_some(self.entry_seq[comp])
+    }
+
+    /// Cross-check every redundant index against its ground truth — the
+    /// fuzzer's bookkeeping oracle, cheap enough to run after every event
+    /// in a fuzz run (O(components + heap entries + devices)). Verifies:
+    /// frontier/meta counters vs the membership bitset, the available set's
+    /// vec/bitset/per-type-count agreement, tenancy vs availability, and
+    /// that every live frontier component has exactly one live entry in the
+    /// rank heaps and exactly one in the deadline-or-fallback heaps, in the
+    /// right bucket with bit-identical keys.
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        let ncomp = self.in_frontier.len();
+        let live = self.in_frontier.iter().filter(|&&f| f).count();
+        if live != self.frontier_len {
+            return Err(format!(
+                "frontier_len {} != {} live in_frontier bits",
+                self.frontier_len, live
+            ));
+        }
+        let meta = (0..ncomp)
+            .filter(|&c| self.in_frontier[c] && self.carries_meta(c))
+            .count();
+        if meta != self.meta_carriers {
+            return Err(format!(
+                "meta_carriers {} != {} frontier metadata carriers",
+                self.meta_carriers, meta
+            ));
+        }
+        let ndev = self.platform.devices.len();
+        let mut per_type = [0usize; NTYPES];
+        for d in 0..ndev {
+            let in_vec = self.available.iter().filter(|&&x| x == d).count();
+            if in_vec != usize::from(self.dev_available[d]) {
+                return Err(format!(
+                    "device {d}: bitset says {}, available vec holds {in_vec} entries",
+                    self.dev_available[d]
+                ));
+            }
+            if self.dev_available[d] {
+                per_type[ti(self.platform.device(d).dtype)] += 1;
+                if self.platform.device(d).num_queues == 0 {
+                    return Err(format!("device {d} available with no command queues"));
+                }
+                if self.tenants[d] >= self.tenancy {
+                    return Err(format!(
+                        "device {d} available at tenancy cap ({} >= {})",
+                        self.tenants[d], self.tenancy
+                    ));
+                }
+            }
+        }
+        if per_type != self.avail_per_type {
+            return Err(format!(
+                "avail_per_type {:?} != recount {:?}",
+                self.avail_per_type, per_type
+            ));
+        }
+        let mut rank_entries = vec![0usize; ncomp];
+        let mut urgency_entries = vec![0usize; ncomp];
+        for t in 0..NTYPES {
+            for e in self.rank_heap[t].iter() {
+                if !self.in_frontier[e.comp] || self.entry_seq[e.comp] != e.seq {
+                    continue;
+                }
+                if t != ti(self.comp_pref[e.comp]) {
+                    return Err(format!("comp {} rank entry in wrong bucket {t}", e.comp));
+                }
+                if e.rank.to_bits() != self.comp_rank[e.comp].to_bits() {
+                    return Err(format!("comp {} rank entry key drifted", e.comp));
+                }
+                rank_entries[e.comp] += 1;
+            }
+            for e in self.dl_heap[t].iter() {
+                if !self.in_frontier[e.comp] || self.entry_seq[e.comp] != e.seq {
+                    continue;
+                }
+                if t != ti(self.comp_pref[e.comp]) {
+                    return Err(format!("comp {} deadline entry in wrong bucket {t}", e.comp));
+                }
+                if e.deadline.to_bits() != self.deadline[e.comp].to_bits()
+                    || !e.deadline.is_finite()
+                {
+                    return Err(format!("comp {} deadline entry key drifted", e.comp));
+                }
+                urgency_entries[e.comp] += 1;
+            }
+            for e in self.fb_heap[t].iter() {
+                if !self.in_frontier[e.comp] || self.entry_seq[e.comp] != e.seq {
+                    continue;
+                }
+                if t != ti(self.comp_pref[e.comp]) {
+                    return Err(format!("comp {} fallback entry in wrong bucket {t}", e.comp));
+                }
+                if self.deadline[e.comp].is_finite()
+                    || e.priority != self.priority[e.comp]
+                    || e.rank.to_bits() != self.comp_rank[e.comp].to_bits()
+                {
+                    return Err(format!("comp {} fallback entry key drifted", e.comp));
+                }
+                urgency_entries[e.comp] += 1;
+            }
+        }
+        for c in 0..ncomp {
+            let want = usize::from(self.in_frontier[c]);
+            if rank_entries[c] != want {
+                return Err(format!(
+                    "comp {c}: {} live rank entries, expected {want}",
+                    rank_entries[c]
+                ));
+            }
+            if urgency_entries[c] != want {
+                return Err(format!(
+                    "comp {c}: {} live urgency entries, expected {want}",
+                    urgency_entries[c]
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -1073,5 +1319,72 @@ mod tests {
         assert_eq!(st.heap_entries(), st.frontier_len());
         assert_eq!(st.frontier_ranked(), before);
         assert_eq!(st.rank_head(), Some(7), "highest-rank live slot survives");
+    }
+
+    /// The choice lists must surface every bitwise-tied head candidate in
+    /// FIFO order without consuming the frontier.
+    #[test]
+    fn choice_lists_expose_ties_in_fifo_order() {
+        let platform = Platform::paper_testbed(3, 1);
+        let ndev = platform.devices.len();
+        let mut st = slot_state(&platform, 4);
+        // Three rank-tied slots (two GPU, one CPU) and one strictly lower.
+        st.set_slot(0, 3.0, DeviceType::Gpu, f64::INFINITY, 0, &vec![1.0; ndev]);
+        st.set_slot(1, 3.0, DeviceType::Cpu, f64::INFINITY, 0, &vec![1.0; ndev]);
+        st.set_slot(2, 3.0, DeviceType::Gpu, f64::INFINITY, 0, &vec![1.0; ndev]);
+        st.set_slot(3, 1.0, DeviceType::Gpu, f64::INFINITY, 0, &vec![1.0; ndev]);
+        st.on_ready(2);
+        st.on_ready(0);
+        st.on_ready(1);
+        st.on_ready(3);
+        assert_eq!(st.rank_head_ties(), vec![2, 0, 1], "entry order, cross-bucket");
+        assert_eq!(st.rank_head_ties(), vec![2, 0, 1], "peek must be idempotent");
+        assert_eq!(st.frontier_len(), 4);
+        assert_eq!(st.rank_head(), Some(2));
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn urgency_ties_cover_deadline_and_fallback_heads() {
+        let platform = Platform::paper_testbed(3, 1);
+        let ndev = platform.devices.len();
+        let mut st = slot_state(&platform, 4);
+        // Bitwise-equal deadlines on slots 1 and 2; slot 0 deadline-free.
+        st.set_slot(0, 2.0, DeviceType::Gpu, f64::INFINITY, 5, &vec![1.0; ndev]);
+        st.set_slot(1, 2.0, DeviceType::Gpu, 0.75, 0, &vec![1.0; ndev]);
+        st.set_slot(2, 2.0, DeviceType::Cpu, 0.75, 0, &vec![1.0; ndev]);
+        st.on_ready(0);
+        st.on_ready(1);
+        st.on_ready(2);
+        assert_eq!(st.urgency_head_ties(false), vec![1, 2]);
+        assert_eq!(st.frontier_len(), 3, "choice list must not consume");
+        st.on_dispatch(1, 0);
+        st.on_dispatch(2, 1);
+        // Only the fallback head remains in scope.
+        assert_eq!(st.urgency_head_ties(false), vec![0]);
+        assert_eq!(st.entry_seq_of(0), Some(0));
+        assert_eq!(st.entry_seq_of(1), None);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn check_invariants_accepts_event_api_states() {
+        let (dag, part) = heads_app(3, 1);
+        let platform = Platform::paper_testbed(3, 1);
+        let n = part.components.len();
+        let mut st = state_for(&dag, &part, &platform, vec![0.5, 0.2, f64::INFINITY], vec![0; n]);
+        st.check_invariants().unwrap();
+        st.on_ready(0);
+        st.on_ready(1);
+        st.on_ready(2);
+        st.check_invariants().unwrap();
+        st.on_dispatch(1, 0);
+        st.check_invariants().unwrap();
+        st.on_preempt(0);
+        st.on_ready(1);
+        st.check_invariants().unwrap();
+        st.on_dispatch(0, 0);
+        st.on_complete(0);
+        st.check_invariants().unwrap();
     }
 }

@@ -48,6 +48,7 @@ use crate::error::{Error, Result};
 use crate::graph::{Dag, KernelId, Partition};
 use crate::platform::{DeviceId, Platform};
 use crate::queue::{setup_cq, CmdId, CommandKind, CommandQueues};
+use crate::sched::fuzz::{Ambiguity, OrderSeam};
 use crate::sched::{Policy, ResidentTenant, SchedState};
 use crate::trace::{Lane, Span, Trace};
 use std::cmp::Reverse;
@@ -239,7 +240,7 @@ pub fn simulate(
     policy: &mut dyn Policy,
     cfg: &SimConfig,
 ) -> Result<SimResult> {
-    Engine::new(dag, partition, platform, cost, policy, cfg, None)?.run()
+    Engine::new(dag, partition, platform, cost, policy, cfg, None, None)?.run()
 }
 
 /// Multi-DAG serving entry point: like [`simulate`], but component `c` may
@@ -280,6 +281,41 @@ pub fn simulate_served(
     cfg: &SimConfig,
     meta: &[CompMeta],
 ) -> Result<SimResult> {
+    validate_meta(partition, meta)?;
+    Engine::new(dag, partition, platform, cost, policy, cfg, Some(meta), None)?.run()
+}
+
+/// Concurrency-fuzzer entry point ([`crate::sched::fuzz`]): exactly
+/// [`simulate_served`], but every same-instant ordering ambiguity in the
+/// event loop is resolved by `seam` instead of the canonical fixed order.
+/// Coverage and the deviation log accumulate in `seam`. Not a serving API.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_served_fuzzed(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &SimConfig,
+    meta: &[CompMeta],
+    seam: &mut OrderSeam,
+) -> Result<SimResult> {
+    validate_meta(partition, meta)?;
+    Engine::new(
+        dag,
+        partition,
+        platform,
+        cost,
+        policy,
+        cfg,
+        Some(meta),
+        Some(seam),
+    )?
+    .run()
+}
+
+fn validate_meta(partition: &Partition, meta: &[CompMeta]) -> Result<()> {
     if meta.len() != partition.components.len() {
         return Err(Error::Sched(format!(
             "serving metadata for {} components, partition has {}",
@@ -298,7 +334,7 @@ pub fn simulate_served(
             return Err(Error::Sched("invalid deadline NaN".into()));
         }
     }
-    Engine::new(dag, partition, platform, cost, policy, cfg, Some(meta))?.run()
+    Ok(())
 }
 
 struct Engine<'a> {
@@ -376,6 +412,15 @@ struct Engine<'a> {
     scratch_us: Vec<f64>,
     scratch_speeds: Vec<f64>,
     scratch_finished: Vec<usize>,
+    scratch_ready: Vec<usize>,
+
+    /// Concurrency-fuzzer seam ([`crate::sched::fuzz`]): when installed,
+    /// every same-instant ambiguity — simultaneous completions, due-event
+    /// batches, frontier-entry batches, the preemption victim list, victim
+    /// re-entry timing — is routed through it as an explicit ordering
+    /// choice. `None` (every production entry point) keeps the canonical
+    /// deterministic order, byte-identically to the un-instrumented loop.
+    seam: Option<&'a mut OrderSeam>,
 }
 
 pub(crate) const EPS: f64 = 1e-12;
@@ -390,6 +435,7 @@ impl<'a> Engine<'a> {
         policy: &'a mut dyn Policy,
         cfg: &'a SimConfig,
         meta: Option<&[CompMeta]>,
+        mut seam: Option<&'a mut OrderSeam>,
     ) -> Result<Self> {
         let ncomp = partition.components.len();
         let nk = dag.num_kernels();
@@ -461,11 +507,18 @@ impl<'a> Engine<'a> {
         )?;
         // Initially ready components enter in ascending id order, which
         // assigns FIFO seqs matching the stable rank sort the pre-indexed
-        // engine applied (equal ranks stay in component-id order).
-        for c in 0..ncomp {
-            if ext_preds_left[c] == 0 && release[c] <= 0.0 {
-                state.on_ready(c);
-            }
+        // engine applied (equal ranks stay in component-id order). Under a
+        // fuzz seam the batch is a DispatchTie ambiguity: requests arriving
+        // "together" have no canonical order on real hardware, and the
+        // entry order decides every bitwise rank/deadline tie downstream.
+        let mut initial: Vec<usize> = (0..ncomp)
+            .filter(|&c| ext_preds_left[c] == 0 && release[c] <= 0.0)
+            .collect();
+        if let Some(s) = seam.as_deref_mut() {
+            s.shuffle(Ambiguity::DispatchTie, &mut initial);
+        }
+        for &c in &initial {
+            state.on_ready(c);
         }
         let ndev = platform.devices.len();
         Ok(Engine {
@@ -513,6 +566,8 @@ impl<'a> Engine<'a> {
             scratch_us: Vec::new(),
             scratch_speeds: Vec::new(),
             scratch_finished: Vec::new(),
+            scratch_ready: Vec::new(),
+            seam,
         })
     }
 
@@ -587,51 +642,77 @@ impl<'a> Engine<'a> {
         // One clock update per phase: every select/preempt in this phase
         // sees the same `now` the former per-call view carried.
         self.state.now = self.now;
+        // Reentry-class deviations park displaced victims here until the
+        // phase's select/preempt loop settles (empty on the canonical
+        // path — victims re-enter the frontier inside `displace`).
+        let mut deferred: Vec<usize> = Vec::new();
         loop {
-            if self.load_dirty {
-                self.refresh_device_load();
-            }
-            if let Some((comp, dev)) = self.policy.select(&mut self.state) {
-                retry_after_preempt = false;
-                self.dispatch(comp, dev);
-                continue;
-            }
-            if retry_after_preempt
-                || preempt_budget == 0
-                || self.state.frontier_is_empty()
-                || !self.policy.can_preempt()
-            {
-                break;
-            }
-            // Candidate victims: resident components with commands still
-            // outstanding. A component that only awaits its completion
-            // callbacks frees no compute when displaced — its tenant slot
-            // returns within ~callback_latency anyway, while a displacement
-            // would force a full transfer re-stage. `resident_comps` is
-            // maintained sorted ascending, matching the component order the
-            // former full `comp_active_disp` scan produced.
-            let resident: Vec<ResidentTenant> = self
-                .resident_comps
-                .iter()
-                .filter_map(|&c| {
-                    self.comp_active_disp[c]
-                        .filter(|&d| self.dispatches[d].cmds_remaining > 0)
-                        .map(|d| ResidentTenant {
-                            comp: c,
-                            device: self.dispatches[d].device,
-                        })
-                })
-                .collect();
-            if resident.is_empty() {
-                break;
-            }
-            match self.policy.preempt(&mut self.state, &resident) {
-                Some(victim) if self.displace(victim) => {
-                    preempt_budget -= 1;
-                    retry_after_preempt = true;
+            loop {
+                if self.load_dirty {
+                    self.refresh_device_load();
                 }
-                _ => break,
+                if let Some((comp, dev)) = self.policy.select(&mut self.state) {
+                    retry_after_preempt = false;
+                    self.dispatch(comp, dev);
+                    continue;
+                }
+                if retry_after_preempt
+                    || preempt_budget == 0
+                    || self.state.frontier_is_empty()
+                    || !self.policy.can_preempt()
+                {
+                    break;
+                }
+                // Candidate victims: resident components with commands still
+                // outstanding. A component that only awaits its completion
+                // callbacks frees no compute when displaced — its tenant slot
+                // returns within ~callback_latency anyway, while a displacement
+                // would force a full transfer re-stage. `resident_comps` is
+                // maintained sorted ascending, matching the component order the
+                // former full `comp_active_disp` scan produced; under a fuzz
+                // seam the list order is a PreemptRace ambiguity (it decides
+                // which of several equally urgent victims is displaced).
+                let mut resident: Vec<ResidentTenant> = self
+                    .resident_comps
+                    .iter()
+                    .filter_map(|&c| {
+                        self.comp_active_disp[c]
+                            .filter(|&d| self.dispatches[d].cmds_remaining > 0)
+                            .map(|d| ResidentTenant {
+                                comp: c,
+                                device: self.dispatches[d].device,
+                            })
+                    })
+                    .collect();
+                if resident.is_empty() {
+                    break;
+                }
+                if let Some(s) = self.seam.as_deref_mut() {
+                    s.shuffle(Ambiguity::PreemptRace, &mut resident);
+                }
+                match self.policy.preempt(&mut self.state, &resident) {
+                    Some(victim) if self.displace(victim, &mut deferred) => {
+                        preempt_budget -= 1;
+                        retry_after_preempt = true;
+                    }
+                    _ => break,
+                }
             }
+            if deferred.is_empty() {
+                break;
+            }
+            // Deferred victim re-entries: apply as a (permutable) frontier
+            // batch, then give the policy another look at the refreshed
+            // frontier. Terminates: refills require displacements, and each
+            // displacement spends preemption budget.
+            let mut batch = std::mem::take(&mut deferred);
+            if let Some(s) = self.seam.as_deref_mut() {
+                s.shuffle(Ambiguity::DispatchTie, &mut batch);
+            }
+            for c in batch {
+                self.enter_frontier(c);
+            }
+            retry_after_preempt = false;
         }
     }
 
@@ -713,8 +794,11 @@ impl<'a> Engine<'a> {
     /// commands are cancelled, the tenant slot is returned, and the
     /// component re-enters the frontier for a later re-dispatch (which
     /// re-stages its transfers — the preemption penalty). Returns false if
-    /// `victim` is not currently resident.
-    fn displace(&mut self, victim: usize) -> bool {
+    /// `victim` is not currently resident. Under a fuzz seam the victim's
+    /// frontier re-entry may be deferred into `deferred` (Reentry
+    /// ambiguity: immediate vs phase-end re-entry); the canonical path
+    /// always re-enters immediately.
+    fn displace(&mut self, victim: usize, deferred: &mut Vec<usize>) -> bool {
         let Some(di) = self.comp_active_disp.get(victim).copied().flatten() else {
             return false;
         };
@@ -779,7 +863,15 @@ impl<'a> Engine<'a> {
             cmd: None,
             kernel: None,
         });
-        self.enter_frontier(victim);
+        let defer = match self.seam.as_deref_mut() {
+            Some(s) => s.flip(Ambiguity::Reentry),
+            None => false,
+        };
+        if defer {
+            deferred.push(victim);
+        } else {
+            self.enter_frontier(victim);
+        }
         true
     }
 
@@ -984,7 +1076,13 @@ impl<'a> Engine<'a> {
             // case the release event re-examines them. (Index loop: the
             // former per-callback `unblocks` clone is gone; the list is
             // never mutated after construction, but the &mut self calls in
-            // the body forbid holding an iterator over it.)
+            // the body forbid holding an iterator over it.) Frontier entry
+            // is batched after the dependency decrements: the targets are
+            // distinct and entries push no events, so the canonical order
+            // is unchanged — and the batch is the unblock-time DispatchTie
+            // ambiguity a fuzz seam permutes.
+            let mut newly_ready = std::mem::take(&mut self.scratch_ready);
+            newly_ready.clear();
             #[allow(clippy::needless_range_loop)]
             for u in 0..self.unblocks[kernel].len() {
                 let uc = self.unblocks[kernel][u];
@@ -994,10 +1092,18 @@ impl<'a> Engine<'a> {
                     if self.release[uc] > self.now + EPS {
                         self.push_ev(self.release[uc], EvKind::Release { comp: uc });
                     } else {
-                        self.enter_frontier(uc);
+                        newly_ready.push(uc);
                     }
                 }
             }
+            if let Some(s) = self.seam.as_deref_mut() {
+                s.shuffle(Ambiguity::DispatchTie, &mut newly_ready);
+            }
+            #[allow(clippy::needless_range_loop)]
+            for u in 0..newly_ready.len() {
+                self.enter_frontier(newly_ready[u]);
+            }
+            self.scratch_ready = newly_ready;
         }
         if self.dispatches[di].cancelled {
             // Callback of a displaced dispatch: the tenant slot was already
@@ -1032,6 +1138,75 @@ impl<'a> Engine<'a> {
             return;
         }
         self.state.on_ready(comp);
+    }
+
+    /// Fuzz-path event drain: collect the whole batch of events due at this
+    /// instant and process it in a seam-permuted inter-dispatch order (the
+    /// Callback ambiguity class). Events belonging to one dispatch keep
+    /// their relative order — a command queue cannot race itself — while
+    /// events of different dispatches (and releases) permute freely. Events
+    /// the processing schedules due at the same instant form the next
+    /// sub-batch, as the canonical drain would pick them up after the
+    /// already-queued ones.
+    fn drain_due_events_seamed(&mut self) {
+        loop {
+            let mut batch: Vec<Ev> = Vec::new();
+            while let Some(Reverse(e)) = self.heap.peek() {
+                if e.t > self.now + EPS {
+                    break;
+                }
+                let Reverse(e) = self.heap.pop().unwrap();
+                batch.push(e);
+            }
+            if batch.is_empty() {
+                return;
+            }
+            let keys: Vec<Option<usize>> = batch
+                .iter()
+                .map(|e| match e.kind {
+                    EvKind::DispatchReady(di) => Some(di),
+                    EvKind::TransferDone { disp, .. } => Some(disp),
+                    EvKind::Callback { disp, .. } => Some(disp),
+                    // At most one CopyDone per engine per batch (the next
+                    // transfer's completion is only scheduled once this one
+                    // is processed), so `current` is this event's dispatch.
+                    EvKind::CopyDone { engine } => {
+                        self.copy_engines[engine].current.map(|(di, _)| di)
+                    }
+                    EvKind::Release { .. } => None,
+                })
+                .collect();
+            let mut order: Vec<usize> = (0..batch.len()).collect();
+            if let Some(s) = self.seam.as_deref_mut() {
+                s.shuffle_grouped(Ambiguity::Callback, &mut order, |&i| keys[i]);
+            }
+            for &bi in &order {
+                match batch[bi].kind {
+                    EvKind::DispatchReady(di) => {
+                        if !self.dispatches[di].cancelled
+                            && self.dispatches[di].cmds_remaining > 0
+                        {
+                            self.active_insert(di);
+                        }
+                    }
+                    EvKind::TransferDone { disp, cmd } => self.command_done(disp, cmd),
+                    EvKind::CopyDone { engine } => {
+                        let (di, cmd) = self.copy_engines[engine]
+                            .current
+                            .take()
+                            .expect("engine busy");
+                        self.command_done(di, cmd);
+                        self.pump_copy_engine(engine);
+                    }
+                    EvKind::Callback { disp, kernel } => self.handle_callback(disp, kernel),
+                    EvKind::Release { comp } => {
+                        if self.ext_preds_left[comp] == 0 {
+                            self.enter_frontier(comp);
+                        }
+                    }
+                }
+            }
+        }
     }
 
     // ------------------------------------------------------------- kernels
@@ -1130,59 +1305,98 @@ impl<'a> Engine<'a> {
                 }
             }
             self.scratch_finished.sort_unstable_by(|a, b| b.cmp(a));
-            // Index loop: command_done below needs &mut self, so no
-            // iterator over the scratch buffer may be live.
-            #[allow(clippy::needless_range_loop)]
-            for fi in 0..self.scratch_finished.len() {
-                let i = self.scratch_finished[fi];
-                let r = self.runs.swap_remove(i);
-                self.runs_per_dev[r.device] -= 1;
-                self.load_dirty = true;
-                self.kernel_frac[r.kernel] = 1.0;
-                let name = &self.dag.kernels[r.kernel].name;
-                self.trace.push(Span {
-                    label: format!("{name}{}", r.kernel),
-                    lane: Lane::Device {
-                        dev: r.device,
-                        slot: r.queue,
-                    },
-                    start: r.started,
-                    end: self.now,
-                    cmd: Some(r.cmd),
-                    kernel: Some(r.kernel),
-                });
-                self.command_done(r.disp, r.cmd);
+            if self.seam.is_some() {
+                // Fuzz path: simultaneous completions are a Completion
+                // ambiguity. Remove every finished run first (canonical
+                // descending order keeps swap_remove targets valid), then
+                // retire in a permuted order.
+                let mut finished: Vec<Run> = Vec::with_capacity(self.scratch_finished.len());
+                for fi in 0..self.scratch_finished.len() {
+                    let i = self.scratch_finished[fi];
+                    finished.push(self.runs.swap_remove(i));
+                }
+                let mut order: Vec<usize> = (0..finished.len()).collect();
+                if let Some(s) = self.seam.as_deref_mut() {
+                    s.shuffle(Ambiguity::Completion, &mut order);
+                }
+                for &fi in &order {
+                    let (device, kernel, queue, started, cmd, disp) = {
+                        let r = &finished[fi];
+                        (r.device, r.kernel, r.queue, r.started, r.cmd, r.disp)
+                    };
+                    self.runs_per_dev[device] -= 1;
+                    self.load_dirty = true;
+                    self.kernel_frac[kernel] = 1.0;
+                    let name = &self.dag.kernels[kernel].name;
+                    self.trace.push(Span {
+                        label: format!("{name}{kernel}"),
+                        lane: Lane::Device { dev: device, slot: queue },
+                        start: started,
+                        end: self.now,
+                        cmd: Some(cmd),
+                        kernel: Some(kernel),
+                    });
+                    self.command_done(disp, cmd);
+                }
+            } else {
+                // Index loop: command_done below needs &mut self, so no
+                // iterator over the scratch buffer may be live.
+                #[allow(clippy::needless_range_loop)]
+                for fi in 0..self.scratch_finished.len() {
+                    let i = self.scratch_finished[fi];
+                    let r = self.runs.swap_remove(i);
+                    self.runs_per_dev[r.device] -= 1;
+                    self.load_dirty = true;
+                    self.kernel_frac[r.kernel] = 1.0;
+                    let name = &self.dag.kernels[r.kernel].name;
+                    self.trace.push(Span {
+                        label: format!("{name}{}", r.kernel),
+                        lane: Lane::Device {
+                            dev: r.device,
+                            slot: r.queue,
+                        },
+                        start: r.started,
+                        end: self.now,
+                        cmd: Some(r.cmd),
+                        kernel: Some(r.kernel),
+                    });
+                    self.command_done(r.disp, r.cmd);
+                }
             }
 
-            // Handle all heap events due now.
-            while let Some(Reverse(e)) = self.heap.peek() {
-                if e.t > self.now + EPS {
-                    break;
-                }
-                let Reverse(e) = self.heap.pop().unwrap();
-                match e.kind {
-                    EvKind::DispatchReady(di) => {
-                        // Joins the live index unless it was displaced (or
-                        // somehow drained) before its setup completed.
-                        if !self.dispatches[di].cancelled
-                            && self.dispatches[di].cmds_remaining > 0
-                        {
-                            self.active_insert(di);
+            if self.seam.is_some() {
+                self.drain_due_events_seamed();
+            } else {
+                // Handle all heap events due now.
+                while let Some(Reverse(e)) = self.heap.peek() {
+                    if e.t > self.now + EPS {
+                        break;
+                    }
+                    let Reverse(e) = self.heap.pop().unwrap();
+                    match e.kind {
+                        EvKind::DispatchReady(di) => {
+                            // Joins the live index unless it was displaced (or
+                            // somehow drained) before its setup completed.
+                            if !self.dispatches[di].cancelled
+                                && self.dispatches[di].cmds_remaining > 0
+                            {
+                                self.active_insert(di);
+                            }
                         }
-                    }
-                    EvKind::TransferDone { disp, cmd } => self.command_done(disp, cmd),
-                    EvKind::CopyDone { engine } => {
-                        let (di, cmd) = self.copy_engines[engine]
-                            .current
-                            .take()
-                            .expect("engine busy");
-                        self.command_done(di, cmd);
-                        self.pump_copy_engine(engine);
-                    }
-                    EvKind::Callback { disp, kernel } => self.handle_callback(disp, kernel),
-                    EvKind::Release { comp } => {
-                        if self.ext_preds_left[comp] == 0 {
-                            self.enter_frontier(comp);
+                        EvKind::TransferDone { disp, cmd } => self.command_done(disp, cmd),
+                        EvKind::CopyDone { engine } => {
+                            let (di, cmd) = self.copy_engines[engine]
+                                .current
+                                .take()
+                                .expect("engine busy");
+                            self.command_done(di, cmd);
+                            self.pump_copy_engine(engine);
+                        }
+                        EvKind::Callback { disp, kernel } => self.handle_callback(disp, kernel),
+                        EvKind::Release { comp } => {
+                            if self.ext_preds_left[comp] == 0 {
+                                self.enter_frontier(comp);
+                            }
                         }
                     }
                 }

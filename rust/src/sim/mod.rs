@@ -28,5 +28,7 @@ pub mod engine;
 pub mod reference;
 pub mod stream;
 
+#[doc(hidden)]
+pub use engine::simulate_served_fuzzed;
 pub use engine::{simulate, simulate_released, simulate_served, CompMeta, SimConfig, SimResult};
 pub use stream::{AdmitUnit, FinishedRequest, MemberSpec, PumpStop, StreamSim, Template};

@@ -48,6 +48,7 @@ use crate::error::{Error, Result};
 use crate::graph::{Dag, KernelId, Partition};
 use crate::platform::{DeviceId, DeviceType, Platform};
 use crate::queue::{setup_cq, CmdId, CommandKind};
+use crate::sched::fuzz::{Ambiguity, OrderSeam};
 use crate::sched::{component_ranks, Policy, ResidentTenant, SchedState};
 use crate::serve::MergedApp;
 use std::cmp::Reverse;
@@ -250,6 +251,14 @@ pub struct StreamSim<'a> {
     scratch_us: Vec<f64>,
     scratch_speeds: Vec<f64>,
     scratch_finished: Vec<usize>,
+    scratch_ready: Vec<usize>,
+
+    /// Fuzz-only same-instant order permuter ([`crate::sched::fuzz`]),
+    /// installed by the fuzz driver. `None` in production: every seam site
+    /// then takes the canonical branch, byte-identical to the pre-seam
+    /// code. Owned (not borrowed like the engine's) so the long-lived
+    /// simulator stays free of extra lifetimes.
+    seam: Option<OrderSeam>,
 
     finished: Vec<FinishedRequest>,
     events_total: u64,
@@ -320,6 +329,8 @@ impl<'a> StreamSim<'a> {
             scratch_us: Vec::new(),
             scratch_speeds: Vec::new(),
             scratch_finished: Vec::new(),
+            scratch_ready: Vec::new(),
+            seam: None,
             finished: Vec::new(),
             events_total: 0,
             peak_live_comps: 0,
@@ -371,6 +382,20 @@ impl<'a> StreamSim<'a> {
     /// the internal buffer empty with its capacity retained.
     pub fn drain_finished_into(&mut self, out: &mut Vec<FinishedRequest>) {
         out.append(&mut self.finished);
+    }
+
+    /// Install a same-instant order permuter for fuzzing (see
+    /// [`crate::sched::fuzz`]). Production code never calls this.
+    #[doc(hidden)]
+    pub fn install_seam(&mut self, seam: OrderSeam) {
+        self.seam = Some(seam);
+    }
+
+    /// Remove the installed permuter, returning it so the fuzz driver can
+    /// read its coverage counters and decision log.
+    #[doc(hidden)]
+    pub fn take_seam(&mut self) -> Option<OrderSeam> {
+        self.seam.take()
     }
 
     // ------------------------------------------------------------ admission
@@ -567,6 +592,7 @@ impl<'a> StreamSim<'a> {
         // events. Under backpressure (release already passed) they enter
         // the frontier right away, mirroring the engine's late-release
         // unblock branch.
+        let mut immediate: Vec<usize> = Vec::new();
         for c in 0..ncomp {
             if self.unit(uid).ext_preds_left[c] != 0 {
                 continue;
@@ -575,9 +601,17 @@ impl<'a> StreamSim<'a> {
             if release > self.now + EPS {
                 self.push_ev(release, EvKind::Release { comp: slot });
             } else {
-                self.enter_frontier(slot);
-                self.need_phase = true;
+                immediate.push(slot);
             }
+        }
+        // A backpressured unit's roots all become ready at this same
+        // instant — a dispatch-tie ambiguity under fuzzing.
+        if let Some(s) = self.seam.as_mut() {
+            s.shuffle(Ambiguity::DispatchTie, &mut immediate);
+        }
+        for &slot in &immediate {
+            self.enter_frontier(slot);
+            self.need_phase = true;
         }
 
         // Bounded-memory upkeep: lazily deleted scheduler-heap entries may
@@ -722,45 +756,68 @@ impl<'a> StreamSim<'a> {
         let mut preempt_budget = self.live_comps.max(8);
         let mut retry_after_preempt = false;
         self.state.now = self.now;
+        let mut deferred: Vec<usize> = Vec::new();
         loop {
-            if self.load_dirty {
-                self.refresh_device_load();
-            }
-            if let Some((slot, dev)) = self.policy.select(&mut self.state) {
-                retry_after_preempt = false;
-                self.dispatch(slot, dev);
-                continue;
-            }
-            if retry_after_preempt
-                || preempt_budget == 0
-                || self.state.frontier_is_empty()
-                || !self.policy.can_preempt()
-            {
-                break;
-            }
-            let resident: Vec<ResidentTenant> = self
-                .resident_slots
-                .iter()
-                .filter_map(|&s| {
-                    let sr = self.slots[s];
-                    self.unit(sr.unit).comp_active_disp[sr.local]
-                        .filter(|&d| self.disp(d).d.cmds_remaining > 0)
-                        .map(|d| ResidentTenant {
-                            comp: s,
-                            device: self.disp(d).d.device,
-                        })
-                })
-                .collect();
-            if resident.is_empty() {
-                break;
-            }
-            match self.policy.preempt(&mut self.state, &resident) {
-                Some(victim) if self.displace(victim) => {
-                    preempt_budget -= 1;
-                    retry_after_preempt = true;
+            loop {
+                if self.load_dirty {
+                    self.refresh_device_load();
                 }
-                _ => break,
+                if let Some((slot, dev)) = self.policy.select(&mut self.state) {
+                    retry_after_preempt = false;
+                    self.dispatch(slot, dev);
+                    continue;
+                }
+                if retry_after_preempt
+                    || preempt_budget == 0
+                    || self.state.frontier_is_empty()
+                    || !self.policy.can_preempt()
+                {
+                    break;
+                }
+                let mut resident: Vec<ResidentTenant> = self
+                    .resident_slots
+                    .iter()
+                    .filter_map(|&s| {
+                        let sr = self.slots[s];
+                        self.unit(sr.unit).comp_active_disp[sr.local]
+                            .filter(|&d| self.disp(d).d.cmds_remaining > 0)
+                            .map(|d| ResidentTenant {
+                                comp: s,
+                                device: self.disp(d).d.device,
+                            })
+                    })
+                    .collect();
+                if resident.is_empty() {
+                    break;
+                }
+                // Which of several equally-preemptable tenants the policy
+                // scans first is an ordering accident — the preempt-race
+                // ambiguity under fuzzing.
+                if let Some(s) = self.seam.as_mut() {
+                    s.shuffle(Ambiguity::PreemptRace, &mut resident);
+                }
+                match self.policy.preempt(&mut self.state, &resident) {
+                    Some(victim) if self.displace(victim, &mut deferred) => {
+                        preempt_budget -= 1;
+                        retry_after_preempt = true;
+                    }
+                    _ => break,
+                }
             }
+            if deferred.is_empty() {
+                break;
+            }
+            // Deferred-reentry victims (fuzz only) join the frontier now,
+            // in a permuted order, and scheduling resumes — a victim whose
+            // frontier re-entry raced the post-preemption dispatch pass.
+            let mut batch = std::mem::take(&mut deferred);
+            if let Some(s) = self.seam.as_mut() {
+                s.shuffle(Ambiguity::DispatchTie, &mut batch);
+            }
+            for slot in batch {
+                self.enter_frontier(slot);
+            }
+            retry_after_preempt = false;
         }
     }
 
@@ -846,8 +903,10 @@ impl<'a> StreamSim<'a> {
 
     /// Preempt `victim` (a slot) at command-queue granularity — the exact
     /// engine semantics, plus terminal marking so the dead dispatch record
-    /// is reclaimed once its in-flight references drain.
-    fn displace(&mut self, victim: usize) -> bool {
+    /// is reclaimed once its in-flight references drain. Under fuzzing the
+    /// victim's frontier re-entry may be deferred into `deferred` (the
+    /// re-entry ambiguity); canonically it re-enters immediately.
+    fn displace(&mut self, victim: usize, deferred: &mut Vec<usize>) -> bool {
         let sr = self.slots[victim];
         if sr.unit == FREE {
             return false;
@@ -899,7 +958,15 @@ impl<'a> StreamSim<'a> {
             self.state.est_free[dev] = self.now;
         }
         self.preemptions += 1;
-        self.enter_frontier(victim);
+        let defer = match self.seam.as_mut() {
+            Some(s) => s.flip(Ambiguity::Reentry),
+            None => false,
+        };
+        if defer {
+            deferred.push(victim);
+        } else {
+            self.enter_frontier(victim);
+        }
         self.try_free_dispatch(di);
         true
     }
@@ -1067,6 +1134,8 @@ impl<'a> StreamSim<'a> {
         self.unit_mut(u).kernel_finished[kernel] = true;
         let comp_local = self.disp(di).d.cq.component;
         if first_completion {
+            let mut newly_ready = std::mem::take(&mut self.scratch_ready);
+            newly_ready.clear();
             #[allow(clippy::needless_range_loop)]
             for i in 0..self.unit(u).unblocks[kernel].len() {
                 let uc = self.unit(u).unblocks[kernel][i];
@@ -1077,10 +1146,19 @@ impl<'a> StreamSim<'a> {
                     if release > self.now + EPS {
                         self.push_ev(release, EvKind::Release { comp: slot });
                     } else {
-                        self.enter_frontier(slot);
+                        newly_ready.push(slot);
                     }
                 }
             }
+            // Components unblocked by the same completion become ready at
+            // the same instant — a dispatch-tie ambiguity under fuzzing.
+            if let Some(s) = self.seam.as_mut() {
+                s.shuffle(Ambiguity::DispatchTie, &mut newly_ready);
+            }
+            for &slot in &newly_ready {
+                self.enter_frontier(slot);
+            }
+            self.scratch_ready = newly_ready;
         }
         if self.disp(di).d.cancelled {
             return;
@@ -1139,6 +1217,87 @@ impl<'a> StreamSim<'a> {
             return;
         }
         self.state.on_ready(slot);
+    }
+
+    /// Fuzz-only event drain: pops every due event at the current instant
+    /// as one batch and processes it in a seam-permuted order, preserving
+    /// the relative order of events that target the same dispatch record
+    /// (their sequencing is causal, not ambiguous — a `Callback` must not
+    /// overtake the `TransferDone` completing its last command). Events
+    /// pushed while processing (e.g. a repumped copy engine) land in the
+    /// next batch. Only reachable with a seam installed; the canonical
+    /// drain loop in [`Self::pump`] is untouched.
+    fn drain_due_events_seamed(&mut self) {
+        loop {
+            let mut batch: Vec<Ev> = Vec::new();
+            while let Some(Reverse(e)) = self.heap.peek() {
+                if e.t > self.now + EPS {
+                    break;
+                }
+                let Reverse(e) = self.heap.pop().expect("peeked event");
+                batch.push(e);
+            }
+            if batch.is_empty() {
+                return;
+            }
+            // Group key: the dispatch record an event targets. A CopyDone
+            // resolves through its engine's in-flight transfer (at most
+            // one CopyDone per engine per batch, so the lookup is stable);
+            // Release events are free-floating.
+            let keys: Vec<Option<usize>> = batch
+                .iter()
+                .map(|e| match e.kind {
+                    EvKind::DispatchReady(di) => Some(di),
+                    EvKind::TransferDone { disp, .. } => Some(disp),
+                    EvKind::Callback { disp, .. } => Some(disp),
+                    EvKind::CopyDone { engine } => {
+                        self.copy_engines[engine].current.map(|(di, _)| di)
+                    }
+                    EvKind::Release { .. } => None,
+                })
+                .collect();
+            let mut order: Vec<usize> = (0..batch.len()).collect();
+            if let Some(s) = self.seam.as_mut() {
+                s.shuffle_grouped(Ambiguity::Callback, &mut order, |&i| keys[i]);
+            }
+            for &bi in &order {
+                match batch[bi].kind {
+                    EvKind::DispatchReady(di) => {
+                        self.disp_mut(di).pending -= 1;
+                        if !self.disp(di).d.cancelled && self.disp(di).d.cmds_remaining > 0 {
+                            self.active_insert(di);
+                        }
+                        self.try_free_dispatch(di);
+                    }
+                    EvKind::TransferDone { disp, cmd } => {
+                        self.disp_mut(disp).pending -= 1;
+                        self.command_done(disp, cmd);
+                        self.try_free_dispatch(disp);
+                    }
+                    EvKind::CopyDone { engine } => {
+                        let (di, cmd) = self.copy_engines[engine]
+                            .current
+                            .take()
+                            .expect("engine busy");
+                        self.disp_mut(di).pending -= 1;
+                        self.command_done(di, cmd);
+                        self.try_free_dispatch(di);
+                        self.pump_copy_engine(engine);
+                    }
+                    EvKind::Callback { disp, kernel } => {
+                        self.disp_mut(disp).pending -= 1;
+                        self.handle_callback(disp, kernel);
+                        self.try_free_dispatch(disp);
+                    }
+                    EvKind::Release { comp } => {
+                        let sr = self.slots[comp];
+                        if sr.unit != FREE && self.unit(sr.unit).ext_preds_left[sr.local] == 0 {
+                            self.enter_frontier(comp);
+                        }
+                    }
+                }
+            }
+        }
     }
 
     // ------------------------------------------------------------- kernels
@@ -1227,55 +1386,88 @@ impl<'a> StreamSim<'a> {
                 }
             }
             self.scratch_finished.sort_unstable_by(|a, b| b.cmp(a));
-            #[allow(clippy::needless_range_loop)]
-            for fi in 0..self.scratch_finished.len() {
-                let i = self.scratch_finished[fi];
-                let r = self.runs.swap_remove(i);
-                self.runs_per_dev[r.device] -= 1;
-                self.load_dirty = true;
-                let u = self.disp(r.disp).unit;
-                self.unit_mut(u).kernel_frac[r.kernel] = 1.0;
-                self.device_busy[r.device] += self.now - r.started;
-                self.command_done(r.disp, r.cmd);
+            if self.seam.is_some() {
+                // Simultaneous kernel completions: remove every finished
+                // run first (descending index, as canonically), then
+                // process them in a seam-permuted order — the
+                // completion-race ambiguity.
+                let mut done_runs: Vec<Run> = Vec::with_capacity(self.scratch_finished.len());
+                #[allow(clippy::needless_range_loop)]
+                for fi in 0..self.scratch_finished.len() {
+                    done_runs.push(self.runs.swap_remove(self.scratch_finished[fi]));
+                }
+                let mut order: Vec<usize> = (0..done_runs.len()).collect();
+                if let Some(s) = self.seam.as_mut() {
+                    s.shuffle(Ambiguity::Completion, &mut order);
+                }
+                for &fi in &order {
+                    let r = &done_runs[fi];
+                    let (device, kernel, started, disp, cmd) =
+                        (r.device, r.kernel, r.started, r.disp, r.cmd);
+                    self.runs_per_dev[device] -= 1;
+                    self.load_dirty = true;
+                    let u = self.disp(disp).unit;
+                    self.unit_mut(u).kernel_frac[kernel] = 1.0;
+                    self.device_busy[device] += self.now - started;
+                    self.command_done(disp, cmd);
+                }
+            } else {
+                #[allow(clippy::needless_range_loop)]
+                for fi in 0..self.scratch_finished.len() {
+                    let i = self.scratch_finished[fi];
+                    let r = self.runs.swap_remove(i);
+                    self.runs_per_dev[r.device] -= 1;
+                    self.load_dirty = true;
+                    let u = self.disp(r.disp).unit;
+                    self.unit_mut(u).kernel_frac[r.kernel] = 1.0;
+                    self.device_busy[r.device] += self.now - r.started;
+                    self.command_done(r.disp, r.cmd);
+                }
             }
 
-            while let Some(Reverse(e)) = self.heap.peek() {
-                if e.t > self.now + EPS {
-                    break;
-                }
-                let Reverse(e) = self.heap.pop().expect("peeked event");
-                match e.kind {
-                    EvKind::DispatchReady(di) => {
-                        self.disp_mut(di).pending -= 1;
-                        if !self.disp(di).d.cancelled && self.disp(di).d.cmds_remaining > 0 {
-                            self.active_insert(di);
+            if self.seam.is_some() {
+                self.drain_due_events_seamed();
+            } else {
+                while let Some(Reverse(e)) = self.heap.peek() {
+                    if e.t > self.now + EPS {
+                        break;
+                    }
+                    let Reverse(e) = self.heap.pop().expect("peeked event");
+                    match e.kind {
+                        EvKind::DispatchReady(di) => {
+                            self.disp_mut(di).pending -= 1;
+                            if !self.disp(di).d.cancelled && self.disp(di).d.cmds_remaining > 0 {
+                                self.active_insert(di);
+                            }
+                            self.try_free_dispatch(di);
                         }
-                        self.try_free_dispatch(di);
-                    }
-                    EvKind::TransferDone { disp, cmd } => {
-                        self.disp_mut(disp).pending -= 1;
-                        self.command_done(disp, cmd);
-                        self.try_free_dispatch(disp);
-                    }
-                    EvKind::CopyDone { engine } => {
-                        let (di, cmd) = self.copy_engines[engine]
-                            .current
-                            .take()
-                            .expect("engine busy");
-                        self.disp_mut(di).pending -= 1;
-                        self.command_done(di, cmd);
-                        self.try_free_dispatch(di);
-                        self.pump_copy_engine(engine);
-                    }
-                    EvKind::Callback { disp, kernel } => {
-                        self.disp_mut(disp).pending -= 1;
-                        self.handle_callback(disp, kernel);
-                        self.try_free_dispatch(disp);
-                    }
-                    EvKind::Release { comp } => {
-                        let sr = self.slots[comp];
-                        if sr.unit != FREE && self.unit(sr.unit).ext_preds_left[sr.local] == 0 {
-                            self.enter_frontier(comp);
+                        EvKind::TransferDone { disp, cmd } => {
+                            self.disp_mut(disp).pending -= 1;
+                            self.command_done(disp, cmd);
+                            self.try_free_dispatch(disp);
+                        }
+                        EvKind::CopyDone { engine } => {
+                            let (di, cmd) = self.copy_engines[engine]
+                                .current
+                                .take()
+                                .expect("engine busy");
+                            self.disp_mut(di).pending -= 1;
+                            self.command_done(di, cmd);
+                            self.try_free_dispatch(di);
+                            self.pump_copy_engine(engine);
+                        }
+                        EvKind::Callback { disp, kernel } => {
+                            self.disp_mut(disp).pending -= 1;
+                            self.handle_callback(disp, kernel);
+                            self.try_free_dispatch(disp);
+                        }
+                        EvKind::Release { comp } => {
+                            let sr = self.slots[comp];
+                            if sr.unit != FREE
+                                && self.unit(sr.unit).ext_preds_left[sr.local] == 0
+                            {
+                                self.enter_frontier(comp);
+                            }
                         }
                     }
                 }

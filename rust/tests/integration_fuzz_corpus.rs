@@ -1,0 +1,90 @@
+//! Replays the committed fuzz corpus (`ci/fuzz_corpus/*.json`) through the
+//! deterministic concurrency fuzzer — the per-PR regression gate in test
+//! form, so `cargo test` alone catches an ordering-dependent regression
+//! before CI does.
+//!
+//! Each corpus entry is `{"seed": N, "orderings": K, "note": "..."}`. A
+//! seed must (a) pass every permuted ordering of both the engine and
+//! streaming paths and (b) produce a byte-identical report when replayed —
+//! the determinism contract the shrinker and CI artifacts rely on.
+
+use pyschedcl::json::Json;
+use pyschedcl::sched::fuzz::{run_seed, FuzzConfig};
+use std::path::PathBuf;
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../ci/fuzz_corpus"))
+}
+
+fn corpus_entries() -> Vec<(PathBuf, u64, usize, String)> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(corpus_dir())
+        .expect("ci/fuzz_corpus must exist next to the crate")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    paths
+        .into_iter()
+        .map(|p| {
+            let text = std::fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("cannot read {}: {e}", p.display()));
+            let json = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("{} is not valid JSON: {e}", p.display()));
+            let seed = json
+                .get("seed")
+                .and_then(|s| s.as_u64())
+                .unwrap_or_else(|| panic!("{}: bad 'seed'", p.display()));
+            let orderings = json
+                .get("orderings")
+                .and_then(|o| o.as_usize())
+                .unwrap_or_else(|| panic!("{}: bad 'orderings'", p.display()));
+            let note = json
+                .get("note")
+                .and_then(|n| n.as_str())
+                .unwrap_or("")
+                .to_string();
+            (p, seed, orderings, note)
+        })
+        .collect()
+}
+
+#[test]
+fn corpus_is_nonempty_and_well_formed() {
+    let entries = corpus_entries();
+    assert!(
+        entries.len() >= 4,
+        "corpus unexpectedly small: {} entries",
+        entries.len()
+    );
+    // The two crafted shapes must stay pinned in the corpus.
+    assert!(entries.iter().any(|(_, s, ..)| *s == 0), "seed 0 missing");
+    assert!(entries.iter().any(|(_, s, ..)| *s == 1), "seed 1 missing");
+    for (p, _, orderings, note) in &entries {
+        assert!(*orderings >= 2, "{}: fewer than 2 orderings", p.display());
+        assert!(!note.is_empty(), "{}: corpus seeds document why", p.display());
+    }
+}
+
+#[test]
+fn corpus_seeds_replay_green_and_deterministically() {
+    for (path, seed, orderings, _) in corpus_entries() {
+        let cfg = FuzzConfig {
+            orderings,
+            ..FuzzConfig::default()
+        };
+        let a = run_seed(seed, &cfg);
+        assert!(
+            a.ok(),
+            "{} regressed:\n{}",
+            path.display(),
+            a.log
+        );
+        let b = run_seed(seed, &cfg);
+        assert_eq!(
+            a.log,
+            b.log,
+            "{}: replay of seed {seed} diverged",
+            path.display()
+        );
+    }
+}

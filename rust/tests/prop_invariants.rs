@@ -329,6 +329,23 @@ fn prop_queue_structures_execute_all_commands() {
     }
 }
 
+// ------------------------------------------ scheduler-state reconstruction
+
+#[test]
+fn prop_sched_state_rebuilds_equal_incremental_state() {
+    // The fuzz oracle drives a random ready/dispatch/complete/preempt event
+    // stream against an incrementally maintained `SchedState`, periodically
+    // rebuilding a fresh state from the recorded chronology and comparing
+    // heads, ranks, frontier membership, and invariants. Runnable standalone
+    // of the full fuzzer: `cargo test prop_sched_state_rebuilds`.
+    for seed in 0..CASES {
+        let stats = pyschedcl::sched::fuzz::fuzz_state_events(seed, 120)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(stats.steps >= 120, "seed {seed}: only {} steps", stats.steps);
+        assert!(stats.rebuilds > 0, "seed {seed}: oracle never rebuilt");
+    }
+}
+
 // ------------------------------------------------- serving-layer batching
 
 /// Random request stream: arrival-sorted, signatures drawn from a small
