@@ -1,0 +1,159 @@
+//! Bench SERVE-CHAOS — the fault-injected serving proof (ISSUE 9): a
+//! seeded Poisson stream of 10,000 deadline-carrying attention-head
+//! requests walked through `serve_stream` under EDF on 4 scaled GPUs,
+//! while a deterministic fault plan degrades the platform mid-stream:
+//! one GPU slows to half speed, a second crashes outright, and a third
+//! wedges (stalls, then recovers). In-flight work on the crashed device
+//! is re-staged onto survivors under a per-request retry budget; queued
+//! work whose deadline can no longer be met is shed by the deadline-aware
+//! load shedder instead of rotting in the queue.
+//!
+//! Emits `BENCH_serve_chaos.json`, which `pyschedcl bench-check` gates
+//! against `ci/bench_baselines/BENCH_serve_chaos.json`. The headline gate
+//! is `lost == 0` **exactly** (tolerance 0): every offered request must be
+//! accounted for as served, rejected, or shed — chaos may delay or shed
+//! work, never silently drop it. `max_retries` must stay inside the
+//! plan's budget, and `fault_events` pins that the plan really installed.
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::fault::{FaultEvent, FaultKind, FaultPlan};
+use pyschedcl::platform::Platform;
+use pyschedcl::report::serve_chaos_json;
+use pyschedcl::sched::Edf;
+use pyschedcl::serve::{NullSink, PoissonStream, ServeRequest, StreamingConfig, Workload};
+use std::time::Instant;
+
+fn main() {
+    let n: usize = std::env::var("SERVE_CHAOS_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+    // ~1200 req/s over 4 GPUs is comfortably stable on the healthy
+    // platform (the soak bench sustains 1500), so every capacity loss
+    // below is attributable to the injected faults.
+    let rate = 1200.0;
+    let window = 512usize;
+    let platform = Platform::scaled(4, 1, 3, 1); // GPUs 0..=3, CPU 4
+
+    // The chaos schedule, in virtual seconds (the 10k stream spans ~8.3s
+    // of virtual time, so every event lands mid-stream):
+    //   t=1.0  GPU 1 slows to half speed       (degraded, still serving)
+    //   t=2.0  GPU 2 crashes                   (in-flight work re-staged)
+    //   t=3.0  GPU 3 wedges for 0.5s           (watchdog-visible stall)
+    let plan = FaultPlan {
+        events: vec![
+            FaultEvent {
+                device: 1,
+                at: 1.0,
+                kind: FaultKind::Slowdown { factor: 0.5 },
+            },
+            FaultEvent {
+                device: 2,
+                at: 2.0,
+                kind: FaultKind::Crash,
+            },
+            FaultEvent {
+                device: 3,
+                at: 3.0,
+                kind: FaultKind::Wedge { dur: 0.5 },
+            },
+        ],
+        retry_budget: 4,
+        backoff_base: 1e-3,
+        ..FaultPlan::default()
+    }
+    .normalized()
+    .expect("chaos plan is valid");
+    let n_events = plan.events.len();
+    let retry_budget = plan.retry_budget;
+
+    let cfg = StreamingConfig {
+        window,
+        faults: Some(plan),
+        ..StreamingConfig::default()
+    };
+
+    // Every request carries a 250 ms latency budget: post-crash the
+    // platform is overloaded, and the deadline-aware shedder — not an
+    // unbounded backlog — absorbs the capacity gap.
+    let requests = PoissonStream::new(29, rate)
+        .expect("valid rate")
+        .take(n)
+        .enumerate()
+        .map(|(i, t)| {
+            let beta = if i % 4 == 3 { 128 } else { 64 };
+            let mut r = ServeRequest::new(i, t, Workload::Head { beta });
+            r.deadline = Some(0.25);
+            r.priority = (i % 3) as u32;
+            r
+        });
+
+    let t0 = Instant::now();
+    let report = pyschedcl::serve::serve_stream(
+        requests,
+        &platform,
+        &PaperCost,
+        &mut Edf,
+        &cfg,
+        &mut NullSink,
+    )
+    .expect("chaos serve");
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "serve-chaos: {} offered @ {rate} req/s, {} fault event(s) -> \
+         {} served, {} rejected, {} shed in {:.2}s wall (sim makespan {:.2}s)",
+        report.offered,
+        n_events,
+        report.served,
+        report.rejected,
+        report.shed,
+        wall,
+        report.makespan
+    );
+    println!(
+        "recovery: max {} crash retry(s) on one request (budget {}), {} preemption(s), \
+         p99 {:.2} ms, miss rate {:.1}%",
+        report.max_retries,
+        retry_budget,
+        report.preemptions,
+        report.p99_latency * 1e3,
+        report.deadline_miss_rate * 100.0
+    );
+    println!(
+        "bounded state: peak {} live request(s), {} live component(s), {} event(s)",
+        report.peak_live_requests, report.peak_live_components, report.events
+    );
+
+    // Belt and braces: the gates below re-check these from the JSON, but a
+    // conservation break should fail loudly right here too.
+    assert_eq!(
+        report.served + report.rejected + report.shed,
+        report.offered,
+        "conservation violated: {} served + {} rejected + {} shed != {} offered",
+        report.served,
+        report.rejected,
+        report.shed,
+        report.offered
+    );
+    assert!(
+        report.max_retries <= retry_budget,
+        "retry budget breached: {} > {retry_budget}",
+        report.max_retries
+    );
+    assert!(
+        report.peak_live_requests <= window,
+        "admission window breached: {} live > {window}",
+        report.peak_live_requests
+    );
+
+    let json = serve_chaos_json(&report, wall, n_events);
+    // Cargo runs benches with cwd = the package root (rust/); the CI gate
+    // and artifact upload expect the JSON at the repository root.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_serve_chaos.json"))
+        .unwrap_or_else(|| "BENCH_serve_chaos.json".into());
+    std::fs::write(&path, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {}", path.display());
+}

@@ -18,6 +18,7 @@ use super::events::Event;
 use super::memory::BufferStore;
 use crate::cost::CostModel;
 use crate::error::{Error, Result};
+use crate::fault::FaultPlan;
 use crate::graph::{BufferId, Dag, Partition};
 use crate::platform::{DeviceId, Platform};
 use crate::queue::{setup_cq, CommandKind};
@@ -27,7 +28,36 @@ use crate::sim::CompMeta;
 use crate::trace::{Lane, Span, Trace};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Ceiling on one injected stall (wedge remainder or slowdown stretch):
+/// keeps a mis-authored wall-clock plan from pinning a worker thread for
+/// hours — the watchdog has long since flagged the command by then.
+const MAX_FAULT_STALL_S: f64 = 5.0;
+
+/// Wall-clock fault-injection context for real execution. The plan's
+/// instants are on the *serving epoch*; the executor's own clock starts at
+/// zero per call, so `epoch_offset` (seconds already elapsed on the serving
+/// clock when this call starts) aligns the two.
+#[derive(Clone, Copy)]
+pub struct ExecFaults<'p> {
+    pub plan: &'p FaultPlan,
+    /// Serving-epoch seconds at this call's t = 0.
+    pub epoch_offset: f64,
+    /// Watchdog slack multiplier over the per-kernel cost estimate.
+    pub slack: f64,
+    /// Watchdog floor, seconds — calibration estimates can be microscopic
+    /// and real kernels pay dispatch overhead the model does not.
+    pub floor: f64,
+}
+
+/// Whether a real-execution error came from injected faults or the
+/// watchdog — the serve layer's retry-or-shed recovery keys off this;
+/// genuine executor failures (missing artifact, shape mismatch) still
+/// abort the run.
+pub fn is_fault_error(e: &Error) -> bool {
+    matches!(e, Error::Exec(m) if m.contains("fault:"))
+}
 
 /// Outcome of a real execution.
 pub struct ExecReport {
@@ -65,6 +95,9 @@ struct Shared<'a> {
     unblocks: Vec<Vec<usize>>,
     /// Per-device resident cap (for the resident-fraction load signal).
     tenancy: usize,
+    /// Fault-injection context (`None` on the fault-free path — every hook
+    /// below short-circuits, keeping that path byte-identical).
+    faults: Option<ExecFaults<'a>>,
 }
 
 impl<'a> Shared<'a> {
@@ -144,6 +177,32 @@ pub fn execute_dag_served(
     tenancy: usize,
     meta: &[CompMeta],
 ) -> Result<ExecReport> {
+    execute_dag_served_faulted(
+        dag, partition, platform, cost, policy, runtime, inputs, tenancy, meta, None,
+    )
+}
+
+/// [`execute_dag_served`] under fault injection: crashed devices are masked
+/// from dispatch (and a run left with every device down fails typed),
+/// wedges stall commands until they expire, slowdowns stretch command
+/// wall time by `1/factor`, and a per-kernel watchdog (cost estimate ×
+/// `slack` + `floor`) turns a command that stopped progressing into a typed
+/// `fault:` error — the signal [`is_fault_error`] recognizes and the serve
+/// layer's retry/re-stage recovery consumes. With `faults: None` this is
+/// exactly [`execute_dag_served`].
+#[allow(clippy::too_many_arguments)]
+pub fn execute_dag_served_faulted(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    runtime: &Arc<Runtime>,
+    inputs: &HashMap<BufferId, Vec<f32>>,
+    tenancy: usize,
+    meta: &[CompMeta],
+    faults: Option<ExecFaults<'_>>,
+) -> Result<ExecReport> {
     let tenancy = tenancy.max(1);
     if meta.len() != partition.components.len() {
         return Err(Error::Exec(format!(
@@ -209,6 +268,7 @@ pub fn execute_dag_served(
         t0: Instant::now(),
         unblocks,
         tenancy,
+        faults,
     };
     for (&b, data) in inputs {
         shared.store.set_host(b, data.clone());
@@ -224,6 +284,30 @@ pub fn execute_dag_served(
             }
             if st.comps_done == ncomp {
                 break;
+            }
+            // Down-device masking: a crashed device must never receive new
+            // dispatches. Components already resident on it fail at their
+            // next command with a typed `fault:` error instead.
+            if let Some(f) = shared.faults {
+                let pt = f.epoch_offset + shared.now();
+                let ndev = platform.devices.len();
+                let mut all_down = ndev > 0;
+                for d in 0..ndev {
+                    if f.plan.down_at(d, pt) {
+                        if !st.sched.is_down(d) {
+                            st.sched.on_device_down(d);
+                        }
+                    } else {
+                        all_down = false;
+                    }
+                }
+                if all_down {
+                    let left = ncomp - st.comps_done;
+                    drop(st);
+                    return Err(Error::Exec(format!(
+                        "fault: every device is down with {left} component(s) unfinished"
+                    )));
+                }
             }
             let selection = {
                 st.sched.now = shared.now();
@@ -248,11 +332,24 @@ pub fn execute_dag_served(
                         .sum();
                     st.sched.est_free[dev] = st.sched.est_free[dev].max(shared.now()) + solo;
                     drop(st);
+                    // Watchdog budgets, fixed at dispatch: per-kernel cost
+                    // estimate on the chosen device × slack + floor. A real
+                    // command that exceeds its budget is treated as wedged.
+                    let budgets: Option<HashMap<usize, f64>> = shared.faults.map(|f| {
+                        partition.components[comp]
+                            .kernels
+                            .iter()
+                            .map(|&k| {
+                                let est = cost.exec_time(&dag.kernels[k], device);
+                                (k, est * f.slack + f.floor)
+                            })
+                            .collect()
+                    });
                     let sh = &shared;
                     let pf = platform;
                     let rt = runtime.clone();
                     let queues = policy.queues_for(device);
-                    scope.spawn(move || run_component(sh, pf, rt, comp, dev, queues));
+                    scope.spawn(move || run_component(sh, pf, rt, comp, dev, queues, budgets));
                 }
                 None => {
                     // sleep_till_cb_update(): callbacks wake us.
@@ -289,6 +386,7 @@ fn run_component(
     comp: usize,
     dev: DeviceId,
     queues: usize,
+    budgets: Option<HashMap<usize, f64>>,
 ) {
     let mut device = platform.device(dev).clone();
     device.num_queues = queues;
@@ -300,6 +398,7 @@ fn run_component(
         for q in 0..cq.queues.len() {
             let cq_ref = &cq;
             let events_ref = &events;
+            let budgets_ref = &budgets;
             let rt = runtime.clone();
             handles.push(scope.spawn(move || -> Result<()> {
                 for &cmd in &cq_ref.queues[q] {
@@ -309,6 +408,25 @@ fn run_component(
                     }
                     let start = shared.now();
                     let c = &cq_ref.commands[cmd];
+                    // Pre-command fault gates: a down device fails the
+                    // command typed; a wedged one stalls until the wedge
+                    // expires (the stall counts against the watchdog
+                    // budget, so a long wedge surfaces as a timeout).
+                    if let Some(f) = shared.faults {
+                        let pt = f.epoch_offset + start;
+                        if f.plan.down_at(dev, pt) {
+                            events_ref[cmd].complete();
+                            return Err(Error::Exec(format!(
+                                "fault: device {dev} is down at t={pt:.6}"
+                            )));
+                        }
+                        let rem = f.plan.wedge_remaining_at(dev, pt);
+                        if rem > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(
+                                rem.min(MAX_FAULT_STALL_S),
+                            ));
+                        }
+                    }
                     let outcome = match c.kind {
                         CommandKind::Write { buffer } => shared
                             .store
@@ -320,6 +438,36 @@ fn run_component(
                             .map(|_| (format!("r{buffer}"), true)),
                         CommandKind::NdRange => run_kernel(shared, &rt, dev, c.kernel)
                             .map(|_| (shared.dag.kernels[c.kernel].name.clone(), false)),
+                    };
+                    // Post-command fault gates: stretch by the slowdown
+                    // factor, then let the watchdog judge total command
+                    // wall time against its dispatch-time budget.
+                    let outcome = match (outcome, shared.faults) {
+                        (Ok(ok), Some(f)) => {
+                            let pt = f.epoch_offset + start;
+                            let sf = f.plan.slow_factor_at(dev, pt);
+                            if sf > 0.0 && sf < 1.0 {
+                                let dt = shared.now() - start;
+                                std::thread::sleep(Duration::from_secs_f64(
+                                    (dt * (1.0 / sf - 1.0)).clamp(0.0, MAX_FAULT_STALL_S),
+                                ));
+                            }
+                            let over = matches!(c.kind, CommandKind::NdRange)
+                                .then(|| budgets_ref.as_ref().and_then(|b| b.get(&c.kernel)))
+                                .flatten()
+                                .filter(|&&budget| shared.now() - start > budget);
+                            match over {
+                                Some(&budget) => Err(Error::Exec(format!(
+                                    "fault: watchdog timeout on kernel {} (device {dev}): \
+                                     {:.6}s exceeds the {budget:.6}s budget — treating the \
+                                     command as wedged",
+                                    c.kernel,
+                                    shared.now() - start,
+                                ))),
+                                None => Ok(ok),
+                            }
+                        }
+                        (o, _) => o,
                     };
                     match outcome {
                         Ok((label, is_transfer)) => {

@@ -17,5 +17,8 @@ pub mod executor;
 pub mod memory;
 
 pub use events::Event;
-pub use executor::{execute_dag, execute_dag_multi, execute_dag_served, ExecReport};
+pub use executor::{
+    execute_dag, execute_dag_multi, execute_dag_served, execute_dag_served_faulted,
+    is_fault_error, ExecFaults, ExecReport,
+};
 pub use memory::BufferStore;

@@ -1,0 +1,560 @@
+//! Fault injection and recovery plumbing: seeded device-fault plans and
+//! the runtime clock that replays them against an executing schedule.
+//!
+//! The paper's scheduling claims assume devices that always complete the
+//! kernels dispatched to them. A serving deployment must instead survive
+//! devices that *crash* (all resident work lost), *wedge* (kernels stop
+//! progressing but never complete), or silently *slow down* — and degrade
+//! gracefully instead of collapsing. A [`FaultPlan`] describes such
+//! faults at deterministic instants (virtual seconds in the simulators,
+//! wall seconds from the serve epoch on the real path); the same plan is
+//! honored by [`crate::sim::engine`], [`crate::sim::stream`], and the
+//! watchdog-guarded [`crate::exec`] executor, so a chaos scenario replays
+//! identically across execution targets.
+//!
+//! Recovery rides the existing preemption re-stage semantics
+//! ([`crate::sched::SchedState::on_preempt`]): work lost to a fault
+//! re-enters the frontier with a per-request retry budget and exponential
+//! backoff, crashed devices leave the available set
+//! ([`crate::sched::SchedState::on_device_down`]), and slowdowns feed the
+//! contention-model run rates. When retries are exhausted (or no device
+//! survives), the affected requests are *shed* — a typed outcome distinct
+//! from rejection, conserving `served + rejected + shed == offered`.
+//!
+//! With no plan installed every execution path is byte-identical to the
+//! fault-free build; an installed plan with zero events is equivalent to
+//! no plan (the clock never fires and rates multiply by exactly 1.0).
+
+use crate::error::{Error, Result};
+use crate::json::Json;
+use crate::platform::DeviceId;
+
+/// Tolerance for "due at this instant" comparisons — matches the event
+/// loops' `EPS`.
+const EPS: f64 = 1e-12;
+
+/// What happens to a device at a fault instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Device dies: every resident component is lost and the device never
+    /// returns to the available set.
+    Crash,
+    /// Kernels on the device stop progressing for `dur` seconds but do not
+    /// complete (rate 0); progress resumes when the wedge expires.
+    Wedge { dur: f64 },
+    /// Device runs at `factor` of its calibrated speed from this instant
+    /// on (`factor` in `(0, 1]`; a later Slowdown event replaces it).
+    Slowdown { factor: f64 },
+}
+
+impl FaultKind {
+    /// Stable report/JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Wedge { .. } => "wedge",
+            FaultKind::Slowdown { .. } => "slowdown",
+        }
+    }
+}
+
+/// One injected fault: `kind` strikes `device` at instant `at` (seconds on
+/// the executing path's clock).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub device: DeviceId,
+    pub at: f64,
+    pub kind: FaultKind,
+}
+
+/// Which queued work the server sheds first when degradation is required.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedPolicy {
+    /// Shed the lowest-priority queued work first (ties: latest deadline).
+    #[default]
+    LowestPriority,
+    /// Shed the latest-deadline queued work first (ties: lowest priority).
+    LatestDeadline,
+}
+
+impl ShedPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedPolicy::LowestPriority => "lowest-priority",
+            ShedPolicy::LatestDeadline => "latest-deadline",
+        }
+    }
+
+    /// Parse a CLI/JSON policy name.
+    pub fn parse(s: &str) -> Result<ShedPolicy> {
+        match s {
+            "lowest-priority" => Ok(ShedPolicy::LowestPriority),
+            "latest-deadline" => Ok(ShedPolicy::LatestDeadline),
+            other => Err(Error::Spec(format!(
+                "unknown shed policy '{other}' (expected lowest-priority or latest-deadline)"
+            ))),
+        }
+    }
+}
+
+/// A deterministic fault-injection scenario plus the recovery knobs that
+/// govern the response to it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Injected faults, sorted by `at` (construction/parse sorts; ties keep
+    /// input order).
+    pub events: Vec<FaultEvent>,
+    /// Max fault-triggered retries per request before it is shed.
+    pub retry_budget: u32,
+    /// Base of the exponential backoff before a fault-displaced component
+    /// re-enters the frontier: retry `k` waits `backoff_base * 2^(k-1)`.
+    pub backoff_base: f64,
+    /// Degradation policy for queued work that can no longer meet its
+    /// deadline.
+    pub shed_policy: ShedPolicy,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            events: Vec::new(),
+            retry_budget: 3,
+            backoff_base: 1e-3,
+            shed_policy: ShedPolicy::default(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Sort events by instant (stable: same-instant events keep input
+    /// order) and validate.
+    pub fn normalized(mut self) -> Result<FaultPlan> {
+        self.events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Structural validation: finite non-negative instants, positive wedge
+    /// durations, slowdown factors in `(0, 1]`, finite positive backoff.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.backoff_base.is_finite() && self.backoff_base >= 0.0) {
+            return Err(Error::Spec(format!(
+                "fault plan: backoff_base_s must be finite and >= 0, got {}",
+                self.backoff_base
+            )));
+        }
+        for (i, e) in self.events.iter().enumerate() {
+            if !(e.at.is_finite() && e.at >= 0.0) {
+                return Err(Error::Spec(format!(
+                    "fault plan event {i}: instant must be finite and >= 0, got {}",
+                    e.at
+                )));
+            }
+            match e.kind {
+                FaultKind::Crash => {}
+                FaultKind::Wedge { dur } => {
+                    if !(dur.is_finite() && dur > 0.0) {
+                        return Err(Error::Spec(format!(
+                            "fault plan event {i}: wedge dur_s must be finite and > 0, got {dur}"
+                        )));
+                    }
+                }
+                FaultKind::Slowdown { factor } => {
+                    if !(factor.is_finite() && factor > 0.0 && factor <= 1.0) {
+                        return Err(Error::Spec(format!(
+                            "fault plan event {i}: slowdown factor must be in (0, 1], got {factor}"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Check every event's device index against a platform size.
+    pub fn validate_devices(&self, ndev: usize) -> Result<()> {
+        for (i, e) in self.events.iter().enumerate() {
+            if e.device >= ndev {
+                return Err(Error::Spec(format!(
+                    "fault plan event {i}: device {} out of range (platform has {ndev})",
+                    e.device
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- queries
+    //
+    // Point-in-time views for the real executor, which cannot replay a
+    // clock — it asks "what is true of this device at wall instant t?".
+
+    /// Is `dev` crashed at instant `t`?
+    pub fn down_at(&self, dev: DeviceId, t: f64) -> bool {
+        self.events
+            .iter()
+            .any(|e| e.device == dev && e.at <= t + EPS && matches!(e.kind, FaultKind::Crash))
+    }
+
+    /// Seconds of wedge remaining on `dev` at instant `t` (0 when none).
+    pub fn wedge_remaining_at(&self, dev: DeviceId, t: f64) -> f64 {
+        let mut rem: f64 = 0.0;
+        for e in &self.events {
+            if e.device == dev && e.at <= t + EPS {
+                if let FaultKind::Wedge { dur } = e.kind {
+                    rem = rem.max(e.at + dur - t);
+                }
+            }
+        }
+        rem.max(0.0)
+    }
+
+    /// Speed factor of `dev` at instant `t` (last Slowdown at or before
+    /// `t` wins; 1.0 when none).
+    pub fn slow_factor_at(&self, dev: DeviceId, t: f64) -> f64 {
+        let mut f = 1.0;
+        for e in &self.events {
+            if e.device == dev && e.at <= t + EPS {
+                if let FaultKind::Slowdown { factor } = e.kind {
+                    f = factor;
+                }
+            }
+        }
+        f
+    }
+
+    // ---------------------------------------------------------------- json
+
+    /// Parse a plan from its JSON object form (see the README "Fault
+    /// tolerance" section for the schema).
+    pub fn from_json(v: &Json) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        if let Some(n) = v.get("retry_budget") {
+            let b = n.as_u64().ok_or_else(|| {
+                Error::Spec("fault plan: retry_budget must be a non-negative integer".into())
+            })?;
+            plan.retry_budget = b as u32;
+        }
+        if let Some(n) = v.get("backoff_base_s") {
+            plan.backoff_base = n
+                .as_f64()
+                .ok_or_else(|| Error::Spec("fault plan: backoff_base_s must be a number".into()))?;
+        }
+        if let Some(s) = v.get("shed_policy") {
+            let s = s
+                .as_str()
+                .ok_or_else(|| Error::Spec("fault plan: shed_policy must be a string".into()))?;
+            plan.shed_policy = ShedPolicy::parse(s)?;
+        }
+        if let Some(events) = v.get("events") {
+            let arr = events
+                .as_arr()
+                .ok_or_else(|| Error::Spec("fault plan: events must be an array".into()))?;
+            for (i, e) in arr.iter().enumerate() {
+                let num = |key: &str| -> Result<f64> {
+                    e.field(key)?.as_f64().ok_or_else(|| {
+                        Error::Spec(format!("fault plan event {i}: {key} must be a number"))
+                    })
+                };
+                let device = e.field("device")?.as_usize().ok_or_else(|| {
+                    Error::Spec(format!("fault plan event {i}: device must be an index"))
+                })?;
+                let at = num("at_s")?;
+                let kind = match e.field("kind")?.as_str() {
+                    Some("crash") => FaultKind::Crash,
+                    Some("wedge") => FaultKind::Wedge { dur: num("dur_s")? },
+                    Some("slowdown") => FaultKind::Slowdown {
+                        factor: num("factor")?,
+                    },
+                    other => {
+                        return Err(Error::Spec(format!(
+                            "fault plan event {i}: unknown kind {other:?} \
+                             (expected crash, wedge, or slowdown)"
+                        )))
+                    }
+                };
+                plan.events.push(FaultEvent { device, at, kind });
+            }
+        }
+        plan.normalized()
+    }
+
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        FaultPlan::from_json(&Json::parse(text)?)
+    }
+
+    /// Load a plan from a JSON file, naming the path in the error.
+    pub fn from_file(path: &str) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("cannot read fault plan {path}: {e}")))?;
+        FaultPlan::parse(&text)
+            .map_err(|e| Error::Spec(format!("fault plan {path}: {e}")))
+    }
+
+    /// JSON object form (round-trips through [`from_json`](Self::from_json)).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("retry_budget", Json::num(self.retry_budget as f64)),
+            ("backoff_base_s", Json::num(self.backoff_base)),
+            ("shed_policy", Json::str(self.shed_policy.name())),
+            (
+                "events",
+                Json::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            let mut fields = vec![
+                                ("device", Json::num(e.device as f64)),
+                                ("at_s", Json::num(e.at)),
+                                ("kind", Json::str(e.kind.name())),
+                            ];
+                            match e.kind {
+                                FaultKind::Crash => {}
+                                FaultKind::Wedge { dur } => fields.push(("dur_s", Json::num(dur))),
+                                FaultKind::Slowdown { factor } => {
+                                    fields.push(("factor", Json::num(factor)))
+                                }
+                            }
+                            Json::obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Runtime replay state of a [`FaultPlan`] inside an event loop: a cursor
+/// over the (sorted) events plus the per-device condition they have
+/// established so far. Pure function of the plan and the sequence of
+/// `take_due`/`apply` calls — deterministic by construction.
+#[derive(Debug, Clone)]
+pub struct FaultClock {
+    events: Vec<FaultEvent>,
+    cursor: usize,
+    down: Vec<bool>,
+    wedged_until: Vec<f64>,
+    slow: Vec<f64>,
+}
+
+impl FaultClock {
+    /// Clock over `plan` for a platform of `ndev` devices. The plan should
+    /// already be [`normalized`](FaultPlan::normalized).
+    pub fn new(plan: &FaultPlan, ndev: usize) -> FaultClock {
+        let mut events = plan.events.clone();
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        FaultClock {
+            events,
+            cursor: 0,
+            down: vec![false; ndev],
+            wedged_until: vec![0.0; ndev],
+            slow: vec![1.0; ndev],
+        }
+    }
+
+    /// The next instant at which fault state changes: the earliest
+    /// unapplied event (which may be `<= now` if the caller has not yet
+    /// drained it) or the earliest wedge expiry strictly after `now`.
+    pub fn next_change_at(&self, now: f64) -> Option<f64> {
+        let mut t = self.events.get(self.cursor).map(|e| e.at);
+        for (d, &until) in self.wedged_until.iter().enumerate() {
+            if !self.down[d] && until > now + EPS {
+                t = Some(match t {
+                    Some(x) => x.min(until),
+                    None => until,
+                });
+            }
+        }
+        t
+    }
+
+    /// Are unapplied events due at or before `now`?
+    pub fn any_due(&self, now: f64) -> bool {
+        self.events
+            .get(self.cursor)
+            .map(|e| e.at <= now + EPS)
+            .unwrap_or(false)
+    }
+
+    /// Pop every event due at or before `now` into `out` (in plan order)
+    /// without applying it — the caller decides the interleaving with
+    /// same-instant completions, then calls [`apply`](Self::apply).
+    pub fn take_due(&mut self, now: f64, out: &mut Vec<FaultEvent>) {
+        while let Some(e) = self.events.get(self.cursor) {
+            if e.at > now + EPS {
+                break;
+            }
+            out.push(*e);
+            self.cursor += 1;
+        }
+    }
+
+    /// Fold one event into the per-device condition.
+    pub fn apply(&mut self, e: &FaultEvent) {
+        match e.kind {
+            FaultKind::Crash => self.down[e.device] = true,
+            FaultKind::Wedge { dur } => {
+                self.wedged_until[e.device] = self.wedged_until[e.device].max(e.at + dur)
+            }
+            FaultKind::Slowdown { factor } => self.slow[e.device] = factor,
+        }
+    }
+
+    /// Is `dev` crashed (as of the applied events)?
+    pub fn is_down(&self, dev: DeviceId) -> bool {
+        self.down[dev]
+    }
+
+    /// Run-rate multiplier for `dev` at instant `now`: 0 while wedged (or
+    /// crashed), the slowdown factor otherwise (1.0 when healthy).
+    pub fn rate_factor(&self, dev: DeviceId, now: f64) -> f64 {
+        if self.down[dev] || self.wedged_until[dev] > now + EPS {
+            0.0
+        } else {
+            self.slow[dev]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan3() -> FaultPlan {
+        FaultPlan {
+            events: vec![
+                FaultEvent {
+                    device: 1,
+                    at: 0.05,
+                    kind: FaultKind::Crash,
+                },
+                FaultEvent {
+                    device: 0,
+                    at: 0.02,
+                    kind: FaultKind::Wedge { dur: 0.01 },
+                },
+                FaultEvent {
+                    device: 2,
+                    at: 0.0,
+                    kind: FaultKind::Slowdown { factor: 0.5 },
+                },
+            ],
+            retry_budget: 2,
+            backoff_base: 1e-4,
+            shed_policy: ShedPolicy::LatestDeadline,
+        }
+        .normalized()
+        .unwrap()
+    }
+
+    #[test]
+    fn normalize_sorts_and_json_round_trips() {
+        let p = plan3();
+        assert!(p.events.windows(2).all(|w| w[0].at <= w[1].at));
+        let back = FaultPlan::parse(&p.to_json().to_string()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.shed_policy.name(), "latest-deadline");
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        let bad_at = FaultPlan {
+            events: vec![FaultEvent {
+                device: 0,
+                at: -1.0,
+                kind: FaultKind::Crash,
+            }],
+            ..FaultPlan::default()
+        };
+        assert!(matches!(bad_at.validate(), Err(Error::Spec(_))));
+        let bad_factor = FaultPlan {
+            events: vec![FaultEvent {
+                device: 0,
+                at: 0.0,
+                kind: FaultKind::Slowdown { factor: 1.5 },
+            }],
+            ..FaultPlan::default()
+        };
+        assert!(matches!(bad_factor.validate(), Err(Error::Spec(_))));
+        let bad_dur = FaultPlan {
+            events: vec![FaultEvent {
+                device: 0,
+                at: 0.0,
+                kind: FaultKind::Wedge { dur: 0.0 },
+            }],
+            ..FaultPlan::default()
+        };
+        assert!(matches!(bad_dur.validate(), Err(Error::Spec(_))));
+        assert!(plan3().validate_devices(2).is_err());
+        assert!(plan3().validate_devices(3).is_ok());
+        assert!(ShedPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn clock_replays_conditions_in_order() {
+        let p = plan3();
+        let mut c = FaultClock::new(&p, 3);
+        assert_eq!(c.next_change_at(0.0), Some(0.0));
+        let mut due = Vec::new();
+        c.take_due(0.0, &mut due);
+        assert_eq!(due.len(), 1);
+        for e in &due {
+            c.apply(e);
+        }
+        assert_eq!(c.rate_factor(2, 0.0), 0.5);
+        assert_eq!(c.rate_factor(0, 0.0), 1.0);
+
+        // Wedge at 0.02: rate 0 during, restored after expiry at 0.03.
+        due.clear();
+        c.take_due(0.02, &mut due);
+        assert_eq!(due.len(), 1);
+        for e in &due {
+            c.apply(e);
+        }
+        assert_eq!(c.rate_factor(0, 0.025), 0.0);
+        assert_eq!(c.rate_factor(0, 0.031), 1.0);
+        // Next change: the wedge expiry, then the crash.
+        assert_eq!(c.next_change_at(0.025), Some(0.03));
+
+        due.clear();
+        c.take_due(0.05, &mut due);
+        assert_eq!(due.len(), 1);
+        for e in &due {
+            c.apply(e);
+        }
+        assert!(c.is_down(1));
+        assert_eq!(c.rate_factor(1, 1.0), 0.0);
+        assert_eq!(c.next_change_at(0.05), None);
+    }
+
+    #[test]
+    fn point_in_time_queries_match_the_clock() {
+        let p = plan3();
+        assert!(!p.down_at(1, 0.049));
+        assert!(p.down_at(1, 0.05));
+        assert!(p.wedge_remaining_at(0, 0.025) > 0.004);
+        assert_eq!(p.wedge_remaining_at(0, 0.05), 0.0);
+        assert_eq!(p.slow_factor_at(2, 0.0), 0.5);
+        assert_eq!(p.slow_factor_at(2, f64::INFINITY), 0.5);
+        assert_eq!(p.slow_factor_at(0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let p = FaultPlan::default();
+        let c = FaultClock::new(&p, 4);
+        assert_eq!(c.next_change_at(0.0), None);
+        for d in 0..4 {
+            assert_eq!(c.rate_factor(d, 123.0), 1.0);
+            assert!(!c.is_down(d));
+        }
+    }
+
+    #[test]
+    fn from_file_names_the_path_on_error() {
+        let e = FaultPlan::from_file("/nonexistent/plan.json").unwrap_err();
+        assert!(matches!(e, Error::Io(_)), "{e}");
+        assert!(e.to_string().contains("/nonexistent/plan.json"), "{e}");
+    }
+}

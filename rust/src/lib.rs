@@ -27,6 +27,7 @@ pub mod benchkit;
 pub mod cost;
 pub mod error;
 pub mod exec;
+pub mod fault;
 pub mod graph;
 pub mod json;
 pub mod platform;

@@ -23,6 +23,8 @@
 //!                 [--admission-laxity on|off]
 //!                 [--autoscale-target F] [--autoscale-max-gpus N]
 //!                 [--streaming] [--window 512] [--outcomes-jsonl OUT]
+//!                 [--faults PLAN.json] [--retry-budget N]
+//!                 [--shed-policy lowest-priority|latest-deadline]
 //!                 [--json OUT]                      multi-DAG serving
 //! pyschedcl bench-check --baseline F --current F [--tolerance 0.15]
 //!                 [--update] [--validate]       CI bench-regression gate
@@ -69,10 +71,21 @@
 //! `BENCH_serve_real_stream.json` artifact via `--json` (gated in CI
 //! against `ci/bench_baselines/BENCH_serve_real_stream.json`). Batch modes
 //! are the same core at window 0.
+//!
+//! Fault-injected serving (PR 9): `--faults PLAN.json` installs a seeded
+//! device crash/wedge/slowdown plan into the always-on server (sim and
+//! real): crashed devices leave the scheduler, their work retries on the
+//! survivors under the plan's retry budget and exponential backoff, and
+//! queued work whose deadline can no longer be met is shed under
+//! `--shed-policy`. `--retry-budget N` overrides the plan's budget. The
+//! report's `served + rejected + shed == offered` accounting and the
+//! chaos proof live in `benches/serve_chaos.rs`, gated in CI against
+//! `ci/bench_baselines/BENCH_serve_chaos.json`.
 
 use pyschedcl::cost::{CalibratedCost, CostModel, PaperCost};
 use pyschedcl::error::{Error, Result};
 use pyschedcl::exec::execute_dag;
+use pyschedcl::fault::{FaultPlan, ShedPolicy};
 use pyschedcl::graph::Partition;
 use pyschedcl::json::Json;
 use pyschedcl::platform::{DeviceType, Platform};
@@ -479,18 +492,64 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )))
         }
     };
+    if !streaming
+        && (args.get("faults").is_some()
+            || args.get("retry-budget").is_some()
+            || args.get("shed-policy").is_some())
+    {
+        return Err(Error::Io(
+            "--faults/--retry-budget/--shed-policy drive the always-on server \
+             (add --streaming)"
+                .into(),
+        ));
+    }
     if streaming {
         if args.get("autoscale-target").is_some() {
             return Err(Error::Io(
                 "--autoscale-target is a batch-mode experiment (drop --streaming)".into(),
             ));
         }
+        // Chaos serving: a seeded fault plan, with CLI overrides for the
+        // retry budget and the degradation policy.
+        let faults = match args.get("faults") {
+            Some(path) => {
+                let mut plan = FaultPlan::from_file(path)?;
+                if let Some(v) = args.get("retry-budget") {
+                    plan.retry_budget = v.parse().map_err(|_| {
+                        Error::Io(format!(
+                            "invalid --retry-budget '{v}' (expected a non-negative integer)"
+                        ))
+                    })?;
+                }
+                if let Some(v) = args.get("shed-policy") {
+                    plan.shed_policy = ShedPolicy::parse(v)?;
+                }
+                println!(
+                    "fault plan: {} event(s), retry budget {}, shed policy {}",
+                    plan.events.len(),
+                    plan.retry_budget,
+                    plan.shed_policy.name()
+                );
+                Some(plan)
+            }
+            None => {
+                if args.get("retry-budget").is_some() || args.get("shed-policy").is_some() {
+                    return Err(Error::Io(
+                        "--retry-budget and --shed-policy tune a fault plan \
+                         (add --faults PLAN.json)"
+                            .into(),
+                    ));
+                }
+                None
+            }
+        };
         let scfg = StreamingConfig {
             window: args.usize_or("window", 512),
             batch_window: cfg.batch_window,
             tenancy: cfg.tenancy,
             laxity_admission: cfg.laxity_admission,
             sim: SimConfig::default(),
+            faults,
         };
         let mut policy = policy_by_name(policy_name)?;
 
@@ -804,25 +863,6 @@ fn on_off_flag(args: &Args, key: &str) -> Result<bool> {
     }
 }
 
-/// One committed corpus seed: `{"seed": N, "orderings": K, "note": "..."}`.
-fn parse_corpus_seed(text: &str) -> Result<(u64, usize, String)> {
-    let json = Json::parse(text)?;
-    let seed = json
-        .field("seed")?
-        .as_u64()
-        .ok_or_else(|| Error::Io("corpus field 'seed' is not a u64".into()))?;
-    let orderings = json
-        .field("orderings")?
-        .as_usize()
-        .ok_or_else(|| Error::Io("corpus field 'orderings' is not a usize".into()))?;
-    let note = json
-        .get("note")
-        .and_then(|n| n.as_str())
-        .unwrap_or("")
-        .to_string();
-    Ok((seed, orderings, note))
-}
-
 /// `pyschedcl fuzz`: deterministic concurrency fuzzer for the scheduler
 /// core ([`pyschedcl::sched::fuzz`]). Three modes:
 ///
@@ -845,7 +885,7 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
 }
 
 fn cmd_fuzz_inner(args: &Args) -> Result<()> {
-    use pyschedcl::sched::fuzz::{run_many, run_seed, shrink_seed, FuzzConfig};
+    use pyschedcl::sched::fuzz::{load_corpus_seeds, run_many, run_seed, shrink_seed, FuzzConfig};
     let cfg = FuzzConfig {
         orderings: args.usize_or("orderings", 4).max(1),
         budget: args.get("budget").and_then(|v| v.parse().ok()),
@@ -854,31 +894,24 @@ fn cmd_fuzz_inner(args: &Args) -> Result<()> {
     let verbose = on_off_flag(args, "verbose")?;
     let shrink = on_off_flag(args, "shrink")?;
 
-    // Corpus replay: the committed regression seeds.
+    // Corpus replay: the committed regression seeds (loading lives in the
+    // library so the error contract is unit-tested there).
     if let Some(dir) = args.get("corpus") {
-        let entries = std::fs::read_dir(dir)
-            .map_err(|e| Error::Io(format!("cannot read corpus dir {dir}: {e}")))?;
-        let mut paths: Vec<PathBuf> = entries
-            .filter_map(|e| e.ok().map(|e| e.path()))
-            .filter(|p| p.extension().is_some_and(|x| x == "json"))
-            .collect();
-        paths.sort();
-        if paths.is_empty() {
-            return Err(Error::Io(format!("no *.json corpus seeds in {dir}")));
-        }
+        let seeds = load_corpus_seeds(dir)?;
         let mut failed = 0usize;
-        for p in &paths {
-            let text = std::fs::read_to_string(p)
-                .map_err(|e| Error::Io(format!("cannot read {}: {e}", p.display())))?;
-            let (seed, orderings, note) =
-                parse_corpus_seed(&text).map_err(|e| Error::Io(format!("{}: {e}", p.display())))?;
-            let ccfg = FuzzConfig { orderings, ..cfg };
-            let rep = run_seed(seed, &ccfg);
-            let replay_identical = run_seed(seed, &ccfg).log == rep.log;
+        for cs in &seeds {
+            let ccfg = FuzzConfig {
+                orderings: cs.orderings,
+                ..cfg
+            };
+            let rep = run_seed(cs.seed, &ccfg);
+            let replay_identical = run_seed(cs.seed, &ccfg).log == rep.log;
             let ok = rep.ok() && replay_identical;
             println!(
-                "corpus {}: seed {seed} [{note}] {}",
-                p.file_name().and_then(|n| n.to_str()).unwrap_or("?"),
+                "corpus {}: seed {} [{}] {}",
+                cs.path.file_name().and_then(|n| n.to_str()).unwrap_or("?"),
+                cs.seed,
+                cs.note,
                 if ok { "ok" } else { "FAIL" }
             );
             if verbose {
@@ -897,7 +930,7 @@ fn cmd_fuzz_inner(args: &Args) -> Result<()> {
         if failed > 0 {
             return Err(Error::Sched(format!("{failed} corpus seed(s) failed")));
         }
-        println!("corpus: all {} seed(s) green", paths.len());
+        println!("corpus: all {} seed(s) green", seeds.len());
         return Ok(());
     }
 

@@ -29,5 +29,5 @@ pub use experiments::{
 };
 pub use serving::{
     format_real_summary, format_serve_comparison, format_stream_summary, peak_rss_mb,
-    serve_bench_json, serve_real_stream_json, serve_soak_json,
+    serve_bench_json, serve_chaos_json, serve_real_stream_json, serve_soak_json,
 };

@@ -1,9 +1,12 @@
 //! Serving-layer reporting: the sequential-vs-concurrent comparison table,
 //! the `BENCH_serve.json` artifact the CI bench smoke uploads, the
 //! streaming-soak artifact (`BENCH_serve_soak.json`) with its bounded-state
-//! witnesses (peak live components, peak RSS), and the real-path streaming
+//! witnesses (peak live components, peak RSS), the real-path streaming
 //! artifact (`BENCH_serve_real_stream.json`) gating
-//! `serve --streaming --mode real` in CI.
+//! `serve --streaming --mode real` in CI, and the fault-injection artifact
+//! (`BENCH_serve_chaos.json`) whose baseline pins `lost` — offered
+//! requests unaccounted for by `served + rejected + shed` — to exactly
+//! zero under a seeded crash/wedge/slowdown plan.
 
 use crate::json::Json;
 use crate::serve::{ServeReport, StreamReport};
@@ -196,6 +199,37 @@ pub fn serve_soak_json(r: &StreamReport, wall_seconds: f64, rss_mb: Option<f64>)
     Json::obj(fields)
 }
 
+/// The `BENCH_serve_chaos.json` schema: the fault-injected serving gate
+/// surface. The headline is `lost` — offered requests unaccounted for by
+/// `served + rejected + shed` — which the committed baseline pins to
+/// exactly zero: crashes, wedges, and slowdowns may delay or shed work,
+/// but may never silently drop it. `max_retries` witnesses that recovery
+/// stayed inside the plan's budget, and `fault_events` that the plan
+/// actually installed.
+pub fn serve_chaos_json(r: &StreamReport, wall_seconds: f64, fault_events: usize) -> Json {
+    let lost = r.offered as f64 - r.served as f64 - r.rejected as f64 - r.shed as f64;
+    Json::obj(vec![
+        ("schema", Json::str("pyschedcl-serve-chaos-v1")),
+        ("streaming", r.to_json()),
+        ("offered", Json::num(r.offered as f64)),
+        ("served", Json::num(r.served as f64)),
+        ("rejected", Json::num(r.rejected as f64)),
+        ("shed", Json::num(r.shed as f64)),
+        ("lost", Json::num(lost)),
+        ("max_retries", Json::num(r.max_retries as f64)),
+        ("fault_events", Json::num(fault_events as f64)),
+        ("wall_seconds", Json::num(wall_seconds)),
+        ("p99_latency_s", Json::num(r.p99_latency)),
+        ("deadline_miss_rate", Json::num(r.deadline_miss_rate)),
+        ("preemptions", Json::num(r.preemptions as f64)),
+        ("peak_live_requests", Json::num(r.peak_live_requests as f64)),
+        (
+            "peak_live_components",
+            Json::num(r.peak_live_components as f64),
+        ),
+    ])
+}
+
 /// The `BENCH_serve_real_stream.json` schema: the real-path streaming
 /// smoke's gate surface — tail latency, miss rate, backpressure witness,
 /// and executable-cache behaviour, with the full [`StreamReport`] nested
@@ -270,6 +304,12 @@ pub fn format_stream_summary(r: &StreamReport) -> String {
         r.events
     ));
     s.push_str(&format!("device util: {}\n", util.join(" ")));
+    if r.shed > 0 || r.max_retries > 0 {
+        s.push_str(&format!(
+            "faults: {} of {} offered request(s) shed, max {} crash retry(s) on one request\n",
+            r.shed, r.offered, r.max_retries
+        ));
+    }
     if r.deadline_total > 0 {
         s.push_str(&format!(
             "deadlines: {}/{} missed ({:.1}%), {} preemption(s)\n",
@@ -424,6 +464,71 @@ mod tests {
             .unwrap()
             .get("peak_rss_mb")
             .is_none());
+    }
+
+    #[test]
+    fn chaos_json_pins_conservation_and_the_retry_witness() {
+        use crate::fault::{FaultEvent, FaultKind, FaultPlan};
+        let platform = Platform::paper_testbed(3, 1);
+        let requests: Vec<ServeRequest> = (0..8)
+            .map(|i| ServeRequest::new(i, i as f64 * 1e-3, Workload::Head { beta: 64 }))
+            .collect();
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                device: 0,
+                at: 2e-3,
+                kind: FaultKind::Crash,
+            }],
+            retry_budget: 4,
+            backoff_base: 1e-4,
+            ..FaultPlan::default()
+        }
+        .normalized()
+        .unwrap();
+        let n_events = plan.events.len();
+        let cfg = crate::serve::StreamingConfig {
+            faults: Some(plan),
+            ..crate::serve::StreamingConfig::default()
+        };
+        let mut sink = crate::serve::NullSink;
+        let report = crate::serve::serve_stream(
+            requests,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &cfg,
+            &mut sink,
+        )
+        .unwrap();
+        assert_eq!(report.served + report.rejected + report.shed, report.offered);
+        let summary = format_stream_summary(&report);
+        if report.shed > 0 || report.max_retries > 0 {
+            assert!(summary.contains("faults:"), "{summary}");
+        }
+        let json = serve_chaos_json(&report, 0.25, n_events);
+        let parsed = Json::parse(&json.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("schema").and_then(|s| s.as_str()),
+            Some("pyschedcl-serve-chaos-v1")
+        );
+        assert_eq!(parsed.get("offered").and_then(|v| v.as_f64()), Some(8.0));
+        assert_eq!(parsed.get("lost").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(parsed.get("fault_events").and_then(|v| v.as_f64()), Some(1.0));
+        for key in [
+            "served",
+            "rejected",
+            "shed",
+            "max_retries",
+            "wall_seconds",
+            "p99_latency_s",
+            "deadline_miss_rate",
+            "preemptions",
+            "peak_live_requests",
+            "peak_live_components",
+        ] {
+            assert!(parsed.get(key).and_then(|v| v.as_f64()).is_some(), "{key}");
+        }
+        assert!(parsed.get("streaming").and_then(|s| s.get("lost")).is_some());
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //!   preempt-race (two equal victims) and re-entry sites.
 
 use crate::cost::{CostModel, PaperCost};
+use crate::fault::{FaultEvent, FaultKind, FaultPlan};
 use crate::graph::{Dag, Partition};
 use crate::platform::{DeviceType, Platform};
 use crate::sched::{Clustering, Edf, LeastLoaded, Policy};
@@ -336,6 +337,60 @@ pub fn stream_plan(seed: u64) -> StreamPlan {
                 units,
             }
         }
+    }
+}
+
+/// The fault-injection plan for stream-path seed `seed` on an
+/// `ndev`-device platform (pure function of both). Crafted seeds 0 and 1
+/// stay fault-free — their coverage guarantees for the other ambiguity
+/// classes must never depend on chaos — and so does half of the random
+/// space, keeping the zero-fault byte-identical paths under fuzz too.
+/// Fault seeds alternate between a single mid-run crash (never the whole
+/// platform: one device always survives) and a wedge+slowdown pair, both
+/// on the same coarse grid the workload times use so fault instants
+/// collide exactly with completions — the fault-race ambiguity.
+pub fn fault_plan(seed: u64, ndev: usize) -> Option<FaultPlan> {
+    if seed < 2 || ndev < 2 {
+        return None;
+    }
+    let mut rng = Rng::new(seed ^ 0xD6E8_FEB8_6659_FD93);
+    match seed % 4 {
+        2 => {
+            let plan = FaultPlan {
+                events: vec![FaultEvent {
+                    device: rng.below(ndev),
+                    at: (1 + rng.below(4)) as f64 * GRID,
+                    kind: FaultKind::Crash,
+                }],
+                retry_budget: 2,
+                backoff_base: 1e-4,
+                ..FaultPlan::default()
+            };
+            Some(plan.normalized().expect("crafted crash plan is valid"))
+        }
+        3 => {
+            let wedge_dev = rng.below(ndev);
+            let slow_dev = rng.below(ndev);
+            let plan = FaultPlan {
+                events: vec![
+                    FaultEvent {
+                        device: wedge_dev,
+                        at: (1 + rng.below(3)) as f64 * GRID,
+                        kind: FaultKind::Wedge { dur: 2.0 * GRID },
+                    },
+                    FaultEvent {
+                        device: slow_dev,
+                        at: (1 + rng.below(4)) as f64 * GRID,
+                        kind: FaultKind::Slowdown { factor: 0.5 },
+                    },
+                ],
+                retry_budget: 3,
+                backoff_base: 1e-4,
+                ..FaultPlan::default()
+            };
+            Some(plan.normalized().expect("crafted wedge plan is valid"))
+        }
+        _ => None,
     }
 }
 

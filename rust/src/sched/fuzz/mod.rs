@@ -36,13 +36,16 @@ pub mod oracle;
 pub mod seam;
 pub mod shrink;
 
-pub use gen::{engine_workload, stream_plan, PolicyKind, StreamPlan, UnitPlan, Workload};
+pub use gen::{engine_workload, fault_plan, stream_plan, PolicyKind, StreamPlan, UnitPlan, Workload};
 pub use oracle::{fuzz_state_events, OracleStats};
 pub use seam::{Ambiguity, ClassCoverage, Decision, OrderSeam};
 pub use shrink::{shrink_seed, FailingRun, ShrinkResult};
 
 use crate::cost::{CostModel, PaperCost};
+use crate::error::Error;
+use crate::fault::{FaultKind, FaultPlan};
 use crate::graph::{Dag, Partition};
+use crate::json::Json;
 use crate::platform::Platform;
 use crate::sim::{
     simulate_served_fuzzed, AdmitUnit, MemberSpec, PumpStop, SimConfig, SimResult, StreamSim,
@@ -235,6 +238,7 @@ pub(crate) fn run_stream_path(seed: u64, ordering: usize, budget: Option<u64>) -
     let ncomp = tmpl.1.components.len();
     let n_units = units.len();
     let max_release = units.iter().map(|u| u.release).fold(0.0, f64::max);
+    let plan = fault_plan(seed, platform.devices.len());
     let empty_dag = Dag::default();
     let empty_part = Partition {
         components: Vec::new(),
@@ -242,7 +246,7 @@ pub(crate) fn run_stream_path(seed: u64, ordering: usize, budget: Option<u64>) -
     };
     let mut policy = pk.build();
     let res = catch_unwind(AssertUnwindSafe(
-        || -> std::result::Result<(f64, usize, Vec<f64>, OrderSeam), String> {
+        || -> std::result::Result<(f64, usize, Vec<f64>, usize, usize, OrderSeam), String> {
             let mut sim = StreamSim::new(
                 &empty_dag,
                 &empty_part,
@@ -253,6 +257,10 @@ pub(crate) fn run_stream_path(seed: u64, ordering: usize, budget: Option<u64>) -
             )
             .map_err(|e| format!("stream construction: {e}"))?;
             sim.install_seam(OrderSeam::with_budget(seam_seed(seed, ordering), budget));
+            if let Some(p) = &plan {
+                sim.install_faults(p)
+                    .map_err(|e| format!("install faults: {e}"))?;
+            }
             for (i, u) in units.iter().enumerate() {
                 sim.admit(AdmitUnit {
                     tmpl: Template::Single(tmpl.clone()),
@@ -286,6 +294,11 @@ pub(crate) fn run_stream_path(seed: u64, ordering: usize, budget: Option<u64>) -
                 ));
             }
             fin.sort_by_key(|f| f.id);
+            for w in fin.windows(2) {
+                if w[0].id == w[1].id {
+                    return Err(format!("request {} surfaced twice (duplicated)", w[0].id));
+                }
+            }
             for f in &fin {
                 if !f.finish.is_finite() || f.finish + EPS < f.release {
                     return Err(format!(
@@ -294,26 +307,66 @@ pub(crate) fn run_stream_path(seed: u64, ordering: usize, budget: Option<u64>) -
                     ));
                 }
             }
+            // Fault-recovery bookkeeping: retries stay within the plan's
+            // budget (a shed record carries the budget-busting charge),
+            // and without a plan no fault accounting may appear at all.
+            match &plan {
+                Some(p) => {
+                    for f in &fin {
+                        let cap = if f.shed { p.retry_budget + 1 } else { p.retry_budget };
+                        if f.retries > cap {
+                            return Err(format!(
+                                "request {} consumed {} retries (budget {}, shed {})",
+                                f.id, f.retries, p.retry_budget, f.shed
+                            ));
+                        }
+                    }
+                }
+                None => {
+                    if let Some(f) = fin.iter().find(|f| f.shed || f.retries != 0) {
+                        return Err(format!(
+                            "request {} shows fault bookkeeping with no plan installed",
+                            f.id
+                        ));
+                    }
+                }
+            }
             let finishes: Vec<f64> = fin.iter().map(|f| f.finish).collect();
+            let shed = sim.shed();
+            let displaced = sim.fault_displacements();
             let seam = sim.take_seam().expect("seam was installed");
-            Ok((sim.makespan(), sim.preemptions(), finishes, seam))
+            Ok((sim.makespan(), sim.preemptions(), finishes, shed, displaced, seam))
         },
     ));
     match res {
         Err(p) => PathRun::failed(format!("stream panicked: {}", panic_message(p.as_ref()))),
         Ok(Err(e)) => PathRun::failed(e),
-        Ok(Ok((makespan, preemptions, finishes, seam))) => {
+        Ok(Ok((makespan, preemptions, finishes, shed, displaced, seam))) => {
             let mut failure = None;
             let lo = max_release + makespan_lower_bound(&tmpl.0, &platform);
-            if makespan + EPS < lo {
+            // A shed request never ran to completion, so the critical-path
+            // floor only binds when everything was actually served.
+            if shed == 0 && makespan + EPS < lo {
                 failure = Some(format!(
                     "makespan {makespan:.6} below the provable floor {lo:.6}"
                 ));
             }
-            let hi = makespan_envelope(&tmpl.0, &platform, &cfg, max_release, preemptions, n_units);
+            let mut hi = makespan_envelope(
+                &tmpl.0,
+                &platform,
+                &cfg,
+                max_release,
+                preemptions + displaced,
+                n_units,
+            );
+            if let Some(p) = &plan {
+                let (scale, add) = fault_allowance(p, n_units);
+                hi = hi * scale + add;
+            }
             if makespan > hi {
                 failure = Some(format!(
-                    "makespan {makespan:.6} above the envelope {hi:.6} (preemptions {preemptions})"
+                    "makespan {makespan:.6} above the envelope {hi:.6} \
+                     (preemptions {preemptions}, fault displacements {displaced})"
                 ));
             }
             let mut run = PathRun {
@@ -394,6 +447,24 @@ fn makespan_envelope(
     let eff = cfg.contention_efficiency.clamp(0.25, 1.0);
     let per_copy = (copies as f64) * (serial / eff + xfer) + over;
     max_release + (1.0 + preemptions as f64) * per_copy * 4.0 + 1.0
+}
+
+/// How much an installed fault plan is allowed to widen the makespan
+/// envelope: a slowdown scales every kernel by up to `1/factor`, wedges
+/// add their stall outright, and each request may burn the full
+/// exponential-backoff series before its last retry.
+fn fault_allowance(plan: &FaultPlan, n_units: usize) -> (f64, f64) {
+    let mut scale = 1.0f64;
+    let mut add = 0.0f64;
+    for e in &plan.events {
+        match e.kind {
+            FaultKind::Wedge { dur } => add += dur,
+            FaultKind::Slowdown { factor } => scale = scale.max(1.0 / factor),
+            FaultKind::Crash => {}
+        }
+    }
+    add += n_units as f64 * plan.backoff_base * (1u64 << (plan.retry_budget.min(20) + 1)) as f64;
+    (scale, add)
 }
 
 fn check_engine_invariants(wl: &Workload, sim: &SimResult) -> std::result::Result<(), String> {
@@ -513,7 +584,17 @@ pub fn run_seed(seed: u64, cfg: &FuzzConfig) -> SeedReport {
         engine_fp = run.fingerprint;
     }
 
-    let _ = writeln!(rep.log, "  stream: {}", stream_plan(seed).label);
+    let sp = stream_plan(seed);
+    let _ = writeln!(rep.log, "  stream: {}", sp.label);
+    if let Some(p) = fault_plan(seed, sp.platform.devices.len()) {
+        let _ = writeln!(
+            rep.log,
+            "    faults: {} event(s), retry budget {}, policy {}",
+            p.events.len(),
+            p.retry_budget,
+            p.shed_policy.name()
+        );
+    }
     let mut stream_fp = 0u64;
     for o in 0..orderings {
         let run = run_stream_path(seed, o, ordering_budget(cfg, o));
@@ -640,6 +721,67 @@ impl FuzzSummary {
     }
 }
 
+// ------------------------------------------------------------------- corpus
+
+/// One committed corpus regression seed:
+/// `{"seed": N, "orderings": K, "note": "..."}`.
+pub struct CorpusSeed {
+    pub path: std::path::PathBuf,
+    pub seed: u64,
+    pub orderings: usize,
+    pub note: String,
+}
+
+fn parse_corpus_seed(text: &str) -> crate::error::Result<(u64, usize, String)> {
+    let json = Json::parse(text)?;
+    let seed = json
+        .field("seed")?
+        .as_u64()
+        .ok_or_else(|| Error::Io("corpus field 'seed' is not a u64".into()))?;
+    let orderings = json
+        .field("orderings")?
+        .as_usize()
+        .ok_or_else(|| Error::Io("corpus field 'orderings' is not a usize".into()))?;
+    let note = json
+        .get("note")
+        .and_then(|n| n.as_str())
+        .unwrap_or("")
+        .to_string();
+    Ok((seed, orderings, note))
+}
+
+/// Load every committed `*.json` regression seed in `dir`, sorted by
+/// path — the `pyschedcl fuzz --corpus DIR` loader, in the library so the
+/// error contract is testable. Every failure is a typed [`Error::Io`]: an
+/// unreadable directory is `cannot read corpus dir {dir}: {e}` and a
+/// directory holding no seeds is `no *.json corpus seeds in {dir}`.
+pub fn load_corpus_seeds(dir: &str) -> crate::error::Result<Vec<CorpusSeed>> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| Error::Io(format!("cannot read corpus dir {dir}: {e}")))?;
+    let mut paths: Vec<std::path::PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(Error::Io(format!("no *.json corpus seeds in {dir}")));
+    }
+    let mut seeds = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| Error::Io(format!("cannot read {}: {e}", p.display())))?;
+        let (seed, orderings, note) =
+            parse_corpus_seed(&text).map_err(|e| Error::Io(format!("{}: {e}", p.display())))?;
+        seeds.push(CorpusSeed {
+            path: p,
+            seed,
+            orderings,
+            note,
+        });
+    }
+    Ok(seeds)
+}
+
 /// Fuzz `count` seeds starting at `start`, feeding each finished
 /// [`SeedReport`] to `per_seed` (print it, collect it, ignore it).
 pub fn run_many(
@@ -695,6 +837,62 @@ mod tests {
             sum.unproven_classes(),
             sum.render()
         );
+        // The chaos seam specifically: the sweep must have executed at
+        // least two distinct same-instant orderings of fault-vs-completion
+        // races, not merely reached the choice sites.
+        assert!(
+            sum.distinct[Ambiguity::FaultRace.idx()] >= 2,
+            "fault-race never diversified\n{}",
+            sum.render()
+        );
+    }
+
+    /// Crafted seeds stay fault-free (their coverage guarantees must not
+    /// depend on chaos) and fault plans are pure functions of the seed.
+    #[test]
+    fn fault_plans_are_deterministic_and_spare_crafted_seeds() {
+        assert!(fault_plan(0, 3).is_none());
+        assert!(fault_plan(1, 3).is_none());
+        for seed in [2u64, 3, 6, 7] {
+            let a = fault_plan(seed, 3).expect("fault seed has a plan");
+            let b = fault_plan(seed, 3).unwrap();
+            assert_eq!(a.events.len(), b.events.len());
+            for (x, y) in a.events.iter().zip(&b.events) {
+                assert_eq!(x.device, y.device);
+                assert_eq!(x.at.to_bits(), y.at.to_bits());
+            }
+            assert!(a.events.iter().all(|e| e.device < 3));
+        }
+    }
+
+    #[test]
+    fn corpus_loading_missing_dir_is_a_typed_io_error() {
+        let dir = "/nonexistent/pyschedcl-fuzz-corpus";
+        let e = load_corpus_seeds(dir).unwrap_err();
+        match e {
+            Error::Io(m) => assert!(
+                m.starts_with(&format!("cannot read corpus dir {dir}: ")),
+                "wrong message: {m}"
+            ),
+            other => panic!("expected Error::Io, got {other}"),
+        }
+    }
+
+    #[test]
+    fn corpus_loading_empty_dir_is_a_typed_io_error() {
+        let dir = std::env::temp_dir().join(format!(
+            "pyschedcl-empty-corpus-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir_s = dir.to_str().unwrap().to_string();
+        let e = load_corpus_seeds(&dir_s).unwrap_err();
+        std::fs::remove_dir_all(&dir).ok();
+        match e {
+            Error::Io(m) => assert_eq!(m, format!("no *.json corpus seeds in {dir_s}")),
+            other => panic!("expected Error::Io, got {other}"),
+        }
     }
 
     #[test]

@@ -52,11 +52,15 @@ pub enum Ambiguity {
     /// re-enters the frontier immediately or after the scheduler phase
     /// that displaced it finishes.
     Reentry,
+    /// Fault-recovery races: whether an injected fault lands before or
+    /// after completions due at its instant, which crash victim the
+    /// recovery sweep walks first, and re-entry order of recovered work.
+    FaultRace,
 }
 
 impl Ambiguity {
     /// Number of ambiguity classes.
-    pub const COUNT: usize = 5;
+    pub const COUNT: usize = 6;
     /// Every class, in report order.
     pub const ALL: [Ambiguity; Self::COUNT] = [
         Ambiguity::Completion,
@@ -64,6 +68,7 @@ impl Ambiguity {
         Ambiguity::DispatchTie,
         Ambiguity::PreemptRace,
         Ambiguity::Reentry,
+        Ambiguity::FaultRace,
     ];
 
     /// Dense index of this class (report/coverage array slot).
@@ -79,6 +84,7 @@ impl Ambiguity {
             Ambiguity::DispatchTie => "dispatch-tie",
             Ambiguity::PreemptRace => "preempt-race",
             Ambiguity::Reentry => "reentry",
+            Ambiguity::FaultRace => "fault-race",
         }
     }
 }

@@ -221,6 +221,10 @@ pub struct SchedState<'a> {
     available: Vec<DeviceId>,
     dev_available: Vec<bool>,
     avail_per_type: [usize; NTYPES],
+    /// Crashed devices ([`SchedState::on_device_down`]): excluded from the
+    /// available set regardless of tenancy until
+    /// [`SchedState::on_device_up`] clears the flag.
+    dev_down: Vec<bool>,
 
     in_frontier: Vec<bool>,
     entry_seq: Vec<u64>,
@@ -326,6 +330,7 @@ impl<'a> SchedState<'a> {
             available,
             dev_available,
             avail_per_type,
+            dev_down: vec![false; ndev],
             in_frontier: vec![false; ncomp],
             entry_seq: vec![0; ncomp],
             next_seq: 0,
@@ -433,7 +438,8 @@ impl<'a> SchedState<'a> {
     /// is behavior-neutral; it only reclaims memory. O(E) for E entries.
     pub fn compact_heaps(&mut self) {
         for t in 0..NTYPES {
-            let live = |comp: usize, seq: u64| self.in_frontier[comp] && self.entry_seq[comp] == seq;
+            let live =
+                |comp: usize, seq: u64| self.in_frontier[comp] && self.entry_seq[comp] == seq;
             let h = std::mem::take(&mut self.rank_heap[t]);
             self.rank_heap[t] = h.into_iter().filter(|e| live(e.comp, e.seq)).collect();
             let h = std::mem::take(&mut self.dl_heap[t]);
@@ -525,8 +531,14 @@ impl<'a> SchedState<'a> {
     // ------------------------------------------------------ device state
 
     /// Return `dev` to the available set (no-op if present), preserving
-    /// FIFO order exactly as the view-based engines did.
+    /// FIFO order exactly as the view-based engines did. A crashed device
+    /// never re-enters — tenant slots returned by its displaced residents
+    /// ([`SchedState::on_preempt`]/[`SchedState::on_complete`]) must not
+    /// resurrect it.
     fn device_add(&mut self, dev: DeviceId) {
+        if self.dev_down[dev] {
+            return;
+        }
         if !self.dev_available[dev] {
             self.dev_available[dev] = true;
             self.available.push(dev);
@@ -556,6 +568,44 @@ impl<'a> SchedState<'a> {
     #[doc(hidden)]
     pub fn mark_unavailable(&mut self, dev: DeviceId) {
         self.device_remove(dev);
+    }
+
+    /// `dev` crashed (fault injection / watchdog): leave the available set
+    /// and stay out until [`SchedState::on_device_up`]. Tenancy counts are
+    /// untouched — the engine displaces each resident, whose
+    /// [`SchedState::on_preempt`] returns the tenant slot without
+    /// resurrecting the device (see [`device_add`](Self::device_add)).
+    /// No-op when already down.
+    pub fn on_device_down(&mut self, dev: DeviceId) {
+        if self.dev_down[dev] {
+            return;
+        }
+        self.dev_down[dev] = true;
+        self.device_remove(dev);
+    }
+
+    /// `dev` recovered: clear the down flag and re-enter the available set
+    /// if it is eligible (has command queues, under the tenancy cap).
+    /// No-op when not down.
+    pub fn on_device_up(&mut self, dev: DeviceId) {
+        if !self.dev_down[dev] {
+            return;
+        }
+        self.dev_down[dev] = false;
+        if self.platform.device(dev).num_queues > 0 && self.tenants[dev] < self.tenancy {
+            self.device_add(dev);
+        }
+    }
+
+    /// Is `dev` marked crashed?
+    pub fn is_down(&self, dev: DeviceId) -> bool {
+        self.dev_down[dev]
+    }
+
+    /// A frontier component was shed (graceful degradation): it leaves the
+    /// frontier without being dispatched. No-op when not in the frontier.
+    pub fn on_shed(&mut self, comp: usize) {
+        self.frontier_leave(comp);
     }
 
     // ------------------------------------------------------------ queries
@@ -981,6 +1031,9 @@ impl<'a> SchedState<'a> {
             }
             if self.dev_available[d] {
                 per_type[ti(self.platform.device(d).dtype)] += 1;
+                if self.dev_down[d] {
+                    return Err(format!("device {d} available while marked down"));
+                }
                 if self.platform.device(d).num_queues == 0 {
                     return Err(format!("device {d} available with no command queues"));
                 }
@@ -1123,6 +1176,61 @@ mod tests {
         assert!(st.has_available(DeviceType::Gpu));
         // Available order is FIFO: CPU (never removed) first, GPU re-added.
         assert_eq!(st.available().to_vec(), vec![1, 0]);
+    }
+
+    /// A crashed device leaves the available set and stays out: tenant
+    /// slots returned by its displaced residents must not resurrect it,
+    /// and only an explicit `on_device_up` brings it back.
+    #[test]
+    fn device_down_survives_preempt_and_complete() {
+        let (dag, part) = heads_app(2, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let n = part.components.len();
+        let mut st = state_for(&dag, &part, &platform, vec![f64::INFINITY; n], vec![0; n]);
+        st.on_ready(0);
+        st.on_dispatch(0, 0);
+        st.on_device_down(0);
+        assert!(st.is_down(0));
+        assert!(!st.is_available(0));
+        // The displaced resident returns its tenant slot; the crashed
+        // device must not re-enter the available set.
+        st.on_preempt(0);
+        assert_eq!(st.tenants[0], 0);
+        assert!(!st.is_available(0));
+        assert!(!st.has_available(DeviceType::Gpu));
+        st.check_invariants().unwrap();
+        // Recovery restores eligibility.
+        st.on_device_up(0);
+        assert!(!st.is_down(0));
+        assert!(st.is_available(0));
+        st.check_invariants().unwrap();
+        // Down at the tenancy cap: coming back up waits for a completion.
+        st.on_ready(0);
+        st.on_dispatch(0, 0);
+        st.on_device_down(0);
+        st.on_device_up(0);
+        assert!(!st.is_available(0), "still at the tenancy cap");
+        st.on_complete(0);
+        assert!(st.is_available(0));
+        st.check_invariants().unwrap();
+    }
+
+    /// Shedding removes a frontier component without a dispatch.
+    #[test]
+    fn on_shed_leaves_the_frontier_clean() {
+        let (dag, part) = heads_app(2, 0);
+        let platform = Platform::paper_testbed(3, 1);
+        let n = part.components.len();
+        let mut st = state_for(&dag, &part, &platform, vec![0.5, f64::INFINITY], vec![0; n]);
+        st.on_ready(0);
+        st.on_ready(1);
+        st.on_shed(0);
+        assert_eq!(st.frontier_len(), 1);
+        assert!(!st.in_frontier(0));
+        assert_eq!(st.rank_head(), Some(1));
+        st.on_shed(0); // no-op when absent
+        assert_eq!(st.frontier_len(), 1);
+        st.check_invariants().unwrap();
     }
 
     /// Preemption re-entry must invalidate the victim's stale heap entries:

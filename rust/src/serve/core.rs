@@ -47,6 +47,7 @@ use super::histogram::LatencyHistogram;
 use super::request::ServeRequest;
 use crate::cost::CostModel;
 use crate::error::{Error, Result};
+use crate::fault::{FaultPlan, ShedPolicy};
 use crate::graph::{Dag, Partition};
 use crate::json::Json;
 use crate::platform::{DeviceId, Platform};
@@ -71,6 +72,11 @@ pub struct StreamingConfig {
     /// Underlying simulator knobs (sim backend only). `max_events` is the
     /// per-pump runaway guard here, not a whole-run cap.
     pub sim: SimConfig,
+    /// Fault-injection plan: crash/wedge/slowdown events plus the retry
+    /// budget, backoff base, and shedding policy ([`FaultPlan`]). `None` —
+    /// the default — keeps every serving path byte-identical to the
+    /// fault-free build.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for StreamingConfig {
@@ -81,6 +87,7 @@ impl Default for StreamingConfig {
             tenancy: 4,
             laxity_admission: true,
             sim: SimConfig::default(),
+            faults: None,
         }
     }
 }
@@ -92,6 +99,15 @@ pub trait OutcomeSink {
     /// `devices` is the device each of the request's components ran on,
     /// in component order (last device for preempted components).
     fn emit(&mut self, outcome: &RequestOutcome, devices: &[DeviceId]) -> Result<()>;
+
+    /// A request shed by graceful degradation under faults (retry budget
+    /// exhausted, every device down, or negative projected laxity in the
+    /// admit queue). Never counted as served; `outcome.finish` is the shed
+    /// instant and `devices` lists only components that actually ran. The
+    /// default discards, so fault-free sinks are untouched.
+    fn emit_shed(&mut self, _outcome: &RequestOutcome, _devices: &[DeviceId]) -> Result<()> {
+        Ok(())
+    }
 
     /// Flush any buffered output; called once at end of stream.
     fn flush(&mut self) -> Result<()> {
@@ -150,8 +166,11 @@ impl<W: Write> Drop for JsonlSink<W> {
     }
 }
 
-impl<W: Write> OutcomeSink for JsonlSink<W> {
-    fn emit(&mut self, o: &RequestOutcome, devices: &[DeviceId]) -> Result<()> {
+impl<W: Write> JsonlSink<W> {
+    /// Shared line writer. Served lines are byte-identical to the
+    /// pre-fault format; shed lines append a single `"outcome":"shed"`
+    /// field so consumers can separate degradation from service.
+    fn write_line(&mut self, o: &RequestOutcome, devices: &[DeviceId], shed: bool) -> Result<()> {
         let met = match o.deadline_met {
             Some(true) => "true",
             Some(false) => "false",
@@ -168,8 +187,22 @@ impl<W: Write> OutcomeSink for JsonlSink<W> {
             }
             write!(self.w, "{d}")?;
         }
-        writeln!(self.w, "]}}")?;
+        if shed {
+            writeln!(self.w, "],\"outcome\":\"shed\"}}")?;
+        } else {
+            writeln!(self.w, "]}}")?;
+        }
         Ok(())
+    }
+}
+
+impl<W: Write> OutcomeSink for JsonlSink<W> {
+    fn emit(&mut self, o: &RequestOutcome, devices: &[DeviceId]) -> Result<()> {
+        self.write_line(o, devices, false)
+    }
+
+    fn emit_shed(&mut self, o: &RequestOutcome, devices: &[DeviceId]) -> Result<()> {
+        self.write_line(o, devices, true)
     }
 
     fn flush(&mut self) -> Result<()> {
@@ -189,6 +222,16 @@ pub struct StreamReport {
     pub served: usize,
     /// Total admission rejections over the stream.
     pub rejected: usize,
+    /// Requests shed by graceful degradation under faults: retry budget
+    /// exhausted, every schedulable device crashed, or negative projected
+    /// laxity while queued behind the window. Conservation holds over every
+    /// run: `served + rejected + shed == offered`.
+    pub shed: usize,
+    /// Requests pulled from the arrival stream, whatever became of them.
+    pub offered: usize,
+    /// Highest per-request crash-retry count observed (≤ the fault plan's
+    /// `retry_budget`; 0 on fault-free runs).
+    pub max_retries: u32,
     /// First few `(request id, admission error)` rejections, capped — the
     /// full list would grow with the stream.
     pub rejected_sample: Vec<(usize, String)>,
@@ -247,6 +290,18 @@ impl StreamReport {
             ("pacing", Json::str(self.pacing)),
             ("requests", Json::num(self.served as f64)),
             ("rejected", Json::num(self.rejected as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("offered", Json::num(self.offered as f64)),
+            (
+                "lost",
+                Json::num(
+                    (self.offered as f64)
+                        - (self.served as f64)
+                        - (self.rejected as f64)
+                        - (self.shed as f64),
+                ),
+            ),
+            ("max_retries", Json::num(self.max_retries as f64)),
             ("laxity_rejections", Json::num(self.laxity_rejections as f64)),
             ("makespan_s", Json::num(self.makespan)),
             ("throughput_rps", Json::num(self.throughput_rps)),
@@ -366,6 +421,22 @@ pub trait ServeBackend {
     /// bounds.
     fn live_requests(&self) -> usize;
 
+    /// Current instant on this backend's clock (virtual seconds in sim,
+    /// wall seconds from the serve epoch on the real backend) — the clock
+    /// the core's deadline-aware queue shedding compares laxity against.
+    /// The default places "now" before every deadline, so a backend that
+    /// does not override it never triggers queue shedding.
+    fn now(&self) -> f64 {
+        f64::NEG_INFINITY
+    }
+
+    /// Release execution resources after a typed mid-stream abort: called
+    /// once, only on [`serve_core`]'s error path, before the error
+    /// propagates. The real backend drains and retires in-flight executor
+    /// work here so no execution outlives the serve call; backends without
+    /// background execution need not override.
+    fn abort(&mut self) {}
+
     /// Pacing label for latency semantics ([`outcome_fields`]): sim time is
     /// inherently open-loop ([`Pacing::Open`]); a closed-loop real replay
     /// returns [`Pacing::Closed`] so outcomes get the service-latency
@@ -418,6 +489,42 @@ pub fn serve_core<I>(
 where
     I: IntoIterator<Item = ServeRequest>,
 {
+    let r = serve_core_inner(
+        requests,
+        platform,
+        cost,
+        backend,
+        cfg,
+        cache,
+        sink,
+        policy_name,
+        reject_sample_cap,
+    );
+    if r.is_err() {
+        // A typed mid-stream abort must not leak execution state: give the
+        // backend the chance to drain and retire in-flight work before the
+        // error propagates (the real backend joins its executor thread
+        // here so nothing outlives the serve call).
+        backend.abort();
+    }
+    r
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_core_inner<I>(
+    requests: I,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    backend: &mut dyn ServeBackend,
+    cfg: &StreamingConfig,
+    cache: &mut TemplateCache,
+    sink: &mut dyn OutcomeSink,
+    policy_name: &str,
+    reject_sample_cap: usize,
+) -> Result<StreamReport>
+where
+    I: IntoIterator<Item = ServeRequest>,
+{
     let (hits0, misses0) = cache.stats();
     let pacing = backend.pacing();
 
@@ -433,6 +540,9 @@ where
 
     let mut served = 0usize;
     let mut rejected = 0usize;
+    let mut shed = 0usize;
+    let mut offered = 0usize;
+    let mut max_retries = 0u32;
     let mut rejected_sample: Vec<(usize, String)> = Vec::new();
     let mut laxity_rejections = 0usize;
     let mut deadline_total = 0usize;
@@ -463,6 +573,36 @@ where
             }
         }
 
+        // (1b) Deadline-aware load shedding. Under fault pressure the
+        // window can stay pinned for whole retry/backoff epochs; a queued
+        // unit whose every deadline has already passed on the backend
+        // clock has negative projected laxity and can only miss. Shed the
+        // plan's preferred victim — typed, accounted — instead of letting
+        // it rot behind the window. One victim per pass keeps shedding
+        // interleaved with (and subordinate to) real progress.
+        if let Some(plan) = cfg.faults.as_ref() {
+            if !admit_q.is_empty() {
+                let bnow = backend.now();
+                if let Some(i) = shed_victim(&admit_q, bnow, plan.shed_policy) {
+                    let u = admit_q.remove(i).expect("victim index in bounds");
+                    for m in &u.members {
+                        let o = outcome_fields(
+                            m.id,
+                            m.arrival,
+                            m.deadline,
+                            m.priority,
+                            u.release,
+                            bnow.max(u.release),
+                            pacing,
+                        );
+                        shed += 1;
+                        sink.emit_shed(&o, &[])?;
+                    }
+                    continue;
+                }
+            }
+        }
+
         // (2) Advance the backend to the next admission boundary. While a
         // batch is open its *opener* is the bound: the batch may close with
         // a release at or after the opener, and admission must happen
@@ -481,6 +621,12 @@ where
             let o = outcome_fields(
                 f.id, f.arrival, f.deadline, f.priority, f.release, f.finish, pacing,
             );
+            max_retries = max_retries.max(f.retries);
+            if f.shed {
+                shed += 1;
+                sink.emit_shed(&o, &f.devices)?;
+                continue;
+            }
             if let Some(met) = o.deadline_met {
                 deadline_total += 1;
                 if !met {
@@ -502,6 +648,7 @@ where
         // admission pipeline.
         if let Some(req) = next_arr.take() {
             next_arr = it.next();
+            offered += 1;
             match cache.admit_app(&req) {
                 Ok(app) => {
                     if req.arrival < last_arrival {
@@ -586,6 +733,9 @@ where
         policy: policy_name.to_string(),
         served,
         rejected,
+        shed,
+        offered,
+        max_retries,
         rejected_sample,
         laxity_rejections,
         makespan,
@@ -678,6 +828,45 @@ pub(crate) fn units_from_closed(
         }
     }
     Ok(())
+}
+
+/// Pick the queued unit to shed, if any has negative projected laxity:
+/// every member carries a deadline and every absolute deadline instant
+/// (`arrival + deadline`) lies before `now`. Among expired units the
+/// plan's policy chooses the victim: [`ShedPolicy::LowestPriority`] sheds
+/// the least-urgent unit first (tie: latest deadline);
+/// [`ShedPolicy::LatestDeadline`] sheds the unit whose deadline passed
+/// most recently — it had the most slack to begin with (tie: lowest
+/// priority). Units with any deadline-free member are never shed: nothing
+/// bounds their laxity.
+fn shed_victim(q: &VecDeque<AdmitUnit>, now: f64, policy: ShedPolicy) -> Option<usize> {
+    let mut best: Option<(usize, u32, f64)> = None; // (index, min priority, max deadline)
+    for (i, u) in q.iter().enumerate() {
+        let expired = !u.members.is_empty()
+            && u.members
+                .iter()
+                .all(|m| m.deadline.map(|d| m.arrival + d < now).unwrap_or(false));
+        if !expired {
+            continue;
+        }
+        let prio = u.members.iter().map(|m| m.priority).min().unwrap_or(0);
+        let dl = u
+            .members
+            .iter()
+            .filter_map(|m| m.deadline.map(|d| m.arrival + d))
+            .fold(f64::NEG_INFINITY, f64::max);
+        let better = match best {
+            None => true,
+            Some((_, bp, bd)) => match policy {
+                ShedPolicy::LowestPriority => prio < bp || (prio == bp && dl > bd),
+                ShedPolicy::LatestDeadline => dl > bd || (dl == bd && prio < bp),
+            },
+        };
+        if better {
+            best = Some((i, prio, dl));
+        }
+    }
+    best.map(|(i, ..)| i)
 }
 
 #[cfg(test)]

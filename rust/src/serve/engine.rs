@@ -495,6 +495,7 @@ pub fn serve_sim_cached(
         tenancy: cfg.tenancy,
         laxity_admission: cfg.laxity_admission,
         sim: cfg.sim.clone(),
+        faults: None,
     };
     let mut sink = CollectSink::default();
     // Uncapped rejection sample: the batch report carries the full list.

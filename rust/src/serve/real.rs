@@ -53,7 +53,8 @@ use super::merge::{merge_apps_refs, MergedApp};
 use super::request::ServeRequest;
 use crate::cost::CostModel;
 use crate::error::Result;
-use crate::exec::execute_dag_served;
+use crate::exec::{execute_dag_served, execute_dag_served_faulted, is_fault_error, ExecFaults};
+use crate::fault::FaultPlan;
 use crate::platform::Platform;
 use crate::runtime::Runtime;
 use crate::sched::Policy;
@@ -115,6 +116,13 @@ fn seed_isolated_inputs(
 /// would make open-loop latencies negative).
 const MAX_PACE_WAIT_S: f64 = 3600.0;
 
+/// Watchdog budget per kernel command: cost estimate × slack + floor.
+/// Generous on purpose — the estimate models a GTX-970-class device while
+/// the stand-in runs on whatever CPU CI provides, and the watchdog exists
+/// to catch *wedges* (commands that stopped progressing), not jitter.
+const WATCHDOG_SLACK: f64 = 64.0;
+const WATCHDOG_FLOOR_S: f64 = 0.25;
+
 /// Open-loop pacing: the next sleep chunk so the unit is dispatched no
 /// earlier than its nominal `release` instant (`now` = seconds since the
 /// serving epoch). `None` when the release is already due. Non-finite
@@ -156,6 +164,11 @@ pub struct RealBackend<'a> {
     warm: Vec<f64>,
     hits0: usize,
     misses0: usize,
+    /// Fault-injection plan on the serving epoch's wall clock (`None` keeps
+    /// the path byte-identical to the fault-free build).
+    faults: Option<FaultPlan>,
+    retry_budget: u32,
+    backoff_base: f64,
 }
 
 impl<'a> RealBackend<'a> {
@@ -194,7 +207,21 @@ impl<'a> RealBackend<'a> {
             warm: Vec::new(),
             hits0,
             misses0,
+            faults: None,
+            retry_budget: 0,
+            backoff_base: 0.0,
         }
+    }
+
+    /// Arm fault injection: validated against this backend's platform, the
+    /// plan's instants interpreted as wall seconds on the serving epoch.
+    pub fn install_faults(&mut self, plan: &FaultPlan) -> Result<()> {
+        plan.validate()?;
+        plan.validate_devices(self.platform.devices.len())?;
+        self.retry_budget = plan.retry_budget;
+        self.backoff_base = plan.backoff_base;
+        self.faults = Some(plan.clone().normalized()?);
+        Ok(())
     }
 
     /// Execute one unit end-to-end: pace to its release (open pacing),
@@ -220,44 +247,95 @@ impl<'a> RealBackend<'a> {
             Template::Single(app) => Arc::new(merge_apps_refs(&[app.as_ref()])?),
         };
         let inputs = seed_isolated_inputs(&merged, &member_ids, self.seed);
-        let (_, batch_misses0) = self.runtime.cache_stats();
-        let start = self.epoch.elapsed().as_secs_f64();
-        // Deadline/priority metadata for the executor's SchedState, re-based
-        // to the unit's clock (the executor's `now` starts at 0 per call):
-        // absolute deadline on the serving epoch minus the dispatch start.
-        let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
-        for m in &unit.members {
-            for c in m.comps.clone() {
-                meta[c].deadline = m
-                    .deadline
-                    .map(|d| m.arrival + d - start)
-                    .unwrap_or(f64::INFINITY);
-                meta[c].priority = m.priority;
+        // Fault recovery, whole-unit re-stage semantics: a `fault:`-typed
+        // failure (crashed device, wedge/watchdog timeout) rolls the unit
+        // back and re-runs it from scratch — inputs re-stage, every kernel
+        // re-executes on whatever devices survive — after an exponential
+        // backoff, up to the plan's retry budget. Budget exhausted, the
+        // unit's members are retired as typed shed outcomes instead of
+        // failing the stream. Non-fault errors abort as before.
+        let mut attempt: u32 = 0;
+        let (report, start) = loop {
+            let (_, batch_misses0) = self.runtime.cache_stats();
+            let start = self.epoch.elapsed().as_secs_f64();
+            // Deadline/priority metadata for the executor's SchedState,
+            // re-based to this attempt's clock (the executor's `now` starts
+            // at 0 per call): absolute deadline on the serving epoch minus
+            // the dispatch start.
+            let mut meta = vec![CompMeta::default(); merged.partition.components.len()];
+            for m in &unit.members {
+                for c in m.comps.clone() {
+                    meta[c].deadline = m
+                        .deadline
+                        .map(|d| m.arrival + d - start)
+                        .unwrap_or(f64::INFINITY);
+                    meta[c].priority = m.priority;
+                }
             }
-        }
-        let report = execute_dag_served(
-            &merged.dag,
-            &merged.partition,
-            self.platform,
-            self.cost,
-            &mut *self.policy,
-            self.runtime,
-            &inputs,
-            self.tenancy.max(1),
-            &meta,
-        )?;
-        let finish = self.epoch.elapsed().as_secs_f64();
-        let (_, batch_misses1) = self.runtime.cache_stats();
-        // Cold vs warm unit service latency — the observable cost of the
-        // executable cache. A unit is *cold* iff it actually lowered at
-        // least one executable (per-unit cache-miss delta), so a run on an
-        // already-warm runtime (prewarm, or a second stream in one process)
-        // correctly reports every unit warm.
-        if batch_misses1 > batch_misses0 {
-            self.cold.push(finish - start);
-        } else {
-            self.warm.push(finish - start);
-        }
+            let res = execute_dag_served_faulted(
+                &merged.dag,
+                &merged.partition,
+                self.platform,
+                self.cost,
+                &mut *self.policy,
+                self.runtime,
+                &inputs,
+                self.tenancy.max(1),
+                &meta,
+                self.faults.as_ref().map(|plan| ExecFaults {
+                    plan,
+                    epoch_offset: start,
+                    slack: WATCHDOG_SLACK,
+                    floor: WATCHDOG_FLOOR_S,
+                }),
+            );
+            match res {
+                Ok(report) => {
+                    let finish = self.epoch.elapsed().as_secs_f64();
+                    let (_, batch_misses1) = self.runtime.cache_stats();
+                    // Cold vs warm unit service latency — the observable
+                    // cost of the executable cache. A unit is *cold* iff it
+                    // actually lowered at least one executable (per-unit
+                    // cache-miss delta), so a run on an already-warm
+                    // runtime (prewarm, or a second stream in one process)
+                    // correctly reports every unit warm.
+                    if batch_misses1 > batch_misses0 {
+                        self.cold.push(finish - start);
+                    } else {
+                        self.warm.push(finish - start);
+                    }
+                    break (report, start);
+                }
+                Err(e) if self.faults.is_some() && is_fault_error(&e) => {
+                    attempt += 1;
+                    if attempt > self.retry_budget {
+                        let now = self.epoch.elapsed().as_secs_f64();
+                        for m in &unit.members {
+                            self.finished.push(FinishedRequest {
+                                id: m.id,
+                                arrival: m.arrival,
+                                deadline: m.deadline,
+                                priority: m.priority,
+                                release: unit.release,
+                                finish: now.max(unit.release),
+                                devices: Vec::new(),
+                                shed: true,
+                                retries: self.retry_budget,
+                            });
+                        }
+                        self.live -= unit.members.len();
+                        self.live_components -= merged.partition.components.len();
+                        self.makespan = self.epoch.elapsed().as_secs_f64();
+                        return Ok(());
+                    }
+                    let wait = self.backoff_base * (1u64 << (attempt - 1).min(62)) as f64;
+                    if wait > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(wait.min(MAX_PACE_WAIT_S)));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        };
         for (d, b) in self.busy.iter_mut().enumerate() {
             *b += report
                 .trace
@@ -291,6 +369,8 @@ impl<'a> RealBackend<'a> {
                 release: start,
                 finish: fin,
                 devices,
+                shed: false,
+                retries: attempt,
             });
         }
         self.live -= unit.members.len();
@@ -332,6 +412,24 @@ impl ServeBackend for RealBackend<'_> {
 
     fn live_requests(&self) -> usize {
         self.live
+    }
+
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn abort(&mut self) {
+        // Typed mid-stream abort: retire everything still resident. Unit
+        // execution is synchronous — execute_dag_served joins its worker
+        // threads before returning — so once the queue is dropped no
+        // executor thread can outlive the serve call; this drains the
+        // admitted-but-unexecuted units and the undrained completions so
+        // the backend ends the call empty.
+        for u in self.queue.drain(..) {
+            self.live -= u.members.len();
+            self.live_components -= u.tmpl.partition().components.len();
+        }
+        self.finished.clear();
     }
 
     fn pacing(&self) -> Pacing {
@@ -400,6 +498,9 @@ where
     let mut cache = TemplateCache::new();
     let mut backend =
         RealBackend::new(runtime, platform, cost, policy, cfg.tenancy, pacing, seed);
+    if let Some(plan) = &cfg.faults {
+        backend.install_faults(plan)?;
+    }
     serve_core(
         requests,
         platform,
@@ -440,6 +541,7 @@ pub fn serve_real(
         tenancy: cfg.tenancy,
         laxity_admission: cfg.laxity_admission,
         sim: cfg.sim.clone(),
+        faults: None,
     };
     let mut cache = TemplateCache::new();
     let mut backend =
@@ -499,12 +601,15 @@ pub fn serve_real(
 mod tests {
     use super::*;
     use crate::cost::PaperCost;
+    use crate::error::Error;
+    use crate::fault::{FaultEvent, FaultKind};
     use crate::sched::Clustering;
-    use crate::serve::core::NullSink;
+    use crate::serve::core::{JsonlSink, NullSink};
     use crate::serve::engine::RequestOutcome;
     use crate::serve::merge::merge_apps;
     use crate::serve::request::Workload;
     use std::collections::HashSet;
+    use std::io;
     use std::path::Path;
 
     fn artifact_runtime() -> Option<Arc<Runtime>> {
@@ -849,6 +954,7 @@ mod tests {
             tenancy: cfg.tenancy,
             laxity_admission: cfg.laxity_admission,
             sim: cfg.sim.clone(),
+            faults: None,
         };
         let mut sink = CollectSink::default();
         let streamed = serve_real_stream(
@@ -885,6 +991,166 @@ mod tests {
         );
         assert_eq!(streamed.pacing, "closed");
         assert_eq!(streamed.window, 0);
+    }
+
+    /// Writer that fails with a typed io error after `ok_writes` successful
+    /// write calls — a disk filling up mid-stream.
+    struct FailingWriter {
+        ok_writes: usize,
+    }
+
+    impl io::Write for FailingWriter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.ok_writes == 0 {
+                return Err(io::Error::new(io::ErrorKind::Other, "disk full"));
+            }
+            self.ok_writes -= 1;
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// A typed mid-stream sink failure must abort the real path cleanly:
+    /// the error surfaces as `Error::Io`, the call returns (unit execution
+    /// is synchronous, so no executor thread outlives it), and the
+    /// backend's abort hook retires every queued unit and undrained
+    /// completion instead of leaking them.
+    #[test]
+    fn failing_sink_mid_stream_aborts_and_drains_the_real_backend() {
+        let Some(rt) = artifact_runtime() else {
+            return;
+        };
+        let platform = Platform::paper_testbed(3, 1);
+        let requests: Vec<ServeRequest> = (0..6)
+            .map(|i| ServeRequest::new(i, i as f64 * 1e-4, Workload::Head { beta: 32 }))
+            .collect();
+        let scfg = StreamingConfig {
+            window: 1,
+            batch_window: 0.0,
+            ..StreamingConfig::default()
+        };
+        let mut sink = JsonlSink::new(FailingWriter { ok_writes: 3 });
+        let e = serve_real_stream(
+            requests,
+            &rt,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &scfg,
+            Pacing::Closed,
+            false,
+            7,
+            &mut sink,
+        )
+        .unwrap_err();
+        assert!(matches!(e, Error::Io(_)), "{e}");
+        assert!(e.to_string().contains("disk full"), "{e}");
+    }
+
+    /// A crashed device is masked from dispatch: with the GPU down from
+    /// t = 0, every request still serves on the surviving CPU device, and
+    /// the run needs neither retries nor shedding.
+    #[test]
+    fn crashed_device_is_masked_and_the_stream_survives() {
+        let Some(rt) = artifact_runtime() else {
+            return;
+        };
+        let platform = Platform::paper_testbed(3, 1);
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                device: 0,
+                at: 0.0,
+                kind: FaultKind::Crash,
+            }],
+            retry_budget: 2,
+            backoff_base: 0.0,
+            ..FaultPlan::default()
+        };
+        let n = 4;
+        let requests: Vec<ServeRequest> = (0..n)
+            .map(|i| ServeRequest::new(i, 0.0, Workload::Head { beta: 32 }))
+            .collect();
+        let scfg = StreamingConfig {
+            window: 0,
+            batch_window: 0.0,
+            faults: Some(plan),
+            ..StreamingConfig::default()
+        };
+        let report = serve_real_stream(
+            requests,
+            &rt,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &scfg,
+            Pacing::Closed,
+            false,
+            7,
+            &mut NullSink,
+        )
+        .unwrap();
+        assert_eq!(report.offered, n);
+        assert_eq!(report.served, n, "shed {} rejected {}", report.shed, report.rejected);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.served + report.rejected + report.shed, report.offered);
+    }
+
+    /// With every device crashed from t = 0, recovery has nowhere to go:
+    /// each unit burns its retry budget and is shed, typed — and the
+    /// conservation law still balances the books exactly.
+    #[test]
+    fn all_devices_crashed_sheds_every_request_with_conservation() {
+        let Some(rt) = artifact_runtime() else {
+            return;
+        };
+        let platform = Platform::paper_testbed(3, 1);
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    device: 0,
+                    at: 0.0,
+                    kind: FaultKind::Crash,
+                },
+                FaultEvent {
+                    device: 1,
+                    at: 0.0,
+                    kind: FaultKind::Crash,
+                },
+            ],
+            retry_budget: 1,
+            backoff_base: 0.0,
+            ..FaultPlan::default()
+        };
+        let n = 3;
+        let requests: Vec<ServeRequest> = (0..n)
+            .map(|i| ServeRequest::new(i, 0.0, Workload::Head { beta: 32 }))
+            .collect();
+        let scfg = StreamingConfig {
+            window: 0,
+            batch_window: 0.0,
+            faults: Some(plan),
+            ..StreamingConfig::default()
+        };
+        let report = serve_real_stream(
+            requests,
+            &rt,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &scfg,
+            Pacing::Closed,
+            false,
+            7,
+            &mut NullSink,
+        )
+        .unwrap();
+        assert_eq!(report.offered, n);
+        assert_eq!(report.served, 0);
+        assert_eq!(report.shed, n);
+        assert!(report.max_retries <= 1, "retries {}", report.max_retries);
+        assert_eq!(report.served + report.rejected + report.shed, report.offered);
     }
 
     /// Property: the real backend honours the admission window — across

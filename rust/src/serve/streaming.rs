@@ -70,6 +70,10 @@ impl ServeBackend for SimBackend<'_> {
         self.sim.live_members()
     }
 
+    fn now(&self) -> f64 {
+        self.sim.now()
+    }
+
     fn pacing(&self) -> Pacing {
         Pacing::Open
     }
@@ -111,7 +115,10 @@ where
     };
     let mut sim_cfg = cfg.sim.clone();
     sim_cfg.max_tenants = cfg.tenancy.max(1);
-    let sim = StreamSim::new(&empty_dag, &empty_part, platform, cost, policy, &sim_cfg)?;
+    let mut sim = StreamSim::new(&empty_dag, &empty_part, platform, cost, policy, &sim_cfg)?;
+    if let Some(plan) = &cfg.faults {
+        sim.install_faults(plan)?;
+    }
     let mut backend = SimBackend::new(sim);
     serve_core(
         requests,

@@ -45,6 +45,7 @@
 
 use crate::cost::{contention, CostModel};
 use crate::error::{Error, Result};
+use crate::fault::{FaultClock, FaultEvent, FaultKind, FaultPlan};
 use crate::graph::{Dag, KernelId, Partition};
 use crate::platform::{DeviceId, Platform};
 use crate::queue::{setup_cq, CmdId, CommandKind, CommandQueues};
@@ -197,6 +198,12 @@ pub(crate) enum EvKind {
     /// A served DAG request arrived: its component may now join the frontier
     /// (multi-DAG serving; never emitted when all release times are zero).
     Release { comp: usize },
+    /// Fault-recovery wakeup: a crash-displaced component's exponential
+    /// backoff expired and it may re-enter the frontier. `seq` is the
+    /// component's slot-binding seq in the streaming arena (a stale wakeup
+    /// for a reused slot is dropped); the monolithic engine never rebinds
+    /// component ids and passes 0.
+    Recover { comp: usize, seq: u64 },
 }
 
 pub(crate) struct Ev {
@@ -240,7 +247,7 @@ pub fn simulate(
     policy: &mut dyn Policy,
     cfg: &SimConfig,
 ) -> Result<SimResult> {
-    Engine::new(dag, partition, platform, cost, policy, cfg, None, None)?.run()
+    Engine::new(dag, partition, platform, cost, policy, cfg, None, None, None)?.run()
 }
 
 /// Multi-DAG serving entry point: like [`simulate`], but component `c` may
@@ -282,7 +289,47 @@ pub fn simulate_served(
     meta: &[CompMeta],
 ) -> Result<SimResult> {
     validate_meta(partition, meta)?;
-    Engine::new(dag, partition, platform, cost, policy, cfg, Some(meta), None)?.run()
+    Engine::new(dag, partition, platform, cost, policy, cfg, Some(meta), None, None)?.run()
+}
+
+/// Chaos-testing entry point: [`simulate_served`] under a fault-injection
+/// plan ([`crate::fault::FaultPlan`]). Crashed devices leave the available
+/// set ([`SchedState::on_device_down`]) and their resident components are
+/// displaced through the preemption re-stage machinery — completed kernels
+/// stay completed, transfers re-stage — re-entering the frontier for a
+/// surviving device after exponential backoff; wedges and slowdowns scale
+/// kernel progress rates through the contention model. The finite batch
+/// simulated here has no shedding outlet, so exhausting a component's
+/// retry budget — or losing every schedulable device — is a typed
+/// [`Error::Sched`]; graceful degradation lives in the streaming server
+/// ([`super::stream::StreamSim::install_faults`]). Every other entry point
+/// passes no plan and is byte-identical to the fault-free engine.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_served_faulted(
+    dag: &Dag,
+    partition: &Partition,
+    platform: &Platform,
+    cost: &dyn CostModel,
+    policy: &mut dyn Policy,
+    cfg: &SimConfig,
+    meta: &[CompMeta],
+    plan: &FaultPlan,
+) -> Result<SimResult> {
+    validate_meta(partition, meta)?;
+    plan.validate()?;
+    plan.validate_devices(platform.devices.len())?;
+    Engine::new(
+        dag,
+        partition,
+        platform,
+        cost,
+        policy,
+        cfg,
+        Some(meta),
+        None,
+        Some(plan),
+    )?
+    .run()
 }
 
 /// Concurrency-fuzzer entry point ([`crate::sched::fuzz`]): exactly
@@ -311,6 +358,7 @@ pub fn simulate_served_fuzzed(
         cfg,
         Some(meta),
         Some(seam),
+        None,
     )?
     .run()
 }
@@ -421,6 +469,17 @@ struct Engine<'a> {
     /// choice. `None` (every production entry point) keeps the canonical
     /// deterministic order, byte-identically to the un-instrumented loop.
     seam: Option<&'a mut OrderSeam>,
+
+    /// Fault-injection replay state ([`simulate_served_faulted`] only).
+    /// `None` everywhere else: every fault hook then short-circuits and
+    /// the loop is byte-identical to the fault-free engine.
+    faults: Option<FaultClock>,
+    /// Recovery knobs from the installed plan (unused without one).
+    retry_budget: u32,
+    backoff_base: f64,
+    /// Fault-triggered displacements charged per component.
+    comp_retries: Vec<u32>,
+    scratch_faults: Vec<FaultEvent>,
 }
 
 pub(crate) const EPS: f64 = 1e-12;
@@ -436,6 +495,7 @@ impl<'a> Engine<'a> {
         cfg: &'a SimConfig,
         meta: Option<&[CompMeta]>,
         mut seam: Option<&'a mut OrderSeam>,
+        fault_plan: Option<&FaultPlan>,
     ) -> Result<Self> {
         let ncomp = partition.components.len();
         let nk = dag.num_kernels();
@@ -521,6 +581,10 @@ impl<'a> Engine<'a> {
             state.on_ready(c);
         }
         let ndev = platform.devices.len();
+        let (faults, retry_budget, backoff_base) = match fault_plan {
+            Some(p) => (Some(FaultClock::new(p, ndev)), p.retry_budget, p.backoff_base),
+            None => (None, 0, 0.0),
+        };
         Ok(Engine {
             dag,
             partition,
@@ -568,6 +632,11 @@ impl<'a> Engine<'a> {
             scratch_finished: Vec::new(),
             scratch_ready: Vec::new(),
             seam,
+            faults,
+            retry_budget,
+            backoff_base,
+            comp_retries: vec![0; ncomp],
+            scratch_faults: Vec::new(),
         })
     }
 
@@ -799,6 +868,36 @@ impl<'a> Engine<'a> {
     /// ambiguity: immediate vs phase-end re-entry); the canonical path
     /// always re-enters immediately.
     fn displace(&mut self, victim: usize, deferred: &mut Vec<usize>) -> bool {
+        if !self.cancel_resident(victim) {
+            return false;
+        }
+        self.preemptions += 1;
+        self.trace.push(Span {
+            label: format!("preempt c{victim}"),
+            lane: Lane::Host,
+            start: self.now,
+            end: self.now,
+            cmd: None,
+            kernel: None,
+        });
+        let defer = match self.seam.as_deref_mut() {
+            Some(s) => s.flip(Ambiguity::Reentry),
+            None => false,
+        };
+        if defer {
+            deferred.push(victim);
+        } else {
+            self.enter_frontier(victim);
+        }
+        true
+    }
+
+    /// The re-stage core shared by policy preemption ([`Self::displace`])
+    /// and fault recovery: pull `victim`'s live dispatch off its device —
+    /// completed kernels stay completed (`kernel_frac`), transfers
+    /// re-stage, tenancy/`est_free` roll back — leaving re-entry (or
+    /// failure) to the caller. Returns false if `victim` is not resident.
+    fn cancel_resident(&mut self, victim: usize) -> bool {
         let Some(di) = self.comp_active_disp.get(victim).copied().flatten() else {
             return false;
         };
@@ -854,25 +953,93 @@ impl<'a> Engine<'a> {
         if self.state.tenants[dev] == 0 {
             self.state.est_free[dev] = self.now;
         }
-        self.preemptions += 1;
-        self.trace.push(Span {
-            label: format!("preempt c{victim}"),
-            lane: Lane::Host,
-            start: self.now,
-            end: self.now,
-            cmd: None,
-            kernel: None,
-        });
-        let defer = match self.seam.as_deref_mut() {
-            Some(s) => s.flip(Ambiguity::Reentry),
-            None => false,
-        };
-        if defer {
-            deferred.push(victim);
-        } else {
-            self.enter_frontier(victim);
-        }
         true
+    }
+
+    // ------------------------------------------------------------- faults
+
+    /// Replay every fault event due at the current instant (canonical
+    /// order: after the retire+drain step — the engine's fault path is
+    /// never fuzzed; the seamed fault-race coverage lives in the streaming
+    /// simulator). Only reachable with a plan installed.
+    fn apply_due_faults(&mut self) -> Result<()> {
+        let mut due = std::mem::take(&mut self.scratch_faults);
+        due.clear();
+        self.faults
+            .as_mut()
+            .expect("faults installed")
+            .take_due(self.now, &mut due);
+        let mut res = Ok(());
+        for ev in &due {
+            self.faults.as_mut().expect("faults installed").apply(ev);
+            if let FaultKind::Crash = ev.kind {
+                if let Err(e) = self.crash_device(ev.device) {
+                    res = Err(e);
+                    break;
+                }
+            }
+        }
+        self.scratch_faults = due;
+        res
+    }
+
+    /// Crash `dev`: mark it down in the scheduler, displace every resident
+    /// component on it through the re-stage machinery, and re-enter each
+    /// victim after exponential backoff. The finite batch has no shedding
+    /// outlet, so an exhausted retry budget — or losing every schedulable
+    /// device — is a typed error.
+    fn crash_device(&mut self, dev: DeviceId) -> Result<()> {
+        self.state.on_device_down(dev);
+        let victims: Vec<usize> = self
+            .resident_comps
+            .iter()
+            .copied()
+            .filter(|&c| {
+                self.comp_active_disp[c]
+                    .map(|di| self.dispatches[di].device == dev)
+                    .unwrap_or(false)
+            })
+            .collect();
+        for victim in victims {
+            self.comp_retries[victim] += 1;
+            let retries = self.comp_retries[victim];
+            if retries > self.retry_budget {
+                return Err(Error::Sched(format!(
+                    "component {victim} lost to crash of device {dev}: retry budget {} exhausted",
+                    self.retry_budget
+                )));
+            }
+            if !self.cancel_resident(victim) {
+                continue;
+            }
+            self.trace.push(Span {
+                label: format!("fault c{victim}"),
+                lane: Lane::Host,
+                start: self.now,
+                end: self.now,
+                cmd: None,
+                kernel: None,
+            });
+            // Exponential backoff before re-entry: retry k waits
+            // backoff_base * 2^(k-1). Monolithic component ids never
+            // rebind, so the Recover seq is unused here (0).
+            let wait = self.backoff_base * (1u64 << (retries - 1).min(62)) as f64;
+            if wait > 0.0 {
+                self.push_ev(self.now + wait, EvKind::Recover { comp: victim, seq: 0 });
+            } else {
+                self.enter_frontier(victim);
+            }
+        }
+        if self.comps_done < self.partition.components.len()
+            && (0..self.platform.devices.len())
+                .all(|d| self.state.is_down(d) || self.platform.devices[d].num_queues == 0)
+        {
+            return Err(Error::Sched(format!(
+                "device {dev} crash leaves no schedulable device with {} component(s) unfinished",
+                self.partition.components.len() - self.comps_done
+            )));
+        }
+        Ok(())
     }
 
     // ------------------------------------------------------------- issuing
@@ -1173,7 +1340,7 @@ impl<'a> Engine<'a> {
                     EvKind::CopyDone { engine } => {
                         self.copy_engines[engine].current.map(|(di, _)| di)
                     }
-                    EvKind::Release { .. } => None,
+                    EvKind::Release { .. } | EvKind::Recover { .. } => None,
                 })
                 .collect();
             let mut order: Vec<usize> = (0..batch.len()).collect();
@@ -1199,7 +1366,7 @@ impl<'a> Engine<'a> {
                         self.pump_copy_engine(engine);
                     }
                     EvKind::Callback { disp, kernel } => self.handle_callback(disp, kernel),
-                    EvKind::Release { comp } => {
+                    EvKind::Release { comp } | EvKind::Recover { comp, .. } => {
                         if self.ext_preds_left[comp] == 0 {
                             self.enter_frontier(comp);
                         }
@@ -1237,6 +1404,14 @@ impl<'a> Engine<'a> {
             );
             for (j, &i) in self.scratch_idx.iter().enumerate() {
                 self.rates[i] = self.scratch_speeds[j] / self.scratch_us[j];
+            }
+        }
+        // Injected device conditions: wedged devices run at rate 0, slowed
+        // devices at their factor. Multiplying by exactly 1.0 on healthy
+        // devices keeps the fault-free rates bit-identical.
+        if let Some(clock) = &self.faults {
+            for (i, r) in self.runs.iter().enumerate() {
+                self.rates[i] *= clock.rate_factor(r.device, self.now);
             }
         }
     }
@@ -1277,10 +1452,17 @@ impl<'a> Engine<'a> {
             self.compute_run_rates();
             let t_kernel = self.next_kernel_completion();
             let t_heap = self.heap.peek().map(|Reverse(e)| e.t);
-            let t_next = match (t_kernel, t_heap) {
-                (Some(a), Some(b)) => a.min(b),
+            let t_fault = self.faults.as_ref().and_then(|c| c.next_change_at(self.now));
+            let t_work = match (t_kernel, t_heap) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (Some(a), None) => Some(a),
+                (None, Some(b)) => Some(b),
+                (None, None) => None,
+            };
+            let t_next = match (t_work, t_fault) {
+                (Some(a), Some(f)) => a.min(f),
                 (Some(a), None) => a,
-                (None, Some(b)) => b,
+                (None, Some(f)) => f,
                 (None, None) => {
                     return Err(Error::Sched(
                         "simulation stalled: no events, no running kernels".into(),
@@ -1398,8 +1580,21 @@ impl<'a> Engine<'a> {
                                 self.enter_frontier(comp);
                             }
                         }
+                        EvKind::Recover { comp, .. } => {
+                            if self.ext_preds_left[comp] == 0 {
+                                self.enter_frontier(comp);
+                            }
+                        }
                     }
                 }
+            }
+            if self
+                .faults
+                .as_ref()
+                .map(|c| c.any_due(self.now))
+                .unwrap_or(false)
+            {
+                self.apply_due_faults()?;
             }
         }
 
@@ -1421,7 +1616,13 @@ mod tests {
     use crate::sched::{Clustering, Eager, Heft};
     use crate::transformer::{cluster_by_head, head_dag, transformer_dag, vadd_vsin_dag};
 
-    fn sim_clustering(q_gpu: usize, q_cpu: usize, heads: usize, beta: u64, h_cpu: usize) -> SimResult {
+    fn sim_clustering(
+        q_gpu: usize,
+        q_cpu: usize,
+        heads: usize,
+        beta: u64,
+        h_cpu: usize,
+    ) -> SimResult {
         let (dag, ios) = transformer_dag(heads, beta, DeviceType::Gpu);
         let part = cluster_by_head(&dag, &ios, h_cpu);
         let platform = Platform::paper_testbed(q_gpu, q_cpu);
@@ -1500,8 +1701,15 @@ mod tests {
         let (dag, ios) = transformer_dag(16, 256, DeviceType::Gpu);
         let platform = Platform::paper_testbed(3, 1);
         let part = cluster_by_head(&dag, &ios, 1);
-        let cl = simulate(&dag, &part, &platform, &PaperCost, &mut Clustering, &SimConfig::default())
-            .unwrap();
+        let cl = simulate(
+            &dag,
+            &part,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+        )
+        .unwrap();
         let singles = Partition::singletons(&dag);
         let platform1 = Platform::paper_testbed(1, 1);
         let eg = simulate(&dag, &singles, &platform1, &PaperCost, &mut Eager, &SimConfig::default())
@@ -1589,8 +1797,15 @@ mod tests {
         let (dag, ks) = vadd_vsin_dag(4096);
         let singles = Partition::singletons(&dag);
         let platform = Platform::paper_testbed(2, 1);
-        let r = simulate(&dag, &singles, &platform, &PaperCost, &mut Clustering, &SimConfig::default())
-            .unwrap();
+        let r = simulate(
+            &dag,
+            &singles,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+        )
+        .unwrap();
         // vsin must start after vadd's component finished (inter dep).
         let span_of = |k: usize| {
             r.trace
@@ -1608,7 +1823,14 @@ mod tests {
         let (dag, _) = vadd_vsin_dag(4096);
         let singles = Partition::singletons(&dag);
         let platform = Platform::paper_testbed(0, 0);
-        let res = simulate(&dag, &singles, &platform, &PaperCost, &mut Clustering, &SimConfig::default());
+        let res = simulate(
+            &dag,
+            &singles,
+            &platform,
+            &PaperCost,
+            &mut Clustering,
+            &SimConfig::default(),
+        );
         assert!(res.is_err());
     }
 
@@ -1930,5 +2152,174 @@ mod tests {
         assert_eq!(new.component_device, old.component_device);
         let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
         assert_eq!(bits(&new.component_finish), bits(&old.component_finish));
+    }
+
+    fn two_head_served(
+        platform: &Platform,
+        plan: Option<&FaultPlan>,
+    ) -> Result<SimResult> {
+        let (dag, ios) = transformer_dag(2, 128, DeviceType::Gpu);
+        let part = cluster_by_head(&dag, &ios, 0);
+        let cfg = SimConfig::default();
+        let meta = [CompMeta::default(), CompMeta::default()];
+        let mut pol = crate::sched::LeastLoaded;
+        match plan {
+            Some(p) => simulate_served_faulted(
+                &dag, &part, platform, &PaperCost, &mut pol, &cfg, &meta, p,
+            ),
+            None => simulate_served(&dag, &part, platform, &PaperCost, &mut pol, &cfg, &meta),
+        }
+    }
+
+    #[test]
+    fn faulted_zero_event_plan_matches_served_bitwise() {
+        let platform = Platform::paper_testbed(3, 1);
+        let plain = two_head_served(&platform, None).unwrap();
+        let plan = FaultPlan::default().normalized().unwrap();
+        let faulted = two_head_served(&platform, Some(&plan)).unwrap();
+        assert_eq!(plain.makespan.to_bits(), faulted.makespan.to_bits());
+        assert_eq!(plain.component_device, faulted.component_device);
+        assert_eq!(plain.preemptions, faulted.preemptions);
+        let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+        assert_eq!(bits(&plain.component_finish), bits(&faulted.component_finish));
+    }
+
+    #[test]
+    fn faulted_slowdown_stretches_the_makespan() {
+        // Single GPU at half speed from t=0: everything takes roughly
+        // twice as long; no retries, no displacement.
+        let platform = Platform::paper_testbed(3, 0);
+        let plain = two_head_served(&platform, None).unwrap();
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                device: 0,
+                at: 0.0,
+                kind: FaultKind::Slowdown { factor: 0.5 },
+            }],
+            ..FaultPlan::default()
+        }
+        .normalized()
+        .unwrap();
+        let slow = two_head_served(&platform, Some(&plan)).unwrap();
+        assert!(
+            slow.makespan > plain.makespan * 1.3,
+            "slowdown 0.5x did not stretch the run: {} vs {}",
+            slow.makespan,
+            plain.makespan
+        );
+        assert!(slow.component_finish.iter().all(|t| t.is_finite()));
+    }
+
+    #[test]
+    fn faulted_wedge_stalls_then_resumes() {
+        let platform = Platform::paper_testbed(3, 0);
+        let plain = two_head_served(&platform, None).unwrap();
+        let dur = plain.makespan * 0.5;
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                device: 0,
+                at: plain.makespan * 0.3,
+                kind: FaultKind::Wedge { dur },
+            }],
+            ..FaultPlan::default()
+        }
+        .normalized()
+        .unwrap();
+        let wedged = two_head_served(&platform, Some(&plan)).unwrap();
+        assert!(
+            wedged.makespan > plain.makespan + 0.25 * dur,
+            "wedge of {dur}s barely moved the makespan: {} vs {}",
+            wedged.makespan,
+            plain.makespan
+        );
+        assert!(wedged.component_finish.iter().all(|t| t.is_finite()));
+    }
+
+    #[test]
+    fn faulted_crash_recovers_on_the_surviving_device() {
+        let platform = Platform::paper_testbed(3, 1);
+        let plain = two_head_served(&platform, None).unwrap();
+        // Pick a component the fault-free run placed on the GPU and crash
+        // that device halfway through the component's run: the victim must
+        // re-stage and complete on the surviving CPU.
+        let victim = plain
+            .component_device
+            .iter()
+            .position(|&d| d == 0)
+            .expect("no component ran on the GPU");
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                device: 0,
+                at: 0.5 * plain.component_finish[victim],
+                kind: FaultKind::Crash,
+            }],
+            retry_budget: 3,
+            backoff_base: 1e-4,
+            ..FaultPlan::default()
+        }
+        .normalized()
+        .unwrap();
+        let r = two_head_served(&platform, Some(&plan)).unwrap();
+        assert!(r.component_finish.iter().all(|t| t.is_finite()));
+        assert_ne!(
+            r.component_device[victim], 0,
+            "victim must finish on the surviving device"
+        );
+        assert!(
+            r.component_finish[victim] > plain.component_finish[victim],
+            "restarted victim cannot beat its fault-free finish"
+        );
+    }
+
+    #[test]
+    fn faulted_batch_run_has_no_shedding_outlet() {
+        // Budget 0 on a crash mid-run: the finite batch cannot degrade
+        // gracefully, so the retry-budget exhaustion is a typed error.
+        let platform = Platform::paper_testbed(3, 1);
+        let plain = two_head_served(&platform, None).unwrap();
+        let victim = plain
+            .component_device
+            .iter()
+            .position(|&d| d == 0)
+            .expect("no component ran on the GPU");
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                device: 0,
+                at: 0.5 * plain.component_finish[victim],
+                kind: FaultKind::Crash,
+            }],
+            retry_budget: 0,
+            backoff_base: 0.0,
+            ..FaultPlan::default()
+        }
+        .normalized()
+        .unwrap();
+        let e = two_head_served(&platform, Some(&plan)).unwrap_err();
+        assert!(
+            matches!(&e, Error::Sched(m) if m.contains("retry budget")),
+            "unexpected error: {e}"
+        );
+
+        // Crashing the only device on a single-device platform is the
+        // other terminal path: no schedulable device left.
+        let solo = Platform::paper_testbed(3, 0);
+        let base = two_head_served(&solo, None).unwrap();
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                device: 0,
+                at: 0.5 * base.makespan,
+                kind: FaultKind::Crash,
+            }],
+            retry_budget: 8,
+            backoff_base: 0.0,
+            ..FaultPlan::default()
+        }
+        .normalized()
+        .unwrap();
+        let e = two_head_served(&solo, Some(&plan)).unwrap_err();
+        assert!(
+            matches!(&e, Error::Sched(m) if m.contains("no schedulable device")),
+            "unexpected error: {e}"
+        );
     }
 }

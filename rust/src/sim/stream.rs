@@ -45,6 +45,7 @@
 use super::engine::{CmdState, CopyEngine, Dispatch, Ev, EvKind, Run, SimConfig, EPS};
 use crate::cost::{contention, CostModel};
 use crate::error::{Error, Result};
+use crate::fault::{FaultClock, FaultEvent, FaultKind, FaultPlan};
 use crate::graph::{Dag, KernelId, Partition};
 use crate::platform::{DeviceId, DeviceType, Platform};
 use crate::queue::{setup_cq, CmdId, CommandKind};
@@ -116,8 +117,14 @@ pub struct FinishedRequest {
     /// Instant the last of the member's components finished.
     pub finish: f64,
     /// Device each of the member's components ran on (last device for
-    /// preempted-and-re-dispatched components), in component order.
+    /// preempted-and-re-dispatched components), in component order. For a
+    /// shed request only the components that actually ran are listed.
     pub devices: Vec<DeviceId>,
+    /// The request was shed (typed degradation) instead of served;
+    /// `finish` is the shed instant.
+    pub shed: bool,
+    /// Fault-triggered retries this request consumed.
+    pub retries: u32,
 }
 
 /// Why [`StreamSim::pump`] returned.
@@ -140,6 +147,9 @@ struct MemberRec {
     priority: u32,
     comps: Range<usize>,
     comps_left: usize,
+    /// Fault-triggered retries consumed so far (one per crash that
+    /// displaced this member's work, not one per displaced component).
+    retries: u32,
 }
 
 /// One live unit. Every vector is template-local; all of it is freed at
@@ -260,6 +270,20 @@ pub struct StreamSim<'a> {
     /// simulator stays free of extra lifetimes.
     seam: Option<OrderSeam>,
 
+    /// Fault-injection replay state, installed by
+    /// [`Self::install_faults`]. `None` in production: every fault hook
+    /// then short-circuits and the event loop is byte-identical to the
+    /// fault-free build.
+    faults: Option<FaultClock>,
+    /// Recovery knobs from the installed plan (unused without one).
+    retry_budget: u32,
+    backoff_base: f64,
+    scratch_faults: Vec<FaultEvent>,
+    /// Components displaced by device crashes (distinct from policy
+    /// preemptions: those count toward `preemptions`).
+    fault_displacements: usize,
+    shed_count: usize,
+
     finished: Vec<FinishedRequest>,
     events_total: u64,
     peak_live_comps: usize,
@@ -331,6 +355,12 @@ impl<'a> StreamSim<'a> {
             scratch_finished: Vec::new(),
             scratch_ready: Vec::new(),
             seam: None,
+            faults: None,
+            retry_budget: 0,
+            backoff_base: 0.0,
+            scratch_faults: Vec::new(),
+            fault_displacements: 0,
+            shed_count: 0,
             finished: Vec::new(),
             events_total: 0,
             peak_live_comps: 0,
@@ -396,6 +426,30 @@ impl<'a> StreamSim<'a> {
     #[doc(hidden)]
     pub fn take_seam(&mut self) -> Option<OrderSeam> {
         self.seam.take()
+    }
+
+    /// Requests shed (typed degradation) so far.
+    pub fn shed(&self) -> usize {
+        self.shed_count
+    }
+
+    /// Components displaced by device crashes so far (policy preemptions
+    /// are counted separately by [`Self::preemptions`]).
+    pub fn fault_displacements(&self) -> usize {
+        self.fault_displacements
+    }
+
+    /// Install a fault-injection plan (chaos scenario), validated against
+    /// the platform. Call before the first pump. With no plan installed —
+    /// or a plan with zero events — every code path below is
+    /// byte-identical to the fault-free build.
+    pub fn install_faults(&mut self, plan: &FaultPlan) -> Result<()> {
+        plan.validate()?;
+        plan.validate_devices(self.platform.devices.len())?;
+        self.retry_budget = plan.retry_budget;
+        self.backoff_base = plan.backoff_base;
+        self.faults = Some(FaultClock::new(plan, self.platform.devices.len()));
+        Ok(())
     }
 
     // ------------------------------------------------------------ admission
@@ -563,6 +617,7 @@ impl<'a> StreamSim<'a> {
                 priority: m.priority,
                 comps_left: m.comps.len(),
                 comps: m.comps,
+                retries: 0,
             })
             .collect();
         let release = a.release;
@@ -618,6 +673,18 @@ impl<'a> StreamSim<'a> {
         // outnumber the live frontier under churn — compact when they do.
         if self.state.heap_entries() > 4 * self.state.frontier_len() + 1024 {
             self.state.compact_heaps();
+        }
+
+        // Chaos degradation: with every device crashed nothing admitted
+        // can ever run — shed on arrival instead of stalling the stream.
+        if self.all_devices_down() {
+            let n = self.unit(uid).members.len();
+            for mi in 0..n {
+                if self.units[uid].is_none() {
+                    break;
+                }
+                self.shed_member(uid, mi);
+            }
         }
         Ok(())
     }
@@ -907,6 +974,29 @@ impl<'a> StreamSim<'a> {
     /// victim's frontier re-entry may be deferred into `deferred` (the
     /// re-entry ambiguity); canonically it re-enters immediately.
     fn displace(&mut self, victim: usize, deferred: &mut Vec<usize>) -> bool {
+        if !self.cancel_resident(victim) {
+            return false;
+        }
+        self.preemptions += 1;
+        let defer = match self.seam.as_mut() {
+            Some(s) => s.flip(Ambiguity::Reentry),
+            None => false,
+        };
+        if defer {
+            deferred.push(victim);
+        } else {
+            self.enter_frontier(victim);
+        }
+        true
+    }
+
+    /// The re-stage core shared by policy preemption ([`Self::displace`])
+    /// and fault recovery: pull `victim`'s live dispatch off the device —
+    /// completed kernels stay completed (`kernel_frac`), in-flight
+    /// transfers re-stage, scheduler tenancy/`est_free` roll back
+    /// ([`SchedState::on_preempt`]) — leaving re-entry (or shedding) to
+    /// the caller.
+    fn cancel_resident(&mut self, victim: usize) -> bool {
         let sr = self.slots[victim];
         if sr.unit == FREE {
             return false;
@@ -957,18 +1047,172 @@ impl<'a> StreamSim<'a> {
         if self.state.tenants[dev] == 0 {
             self.state.est_free[dev] = self.now;
         }
-        self.preemptions += 1;
-        let defer = match self.seam.as_mut() {
-            Some(s) => s.flip(Ambiguity::Reentry),
-            None => false,
-        };
-        if defer {
-            deferred.push(victim);
-        } else {
-            self.enter_frontier(victim);
-        }
         self.try_free_dispatch(di);
         true
+    }
+
+    // ------------------------------------------------------------- faults
+
+    /// True when every schedulable device has crashed — nothing admitted
+    /// can ever run again. Always false without an installed plan.
+    fn all_devices_down(&self) -> bool {
+        self.faults.is_some()
+            && (0..self.platform.devices.len())
+                .all(|d| self.state.is_down(d) || self.platform.devices[d].num_queues == 0)
+    }
+
+    /// Replay every fault event due at the current instant. Wedges and
+    /// slowdowns only update the rate clock (the next
+    /// [`Self::compute_run_rates`] sees them); a crash additionally takes
+    /// the device out of the scheduler and displaces its resident work
+    /// through the recovery path. Only reachable with a plan installed.
+    fn apply_due_faults(&mut self) {
+        let mut due = std::mem::take(&mut self.scratch_faults);
+        due.clear();
+        self.faults
+            .as_mut()
+            .expect("faults installed")
+            .take_due(self.now, &mut due);
+        for ev in &due {
+            self.faults.as_mut().expect("faults installed").apply(ev);
+            self.need_phase = true;
+            if let FaultKind::Crash = ev.kind {
+                self.crash_device(ev.device);
+            }
+        }
+        self.scratch_faults = due;
+    }
+
+    /// Crash `dev`: mark it down in the scheduler
+    /// ([`SchedState::on_device_down`] — it never returns to the
+    /// available set), displace every resident component on it through
+    /// the preemption re-stage semantics, and either re-enter each victim
+    /// after exponential backoff or shed its request once the retry
+    /// budget is exhausted. A request is charged one retry per crash, not
+    /// one per displaced component.
+    fn crash_device(&mut self, dev: DeviceId) {
+        self.state.on_device_down(dev);
+        let mut victims: Vec<usize> = self
+            .resident_slots
+            .iter()
+            .copied()
+            .filter(|&s| {
+                let sr = self.slots[s];
+                sr.unit != FREE
+                    && self.unit(sr.unit).comp_active_disp[sr.local]
+                        .map(|di| self.disp(di).d.device == dev)
+                        .unwrap_or(false)
+            })
+            .collect();
+        // Which victim recovery walks first is an ordering accident —
+        // part of the fault-race ambiguity class.
+        if let Some(s) = self.seam.as_mut() {
+            s.shuffle(Ambiguity::FaultRace, &mut victims);
+        }
+        let mut charged: Vec<(usize, usize)> = Vec::new();
+        for slot in victims {
+            let sr = self.slots[slot];
+            if sr.unit == FREE {
+                continue; // unit retired by an earlier shed in this sweep
+            }
+            let (u, local) = (sr.unit, sr.local);
+            if self.unit(u).comp_active_disp[local].is_none() {
+                continue; // cancelled by an earlier shed in this sweep
+            }
+            let mi = self.unit(u).member_of[local];
+            if !charged.contains(&(u, mi)) {
+                charged.push((u, mi));
+                self.unit_mut(u).members[mi].retries += 1;
+            }
+            let retries = self.unit(u).members[mi].retries;
+            if !self.cancel_resident(slot) {
+                continue;
+            }
+            self.fault_displacements += 1;
+            if retries > self.retry_budget {
+                self.shed_member(u, mi);
+            } else {
+                // Exponential backoff before the victim re-enters the
+                // frontier: retry k waits backoff_base * 2^(k-1). The
+                // Recover event carries the slot's binding seq so a stale
+                // wakeup can never touch a reused slot.
+                let wait = self.backoff_base * (1u64 << (retries - 1).min(62)) as f64;
+                if wait > 0.0 {
+                    self.push_ev(self.now + wait, EvKind::Recover { comp: slot, seq: sr.seq });
+                } else {
+                    self.enter_frontier(slot);
+                    self.need_phase = true;
+                }
+            }
+        }
+        if self.all_devices_down() {
+            self.shed_all_live();
+        }
+    }
+
+    /// Shed member `mi` of unit `u`: cancel any still-resident component,
+    /// leave the frontier, terminally mark every unfinished component
+    /// done, and emit a `shed` outcome record. Other members of the unit
+    /// are untouched.
+    fn shed_member(&mut self, u: usize, mi: usize) {
+        let comps = self.unit(u).members[mi].comps.clone();
+        for local in comps {
+            if !self.unit(u).comp_finish[local].is_nan() {
+                continue;
+            }
+            let slot = self.unit(u).slots[local];
+            self.cancel_resident(slot);
+            self.state.on_shed(slot);
+            self.unit_mut(u).comp_dispatched[local] = true;
+            self.unit_mut(u).comp_finish[local] = self.now;
+            self.unit_mut(u).comps_done += 1;
+            self.unit_mut(u).members[mi].comps_left -= 1;
+        }
+        let rec = {
+            let unit = self.unit(u);
+            let m = &unit.members[mi];
+            debug_assert_eq!(m.comps_left, 0, "shed member with unfinished comps");
+            let devices: Vec<DeviceId> = m
+                .comps
+                .clone()
+                .map(|c| unit.comp_device[c])
+                .filter(|&d| d != usize::MAX)
+                .collect();
+            FinishedRequest {
+                id: m.id,
+                arrival: m.arrival,
+                deadline: m.deadline,
+                priority: m.priority,
+                release: unit.release,
+                finish: self.now.max(unit.release),
+                devices,
+                shed: true,
+                retries: m.retries,
+            }
+        };
+        self.finished.push(rec);
+        self.live_members -= 1;
+        self.shed_count += 1;
+        self.maybe_retire_unit(u);
+    }
+
+    /// Terminal degradation: every live member of every live unit is shed
+    /// (reachable only when a crash leaves no schedulable device).
+    fn shed_all_live(&mut self) {
+        for u in 0..self.units.len() {
+            if self.units[u].is_none() {
+                continue;
+            }
+            let n = self.unit(u).members.len();
+            for mi in 0..n {
+                if self.units[u].is_none() {
+                    break;
+                }
+                if self.unit(u).members[mi].comps_left > 0 {
+                    self.shed_member(u, mi);
+                }
+            }
+        }
     }
 
     // ------------------------------------------------------------- issuing
@@ -1204,6 +1448,8 @@ impl<'a> StreamSim<'a> {
                     release: unit.release,
                     finish,
                     devices,
+                    shed: false,
+                    retries: m.retries,
                 };
                 self.finished.push(rec);
                 self.live_members -= 1;
@@ -1253,7 +1499,7 @@ impl<'a> StreamSim<'a> {
                     EvKind::CopyDone { engine } => {
                         self.copy_engines[engine].current.map(|(di, _)| di)
                     }
-                    EvKind::Release { .. } => None,
+                    EvKind::Release { .. } | EvKind::Recover { .. } => None,
                 })
                 .collect();
             let mut order: Vec<usize> = (0..batch.len()).collect();
@@ -1295,6 +1541,15 @@ impl<'a> StreamSim<'a> {
                             self.enter_frontier(comp);
                         }
                     }
+                    EvKind::Recover { comp, seq } => {
+                        let sr = self.slots[comp];
+                        if sr.unit != FREE
+                            && sr.seq == seq
+                            && self.unit(sr.unit).ext_preds_left[sr.local] == 0
+                        {
+                            self.enter_frontier(comp);
+                        }
+                    }
                 }
             }
         }
@@ -1326,6 +1581,14 @@ impl<'a> StreamSim<'a> {
                 self.rates[i] = self.scratch_speeds[j] / self.scratch_us[j];
             }
         }
+        // Injected device conditions: wedged devices run at rate 0, slowed
+        // devices at their factor. Multiplying by exactly 1.0 on healthy
+        // devices keeps the fault-free rates bit-identical.
+        if let Some(clock) = &self.faults {
+            for (i, r) in self.runs.iter().enumerate() {
+                self.rates[i] *= clock.rate_factor(r.device, self.now);
+            }
+        }
     }
 
     fn next_kernel_completion(&self) -> Option<f64> {
@@ -1355,10 +1618,17 @@ impl<'a> StreamSim<'a> {
             self.compute_run_rates();
             let t_kernel = self.next_kernel_completion();
             let t_heap = self.heap.peek().map(|Reverse(e)| e.t);
-            let t_next = match (t_kernel, t_heap) {
-                (Some(a), Some(b)) => a.min(b),
+            let t_fault = self.faults.as_ref().and_then(|c| c.next_change_at(self.now));
+            let t_work = match (t_kernel, t_heap) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (Some(a), None) => Some(a),
+                (None, Some(b)) => Some(b),
+                (None, None) => None,
+            };
+            let t_next = match (t_work, t_fault) {
+                (Some(a), Some(f)) => a.min(f),
                 (Some(a), None) => a,
-                (None, Some(b)) => b,
+                (None, Some(f)) => f,
                 (None, None) => return Ok(PumpStop::Idle),
             };
             if t_next >= horizon {
@@ -1378,6 +1648,26 @@ impl<'a> StreamSim<'a> {
                 r.remaining -= dt * rate;
             }
             self.now = t_next;
+
+            // Fault instants due now. The fault-vs-completion interleaving
+            // at a shared instant is an ordering accident: canonically the
+            // same-instant completions land first (faults apply after the
+            // retire+drain step below); under fuzzing the seam may flip
+            // the order, letting a crash void completions due at its own
+            // instant.
+            let faults_due = self
+                .faults
+                .as_ref()
+                .map(|c| c.any_due(self.now))
+                .unwrap_or(false);
+            let faults_first = faults_due
+                && match self.seam.as_mut() {
+                    Some(s) => s.flip(Ambiguity::FaultRace),
+                    None => false,
+                };
+            if faults_first {
+                self.apply_due_faults();
+            }
 
             self.scratch_finished.clear();
             for i in 0..self.runs.len() {
@@ -1469,8 +1759,20 @@ impl<'a> StreamSim<'a> {
                                 self.enter_frontier(comp);
                             }
                         }
+                        EvKind::Recover { comp, seq } => {
+                            let sr = self.slots[comp];
+                            if sr.unit != FREE
+                                && sr.seq == seq
+                                && self.unit(sr.unit).ext_preds_left[sr.local] == 0
+                            {
+                                self.enter_frontier(comp);
+                            }
+                        }
                     }
                 }
+            }
+            if faults_due && !faults_first {
+                self.apply_due_faults();
             }
             self.need_phase = true;
         }
@@ -1780,6 +2082,163 @@ mod tests {
         assert_eq!(fin.len(), 40);
         for w in fin.windows(2) {
             assert!(w[1].finish > w[0].finish, "units must run in stream order");
+        }
+    }
+
+    /// Drive `n` single-component units (releases 1 ms apart) through a
+    /// fresh simulator, optionally with a fault plan installed, pump to
+    /// idle, and return the finished records (sorted by id) plus the
+    /// fault counters. Asserts full retirement: every admitted request
+    /// surfaces exactly once and no live state survives.
+    fn run_faulted(
+        n: usize,
+        plan: Option<&crate::fault::FaultPlan>,
+    ) -> (Vec<FinishedRequest>, f64, usize, usize, usize) {
+        let platform = Platform::scaled(1, 1, 3, 1);
+        let cost = PaperCost;
+        let cfg = SimConfig::default();
+        let mut pol = LeastLoaded;
+        let (empty_dag, empty_part) = empty_placeholders();
+        let tmpl = Arc::new(head_app());
+        let mut sim =
+            StreamSim::new(&empty_dag, &empty_part, &platform, &cost, &mut pol, &cfg).unwrap();
+        if let Some(p) = plan {
+            sim.install_faults(p).unwrap();
+        }
+        for i in 0..n {
+            let t = 0.001 * (i as f64 + 1.0);
+            sim.admit(AdmitUnit {
+                tmpl: Template::Single(tmpl.clone()),
+                release: t,
+                members: vec![MemberSpec {
+                    id: i,
+                    arrival: t,
+                    deadline: None,
+                    priority: 0,
+                    comps: 0..1,
+                }],
+            })
+            .unwrap();
+        }
+        assert!(matches!(sim.pump(f64::INFINITY).unwrap(), PumpStop::Idle));
+        let mut fin = Vec::new();
+        sim.drain_finished_into(&mut fin);
+        fin.sort_by_key(|f| f.id);
+        assert_eq!(fin.len(), n, "conservation: every request surfaces once");
+        assert_eq!(sim.live_components(), 0);
+        assert_eq!(sim.live_members(), 0);
+        (
+            fin,
+            sim.makespan(),
+            sim.preemptions(),
+            sim.fault_displacements(),
+            sim.shed(),
+        )
+    }
+
+    #[test]
+    fn mid_flight_crash_recovers_on_the_surviving_device() {
+        use crate::fault::{FaultEvent, FaultKind, FaultPlan};
+        // Fault-free run pins down when and where the request executes.
+        let (base, ..) = run_faulted(1, None);
+        let dev = base[0].devices[0];
+        let crash_at = (base[0].release + base[0].finish) / 2.0;
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                device: dev,
+                at: crash_at,
+                kind: FaultKind::Crash,
+            }],
+            retry_budget: 3,
+            backoff_base: 0.0,
+            ..FaultPlan::default()
+        }
+        .normalized()
+        .unwrap();
+        let (fin, _, _, displaced, shed) = run_faulted(1, Some(&plan));
+        assert!(!fin[0].shed, "within budget: the request must be served");
+        assert!(fin[0].retries >= 1, "the crash must charge a retry");
+        assert_ne!(
+            fin[0].devices[0], dev,
+            "recovery must re-dispatch to the surviving device"
+        );
+        assert!(
+            fin[0].finish > base[0].finish,
+            "the restarted run cannot finish before the fault-free one"
+        );
+        assert!(displaced >= 1);
+        assert_eq!(shed, 0);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_sheds_the_request() {
+        use crate::fault::{FaultEvent, FaultKind, FaultPlan};
+        let (base, ..) = run_faulted(1, None);
+        let dev = base[0].devices[0];
+        let crash_at = (base[0].release + base[0].finish) / 2.0;
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                device: dev,
+                at: crash_at,
+                kind: FaultKind::Crash,
+            }],
+            retry_budget: 0,
+            backoff_base: 0.0,
+            ..FaultPlan::default()
+        }
+        .normalized()
+        .unwrap();
+        let (fin, _, _, displaced, shed) = run_faulted(1, Some(&plan));
+        assert!(fin[0].shed, "budget 0: first displacement must shed");
+        assert_eq!(fin[0].retries, 1);
+        assert_eq!(shed, 1);
+        assert!(displaced >= 1);
+    }
+
+    #[test]
+    fn crashing_every_device_sheds_all_live_work() {
+        use crate::fault::{FaultEvent, FaultKind, FaultPlan};
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    device: 0,
+                    at: 0.0,
+                    kind: FaultKind::Crash,
+                },
+                FaultEvent {
+                    device: 1,
+                    at: 0.0,
+                    kind: FaultKind::Crash,
+                },
+            ],
+            retry_budget: 3,
+            backoff_base: 0.0,
+            ..FaultPlan::default()
+        }
+        .normalized()
+        .unwrap();
+        let (fin, _, _, _, shed) = run_faulted(3, Some(&plan));
+        assert_eq!(shed, 3, "no schedulable device left: everything sheds");
+        for f in &fin {
+            assert!(f.shed, "request {} escaped the terminal shed", f.id);
+        }
+    }
+
+    #[test]
+    fn zero_event_fault_plan_is_bitwise_identical_to_no_plan() {
+        use crate::fault::FaultPlan;
+        let (base, mk0, pre0, ..) = run_faulted(3, None);
+        let plan = FaultPlan::default().normalized().unwrap();
+        let (fin, mk1, pre1, displaced, shed) = run_faulted(3, Some(&plan));
+        assert_eq!(mk0.to_bits(), mk1.to_bits(), "makespan diverged");
+        assert_eq!(pre0, pre1);
+        assert_eq!(displaced, 0);
+        assert_eq!(shed, 0);
+        for (a, b) in base.iter().zip(&fin) {
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "id {}", a.id);
+            assert_eq!(a.devices, b.devices, "id {}", a.id);
+            assert!(!b.shed);
+            assert_eq!(b.retries, 0);
         }
     }
 }

@@ -1,0 +1,275 @@
+//! Property-based conservation invariants for fault-injected serving
+//! (ISSUE 9): across random request streams × fault plans × admission
+//! windows, every offered request is accounted for —
+//! `served + rejected + shed == offered` — crash retries never exceed the
+//! plan's budget, fault-free runs never report fault bookkeeping, and a
+//! zero-event plan is bitwise-identical to no plan at all.
+//!
+//! The environment is offline (no proptest crate), so this file carries
+//! the repo's small deterministic harness: an xorshift64* generator
+//! drives structured random cases; every failure message embeds the seed
+//! for replay.
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::fault::{FaultEvent, FaultKind, FaultPlan};
+use pyschedcl::platform::Platform;
+use pyschedcl::sched::{Edf, LeastLoaded, Policy};
+use pyschedcl::serve::{serve_stream, NullSink, ServeRequest, StreamingConfig, Workload};
+
+// ------------------------------------------------------------- mini-harness
+
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15).max(1))
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// The fuzzer's coarse time lattice: gridded gaps make same-instant
+/// arrivals common, so fault instants collide with releases for real.
+const GRID: f64 = 1.5e-3;
+
+/// A random arrival-ordered stream: gridded inter-arrival gaps (including
+/// zero — simultaneous arrivals), mixed head widths, most requests
+/// carrying a finite relative deadline, priorities spread over 0..3.
+fn random_requests(rng: &mut Rng, n: usize) -> Vec<ServeRequest> {
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += rng.below(4) as f64 * GRID;
+            let beta = [32u64, 64, 128][rng.below(3)];
+            let mut r = ServeRequest::new(i, t, Workload::Head { beta });
+            if rng.below(3) != 0 {
+                r.deadline = Some((1 + rng.below(4)) as f64 * 0.02);
+            }
+            r.priority = rng.below(3) as u32;
+            r
+        })
+        .collect()
+}
+
+/// The fault plans a case sweeps, all survivable (at least one device of
+/// the 2-GPU/1-CPU platform stays up): no plan, a single mid-run crash, a
+/// wedge+slowdown pair, a double crash leaving only the CPU, and a
+/// zero-budget crash that forces the shed path.
+fn plans(rng: &mut Rng) -> Vec<Option<FaultPlan>> {
+    let crash_at = (1 + rng.below(4)) as f64 * GRID;
+    let single = FaultPlan {
+        events: vec![FaultEvent {
+            device: rng.below(2),
+            at: crash_at,
+            kind: FaultKind::Crash,
+        }],
+        retry_budget: 2,
+        backoff_base: 1e-4,
+        ..FaultPlan::default()
+    };
+    let wedge_slow = FaultPlan {
+        events: vec![
+            FaultEvent {
+                device: rng.below(3),
+                at: (1 + rng.below(3)) as f64 * GRID,
+                kind: FaultKind::Wedge { dur: 2.0 * GRID },
+            },
+            FaultEvent {
+                device: rng.below(3),
+                at: (1 + rng.below(4)) as f64 * GRID,
+                kind: FaultKind::Slowdown { factor: 0.5 },
+            },
+        ],
+        retry_budget: 3,
+        backoff_base: 1e-4,
+        ..FaultPlan::default()
+    };
+    let double = FaultPlan {
+        events: vec![
+            FaultEvent {
+                device: 0,
+                at: crash_at,
+                kind: FaultKind::Crash,
+            },
+            FaultEvent {
+                device: 1,
+                at: crash_at + GRID,
+                kind: FaultKind::Crash,
+            },
+        ],
+        retry_budget: 2,
+        backoff_base: 1e-4,
+        ..FaultPlan::default()
+    };
+    let no_budget = FaultPlan {
+        events: vec![FaultEvent {
+            device: rng.below(2),
+            at: crash_at,
+            kind: FaultKind::Crash,
+        }],
+        retry_budget: 0,
+        backoff_base: 0.0,
+        ..FaultPlan::default()
+    };
+    vec![
+        None,
+        Some(single.normalized().expect("single crash plan")),
+        Some(wedge_slow.normalized().expect("wedge+slowdown plan")),
+        Some(double.normalized().expect("double crash plan")),
+        Some(no_budget.normalized().expect("zero-budget plan")),
+    ]
+}
+
+fn run_case(
+    requests: &[ServeRequest],
+    plan: Option<&FaultPlan>,
+    window: usize,
+    use_edf: bool,
+    ctx: &str,
+) {
+    let platform = Platform::scaled(2, 1, 2, 1);
+    let cfg = StreamingConfig {
+        window,
+        faults: plan.cloned(),
+        ..StreamingConfig::default()
+    };
+    let mut edf = Edf;
+    let mut ll = LeastLoaded;
+    let policy: &mut dyn Policy = if use_edf { &mut edf } else { &mut ll };
+    let report = serve_stream(
+        requests.to_vec(),
+        &platform,
+        &PaperCost,
+        policy,
+        &cfg,
+        &mut NullSink,
+    )
+    .unwrap_or_else(|e| panic!("{ctx}: serve_stream failed: {e}"));
+
+    assert_eq!(report.offered, requests.len(), "{ctx}: offered != sent");
+    assert_eq!(
+        report.served + report.rejected + report.shed,
+        report.offered,
+        "{ctx}: conservation violated ({} served + {} rejected + {} shed != {} offered)",
+        report.served,
+        report.rejected,
+        report.shed,
+        report.offered
+    );
+    if window > 0 {
+        assert!(
+            report.peak_live_requests <= window,
+            "{ctx}: window breached ({} live > {window})",
+            report.peak_live_requests
+        );
+    }
+    match plan {
+        Some(p) => assert!(
+            report.max_retries <= p.retry_budget,
+            "{ctx}: retry budget breached ({} > {})",
+            report.max_retries,
+            p.retry_budget
+        ),
+        None => {
+            assert_eq!(report.shed, 0, "{ctx}: shed without a fault plan");
+            assert_eq!(report.max_retries, 0, "{ctx}: retries without a fault plan");
+        }
+    }
+}
+
+// ------------------------------------------------------------------- props
+
+#[test]
+fn conservation_holds_across_seeds_plans_and_windows() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let n = 8 + rng.below(17); // 8..=24 requests
+        let requests = random_requests(&mut rng, n);
+        for (pi, plan) in plans(&mut rng).iter().enumerate() {
+            for &window in &[0usize, 4, 16] {
+                let ctx = format!("seed {seed} plan {pi} window {window}");
+                run_case(&requests, plan.as_ref(), window, seed % 2 == 0, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn crashing_every_device_still_accounts_for_every_request() {
+    let mut rng = Rng::new(97);
+    let requests = random_requests(&mut rng, 12);
+    let plan = FaultPlan {
+        events: (0..3)
+            .map(|d| FaultEvent {
+                device: d,
+                at: 2.0 * GRID,
+                kind: FaultKind::Crash,
+            })
+            .collect(),
+        retry_budget: 1,
+        backoff_base: 1e-4,
+        ..FaultPlan::default()
+    }
+    .normalized()
+    .expect("all-down plan");
+    run_case(&requests, Some(&plan), 8, true, "all-down");
+}
+
+#[test]
+fn zero_event_plan_is_bitwise_identical_to_no_plan() {
+    for seed in [3u64, 11, 42] {
+        let mut rng = Rng::new(seed);
+        // Loose 10 s deadlines: installing a plan (even an empty one) arms
+        // the deadline-aware queue shedder, so an expirable deadline could
+        // legitimately diverge the two runs. With nothing expirable the
+        // zero-event plan must be bit-for-bit the fault-free build.
+        let mut requests = random_requests(&mut rng, 16);
+        for r in &mut requests {
+            if r.deadline.is_some() {
+                r.deadline = Some(10.0);
+            }
+        }
+        let platform = Platform::scaled(2, 1, 2, 1);
+        let run = |faults: Option<FaultPlan>| {
+            let cfg = StreamingConfig {
+                window: 8,
+                faults,
+                ..StreamingConfig::default()
+            };
+            serve_stream(
+                requests.clone(),
+                &platform,
+                &PaperCost,
+                &mut Edf,
+                &cfg,
+                &mut NullSink,
+            )
+            .expect("serve")
+        };
+        let plain = run(None);
+        let empty = run(Some(FaultPlan::default().normalized().expect("empty plan")));
+        assert_eq!(
+            plain.makespan.to_bits(),
+            empty.makespan.to_bits(),
+            "seed {seed}: makespan drifted under a zero-event plan"
+        );
+        assert_eq!(plain.served, empty.served, "seed {seed}: served drifted");
+        assert_eq!(plain.rejected, empty.rejected, "seed {seed}: rejected drifted");
+        assert_eq!(plain.preemptions, empty.preemptions, "seed {seed}: preemptions drifted");
+        assert_eq!(plain.events, empty.events, "seed {seed}: events drifted");
+        assert_eq!(
+            plain.p99_latency.to_bits(),
+            empty.p99_latency.to_bits(),
+            "seed {seed}: p99 drifted"
+        );
+        assert_eq!(empty.shed, 0, "seed {seed}: zero-event plan shed work");
+        assert_eq!(empty.max_retries, 0, "seed {seed}: zero-event plan retried work");
+    }
+}
