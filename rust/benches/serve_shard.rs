@@ -1,0 +1,210 @@
+//! Bench SERVE-SHARD — the sharded multi-replica scaling proof (ISSUE 10):
+//! a 4→16→64-GPU sweep holding the *per-shard* platform fixed at 4 scaled
+//! GPUs (1 shard, 4 shards, 16 shards) and the per-shard offered load
+//! fixed at 600 req/s over a 5-second virtual arrival window. Each config
+//! streams its requests through `serve_sharded_stream`: the
+//! signature-affinity router fans a 32-signature palette out to the
+//! shards, every shard runs its own serve-core loop on its own scheduler
+//! state and template cache, and the per-shard reports merge bin-wise.
+//!
+//! Because virtual stream duration and per-shard load are constant across
+//! configs, near-linear scaling means the merged virtual throughput grows
+//! with the shard count: `scaling_efficiency = rps_64 / (rps_4 × 16)`.
+//! Throughputs are **virtual-time** (served / merged sim makespan), so the
+//! gate is stable across CI hardware; only `wall_seconds` and the
+//! router-overhead fraction (router wall seconds / config wall seconds)
+//! touch the wall clock.
+//!
+//! Emits `BENCH_serve_shard.json`, which `pyschedcl bench-check` gates
+//! against `ci/bench_baselines/BENCH_serve_shard.json`: conservation
+//! (`lost_total == 0`), zero duplicate rejections, scaling efficiency
+//! ≥ 0.7 at 64 GPUs, and router overhead ≤ 5% of wall.
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::error::Result;
+use pyschedcl::json::Json;
+use pyschedcl::sched::{LeastLoaded, Policy};
+use pyschedcl::serve::{
+    serve_sharded_stream, NullSink, PlatformShape, PoissonStream, ServeRequest, ShardSpec,
+    StreamingConfig, Workload,
+};
+use std::time::Instant;
+
+fn policy_factory() -> Result<Box<dyn Policy>> {
+    Ok(Box::new(LeastLoaded))
+}
+
+struct ConfigResult {
+    gpus: usize,
+    shards: usize,
+    requests: usize,
+    wall_seconds: f64,
+    virtual_rps: f64,
+    makespan: f64,
+    router_overhead_frac: f64,
+    spills: usize,
+    duplicates: usize,
+    lost: f64,
+    offered: usize,
+    served: usize,
+    per_shard_rps: Vec<f64>,
+}
+
+fn run_config(gpus: usize, shards: usize) -> ConfigResult {
+    // Per-shard load is constant across the sweep: 600 req/s per 4-GPU
+    // shard (well inside the soak bench's 1500 req/s stable regime, so a
+    // 2x signature imbalance still drains) over a 5 s virtual window.
+    let per_shard_rate = 600.0;
+    let rate = per_shard_rate * shards as f64;
+    let n = (rate * 5.0) as usize;
+    let shape = PlatformShape {
+        gpus,
+        cpus: shards,
+        queues_gpu: 3,
+        queues_cpu: 1,
+    };
+    let spec = ShardSpec {
+        shards,
+        ..ShardSpec::default()
+    };
+    // The window bounds each shard's live requests independently.
+    let cfg = StreamingConfig {
+        window: 512,
+        ..StreamingConfig::default()
+    };
+    // 32 workload signatures: enough distinct hash targets that every
+    // shard count in the sweep sees work on all shards.
+    let requests = PoissonStream::new(17 + shards as u64, rate)
+        .expect("valid rate")
+        .take(n)
+        .enumerate()
+        .map(|(i, t)| ServeRequest::new(i, t, Workload::Head { beta: 64 + 8 * (i as u64 % 32) }));
+
+    let t0 = Instant::now();
+    let r = serve_sharded_stream(
+        requests,
+        shape,
+        &PaperCost,
+        policy_factory,
+        &cfg,
+        &spec,
+        &mut NullSink,
+    )
+    .expect("sharded serve");
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = &r.merged;
+    let lost = (m.offered as f64) - (m.served as f64) - (m.rejected as f64) - (m.shed as f64);
+    ConfigResult {
+        gpus,
+        shards,
+        requests: n,
+        wall_seconds: wall,
+        virtual_rps: m.throughput_rps,
+        makespan: m.makespan,
+        router_overhead_frac: if wall > 0.0 {
+            r.route_seconds / wall
+        } else {
+            0.0
+        },
+        spills: r.router.spills,
+        duplicates: r.router.duplicate_rejections,
+        lost,
+        offered: m.offered,
+        served: m.served,
+        per_shard_rps: r.shards.iter().map(|s| s.throughput_rps).collect(),
+    }
+}
+
+fn main() {
+    let sweep: Vec<ConfigResult> = [(4usize, 1usize), (16, 4), (64, 16)]
+        .iter()
+        .map(|&(gpus, shards)| {
+            let c = run_config(gpus, shards);
+            println!(
+                "serve-shard: {} GPUs / {} shard(s): {} requests in {:.2}s wall -> \
+                 virtual {:.0} req/s (makespan {:.2}s), router {:.4}% of wall, \
+                 {} spill(s), {} lost",
+                c.gpus,
+                c.shards,
+                c.requests,
+                c.wall_seconds,
+                c.virtual_rps,
+                c.makespan,
+                c.router_overhead_frac * 100.0,
+                c.spills,
+                c.lost
+            );
+            assert_eq!(c.lost, 0.0, "conservation violated at {} shards", c.shards);
+            c
+        })
+        .collect();
+
+    let rps_4 = sweep[0].virtual_rps;
+    let rps_16 = sweep[1].virtual_rps;
+    let rps_64 = sweep[2].virtual_rps;
+    // Perfect scaling would multiply the 4-GPU throughput by 16 at 64
+    // GPUs (same per-shard platform and load).
+    let efficiency = rps_64 / (rps_4 * 16.0);
+    let overhead = sweep.iter().fold(0.0f64, |m, c| m.max(c.router_overhead_frac));
+    let wall: f64 = sweep.iter().map(|c| c.wall_seconds).sum();
+    let offered_total: usize = sweep.iter().map(|c| c.offered).sum();
+    let lost_total: f64 = sweep.iter().map(|c| c.lost).sum();
+    let duplicates: usize = sweep.iter().map(|c| c.duplicates).sum();
+
+    println!(
+        "serve-shard sweep: scaling efficiency {:.3} (rps 4/16/64 GPUs: \
+         {:.0}/{:.0}/{:.0}), max router overhead {:.4}% of wall, {:.1}s total wall",
+        efficiency,
+        rps_4,
+        rps_16,
+        rps_64,
+        overhead * 100.0,
+        wall
+    );
+
+    let json = Json::obj(vec![
+        ("schema", Json::str("pyschedcl-serve-shard-bench-v1")),
+        ("wall_seconds", Json::num(wall)),
+        ("offered_total", Json::num(offered_total as f64)),
+        ("lost_total", Json::num(lost_total)),
+        ("duplicate_rejections", Json::num(duplicates as f64)),
+        ("rps_4", Json::num(rps_4)),
+        ("rps_16", Json::num(rps_16)),
+        ("rps_64", Json::num(rps_64)),
+        ("scaling_efficiency", Json::num(efficiency)),
+        ("router_overhead_frac", Json::num(overhead)),
+        (
+            "configs",
+            Json::Arr(
+                sweep
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("gpus", Json::num(c.gpus as f64)),
+                            ("shards", Json::num(c.shards as f64)),
+                            ("requests", Json::num(c.requests as f64)),
+                            ("offered", Json::num(c.offered as f64)),
+                            ("served", Json::num(c.served as f64)),
+                            ("wall_seconds", Json::num(c.wall_seconds)),
+                            ("virtual_rps", Json::num(c.virtual_rps)),
+                            ("makespan_s", Json::num(c.makespan)),
+                            ("router_overhead_frac", Json::num(c.router_overhead_frac)),
+                            ("spills", Json::num(c.spills as f64)),
+                            (
+                                "per_shard_rps",
+                                Json::Arr(c.per_shard_rps.iter().map(|&v| Json::num(v)).collect()),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_serve_shard.json"))
+        .unwrap_or_else(|| "BENCH_serve_shard.json".into());
+    std::fs::write(&path, json.to_string_pretty()).expect("write bench json");
+    println!("wrote {}", path.display());
+}

@@ -25,6 +25,7 @@
 //!                 [--streaming] [--window 512] [--outcomes-jsonl OUT]
 //!                 [--faults PLAN.json] [--retry-budget N]
 //!                 [--shed-policy lowest-priority|latest-deadline]
+//!                 [--shards N] [--spill-threshold 64] [--shard-slo F]
 //!                 [--json OUT]                      multi-DAG serving
 //! pyschedcl bench-check --baseline F --current F [--tolerance 0.15]
 //!                 [--update] [--validate]       CI bench-regression gate
@@ -81,6 +82,21 @@
 //! report's `served + rejected + shed == offered` accounting and the
 //! chaos proof live in `benches/serve_chaos.rs`, gated in CI against
 //! `ci/bench_baselines/BENCH_serve_chaos.json`.
+//!
+//! Sharded serving (PR 10): `--shards N` (streaming only) partitions the
+//! platform into N equal replica shards — each with its own scheduler
+//! state, backend, and template/executable caches — behind the
+//! signature-affinity router ([`pyschedcl::serve::Router`]): requests hash
+//! by workload signature to an affine shard (cache locality) and spill to
+//! the less-loaded of two choices only when the affine queue depth exceeds
+//! `--spill-threshold`. `--shard-slo F` arms the SLO-driven rebalancer
+//! (halves the effective spill threshold while the observed miss rate
+//! exceeds F). Shards execute concurrently on scoped threads; per-shard
+//! reports merge bin-wise into one conserved report. `--autoscale-target`
+//! now binary-searches the GPU axis with a per-scale report cache instead
+//! of a linear scan. The 4→64-GPU scaling proof lives in
+//! `benches/serve_shard.rs`, gated in CI against
+//! `ci/bench_baselines/BENCH_serve_shard.json`.
 
 use pyschedcl::cost::{CalibratedCost, CostModel, PaperCost};
 use pyschedcl::error::{Error, Result};
@@ -92,15 +108,17 @@ use pyschedcl::platform::{DeviceType, Platform};
 use pyschedcl::report::experiments as expts;
 use pyschedcl::report::{
     check_bench, format_gate, format_gate_markdown, format_real_summary,
-    format_serve_comparison, format_stream_summary, load_baseline, peak_rss_mb,
-    serve_bench_json, serve_real_stream_json, serve_soak_json, update_baseline,
+    format_serve_comparison, format_sharded_summary, format_stream_summary, load_baseline,
+    peak_rss_mb, serve_bench_json, serve_real_stream_json, serve_shard_json, serve_soak_json,
+    update_baseline,
 };
 use pyschedcl::runtime::{manifest::default_artifact_dir, Runtime};
 use pyschedcl::sched::{Clustering, Eager, Edf, Heft, LeastLoaded, Policy};
 use pyschedcl::serve::{
-    parse_rate, poisson_arrivals, serve_real, serve_real_stream, serve_sequential, serve_sim,
-    serve_stream, trace_arrivals, JsonlSink, NullSink, Pacing, ServeConfig, ServeRequest,
-    StreamingConfig, Workload,
+    autoscale_search, parse_rate, poisson_arrivals, serve_real, serve_real_stream,
+    serve_sequential, serve_sharded_real_stream, serve_sharded_stream, serve_sim, serve_stream,
+    trace_arrivals, JsonlSink, NullSink, Pacing, PlatformShape, ServeConfig, ServeRequest,
+    ShardSpec, StreamingConfig, Workload,
 };
 use pyschedcl::sim::{simulate, SimConfig};
 use pyschedcl::spec::parse_spec;
@@ -503,6 +521,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .into(),
         ));
     }
+    if !streaming
+        && (args.get("shards").is_some()
+            || args.get("spill-threshold").is_some()
+            || args.get("shard-slo").is_some())
+    {
+        return Err(Error::Io(
+            "--shards/--spill-threshold/--shard-slo partition the always-on server \
+             (add --streaming)"
+                .into(),
+        ));
+    }
     if streaming {
         if args.get("autoscale-target").is_some() {
             return Err(Error::Io(
@@ -551,6 +580,130 @@ fn cmd_serve(args: &Args) -> Result<()> {
             sim: SimConfig::default(),
             faults,
         };
+        // Sharded multi-replica serving: N concurrent serve loops on
+        // disjoint sub-platforms behind the signature-affinity router.
+        // `--shards 1` (the default) stays on the unsharded paths below,
+        // which the integration test pins byte-identical.
+        let shards = args.usize_or("shards", 1);
+        if shards > 1 {
+            let shape = PlatformShape {
+                gpus: args.usize_or("gpus", 1),
+                cpus: args.usize_or("cpus", 1),
+                queues_gpu: args.usize_or("queues-gpu", 3),
+                queues_cpu: args.usize_or("queues-cpu", 1),
+            };
+            let slo_target = match args.get("shard-slo") {
+                Some(t) => {
+                    let v: f64 = t.parse().map_err(|_| {
+                        Error::Io(format!(
+                            "invalid --shard-slo '{t}' (expected a miss-rate fraction)"
+                        ))
+                    })?;
+                    if !(0.0..=1.0).contains(&v) {
+                        return Err(Error::Io(format!(
+                            "--shard-slo {v} out of range (expected within [0, 1])"
+                        )));
+                    }
+                    Some(v)
+                }
+                None => None,
+            };
+            let spec = ShardSpec {
+                shards,
+                spill_threshold: args.usize_or("spill-threshold", 64),
+                slo_target,
+                ..ShardSpec::default()
+            };
+            let factory = || policy_by_name(policy_name);
+            let wall = std::time::Instant::now();
+            let sharded = if args.get("mode") == Some("real") {
+                let dir = args
+                    .get("artifacts")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(default_artifact_dir);
+                let calibrated = CalibratedCost::load(&dir.join("calibration.json")).ok();
+                let cost: &dyn CostModel = match &calibrated {
+                    Some(c) => {
+                        println!("cost model: calibrated ({}/calibration.json)", dir.display());
+                        c
+                    }
+                    None => &PaperCost,
+                };
+                match args.get("outcomes-jsonl") {
+                    Some(path) => {
+                        let file = std::fs::File::create(path)
+                            .map_err(|e| Error::Io(format!("cannot create {path}: {e}")))?;
+                        let mut sink = JsonlSink::new(std::io::BufWriter::new(file));
+                        let r = serve_sharded_real_stream(
+                            requests,
+                            &dir,
+                            shape,
+                            cost,
+                            factory,
+                            &scfg,
+                            pacing,
+                            prewarm,
+                            seed,
+                            &spec,
+                            &mut sink,
+                        )?;
+                        println!("wrote per-request outcomes to {path}");
+                        r
+                    }
+                    None => serve_sharded_real_stream(
+                        requests,
+                        &dir,
+                        shape,
+                        cost,
+                        factory,
+                        &scfg,
+                        pacing,
+                        prewarm,
+                        seed,
+                        &spec,
+                        &mut NullSink,
+                    )?,
+                }
+            } else {
+                match args.get("outcomes-jsonl") {
+                    Some(path) => {
+                        let file = std::fs::File::create(path)
+                            .map_err(|e| Error::Io(format!("cannot create {path}: {e}")))?;
+                        let mut sink = JsonlSink::new(std::io::BufWriter::new(file));
+                        let r = serve_sharded_stream(
+                            requests,
+                            shape,
+                            &PaperCost,
+                            factory,
+                            &scfg,
+                            &spec,
+                            &mut sink,
+                        )?;
+                        println!("wrote per-request outcomes to {path}");
+                        r
+                    }
+                    None => serve_sharded_stream(
+                        requests,
+                        shape,
+                        &PaperCost,
+                        factory,
+                        &scfg,
+                        &spec,
+                        &mut NullSink,
+                    )?,
+                }
+            };
+            let wall_seconds = wall.elapsed().as_secs_f64();
+            print!("{}", format_sharded_summary(&sharded));
+            if let Some(path) = args.get("json") {
+                let json = serve_shard_json(&sharded, wall_seconds);
+                std::fs::write(path, json.to_string_pretty())
+                    .map_err(|e| Error::Io(format!("cannot write {path}: {e}")))?;
+                println!("wrote {path}");
+            }
+            return Ok(());
+        }
+
         let mut policy = policy_by_name(policy_name)?;
 
         if args.get("mode") == Some("real") {
@@ -700,9 +853,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    // SLO-aware autoscaling experiment: find the smallest GPU count whose
-    // simulated deadline-miss rate meets the target, then serve the final
-    // comparison at that scale.
+    // SLO-aware autoscaling experiment: binary-search the smallest GPU
+    // count whose simulated deadline-miss rate meets the target (the miss
+    // rate is monotone non-increasing in GPU count for a fixed request
+    // set), then serve the final comparison at that scale. The per-scale
+    // report cache lets the chosen scale's report be reused below instead
+    // of simulating it a second time.
+    let mut autoscaled = None;
     if let Some(target_text) = args.get("autoscale-target") {
         let target: f64 = target_text.parse().map_err(|_| {
             Error::Io(format!(
@@ -719,38 +876,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let q_gpu = args.usize_or("queues-gpu", 3);
         let q_cpu = args.usize_or("queues-cpu", 1);
         println!("autoscale: smallest GPU count with deadline-miss rate <= {target}");
-        let mut chosen = max_gpus;
-        let mut reached = false;
-        for gpus in 1..=max_gpus {
-            let candidate = Platform::scaled(gpus, cpus, q_gpu, q_cpu);
-            let mut pol = policy_by_name(policy_name)?;
-            let r = serve_sim(&requests, &candidate, &PaperCost, pol.as_mut(), &cfg)?;
+        let mut outcome = autoscale_search(
+            max_gpus,
+            target,
+            |gpus| {
+                let candidate = Platform::scaled(gpus, cpus, q_gpu, q_cpu);
+                let mut pol = policy_by_name(policy_name)?;
+                let r = serve_sim(&requests, &candidate, &PaperCost, pol.as_mut(), &cfg)?;
+                println!(
+                    "  gpus={gpus}: miss rate {:.3} ({} of {} deadlines missed, p99 {:.1} ms)",
+                    r.deadline_miss_rate,
+                    r.deadline_misses,
+                    r.deadline_total,
+                    r.p99_latency * 1e3
+                );
+                Ok(r)
+            },
+            |r| r.deadline_miss_rate,
+        )?;
+        if outcome.reached {
             println!(
-                "  gpus={gpus}: miss rate {:.3} ({} of {} deadlines missed, p99 {:.1} ms)",
-                r.deadline_miss_rate,
-                r.deadline_misses,
-                r.deadline_total,
-                r.p99_latency * 1e3
+                "autoscale: chose {} GPU(s) after {} evaluation(s)",
+                outcome.chosen,
+                outcome.evaluations.len()
             );
-            if r.deadline_miss_rate <= target {
-                chosen = gpus;
-                reached = true;
-                break;
-            }
-        }
-        if reached {
-            println!("autoscale: chose {chosen} GPU(s)");
         } else {
             println!(
                 "autoscale: target {target} unreachable within {max_gpus} GPU(s); \
                  serving at the cap"
             );
         }
-        platform = Platform::scaled(chosen, cpus, q_gpu, q_cpu);
+        platform = Platform::scaled(outcome.chosen, cpus, q_gpu, q_cpu);
+        autoscaled = outcome.reports.remove(&outcome.chosen);
     }
 
-    let mut policy = policy_by_name(policy_name)?;
-    let concurrent = serve_sim(&requests, &platform, &PaperCost, policy.as_mut(), &cfg)?;
+    let concurrent = match autoscaled {
+        Some(r) => r,
+        None => {
+            let mut policy = policy_by_name(policy_name)?;
+            serve_sim(&requests, &platform, &PaperCost, policy.as_mut(), &cfg)?
+        }
+    };
     let mut policy = policy_by_name(policy_name)?;
     let sequential = serve_sequential(&requests, &platform, &PaperCost, policy.as_mut(), &cfg)?;
     print!("{}", format_serve_comparison(&concurrent, &sequential));

@@ -28,6 +28,7 @@ pub use experiments::{
     MotivationResult,
 };
 pub use serving::{
-    format_real_summary, format_serve_comparison, format_stream_summary, peak_rss_mb,
-    serve_bench_json, serve_chaos_json, serve_real_stream_json, serve_soak_json,
+    format_real_summary, format_serve_comparison, format_sharded_summary, format_stream_summary,
+    peak_rss_mb, serve_bench_json, serve_chaos_json, serve_real_stream_json, serve_shard_json,
+    serve_soak_json,
 };

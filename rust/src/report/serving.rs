@@ -9,7 +9,7 @@
 //! zero under a seeded crash/wedge/slowdown plan.
 
 use crate::json::Json;
-use crate::serve::{ServeReport, StreamReport};
+use crate::serve::{ServeReport, ShardedReport, StreamReport};
 
 fn row(label: &str, r: &ServeReport) -> String {
     let util: Vec<String> = r
@@ -344,6 +344,109 @@ pub fn format_stream_summary(r: &StreamReport) -> String {
         }
     }
     s
+}
+
+/// Render the sharded-run summary: router header, one line per shard,
+/// then the merged global view via [`format_stream_summary`].
+pub fn format_sharded_summary(r: &ShardedReport) -> String {
+    let mut s = format!(
+        "sharded serving: {} shard(s), spill threshold {} (effective {})\n",
+        r.router.shards, r.router.spill_threshold, r.router.effective_spill_threshold
+    );
+    for sh in &r.shards {
+        s.push_str(&format!(
+            "  shard {}: routed {} served {} rejected {} shed {} | makespan {:.1} ms \
+             thru {:.1} r/s | peak {} live, {} block(s) built\n",
+            sh.shard,
+            sh.routed,
+            sh.served,
+            sh.rejected,
+            sh.shed,
+            sh.makespan * 1e3,
+            sh.throughput_rps,
+            sh.peak_live_requests,
+            sh.template_cache_misses
+        ));
+    }
+    s.push_str(&format!(
+        "router: {} spill(s), {} duplicate rejection(s), {} rebalance(s), \
+         {:.3} ms routing\n",
+        r.router.spills,
+        r.router.duplicate_rejections,
+        r.router.rebalances,
+        r.route_seconds * 1e3
+    ));
+    s.push_str(&format_stream_summary(&r.merged));
+    s
+}
+
+/// The `BENCH_serve_shard.json` building block for one sharded run:
+/// router counters, per-shard slices, and the merged streaming view (the
+/// bench wraps three of these — 4/16/64 GPUs — into the sweep artifact).
+pub fn serve_shard_json(r: &ShardedReport, wall_seconds: f64) -> Json {
+    let m = &r.merged;
+    Json::obj(vec![
+        ("schema", Json::str("pyschedcl-serve-shard-v1")),
+        ("shards", Json::num(r.router.shards as f64)),
+        ("spill_threshold", Json::num(r.router.spill_threshold as f64)),
+        (
+            "effective_spill_threshold",
+            Json::num(r.router.effective_spill_threshold as f64),
+        ),
+        ("spills", Json::num(r.router.spills as f64)),
+        (
+            "duplicate_rejections",
+            Json::num(r.router.duplicate_rejections as f64),
+        ),
+        ("rebalances", Json::num(r.router.rebalances as f64)),
+        ("route_seconds", Json::num(r.route_seconds)),
+        (
+            "router_overhead_frac",
+            Json::num(if wall_seconds > 0.0 {
+                r.route_seconds / wall_seconds
+            } else {
+                0.0
+            }),
+        ),
+        ("wall_seconds", Json::num(wall_seconds)),
+        ("offered", Json::num(m.offered as f64)),
+        ("served", Json::num(m.served as f64)),
+        ("rejected", Json::num(m.rejected as f64)),
+        ("shed", Json::num(m.shed as f64)),
+        (
+            "lost",
+            Json::num(
+                (m.offered as f64) - (m.served as f64) - (m.rejected as f64) - (m.shed as f64),
+            ),
+        ),
+        ("throughput_rps", Json::num(m.throughput_rps)),
+        ("p99_latency_s", Json::num(m.p99_latency)),
+        ("deadline_miss_rate", Json::num(m.deadline_miss_rate)),
+        (
+            "per_shard",
+            Json::Arr(
+                r.shards
+                    .iter()
+                    .map(|sh| {
+                        Json::obj(vec![
+                            ("shard", Json::num(sh.shard as f64)),
+                            ("routed", Json::num(sh.routed as f64)),
+                            ("served", Json::num(sh.served as f64)),
+                            ("rejected", Json::num(sh.rejected as f64)),
+                            ("shed", Json::num(sh.shed as f64)),
+                            ("makespan_s", Json::num(sh.makespan)),
+                            ("throughput_rps", Json::num(sh.throughput_rps)),
+                            (
+                                "template_cache_misses",
+                                Json::num(sh.template_cache_misses as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("streaming", m.to_json()),
+    ])
 }
 
 #[cfg(test)]

@@ -1,0 +1,177 @@
+//! SLO-aware capacity search: the smallest GPU count whose deadline-miss
+//! rate meets a target.
+//!
+//! `--autoscale-target F` used to scan GPU counts linearly, serving the
+//! whole request stream once per scale — O(max_gpus) full simulations.
+//! [`autoscale_search`] replaces that with **binary search over the scale
+//! axis** plus a per-scale report cache: the cap is probed once (target
+//! unreachable → serve at the cap, same contract as the scan), then the
+//! search narrows in O(log max_gpus) evaluations, and every evaluated
+//! scale's report is retained so the caller reuses the chosen scale's
+//! report instead of re-serving.
+//!
+//! # Monotonicity assumption
+//!
+//! Binary search finds the *smallest feasible scale* exactly when the
+//! miss rate is non-increasing in the GPU count — more replicas of the
+//! same GPU never hurt a deadline under the simulator's scheduling model.
+//! This is the same assumption the linear scan's early `break` made (it
+//! stopped at the first feasible scale without probing larger ones); the
+//! search just exploits it from both ends.
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+
+/// Search outcome: the chosen scale plus the evaluation transcript and the
+/// per-scale report cache.
+#[derive(Debug)]
+pub struct Autoscale<R> {
+    /// Smallest scale meeting the target, or the cap when unreachable.
+    pub chosen: usize,
+    /// Whether the target was met within the cap.
+    pub reached: bool,
+    /// `(scale, miss_rate)` in evaluation order — the search transcript
+    /// (each scale appears at most once).
+    pub evaluations: Vec<(usize, f64)>,
+    /// Every evaluated scale's report, keyed by GPU count. Always contains
+    /// `chosen` — the caller serves nothing twice.
+    pub reports: HashMap<usize, R>,
+}
+
+/// Binary-search the smallest `gpus ∈ [1, max_gpus]` with
+/// `miss(eval(gpus)) <= target`. `eval` runs the full serving simulation
+/// at one scale (expensive — memoized); `miss` projects its report to the
+/// deadline-miss rate.
+pub fn autoscale_search<R>(
+    max_gpus: usize,
+    target: f64,
+    mut eval: impl FnMut(usize) -> Result<R>,
+    miss: impl Fn(&R) -> f64,
+) -> Result<Autoscale<R>> {
+    let max_gpus = max_gpus.max(1);
+    let mut reports: HashMap<usize, R> = HashMap::new();
+    let mut evaluations: Vec<(usize, f64)> = Vec::new();
+    let mut probe = |gpus: usize,
+                     reports: &mut HashMap<usize, R>,
+                     evaluations: &mut Vec<(usize, f64)>|
+     -> Result<f64> {
+        if let Some(r) = reports.get(&gpus) {
+            return Ok(miss(r));
+        }
+        let r = eval(gpus)?;
+        let rate = miss(&r);
+        evaluations.push((gpus, rate));
+        reports.insert(gpus, r);
+        Ok(rate)
+    };
+
+    // Probe the cap first: if even max_gpus misses the target, the target
+    // is unreachable and the caller serves at the cap (the scan's
+    // contract). This also seeds the search's feasible upper bound.
+    if probe(max_gpus, &mut reports, &mut evaluations)? > target {
+        return Ok(Autoscale {
+            chosen: max_gpus,
+            reached: false,
+            evaluations,
+            reports,
+        });
+    }
+    let (mut lo, mut hi) = (1usize, max_gpus);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if probe(mid, &mut reports, &mut evaluations)? <= target {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Ok(Autoscale {
+        chosen: hi,
+        reached: true,
+        evaluations,
+        reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    /// A synthetic monotone miss-rate curve: feasible at `first_ok` and
+    /// above. The "report" is the scale itself.
+    fn curve(first_ok: usize) -> impl Fn(usize) -> f64 {
+        move |gpus| {
+            if gpus >= first_ok {
+                0.0
+            } else {
+                1.0
+            }
+        }
+    }
+
+    #[test]
+    fn finds_the_smallest_feasible_scale_like_the_linear_scan() {
+        for max in [1usize, 2, 3, 7, 8, 64] {
+            for first_ok in 1..=max {
+                let f = curve(first_ok);
+                let out = autoscale_search(max, 0.1, Ok, |&g| f(g)).unwrap();
+                assert!(out.reached);
+                assert_eq!(
+                    out.chosen, first_ok,
+                    "max={max} first_ok={first_ok}: binary search must agree \
+                     with the linear scan"
+                );
+                assert_eq!(out.reports[&out.chosen], out.chosen);
+            }
+        }
+    }
+
+    #[test]
+    fn unreachable_target_serves_at_the_cap() {
+        let out = autoscale_search(8, 0.1, Ok, |_| 1.0).unwrap();
+        assert!(!out.reached);
+        assert_eq!(out.chosen, 8);
+        // Exactly one expensive evaluation: the cap probe.
+        assert_eq!(out.evaluations.len(), 1);
+        assert!(out.reports.contains_key(&8));
+    }
+
+    #[test]
+    fn evaluation_count_is_logarithmic_and_memoized() {
+        let calls = Cell::new(0usize);
+        let f = curve(37);
+        let out = autoscale_search(
+            64,
+            0.0,
+            |g| {
+                calls.set(calls.get() + 1);
+                Ok(g)
+            },
+            |&g| f(g),
+        )
+        .unwrap();
+        assert_eq!(out.chosen, 37);
+        // log2(64) = 6 bisection probes + the cap probe; memoization means
+        // evaluations == distinct eval calls.
+        assert!(calls.get() <= 7, "{} eval calls for max 64", calls.get());
+        assert_eq!(out.evaluations.len(), calls.get());
+        let mut scales: Vec<usize> = out.evaluations.iter().map(|&(g, _)| g).collect();
+        scales.sort_unstable();
+        scales.dedup();
+        assert_eq!(scales.len(), out.evaluations.len(), "no scale evaluated twice");
+    }
+
+    #[test]
+    fn errors_from_eval_propagate() {
+        let e = autoscale_search(
+            4,
+            0.1,
+            |_| -> Result<usize> { Err(crate::error::Error::Sched("boom".into())) },
+            |_| 0.0,
+        )
+        .unwrap_err();
+        assert!(matches!(e, crate::error::Error::Sched(_)), "{e}");
+    }
+}

@@ -109,6 +109,16 @@ pub trait OutcomeSink {
         Ok(())
     }
 
+    /// A request rejected at admission (duplicate id in flight, negative
+    /// laxity, malformed workload), reported with the typed error. Called
+    /// once per rejection, before the next arrival is ingested. The default
+    /// discards — accounting stays in the report; the sharded router's
+    /// per-shard sink overrides this to release the id from the global
+    /// in-flight set so a rejected id can legitimately be resubmitted.
+    fn emit_rejected(&mut self, _id: usize, _err: &Error) -> Result<()> {
+        Ok(())
+    }
+
     /// Flush any buffered output; called once at end of stream.
     fn flush(&mut self) -> Result<()> {
         Ok(())
@@ -278,6 +288,12 @@ pub struct StreamReport {
     /// Merged-template cache hits/misses over this run.
     pub template_cache_hits: usize,
     pub template_cache_misses: usize,
+    /// The full latency histogram behind `p50/p99_latency` — carried so a
+    /// sharded run can merge per-shard histograms **bin-wise**
+    /// ([`LatencyHistogram::merge`]) and cut exact global percentiles
+    /// instead of averaging per-shard quantiles (which has no error bound).
+    /// O(1) in the stream length, like every other field.
+    pub latency_hist: LatencyHistogram,
 }
 
 impl StreamReport {
@@ -551,12 +567,16 @@ where
     // end, O(1) in the stream length.
     let mut hist = LatencyHistogram::new();
 
-    let mut reject = |id: usize, e: Error, rejected: &mut usize| {
-        *rejected += 1;
-        if rejected_sample.len() < reject_sample_cap {
-            rejected_sample.push((id, e.to_string()));
-        }
-    };
+    // `sink` is passed per call (not captured): the loop body also emits
+    // completions through it.
+    let mut reject =
+        |id: usize, e: Error, rejected: &mut usize, sink: &mut dyn OutcomeSink| -> Result<()> {
+            *rejected += 1;
+            if rejected_sample.len() < reject_sample_cap {
+                rejected_sample.push((id, e.to_string()));
+            }
+            sink.emit_rejected(id, &e)
+        };
 
     loop {
         // (1) Admit queued units while the window admits them. An idle
@@ -667,12 +687,13 @@ where
                                 req.id
                             )),
                             &mut rejected,
-                        );
+                            &mut *sink,
+                        )?;
                         continue;
                     }
                     if let Err(e) = gate.check(&req, app.as_ref(), platform, cost) {
                         laxity_rejections += 1;
-                        reject(req.id, e, &mut rejected);
+                        reject(req.id, e, &mut rejected, &mut *sink)?;
                         continue;
                     }
                     let sig = req.workload.signature();
@@ -689,7 +710,7 @@ where
                     );
                     units_from_closed(&mut closed, &mut pending, cache, &mut admit_q)?;
                 }
-                Err(e) => reject(req.id, e, &mut rejected),
+                Err(e) => reject(req.id, e, &mut rejected, &mut *sink)?,
             }
             continue;
         }
@@ -767,6 +788,7 @@ where
         warm_batch_latency: 0.0,
         template_cache_hits: hits1 - hits0,
         template_cache_misses: misses1 - misses0,
+        latency_hist: hist,
     };
     backend.finalize_report(&mut report);
     Ok(report)

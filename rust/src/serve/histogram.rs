@@ -93,6 +93,28 @@ impl LatencyHistogram {
         self.count
     }
 
+    /// Fold another histogram into this one, bin-wise per priority class.
+    ///
+    /// Because every histogram uses the same fixed bin edges
+    /// ([`MIN_LATENCY`], [`MAX_LATENCY`], [`GROWTH`]), merging is exact:
+    /// quantiles cut from the merged histogram equal quantiles cut from a
+    /// single histogram that recorded every sample directly — this is what
+    /// lets the sharded server keep one histogram per shard thread and
+    /// still report global percentiles with the same ≤1% error bound.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        let nbins = self.nbins;
+        for (&p, obins) in &other.per_priority {
+            let bins = self
+                .per_priority
+                .entry(p)
+                .or_insert_with(|| vec![0u64; nbins]);
+            for (b, &c) in bins.iter_mut().zip(obins.iter()) {
+                *b += c;
+            }
+        }
+        self.count += other.count;
+    }
+
     /// Nearest-rank quantile over **all** priorities merged, matching
     /// [`super::percentile_sorted`]'s rank convention
     /// (`round((n-1)·q)`); 0.0 when empty, representative within 1% of the
@@ -191,6 +213,40 @@ mod tests {
         let hi = h.quantile(1.0);
         assert!((MIN_LATENCY..MIN_LATENCY * 1.1).contains(&lo), "{lo}");
         assert!((MAX_LATENCY * 0.97..=MAX_LATENCY * 1.02).contains(&hi), "{hi}");
+    }
+
+    #[test]
+    fn merge_is_bin_exact_vs_a_single_global_histogram() {
+        // Samples spanning several decades and 3 priority classes, split
+        // across 4 "shards" round-robin — the sharded report's shape.
+        let samples: Vec<(u32, f64)> = (0..500)
+            .map(|i| ((i % 3) as u32, 5e-5 * 1.025f64.powi(i % 400)))
+            .collect();
+        let mut global = LatencyHistogram::new();
+        let mut shards: Vec<LatencyHistogram> =
+            (0..4).map(|_| LatencyHistogram::new()).collect();
+        for (i, &(p, v)) in samples.iter().enumerate() {
+            global.record(p, v);
+            shards[i % 4].record(p, v);
+        }
+        let mut merged = LatencyHistogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.count(), global.count());
+        // Exact bin equality, not just close quantiles.
+        assert_eq!(merged.per_priority, global.per_priority);
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(
+                merged.quantile(q).to_bits(),
+                global.quantile(q).to_bits(),
+                "q={q}"
+            );
+        }
+        assert_eq!(
+            merged.per_priority_quantile(0.99),
+            global.per_priority_quantile(0.99)
+        );
     }
 
     #[test]

@@ -40,6 +40,18 @@
 //!   PJRT kernels) with open/closed arrival pacing ([`Pacing`]), and the
 //!   real entry points: batch [`serve_real`] and always-on
 //!   [`serve_real_stream`];
+//! * [`router`] — the signature-affinity request router ([`Router`]):
+//!   deterministic signature→shard hashing with power-of-two-choices spill
+//!   above a queue-depth threshold, global duplicate-id rejection, and the
+//!   SLO-driven [`Router::rebalance`] hook;
+//! * [`shard`] — sharded multi-replica serving
+//!   ([`serve_sharded_stream`], [`serve_sharded_real_stream`]): N
+//!   concurrent serve loops on disjoint sub-platforms behind the router,
+//!   merged bin-wise into one [`ShardedReport`] (`--shards 1` is
+//!   byte-identical to the unsharded path);
+//! * [`autoscale`] — SLO-aware capacity search ([`autoscale_search`]):
+//!   binary search over the GPU-scale axis with a per-scale report cache,
+//!   replacing `--autoscale-target`'s linear scan;
 //! * `reference` (doc-hidden) — the frozen pre-refactor pipeline, kept as
 //!   the bit-equality oracle for the core refactor.
 //!
@@ -62,6 +74,7 @@
 
 pub mod admission;
 pub mod arrival;
+pub mod autoscale;
 pub mod cache;
 pub mod core;
 pub mod engine;
@@ -71,10 +84,13 @@ pub mod real;
 #[doc(hidden)]
 pub mod reference;
 pub mod request;
+pub mod router;
+pub mod shard;
 pub mod streaming;
 
 pub use admission::{admit, admit_slo, batch_requests, check_laxity, Batch, OpenBatch, StreamBatcher};
 pub use arrival::{parse_rate, poisson_arrivals, trace_arrivals, PoissonStream};
+pub use autoscale::{autoscale_search, Autoscale};
 pub use cache::TemplateCache;
 pub use engine::{
     percentile_sorted, request_outcome, serve_sequential, serve_sim, serve_sim_cached, Pacing,
@@ -84,8 +100,13 @@ pub use histogram::LatencyHistogram;
 pub use merge::{merge_apps, merge_apps_refs, MergedApp, MergedAssembly};
 pub use real::{serve_real, serve_real_stream, RealBackend};
 pub use request::{ServeRequest, Workload};
+pub use router::{RouteDecision, Router, RouterStats};
 pub use self::core::{
     serve_core, BackendStats, CollectSink, JsonlSink, NullSink, OutcomeSink, ServeBackend,
     StreamReport, StreamingConfig,
+};
+pub use shard::{
+    merge_stream_reports, serve_sharded_real_stream, serve_sharded_stream, PlatformShape,
+    ShardSpec, ShardSummary, ShardedReport,
 };
 pub use streaming::{serve_stream, serve_stream_cached, SimBackend};

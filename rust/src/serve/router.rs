@@ -1,0 +1,378 @@
+//! The signature-affinity request router fronting the sharded server.
+//!
+//! A sharded deployment ([`super::shard`]) runs one serve loop per replica
+//! shard, each with its own scheduler state, simulator/real backend, and
+//! template/executable caches. The router decides which shard each arrival
+//! goes to, balancing two forces:
+//!
+//! * **Cache affinity** — the per-shard [`super::TemplateCache`] (and on
+//!   the real path the per-shard PJRT executable cache) is keyed by
+//!   workload signature. Hashing the signature to an *affine* shard sends
+//!   every `head_b64` to the same replica, so its template and executable
+//!   stay hot instead of being recompiled on every shard.
+//! * **Load balance** — pure affinity hotspots when a few signatures
+//!   dominate. When the affine shard's queue depth exceeds the **spill
+//!   threshold**, the router falls back to power-of-two-choices: a second
+//!   hash-derived candidate is probed and the request goes to the less
+//!   loaded of the two. Spills are counted; a hot signature pays one cold
+//!   template build on its spill target and stays cache-resident there.
+//!
+//! Routing is **deterministic in the unloaded state**: the affine shard is
+//! a pure FNV-1a hash of the signature ([`Router::shard_for_signature`]),
+//! identical across runs, seeds, and processes — the property the router
+//! tests pin. Depth-triggered spilling depends on instantaneous load, which
+//! is the point.
+//!
+//! The router also owns two stream-global responsibilities the per-shard
+//! loops cannot see:
+//!
+//! * **Duplicate-id rejection** — the core's in-flight duplicate check is
+//!   per serve loop, so the same id arriving on two different shards would
+//!   be admitted twice. The router keeps the global in-flight id set and
+//!   rejects a duplicate exactly once, before it reaches any shard.
+//! * **SLO-driven rebalancing** ([`Router::rebalance`]) — shard sinks feed
+//!   observed deadline outcomes back; when the running miss rate crosses
+//!   the configured target the router halves the effective spill threshold
+//!   (spreading load sooner at the price of more cold caches) and restores
+//!   it once the SLO recovers. Transitions are counted as `rebalances`.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::request::ServeRequest;
+
+/// Minimum observed deadline outcomes before [`Router::rebalance`] acts —
+/// a handful of early misses must not flap the spill threshold.
+const REBALANCE_MIN_SAMPLES: usize = 32;
+
+/// FNV-1a, 64-bit: tiny, allocation-free, and stable across platforms —
+/// the mapping must not depend on `DefaultHasher`'s unspecified seed.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// What the router decided for one arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteDecision {
+    /// Forward to this shard's sub-stream.
+    Shard(usize),
+    /// The id is already in flight on some shard: reject globally, exactly
+    /// once, without forwarding.
+    Duplicate,
+}
+
+/// Router counters, snapshotted into the sharded report.
+#[derive(Debug, Clone)]
+pub struct RouterStats {
+    pub shards: usize,
+    /// Requests forwarded per shard (duplicates excluded).
+    pub routed: Vec<usize>,
+    /// Requests diverted off their affine shard by power-of-two-choices.
+    pub spills: usize,
+    /// Requests rejected by the global duplicate-id check.
+    pub duplicate_rejections: usize,
+    /// Spill-threshold transitions driven by [`Router::rebalance`].
+    pub rebalances: usize,
+    /// The configured spill threshold.
+    pub spill_threshold: usize,
+    /// The threshold currently in force (≤ configured when the SLO is
+    /// being missed).
+    pub effective_spill_threshold: usize,
+}
+
+/// Signature-affinity router with power-of-two-choices spill. All state is
+/// interior-mutable behind atomics (plus one mutex for the id set): the
+/// feed thread routes while shard threads report completions concurrently.
+pub struct Router {
+    shards: usize,
+    spill_threshold: usize,
+    effective_spill: AtomicUsize,
+    slo_target: Option<f64>,
+    /// Global in-flight id set. Only maintained with more than one shard:
+    /// at `--shards 1` the core's own per-loop duplicate check is already
+    /// global, and its window (admission → batch close) is narrower than
+    /// the router's (route → completion) — tracking here would *change*
+    /// single-shard semantics, breaking the byte-identity contract.
+    in_flight: Option<Mutex<HashSet<usize>>>,
+    routed: Vec<AtomicUsize>,
+    finished: Vec<AtomicUsize>,
+    spills: AtomicUsize,
+    duplicates: AtomicUsize,
+    rebalances: AtomicUsize,
+    deadline_total: AtomicUsize,
+    deadline_misses: AtomicUsize,
+}
+
+impl Router {
+    /// `spill_threshold` is the queue depth (routed minus finished) above
+    /// which the affine shard spills; `slo_target` arms
+    /// [`rebalance`](Self::rebalance) with a deadline-miss-rate goal.
+    pub fn new(shards: usize, spill_threshold: usize, slo_target: Option<f64>) -> Router {
+        let shards = shards.max(1);
+        Router {
+            shards,
+            spill_threshold,
+            effective_spill: AtomicUsize::new(spill_threshold),
+            slo_target,
+            in_flight: (shards > 1).then(|| Mutex::new(HashSet::new())),
+            routed: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            finished: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            spills: AtomicUsize::new(0),
+            duplicates: AtomicUsize::new(0),
+            rebalances: AtomicUsize::new(0),
+            deadline_total: AtomicUsize::new(0),
+            deadline_misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// The pure affinity mapping: which shard owns this signature when no
+    /// load forces a spill. Deterministic across runs, seeds, processes.
+    pub fn shard_for_signature(&self, signature: &str) -> usize {
+        (fnv1a(signature.as_bytes()) % self.shards as u64) as usize
+    }
+
+    /// In-flight depth of a shard: routed minus finished. Saturating — the
+    /// two counters are bumped from different threads and a transient
+    /// finished-ahead-of-routed read must not wrap.
+    fn depth(&self, shard: usize) -> usize {
+        let routed = self.routed[shard].load(Ordering::Relaxed);
+        let finished = self.finished[shard].load(Ordering::Relaxed);
+        routed.saturating_sub(finished)
+    }
+
+    /// Route one arrival: global duplicate check, then affinity with
+    /// power-of-two-choices spill. On `Shard(s)` the request counts as in
+    /// flight on `s` until [`on_finished`](Self::on_finished) /
+    /// [`on_rejected`](Self::on_rejected) releases it.
+    pub fn route(&self, req: &ServeRequest) -> RouteDecision {
+        if let Some(in_flight) = &self.in_flight {
+            let mut seen = in_flight.lock().unwrap_or_else(|e| e.into_inner());
+            if !seen.insert(req.id) {
+                self.duplicates.fetch_add(1, Ordering::Relaxed);
+                return RouteDecision::Duplicate;
+            }
+        }
+        let h = fnv1a(req.workload.signature().as_bytes());
+        let affine = (h % self.shards as u64) as usize;
+        let shard = if self.shards == 1 {
+            affine
+        } else {
+            let depth = self.depth(affine);
+            if depth <= self.effective_spill.load(Ordering::Relaxed) {
+                affine
+            } else {
+                // Power of two choices: a second hash-derived candidate
+                // (upper bits, nudged off the affine shard), taken only
+                // when actually less loaded.
+                let mut alt = ((h >> 32) % self.shards as u64) as usize;
+                if alt == affine {
+                    alt = (affine + 1) % self.shards;
+                }
+                if self.depth(alt) < depth {
+                    self.spills.fetch_add(1, Ordering::Relaxed);
+                    alt
+                } else {
+                    affine
+                }
+            }
+        };
+        self.routed[shard].fetch_add(1, Ordering::Relaxed);
+        RouteDecision::Shard(shard)
+    }
+
+    /// A routed request left its shard (served or shed). `deadline_met`
+    /// feeds the SLO observer; pass `None` when the request carried no
+    /// deadline or was shed.
+    pub fn on_finished(&self, id: usize, shard: usize, deadline_met: Option<bool>) {
+        self.finished[shard].fetch_add(1, Ordering::Relaxed);
+        if let Some(in_flight) = &self.in_flight {
+            in_flight
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .remove(&id);
+        }
+        if let Some(met) = deadline_met {
+            self.deadline_total.fetch_add(1, Ordering::Relaxed);
+            if !met {
+                self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// A routed request was rejected at its shard's admission (laxity,
+    /// malformed workload): release the id so a resubmission can route.
+    pub fn on_rejected(&self, id: usize, shard: usize) {
+        self.finished[shard].fetch_add(1, Ordering::Relaxed);
+        if let Some(in_flight) = &self.in_flight {
+            in_flight
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .remove(&id);
+        }
+    }
+
+    /// The SLO-driven mid-stream scale decision: when the observed
+    /// deadline-miss rate crosses the target, halve the effective spill
+    /// threshold so load spreads off hot shards sooner; restore the
+    /// configured threshold once the SLO recovers. No-op without a target
+    /// or before [`REBALANCE_MIN_SAMPLES`] deadline outcomes. Called by the
+    /// feed loop after every route — cheap (three relaxed loads).
+    pub fn rebalance(&self) {
+        let Some(target) = self.slo_target else {
+            return;
+        };
+        let total = self.deadline_total.load(Ordering::Relaxed);
+        if total < REBALANCE_MIN_SAMPLES {
+            return;
+        }
+        let miss = self.deadline_misses.load(Ordering::Relaxed) as f64 / total as f64;
+        let want = if miss > target {
+            (self.spill_threshold / 2).max(1)
+        } else {
+            self.spill_threshold
+        };
+        let prev = self.effective_spill.swap(want, Ordering::Relaxed);
+        if prev != want {
+            self.rebalances.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot the counters for the sharded report.
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            shards: self.shards,
+            routed: self
+                .routed
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            spills: self.spills.load(Ordering::Relaxed),
+            duplicate_rejections: self.duplicates.load(Ordering::Relaxed),
+            rebalances: self.rebalances.load(Ordering::Relaxed),
+            spill_threshold: self.spill_threshold,
+            effective_spill_threshold: self.effective_spill.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::Workload;
+
+    fn req(id: usize, beta: u64) -> ServeRequest {
+        ServeRequest::new(id, id as f64 * 1e-3, Workload::Head { beta })
+    }
+
+    #[test]
+    fn affinity_is_deterministic_across_router_instances() {
+        let a = Router::new(4, 64, None);
+        let b = Router::new(4, 64, None);
+        let sigs: Vec<String> = (0..64).map(|i| format!("head_b{}", 64 + 8 * i)).collect();
+        let mut seen = HashSet::new();
+        for s in &sigs {
+            let sa = a.shard_for_signature(s);
+            assert_eq!(sa, b.shard_for_signature(s), "sig {s}");
+            assert_eq!(sa, a.shard_for_signature(s), "sig {s} unstable");
+            assert!(sa < 4);
+            seen.insert(sa);
+        }
+        // Non-degenerate: 64 signatures spread over more than one shard.
+        assert!(seen.len() > 1, "all signatures hashed to one shard");
+    }
+
+    #[test]
+    fn unloaded_route_follows_the_affine_shard() {
+        let r = Router::new(4, 64, None);
+        for id in 0..32 {
+            let q = req(id, 64 + 8 * (id as u64 % 16));
+            let affine = r.shard_for_signature(&q.workload.signature());
+            match r.route(&q) {
+                RouteDecision::Shard(s) => {
+                    assert_eq!(s, affine);
+                    r.on_finished(id, s, None);
+                }
+                RouteDecision::Duplicate => panic!("unexpected duplicate"),
+            }
+        }
+        assert_eq!(r.stats().spills, 0);
+    }
+
+    #[test]
+    fn overloaded_affine_shard_spills_to_the_second_choice() {
+        // Threshold 0: the second same-signature arrival (depth 1 on the
+        // affine shard, nothing finished) must divert.
+        let r = Router::new(4, 0, None);
+        let affine = r.shard_for_signature(&req(0, 64).workload.signature());
+        let RouteDecision::Shard(first) = r.route(&req(0, 64)) else {
+            panic!("duplicate")
+        };
+        assert_eq!(first, affine);
+        let RouteDecision::Shard(second) = r.route(&req(1, 64)) else {
+            panic!("duplicate")
+        };
+        assert_ne!(second, affine, "depth above threshold must spill");
+        assert_eq!(r.stats().spills, 1);
+        // Both choices equally deep: stay affine (spill only when strictly
+        // less loaded).
+        let RouteDecision::Shard(third) = r.route(&req(2, 64)) else {
+            panic!("duplicate")
+        };
+        assert_eq!(third, affine);
+        assert_eq!(r.stats().spills, 1);
+    }
+
+    #[test]
+    fn duplicate_ids_reject_exactly_once_and_release_on_finish() {
+        let r = Router::new(2, 64, None);
+        let RouteDecision::Shard(s) = r.route(&req(7, 64)) else {
+            panic!("duplicate")
+        };
+        assert_eq!(r.route(&req(7, 128)), RouteDecision::Duplicate);
+        assert_eq!(r.route(&req(7, 64)), RouteDecision::Duplicate);
+        assert_eq!(r.stats().duplicate_rejections, 2);
+        r.on_finished(7, s, None);
+        assert!(matches!(r.route(&req(7, 64)), RouteDecision::Shard(_)));
+    }
+
+    #[test]
+    fn single_shard_router_never_tracks_duplicates() {
+        // The core's own in-flight check owns duplicate semantics at one
+        // shard — the router must stay out of the way (byte-identity).
+        let r = Router::new(1, 64, None);
+        assert!(matches!(r.route(&req(3, 64)), RouteDecision::Shard(0)));
+        assert!(matches!(r.route(&req(3, 64)), RouteDecision::Shard(0)));
+        assert_eq!(r.stats().duplicate_rejections, 0);
+    }
+
+    #[test]
+    fn rebalance_halves_and_restores_the_spill_threshold() {
+        let r = Router::new(2, 64, Some(0.1));
+        // Below the sample floor: no action.
+        for i in 0..REBALANCE_MIN_SAMPLES - 1 {
+            r.on_finished(i, 0, Some(false));
+        }
+        r.rebalance();
+        assert_eq!(r.stats().effective_spill_threshold, 64);
+        // Cross the floor with a 100% miss rate: threshold halves.
+        r.on_finished(REBALANCE_MIN_SAMPLES, 0, Some(false));
+        r.rebalance();
+        let s = r.stats();
+        assert_eq!(s.effective_spill_threshold, 32);
+        assert_eq!(s.rebalances, 1);
+        // Recover the SLO (flood of met deadlines): threshold restores.
+        for i in 0..1000 {
+            r.on_finished(10_000 + i, 1, Some(true));
+        }
+        r.rebalance();
+        let s = r.stats();
+        assert_eq!(s.effective_spill_threshold, 64);
+        assert_eq!(s.rebalances, 2);
+    }
+}

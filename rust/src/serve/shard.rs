@@ -1,0 +1,740 @@
+//! Sharded multi-replica serving: N concurrent serve loops behind the
+//! signature-affinity [`Router`].
+//!
+//! The platform is partitioned into `N` equal replica shards. Each shard
+//! owns a **full serving stack** — its own scheduler state, its own
+//! [`StreamSim`](crate::sim::StreamSim) or
+//! [`RealBackend`](super::RealBackend) (with its own PJRT runtime and
+//! executable cache on the real path), and its own [`TemplateCache`] — and
+//! runs the unmodified [`serve_core`](super::serve_core) loop over a
+//! per-shard arrival sub-stream. Nothing in the core changes: sharding is
+//! a layer *above* it.
+//!
+//! # Concurrency shape
+//!
+//! [`std::thread::scope`] spawns one worker per shard; each receives its
+//! sub-stream over a bounded [`mpsc::sync_channel`] whose blocking `send`
+//! is the feed thread's backpressure (a slow shard stalls the feeder, not
+//! memory). The feed thread walks the global arrival iterator in order,
+//! asks the [`Router`] for a shard (global duplicate rejection, affinity,
+//! power-of-two-choices spill), and forwards. Outcome emission funnels
+//! through one shared [`OutcomeSink`] behind a mutex, each emission tagged
+//! back to the router so queue depths and SLO observations stay current.
+//!
+//! # Single-shard identity
+//!
+//! At `shards == 1` the runner is a pass-through: one channel, one serve
+//! loop over the whole platform, a router whose only decision is
+//! `Shard(0)`, duplicate tracking disabled (the core's own check governs,
+//! with its narrower admission→batch-close window), and the merge returns
+//! the single report unchanged. The integration test pins this
+//! **byte-for-byte** against the unsharded [`super::serve_stream`] path.
+//!
+//! # Report merging
+//!
+//! Per-shard [`StreamReport`]s merge into one global report: counters sum,
+//! makespan is the max, latency histograms merge **bin-wise**
+//! ([`LatencyHistogram::merge`]) so global p50/p99 keep the histogram's
+//! ≤1% error bound, and per-shard device utilizations are re-based onto
+//! the global device table (busy seconds over the *global* makespan).
+//! Conservation holds globally: `served + rejected + shed == offered`,
+//! where router-level duplicate rejections count as offered-and-rejected.
+
+use std::path::Path;
+use std::sync::mpsc::{self, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::cache::TemplateCache;
+use super::core::{serve_core, OutcomeSink, StreamReport, StreamingConfig, REJECT_SAMPLE_CAP};
+use super::engine::{Pacing, RequestOutcome};
+use super::real::RealBackend;
+use super::request::ServeRequest;
+use super::router::{RouteDecision, Router, RouterStats};
+use super::streaming::run_sim_core;
+use crate::cost::CostModel;
+use crate::error::{Error, Result};
+use crate::platform::{DeviceId, Platform};
+use crate::runtime::Runtime;
+use crate::sched::Policy;
+use crate::serve::histogram::LatencyHistogram;
+
+/// The scaled-platform shape the CLI serves on, kept symbolic so the
+/// sharded runner can cut it into per-shard sub-platforms.
+#[derive(Debug, Clone, Copy)]
+pub struct PlatformShape {
+    pub gpus: usize,
+    pub cpus: usize,
+    pub queues_gpu: usize,
+    pub queues_cpu: usize,
+}
+
+impl PlatformShape {
+    /// The whole platform, as `Platform::scaled` builds it.
+    pub fn full(&self) -> Platform {
+        Platform::scaled(self.gpus, self.cpus, self.queues_gpu, self.queues_cpu)
+    }
+
+    /// Typed validation that the shape cuts evenly into `shards` replicas.
+    pub fn validate_shards(&self, shards: usize) -> Result<()> {
+        if shards == 0 {
+            return Err(Error::Admission("--shards must be at least 1".into()));
+        }
+        if self.gpus < shards || self.gpus % shards != 0 {
+            return Err(Error::Admission(format!(
+                "{} GPU(s) cannot split into {shards} equal shard(s) \
+                 (need a positive multiple of the shard count)",
+                self.gpus
+            )));
+        }
+        if self.cpus % shards != 0 {
+            return Err(Error::Admission(format!(
+                "{} CPU(s) cannot split into {shards} equal shard(s)",
+                self.cpus
+            )));
+        }
+        Ok(())
+    }
+
+    /// One shard's sub-platform: `1/shards` of the devices, same queue
+    /// depths. Callers validate first.
+    pub fn shard(&self, shards: usize) -> Platform {
+        Platform::scaled(
+            self.gpus / shards,
+            self.cpus / shards,
+            self.queues_gpu,
+            self.queues_cpu,
+        )
+    }
+}
+
+/// Sharding knobs.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Number of replica shards (1 = the unsharded path, bit-identical).
+    pub shards: usize,
+    /// Queue depth above which the affine shard spills
+    /// ([`Router`] power-of-two-choices).
+    pub spill_threshold: usize,
+    /// Deadline-miss-rate target arming [`Router::rebalance`].
+    pub slo_target: Option<f64>,
+    /// Bound of each shard's arrival channel — the feed thread blocks when
+    /// a shard falls this far behind (backpressure, not growth).
+    pub channel_capacity: usize,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        ShardSpec {
+            shards: 1,
+            spill_threshold: 64,
+            slo_target: None,
+            channel_capacity: 1024,
+        }
+    }
+}
+
+/// One shard's slice of the sharded report.
+#[derive(Debug, Clone)]
+pub struct ShardSummary {
+    pub shard: usize,
+    /// Requests the router forwarded to this shard.
+    pub routed: usize,
+    pub served: usize,
+    pub rejected: usize,
+    pub shed: usize,
+    pub offered: usize,
+    pub makespan: f64,
+    pub throughput_rps: f64,
+    pub peak_live_requests: usize,
+    pub template_cache_misses: usize,
+}
+
+/// The merged outcome of a sharded run.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// The global view: counters summed, histograms merged bin-wise,
+    /// device utilization on the full device table. Satisfies the same
+    /// conservation invariant as any single-loop report.
+    pub merged: StreamReport,
+    pub shards: Vec<ShardSummary>,
+    pub router: RouterStats,
+    /// Wall seconds the feed thread spent inside the router — the
+    /// numerator of the bench's router-overhead fraction.
+    pub route_seconds: f64,
+}
+
+/// Per-shard sink: forwards every emission to the shared global sink (in
+/// shard-completion order, interleaved across shards) and reports each
+/// retired id back to the [`Router`] so depths and SLO observations track.
+struct ShardSink<'a> {
+    shard: usize,
+    router: &'a Router,
+    shared: &'a Mutex<&'a mut (dyn OutcomeSink + Send)>,
+}
+
+impl OutcomeSink for ShardSink<'_> {
+    fn emit(&mut self, outcome: &RequestOutcome, devices: &[DeviceId]) -> Result<()> {
+        let r = {
+            let mut g = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+            (*g).emit(outcome, devices)
+        };
+        self.router
+            .on_finished(outcome.id, self.shard, outcome.deadline_met);
+        r
+    }
+
+    fn emit_shed(&mut self, outcome: &RequestOutcome, devices: &[DeviceId]) -> Result<()> {
+        let r = {
+            let mut g = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+            (*g).emit_shed(outcome, devices)
+        };
+        // Shed requests carry no served-deadline observation.
+        self.router.on_finished(outcome.id, self.shard, None);
+        r
+    }
+
+    fn emit_rejected(&mut self, id: usize, err: &Error) -> Result<()> {
+        let r = {
+            let mut g = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+            (*g).emit_rejected(id, err)
+        };
+        self.router.on_rejected(id, self.shard);
+        r
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        let mut g = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+        (*g).flush()
+    }
+}
+
+/// What the generic runner hands back before report assembly.
+struct ShardRun {
+    reports: Vec<StreamReport>,
+    router: RouterStats,
+    route_seconds: f64,
+    duplicate_sample: Vec<(usize, String)>,
+}
+
+/// The generic sharded runner: spawn one `run_shard` worker per shard
+/// under a thread scope, feed the arrival stream through the router, join,
+/// and surface the first error (feed, worker, or panic) typed.
+fn serve_sharded_with<I, F>(
+    requests: I,
+    spec: &ShardSpec,
+    policies: Vec<Box<dyn Policy>>,
+    sink: &mut (dyn OutcomeSink + Send),
+    run_shard: F,
+) -> Result<ShardRun>
+where
+    I: IntoIterator<Item = ServeRequest>,
+    F: Fn(usize, Box<dyn Policy>, Receiver<ServeRequest>, &mut dyn OutcomeSink) -> Result<StreamReport>
+        + Sync,
+{
+    let n = spec.shards.max(1);
+    debug_assert_eq!(policies.len(), n, "one policy instance per shard");
+    let router = Router::new(n, spec.spill_threshold, spec.slo_target);
+    let shared: Mutex<&mut (dyn OutcomeSink + Send)> = Mutex::new(sink);
+    let router_ref = &router;
+    let shared_ref = &shared;
+    let run_ref = &run_shard;
+    let mut route_seconds = 0.0f64;
+    let mut duplicate_sample: Vec<(usize, String)> = Vec::new();
+
+    let reports: Result<Vec<StreamReport>> = std::thread::scope(|s| {
+        let mut txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (i, policy) in policies.into_iter().enumerate() {
+            let (tx, rx) = mpsc::sync_channel::<ServeRequest>(spec.channel_capacity.max(1));
+            txs.push(tx);
+            handles.push(s.spawn(move || {
+                let mut shard_sink = ShardSink {
+                    shard: i,
+                    router: router_ref,
+                    shared: shared_ref,
+                };
+                run_ref(i, policy, rx, &mut shard_sink)
+            }));
+        }
+
+        // Feed: route each arrival, in global arrival order. A send error
+        // means the shard's loop already exited — on error; remember a
+        // typed feed error but still join every worker so the real cause
+        // (the worker's own error) wins.
+        let mut first_err: Option<Error> = None;
+        for req in requests {
+            let t0 = Instant::now();
+            let decision = router_ref.route(&req);
+            router_ref.rebalance();
+            route_seconds += t0.elapsed().as_secs_f64();
+            match decision {
+                RouteDecision::Shard(shard) => {
+                    if txs[shard].send(req).is_err() {
+                        first_err = Some(Error::Sched(format!(
+                            "shard {shard} stopped accepting requests mid-stream"
+                        )));
+                        break;
+                    }
+                }
+                RouteDecision::Duplicate => {
+                    if duplicate_sample.len() < REJECT_SAMPLE_CAP {
+                        duplicate_sample.push((
+                            req.id,
+                            format!("request {}: duplicate id in flight (router)", req.id),
+                        ));
+                    }
+                }
+            }
+        }
+        // Close every channel: each shard's arrival iterator ends, its
+        // serve loop drains and returns.
+        drop(txs);
+
+        let mut reports = Vec::with_capacity(n);
+        for (i, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(report)) => reports.push(report),
+                Ok(Err(e)) => {
+                    // Prefer a worker's typed error over the feeder's
+                    // derived send-failure.
+                    first_err = Some(e);
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(Error::Sched(format!("shard {i} worker panicked")));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(reports),
+        }
+    });
+    let reports = reports?;
+
+    Ok(ShardRun {
+        reports,
+        router: router.stats(),
+        route_seconds,
+        duplicate_sample,
+    })
+}
+
+/// Merge per-shard reports into one global [`StreamReport`].
+///
+/// Identity at one shard: the single report is returned **unchanged** (the
+/// `--shards 1` byte-identity contract). Otherwise counters sum, makespan
+/// is the max (shards run concurrently on disjoint devices), histograms
+/// merge bin-wise, and shard-local device utilizations are re-based: shard
+/// `s`'s local GPU `d` is global GPU `s·(gpus/shards)+d`, its local CPU
+/// `j` is global CPU `s·(cpus/shards)+j` (after all GPUs), each converted
+/// through busy seconds to a fraction of the **global** makespan.
+pub fn merge_stream_reports(
+    mut reports: Vec<StreamReport>,
+    shape: &PlatformShape,
+    shards: usize,
+) -> StreamReport {
+    assert!(!reports.is_empty(), "merge of zero shard reports");
+    if reports.len() == 1 {
+        return reports.pop().expect("len checked");
+    }
+    let makespan = reports.iter().fold(0.0f64, |m, r| m.max(r.makespan));
+    let gpus_per_shard = shape.gpus / shards;
+    let cpus_per_shard = shape.cpus / shards;
+    let mut device_util = vec![0.0f64; shape.gpus + shape.cpus];
+
+    let mut served = 0usize;
+    let mut rejected = 0usize;
+    let mut shed = 0usize;
+    let mut offered = 0usize;
+    let mut max_retries = 0u32;
+    let mut rejected_sample: Vec<(usize, String)> = Vec::new();
+    let mut laxity_rejections = 0usize;
+    let mut deadline_total = 0usize;
+    let mut deadline_misses = 0usize;
+    let mut preemptions = 0usize;
+    let mut peak_live_requests = 0usize;
+    let mut peak_live_components = 0usize;
+    let mut events = 0u64;
+    let mut exec_cache_hits = 0usize;
+    let mut exec_cache_misses = 0usize;
+    let mut template_cache_hits = 0usize;
+    let mut template_cache_misses = 0usize;
+    let mut cold: Vec<f64> = Vec::new();
+    let mut warm: Vec<f64> = Vec::new();
+    let mut hist = LatencyHistogram::new();
+
+    for (s, r) in reports.iter().enumerate() {
+        served += r.served;
+        rejected += r.rejected;
+        shed += r.shed;
+        offered += r.offered;
+        max_retries = max_retries.max(r.max_retries);
+        laxity_rejections += r.laxity_rejections;
+        deadline_total += r.deadline_total;
+        deadline_misses += r.deadline_misses;
+        preemptions += r.preemptions;
+        // Peaks sum: the shards are live at the same time, so the global
+        // high-water mark is bounded by (and conservatively reported as)
+        // the sum of per-shard peaks.
+        peak_live_requests += r.peak_live_requests;
+        peak_live_components += r.peak_live_components;
+        events += r.events;
+        exec_cache_hits += r.exec_cache_hits;
+        exec_cache_misses += r.exec_cache_misses;
+        template_cache_hits += r.template_cache_hits;
+        template_cache_misses += r.template_cache_misses;
+        if r.cold_batch_latency > 0.0 {
+            cold.push(r.cold_batch_latency);
+        }
+        if r.warm_batch_latency > 0.0 {
+            warm.push(r.warm_batch_latency);
+        }
+        hist.merge(&r.latency_hist);
+        for (id, why) in &r.rejected_sample {
+            if rejected_sample.len() < REJECT_SAMPLE_CAP {
+                rejected_sample.push((*id, why.clone()));
+            }
+        }
+        for (d, &util) in r.device_util.iter().enumerate() {
+            let busy = util * r.makespan;
+            let global = if d < gpus_per_shard {
+                s * gpus_per_shard + d
+            } else {
+                shape.gpus + s * cpus_per_shard + (d - gpus_per_shard)
+            };
+            if let Some(slot) = device_util.get_mut(global) {
+                *slot = if makespan > 0.0 { busy / makespan } else { 0.0 };
+            }
+        }
+    }
+
+    let mean = |xs: &[f64]| {
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    };
+    StreamReport {
+        policy: reports[0].policy.clone(),
+        served,
+        rejected,
+        shed,
+        offered,
+        max_retries,
+        rejected_sample,
+        laxity_rejections,
+        makespan,
+        throughput_rps: if makespan > 0.0 {
+            served as f64 / makespan
+        } else {
+            0.0
+        },
+        p50_latency: hist.quantile(0.50),
+        p99_latency: hist.quantile(0.99),
+        deadline_total,
+        deadline_misses,
+        deadline_miss_rate: if deadline_total > 0 {
+            deadline_misses as f64 / deadline_total as f64
+        } else {
+            0.0
+        },
+        per_priority_p99: hist.per_priority_quantile(0.99),
+        preemptions,
+        device_util,
+        window: reports[0].window,
+        peak_live_requests,
+        peak_live_components,
+        events,
+        pacing: reports[0].pacing,
+        exec_cache_hits,
+        exec_cache_misses,
+        cold_batch_latency: mean(&cold),
+        warm_batch_latency: mean(&warm),
+        template_cache_hits,
+        template_cache_misses,
+        latency_hist: hist,
+    }
+}
+
+/// Assemble the public report: per-shard summaries, router counters, and
+/// the merged global view with router-level duplicate rejections folded
+/// into the books (`offered` and `rejected` both grow by the duplicate
+/// count, so global conservation covers requests no shard ever saw).
+fn assemble_sharded_report(
+    run: ShardRun,
+    shape: &PlatformShape,
+    spec: &ShardSpec,
+) -> ShardedReport {
+    let ShardRun {
+        reports,
+        router,
+        route_seconds,
+        duplicate_sample,
+    } = run;
+    let shards: Vec<ShardSummary> = reports
+        .iter()
+        .enumerate()
+        .map(|(i, r)| ShardSummary {
+            shard: i,
+            routed: router.routed.get(i).copied().unwrap_or(0),
+            served: r.served,
+            rejected: r.rejected,
+            shed: r.shed,
+            offered: r.offered,
+            makespan: r.makespan,
+            throughput_rps: r.throughput_rps,
+            peak_live_requests: r.peak_live_requests,
+            template_cache_misses: r.template_cache_misses,
+        })
+        .collect();
+    let mut merged = merge_stream_reports(reports, shape, spec.shards.max(1));
+    merged.offered += router.duplicate_rejections;
+    merged.rejected += router.duplicate_rejections;
+    for s in duplicate_sample {
+        if merged.rejected_sample.len() < REJECT_SAMPLE_CAP {
+            merged.rejected_sample.push(s);
+        }
+    }
+    ShardedReport {
+        merged,
+        shards,
+        router,
+        route_seconds,
+    }
+}
+
+/// Sharded **simulated** streaming: N concurrent [`run_sim_core`] loops,
+/// each over its own per-shard sub-platform and fresh [`TemplateCache`].
+/// `policy_factory` is called once per shard (each loop owns a policy).
+pub fn serve_sharded_stream<I>(
+    requests: I,
+    shape: PlatformShape,
+    cost: &dyn CostModel,
+    mut policy_factory: impl FnMut() -> Result<Box<dyn Policy>>,
+    cfg: &StreamingConfig,
+    spec: &ShardSpec,
+    sink: &mut (dyn OutcomeSink + Send),
+) -> Result<ShardedReport>
+where
+    I: IntoIterator<Item = ServeRequest>,
+{
+    shape.validate_shards(spec.shards)?;
+    let policies: Vec<Box<dyn Policy>> = (0..spec.shards)
+        .map(|_| policy_factory())
+        .collect::<Result<_>>()?;
+    let sub = shape.shard(spec.shards);
+    let run = |_shard: usize,
+               mut policy: Box<dyn Policy>,
+               rx: Receiver<ServeRequest>,
+               sink: &mut dyn OutcomeSink|
+     -> Result<StreamReport> {
+        let mut cache = TemplateCache::new();
+        run_sim_core(
+            rx,
+            &sub,
+            cost,
+            policy.as_mut(),
+            cfg,
+            &mut cache,
+            sink,
+            REJECT_SAMPLE_CAP,
+        )
+    };
+    let out = serve_sharded_with(requests, spec, policies, sink, run)?;
+    Ok(assemble_sharded_report(out, &shape, spec))
+}
+
+/// Sharded **real** streaming: one [`RealBackend`] per shard, each with
+/// its own [`Runtime`] (own PJRT clients and executable cache) over its
+/// sub-platform. Per-shard fault plans address shard-local device ids.
+/// Each shard's wall-clock epoch starts when its worker constructs the
+/// backend — a few hundred microseconds of skew across shards, far below
+/// the latencies the report cuts.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_sharded_real_stream<I>(
+    requests: I,
+    artifact_dir: &Path,
+    shape: PlatformShape,
+    cost: &dyn CostModel,
+    mut policy_factory: impl FnMut() -> Result<Box<dyn Policy>>,
+    cfg: &StreamingConfig,
+    pacing: Pacing,
+    prewarm: bool,
+    seed: u64,
+    spec: &ShardSpec,
+    sink: &mut (dyn OutcomeSink + Send),
+) -> Result<ShardedReport>
+where
+    I: IntoIterator<Item = ServeRequest>,
+{
+    shape.validate_shards(spec.shards)?;
+    let policies: Vec<Box<dyn Policy>> = (0..spec.shards)
+        .map(|_| policy_factory())
+        .collect::<Result<_>>()?;
+    let sub = shape.shard(spec.shards);
+    let run = |_shard: usize,
+               mut policy: Box<dyn Policy>,
+               rx: Receiver<ServeRequest>,
+               sink: &mut dyn OutcomeSink|
+     -> Result<StreamReport> {
+        // Per-shard runtime: its own PJRT clients and executable cache —
+        // the cache affinity the router preserves.
+        let runtime = Arc::new(Runtime::new(artifact_dir)?);
+        if prewarm {
+            runtime.warmup()?;
+        }
+        let policy_name = policy.name().to_string();
+        let mut cache = TemplateCache::new();
+        let mut backend = RealBackend::new(
+            &runtime,
+            &sub,
+            cost,
+            policy.as_mut(),
+            cfg.tenancy,
+            pacing,
+            seed,
+        );
+        if let Some(plan) = &cfg.faults {
+            backend.install_faults(plan)?;
+        }
+        serve_core(
+            rx,
+            &sub,
+            cost,
+            &mut backend,
+            cfg,
+            &mut cache,
+            sink,
+            &policy_name,
+            REJECT_SAMPLE_CAP,
+        )
+    };
+    let out = serve_sharded_with(requests, spec, policies, sink, run)?;
+    Ok(assemble_sharded_report(out, &shape, spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::PaperCost;
+    use crate::serve::arrival::poisson_arrivals;
+    use crate::serve::core::{CollectSink, NullSink};
+    use crate::serve::request::Workload;
+    use crate::sched::LeastLoaded;
+
+    fn stream(n: usize, rate: f64) -> Vec<ServeRequest> {
+        poisson_arrivals(13, n, rate)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let beta = 64 + 8 * (i as u64 % 16);
+                let mut r = ServeRequest::new(i, t, Workload::Head { beta });
+                if i % 6 == 0 {
+                    r.deadline = Some(2.0);
+                    r.priority = 1;
+                }
+                r
+            })
+            .collect()
+    }
+
+    fn factory() -> Result<Box<dyn Policy>> {
+        Ok(Box::new(LeastLoaded))
+    }
+
+    #[test]
+    fn shape_validation_rejects_uneven_cuts() {
+        let shape = PlatformShape {
+            gpus: 4,
+            cpus: 2,
+            queues_gpu: 3,
+            queues_cpu: 1,
+        };
+        assert!(shape.validate_shards(1).is_ok());
+        assert!(shape.validate_shards(2).is_ok());
+        assert!(shape.validate_shards(0).is_err());
+        assert!(shape.validate_shards(3).is_err());
+        assert!(shape.validate_shards(8).is_err());
+        let e = shape.validate_shards(3).unwrap_err();
+        assert!(matches!(e, Error::Admission(_)), "{e}");
+    }
+
+    #[test]
+    fn two_shards_conserve_and_sum_to_the_merged_report() {
+        let shape = PlatformShape {
+            gpus: 4,
+            cpus: 2,
+            queues_gpu: 3,
+            queues_cpu: 1,
+        };
+        let reqs = stream(160, 2000.0);
+        let n = reqs.len();
+        let mut sink = CollectSink::default();
+        let spec = ShardSpec {
+            shards: 2,
+            ..ShardSpec::default()
+        };
+        let r = serve_sharded_stream(
+            reqs,
+            shape,
+            &PaperCost,
+            factory,
+            &StreamingConfig::default(),
+            &spec,
+            &mut sink,
+        )
+        .unwrap();
+        let m = &r.merged;
+        assert_eq!(m.offered, n);
+        assert_eq!(m.served + m.rejected + m.shed, m.offered, "conservation");
+        assert_eq!(m.served, sink.outcomes.len());
+        assert_eq!(r.shards.len(), 2);
+        let shard_served: usize = r.shards.iter().map(|s| s.served).sum();
+        assert_eq!(shard_served, m.served);
+        let routed: usize = r.router.routed.iter().sum();
+        assert_eq!(routed, n, "every non-duplicate request routed");
+        assert_eq!(m.device_util.len(), shape.gpus + shape.cpus);
+        // Both shards saw work (16 signatures over 2 shards).
+        assert!(r.shards.iter().all(|s| s.routed > 0));
+        // Merged histogram backs the quantiles: count equals served.
+        assert_eq!(m.latency_hist.count(), m.served);
+    }
+
+    #[test]
+    fn merged_quantiles_equal_a_bin_wise_histogram_merge() {
+        let shape = PlatformShape {
+            gpus: 4,
+            cpus: 2,
+            queues_gpu: 3,
+            queues_cpu: 1,
+        };
+        let spec = ShardSpec {
+            shards: 2,
+            ..ShardSpec::default()
+        };
+        let mut sink = NullSink;
+        let r = serve_sharded_stream(
+            stream(200, 2500.0),
+            shape,
+            &PaperCost,
+            factory,
+            &StreamingConfig::default(),
+            &spec,
+            &mut sink,
+        )
+        .unwrap();
+        assert_eq!(
+            r.merged.p99_latency.to_bits(),
+            r.merged.latency_hist.quantile(0.99).to_bits()
+        );
+        assert_eq!(
+            r.merged.p50_latency.to_bits(),
+            r.merged.latency_hist.quantile(0.50).to_bits()
+        );
+    }
+}

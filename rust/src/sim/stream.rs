@@ -1779,6 +1779,38 @@ impl<'a> StreamSim<'a> {
     }
 }
 
+/// Shard ownership is Send-safe by construction: a [`StreamSim`] never
+/// crosses threads (its borrows of the per-shard `Dag`/`Partition` pin it
+/// to the worker that built it), but everything a shard worker needs to
+/// *construct* one — the sub-platform, the sim config, a boxed policy —
+/// must transfer into the spawned thread, and the shared references the
+/// worker reads through (`Platform`, `CostModel`) must be `Sync`. The
+/// sharded server ([`crate::serve::shard`]) relies on these bounds; assert
+/// them at compile time so a future non-Send field (an `Rc` cache, a
+/// thread-local handle) fails here, next to the simulator, instead of as
+/// an opaque `thread::scope` inference error three layers up.
+#[allow(dead_code)]
+fn _assert_shard_inputs_transferable(
+    platform: Platform,
+    cfg: SimConfig,
+    policy: Box<dyn Policy>,
+    request: crate::serve::ServeRequest,
+) -> impl Send {
+    (platform, cfg, policy, request)
+}
+
+/// Companion to [`_assert_shard_inputs_transferable`]: `&T: Send` holds
+/// exactly when `T: Sync`, so returning the shared references a worker
+/// reads through as `impl Send` asserts their `Sync` bounds.
+#[allow(dead_code)]
+fn _assert_shard_shared_refs_sync<'a>(
+    platform: &'a Platform,
+    cfg: &'a SimConfig,
+    cost: &'a dyn CostModel,
+) -> impl Send + 'a {
+    (platform, cfg, cost)
+}
+
 #[cfg(test)]
 mod tests {
     use super::engine::{simulate_served, CompMeta};

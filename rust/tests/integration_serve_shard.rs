@@ -1,0 +1,233 @@
+//! Integration: sharded multi-replica serving (ISSUE 10).
+//!
+//! Pins the tentpole contracts end to end:
+//!
+//! * `--shards 1` is **byte-identical** to the unsharded [`serve_stream`]
+//!   path — same outcomes (bit-for-bit floats), same report.
+//! * The router's global in-flight set rejects a duplicate id exactly once
+//!   even when the two submissions hash to *different* shards (where each
+//!   shard's local check would admit both).
+//! * Signature affinity is real: one signature's requests all land on its
+//!   affine shard (deterministically predictable from
+//!   [`Router::shard_for_signature`]) while the load stays below the spill
+//!   threshold.
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::error::Result;
+use pyschedcl::sched::{LeastLoaded, Policy};
+use pyschedcl::serve::{
+    poisson_arrivals, serve_sharded_stream, serve_stream, CollectSink, PlatformShape, Router,
+    ServeRequest, ShardSpec, StreamingConfig, Workload,
+};
+
+fn stream(seed: u64, n: usize, rate: f64) -> Vec<ServeRequest> {
+    poisson_arrivals(seed, n, rate)
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let beta = 64 + 8 * (i as u64 % 16);
+            let mut r = ServeRequest::new(i, t, Workload::Head { beta });
+            if i % 5 == 0 {
+                r.deadline = Some(1.5);
+                r.priority = 1;
+            }
+            r
+        })
+        .collect()
+}
+
+fn factory() -> Result<Box<dyn Policy>> {
+    Ok(Box::new(LeastLoaded))
+}
+
+#[test]
+fn single_shard_run_is_byte_identical_to_serve_stream() {
+    let shape = PlatformShape {
+        gpus: 2,
+        cpus: 1,
+        queues_gpu: 3,
+        queues_cpu: 1,
+    };
+    let cfg = StreamingConfig {
+        window: 64,
+        ..StreamingConfig::default()
+    };
+
+    let mut base_sink = CollectSink::default();
+    let base = serve_stream(
+        stream(21, 120, 1500.0),
+        &shape.full(),
+        &PaperCost,
+        &mut LeastLoaded,
+        &cfg,
+        &mut base_sink,
+    )
+    .unwrap();
+
+    let mut shard_sink = CollectSink::default();
+    let spec = ShardSpec {
+        shards: 1,
+        ..ShardSpec::default()
+    };
+    let sharded = serve_sharded_stream(
+        stream(21, 120, 1500.0),
+        shape,
+        &PaperCost,
+        factory,
+        &cfg,
+        &spec,
+        &mut shard_sink,
+    )
+    .unwrap();
+    let m = &sharded.merged;
+
+    // Every emitted outcome matches, field by field, floats bit-for-bit.
+    assert_eq!(base_sink.outcomes.len(), shard_sink.outcomes.len());
+    for (a, b) in base_sink.outcomes.iter().zip(&shard_sink.outcomes) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+        assert_eq!(a.release.to_bits(), b.release.to_bits());
+        assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+        assert_eq!(a.deadline_met, b.deadline_met);
+        assert_eq!(a.priority, b.priority);
+    }
+
+    // And the merged report is the single shard's report, unchanged.
+    assert_eq!(base.served, m.served);
+    assert_eq!(base.rejected, m.rejected);
+    assert_eq!(base.shed, m.shed);
+    assert_eq!(base.offered, m.offered);
+    assert_eq!(base.laxity_rejections, m.laxity_rejections);
+    assert_eq!(base.makespan.to_bits(), m.makespan.to_bits());
+    assert_eq!(base.throughput_rps.to_bits(), m.throughput_rps.to_bits());
+    assert_eq!(base.p50_latency.to_bits(), m.p50_latency.to_bits());
+    assert_eq!(base.p99_latency.to_bits(), m.p99_latency.to_bits());
+    assert_eq!(base.deadline_total, m.deadline_total);
+    assert_eq!(base.deadline_misses, m.deadline_misses);
+    assert_eq!(base.preemptions, m.preemptions);
+    assert_eq!(base.peak_live_requests, m.peak_live_requests);
+    assert_eq!(base.peak_live_components, m.peak_live_components);
+    assert_eq!(base.events, m.events);
+    assert_eq!(base.template_cache_hits, m.template_cache_hits);
+    assert_eq!(base.template_cache_misses, m.template_cache_misses);
+    assert_eq!(base.rejected_sample, m.rejected_sample);
+    assert_eq!(base.device_util.len(), m.device_util.len());
+    for (a, b) in base.device_util.iter().zip(&m.device_util) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // The router stayed out of the way.
+    assert_eq!(sharded.shards.len(), 1);
+    assert_eq!(sharded.router.spills, 0);
+    assert_eq!(sharded.router.duplicate_rejections, 0);
+    assert_eq!(sharded.router.routed, vec![120]);
+}
+
+#[test]
+fn duplicate_ids_across_two_shards_reject_exactly_once() {
+    // Pick two betas whose signatures hash to *different* shards, so the
+    // duplicate submission reaches the other shard's sub-stream — the one
+    // place only the router's global in-flight set can catch it.
+    let probe = Router::new(2, 64, None);
+    let sig = |beta: u64| Workload::Head { beta }.signature();
+    let beta0 = (8u64..64)
+        .map(|k| 8 * k)
+        .find(|&b| probe.shard_for_signature(&sig(b)) == 0)
+        .expect("some signature hashes to shard 0");
+    let beta1 = (8u64..64)
+        .map(|k| 8 * k)
+        .find(|&b| probe.shard_for_signature(&sig(b)) == 1)
+        .expect("some signature hashes to shard 1");
+
+    let reqs = vec![
+        ServeRequest::new(0, 0.0, Workload::Head { beta: beta0 }),
+        ServeRequest::new(1, 1e-4, Workload::Head { beta: beta1 }),
+        // Same id as the first but affine to the *other* shard.
+        ServeRequest::new(0, 2e-4, Workload::Head { beta: beta1 }),
+        ServeRequest::new(2, 3e-4, Workload::Head { beta: beta0 }),
+    ];
+    let shape = PlatformShape {
+        gpus: 2,
+        cpus: 2,
+        queues_gpu: 3,
+        queues_cpu: 1,
+    };
+    let spec = ShardSpec {
+        shards: 2,
+        ..ShardSpec::default()
+    };
+    let mut sink = CollectSink::default();
+    let r = serve_sharded_stream(
+        reqs,
+        shape,
+        &PaperCost,
+        factory,
+        &StreamingConfig::default(),
+        &spec,
+        &mut sink,
+    )
+    .unwrap();
+    let m = &r.merged;
+
+    // Exactly once: the duplicate is offered-and-rejected globally, the
+    // three distinct requests all serve.
+    assert_eq!(r.router.duplicate_rejections, 1);
+    assert_eq!(m.offered, 4);
+    assert_eq!(m.rejected, 1);
+    assert_eq!(m.served, 3);
+    assert_eq!(m.shed, 0);
+    assert_eq!(m.served + m.rejected + m.shed, m.offered, "conservation");
+    assert_eq!(sink.outcomes.len(), 3);
+    assert!(
+        m.rejected_sample
+            .iter()
+            .any(|(id, why)| *id == 0 && why.contains("router")),
+        "rejection sample names the router: {:?}",
+        m.rejected_sample
+    );
+}
+
+#[test]
+fn one_signature_stays_on_its_affine_shard() {
+    // 40 same-signature requests, spill threshold 64: depth never crosses
+    // the threshold, so every request lands on the signature's affine
+    // shard — predicted, deterministically, by shard_for_signature.
+    let shape = PlatformShape {
+        gpus: 4,
+        cpus: 2,
+        queues_gpu: 3,
+        queues_cpu: 1,
+    };
+    let spec = ShardSpec {
+        shards: 2,
+        ..ShardSpec::default()
+    };
+    let affine = Router::new(2, 64, None)
+        .shard_for_signature(&Workload::Head { beta: 64 }.signature());
+    let reqs: Vec<ServeRequest> = poisson_arrivals(5, 40, 1000.0)
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| ServeRequest::new(i, t, Workload::Head { beta: 64 }))
+        .collect();
+    let mut sink = CollectSink::default();
+    let r = serve_sharded_stream(
+        reqs,
+        shape,
+        &PaperCost,
+        factory,
+        &StreamingConfig::default(),
+        &spec,
+        &mut sink,
+    )
+    .unwrap();
+    assert_eq!(r.router.spills, 0);
+    assert_eq!(r.router.routed[affine], 40);
+    assert_eq!(r.router.routed[1 - affine], 0);
+    assert_eq!(r.shards[affine].served, 40);
+    assert_eq!(r.shards[1 - affine].served, 0);
+    // Cache affinity is the payoff: the idle shard built nothing.
+    assert_eq!(r.shards[1 - affine].template_cache_misses, 0);
+}

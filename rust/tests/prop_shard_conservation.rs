@@ -1,0 +1,131 @@
+//! Property: sharded serving conserves requests (ISSUE 10).
+//!
+//! Over a grid of arrival seeds × shard counts × admission windows ×
+//! fault plans, every sharded run must satisfy, with nothing lost and
+//! nothing double-counted across the router and the per-shard loops:
+//!
+//! * globally: `served + rejected + shed == offered == n` (router-level
+//!   duplicate rejections are offered-and-rejected; this grid offers no
+//!   duplicates, so `offered` is exactly the stream length);
+//! * per shard: `served + rejected + shed == offered`;
+//! * across layers: per-shard `offered` sums to the merged `offered`, and
+//!   the router's per-shard routed counts sum to `n`;
+//! * the merged latency histogram holds exactly the served population.
+
+use pyschedcl::cost::PaperCost;
+use pyschedcl::error::Result;
+use pyschedcl::fault::{FaultEvent, FaultKind, FaultPlan};
+use pyschedcl::sched::{LeastLoaded, Policy};
+use pyschedcl::serve::{
+    poisson_arrivals, serve_sharded_stream, NullSink, PlatformShape, ServeRequest, ShardSpec,
+    StreamingConfig, Workload,
+};
+
+fn stream(seed: u64, n: usize, rate: f64) -> Vec<ServeRequest> {
+    poisson_arrivals(seed, n, rate)
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let beta = 64 + 8 * (i as u64 % 12);
+            let mut r = ServeRequest::new(i, t, Workload::Head { beta });
+            // A mix of deadline pressure: every 4th request carries a tight
+            // budget (sheddable under faults, rejectable at admission).
+            if i % 4 == 0 {
+                r.deadline = Some(if i % 8 == 0 { 0.01 } else { 1.0 });
+                r.priority = 1;
+            }
+            r
+        })
+        .collect()
+}
+
+fn factory() -> Result<Box<dyn Policy>> {
+    Ok(Box::new(LeastLoaded))
+}
+
+/// Crash each shard's GPU 0 early, with a small retry budget — the
+/// recovery machinery (retry, re-stage, shed) must still account for every
+/// request.
+fn crash_plan() -> FaultPlan {
+    FaultPlan {
+        events: vec![FaultEvent {
+            device: 0,
+            at: 0.002,
+            kind: FaultKind::Crash,
+        }],
+        retry_budget: 2,
+        backoff_base: 0.0,
+        ..FaultPlan::default()
+    }
+    .normalized()
+    .expect("valid plan")
+}
+
+#[test]
+fn conservation_holds_across_shards_windows_and_fault_plans() {
+    let n = 120;
+    for &seed in &[1u64, 7, 23] {
+        for &shards in &[1usize, 2, 4] {
+            for &window in &[0usize, 8, 512] {
+                for faults in [None, Some(crash_plan())] {
+                    let with_faults = faults.is_some();
+                    let cfg = StreamingConfig {
+                        window,
+                        faults,
+                        ..StreamingConfig::default()
+                    };
+                    let shape = PlatformShape {
+                        gpus: 4,
+                        cpus: 4,
+                        queues_gpu: 3,
+                        queues_cpu: 1,
+                    };
+                    let spec = ShardSpec {
+                        shards,
+                        ..ShardSpec::default()
+                    };
+                    let label = format!(
+                        "seed {seed}, {shards} shard(s), window {window}, faults {with_faults}"
+                    );
+                    let r = serve_sharded_stream(
+                        stream(seed, n, 3000.0),
+                        shape,
+                        &PaperCost,
+                        factory,
+                        &cfg,
+                        &spec,
+                        &mut NullSink,
+                    )
+                    .unwrap_or_else(|e| panic!("{label}: {e}"));
+                    let m = &r.merged;
+
+                    assert_eq!(m.offered, n, "{label}: offered");
+                    assert_eq!(
+                        m.served + m.rejected + m.shed,
+                        m.offered,
+                        "{label}: global conservation"
+                    );
+                    assert_eq!(r.router.duplicate_rejections, 0, "{label}");
+                    for s in &r.shards {
+                        assert_eq!(
+                            s.served + s.rejected + s.shed,
+                            s.offered,
+                            "{label}: shard {} conservation",
+                            s.shard
+                        );
+                    }
+                    let shard_offered: usize = r.shards.iter().map(|s| s.offered).sum();
+                    assert_eq!(shard_offered, m.offered, "{label}: offered sums");
+                    let routed: usize = r.router.routed.iter().sum();
+                    assert_eq!(routed, n, "{label}: routed sums");
+                    assert_eq!(
+                        m.latency_hist.count(),
+                        m.served,
+                        "{label}: histogram population"
+                    );
+                }
+            }
+        }
+    }
+}
